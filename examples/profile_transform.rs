@@ -1,0 +1,52 @@
+//! Perf probe: phase-level timing of the transformation pipeline
+//! (closures vs. fixpoints vs. full derive) on a 4.3M-task graph.
+//!
+//! This drove the §Perf iteration log in EXPERIMENTS.md — it was how the
+//! `local_fixpoint` HashMap was identified as the hot spot (1.24 s of
+//! 1.48 s before the flat-array rewrite).
+//!
+//! ```sh
+//! cargo run --release --example profile_transform
+//! ```
+
+fn main() {
+    use imp_latency::graph::{ProcId, TaskId, TaskKind};
+    use imp_latency::stencil::heat1d_graph;
+    use imp_latency::util::{Stamp, Timer};
+
+    let g = heat1d_graph(1 << 17, 32, 16);
+    println!("graph: {} tasks, {} edges", g.len(), g.num_edges());
+    let mut st_a = Stamp::new(g.len());
+    let mut st_b = Stamp::new(g.len());
+
+    let t = Timer::start();
+    let mut closures = Vec::new();
+    for p in 0..16u32 {
+        let owned: Vec<u32> = g.owned_by(ProcId(p));
+        closures.push(g.backward_closure(&owned, &mut st_a));
+    }
+    println!("owned+closures: {:.3}s", t.elapsed_s());
+
+    let t = Timer::start();
+    let mut remaining = vec![0u32; g.len()];
+    for (p, c) in closures.iter().enumerate() {
+        let l0: Vec<u32> = c
+            .iter()
+            .copied()
+            .filter(|&x| {
+                g.kind(TaskId(x)) == TaskKind::Input && g.owner(TaskId(x)).0 == p as u32
+            })
+            .collect();
+        let _ = g.local_fixpoint_with(&l0, c, &mut st_a, &mut st_b, &mut remaining);
+    }
+    println!("fixpoints: {:.3}s", t.elapsed_s());
+
+    let t = Timer::start();
+    let s = imp_latency::transform::communication_avoiding_default(&g);
+    println!(
+        "full transform: {:.3}s ({:.2} Mtasks/s), {} messages",
+        t.elapsed_s(),
+        g.len() as f64 / t.elapsed_s() / 1e6,
+        s.total_messages()
+    );
+}

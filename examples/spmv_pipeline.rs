@@ -1,0 +1,95 @@
+//! SpMV pipeline: the transformation on an *irregular* workload.
+//!
+//! The paper motivates with "a repeated sequence of sparse matrix-vector
+//! products" — this example runs that workload end to end without any
+//! stencil structure assumptions:
+//!
+//! 1. build a 2-D Laplacian CSR matrix (the sparsity is all the
+//!    transformation sees);
+//! 2. partition it two ways — naive row blocks vs. dependency-aware
+//!    recursive bisection — and compare edge cuts;
+//! 3. unroll an 8-step SpMV chain over each distribution, transform,
+//!    verify Theorem 1, and compare message/redundancy statistics;
+//! 4. execute the transformed plan on the real threaded coordinator
+//!    (synthetic exact-value semantics) to prove the schedule routes
+//!    every value correctly;
+//! 5. simulate both distributions at high latency.
+//!
+//! ```sh
+//! cargo run --release --example spmv_pipeline
+//! ```
+
+use imp_latency::imp::Program;
+use imp_latency::sim::{simulate, ExecPlan, Machine};
+use imp_latency::stencil::{bisect, block_assign, quality, to_distribution, CsrMatrix};
+use imp_latency::transform::{check_schedule, communication_avoiding_default, ScheduleStats, TransformOptions};
+use std::sync::Arc;
+
+fn main() {
+    let (h, w, steps, p) = (24usize, 24usize, 8u32, 4u32);
+    let a = CsrMatrix::laplace2d(h, w);
+    println!("matrix: {}x{} 2-D Laplacian, {} nonzeros\n", a.n, a.n, a.nnz());
+
+    // ---- Partitioning ------------------------------------------------------
+    let blocks = block_assign(a.n, p);
+    let bis = bisect(&a, p);
+    let qb = quality(&a, &blocks, p);
+    let qm = quality(&a, &bis, p);
+    println!(
+        "partition quality (p={p}):\n  row blocks: edge cut {:>5} ({:.1}% of nnz), imbalance {:.3}\n  bisection : edge cut {:>5} ({:.1}% of nnz), imbalance {:.3}\n",
+        qb.edge_cut,
+        qb.cut_fraction() * 100.0,
+        qb.imbalance,
+        qm.edge_cut,
+        qm.cut_fraction() * 100.0,
+        qm.imbalance
+    );
+
+    // ---- Transform both distributions --------------------------------------
+    let mut results = Vec::new();
+    for (name, assign) in [("row-blocks", &blocks), ("bisection", &bis)] {
+        let dist = to_distribution(assign, p);
+        let g = Program::new(dist).iterate("spmv", a.signature(), steps).unroll();
+        let s = communication_avoiding_default(&g);
+        check_schedule(&g, &s).expect("Theorem 1");
+        let st = ScheduleStats::compute(&g, &s);
+        println!(
+            "{name:>11}: {} tasks, msgs {} (naive {}), words {}, redundancy {:.3}",
+            g.len(),
+            st.messages,
+            st.naive_messages,
+            st.words,
+            st.redundancy_factor
+        );
+        results.push((name, g, st));
+    }
+
+    // ---- Real threaded execution of the transformed plan -------------------
+    println!("\nreal threaded execution (exact value semantics):");
+    for (name, g, _) in &results {
+        let g = Arc::new(g.clone());
+        let plan = ExecPlan::ca(&g, steps, TransformOptions::default()).unwrap();
+        let r = imp_latency::coordinator::run_and_verify(&g, &plan)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        println!(
+            "  {name:>11}: {} task executions, {} messages, all values match sequential ✓",
+            r.executed, r.messages
+        );
+    }
+
+    // ---- Simulated runtimes -------------------------------------------------
+    println!("\nsimulated runtime at α=500γ, 8 threads/node:");
+    let mach = Machine::new(p, 8, 500.0, 0.1, 1.0);
+    for (name, g, _) in &results {
+        let naive = simulate(g, &ExecPlan::naive(g), &mach, false).total_time;
+        let ca = simulate(
+            g,
+            &ExecPlan::ca(g, steps, TransformOptions::default()).unwrap(),
+            &mach,
+            false,
+        )
+        .total_time;
+        println!("  {name:>11}: naive {naive:>9.1}  ca(b={steps}) {ca:>9.1}  ({:.2}x)", naive / ca);
+    }
+    println!("\nthe transformation needs no stencil structure — sparsity in, schedule out.");
+}

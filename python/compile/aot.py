@@ -1,0 +1,164 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Runs once at build time (``make artifacts``).  Python never executes on
+the request path; after this script finishes, the Rust binary is
+self-contained.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py, which this file adapts.
+
+Output layout::
+
+    artifacts/<name>.hlo.txt     one module per artifact
+    artifacts/manifest.txt       "name: in_spec, in_spec -> out_spec, ..."
+
+The manifest is the single source of truth the Rust ``runtime::registry``
+parses; shapes are spelled ``f32[2064]`` / ``f32[68x68]`` / ``i32[1]``.
+
+Usage: ``python -m compile.aot [--out-dir DIR] [--only REGEX] [--check]``
+"""
+
+import argparse
+import functools
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "f64": jnp.float64, "i64": jnp.int64}
+
+
+def spec(dtype, *dims):
+    """ShapeDtypeStruct helper: spec('f32', 4, 4) == f32[4x4]."""
+    return jax.ShapeDtypeStruct(tuple(dims), _DTYPES[dtype])
+
+
+def spec_str(s) -> str:
+    """Render a ShapeDtypeStruct as the manifest spelling, e.g. f32[68x68]."""
+    names = {"float32": "f32", "int32": "i32", "float64": "f64", "int64": "i64"}
+    dt = names[str(s.dtype)]
+    dims = "x".join(str(d) for d in s.shape) if s.shape else ""
+    return f"{dt}[{dims}]"
+
+
+# --------------------------------------------------------------------------
+# Artifact menu
+# --------------------------------------------------------------------------
+
+# Tile sizes the examples/benches use:
+#   n=256   unit/integration tests and quickstart      (N=2048, p=8)
+#   n=2048  end_to_end + CG                            (N=16384, p=8)
+#   64x64   heat2d_distributed                         (128x128 grid, 2x2)
+HEAT1D_TILES = (256, 2048)
+HEAT1D_BLOCKS = (1, 2, 4, 8)
+HEAT2D_TILES = ((64, 64),)
+HEAT2D_BLOCKS = (1, 2, 4)
+CG_N = 2048
+FULL_1D_N = 16384
+FULL_2D = (128, 128)
+
+F1 = spec("f32", 1)
+I1 = spec("i32", 1)
+
+
+def menu():
+    """Yield (name, fn, example_args) for every artifact to lower."""
+    for n in HEAT1D_TILES:
+        for b in HEAT1D_BLOCKS:
+            yield (
+                f"heat1d_n{n}_b{b}",
+                functools.partial(model.heat1d_superstep, b=b),
+                (spec("f32", n + 2 * b), F1),
+            )
+    for b in (1, 2, 4):
+        yield (
+            f"heat1d_r2_n256_b{b}",
+            functools.partial(model.heat1d_r2_superstep, b=b),
+            (spec("f32", 256 + 4 * b), F1),
+        )
+    for (h, w) in HEAT2D_TILES:
+        for b in HEAT2D_BLOCKS:
+            yield (
+                f"heat2d_h{h}w{w}_b{b}",
+                functools.partial(model.heat2d_superstep, b=b),
+                (spec("f32", h + 2 * b, w + 2 * b), F1),
+            )
+    yield ("heat1d_full_n%d" % FULL_1D_N, model.heat1d_full, (spec("f32", FULL_1D_N), F1, I1))
+    yield ("heat1d_full_n2048", model.heat1d_full, (spec("f32", 2048), F1, I1))
+    yield (
+        "heat2d_full_h%dw%d" % FULL_2D,
+        model.heat2d_full,
+        (spec("f32", *FULL_2D), F1, I1),
+    )
+    yield ("laplace1d_matvec_n%d" % CG_N, model.laplace1d_matvec, (spec("f32", CG_N + 2),))
+    yield ("dot_partial_n%d" % CG_N, model.dot_partial, (spec("f32", CG_N),) * 2)
+    yield ("axpy_n%d" % CG_N, model.axpy, (F1, spec("f32", CG_N), spec("f32", CG_N)))
+    yield (
+        "cg_xr_update_n%d" % CG_N,
+        model.cg_xr_update,
+        (spec("f32", CG_N),) * 4 + (F1,),
+    )
+    yield ("cg_p_update_n%d" % CG_N, model.cg_p_update, (spec("f32", CG_N),) * 2 + (F1,))
+
+
+def lower_one(name, fn, args):
+    """Lower one menu entry; returns (hlo_text, manifest_line)."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    outs = lowered.out_info
+    # out_info is a pytree of ShapeDtypeStructs matching the tuple return.
+    out_specs = [spec_str(o) for o in jax.tree_util.tree_leaves(outs)]
+    in_specs = [spec_str(a) for a in args]
+    line = f"{name}: {', '.join(in_specs)} -> {', '.join(out_specs)}"
+    return text, line
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument("--check", action="store_true", help="lower but do not write")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    pat = re.compile(args.only) if args.only else None
+
+    lines = []
+    for name, fn, ex in menu():
+        if pat and not pat.search(name):
+            continue
+        text, line = lower_one(name, fn, ex)
+        lines.append(line)
+        if not args.check:
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+        print(f"  {line}  ({len(text)} chars)")
+    if not args.check and pat is None:
+        with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"wrote {len(lines)} artifacts + manifest to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suites compare against.
+They implement the paper's update (eq. (1)) step by step with explicit
+slicing — no blocking, no cleverness — so any disagreement with the
+blocked Pallas kernels indicates a kernel bug, not an oracle bug.
+
+The model problem is the explicit heat equation:
+
+    x_i^(s+1) = x_i^(s) + nu * (x_{i-1}^(s) - 2 x_i^(s) + x_{i+1}^(s))
+
+which is the three-point ``f`` of paper eq. (1).  The blocked kernel
+consumes a tile of ``n + 2b`` points and produces the ``n`` centre points
+after ``b`` steps, exactly the trapezoid of paper figures 1-3.
+"""
+
+import jax.numpy as jnp
+
+
+def heat1d_step(x, nu):
+    """One explicit 1-D heat step on the interior of ``x``.
+
+    Returns an array two points shorter than ``x``: the boundary points
+    have no left/right neighbour and drop out, mirroring how the valid
+    region of a blocked tile shrinks by one per step.
+    """
+    left = x[:-2]
+    mid = x[1:-1]
+    right = x[2:]
+    return mid + nu * (left - 2.0 * mid + right)
+
+
+def heat1d_block_ref(x, nu, b):
+    """``b`` steps of the 1-D update; input ``n + 2b`` points, output ``n``.
+
+    This is the oracle for the blocked Pallas kernel: the shrinking-window
+    formulation makes the redundant-computation trapezoid explicit.
+    """
+    for _ in range(b):
+        x = heat1d_step(x, nu)
+    return x
+
+
+def heat1d_r2_step(x, nu):
+    """One radius-2 (five-point) 1-D step: a 4th-order-flavoured update
+
+        x_i ← x_i + nu/12 · (−x_{i−2} + 16 x_{i−1} − 30 x_i + 16 x_{i+1} − x_{i+2})
+
+    Input shrinks by two points per side (the wider dependence cone the
+    IMP ``Signature::stencil_radius(2)`` describes on the Rust side).
+    """
+    c = x[2:-2]
+    lap4 = (-x[:-4] + 16.0 * x[1:-3] - 30.0 * c + 16.0 * x[3:-1] - x[4:]) / 12.0
+    return c + nu * lap4
+
+
+def heat1d_r2_block_ref(x, nu, b):
+    """``b`` steps of the radius-2 update; input ``n + 4b``, output ``n``."""
+    for _ in range(b):
+        x = heat1d_r2_step(x, nu)
+    return x
+
+
+def heat2d_step(x, nu):
+    """One explicit 2-D five-point heat step on the interior of ``x``."""
+    c = x[1:-1, 1:-1]
+    n = x[:-2, 1:-1]
+    s = x[2:, 1:-1]
+    w = x[1:-1, :-2]
+    e = x[1:-1, 2:]
+    return c + nu * (n + s + w + e - 4.0 * c)
+
+
+def heat2d_block_ref(x, nu, b):
+    """``b`` steps of the 2-D update; input ``(h+2b, w+2b)``, output ``(h, w)``."""
+    for _ in range(b):
+        x = heat2d_step(x, nu)
+    return x
+
+
+def laplace1d_matvec_ref(x):
+    """y = A x for the 1-D Laplacian A = tridiag(-1, 2, -1).
+
+    Input carries a one-point halo on each side (``n + 2`` points); output
+    is ``n`` points.  Zero-Dirichlet boundaries are expressed by the caller
+    passing zero halo values.
+    """
+    return 2.0 * x[1:-1] - x[:-2] - x[2:]
+
+
+def dot_ref(x, y):
+    """Inner product, accumulated in f32 like the kernel."""
+    return jnp.dot(x, y)
+
+
+def axpy_ref(alpha, x, y):
+    """alpha * x + y."""
+    return alpha * x + y

@@ -1,0 +1,213 @@
+"""Layer-1 Pallas kernels: the blocked (communication-avoiding) stencil update.
+
+This is the compute hot-spot of the paper: one *superstep* of the
+transformed task graph, i.e. ``b`` time steps of the explicit heat update
+applied to a tile that carries a ``b``-deep halo on every side (paper
+figures 1-3).  The whole trapezoid is evaluated inside a single kernel so
+the intermediate levels live in VMEM and are never written back to HBM —
+this is exactly the scratchpad-locality argument of paper §1.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper targets
+CPU caches / cluster nodes, not CUDA, so the mapping to TPU is direct.  The
+"block of points that stays in cache across b sweeps" becomes the
+VMEM-resident tile; the extended ghost region becomes the input overlap.
+The stencil is bandwidth-bound, so the kernel targets the VPU; blocking
+raises arithmetic intensity from O(1) to O(b) flops/byte, which is the
+paper's locality claim restated for the TPU memory hierarchy.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin that
+the Rust runtime embeds cannot execute Mosaic custom-calls, and interpret
+mode lowers the kernel to plain HLO that any backend runs (see
+/opt/xla-example/README.md).  Numerics are identical either way.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _heat1d_block_kernel(b, x_ref, nu_ref, o_ref):
+    """Pallas body: b fused steps of the 3-point update on one tile.
+
+    ``x_ref`` holds ``n + 2b`` points.  Each step updates every interior
+    point of the buffer; after step ``s`` positions ``[s, n+2b-s)`` hold
+    valid level-``s`` values and the rest hold garbage that is never
+    consumed (the standard in-place trapezoid argument: position ``j`` at
+    step ``s`` reads ``j-1, j, j+1`` which are valid iff ``j`` lies in the
+    shrunken window).  The final write extracts the centre ``n`` points.
+    """
+    nu = nu_ref[0]
+    x = x_ref[...]
+    m = x.shape[0]
+
+    def step(_, buf):
+        left = buf[:-2]
+        mid = buf[1:-1]
+        right = buf[2:]
+        upd = mid + nu * (left - 2.0 * mid + right)
+        # Keep the buffer full-width so the loop carry has a fixed shape;
+        # the two edge points are stale after this step but sit outside
+        # the still-valid window and are never read for valid output.
+        return jnp.concatenate([buf[:1], upd, buf[m - 1 :]])
+
+    x = jax.lax.fori_loop(0, b, step, x)
+    o_ref[...] = x[b : m - b]
+
+
+def heat1d_block(x, nu, *, b):
+    """``b`` fused steps of the 1-D heat update on a haloed tile.
+
+    Args:
+      x:  ``f32[n + 2b]`` — local tile plus a ``b``-point ghost region on
+          each side (the paper's extended halo).
+      nu: ``f32[1]`` — diffusion coefficient (kept as an array so it stays
+          a runtime input of the AOT artifact rather than a baked constant).
+      b:  static block factor (number of fused time steps).
+
+    Returns: ``f32[n]`` — the tile after ``b`` steps.
+    """
+    n = x.shape[0] - 2 * b
+    assert n >= 1, f"tile too small for block factor: {x.shape[0]} vs b={b}"
+    return pl.pallas_call(
+        functools.partial(_heat1d_block_kernel, b),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x, nu)
+
+
+def _heat1d_r2_block_kernel(b, x_ref, nu_ref, o_ref):
+    """Pallas body: b fused steps of the radius-2 (five-point) update.
+
+    The ghost region is 2b deep — the paper's observation that the halo
+    width scales with (stencil radius × block factor) shows up here as
+    the ``2*b`` slice bounds.
+    """
+    nu = nu_ref[0]
+    x = x_ref[...]
+    m = x.shape[0]
+
+    def step(_, buf):
+        c = buf[2:-2]
+        lap4 = (-buf[:-4] + 16.0 * buf[1:-3] - 30.0 * c + 16.0 * buf[3:-1] - buf[4:]) / 12.0
+        upd = c + nu * lap4
+        return jnp.concatenate([buf[:2], upd, buf[m - 2 :]])
+
+    x = jax.lax.fori_loop(0, b, step, x)
+    o_ref[...] = x[2 * b : m - 2 * b]
+
+
+def heat1d_r2_block(x, nu, *, b):
+    """``b`` fused steps of the radius-2 1-D update on a haloed tile.
+
+    Args:
+      x:  ``f32[n + 4b]`` — tile plus a ``2b``-point ghost region per side.
+      nu: ``f32[1]``.
+      b:  static block factor.
+
+    Returns: ``f32[n]``.
+    """
+    n = x.shape[0] - 4 * b
+    assert n >= 1
+    return pl.pallas_call(
+        functools.partial(_heat1d_r2_block_kernel, b),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x, nu)
+
+
+def _heat2d_block_kernel(b, x_ref, nu_ref, o_ref):
+    """Pallas body: b fused steps of the 5-point update on one 2-D tile."""
+    nu = nu_ref[0]
+    x = x_ref[...]
+    h, w = x.shape
+
+    def step(_, buf):
+        c = buf[1:-1, 1:-1]
+        nb = buf[:-2, 1:-1]
+        sb = buf[2:, 1:-1]
+        wb = buf[1:-1, :-2]
+        eb = buf[1:-1, 2:]
+        upd = c + nu * (nb + sb + wb + eb - 4.0 * c)
+        # Re-embed the updated interior in the fixed-shape carry buffer.
+        top = buf[:1, :]
+        bot = buf[h - 1 :, :]
+        lft = buf[1:-1, :1]
+        rgt = buf[1:-1, w - 1 :]
+        mid = jnp.concatenate([lft, upd, rgt], axis=1)
+        return jnp.concatenate([top, mid, bot], axis=0)
+
+    x = jax.lax.fori_loop(0, b, step, x)
+    o_ref[...] = x[b : h - b, b : w - b]
+
+
+def heat2d_block(x, nu, *, b):
+    """``b`` fused steps of the 2-D five-point heat update on a haloed tile.
+
+    Args:
+      x:  ``f32[h + 2b, w + 2b]`` — tile plus ``b``-deep ghost frame.
+      nu: ``f32[1]``.
+      b:  static block factor.
+
+    Returns: ``f32[h, w]``.
+    """
+    h = x.shape[0] - 2 * b
+    w = x.shape[1] - 2 * b
+    assert h >= 1 and w >= 1
+    return pl.pallas_call(
+        functools.partial(_heat2d_block_kernel, b),
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        interpret=True,
+    )(x, nu)
+
+
+def _laplace1d_matvec_kernel(x_ref, o_ref):
+    """Pallas body: y = tridiag(-1, 2, -1) x on a haloed tile."""
+    x = x_ref[...]
+    o_ref[...] = 2.0 * x[1:-1] - x[:-2] - x[2:]
+
+
+def laplace1d_matvec(x):
+    """1-D Laplacian matvec on a tile with one-point halo: ``f32[n+2] -> f32[n]``.
+
+    This is the sparse-product building block for the CG application
+    (paper §1/§2): A = tridiag(-1, 2, -1), boundaries supplied by the halo.
+    """
+    n = x.shape[0] - 2
+    return pl.pallas_call(
+        _laplace1d_matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    o_ref[0] = jnp.sum(x_ref[...] * y_ref[...])
+
+
+def dot(x, y):
+    """Inner product of two local vector shards: ``f32[n], f32[n] -> f32[1]``.
+
+    The coordinator reduces the per-worker partial dots; the kernel only
+    produces the local contribution (one scalar per shard, paper's
+    "combine inner products" motivation for s-step methods).
+    """
+    return pl.pallas_call(
+        _dot_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def _axpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+def axpy(alpha, x, y):
+    """alpha*x + y on local shards: ``f32[1], f32[n], f32[n] -> f32[n]``."""
+    return pl.pallas_call(
+        _axpy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(alpha, x, y)

@@ -1,0 +1,134 @@
+"""Layer-2 JAX model: the compute graphs the Rust coordinator executes.
+
+Each public function here is one AOT artifact (lowered once by ``aot.py``
+to HLO text, loaded by ``rust/src/runtime``).  They wrap the Layer-1
+Pallas kernels from ``kernels/stencil_block.py`` so the kernel lowers into
+the same HLO module — a worker dispatch is one PJRT ``execute`` call per
+superstep, never one per time step.
+
+Artifact inventory (shapes fixed at lowering time; see ``aot.py`` menu):
+
+  heat1d_superstep    f32[n+2b], f32[1]            -> f32[n]
+  heat2d_superstep    f32[h+2b, w+2b], f32[1]      -> f32[h, w]
+  heat1d_full         f32[N], f32[1], i32[1]       -> f32[N]   (reference run)
+  heat2d_full         f32[H, W], f32[1], i32[1]    -> f32[H, W]
+  laplace1d_matvec    f32[n+2]                     -> f32[n]
+  dot_partial         f32[n], f32[n]               -> f32[1]
+  axpy                f32[1], f32[n], f32[n]       -> f32[n]
+  cg_xr_update        f32[n]x4, f32[1]             -> f32[n], f32[n], f32[1]
+  cg_p_update         f32[n], f32[n], f32[1]       -> f32[n], f32[1]
+
+The fused CG updates exist for the latency-tolerant CG (paper §1): they
+fold the follow-on partial inner product into the same dispatch, so the
+coordinator can start the allreduce (a message in the simulator, a channel
+round-trip in the real coordinator) one dispatch earlier — the
+Gropp-style overlap the paper cites as [9].
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import stencil_block as k
+
+
+# --------------------------------------------------------------------------
+# Heat-equation supersteps (the transformed task graph's unit of compute)
+# --------------------------------------------------------------------------
+
+def heat1d_superstep(x, nu, *, b):
+    """One superstep: ``b`` fused 1-D heat steps on a haloed tile.
+
+    ``x`` is the worker's local tile of ``n`` points with the ``b``-deep
+    ghost region already assembled by the coordinator (L^(3) receive done).
+    """
+    return (k.heat1d_block(x, nu, b=b),)
+
+
+def heat2d_superstep(x, nu, *, b):
+    """One superstep: ``b`` fused 2-D heat steps on a haloed tile."""
+    return (k.heat2d_block(x, nu, b=b),)
+
+
+def heat1d_r2_superstep(x, nu, *, b):
+    """One superstep of the radius-2 stencil (ghost region is 2b deep)."""
+    return (k.heat1d_r2_block(x, nu, b=b),)
+
+
+# --------------------------------------------------------------------------
+# Full-domain reference runs (used by examples to validate distributed runs)
+# --------------------------------------------------------------------------
+
+def heat1d_full(x, nu, m):
+    """``m`` steps of the 1-D heat update on the whole domain.
+
+    Zero-Dirichlet boundaries: the first and last point are held fixed.
+    ``m`` is a runtime input (i32[1]) so one artifact serves every step
+    count; the loop lowers to a single XLA while, not ``m`` dispatches.
+    """
+    nu_s = nu[0]
+
+    def step(_, buf):
+        upd = buf[1:-1] + nu_s * (buf[:-2] - 2.0 * buf[1:-1] + buf[2:])
+        return jnp.concatenate([buf[:1], upd, buf[-1:]])
+
+    return (jax.lax.fori_loop(0, m[0], step, x),)
+
+
+def heat2d_full(x, nu, m):
+    """``m`` steps of the 2-D heat update on the whole domain (Dirichlet)."""
+    nu_s = nu[0]
+    h, w = x.shape
+
+    def step(_, buf):
+        c = buf[1:-1, 1:-1]
+        upd = c + nu_s * (
+            buf[:-2, 1:-1] + buf[2:, 1:-1] + buf[1:-1, :-2] + buf[1:-1, 2:] - 4.0 * c
+        )
+        top = buf[:1, :]
+        bot = buf[h - 1 :, :]
+        lft = buf[1:-1, :1]
+        rgt = buf[1:-1, w - 1 :]
+        mid = jnp.concatenate([lft, upd, rgt], axis=1)
+        return jnp.concatenate([top, mid, bot], axis=0)
+
+    return (jax.lax.fori_loop(0, m[0], step, x),)
+
+
+# --------------------------------------------------------------------------
+# CG building blocks (the motivating iterative-method application)
+# --------------------------------------------------------------------------
+
+def laplace1d_matvec(x):
+    """Local shard of y = A x, A = tridiag(-1, 2, -1); halo pre-assembled."""
+    return (k.laplace1d_matvec(x),)
+
+
+def dot_partial(x, y):
+    """Local contribution to a global inner product."""
+    return (k.dot(x, y),)
+
+
+def axpy(alpha, x, y):
+    """alpha*x + y on a local shard."""
+    return (k.axpy(alpha, x, y),)
+
+
+def cg_xr_update(x, r, p, ap, alpha):
+    """Fused CG tail: x += alpha p; r -= alpha Ap; partial (r, r).
+
+    Returning the partial dot from the same dispatch lets the coordinator
+    launch the rho allreduce immediately — the overlap that makes the
+    pipelined CG latency tolerant.
+    """
+    x_new = k.axpy(alpha, p, x)
+    neg = -alpha
+    r_new = k.axpy(jnp.reshape(neg, (1,)), ap, r)
+    rr = k.dot(r_new, r_new)
+    return (x_new, r_new, rr)
+
+
+def cg_p_update(r, p, beta):
+    """Fused CG head: p = r + beta p; partial (p, p) for diagnostics."""
+    p_new = k.axpy(beta, p, r)
+    pp = k.dot(p_new, p_new)
+    return (p_new, pp)

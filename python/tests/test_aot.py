@@ -1,0 +1,123 @@
+"""AOT pipeline tests: HLO text validity, manifest consistency, determinism.
+
+These guard the Python→Rust interchange contract: the Rust runtime parses
+``manifest.txt`` and feeds literals with exactly the manifest shapes, so a
+drifting manifest or a proto-versioned HLO dump would break the request
+path silently.  Everything here runs without the Rust side.
+"""
+
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+
+class TestSpecHelpers:
+    def test_spec_str_1d(self):
+        assert aot.spec_str(aot.spec("f32", 2064)) == "f32[2064]"
+
+    def test_spec_str_2d(self):
+        assert aot.spec_str(aot.spec("f32", 68, 68)) == "f32[68x68]"
+
+    def test_spec_str_i32(self):
+        assert aot.spec_str(aot.spec("i32", 1)) == "i32[1]"
+
+
+class TestMenu:
+    def test_menu_names_unique(self):
+        names = [name for name, _, _ in aot.menu()]
+        assert len(names) == len(set(names))
+
+    def test_menu_covers_runtime_needs(self):
+        # The Rust examples hard-code these artifact names; losing one from
+        # the menu breaks the end-to-end driver.
+        names = {name for name, _, _ in aot.menu()}
+        for required in [
+            "heat1d_n2048_b1",
+            "heat1d_n2048_b8",
+            "heat1d_n256_b4",
+            "heat2d_h64w64_b2",
+            "heat1d_full_n16384",
+            "laplace1d_matvec_n2048",
+            "dot_partial_n2048",
+            "axpy_n2048",
+            "cg_xr_update_n2048",
+            "cg_p_update_n2048",
+        ]:
+            assert required in names, required
+
+    def test_halo_shapes_consistent(self):
+        # heat1d_n{n}_b{b} must take f32[n+2b] — the transformation's
+        # ghost-region arithmetic depends on it.
+        pat = re.compile(r"heat1d_n(\d+)_b(\d+)$")
+        for name, _, args in aot.menu():
+            m = pat.match(name)
+            if not m:
+                continue
+            n, b = int(m.group(1)), int(m.group(2))
+            assert args[0].shape == (n + 2 * b,)
+
+
+class TestLowering:
+    def test_hlo_text_parses_as_hlo(self):
+        name, fn, args = next(iter(aot.menu()))
+        text, line = aot.lower_one(name, fn, args)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # return_tuple=True: the root must be a tuple for Rust's to_tuple.
+        assert re.search(r"ROOT\s+\S+\s+=\s+\(", text), "root is not a tuple"
+
+    def test_manifest_line_shape(self):
+        name, fn, args = next(iter(aot.menu()))
+        _, line = aot.lower_one(name, fn, args)
+        assert line.startswith(f"{name}: ")
+        assert "->" in line
+
+    def test_lowering_deterministic(self):
+        name, fn, args = next(iter(aot.menu()))
+        t1, _ = aot.lower_one(name, fn, args)
+        t2, _ = aot.lower_one(name, fn, args)
+        assert t1 == t2
+
+    def test_no_custom_calls_in_artifacts(self):
+        # interpret=True must lower Pallas to plain HLO; a Mosaic
+        # custom-call would crash the CPU PJRT client in Rust.
+        for name, fn, args in aot.menu():
+            if "full" in name:
+                continue  # plain jnp, cheap to skip
+            text, _ = aot.lower_one(name, fn, args)
+            assert "custom-call" not in text, name
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    """Validate the on-disk artifacts the Rust runtime will actually load."""
+
+    @property
+    def art_dir(self):
+        return os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+    def test_manifest_matches_files(self):
+        with open(os.path.join(self.art_dir, "manifest.txt")) as f:
+            lines = [l for l in f.read().splitlines() if l.strip()]
+        for line in lines:
+            name = line.split(":")[0]
+            assert os.path.exists(os.path.join(self.art_dir, f"{name}.hlo.txt")), name
+
+    def test_manifest_covers_full_menu(self):
+        with open(os.path.join(self.art_dir, "manifest.txt")) as f:
+            manifest_names = {l.split(":")[0] for l in f.read().splitlines() if l.strip()}
+        menu_names = {name for name, _, _ in aot.menu()}
+        assert menu_names <= manifest_names
+
+    def test_artifact_files_are_hlo_text(self):
+        for fname in os.listdir(self.art_dir):
+            if fname.endswith(".hlo.txt"):
+                with open(os.path.join(self.art_dir, fname)) as f:
+                    head = f.read(200)
+                assert "HloModule" in head, fname

@@ -1,0 +1,208 @@
+"""Kernel vs. reference oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and block factors; fixed cases pin the exact
+configurations the Rust runtime loads (the AOT menu).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import stencil_block as k
+
+RTOL = 1e-5
+ATOL = 1e-6
+
+
+def rand(shape, seed=0):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+def nu_arr(v):
+    return jnp.asarray([v], dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# 1-D blocked stencil
+# --------------------------------------------------------------------------
+
+class TestHeat1dBlock:
+    @pytest.mark.parametrize("b", [1, 2, 4, 8])
+    @pytest.mark.parametrize("n", [1, 4, 256])
+    def test_matches_ref(self, n, b):
+        x = jnp.asarray(rand((n + 2 * b,), seed=n * 10 + b))
+        got = k.heat1d_block(x, nu_arr(0.25), b=b)
+        want = ref.heat1d_block_ref(x, 0.25, b)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_b1_is_single_step(self):
+        x = jnp.asarray(rand((34,), seed=3))
+        got = k.heat1d_block(x, nu_arr(0.1), b=1)
+        want = ref.heat1d_step(x, 0.1)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_nu_zero_is_identity(self):
+        x = jnp.asarray(rand((40,), seed=4))
+        got = k.heat1d_block(x, nu_arr(0.0), b=4)
+        np.testing.assert_allclose(got, x[4:-4], rtol=0, atol=0)
+
+    def test_constant_field_is_fixed_point(self):
+        # The heat update preserves constants: f(c,c,c) = c.
+        x = jnp.full((24,), 3.5, dtype=jnp.float32)
+        got = k.heat1d_block(x, nu_arr(0.3), b=4)
+        np.testing.assert_allclose(got, np.full(16, 3.5, np.float32), rtol=RTOL)
+
+    def test_blocked_equals_composition_of_singles(self):
+        # b fused steps == b applications of the b=1 kernel with shrinking
+        # halo: the equivalence the task-graph transformation relies on.
+        b, n = 4, 32
+        x = jnp.asarray(rand((n + 2 * b,), seed=7))
+        fused = k.heat1d_block(x, nu_arr(0.2), b=b)
+        cur = x
+        for _ in range(b):
+            cur = k.heat1d_block(cur, nu_arr(0.2), b=1)
+        np.testing.assert_allclose(fused, cur, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=96),
+        b=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        nu=st.floats(min_value=-0.5, max_value=0.5, width=32),
+    )
+    def test_property_matches_ref(self, n, b, seed, nu):
+        x = jnp.asarray(rand((n + 2 * b,), seed=seed))
+        got = k.heat1d_block(x, nu_arr(nu), b=b)
+        want = ref.heat1d_block_ref(x, np.float32(nu), b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Radius-2 blocked stencil
+# --------------------------------------------------------------------------
+
+class TestHeat1dR2Block:
+    @pytest.mark.parametrize("b", [1, 2, 4])
+    @pytest.mark.parametrize("n", [1, 8, 64])
+    def test_matches_ref(self, n, b):
+        x = jnp.asarray(rand((n + 4 * b,), seed=n + b))
+        got = k.heat1d_r2_block(x, nu_arr(0.1), b=b)
+        want = ref.heat1d_r2_block_ref(x, 0.1, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_constant_field_is_fixed_point(self):
+        x = jnp.full((40,), 2.0, dtype=jnp.float32)
+        got = k.heat1d_r2_block(x, nu_arr(0.2), b=2)
+        np.testing.assert_allclose(got, np.full(32, 2.0, np.float32), rtol=1e-5)
+
+    def test_linear_field_is_fixed_point(self):
+        # The 4th-order Laplacian annihilates linear functions too.
+        x = jnp.arange(40, dtype=jnp.float32) * 0.5
+        got = k.heat1d_r2_block(x, nu_arr(0.2), b=2)
+        np.testing.assert_allclose(got, np.asarray(x[4:-4]), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=48),
+        b=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_property_matches_ref(self, n, b, seed):
+        x = jnp.asarray(rand((n + 4 * b,), seed=seed))
+        got = k.heat1d_r2_block(x, nu_arr(0.1), b=b)
+        want = ref.heat1d_r2_block_ref(x, np.float32(0.1), b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# 2-D blocked stencil
+# --------------------------------------------------------------------------
+
+class TestHeat2dBlock:
+    @pytest.mark.parametrize("b", [1, 2, 4])
+    @pytest.mark.parametrize("hw", [(1, 1), (5, 3), (16, 16)])
+    def test_matches_ref(self, hw, b):
+        h, w = hw
+        x = jnp.asarray(rand((h + 2 * b, w + 2 * b), seed=h * 100 + w + b))
+        got = k.heat2d_block(x, nu_arr(0.2), b=b)
+        want = ref.heat2d_block_ref(x, 0.2, b)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_constant_field_is_fixed_point(self):
+        x = jnp.full((12, 12), -1.25, dtype=jnp.float32)
+        got = k.heat2d_block(x, nu_arr(0.15), b=2)
+        np.testing.assert_allclose(got, np.full((8, 8), -1.25, np.float32), rtol=RTOL)
+
+    def test_separable_constant_rows(self):
+        # A field constant along rows reduces to the 1-D problem per column.
+        b, h, w = 2, 6, 8
+        col = rand((w + 2 * b,), seed=11)
+        x = jnp.asarray(np.tile(col, (h + 2 * b, 1)))
+        got = k.heat2d_block(x, nu_arr(0.2), b=b)
+        want1d = ref.heat1d_block_ref(jnp.asarray(col), 0.2, b)
+        np.testing.assert_allclose(got, np.tile(np.asarray(want1d), (h, 1)), rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=st.integers(min_value=1, max_value=20),
+        w=st.integers(min_value=1, max_value=20),
+        b=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_property_matches_ref(self, h, w, b, seed):
+        x = jnp.asarray(rand((h + 2 * b, w + 2 * b), seed=seed))
+        got = k.heat2d_block(x, nu_arr(0.2), b=b)
+        want = ref.heat2d_block_ref(x, np.float32(0.2), b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# CG vector kernels
+# --------------------------------------------------------------------------
+
+class TestVectorKernels:
+    def test_matvec_matches_ref(self):
+        x = jnp.asarray(rand((66,), seed=21))
+        got = k.laplace1d_matvec(x)
+        want = ref.laplace1d_matvec_ref(x)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_matvec_of_linear_function_is_boundary_only(self):
+        # A applied to a linear ramp is zero in the interior.
+        x = jnp.arange(34, dtype=jnp.float32)
+        got = k.laplace1d_matvec(x)
+        np.testing.assert_allclose(got, np.zeros(32, np.float32), atol=1e-5)
+
+    def test_dot_matches_ref(self):
+        x = jnp.asarray(rand((128,), seed=22))
+        y = jnp.asarray(rand((128,), seed=23))
+        got = k.dot(x, y)[0]
+        np.testing.assert_allclose(got, ref.dot_ref(x, y), rtol=1e-4)
+
+    def test_dot_shard_additivity(self):
+        # Partial dots over shards must sum to the global dot — the
+        # invariant the coordinator's allreduce relies on.
+        x = jnp.asarray(rand((64,), seed=24))
+        y = jnp.asarray(rand((64,), seed=25))
+        parts = [float(k.dot(x[i : i + 16], y[i : i + 16])[0]) for i in range(0, 64, 16)]
+        np.testing.assert_allclose(sum(parts), float(ref.dot_ref(x, y)), rtol=1e-4)
+
+    def test_axpy_matches_ref(self):
+        x = jnp.asarray(rand((77,), seed=26))
+        y = jnp.asarray(rand((77,), seed=27))
+        got = k.axpy(nu_arr(1.7), x, y)
+        np.testing.assert_allclose(got, ref.axpy_ref(1.7, x, y), rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=200),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        alpha=st.floats(min_value=-10, max_value=10, width=32),
+    )
+    def test_property_axpy(self, n, seed, alpha):
+        x = jnp.asarray(rand((n,), seed=seed))
+        y = jnp.asarray(rand((n,), seed=seed + 1))
+        got = k.axpy(nu_arr(alpha), x, y)
+        np.testing.assert_allclose(got, ref.axpy_ref(np.float32(alpha), x, y), rtol=1e-4, atol=1e-5)

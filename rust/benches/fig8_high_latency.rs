@@ -1,0 +1,42 @@
+//! Bench: regenerate paper **figure 8** — strong-scaling runtime vs.
+//! threads per node at *high* latency (α = 500γ), plus the joint
+//! figure-7/8 claims check (crossover moves left, gain grows).
+//!
+//! Output: table + ASCII plot + `results/fig8.csv`.
+
+use imp_latency::config::{preset_fig7, preset_fig8};
+use imp_latency::figures::{check_fig78_claims, fig78_sweep};
+use imp_latency::sim::{simulate, ExecPlan, Machine};
+use imp_latency::stencil::heat1d_graph;
+use imp_latency::transform::TransformOptions;
+
+fn main() {
+    let fig = fig78_sweep(&preset_fig8()).expect("sweep");
+    println!("figure 8 — runtime vs threads/node, high latency (α=500γ, N=65536, M=64, p=16)");
+    print!("{}", fig.to_table());
+    print!("{}", fig.to_ascii_plot(14));
+    fig.write_csv("results/fig8.csv").expect("write csv");
+    println!("wrote results/fig8.csv");
+
+    // Discrete-sim cross-check at a moderate thread count: blocking must
+    // already win (the paper's figure-8 observation).
+    let g = heat1d_graph(4096, 16, 8);
+    let m = Machine::new(8, 8, 500.0, 0.1, 1.0);
+    let naive = simulate(&g, &ExecPlan::naive(&g), &m, false).total_time;
+    let ca = simulate(
+        &g,
+        &ExecPlan::ca(&g, 8, TransformOptions::default()).unwrap(),
+        &m,
+        false,
+    )
+    .total_time;
+    println!("discrete-sim spot check (t=8): naive {naive:.1}, ca(b=8) {ca:.1}");
+    assert!(ca < naive, "high latency: CA must win at moderate thread counts");
+
+    // The joint claims of §4 across both figures.
+    let f7 = fig78_sweep(&preset_fig7()).expect("sweep");
+    match check_fig78_claims(&f7, &fig) {
+        Ok(v) => println!("{v} ✓"),
+        Err(e) => panic!("figure-7/8 claims FAILED: {e}"),
+    }
+}

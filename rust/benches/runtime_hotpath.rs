@@ -1,0 +1,94 @@
+//! Bench: the request-path hot loop — PJRT dispatch latency and
+//! end-to-end distributed throughput.
+//!
+//! Measures (a) single-artifact execute latency per blocked-kernel
+//! variant (the per-superstep dispatch cost the coordinator pays), and
+//! (b) whole-system points·steps/second of the real distributed heat
+//! run per block factor — the end-to-end counterpart of figures 7/8 on
+//! this host.  Output: `results/runtime_hotpath.csv`.
+
+use imp_latency::coordinator::heat1d::{run, Heat1dConfig};
+use imp_latency::runtime::{Registry, Runtime, Value};
+use imp_latency::util::{Csv, Timer};
+
+fn main() {
+    let dir = Registry::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    // ---- (a) dispatch latency per artifact --------------------------------
+    let rt = Runtime::new(&dir).expect("runtime");
+    println!("PJRT dispatch latency (n=2048 tile, 100 reps after warmup):");
+    println!("{:>14} {:>12} {:>14} {:>16}", "artifact", "µs/call", "steps/call", "points·steps/s");
+    let mut csv = Csv::new(&["artifact", "us_per_call", "points_steps_per_s"]);
+    for b in [1u32, 2, 4, 8] {
+        let name = format!("heat1d_n2048_b{b}");
+        let tile = vec![0.5f32; 2048 + 2 * b as usize];
+        let nu = Value::scalar(0.2);
+        rt.execute_f32_1(&name, &[Value::F32(tile.clone()), nu.clone()]).unwrap(); // warm
+        let reps = 100;
+        let t = Timer::start();
+        for _ in 0..reps {
+            rt.execute_f32_1(&name, &[Value::F32(tile.clone()), nu.clone()]).unwrap();
+        }
+        let us = t.elapsed_us() / reps as f64;
+        let rate = 2048.0 * b as f64 / (us * 1e-6);
+        println!("{name:>14} {us:>12.1} {b:>14} {rate:>16.3e}");
+        csv.rowf(&[b as f64, us, rate]);
+    }
+
+    // ---- (b) end-to-end distributed throughput ----------------------------
+    println!("\nend-to-end distributed heat (N=16384, M=256, 8 workers):");
+    println!(
+        "{:>4} {:>10} {:>10} {:>10} {:>10} {:>8} {:>16}",
+        "b", "wall(s)", "steady(s)", "exch(s)", "comp(s)", "msgs", "points·steps/s"
+    );
+    let mut e2e = Csv::new(&[
+        "b",
+        "wall_s",
+        "steady_s",
+        "exchange_s",
+        "compute_s",
+        "messages",
+        "steady_rate",
+    ]);
+    let n = 2048 * 8;
+    let init: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.003).sin()).collect();
+    for b in [1u32, 2, 4, 8] {
+        let cfg = Heat1dConfig {
+            n_per_worker: 2048,
+            workers: 8,
+            b,
+            steps: 256,
+            nu: 0.2,
+            artifacts_dir: dir.clone(),
+        };
+        let (_, stats) = run(&cfg, &init).expect("run");
+        // Steady-state rate: exclude the pay-once PJRT setup, which a
+        // long-running service amortizes.
+        let rate = n as f64 * 256.0 / stats.steady_secs();
+        println!(
+            "{b:>4} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>8} {:>16.3e}",
+            stats.wall_secs,
+            stats.steady_secs(),
+            stats.exchange_secs,
+            stats.compute_secs,
+            stats.messages,
+            rate
+        );
+        e2e.rowf(&[
+            b as f64,
+            stats.wall_secs,
+            stats.steady_secs(),
+            stats.exchange_secs,
+            stats.compute_secs,
+            stats.messages as f64,
+            rate,
+        ]);
+    }
+    csv.write_file("results/runtime_dispatch.csv").expect("csv");
+    e2e.write_file("results/runtime_hotpath.csv").expect("csv");
+    println!("\nwrote results/runtime_dispatch.csv, results/runtime_hotpath.csv");
+}

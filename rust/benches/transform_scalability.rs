@@ -1,0 +1,74 @@
+//! Bench: L3 performance — transformation and simulator throughput.
+//!
+//! The "communication avoiding compiler" must scale to real task graphs:
+//! this bench times graph construction, the §3 transformation, the
+//! Theorem-1 checker and the discrete-event simulator on 1-D stencil
+//! graphs from 10⁴ to ~4·10⁶ tasks, reporting tasks/second.
+//!
+//! Perf targets (DESIGN.md §7): transform ≥ 1M tasks/s, simulator ≥ 1M
+//! task-events/s.  Output: `results/transform_scalability.csv`.
+
+use imp_latency::sim::{simulate, ExecPlan, Machine};
+use imp_latency::stencil::heat1d_graph;
+use imp_latency::transform::{check_schedule, communication_avoiding_default};
+use imp_latency::util::{Csv, Timer};
+
+fn main() {
+    println!("transform / simulator throughput (1-D stencil graphs, p=16)");
+    println!(
+        "{:>10} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "tasks", "edges", "build(s)", "xform(s)", "Mtasks/s", "check(s)", "sim Mev/s"
+    );
+    let mut csv = Csv::new(&[
+        "tasks",
+        "build_s",
+        "transform_s",
+        "transform_mtasks_per_s",
+        "check_s",
+        "sim_mevents_per_s",
+    ]);
+    let p = 16u32;
+    let mut last_rate = 0.0;
+    for (n, m) in [(1u64 << 10, 16u32), (1 << 13, 32), (1 << 15, 32), (1 << 17, 32)] {
+        let tb = Timer::start();
+        let g = heat1d_graph(n, m, p);
+        let build = tb.elapsed_s();
+
+        let tx = Timer::start();
+        let s = communication_avoiding_default(&g);
+        let xform = tx.elapsed_s();
+
+        let tc = Timer::start();
+        check_schedule(&g, &s).expect("well-formed");
+        let check = tc.elapsed_s();
+
+        // Simulator throughput on the naive plan (one event per task/level).
+        let plan = ExecPlan::naive(&g);
+        let mach = Machine::new(p, 8, 100.0, 0.1, 1.0);
+        let ts = Timer::start();
+        let r = simulate(&g, &plan, &mach, false);
+        let sim = ts.elapsed_s();
+        let sim_rate = plan.executed_tasks() as f64 / sim / 1e6;
+
+        let rate = g.len() as f64 / xform / 1e6;
+        last_rate = rate;
+        println!(
+            "{:>10} {:>10} {:>12.3} {:>12.3} {:>12.2} {:>12.3} {:>12.2}",
+            g.len(),
+            g.num_edges(),
+            build,
+            xform,
+            rate,
+            check,
+            sim_rate
+        );
+        csv.rowf(&[g.len() as f64, build, xform, rate, check, sim_rate]);
+        let _ = r;
+    }
+    csv.write_file("results/transform_scalability.csv").expect("write csv");
+    println!("wrote results/transform_scalability.csv");
+    println!(
+        "largest-graph transform rate: {last_rate:.2} Mtasks/s (target ≥ 1.0) {}",
+        if last_rate >= 1.0 { "✓" } else { "✗ BELOW TARGET" }
+    );
+}

@@ -1,0 +1,193 @@
+//! Experiment configuration: a small `key = value` config format plus the
+//! presets used by the figures and examples.
+//!
+//! No `serde` is available in the vendored crate set, so the parser is
+//! hand-rolled: one `key = value` pair per line, `#` comments, sections
+//! ignored (`[section]` lines are allowed and flattened, so simple TOML
+//! files parse too).  CLI `key=value` overrides merge on top.
+
+use std::collections::BTreeMap;
+
+/// A flat, ordered key-value config.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config::default()
+    }
+
+    /// Parse config text; later duplicates win (override semantics).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut map = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with('[') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value, got {line:?}", ln + 1))?;
+            map.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        Ok(Config { map })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Merge `key=value` CLI arguments over this config; unknown args are
+    /// returned untouched.
+    pub fn apply_overrides<'a>(&mut self, args: &[&'a str]) -> Vec<&'a str> {
+        let mut rest = Vec::new();
+        for a in args {
+            match a.split_once('=') {
+                Some((k, v)) if !k.is_empty() && !k.starts_with('-') => {
+                    self.map.insert(k.to_string(), v.to_string());
+                }
+                _ => rest.push(*a),
+            }
+        }
+        rest
+    }
+
+    pub fn set(&mut self, k: &str, v: impl ToString) {
+        self.map.insert(k.to_string(), v.to_string());
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.map.get(k).map(String::as_str)
+    }
+
+    /// Typed getter with default.
+    pub fn get_or<T: std::str::FromStr>(&self, k: &str, default: T) -> T {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Typed getter, error when missing/unparsable.
+    pub fn require<T: std::str::FromStr>(&self, k: &str) -> Result<T, String> {
+        self.get(k)
+            .ok_or_else(|| format!("missing config key {k:?}"))?
+            .parse()
+            .map_err(|_| format!("config key {k:?} has unparsable value {:?}", self.get(k)))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+
+    /// Render back to config text.
+    pub fn to_text(&self) -> String {
+        self.map.iter().map(|(k, v)| format!("{k} = {v}\n")).collect()
+    }
+}
+
+/// The figure-7 preset (moderate latency strong-scaling sweep).
+///
+/// Calibration (see DESIGN.md §8): with block factors up to `b`, blocking
+/// saves `α·(1 − 1/b)` per level but adds `≈ b²γ/t` of redundant work per
+/// superstep, so the paper's figure-7 shape ("only for very high thread
+/// count is there any gain") needs `α` of order `b·γ`; figure 8's shape
+/// ("even for moderate thread counts blocking effects latency hiding")
+/// needs `α ≫ b·γ`.
+pub fn preset_fig7() -> Config {
+    let mut c = Config::new();
+    c.set("n", 65536);
+    c.set("m", 64);
+    c.set("p", 16);
+    c.set("alpha", 8.0);
+    c.set("beta", 0.1);
+    c.set("gamma", 1.0);
+    c.set("threads", "1,2,4,8,16,32,64,128,256");
+    c.set("blocks", "2,4,8");
+    c
+}
+
+/// The figure-8 preset (high latency).
+pub fn preset_fig8() -> Config {
+    let mut c = preset_fig7();
+    c.set("alpha", 500.0);
+    c
+}
+
+/// The end-to-end driver preset (real PJRT run).
+pub fn preset_end_to_end() -> Config {
+    let mut c = Config::new();
+    c.set("n_per_worker", 2048);
+    c.set("workers", 8);
+    c.set("steps", 256);
+    c.set("nu", 0.2);
+    c.set("blocks", "1,2,4,8");
+    c
+}
+
+/// Parse a comma-separated numeric list config value.
+pub fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>, String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse().map_err(|_| format!("bad list element {t:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let c = Config::parse("# comment\na = 1\nname = \"x y\"\n\n[sec]\nb=2.5\n").unwrap();
+        assert_eq!(c.get_or("a", 0u32), 1);
+        assert_eq!(c.get("name"), Some("x y"));
+        assert_eq!(c.get_or("b", 0.0f64), 2.5);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Config::parse("no equals sign").is_err());
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("a = 1").unwrap();
+        let rest = c.apply_overrides(&["a=2", "--flag", "b=3"]);
+        assert_eq!(c.get_or("a", 0u32), 2);
+        assert_eq!(c.get_or("b", 0u32), 3);
+        assert_eq!(rest, vec!["--flag"]);
+    }
+
+    #[test]
+    fn require_errors() {
+        let c = Config::new();
+        assert!(c.require::<u32>("missing").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        assert_eq!(parse_list::<u32>("1, 2,4").unwrap(), vec![1, 2, 4]);
+        assert!(parse_list::<u32>("1,x").is_err());
+    }
+
+    #[test]
+    fn presets_complete() {
+        for c in [preset_fig7(), preset_fig8()] {
+            for k in ["n", "m", "p", "alpha", "beta", "gamma", "threads", "blocks"] {
+                assert!(c.get(k).is_some(), "{k}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_text() {
+        let mut c = Config::new();
+        c.set("z", 1);
+        c.set("a", "hello");
+        let c2 = Config::parse(&c.to_text()).unwrap();
+        assert_eq!(c, c2);
+    }
+}

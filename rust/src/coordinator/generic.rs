@@ -1,0 +1,245 @@
+//! Generic distributed execution of an [`ExecPlan`] with deterministic
+//! synthetic task semantics.
+//!
+//! This is the coordinator's routing/state-management core, exercised
+//! independently of PJRT: every task's "value" is a u64 computed from its
+//! item, level and predecessor values, so a distributed run can be checked
+//! bit-exactly against a sequential evaluation of the graph.  The property
+//! suite (`rust/tests/prop_coordinator.rs`) runs random DAGs through
+//! random transforms here — if the subsets, message pairing, or phase
+//! ordering were wrong in any way, values would diverge.
+//!
+//! The real PJRT-backed engines ([`super::heat1d`], [`super::heat2d`])
+//! reuse the same fabric and phase loop shape.
+
+use super::messages::{fabric, Payload};
+use crate::graph::{TaskGraph, TaskId, TaskKind};
+use crate::sim::{ExecPlan, Phase};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread;
+
+/// Deterministic task semantics: `Input` value from item; `Compute` value
+/// mixes item, level and the (order-independent) sum of pred values.
+#[inline]
+pub fn input_value(item: u64) -> u64 {
+    item.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xD6E8FEB86659FD93
+}
+
+#[inline]
+pub fn compute_value(item: u64, level: u32, pred_sum: u64) -> u64 {
+    pred_sum
+        .wrapping_add(item.wrapping_mul(0xA24BAED4963EE407))
+        .wrapping_add((level as u64).wrapping_mul(0x9FB21C651E98DF25))
+        .rotate_left(17)
+}
+
+/// Sequentially evaluate every task's value (the reference).
+pub fn sequential_values(g: &TaskGraph) -> Vec<u64> {
+    let order = g.topo_order().0;
+    let mut val = vec![0u64; g.len()];
+    for t in order {
+        let tid = TaskId(t);
+        val[t as usize] = match g.kind(tid) {
+            TaskKind::Input => input_value(g.item(tid)),
+            TaskKind::Compute => {
+                let mut s = 0u64;
+                for &p in g.preds(tid) {
+                    s = s.wrapping_add(val[p as usize]);
+                }
+                compute_value(g.item(tid), g.level(tid), s)
+            }
+        };
+    }
+    val
+}
+
+/// Outcome of a distributed run.
+#[derive(Debug)]
+pub struct GenericRunResult {
+    /// Values of every task, as computed by its owner.
+    pub owned_values: Vec<(u32, u64)>,
+    /// Total messages sent.
+    pub messages: u64,
+    /// Total words sent.
+    pub words: u64,
+    /// Tasks executed across all workers (incl. redundant).
+    pub executed: u64,
+    /// Wall-clock seconds.
+    pub wall_secs: f64,
+}
+
+/// Execute `plan` for `g` on real threads (one per processor) and real
+/// channels.  Returns owner-computed values for verification.
+///
+/// Panics if the plan is not executable (a task's predecessor value is
+/// unavailable when needed) — the property tests rely on that to catch
+/// malformed schedules.
+pub fn run_generic(g: &Arc<TaskGraph>, plan: &ExecPlan) -> GenericRunResult {
+    let nprocs = plan.per_proc.len();
+    let endpoints = fabric(nprocs as u32);
+    let t0 = std::time::Instant::now();
+
+    let mut handles = Vec::with_capacity(nprocs);
+    for (p, (mut ep, proc_plan)) in
+        endpoints.into_iter().zip(plan.per_proc.iter().cloned()).enumerate()
+    {
+        let g = Arc::clone(g);
+        handles.push(thread::spawn(move || {
+            // Worker-local value store: task id → value.
+            let mut store: HashMap<u32, u64> = HashMap::new();
+            // Inputs owned by this worker are available from the start.
+            for t in g.tasks() {
+                if g.kind(t) == TaskKind::Input && g.owner(t).0 == p as u32 {
+                    store.insert(t.0, input_value(g.item(t)));
+                }
+            }
+            let mut executed = 0u64;
+            for phase in &proc_plan.phases {
+                match phase {
+                    Phase::Compute(tasks) => {
+                        let mut order = tasks.clone();
+                        order.sort_unstable_by_key(|&t| (g.level(TaskId(t)), t));
+                        for t in order {
+                            let tid = TaskId(t);
+                            let mut s = 0u64;
+                            for &pr in g.preds(tid) {
+                                let v = store.get(&pr).unwrap_or_else(|| {
+                                    panic!(
+                                        "p{p}: task t{t} needs t{pr} which is unavailable"
+                                    )
+                                });
+                                s = s.wrapping_add(*v);
+                            }
+                            store.insert(t, compute_value(g.item(tid), g.level(tid), s));
+                            executed += 1;
+                        }
+                    }
+                    Phase::Send { to, tasks } => {
+                        let values: Vec<f32> = Vec::new(); // values travel in `raw`
+                        let mut raw = Vec::with_capacity(tasks.len() * 2);
+                        for &t in tasks {
+                            let v = *store
+                                .get(&t)
+                                .unwrap_or_else(|| panic!("p{p}: sending unknown t{t}"));
+                            // Pack u64 into two f32-slots losslessly via bits.
+                            raw.push(f32::from_bits((v >> 32) as u32));
+                            raw.push(f32::from_bits(v as u32));
+                        }
+                        let _ = values;
+                        ep.send(to.0, Payload { tasks: tasks.clone(), values: raw });
+                    }
+                    Phase::Recv { from, tasks } => {
+                        let payload = ep.recv_from(from.0);
+                        assert_eq!(
+                            payload.tasks, *tasks,
+                            "p{p}: message task list mismatch from p{}",
+                            from.0
+                        );
+                        for (i, &t) in payload.tasks.iter().enumerate() {
+                            let hi = payload.values[2 * i].to_bits() as u64;
+                            let lo = payload.values[2 * i + 1].to_bits() as u64;
+                            store.insert(t, (hi << 32) | lo);
+                        }
+                    }
+                }
+            }
+            // Report values of owned tasks.
+            let owned: Vec<(u32, u64)> = g
+                .tasks()
+                .filter(|&t| g.owner(t).0 == p as u32)
+                .map(|t| (t.0, *store.get(&t.0).unwrap_or(&u64::MAX)))
+                .collect();
+            (owned, ep.sent_messages, ep.sent_words, executed)
+        }));
+    }
+
+    let mut owned_values = Vec::new();
+    let (mut messages, mut words, mut executed) = (0u64, 0u64, 0u64);
+    for h in handles {
+        let (o, m, w, e) = h.join().expect("worker panicked");
+        owned_values.extend(o);
+        messages += m;
+        words += w;
+        executed += e;
+    }
+    GenericRunResult { owned_values, messages, words, executed, wall_secs: t0.elapsed().as_secs_f64() }
+}
+
+/// Run and verify against the sequential reference; returns the result or
+/// a description of the first divergence.
+pub fn run_and_verify(g: &Arc<TaskGraph>, plan: &ExecPlan) -> Result<GenericRunResult, String> {
+    let reference = sequential_values(g);
+    let r = run_generic(g, plan);
+    for &(t, v) in &r.owned_values {
+        if v == u64::MAX && reference[t as usize] != u64::MAX {
+            return Err(format!("t{t}: owner never obtained a value"));
+        }
+        if v != reference[t as usize] {
+            return Err(format!(
+                "t{t}: distributed {v:#x} != sequential {:#x}",
+                reference[t as usize]
+            ));
+        }
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{heat1d_graph, heat2d_graph};
+    use crate::transform::{HaloMode, TransformOptions};
+
+    #[test]
+    fn naive_plan_reproduces_reference() {
+        let g = Arc::new(heat1d_graph(32, 4, 4));
+        let plan = ExecPlan::naive(&g);
+        let r = run_and_verify(&g, &plan).unwrap();
+        assert_eq!(r.executed as usize, g.num_compute_tasks());
+    }
+
+    #[test]
+    fn overlap_plan_reproduces_reference() {
+        let g = Arc::new(heat1d_graph(32, 4, 4));
+        run_and_verify(&g, &ExecPlan::overlap(&g)).unwrap();
+    }
+
+    #[test]
+    fn ca_multilevel_reproduces_reference() {
+        let g = Arc::new(heat1d_graph(48, 8, 3));
+        let plan = ExecPlan::ca(&g, 4, TransformOptions::default()).unwrap();
+        let r = run_and_verify(&g, &plan).unwrap();
+        assert!(r.executed as usize >= g.num_compute_tasks());
+    }
+
+    #[test]
+    fn ca_level0_reproduces_reference() {
+        let g = Arc::new(heat1d_graph(48, 8, 3));
+        let plan =
+            ExecPlan::ca(&g, 4, TransformOptions { halo: HaloMode::Level0Only }).unwrap();
+        let r = run_and_verify(&g, &plan).unwrap();
+        assert!(r.executed as usize > g.num_compute_tasks(), "level0 must be redundant");
+    }
+
+    #[test]
+    fn ca_on_2d_graph_reproduces_reference() {
+        let g = Arc::new(heat2d_graph(8, 8, 4, 2, 2));
+        let plan = ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap();
+        run_and_verify(&g, &plan).unwrap();
+    }
+
+    #[test]
+    fn message_counts_match_plan() {
+        let g = Arc::new(heat1d_graph(32, 6, 2));
+        let plan = ExecPlan::ca(&g, 3, TransformOptions::default()).unwrap();
+        let r = run_generic(&g, &plan);
+        assert_eq!(r.messages as usize, plan.messages());
+    }
+
+    #[test]
+    fn value_semantics_deterministic() {
+        let g = heat1d_graph(16, 2, 2);
+        assert_eq!(sequential_values(&g), sequential_values(&g));
+    }
+}

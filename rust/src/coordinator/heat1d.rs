@@ -1,0 +1,303 @@
+//! Real distributed execution of the 1-D heat equation: worker threads,
+//! channel halo exchange, PJRT blocked-stencil compute.
+//!
+//! This is the paper's scheme running for real: per superstep of `b`
+//! steps, each worker exchanges a `b`-deep ghost region with its
+//! neighbours (one message per neighbour per superstep — the `(M/b)·α`
+//! term) and then executes the **blocked Pallas kernel**
+//! `heat1d_n{n}_b{b}`, which recomputes the trapezoid of intermediate
+//! halo values inside VMEM — the redundant computation of §2 traded for
+//! the factor-`b` message reduction.  `b = 1` is the naive baseline.
+//!
+//! Domain boundaries are odd-reflection ghosts (`ghost_j = 2·x_edge −
+//! x_j`), which for the linear 3-point update reproduces zero-Dirichlet
+//! semantics *exactly* for every block factor — so runs at different `b`
+//! are comparable to each other and to the `heat1d_full_*` reference
+//! artifact.
+
+use super::messages::{fabric, Payload};
+use crate::runtime::{Runtime, Value};
+use anyhow::{bail, Context, Result};
+use std::thread;
+
+/// Configuration of one distributed 1-D heat run.
+#[derive(Debug, Clone)]
+pub struct Heat1dConfig {
+    /// Points per worker (must match an AOT tile size: 256 or 2048).
+    pub n_per_worker: usize,
+    /// Worker (processor) count.
+    pub workers: u32,
+    /// Block factor (must match an AOT variant: 1, 2, 4, 8).
+    pub b: u32,
+    /// Total update steps (must be divisible by `b`).
+    pub steps: u32,
+    /// Diffusion coefficient.
+    pub nu: f32,
+    /// Artifact directory.
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Heat1dConfig {
+    pub fn artifact_name(&self) -> String {
+        format!("heat1d_n{}_b{}", self.n_per_worker, self.b)
+    }
+
+    pub fn total_points(&self) -> usize {
+        self.n_per_worker * self.workers as usize
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.steps % self.b != 0 {
+            bail!("steps {} not divisible by b {}", self.steps, self.b);
+        }
+        if self.n_per_worker <= 2 * self.b as usize {
+            bail!("tile {} too small for b {}", self.n_per_worker, self.b);
+        }
+        Ok(())
+    }
+}
+
+/// Timing/traffic statistics of a run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub wall_secs: f64,
+    /// Max across workers of fixed setup time (PJRT client creation +
+    /// artifact compile) — pay-once cost a long-running service amortizes.
+    pub setup_secs: f64,
+    /// Max across workers of time spent in halo exchange (blocked).
+    pub exchange_secs: f64,
+    /// Max across workers of time spent in PJRT execute.
+    pub compute_secs: f64,
+    pub messages: u64,
+    pub words: u64,
+    pub supersteps: u32,
+    /// Per-worker PJRT executions.
+    pub executions: u64,
+}
+
+impl RunStats {
+    /// Wall-clock excluding the pay-once setup — the steady-state figure
+    /// comparable across block factors.
+    pub fn steady_secs(&self) -> f64 {
+        (self.wall_secs - self.setup_secs).max(0.0)
+    }
+}
+
+/// Run the distributed heat equation; returns the final field
+/// (concatenated worker tiles) and statistics.
+pub fn run(cfg: &Heat1dConfig, initial: &[f32]) -> Result<(Vec<f32>, RunStats)> {
+    cfg.validate()?;
+    let n = cfg.n_per_worker;
+    let p = cfg.workers as usize;
+    if initial.len() != n * p {
+        bail!("initial field has {} points, expected {}", initial.len(), n * p);
+    }
+    let b = cfg.b as usize;
+    let supersteps = cfg.steps / cfg.b;
+    let endpoints = fabric(cfg.workers);
+    let t0 = std::time::Instant::now();
+
+    let mut handles = Vec::with_capacity(p);
+    for (w, mut ep) in endpoints.into_iter().enumerate() {
+        let mut x: Vec<f32> = initial[w * n..(w + 1) * n].to_vec();
+        let cfg = cfg.clone();
+        handles.push(thread::spawn(move || -> Result<_> {
+            // Each worker owns its own PJRT client/executable (the xla
+            // client is Rc-based and cannot be shared across threads).
+            let t_setup = std::time::Instant::now();
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let art = cfg.artifact_name();
+            rt.warm(&art)?;
+            let setup_s = t_setup.elapsed().as_secs_f64();
+            let (mut exch_s, mut comp_s) = (0.0f64, 0.0f64);
+            let last = cfg.workers as usize - 1;
+
+            let mut tile = vec![0.0f32; n + 2 * b];
+            for _ss in 0..supersteps {
+                let te = std::time::Instant::now();
+                // Post edges to neighbours first (non-blocking sends)...
+                if w > 0 {
+                    ep.send(
+                        (w - 1) as u32,
+                        Payload { tasks: Vec::new(), values: x[..b].to_vec() },
+                    );
+                }
+                if w < last {
+                    ep.send(
+                        (w + 1) as u32,
+                        Payload { tasks: Vec::new(), values: x[n - b..].to_vec() },
+                    );
+                }
+                // ...then fill the ghost regions.
+                if w > 0 {
+                    let got = ep.recv_from((w - 1) as u32);
+                    tile[..b].copy_from_slice(&got.values);
+                } else {
+                    // Odd reflection about x[0]: ghost[k] = 2 x0 − x[b−k].
+                    for k in 0..b {
+                        tile[k] = 2.0 * x[0] - x[b - k];
+                    }
+                }
+                if w < last {
+                    let got = ep.recv_from((w + 1) as u32);
+                    tile[n + b..].copy_from_slice(&got.values);
+                } else {
+                    // Odd reflection about x[n−1].
+                    for k in 0..b {
+                        tile[n + b + k] = 2.0 * x[n - 1] - x[n - 2 - k];
+                    }
+                }
+                tile[b..n + b].copy_from_slice(&x);
+                exch_s += te.elapsed().as_secs_f64();
+
+                let tc = std::time::Instant::now();
+                x = rt
+                    .execute_f32_1(
+                        &art,
+                        &[Value::F32(tile.clone()), Value::scalar(cfg.nu)],
+                    )
+                    .with_context(|| format!("worker {w} superstep"))?;
+                comp_s += tc.elapsed().as_secs_f64();
+            }
+            Ok((x, setup_s, exch_s, comp_s, ep.sent_messages, ep.sent_words, rt.metrics().executions))
+        }));
+    }
+
+    let mut field = vec![0.0f32; n * p];
+    let mut stats = RunStats { supersteps, ..Default::default() };
+    for (w, h) in handles.into_iter().enumerate() {
+        let (tile, setup, exch, comp, msgs, words, execs) =
+            h.join().expect("worker thread panicked")?;
+        field[w * n..(w + 1) * n].copy_from_slice(&tile);
+        stats.setup_secs = stats.setup_secs.max(setup);
+        stats.exchange_secs = stats.exchange_secs.max(exch);
+        stats.compute_secs = stats.compute_secs.max(comp);
+        stats.messages += msgs;
+        stats.words += words;
+        stats.executions += execs;
+    }
+    stats.wall_secs = t0.elapsed().as_secs_f64();
+    Ok((field, stats))
+}
+
+/// Sequential reference via the `heat1d_full_n{N}` artifact (Dirichlet).
+pub fn reference(
+    artifacts_dir: &std::path::Path,
+    initial: &[f32],
+    nu: f32,
+    steps: u32,
+) -> Result<Vec<f32>> {
+    let rt = Runtime::new(artifacts_dir)?;
+    let name = format!("heat1d_full_n{}", initial.len());
+    rt.execute_f32_1(
+        &name,
+        &[Value::F32(initial.to_vec()), Value::scalar(nu), Value::scalar_i32(steps as i32)],
+    )
+}
+
+/// Relative L2 error between two fields.
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b) {
+        num += (x - y).powi(2) as f64;
+        den += (*y as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Registry;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let dir = Registry::default_dir();
+        dir.join("manifest.txt").exists().then_some(dir)
+    }
+
+    fn initial(n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let t = i as f32 / n as f32;
+                (t * 12.9898).sin() * 0.5 + (t * 4.0 * std::f32::consts::PI).cos() * 0.3
+            })
+            .collect()
+    }
+
+    #[test]
+    fn distributed_matches_full_reference() {
+        let Some(dir) = artifacts() else { return };
+        let cfg = Heat1dConfig {
+            n_per_worker: 256,
+            workers: 8,
+            b: 4,
+            steps: 16,
+            nu: 0.2,
+            artifacts_dir: dir.clone(),
+        };
+        let init = initial(cfg.total_points());
+        let (got, stats) = run(&cfg, &init).unwrap();
+        let want = reference(&dir, &init, 0.2, 16).unwrap();
+        let err = rel_l2(&got, &want);
+        assert!(err < 1e-4, "rel l2 {err}");
+        assert_eq!(stats.supersteps, 4);
+        // 8 workers, 14 inner edges exchanged per superstep.
+        assert_eq!(stats.messages, 4 * 14);
+    }
+
+    #[test]
+    fn blocking_factor_does_not_change_answer() {
+        let Some(dir) = artifacts() else { return };
+        let init = initial(2048);
+        let mut results = Vec::new();
+        for b in [1u32, 2, 4, 8] {
+            let cfg = Heat1dConfig {
+                n_per_worker: 256,
+                workers: 8,
+                b,
+                steps: 8,
+                nu: 0.15,
+                artifacts_dir: dir.clone(),
+            };
+            let (got, _) = run(&cfg, &init).unwrap();
+            results.push(got);
+        }
+        for r in &results[1..] {
+            let err = rel_l2(r, &results[0]);
+            assert!(err < 1e-4, "b-variants disagree: {err}");
+        }
+    }
+
+    #[test]
+    fn message_count_scales_inversely_with_b() {
+        let Some(dir) = artifacts() else { return };
+        let init = initial(512);
+        let count = |b: u32| {
+            let cfg = Heat1dConfig {
+                n_per_worker: 256,
+                workers: 2,
+                b,
+                steps: 8,
+                nu: 0.1,
+                artifacts_dir: dir.clone(),
+            };
+            run(&cfg, &init).unwrap().1.messages
+        };
+        assert_eq!(count(1), 16); // 8 supersteps × 2 messages
+        assert_eq!(count(8), 2); // 1 superstep × 2 messages
+    }
+
+    #[test]
+    fn config_validation() {
+        let cfg = Heat1dConfig {
+            n_per_worker: 256,
+            workers: 2,
+            b: 3,
+            steps: 8,
+            nu: 0.1,
+            artifacts_dir: "artifacts".into(),
+        };
+        assert!(cfg.validate().is_err()); // 8 % 3 != 0
+    }
+}

@@ -1,0 +1,164 @@
+//! The message fabric: typed point-to-point channels between workers.
+//!
+//! Implements the "MPI" of the real execution: every worker owns one
+//! receiver; sends are addressed envelopes.  Delivery is reliable and
+//! per-pair FIFO (std `mpsc` guarantees), and the receive side reorders
+//! across sources by (source, sequence) so a worker can block on the
+//! specific message its plan expects regardless of arrival interleaving.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Payload of one message: raw f32 values (the outputs of the tasks the
+/// schedule assigned to this message) plus an optional id list.
+#[derive(Debug, Clone)]
+pub struct Payload {
+    /// Task ids (empty for value-only protocols like halo exchange).
+    pub tasks: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+/// An addressed message.
+#[derive(Debug)]
+pub struct Envelope {
+    pub from: u32,
+    /// Per-(from → to) sequence number, assigned by the sender.
+    pub seq: u32,
+    pub payload: Payload,
+}
+
+/// A worker's endpoint: senders to every peer plus its own receiver.
+pub struct Endpoint {
+    pub me: u32,
+    senders: Vec<Sender<Envelope>>,
+    receiver: Receiver<Envelope>,
+    /// Next sequence number per destination.
+    next_send: Vec<u32>,
+    /// Next expected sequence per source.
+    next_recv: Vec<u32>,
+    /// Out-of-order stash.
+    stash: HashMap<(u32, u32), Payload>,
+    /// Counters.
+    pub sent_messages: u64,
+    pub sent_words: u64,
+    pub recv_messages: u64,
+}
+
+/// Build a fully-connected fabric of `n` endpoints.
+pub fn fabric(n: u32) -> Vec<Endpoint> {
+    let mut senders = Vec::with_capacity(n as usize);
+    let mut receivers = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    receivers
+        .into_iter()
+        .enumerate()
+        .map(|(me, receiver)| Endpoint {
+            me: me as u32,
+            senders: senders.clone(),
+            receiver,
+            next_send: vec![0; n as usize],
+            next_recv: vec![0; n as usize],
+            stash: HashMap::new(),
+            sent_messages: 0,
+            sent_words: 0,
+            recv_messages: 0,
+        })
+        .collect()
+}
+
+impl Endpoint {
+    /// Post a message to `to` (non-blocking; unbounded channel).
+    pub fn send(&mut self, to: u32, payload: Payload) {
+        let seq = self.next_send[to as usize];
+        self.next_send[to as usize] = seq + 1;
+        self.sent_messages += 1;
+        self.sent_words += payload.values.len() as u64;
+        self.senders[to as usize]
+            .send(Envelope { from: self.me, seq, payload })
+            .expect("peer receiver dropped");
+    }
+
+    /// Block until the next in-order message from `from` arrives.
+    pub fn recv_from(&mut self, from: u32) -> Payload {
+        let want = self.next_recv[from as usize];
+        self.next_recv[from as usize] = want + 1;
+        self.recv_messages += 1;
+        if let Some(p) = self.stash.remove(&(from, want)) {
+            return p;
+        }
+        loop {
+            let env = self.receiver.recv().expect("fabric closed while waiting");
+            if env.from == from && env.seq == want {
+                return env.payload;
+            }
+            self.stash.insert((env.from, env.seq), env.payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn pairwise_fifo() {
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            e1.send(0, Payload { tasks: vec![1], values: vec![1.0] });
+            e1.send(0, Payload { tasks: vec![2], values: vec![2.0] });
+        });
+        let a = e0.recv_from(1);
+        let b = e0.recv_from(1);
+        assert_eq!(a.values, vec![1.0]);
+        assert_eq!(b.values, vec![2.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn reorders_across_sources() {
+        let mut eps = fabric(3);
+        let mut e2 = eps.pop().unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h1 = thread::spawn(move || {
+            e1.send(0, Payload { tasks: vec![], values: vec![1.0] });
+        });
+        let h2 = thread::spawn(move || {
+            e2.send(0, Payload { tasks: vec![], values: vec![2.0] });
+        });
+        // Receive in the opposite order of whatever arrived first.
+        let from2 = e0.recv_from(2);
+        let from1 = e0.recv_from(1);
+        assert_eq!(from2.values, vec![2.0]);
+        assert_eq!(from1.values, vec![1.0]);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        assert_eq!(e0.recv_messages, 2);
+    }
+
+    #[test]
+    fn self_send_allowed() {
+        let mut eps = fabric(1);
+        let mut e0 = eps.pop().unwrap();
+        e0.send(0, Payload { tasks: vec![7], values: vec![7.0] });
+        assert_eq!(e0.recv_from(0).tasks, vec![7]);
+    }
+
+    #[test]
+    fn counters_track_traffic() {
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send(1, Payload { tasks: vec![], values: vec![0.0; 10] });
+        assert_eq!(e0.sent_messages, 1);
+        assert_eq!(e0.sent_words, 10);
+        assert_eq!(e1.recv_from(0).values.len(), 10);
+    }
+}

@@ -1,0 +1,26 @@
+//! The real (not simulated) distributed runtime: leader + worker threads
+//! over channels, executing transformed schedules with PJRT compute.
+//!
+//! Three engines share the [`messages`] fabric:
+//!
+//! * [`generic`] — executes any [`crate::sim::ExecPlan`] with synthetic
+//!   deterministic task values; the routing/state-management correctness
+//!   core, verified bit-exactly against sequential evaluation (and
+//!   hammered by the property suite).
+//! * [`heat1d`] — the paper's running example for real: tile-per-worker,
+//!   `b`-deep ghost exchange once per superstep, blocked Pallas kernel
+//!   via PJRT.  `b = 1` is the naive baseline.
+//! * [`heat2d`] — the 2-D five-point version with 8-neighbour ghost-frame
+//!   exchange on a periodic domain.
+//!
+//! Python never runs here: every worker loads AOT artifacts through
+//! [`crate::runtime::Runtime`].
+
+pub mod generic;
+pub mod heat1d;
+pub mod heat2d;
+pub mod messages;
+
+pub use generic::{run_and_verify, run_generic, sequential_values, GenericRunResult};
+pub use heat1d::{Heat1dConfig, RunStats};
+pub use heat2d::Heat2dConfig;

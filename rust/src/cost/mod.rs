@@ -1,0 +1,184 @@
+//! The §2.1 analytic cost model.
+//!
+//! For the 1-D 3-point stencil, `N` points over `p` processors, `M` update
+//! steps blocked `b` at a time, the paper derives
+//!
+//! ```text
+//! T(b) = (M/b)·α + M·β + (MN/p + M·b)·γ
+//! ```
+//!
+//! with two observations this module mechanizes and the tests verify
+//! against the simulator:
+//!
+//! 1. the overhead `αM/b + γMb` is independent of `p`;
+//! 2. the optimal block factor `b* = sqrt(α/γ)` depends only on the
+//!    architecture, not on the problem (`N`, `M`) or the machine size `p`.
+
+use crate::sim::Machine;
+
+/// The blocked-stencil cost model with explicit parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Points to update.
+    pub n: u64,
+    /// Update steps.
+    pub m: u32,
+    /// Processors.
+    pub p: u32,
+    /// Latency per message.
+    pub alpha: f64,
+    /// Transmission time per point.
+    pub beta: f64,
+    /// Time per point update.
+    pub gamma: f64,
+}
+
+impl CostModel {
+    pub fn new(n: u64, m: u32, p: u32, alpha: f64, beta: f64, gamma: f64) -> Self {
+        assert!(p > 0 && m > 0 && gamma > 0.0);
+        CostModel { n, m, p, alpha, beta, gamma }
+    }
+
+    pub fn from_machine(n: u64, m: u32, mach: &Machine) -> Self {
+        // The per-node thread pool divides the γ work term: an effective
+        // per-point cost of γ/t (the §4 simulation's knob).
+        CostModel::new(
+            n,
+            m,
+            mach.nprocs,
+            mach.alpha,
+            mach.beta,
+            mach.gamma / mach.threads as f64,
+        )
+    }
+
+    /// `T(b)` — the paper's total cost at block factor `b`.
+    pub fn cost(&self, b: u32) -> f64 {
+        assert!(b > 0);
+        let mf = self.m as f64;
+        let bf = b as f64;
+        (mf / bf) * self.alpha
+            + mf * self.beta
+            + (mf * self.n as f64 / self.p as f64 + mf * bf) * self.gamma
+    }
+
+    /// The blocking overhead `αM/b + γMb` (everything that is not the
+    /// ideal `MN/p·γ + Mβ`).  Independent of `p` — asserted in tests.
+    pub fn overhead(&self, b: u32) -> f64 {
+        let mf = self.m as f64;
+        let bf = b as f64;
+        mf / bf * self.alpha + mf * bf * self.gamma
+    }
+
+    /// Continuous optimizer: `b* = sqrt(α/γ)` — architecture-only.
+    pub fn optimal_b_continuous(&self) -> f64 {
+        (self.alpha / self.gamma).sqrt()
+    }
+
+    /// Discrete optimizer over `1..=max_b` (what an autotuner would pick).
+    pub fn optimal_b(&self, max_b: u32) -> u32 {
+        (1..=max_b)
+            .min_by(|&a, &b| self.cost(a).partial_cmp(&self.cost(b)).unwrap())
+            .unwrap()
+    }
+
+    /// Speedup of blocking at `b` over the unblocked `b = 1` execution.
+    pub fn speedup(&self, b: u32) -> f64 {
+        self.cost(1) / self.cost(b)
+    }
+
+    /// The latency below which blocking at `b` stops paying: solves
+    /// `T(b) = T(1)` for α, i.e. `α_xover = γ·b` (from
+    /// `αM(1 − 1/b) = γM(b − 1)`).
+    pub fn crossover_alpha(&self, b: u32) -> f64 {
+        assert!(b > 1);
+        self.gamma * b as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel::new(1 << 16, 128, 16, 300.0, 0.2, 1.0)
+    }
+
+    #[test]
+    fn cost_decomposition() {
+        let c = model();
+        let ideal = c.m as f64 * (c.n as f64 / c.p as f64) * c.gamma + c.m as f64 * c.beta;
+        for b in [1u32, 2, 5, 17] {
+            assert!((c.cost(b) - (ideal + c.overhead(b))).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn overhead_independent_of_p() {
+        for p in [1u32, 4, 64, 1024] {
+            let c = CostModel::new(1 << 16, 128, p, 300.0, 0.2, 1.0);
+            assert_eq!(c.overhead(8), model().overhead(8));
+        }
+    }
+
+    #[test]
+    fn optimal_b_is_sqrt_alpha_over_gamma() {
+        let c = model();
+        let cont = c.optimal_b_continuous(); // sqrt(300) ≈ 17.32
+        let disc = c.optimal_b(256);
+        assert!((cont - 17.32).abs() < 0.01);
+        assert!(disc == 17 || disc == 18, "{disc}");
+    }
+
+    #[test]
+    fn optimal_b_independent_of_problem_and_p() {
+        let base = model().optimal_b(256);
+        for (n, m, p) in [(1u64 << 10, 16u32, 2u32), (1 << 20, 512, 256)] {
+            let c = CostModel::new(n, m, p, 300.0, 0.2, 1.0);
+            assert_eq!(c.optimal_b(256), base, "n={n} m={m} p={p}");
+        }
+    }
+
+    #[test]
+    fn optimal_b_scales_with_latency() {
+        let lo = CostModel::new(1 << 16, 128, 16, 25.0, 0.2, 1.0);
+        let hi = CostModel::new(1 << 16, 128, 16, 2500.0, 0.2, 1.0);
+        assert_eq!(lo.optimal_b(256), 5);
+        assert_eq!(hi.optimal_b(256), 50);
+    }
+
+    #[test]
+    fn speedup_above_one_when_latency_dominates() {
+        let c = CostModel::new(1 << 12, 64, 64, 1000.0, 0.1, 1.0);
+        assert!(c.speedup(16) > 1.0);
+    }
+
+    #[test]
+    fn no_speedup_without_latency() {
+        let c = CostModel::new(1 << 12, 64, 4, 0.0, 0.1, 1.0);
+        // With α = 0 blocking only adds redundant work.
+        assert!(c.speedup(8) < 1.0);
+        assert_eq!(c.optimal_b(64), 1);
+    }
+
+    #[test]
+    fn crossover_alpha_consistent() {
+        let c = model();
+        let b = 8;
+        let ax = c.crossover_alpha(b);
+        let at = CostModel { alpha: ax, ..c };
+        assert!((at.cost(b) - at.cost(1)).abs() < 1e-6);
+        // Slightly above: blocking wins; slightly below: loses.
+        let hi = CostModel { alpha: ax * 1.1, ..c };
+        assert!(hi.cost(b) < hi.cost(1));
+        let lo = CostModel { alpha: ax * 0.9, ..c };
+        assert!(lo.cost(b) > lo.cost(1));
+    }
+
+    #[test]
+    fn from_machine_divides_gamma_by_threads() {
+        let mach = Machine::new(4, 8, 100.0, 0.1, 1.0);
+        let c = CostModel::from_machine(1024, 32, &mach);
+        assert!((c.gamma - 0.125).abs() < 1e-12);
+    }
+}

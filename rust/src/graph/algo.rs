@@ -1,0 +1,259 @@
+//! Graph algorithms shared by the transformation, simulator and checker.
+
+use super::{TaskGraph, TaskId};
+use crate::util::Stamp;
+
+/// A topological order of the graph's tasks.
+#[derive(Debug, Clone)]
+pub struct TopoOrder(pub Vec<u32>);
+
+/// Per-task longest-path depths (already stored on the graph; this type
+/// exists for algorithms that recompute depths over sub-graphs).
+#[derive(Debug, Clone)]
+pub struct Levels(pub Vec<u32>);
+
+impl TaskGraph {
+    /// Kahn topological order.  The graph is validated acyclic at build
+    /// time, so this cannot fail.
+    pub fn topo_order(&self) -> TopoOrder {
+        let n = self.len();
+        let mut indeg: Vec<u32> =
+            (0..n).map(|i| self.pred_off[i + 1] - self.pred_off[i]).collect();
+        let mut queue: std::collections::VecDeque<u32> =
+            (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(t) = queue.pop_front() {
+            order.push(t);
+            for &s in self.succs(TaskId(t)) {
+                indeg[s as usize] -= 1;
+                if indeg[s as usize] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        debug_assert_eq!(order.len(), n);
+        TopoOrder(order)
+    }
+
+    /// Backward transitive closure: every task reachable from `seeds`
+    /// through predecessor edges, **including** the seeds.  Returns a
+    /// sorted id vector.  `scratch` must span the graph's task universe.
+    ///
+    /// This is the building block for the paper's `L_p^(5) = L_p ∪ pred(L_p)`
+    /// (the paper writes one application of `pred`, but its usage — "all
+    /// tasks that are computed anywhere to construct the local result" —
+    /// is the transitive closure, which is what we compute).
+    pub fn backward_closure(&self, seeds: &[u32], scratch: &mut Stamp) -> Vec<u32> {
+        scratch.grow(self.len());
+        scratch.clear();
+        let mut stack: Vec<u32> = Vec::with_capacity(seeds.len());
+        for &s in seeds {
+            if !scratch.contains(s as usize) {
+                scratch.set(s as usize);
+                stack.push(s);
+            }
+        }
+        let mut out: Vec<u32> = Vec::with_capacity(seeds.len() * 2);
+        while let Some(t) = stack.pop() {
+            out.push(t);
+            for &p in self.preds(TaskId(t)) {
+                if !scratch.contains(p as usize) {
+                    scratch.set(p as usize);
+                    stack.push(p);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Fixpoint of "computable from `base` using only tasks in-universe":
+    /// the set `F = {t ∈ universe, t ∉ base : pred(t) ⊆ base ∪ F}` — the
+    /// paper's `L_p^(4)` when `base = L_p^(0)` and `universe = L_p^(5)`.
+    ///
+    /// Implemented as a forward worklist over the universe, O(V+E) on the
+    /// sub-graph.  Returns a sorted id vector of the newly computable
+    /// tasks (excluding `base` itself).
+    ///
+    /// Perf note: missing-predecessor counts live in a flat per-task
+    /// array (`remaining`, grown to `len()` and reused across calls by
+    /// the transformation) rather than a hash map — entries are
+    /// initialized for every universe task before any read, so no
+    /// clearing is needed, and the §Perf log records a ~2.4× transform
+    /// speedup from this layout.
+    pub fn local_fixpoint(
+        &self,
+        base: &[u32],
+        universe: &[u32],
+        scratch_in_universe: &mut Stamp,
+        scratch_done: &mut Stamp,
+    ) -> Vec<u32> {
+        let mut remaining = vec![0u32; self.len()];
+        self.local_fixpoint_with(base, universe, scratch_in_universe, scratch_done, &mut remaining)
+    }
+
+    /// [`Self::local_fixpoint`] with a caller-provided counter scratch
+    /// (`remaining.len() >= self.len()`); the hot path for repeated
+    /// per-processor calls.
+    pub fn local_fixpoint_with(
+        &self,
+        base: &[u32],
+        universe: &[u32],
+        scratch_in_universe: &mut Stamp,
+        scratch_done: &mut Stamp,
+        remaining: &mut [u32],
+    ) -> Vec<u32> {
+        assert!(remaining.len() >= self.len());
+        scratch_in_universe.grow(self.len());
+        scratch_in_universe.clear();
+        for &t in universe {
+            scratch_in_universe.set(t as usize);
+        }
+        scratch_done.grow(self.len());
+        scratch_done.clear();
+        let mut stack: Vec<u32> = Vec::new();
+        for &t in base {
+            scratch_done.set(t as usize);
+        }
+        // Seed: universe tasks whose preds are all in base.  `Input`
+        // tasks are data, not work — they are available iff in `base`,
+        // never "computable" (they have no preds, so without this guard
+        // every remote input would leak into the fixpoint).
+        for &t in universe {
+            if scratch_done.contains(t as usize)
+                || self.kind(TaskId(t)) == crate::graph::TaskKind::Input
+            {
+                continue;
+            }
+            let preds = self.preds(TaskId(t));
+            let missing =
+                preds.iter().filter(|&&p| !scratch_done.contains(p as usize)).count() as u32;
+            if missing == 0 {
+                stack.push(t);
+            }
+            remaining[t as usize] = missing;
+        }
+        let mut out = Vec::new();
+        while let Some(t) = stack.pop() {
+            if scratch_done.contains(t as usize) {
+                continue;
+            }
+            scratch_done.set(t as usize);
+            out.push(t);
+            for &s in self.succs(TaskId(t)) {
+                if !scratch_in_universe.contains(s as usize) || scratch_done.contains(s as usize) {
+                    continue;
+                }
+                let m = &mut remaining[s as usize];
+                if *m > 0 {
+                    *m -= 1;
+                    if *m == 0 {
+                        stack.push(s);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Per-level histogram of task counts (diagnostics / figure 6 data).
+    pub fn level_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.nlevels as usize];
+        for &l in &self.level {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, ProcId};
+
+    /// 1-D 3-point stencil, n points × m levels, one proc — small enough
+    /// to check closures by hand.
+    fn chain_graph(n: usize, m: usize) -> TaskGraph {
+        let mut b = GraphBuilder::new(1);
+        let mut prev: Vec<TaskId> = (0..n).map(|i| b.add_input(ProcId(0), i as u64)).collect();
+        for lvl in 1..=m {
+            let cur: Vec<TaskId> = (0..n)
+                .map(|i| {
+                    let lo = i.saturating_sub(1);
+                    let hi = (i + 1).min(n - 1);
+                    let preds: Vec<TaskId> = (lo..=hi).map(|j| prev[j]).collect();
+                    b.add_task(ProcId(0), lvl as u32, i as u64, &preds)
+                })
+                .collect();
+            prev = cur;
+        }
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = chain_graph(5, 3);
+        let order = g.topo_order().0;
+        let mut pos = vec![0usize; g.len()];
+        for (i, &t) in order.iter().enumerate() {
+            pos[t as usize] = i;
+        }
+        for t in g.tasks() {
+            for &p in g.preds(t) {
+                assert!(pos[p as usize] < pos[t.idx()]);
+            }
+        }
+    }
+
+    #[test]
+    fn backward_closure_cone() {
+        let g = chain_graph(7, 2); // ids: inputs 0..7, lvl1 7..14, lvl2 14..21
+        let mut st = Stamp::new(g.len());
+        // Task at level 2, centre point 3 (id 14+3=17): cone is points
+        // 2..4 at lvl1 and 1..5 at lvl0, plus itself — 3 + 5 + 1 = 9.
+        let c = g.backward_closure(&[17], &mut st);
+        assert_eq!(c.len(), 9);
+        assert!(c.contains(&17) && c.contains(&10) && c.contains(&1) && c.contains(&5));
+    }
+
+    #[test]
+    fn closure_of_input_is_itself() {
+        let g = chain_graph(4, 1);
+        let mut st = Stamp::new(g.len());
+        assert_eq!(g.backward_closure(&[2], &mut st), vec![2]);
+    }
+
+    #[test]
+    fn local_fixpoint_trapezoid() {
+        // 6 points, 2 levels: from inputs {0..6} the computable set within
+        // the full universe is everything (single proc).
+        let g = chain_graph(6, 2);
+        let base: Vec<u32> = (0..6).collect();
+        let universe: Vec<u32> = (0..g.len() as u32).collect();
+        let mut s1 = Stamp::new(g.len());
+        let mut s2 = Stamp::new(g.len());
+        let f = g.local_fixpoint(&base, &universe, &mut s1, &mut s2);
+        assert_eq!(f.len(), 12); // both compute levels
+    }
+
+    #[test]
+    fn local_fixpoint_partial_base() {
+        // Only inputs 0..3 available: level-1 computable are points whose
+        // 3-point stencil fits in [0,3): points 0 (preds 0,1), 1 (0,1,2),
+        // 2 (1,2,3 — 3 missing!) => points 0 and 1 only.
+        let g = chain_graph(6, 1);
+        let base: Vec<u32> = (0..3).collect();
+        let universe: Vec<u32> = (0..g.len() as u32).collect();
+        let mut s1 = Stamp::new(g.len());
+        let mut s2 = Stamp::new(g.len());
+        let f = g.local_fixpoint(&base, &universe, &mut s1, &mut s2);
+        assert_eq!(f, vec![6, 7]); // lvl-1 ids are 6+point
+    }
+
+    #[test]
+    fn level_histogram_counts() {
+        let g = chain_graph(5, 3);
+        assert_eq!(g.level_histogram(), vec![5, 5, 5, 5]);
+    }
+}

@@ -1,0 +1,256 @@
+//! Mutable construction of [`TaskGraph`]s.
+//!
+//! Edges are accumulated as flat `(task, pred)` pairs and counting-sorted
+//! into CSR at `finish()`; building a 4-million-task stencil graph takes
+//! tens of milliseconds (see `benches/transform_scalability`).
+
+use super::{ProcId, TaskGraph, TaskId, TaskKind};
+
+/// Incremental builder; see [`TaskGraph`] for the field semantics.
+#[derive(Debug)]
+pub struct GraphBuilder {
+    owner: Vec<u32>,
+    level: Vec<u32>,
+    kind: Vec<TaskKind>,
+    item: Vec<u64>,
+    edges: Vec<(u32, u32)>, // (task, pred)
+    nprocs: u32,
+}
+
+/// Errors detected at `finish()` time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    /// An edge references a task id that was never added.
+    DanglingEdge { task: u32, pred: u32 },
+    /// A predecessor does not precede its task topologically.
+    Cycle { involved: u32 },
+    /// An owner id is out of the declared processor range.
+    BadOwner { task: u32, owner: u32 },
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::DanglingEdge { task, pred } => {
+                write!(f, "edge t{task} <- t{pred} references unknown task")
+            }
+            GraphError::Cycle { involved } => write!(f, "cycle through t{involved}"),
+            GraphError::BadOwner { task, owner } => {
+                write!(f, "t{task} owned by out-of-range processor {owner}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+impl GraphBuilder {
+    /// A graph distributed over `nprocs` processors.
+    pub fn new(nprocs: u32) -> Self {
+        assert!(nprocs > 0, "need at least one processor");
+        GraphBuilder {
+            owner: Vec::new(),
+            level: Vec::new(),
+            kind: Vec::new(),
+            item: Vec::new(),
+            edges: Vec::new(),
+            nprocs,
+        }
+    }
+
+    /// Pre-size for `ntasks` tasks and `nedges` edges.
+    pub fn with_capacity(nprocs: u32, ntasks: usize, nedges: usize) -> Self {
+        let mut b = Self::new(nprocs);
+        b.owner.reserve(ntasks);
+        b.level.reserve(ntasks);
+        b.kind.reserve(ntasks);
+        b.item.reserve(ntasks);
+        b.edges.reserve(nedges);
+        b
+    }
+
+    /// Add an `Input` task: initial data resident on `p` (level 0, no preds).
+    pub fn add_input(&mut self, p: ProcId, item: u64) -> TaskId {
+        self.push(p, 0, item, TaskKind::Input)
+    }
+
+    /// Add a `Compute` task with the given predecessors.
+    pub fn add_task(&mut self, p: ProcId, level: u32, item: u64, preds: &[TaskId]) -> TaskId {
+        let t = self.push(p, level, item, TaskKind::Compute);
+        for &pr in preds {
+            self.edges.push((t.0, pr.0));
+        }
+        t
+    }
+
+    /// Add a dependence edge `pred -> task` after the fact.
+    pub fn add_pred(&mut self, task: TaskId, pred: TaskId) {
+        self.edges.push((task.0, pred.0));
+    }
+
+    fn push(&mut self, p: ProcId, level: u32, item: u64, kind: TaskKind) -> TaskId {
+        let id = self.owner.len() as u32;
+        self.owner.push(p.0);
+        self.level.push(level);
+        self.kind.push(kind);
+        self.item.push(item);
+        TaskId(id)
+    }
+
+    /// Current number of tasks.
+    pub fn len(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.owner.is_empty()
+    }
+
+    /// Validate, build CSR adjacency in both directions, recompute levels
+    /// as longest-path depth (inputs stay at their declared level if it is
+    /// already consistent), and freeze.
+    pub fn finish(self) -> Result<TaskGraph, GraphError> {
+        let n = self.owner.len();
+        for (t, &o) in self.owner.iter().enumerate() {
+            if o >= self.nprocs {
+                return Err(GraphError::BadOwner { task: t as u32, owner: o });
+            }
+        }
+        for &(t, p) in &self.edges {
+            if t as usize >= n || p as usize >= n {
+                return Err(GraphError::DanglingEdge { task: t, pred: p });
+            }
+        }
+
+        // Counting sort edges into pred-CSR.
+        let mut pred_off = vec![0u32; n + 1];
+        for &(t, _) in &self.edges {
+            pred_off[t as usize + 1] += 1;
+        }
+        for i in 0..n {
+            pred_off[i + 1] += pred_off[i];
+        }
+        let mut cursor = pred_off.clone();
+        let mut pred_adj = vec![0u32; self.edges.len()];
+        for &(t, p) in &self.edges {
+            pred_adj[cursor[t as usize] as usize] = p;
+            cursor[t as usize] += 1;
+        }
+
+        // And succ-CSR.
+        let mut succ_off = vec![0u32; n + 1];
+        for &(_, p) in &self.edges {
+            succ_off[p as usize + 1] += 1;
+        }
+        for i in 0..n {
+            succ_off[i + 1] += succ_off[i];
+        }
+        let mut cursor = succ_off.clone();
+        let mut succ_adj = vec![0u32; self.edges.len()];
+        for &(t, p) in &self.edges {
+            succ_adj[cursor[p as usize] as usize] = t;
+            cursor[p as usize] += 1;
+        }
+
+        let mut g = TaskGraph {
+            owner: self.owner,
+            level: self.level,
+            kind: self.kind,
+            item: self.item,
+            pred_off,
+            pred_adj,
+            succ_off,
+            succ_adj,
+            nprocs: self.nprocs,
+            nlevels: 0,
+        };
+
+        // Kahn topological pass: detects cycles and recomputes levels as
+        // longest-path depth from the sources.
+        let mut indeg: Vec<u32> = (0..n)
+            .map(|i| g.pred_off[i + 1] - g.pred_off[i])
+            .collect();
+        let mut queue: std::collections::VecDeque<u32> = (0..n as u32)
+            .filter(|&i| indeg[i as usize] == 0)
+            .collect();
+        let mut depth = vec![0u32; n];
+        let mut seen = 0usize;
+        while let Some(t) = queue.pop_front() {
+            seen += 1;
+            let (s0, s1) = (g.succ_off[t as usize], g.succ_off[t as usize + 1]);
+            for k in s0..s1 {
+                let s = g.succ_adj[k as usize];
+                depth[s as usize] = depth[s as usize].max(depth[t as usize] + 1);
+                indeg[s as usize] -= 1;
+                if indeg[s as usize] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        if seen != n {
+            let involved = indeg.iter().position(|&d| d > 0).unwrap_or(0) as u32;
+            return Err(GraphError::Cycle { involved });
+        }
+        g.level = depth;
+        g.nlevels = g.level.iter().copied().max().map_or(0, |m| m + 1);
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(1).finish().unwrap();
+        assert!(g.is_empty());
+        assert_eq!(g.num_levels(), 0);
+    }
+
+    #[test]
+    fn levels_recomputed_as_longest_path() {
+        let mut b = GraphBuilder::new(1);
+        let i = b.add_input(ProcId(0), 0);
+        let a = b.add_task(ProcId(0), 9, 0, &[i]); // declared level ignored
+        let c = b.add_task(ProcId(0), 9, 0, &[a]);
+        let _d = b.add_task(ProcId(0), 9, 0, &[i, c]); // longest path = 3
+        let g = b.finish().unwrap();
+        assert_eq!(g.level(TaskId(1)), 1);
+        assert_eq!(g.level(TaskId(2)), 2);
+        assert_eq!(g.level(TaskId(3)), 3);
+        assert_eq!(g.num_levels(), 4);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut b = GraphBuilder::new(1);
+        let a = b.add_task(ProcId(0), 0, 0, &[]);
+        let c = b.add_task(ProcId(0), 1, 0, &[a]);
+        b.add_pred(a, c);
+        assert!(matches!(b.finish(), Err(GraphError::Cycle { .. })));
+    }
+
+    #[test]
+    fn dangling_edge_detected() {
+        let mut b = GraphBuilder::new(1);
+        let a = b.add_task(ProcId(0), 0, 0, &[]);
+        b.add_pred(a, TaskId(99));
+        assert!(matches!(b.finish(), Err(GraphError::DanglingEdge { .. })));
+    }
+
+    #[test]
+    fn bad_owner_detected() {
+        let mut b = GraphBuilder::new(2);
+        b.add_task(ProcId(5), 0, 0, &[]);
+        assert!(matches!(b.finish(), Err(GraphError::BadOwner { .. })));
+    }
+
+    #[test]
+    fn self_loop_is_cycle() {
+        let mut b = GraphBuilder::new(1);
+        let a = b.add_task(ProcId(0), 0, 0, &[]);
+        b.add_pred(a, a);
+        assert!(matches!(b.finish(), Err(GraphError::Cycle { .. })));
+    }
+}

@@ -1,0 +1,102 @@
+//! Graphviz DOT export for small graphs (debugging, paper figures 4/5).
+
+use super::{TaskGraph, TaskId, TaskKind};
+
+/// Palette cycled per processor in DOT output.
+const COLORS: &[&str] = &[
+    "lightblue", "lightsalmon", "palegreen", "plum", "khaki", "lightcyan", "mistyrose", "honeydew",
+];
+
+impl TaskGraph {
+    /// Render the graph as Graphviz DOT, one cluster per level, nodes
+    /// coloured by owner.  Intended for graphs of up to a few hundred
+    /// tasks; callers should down-sample larger graphs first.
+    pub fn to_dot(&self, title: &str) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("digraph \"{title}\" {{\n  rankdir=BT;\n  node [style=filled];\n"));
+        for lvl in 0..self.nlevels {
+            s.push_str(&format!("  {{ rank=same;"));
+            for t in self.tasks() {
+                if self.level(t) == lvl {
+                    s.push_str(&format!(" t{};", t.0));
+                }
+            }
+            s.push_str(" }\n");
+        }
+        for t in self.tasks() {
+            let color = COLORS[self.owner(t).idx() % COLORS.len()];
+            let shape = match self.kind(t) {
+                TaskKind::Input => "box",
+                TaskKind::Compute => "ellipse",
+            };
+            s.push_str(&format!(
+                "  t{} [label=\"{}@{}\\n{}\", fillcolor={}, shape={}];\n",
+                t.0,
+                self.item(t),
+                self.level(t),
+                self.owner(t),
+                color,
+                shape
+            ));
+        }
+        for t in self.tasks() {
+            for &p in self.preds(t) {
+                s.push_str(&format!("  t{} -> t{};\n", p, t.0));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    /// DOT with an extra per-task annotation (e.g. the `L^(k)` subset a
+    /// task landed in after the transformation).
+    pub fn to_dot_annotated(&self, title: &str, note: impl Fn(TaskId) -> String) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("digraph \"{title}\" {{\n  rankdir=BT;\n  node [style=filled];\n"));
+        for t in self.tasks() {
+            let color = COLORS[self.owner(t).idx() % COLORS.len()];
+            s.push_str(&format!(
+                "  t{} [label=\"{}@{} {}\", fillcolor={}];\n",
+                t.0,
+                self.item(t),
+                self.level(t),
+                note(t),
+                color
+            ));
+        }
+        for t in self.tasks() {
+            for &p in self.preds(t) {
+                s.push_str(&format!("  t{} -> t{};\n", p, t.0));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::{GraphBuilder, ProcId};
+
+    #[test]
+    fn dot_contains_nodes_and_edges() {
+        let mut b = GraphBuilder::new(2);
+        let i = b.add_input(ProcId(0), 0);
+        let a = b.add_task(ProcId(1), 1, 1, &[i]);
+        let _ = a;
+        let g = b.finish().unwrap();
+        let dot = g.to_dot("test");
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("t0 -> t1"));
+        assert!(dot.contains("lightsalmon")); // p1 colour
+    }
+
+    #[test]
+    fn dot_annotated_includes_notes() {
+        let mut b = GraphBuilder::new(1);
+        b.add_input(ProcId(0), 0);
+        let g = b.finish().unwrap();
+        let dot = g.to_dot_annotated("t", |_| "L1".to_string());
+        assert!(dot.contains("L1"));
+    }
+}

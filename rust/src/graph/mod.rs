@@ -1,0 +1,208 @@
+//! The task-graph IR.
+//!
+//! A [`TaskGraph`] is the distributed task graph `{L_p}_p` of paper §3: a
+//! DAG of tasks, each with an **owner** processor (the processor that the
+//! original data distribution assigns the task's output to), a **level**
+//! (topological depth — for stencil graphs, the time step), and a **kind**
+//! (`Input` tasks are the `L^(0)` initial data; `Compute` tasks cost γ).
+//!
+//! Predecessors encode the paper's relation
+//! `t' ∈ pred(t) ≡ t' computes direct input data for task t`.
+//!
+//! Storage is CSR-style (flat offset/adjacency arrays) so the
+//! transformation's per-processor closures stream through memory; graphs
+//! of several million tasks are routine (see `benches/transform_scalability`).
+
+mod algo;
+mod builder;
+mod dot;
+
+pub use algo::{Levels, TopoOrder};
+pub use builder::GraphBuilder;
+
+/// Identifies a task; indexes every per-task array in the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TaskId(pub u32);
+
+/// Identifies a processor (an "MPI node" in the paper's simulation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ProcId(pub u32);
+
+impl TaskId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl ProcId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for TaskId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+impl std::fmt::Display for ProcId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "p{}", self.0)
+    }
+}
+
+/// Task kinds: `Input` tasks carry initial data (zero compute cost, they
+/// are *data*, not work); `Compute` tasks perform one `f` evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Input,
+    Compute,
+}
+
+/// Immutable distributed task graph (build with [`GraphBuilder`]).
+#[derive(Debug, Clone)]
+pub struct TaskGraph {
+    pub(crate) owner: Vec<u32>,
+    pub(crate) level: Vec<u32>,
+    pub(crate) kind: Vec<TaskKind>,
+    /// Payload: the domain item this task updates (grid point index,
+    /// matrix row, ...).  Opaque to the transformation.
+    pub(crate) item: Vec<u64>,
+    pub(crate) pred_off: Vec<u32>,
+    pub(crate) pred_adj: Vec<u32>,
+    pub(crate) succ_off: Vec<u32>,
+    pub(crate) succ_adj: Vec<u32>,
+    pub(crate) nprocs: u32,
+    pub(crate) nlevels: u32,
+}
+
+impl TaskGraph {
+    /// Number of tasks (including `Input` data tasks).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.owner.is_empty()
+    }
+
+    /// Number of dependence edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.pred_adj.len()
+    }
+
+    /// Number of processors the graph is distributed over.
+    #[inline]
+    pub fn num_procs(&self) -> u32 {
+        self.nprocs
+    }
+
+    /// Number of distinct levels (max level + 1).
+    #[inline]
+    pub fn num_levels(&self) -> u32 {
+        self.nlevels
+    }
+
+    #[inline]
+    pub fn owner(&self, t: TaskId) -> ProcId {
+        ProcId(self.owner[t.idx()])
+    }
+
+    #[inline]
+    pub fn level(&self, t: TaskId) -> u32 {
+        self.level[t.idx()]
+    }
+
+    #[inline]
+    pub fn kind(&self, t: TaskId) -> TaskKind {
+        self.kind[t.idx()]
+    }
+
+    #[inline]
+    pub fn item(&self, t: TaskId) -> u64 {
+        self.item[t.idx()]
+    }
+
+    /// Direct predecessors (the paper's `pred(t)`).
+    #[inline]
+    pub fn preds(&self, t: TaskId) -> &[u32] {
+        let i = t.idx();
+        &self.pred_adj[self.pred_off[i] as usize..self.pred_off[i + 1] as usize]
+    }
+
+    /// Direct successors (derived).
+    #[inline]
+    pub fn succs(&self, t: TaskId) -> &[u32] {
+        let i = t.idx();
+        &self.succ_adj[self.succ_off[i] as usize..self.succ_off[i + 1] as usize]
+    }
+
+    /// Iterator over all task ids.
+    pub fn tasks(&self) -> impl Iterator<Item = TaskId> + '_ {
+        (0..self.len() as u32).map(TaskId)
+    }
+
+    /// All tasks owned by `p` (the paper's `L_p`), including its inputs
+    /// (`L_p^(0)`), in id order.
+    pub fn owned_by(&self, p: ProcId) -> Vec<u32> {
+        self.tasks().filter(|&t| self.owner(t) == p).map(|t| t.0).collect()
+    }
+
+    /// Count of `Compute` tasks (the real work; `Input`s are data).
+    pub fn num_compute_tasks(&self) -> usize {
+        self.kind.iter().filter(|k| **k == TaskKind::Compute).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> TaskGraph {
+        // in0 -> a, b -> c   (a,b on p0/p1, c on p1)
+        let mut g = GraphBuilder::new(2);
+        let i0 = g.add_input(ProcId(0), 0);
+        let a = g.add_task(ProcId(0), 1, 1, &[i0]);
+        let b = g.add_task(ProcId(1), 1, 2, &[i0]);
+        let _c = g.add_task(ProcId(1), 2, 3, &[a, b]);
+        g.finish().unwrap()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = diamond();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.num_procs(), 2);
+        assert_eq!(g.num_levels(), 3);
+        assert_eq!(g.kind(TaskId(0)), TaskKind::Input);
+        assert_eq!(g.num_compute_tasks(), 3);
+    }
+
+    #[test]
+    fn preds_and_succs_inverse() {
+        let g = diamond();
+        for t in g.tasks() {
+            for &p in g.preds(t) {
+                assert!(g.succs(TaskId(p)).contains(&t.0));
+            }
+            for &s in g.succs(t) {
+                assert!(g.preds(TaskId(s)).contains(&t.0));
+            }
+        }
+    }
+
+    #[test]
+    fn owned_by_partitions_tasks() {
+        let g = diamond();
+        let total: usize = (0..2).map(|p| g.owned_by(ProcId(p)).len()).sum();
+        assert_eq!(total, g.len());
+        assert_eq!(g.owned_by(ProcId(0)), vec![0, 1]);
+        assert_eq!(g.owned_by(ProcId(1)), vec![2, 3]);
+    }
+}

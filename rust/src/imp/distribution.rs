@@ -1,0 +1,232 @@
+//! Distributions: the IMP assignment of global indices to processors.
+//!
+//! A [`Distribution`] is the `u: P → 2^N` mapping of [Eijkhout 2016] — for
+//! each processor, the set of indices whose values it owns.  The paper's
+//! task graphs are *derived* from distributions: task `(i, step)` is owned
+//! by the processor that owns index `i` under the output distribution of
+//! the step's kernel.
+
+use super::index_set::IndexSet;
+use crate::graph::ProcId;
+
+/// An assignment of the domain `[0, size)` to `nprocs` processors.
+#[derive(Debug, Clone)]
+pub enum Distribution {
+    /// Contiguous blocks of (nearly) equal size — `⌈N/p⌉`-style splitting.
+    Block { size: u64, nprocs: u32 },
+    /// Round-robin: index `i` on processor `i mod p`.
+    Cyclic { size: u64, nprocs: u32 },
+    /// Blocks of `block` indices dealt round-robin.
+    BlockCyclic { size: u64, nprocs: u32, block: u64 },
+    /// Arbitrary per-processor sets (must partition the domain).
+    Irregular { size: u64, parts: Vec<IndexSet> },
+}
+
+impl Distribution {
+    pub fn block(size: u64, nprocs: u32) -> Self {
+        assert!(nprocs > 0);
+        Distribution::Block { size, nprocs }
+    }
+
+    pub fn cyclic(size: u64, nprocs: u32) -> Self {
+        assert!(nprocs > 0);
+        Distribution::Cyclic { size, nprocs }
+    }
+
+    pub fn block_cyclic(size: u64, nprocs: u32, block: u64) -> Self {
+        assert!(nprocs > 0 && block > 0);
+        Distribution::BlockCyclic { size, nprocs, block }
+    }
+
+    /// Build an irregular distribution; validates that `parts` partition
+    /// the domain `[0, size)`.
+    pub fn irregular(size: u64, parts: Vec<IndexSet>) -> Result<Self, String> {
+        let total: usize = parts.iter().map(|s| s.len()).sum();
+        if total as u64 != size {
+            return Err(format!("parts cover {total} of {size} indices"));
+        }
+        let mut seen = vec![false; size as usize];
+        for part in &parts {
+            for i in part.iter() {
+                if i >= size {
+                    return Err(format!("index {i} out of domain {size}"));
+                }
+                if seen[i as usize] {
+                    return Err(format!("index {i} assigned twice"));
+                }
+                seen[i as usize] = true;
+            }
+        }
+        Ok(Distribution::Irregular { size, parts })
+    }
+
+    /// Domain size `N`.
+    pub fn size(&self) -> u64 {
+        match self {
+            Distribution::Block { size, .. }
+            | Distribution::Cyclic { size, .. }
+            | Distribution::BlockCyclic { size, .. }
+            | Distribution::Irregular { size, .. } => *size,
+        }
+    }
+
+    /// Processor count `p`.
+    pub fn nprocs(&self) -> u32 {
+        match self {
+            Distribution::Block { nprocs, .. }
+            | Distribution::Cyclic { nprocs, .. }
+            | Distribution::BlockCyclic { nprocs, .. } => *nprocs,
+            Distribution::Irregular { parts, .. } => parts.len() as u32,
+        }
+    }
+
+    /// The index set owned by processor `p` (the paper's `u(p)`).
+    pub fn owned(&self, p: ProcId) -> IndexSet {
+        let p64 = p.0 as u64;
+        match self {
+            Distribution::Block { size, nprocs } => {
+                let (lo, hi) = block_bounds(*size, *nprocs, p.0);
+                IndexSet::contiguous(lo, hi)
+            }
+            Distribution::Cyclic { size, nprocs } => {
+                if p64 >= *size {
+                    IndexSet::Empty
+                } else {
+                    IndexSet::strided(p64, *size, *nprocs as u64)
+                }
+            }
+            Distribution::BlockCyclic { size, nprocs, block } => {
+                let mut v = Vec::new();
+                let mut start = p64 * block;
+                while start < *size {
+                    let end = (start + block).min(*size);
+                    v.extend(start..end);
+                    start += *nprocs as u64 * block;
+                }
+                IndexSet::from_indices(v)
+            }
+            Distribution::Irregular { parts, .. } => {
+                parts.get(p.idx()).cloned().unwrap_or(IndexSet::Empty)
+            }
+        }
+    }
+
+    /// Owner of a single index.
+    pub fn owner_of(&self, i: u64) -> ProcId {
+        debug_assert!(i < self.size());
+        match self {
+            Distribution::Block { size, nprocs } => {
+                ProcId(block_owner(*size, *nprocs, i))
+            }
+            Distribution::Cyclic { nprocs, .. } => ProcId((i % *nprocs as u64) as u32),
+            Distribution::BlockCyclic { nprocs, block, .. } => {
+                ProcId(((i / block) % *nprocs as u64) as u32)
+            }
+            Distribution::Irregular { parts, .. } => {
+                for (p, part) in parts.iter().enumerate() {
+                    if part.contains(i) {
+                        return ProcId(p as u32);
+                    }
+                }
+                unreachable!("irregular distribution validated as a partition")
+            }
+        }
+    }
+}
+
+/// `[lo, hi)` bounds of processor `p`'s block under balanced block
+/// distribution: the first `size mod p` processors get one extra index.
+pub fn block_bounds(size: u64, nprocs: u32, p: u32) -> (u64, u64) {
+    let np = nprocs as u64;
+    let p = p as u64;
+    let base = size / np;
+    let extra = size % np;
+    let lo = p * base + p.min(extra);
+    let hi = lo + base + if p < extra { 1 } else { 0 };
+    (lo, hi.min(size))
+}
+
+fn block_owner(size: u64, nprocs: u32, i: u64) -> u32 {
+    // Inverse of block_bounds; O(1).
+    let np = nprocs as u64;
+    let base = size / np;
+    let extra = size % np;
+    let big = (base + 1) * extra; // indices held by the "one extra" procs
+    if base == 0 {
+        return i as u32; // more procs than points: point i on proc i
+    }
+    if i < big {
+        (i / (base + 1)) as u32
+    } else {
+        (extra + (i - big) / base) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_partition(d: &Distribution) {
+        let mut seen = vec![false; d.size() as usize];
+        for p in 0..d.nprocs() {
+            for i in d.owned(ProcId(p)).iter() {
+                assert!(!seen[i as usize], "index {i} owned twice");
+                seen[i as usize] = true;
+                assert_eq!(d.owner_of(i), ProcId(p), "owner_of({i}) mismatch");
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "unowned indices remain");
+    }
+
+    #[test]
+    fn block_partition_even() {
+        check_partition(&Distribution::block(16, 4));
+    }
+
+    #[test]
+    fn block_partition_uneven() {
+        check_partition(&Distribution::block(17, 4));
+        check_partition(&Distribution::block(3, 4)); // more procs than points
+    }
+
+    #[test]
+    fn block_bounds_balanced() {
+        // 10 over 3: sizes 4,3,3
+        assert_eq!(block_bounds(10, 3, 0), (0, 4));
+        assert_eq!(block_bounds(10, 3, 1), (4, 7));
+        assert_eq!(block_bounds(10, 3, 2), (7, 10));
+    }
+
+    #[test]
+    fn cyclic_partition() {
+        check_partition(&Distribution::cyclic(13, 4));
+        let d = Distribution::cyclic(10, 3);
+        assert_eq!(d.owned(ProcId(1)).to_vec(), vec![1, 4, 7]);
+    }
+
+    #[test]
+    fn block_cyclic_partition() {
+        check_partition(&Distribution::block_cyclic(20, 3, 2));
+        let d = Distribution::block_cyclic(12, 2, 3);
+        assert_eq!(d.owned(ProcId(0)).to_vec(), vec![0, 1, 2, 6, 7, 8]);
+    }
+
+    #[test]
+    fn irregular_partition_validated() {
+        let parts = vec![IndexSet::contiguous(0, 3), IndexSet::contiguous(3, 8)];
+        let d = Distribution::irregular(8, parts).unwrap();
+        check_partition(&d);
+        // Overlap rejected:
+        let bad = Distribution::irregular(
+            4,
+            vec![IndexSet::contiguous(0, 3), IndexSet::contiguous(2, 4)],
+        );
+        assert!(bad.is_err());
+        // Hole rejected:
+        let bad2 = Distribution::irregular(
+            5,
+            vec![IndexSet::contiguous(0, 2), IndexSet::contiguous(3, 5)],
+        );
+        assert!(bad2.is_err());
+    }
+}

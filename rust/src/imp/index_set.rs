@@ -1,0 +1,260 @@
+//! Index sets — the ground objects of the IMP formalism [Eijkhout 2016].
+//!
+//! An [`IndexSet`] is a finite set of global indices with structure-aware
+//! representations (contiguous / strided / explicit) so the common cases
+//! (block distributions, stencil shifts) stay O(1) in memory.
+
+/// A finite set of `u64` indices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IndexSet {
+    /// Empty set.
+    Empty,
+    /// `[lo, hi)` — the workhorse of block distributions.
+    Contiguous { lo: u64, hi: u64 },
+    /// `{lo, lo+stride, ...} ∩ [lo, hi)`.
+    Strided { lo: u64, hi: u64, stride: u64 },
+    /// Explicit sorted, deduplicated indices (irregular sets).
+    Indexed(Vec<u64>),
+}
+
+impl IndexSet {
+    /// The half-open interval `[lo, hi)`; empty if `lo >= hi`.
+    pub fn contiguous(lo: u64, hi: u64) -> Self {
+        if lo >= hi {
+            IndexSet::Empty
+        } else {
+            IndexSet::Contiguous { lo, hi }
+        }
+    }
+
+    /// Strided set; normalizes trivial cases.
+    pub fn strided(lo: u64, hi: u64, stride: u64) -> Self {
+        assert!(stride > 0);
+        if lo >= hi {
+            IndexSet::Empty
+        } else if stride == 1 {
+            IndexSet::Contiguous { lo, hi }
+        } else {
+            // Normalize hi to the last element + 1 for canonical equality.
+            let last = lo + ((hi - 1 - lo) / stride) * stride;
+            IndexSet::Strided { lo, hi: last + 1, stride }
+        }
+    }
+
+    /// From an arbitrary list (sorted + deduplicated internally, and
+    /// downgraded to `Contiguous` when dense).
+    pub fn from_indices(mut v: Vec<u64>) -> Self {
+        v.sort_unstable();
+        v.dedup();
+        if v.is_empty() {
+            return IndexSet::Empty;
+        }
+        let (lo, hi) = (v[0], *v.last().unwrap() + 1);
+        if (hi - lo) as usize == v.len() {
+            return IndexSet::Contiguous { lo, hi };
+        }
+        IndexSet::Indexed(v)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        matches!(self, IndexSet::Empty)
+    }
+
+    /// Cardinality.
+    pub fn len(&self) -> usize {
+        match self {
+            IndexSet::Empty => 0,
+            IndexSet::Contiguous { lo, hi } => (hi - lo) as usize,
+            IndexSet::Strided { lo, hi, stride } => ((hi - lo) as usize).div_ceil(*stride as usize),
+            IndexSet::Indexed(v) => v.len(),
+        }
+    }
+
+    /// Membership test.
+    pub fn contains(&self, i: u64) -> bool {
+        match self {
+            IndexSet::Empty => false,
+            IndexSet::Contiguous { lo, hi } => (*lo..*hi).contains(&i),
+            IndexSet::Strided { lo, hi, stride } => i >= *lo && i < *hi && (i - lo) % stride == 0,
+            IndexSet::Indexed(v) => v.binary_search(&i).is_ok(),
+        }
+    }
+
+    /// Iterate in ascending order.
+    pub fn iter(&self) -> Box<dyn Iterator<Item = u64> + '_> {
+        match self {
+            IndexSet::Empty => Box::new(std::iter::empty()),
+            IndexSet::Contiguous { lo, hi } => Box::new(*lo..*hi),
+            IndexSet::Strided { lo, hi, stride } => Box::new((*lo..*hi).step_by(*stride as usize)),
+            IndexSet::Indexed(v) => Box::new(v.iter().copied()),
+        }
+    }
+
+    /// Materialize to a sorted vector.
+    pub fn to_vec(&self) -> Vec<u64> {
+        self.iter().collect()
+    }
+
+    /// Shift every index by `delta`, dropping results outside `[0, domain)`.
+    /// This is the σ-application for one stencil offset.
+    pub fn shift_clipped(&self, delta: i64, domain: u64) -> IndexSet {
+        let sh = |i: u64| -> Option<u64> {
+            let v = i as i64 + delta;
+            if v < 0 || v as u64 >= domain {
+                None
+            } else {
+                Some(v as u64)
+            }
+        };
+        match self {
+            IndexSet::Empty => IndexSet::Empty,
+            IndexSet::Contiguous { lo, hi } => {
+                let nlo = (*lo as i64 + delta).max(0) as u64;
+                let nhi_i = *hi as i64 + delta;
+                let nhi = (nhi_i.max(0) as u64).min(domain);
+                IndexSet::contiguous(nlo.min(domain), nhi)
+            }
+            IndexSet::Strided { .. } | IndexSet::Indexed(_) => {
+                IndexSet::from_indices(self.iter().filter_map(sh).collect())
+            }
+        }
+    }
+
+    /// Set union.
+    pub fn union(&self, other: &IndexSet) -> IndexSet {
+        match (self, other) {
+            (IndexSet::Empty, x) | (x, IndexSet::Empty) => x.clone(),
+            (IndexSet::Contiguous { lo: a, hi: b }, IndexSet::Contiguous { lo: c, hi: d })
+                if *c <= *b && *a <= *d =>
+            {
+                IndexSet::contiguous(*a.min(c), *b.max(d))
+            }
+            _ => {
+                let mut v = self.to_vec();
+                v.extend(other.iter());
+                IndexSet::from_indices(v)
+            }
+        }
+    }
+
+    /// Set intersection.
+    pub fn intersect(&self, other: &IndexSet) -> IndexSet {
+        match (self, other) {
+            (IndexSet::Empty, _) | (_, IndexSet::Empty) => IndexSet::Empty,
+            (IndexSet::Contiguous { lo: a, hi: b }, IndexSet::Contiguous { lo: c, hi: d }) => {
+                IndexSet::contiguous(*a.max(c), *b.min(d))
+            }
+            _ => IndexSet::from_indices(self.iter().filter(|&i| other.contains(i)).collect()),
+        }
+    }
+
+    /// Set difference `self − other`.
+    pub fn difference(&self, other: &IndexSet) -> IndexSet {
+        match (self, other) {
+            (IndexSet::Empty, _) => IndexSet::Empty,
+            (x, IndexSet::Empty) => x.clone(),
+            _ => IndexSet::from_indices(self.iter().filter(|&i| !other.contains(i)).collect()),
+        }
+    }
+
+    /// True iff `self ⊆ other`.
+    pub fn is_subset(&self, other: &IndexSet) -> bool {
+        self.iter().all(|i| other.contains(i))
+    }
+
+    /// Smallest and largest element, if non-empty.
+    pub fn bounds(&self) -> Option<(u64, u64)> {
+        match self {
+            IndexSet::Empty => None,
+            IndexSet::Contiguous { lo, hi } => Some((*lo, hi - 1)),
+            IndexSet::Strided { lo, hi, stride } => {
+                Some((*lo, lo + ((hi - 1 - lo) / stride) * stride))
+            }
+            IndexSet::Indexed(v) => Some((v[0], *v.last().unwrap())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_basics() {
+        let s = IndexSet::contiguous(3, 8);
+        assert_eq!(s.len(), 5);
+        assert!(s.contains(3) && s.contains(7) && !s.contains(8));
+        assert_eq!(s.to_vec(), vec![3, 4, 5, 6, 7]);
+        assert_eq!(s.bounds(), Some((3, 7)));
+    }
+
+    #[test]
+    fn empty_normalization() {
+        assert!(IndexSet::contiguous(5, 5).is_empty());
+        assert!(IndexSet::from_indices(vec![]).is_empty());
+        assert_eq!(IndexSet::from_indices(vec![2, 3, 4]), IndexSet::contiguous(2, 5));
+    }
+
+    #[test]
+    fn strided_basics() {
+        let s = IndexSet::strided(0, 10, 3); // {0,3,6,9}
+        assert_eq!(s.len(), 4);
+        assert!(s.contains(6) && !s.contains(7));
+        assert_eq!(s.to_vec(), vec![0, 3, 6, 9]);
+        assert_eq!(s.bounds(), Some((0, 9)));
+    }
+
+    #[test]
+    fn strided_normalizes_to_contiguous() {
+        assert_eq!(IndexSet::strided(2, 6, 1), IndexSet::contiguous(2, 6));
+    }
+
+    #[test]
+    fn shift_clipped_contiguous() {
+        let s = IndexSet::contiguous(0, 5);
+        assert_eq!(s.shift_clipped(-1, 100), IndexSet::contiguous(0, 4));
+        assert_eq!(s.shift_clipped(2, 6), IndexSet::contiguous(2, 6));
+        assert!(s.shift_clipped(-10, 100).is_empty());
+    }
+
+    #[test]
+    fn shift_clipped_indexed() {
+        let s = IndexSet::from_indices(vec![0, 5, 9]);
+        assert_eq!(s.shift_clipped(1, 10).to_vec(), vec![1, 6]);
+    }
+
+    #[test]
+    fn union_merges_overlapping_intervals() {
+        let a = IndexSet::contiguous(0, 5);
+        let b = IndexSet::contiguous(3, 9);
+        assert_eq!(a.union(&b), IndexSet::contiguous(0, 9));
+        // Adjacent intervals merge too.
+        let c = IndexSet::contiguous(9, 12);
+        assert_eq!(b.union(&c), IndexSet::contiguous(3, 12));
+    }
+
+    #[test]
+    fn union_disjoint_goes_indexed() {
+        let a = IndexSet::contiguous(0, 2);
+        let b = IndexSet::contiguous(5, 7);
+        let u = a.union(&b);
+        assert_eq!(u.to_vec(), vec![0, 1, 5, 6]);
+    }
+
+    #[test]
+    fn intersect_and_difference() {
+        let a = IndexSet::contiguous(0, 10);
+        let b = IndexSet::contiguous(5, 15);
+        assert_eq!(a.intersect(&b), IndexSet::contiguous(5, 10));
+        assert_eq!(a.difference(&b), IndexSet::contiguous(0, 5));
+        let s = IndexSet::strided(0, 10, 2);
+        assert_eq!(a.intersect(&s).to_vec(), vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn subset_relation() {
+        assert!(IndexSet::contiguous(2, 4).is_subset(&IndexSet::contiguous(0, 10)));
+        assert!(!IndexSet::contiguous(2, 11).is_subset(&IndexSet::contiguous(0, 10)));
+        assert!(IndexSet::Empty.is_subset(&IndexSet::Empty));
+    }
+}

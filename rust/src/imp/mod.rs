@@ -1,0 +1,27 @@
+//! The Integrative Model for Parallelism (IMP) formalism.
+//!
+//! Implements the machinery of [Eijkhout 2016, arXiv:1602.02409] that the
+//! paper builds on: index sets, distributions `u: P → 2^N`, dependence
+//! signatures σ, the derived β-distribution `β(p) = σ(u(p))`, and the
+//! unrolling of data-parallel programs into distributed task graphs.
+//!
+//! The pipeline is:
+//!
+//! ```text
+//! Program (distributions + signatures)
+//!     --unroll()-->  TaskGraph  --transform::communication_avoiding-->  CaSchedule
+//! ```
+//!
+//! which is exactly the paper's claim of a "communication avoiding
+//! compiler": an *arbitrary* computation expressed as data-parallel steps
+//! is turned into a latency-tolerant one mechanically.
+
+mod distribution;
+mod index_set;
+mod program;
+mod signature;
+
+pub use distribution::{block_bounds, Distribution};
+pub use index_set::IndexSet;
+pub use program::{Program, Step};
+pub use signature::Signature;

@@ -1,0 +1,213 @@
+//! Data-parallel programs and their unrolling into distributed task graphs.
+//!
+//! This is the "higher level description of parallel algorithms" the paper
+//! derives task graphs from: a [`Program`] is a sequence of data-parallel
+//! steps, each step a *kernel* in IMP terms — an output [`Distribution`]
+//! plus a dependence [`Signature`].  `unroll()` mechanically produces the
+//! task graph that §3 then transforms; the "communication avoiding
+//! compiler" of the paper is `Program::unroll` + `transform::communication_avoiding`.
+
+use super::distribution::Distribution;
+use super::signature::Signature;
+use crate::graph::{GraphBuilder, ProcId, TaskGraph, TaskId};
+
+/// One data-parallel operation: produce a new dataset distributed as
+/// `out`, where element `i` reads `sig.of_index(i)` of the previous level.
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub sig: Signature,
+    pub out: Distribution,
+    pub name: String,
+}
+
+/// A straight-line sequence of data-parallel steps over one dataset chain.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Distribution of the initial data (level 0).
+    pub input: Distribution,
+    pub steps: Vec<Step>,
+}
+
+impl Program {
+    pub fn new(input: Distribution) -> Self {
+        Program { input, steps: Vec::new() }
+    }
+
+    /// Append a step with the same distribution as the input (the common
+    /// "iterate in place" pattern of grid updates).
+    pub fn then(mut self, name: &str, sig: Signature) -> Self {
+        let out = self.steps.last().map(|s| s.out.clone()).unwrap_or_else(|| self.input.clone());
+        self.steps.push(Step { sig, out, name: name.to_string() });
+        self
+    }
+
+    /// Append a step with an explicit output distribution (redistribution).
+    pub fn then_dist(mut self, name: &str, sig: Signature, out: Distribution) -> Self {
+        self.steps.push(Step { sig, out, name: name.to_string() });
+        self
+    }
+
+    /// `m` repetitions of the same step (the paper's "sequence of sparse
+    /// matrix-vector products", eq. (1) iterated).
+    pub fn iterate(mut self, name: &str, sig: Signature, m: u32) -> Self {
+        for k in 0..m {
+            let s = sig.clone();
+            self = self.then(&format!("{name}[{k}]"), s);
+        }
+        self
+    }
+
+    /// Number of levels in the unrolled graph (steps + input level).
+    pub fn num_levels(&self) -> u32 {
+        self.steps.len() as u32 + 1
+    }
+
+    /// Unroll into a distributed task graph.
+    ///
+    /// Task `(i, k)` (element `i` of level `k`) is owned by
+    /// `steps[k-1].out.owner_of(i)` and depends on the level `k−1` tasks at
+    /// `σ_k(i)`.  Level-0 tasks are `Input` data under `self.input`.
+    pub fn unroll(&self) -> TaskGraph {
+        let n = self.input.size();
+        let nprocs = self
+            .steps
+            .iter()
+            .map(|s| s.out.nprocs())
+            .chain(std::iter::once(self.input.nprocs()))
+            .max()
+            .unwrap();
+        let nlevels = self.steps.len();
+        let approx_edges: usize = self
+            .steps
+            .iter()
+            .map(|s| match &s.sig {
+                Signature::Stencil(o) => o.len() * n as usize,
+                Signature::Sparse { colidx, .. } => colidx.len(),
+                Signature::AllToAll => (n * n) as usize,
+            })
+            .sum();
+        let mut b = GraphBuilder::with_capacity(
+            nprocs,
+            (nlevels + 1) * n as usize,
+            approx_edges,
+        );
+
+        // Level 0: inputs.
+        let mut prev: Vec<TaskId> =
+            (0..n).map(|i| b.add_input(self.input.owner_of(i), i)).collect();
+
+        let mut scratch: Vec<TaskId> = Vec::new();
+        for (k, step) in self.steps.iter().enumerate() {
+            debug_assert_eq!(step.out.size(), n, "domain size must be constant along the chain");
+            scratch.clear();
+            scratch.reserve(n as usize);
+            for i in 0..n {
+                let owner: ProcId = step.out.owner_of(i);
+                // Hot path: add the task bare and push edges directly —
+                // `sig.of_index` allocation + a preds Vec per task costs
+                // ~25% of build time on multi-million-task graphs.
+                let t = b.add_task(owner, (k + 1) as u32, i, &[]);
+                match &step.sig {
+                    Signature::Stencil(offsets) => {
+                        for &o in offsets {
+                            let j = i as i64 + o;
+                            if j >= 0 && (j as u64) < n {
+                                b.add_pred(t, prev[j as usize]);
+                            }
+                        }
+                    }
+                    Signature::Sparse { rowptr, colidx } => {
+                        let (a0, a1) =
+                            (rowptr[i as usize] as usize, rowptr[i as usize + 1] as usize);
+                        for &c in &colidx[a0..a1] {
+                            b.add_pred(t, prev[c as usize]);
+                        }
+                    }
+                    Signature::AllToAll => {
+                        for &pt in prev.iter() {
+                            b.add_pred(t, pt);
+                        }
+                    }
+                }
+                scratch.push(t);
+            }
+            std::mem::swap(&mut prev, &mut scratch);
+        }
+        b.finish().expect("unrolled program graphs are acyclic by construction")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskKind;
+
+    #[test]
+    fn unroll_sizes() {
+        let p = Program::new(Distribution::block(8, 2))
+            .iterate("heat", Signature::stencil_radius(1), 3);
+        let g = p.unroll();
+        assert_eq!(g.len(), 8 * 4);
+        assert_eq!(g.num_levels(), 4);
+        // Interior points have 3 preds, boundary points 2: per level
+        // 2*2 + 6*3 = 22 edges.
+        assert_eq!(g.num_edges(), 3 * 22);
+    }
+
+    #[test]
+    fn unroll_ownership_follows_distribution() {
+        let p = Program::new(Distribution::block(10, 2))
+            .iterate("heat", Signature::stencil_radius(1), 1);
+        let g = p.unroll();
+        for t in g.tasks() {
+            let expected = if g.item(t) < 5 { 0 } else { 1 };
+            assert_eq!(g.owner(t).0, expected);
+        }
+    }
+
+    #[test]
+    fn unroll_input_level_is_input_kind() {
+        let p = Program::new(Distribution::block(4, 1))
+            .iterate("s", Signature::stencil_radius(1), 2);
+        let g = p.unroll();
+        for t in g.tasks() {
+            if g.level(t) == 0 {
+                assert_eq!(g.kind(t), TaskKind::Input);
+            } else {
+                assert_eq!(g.kind(t), TaskKind::Compute);
+            }
+        }
+    }
+
+    #[test]
+    fn unroll_stencil_dependence_pattern() {
+        let p = Program::new(Distribution::block(5, 1))
+            .iterate("s", Signature::stencil_radius(1), 1);
+        let g = p.unroll();
+        // Task for point 2 at level 1 (id 5+2=7) depends on inputs 1,2,3.
+        let preds = g.preds(crate::graph::TaskId(7));
+        assert_eq!(preds, &[1, 2, 3]);
+    }
+
+    #[test]
+    fn redistribution_step_changes_owners() {
+        let p = Program::new(Distribution::block(6, 2)).then_dist(
+            "shuffle",
+            Signature::stencil_radius(0),
+            Distribution::cyclic(6, 2),
+        );
+        let g = p.unroll();
+        // Level-1 point 1 is cyclic-owned by p1, though input point 1 is
+        // block-owned by p0.
+        let t = crate::graph::TaskId(6 + 1);
+        assert_eq!(g.owner(t).0, 1);
+    }
+
+    #[test]
+    fn all_to_all_step() {
+        let p = Program::new(Distribution::block(4, 2)).then("reduce", Signature::AllToAll);
+        let g = p.unroll();
+        let t = crate::graph::TaskId(4);
+        assert_eq!(g.preds(t).len(), 4);
+    }
+}

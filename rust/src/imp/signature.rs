@@ -1,0 +1,149 @@
+//! Signature functions: the IMP description of data dependence.
+//!
+//! A kernel's **signature** σ maps an output index to the set of input
+//! indices it reads — for a 3-point stencil, `σ(i) = {i−1, i, i+1}`.  The
+//! **β-distribution** of [Eijkhout 2016] is `β(p) = σ(u(p))`: what
+//! processor `p` must *have* to compute what it *owns*; `β(p) − u(p)` is
+//! exactly the ghost region, and its derivation is what lets IMP construct
+//! the task graph (and this paper transform it) mechanically.
+
+use super::distribution::Distribution;
+use super::index_set::IndexSet;
+use crate::graph::ProcId;
+
+/// A dependence signature over a 1-D domain.
+#[derive(Debug, Clone)]
+pub enum Signature {
+    /// σ(i) = {i + o : o ∈ offsets}, clipped to the domain.
+    /// `Stencil(vec![-1, 0, 1])` is the paper's eq. (1).
+    Stencil(Vec<i64>),
+    /// σ(i) = sparsity row i of a CSR matrix (irregular dependence).
+    Sparse { rowptr: Vec<u32>, colidx: Vec<u32> },
+    /// σ(i) = the whole domain (a reduction / collective).
+    AllToAll,
+}
+
+impl Signature {
+    /// Symmetric stencil of radius `r`: offsets `-r..=r`.
+    pub fn stencil_radius(r: u32) -> Self {
+        Signature::Stencil((-(r as i64)..=r as i64).collect())
+    }
+
+    /// σ applied to a single index, clipped to `[0, domain)`.
+    pub fn of_index(&self, i: u64, domain: u64) -> Vec<u64> {
+        match self {
+            Signature::Stencil(offsets) => offsets
+                .iter()
+                .filter_map(|&o| {
+                    let v = i as i64 + o;
+                    (v >= 0 && (v as u64) < domain).then_some(v as u64)
+                })
+                .collect(),
+            Signature::Sparse { rowptr, colidx } => {
+                let (a, b) = (rowptr[i as usize] as usize, rowptr[i as usize + 1] as usize);
+                colidx[a..b].iter().map(|&c| c as u64).collect()
+            }
+            Signature::AllToAll => (0..domain).collect(),
+        }
+    }
+
+    /// σ applied to a set: `σ(S) = ∪_{i∈S} σ(i)`, clipped to the domain.
+    pub fn of_set(&self, s: &IndexSet, domain: u64) -> IndexSet {
+        match self {
+            Signature::Stencil(offsets) => {
+                let mut acc = IndexSet::Empty;
+                for &o in offsets {
+                    acc = acc.union(&s.shift_clipped(o, domain));
+                }
+                acc
+            }
+            Signature::Sparse { .. } => {
+                let mut v: Vec<u64> = Vec::new();
+                for i in s.iter() {
+                    v.extend(self.of_index(i, domain));
+                }
+                IndexSet::from_indices(v)
+            }
+            Signature::AllToAll => IndexSet::contiguous(0, domain),
+        }
+    }
+
+    /// The β-distribution: `β(p) = σ(u(p))` — everything `p` needs.
+    pub fn beta(&self, u: &Distribution, p: ProcId) -> IndexSet {
+        self.of_set(&u.owned(p), u.size())
+    }
+
+    /// The ghost region: `β(p) − u(p)` — what `p` must receive.
+    pub fn ghost(&self, u: &Distribution, p: ProcId) -> IndexSet {
+        self.beta(u, p).difference(&u.owned(p))
+    }
+
+    /// Maximum dependence radius (for stencils; `None` for irregular).
+    pub fn radius(&self) -> Option<u32> {
+        match self {
+            Signature::Stencil(offsets) => {
+                offsets.iter().map(|o| o.unsigned_abs() as u32).max()
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stencil_of_index_clips_boundaries() {
+        let s = Signature::stencil_radius(1);
+        assert_eq!(s.of_index(0, 10), vec![0, 1]);
+        assert_eq!(s.of_index(5, 10), vec![4, 5, 6]);
+        assert_eq!(s.of_index(9, 10), vec![8, 9]);
+    }
+
+    #[test]
+    fn beta_is_block_plus_halo() {
+        // p1 of 3 over [0,12): owns [4,8); β = [3,9); ghost = {3, 8}.
+        let u = Distribution::block(12, 3);
+        let s = Signature::stencil_radius(1);
+        assert_eq!(s.beta(&u, ProcId(1)), IndexSet::contiguous(3, 9));
+        assert_eq!(s.ghost(&u, ProcId(1)).to_vec(), vec![3, 8]);
+    }
+
+    #[test]
+    fn edge_proc_ghost_one_sided() {
+        let u = Distribution::block(12, 3);
+        let s = Signature::stencil_radius(1);
+        assert_eq!(s.ghost(&u, ProcId(0)).to_vec(), vec![4]);
+        assert_eq!(s.ghost(&u, ProcId(2)).to_vec(), vec![7]);
+    }
+
+    #[test]
+    fn wider_stencil_wider_ghost() {
+        let u = Distribution::block(20, 2);
+        let s = Signature::stencil_radius(3);
+        assert_eq!(s.ghost(&u, ProcId(0)).to_vec(), vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn sparse_signature_rows() {
+        // 3 rows: row0 -> {0,1}, row1 -> {0,1,2}, row2 -> {2}
+        let sig = Signature::Sparse { rowptr: vec![0, 2, 5, 6], colidx: vec![0, 1, 0, 1, 2, 2] };
+        assert_eq!(sig.of_index(1, 3), vec![0, 1, 2]);
+        let s = sig.of_set(&IndexSet::contiguous(0, 2), 3);
+        assert_eq!(s.to_vec(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn all_to_all_signature() {
+        let u = Distribution::block(6, 2);
+        let s = Signature::AllToAll;
+        assert_eq!(s.ghost(&u, ProcId(0)), IndexSet::contiguous(3, 6));
+    }
+
+    #[test]
+    fn radius_reporting() {
+        assert_eq!(Signature::stencil_radius(2).radius(), Some(2));
+        assert_eq!(Signature::AllToAll.radius(), None);
+    }
+}

@@ -1,0 +1,220 @@
+//! Krylov solvers — the paper's motivating application (§1).
+//!
+//! The paper motivates latency tolerance with iterative methods: repeated
+//! sparse matvecs (the halo exchange the transformation blocks) plus
+//! inner products (the collectives the s-step/pipelined reformulations
+//! combine or overlap — refs [1, 2, 9, 13] in the paper).  This module
+//! provides:
+//!
+//! * [`cg_reference`] — sequential CG in f64 (the numerical oracle);
+//! * [`distributed`] — real leader/worker CG over the channel fabric with
+//!   all vector compute in PJRT artifacts (classic and pipelined message
+//!   schedules);
+//! * [`cg_program`] — CG iterations as an IMP data-parallel program, so
+//!   the §3 transformation can be applied to a graph *with collectives*;
+//! * [`latency_model`] — the per-iteration α-cost model comparing classic
+//!   vs. pipelined CG on `p` nodes.
+
+pub mod distributed;
+pub mod powers;
+
+use crate::imp::{Distribution, Program, Signature};
+use crate::stencil::CsrMatrix;
+
+/// Sequential CG on a CSR matrix, f64 arithmetic; returns
+/// `(x, iterations, final residual norm)`.
+pub fn cg_reference(a: &CsrMatrix, rhs: &[f64], tol: f64, maxit: usize) -> (Vec<f64>, usize, f64) {
+    let n = a.n;
+    assert_eq!(rhs.len(), n);
+    let spmv = |x: &[f64]| -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                a.row_cols(i)
+                    .iter()
+                    .zip(a.row_vals(i))
+                    .map(|(&c, &v)| v as f64 * x[c as usize])
+                    .sum()
+            })
+            .collect()
+    };
+    let dot = |u: &[f64], v: &[f64]| u.iter().zip(v).map(|(a, b)| a * b).sum::<f64>();
+
+    let mut x = vec![0.0; n];
+    let mut r = rhs.to_vec();
+    let mut p = r.clone();
+    let mut rho = dot(&r, &r);
+    let tol2 = tol * tol * rho.max(1e-300);
+    for it in 0..maxit {
+        if rho <= tol2 {
+            return (x, it, rho.sqrt());
+        }
+        let ap = spmv(&p);
+        let alpha = rho / dot(&p, &ap);
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rho_new = dot(&r, &r);
+        let beta = rho_new / rho;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rho = rho_new;
+    }
+    (x, maxit, rho.sqrt())
+}
+
+/// `iters` CG iterations as a data-parallel program over an `n`-point
+/// domain on `p` processors.  Each iteration contributes three steps:
+/// the matvec (the matrix's sparse signature), the inner-product
+/// reduction (`AllToAll` — every output element depends on the whole
+/// vector, the task-graph shape of an allreduce), and the vector update
+/// (pointwise).  Running the §3 transformation on this graph shows what
+/// the paper's framework does to collectives: `AllToAll` levels admit no
+/// blocking across them, which is exactly why the s-step literature
+/// reformulates CG — quantified in the `fig6_subset_sizes` bench.
+pub fn cg_program(a: &CsrMatrix, p: u32, iters: u32) -> Program {
+    let mut prog = Program::new(Distribution::block(a.n as u64, p));
+    for k in 0..iters {
+        prog = prog
+            .then(&format!("matvec[{k}]"), a.signature())
+            .then(&format!("dot[{k}]"), Signature::AllToAll)
+            .then(&format!("update[{k}]"), Signature::stencil_radius(0));
+    }
+    prog
+}
+
+/// Per-iteration latency model: how many α-latencies are *exposed* (not
+/// overlapped) per CG iteration under each formulation, on `p` nodes with
+/// tree allreduces of depth `⌈log₂ p⌉`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CgLatencyModel {
+    pub p: u32,
+    /// Message latency.
+    pub alpha: f64,
+    /// Local compute per iteration (matvec + vector ops), seconds.
+    pub local_compute: f64,
+}
+
+impl CgLatencyModel {
+    fn tree_depth(&self) -> f64 {
+        (self.p as f64).log2().ceil().max(0.0)
+    }
+
+    /// Classic CG: halo exchange (1 α) + two separate allreduces, all on
+    /// the critical path.
+    pub fn classic_per_iter(&self) -> f64 {
+        self.local_compute + self.alpha + 2.0 * self.tree_depth() * self.alpha
+    }
+
+    /// Pipelined CG (Gropp-style, paper ref [9]): the residual allreduce
+    /// is launched with the fused update and overlaps the p-update and
+    /// the next halo exchange; one allreduce remains exposed, and the
+    /// halo exchange overlaps local interior compute.
+    pub fn pipelined_per_iter(&self) -> f64 {
+        let exposed_allreduce = self.tree_depth() * self.alpha;
+        let halo = self.alpha.max(self.local_compute * 0.5);
+        self.local_compute * 0.5 + halo + exposed_allreduce
+    }
+
+    /// s-step CG with block size `s` (paper refs [1, 4]): one combined
+    /// allreduce per `s` iterations; the matrix-power halo grows to `s`
+    /// points but stays one message.
+    pub fn sstep_per_iter(&self, s: u32) -> f64 {
+        assert!(s >= 1);
+        let per_block = self.local_compute * s as f64
+            + self.alpha                    // one (wider) halo exchange
+            + self.tree_depth() * self.alpha; // one combined allreduce
+        per_block / s as f64
+    }
+
+    /// Speedup of the pipelined variant over classic.
+    pub fn pipelined_speedup(&self) -> f64 {
+        self.classic_per_iter() / self.pipelined_per_iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::{check_schedule, communication_avoiding_default, ScheduleStats};
+
+    #[test]
+    fn cg_reference_solves_laplace() {
+        let n = 64;
+        let a = CsrMatrix::laplace1d(n);
+        let rhs: Vec<f64> = (0..n).map(|i| ((i * 7) % 13) as f64 / 13.0 - 0.5).collect();
+        let (x, iters, res) = cg_reference(&a, &rhs, 1e-10, 10 * n);
+        assert!(iters <= n + 5, "CG on SPD tridiagonal must converge in ≤ n iters: {iters}");
+        assert!(res < 1e-8);
+        // Verify A x = rhs.
+        let ax: Vec<f64> = (0..n)
+            .map(|i| {
+                a.row_cols(i)
+                    .iter()
+                    .zip(a.row_vals(i))
+                    .map(|(&c, &v)| v as f64 * x[c as usize])
+                    .sum()
+            })
+            .collect();
+        for (l, r) in ax.iter().zip(&rhs) {
+            assert!((l - r).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cg_reference_handles_exact_start() {
+        let a = CsrMatrix::laplace1d(8);
+        let (x, iters, _) = cg_reference(&a, &vec![0.0; 8], 1e-12, 100);
+        assert_eq!(iters, 0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cg_program_unrolls_and_transforms() {
+        let a = CsrMatrix::laplace1d(24);
+        let g = cg_program(&a, 3, 2).unroll();
+        assert_eq!(g.num_levels(), 1 + 3 * 2);
+        let s = communication_avoiding_default(&g);
+        check_schedule(&g, &s).unwrap();
+        // The AllToAll levels force communication: schedule must have
+        // messages (no free lunch through collectives).
+        assert!(s.total_messages() > 0);
+    }
+
+    #[test]
+    fn alltoall_blocks_local_progress() {
+        // After an AllToAll, nothing beyond it is locally computable:
+        // L^(4) must not contain tasks above the first dot level.
+        let a = CsrMatrix::laplace1d(16);
+        let g = cg_program(&a, 2, 2).unroll();
+        let s = communication_avoiding_default(&g);
+        let stats = ScheduleStats::compute(&g, &s);
+        for ps in &s.per_proc {
+            for &t in &ps.l4 {
+                assert!(
+                    g.level(crate::graph::TaskId(t)) <= 2,
+                    "t{t} beyond the first collective is in L4"
+                );
+            }
+        }
+        let _ = stats;
+    }
+
+    #[test]
+    fn latency_model_orderings() {
+        let m = CgLatencyModel { p: 64, alpha: 100.0, local_compute: 50.0 };
+        assert!(m.pipelined_per_iter() < m.classic_per_iter());
+        assert!(m.sstep_per_iter(8) < m.classic_per_iter());
+        // Larger s amortizes more.
+        assert!(m.sstep_per_iter(8) < m.sstep_per_iter(2));
+        assert!(m.pipelined_speedup() > 1.0);
+    }
+
+    #[test]
+    fn latency_model_single_node_no_gain() {
+        let m = CgLatencyModel { p: 1, alpha: 100.0, local_compute: 50.0 };
+        // No tree latency on one node; classic = compute + halo-α.
+        assert!((m.classic_per_iter() - 150.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,46 @@
+//! # imp-latency — Task Graph Transformations for Latency Tolerance
+//!
+//! A production-quality reproduction of Victor Eijkhout, *Task Graph
+//! Transformations for Latency Tolerance* (CS.DC 2018): the Integrative
+//! Model for Parallelism (IMP) derivation of distributed task graphs, the
+//! paper's §3 communication-avoiding transformation into the
+//! `L^(1)/L^(2)/L^(3)` subsets, a discrete-event simulator reproducing the
+//! §4 strong-scaling study (figures 7/8), and a real leader/worker runtime
+//! that executes the transformed schedules with AOT-compiled XLA compute.
+//!
+//! ## Layer map
+//!
+//! * [`graph`] — the task-graph IR every other module consumes.
+//! * [`imp`] — the IMP formalism: index sets, distributions, signature
+//!   functions; derives task graphs from data-parallel programs.
+//! * [`stencil`] — concrete problem generators (1-D/2-D heat, CSR SpMV).
+//! * [`transform`] — **the paper's contribution**: the subset derivation,
+//!   Theorem-1 checker, blocking, and redundancy accounting.
+//! * [`sim`] — α/β/γ discrete-event simulator for naive / overlap /
+//!   communication-avoiding schedules (paper §4).
+//! * [`cost`] — the §2.1 analytic cost model `T(b) = (M/b)α + Mβ + (MN/p + Mb)γ`.
+//! * [`krylov`] — the motivating application: classic and latency-tolerant CG.
+//! * [`runtime`] — PJRT artifact loading/execution (`xla` crate).
+//! * [`coordinator`] — real threads+channels execution of transformed graphs.
+//! * [`trace`] — Gantt charts and CSV series for the figures.
+//! * [`config`] — experiment presets and a small key=value config parser.
+//! * [`figures`] — regenerates every paper figure's data.
+//! * [`prop`] — in-repo property-testing harness (no external deps vendored).
+
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod figures;
+pub mod graph;
+pub mod imp;
+pub mod krylov;
+pub mod prop;
+pub mod runtime;
+pub mod sim;
+pub mod stencil;
+pub mod trace;
+pub mod transform;
+pub mod util;
+
+pub use graph::{ProcId, TaskGraph, TaskId};
+pub use transform::{CaSchedule, HaloMode, TransformOptions};

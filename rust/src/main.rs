@@ -1,0 +1,468 @@
+//! `imp-latency` — the command-line launcher.
+//!
+//! Subcommands (arguments are `key=value` pairs, see `--help`):
+//!
+//! * `figure <f1..f8|all>` — regenerate a paper figure (CSV + ASCII);
+//! * `transform` — run the §3 transformation, print subsets + Theorem-1 verdict;
+//! * `simulate` — compare naive/overlap/CA on the discrete-event simulator;
+//! * `cost` — the §2.1 cost model table and optimal block factor;
+//! * `run-heat1d` / `run-heat2d` — real distributed runs (PJRT compute);
+//! * `run-cg` — distributed CG, classic vs. pipelined;
+//! * `dot` — Graphviz export of a (small) transformed graph.
+
+use imp_latency::config::{parse_list, preset_end_to_end, preset_fig7, preset_fig8, Config};
+use imp_latency::coordinator::{heat1d, heat2d};
+use imp_latency::cost::CostModel;
+use imp_latency::figures;
+use imp_latency::krylov::distributed::{self as dcg, CgConfig};
+use imp_latency::runtime::Registry;
+use imp_latency::sim::{simulate, ExecPlan, Machine};
+use imp_latency::stencil::heat1d_graph;
+use imp_latency::trace::{gantt_ascii, summary_line};
+use imp_latency::transform::{
+    check_schedule, communication_avoiding, HaloMode, ScheduleStats, TransformOptions,
+};
+
+const HELP: &str = "\
+imp-latency — Task Graph Transformations for Latency Tolerance (Eijkhout 2018)
+
+USAGE: imp-latency <command> [key=value ...]
+
+COMMANDS
+  figure <f1..f8|all> [out=results/]   regenerate paper figures
+  transform  [n=64 m=8 p=4 halo=multi] subsets + Theorem-1 check + stats
+  simulate   [n=4096 m=32 p=8 threads=8 alpha=500 beta=0.1 gamma=1 blocks=2,4,8]
+  cost       [n=65536 m=128 p=16 alpha=300 beta=0.2 gamma=1 max_b=64]
+  run-heat1d [n_per_worker=2048 workers=8 b=8 steps=256 nu=0.2]
+  run-heat2d [px=2 py=2 b=2 steps=16 nu=0.15]
+  run-cg     [workers=2 tol=1e-5 max_iters=2000 pipelined=0]
+  powers     [n=4096 workers=4 s=8]    CA matrix-powers kernel vs baseline
+  autotune   [n=65536 m=64 p=16 threads=16 alpha=500 beta=0.1 gamma=1]
+  dot        [n=16 m=3 p=2]            Graphviz of the transformed graph
+
+Artifacts are searched in $IMP_ARTIFACTS or ./artifacts (run `make artifacts`).
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        print!("{HELP}");
+        return Ok(());
+    };
+    let rest: Vec<&str> = args[1..].iter().map(String::as_str).collect();
+    match cmd.as_str() {
+        "figure" => cmd_figure(&rest),
+        "transform" => cmd_transform(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "cost" => cmd_cost(&rest),
+        "run-heat1d" => cmd_run_heat1d(&rest),
+        "run-heat2d" => cmd_run_heat2d(&rest),
+        "run-cg" => cmd_run_cg(&rest),
+        "powers" => cmd_powers(&rest),
+        "autotune" => cmd_autotune(&rest),
+        "dot" => cmd_dot(&rest),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}; try --help")),
+    }
+}
+
+fn config_from(defaults: Config, args: &[&str]) -> (Config, Vec<String>) {
+    let mut cfg = defaults;
+    let rest = cfg.apply_overrides(args);
+    (cfg, rest.into_iter().map(str::to_string).collect())
+}
+
+fn cmd_figure(args: &[&str]) -> Result<(), String> {
+    let which = args.first().copied().unwrap_or("all");
+    let (cfg, _) = config_from(Config::new(), &args[args.len().min(1)..]);
+    let out_dir = cfg.get_or("out", "results".to_string());
+    let all = which == "all";
+    let mut did = false;
+
+    if all || which == "f1" {
+        print!("{}", figures::fig1(48, 4, 4));
+        did = true;
+    }
+    if all || which == "f2" {
+        print!("{}", figures::fig2(64, 4, 4));
+        did = true;
+    }
+    if all || which == "f3" {
+        print!("{}", figures::fig3(48, 4, 4));
+        did = true;
+    }
+    if all || which == "f4" {
+        print!("{}", figures::fig4(48, 4, 4));
+        did = true;
+    }
+    if all || which == "f5" {
+        print!("{}", figures::fig5(32, 3, 4));
+        did = true;
+    }
+    if all || which == "f6" {
+        let (text, _) = figures::fig6(64, 6, 4);
+        print!("{text}");
+        did = true;
+    }
+    if all || which == "f7" || which == "f8" {
+        let f7 = figures::fig78_sweep(&preset_fig7())?;
+        let f8 = figures::fig78_sweep(&preset_fig8())?;
+        if all || which == "f7" {
+            println!("Figure 7 — runtime vs threads/node, moderate latency (α=8γ)");
+            print!("{}", f7.to_table());
+            print!("{}", f7.to_ascii_plot(12));
+            f7.write_csv(&format!("{out_dir}/fig7.csv")).map_err(|e| e.to_string())?;
+            println!("wrote {out_dir}/fig7.csv");
+        }
+        if all || which == "f8" {
+            println!("Figure 8 — runtime vs threads/node, high latency (α=500γ)");
+            print!("{}", f8.to_table());
+            print!("{}", f8.to_ascii_plot(12));
+            f8.write_csv(&format!("{out_dir}/fig8.csv")).map_err(|e| e.to_string())?;
+            println!("wrote {out_dir}/fig8.csv");
+        }
+        println!("{}", figures::check_fig78_claims(&f7, &f8)?);
+        did = true;
+    }
+    if !did {
+        return Err(format!("unknown figure {which:?} (f1..f8 or all)"));
+    }
+    Ok(())
+}
+
+fn cmd_transform(args: &[&str]) -> Result<(), String> {
+    let mut defaults = Config::new();
+    defaults.set("n", 64);
+    defaults.set("m", 8);
+    defaults.set("p", 4);
+    defaults.set("halo", "multi");
+    let (cfg, _) = config_from(defaults, args);
+    let (n, m, p) = (cfg.require("n")?, cfg.require("m")?, cfg.require("p")?);
+    let halo = match cfg.get_or("halo", "multi".to_string()).as_str() {
+        "multi" => HaloMode::MultiLevel,
+        "level0" => HaloMode::Level0Only,
+        other => return Err(format!("halo must be multi|level0, got {other:?}")),
+    };
+    let g = heat1d_graph(n, m, p);
+    let t0 = std::time::Instant::now();
+    let s = communication_avoiding(&g, TransformOptions { halo });
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "graph: {} tasks, {} edges, {} levels, {} procs  (transformed in {:.1} ms, {:.2} Mtasks/s)",
+        g.len(),
+        g.num_edges(),
+        g.num_levels(),
+        g.num_procs(),
+        dt * 1e3,
+        g.len() as f64 / dt / 1e6
+    );
+    match check_schedule(&g, &s) {
+        Ok(()) => println!("Theorem 1: schedule is well-formed ✓"),
+        Err(v) => println!("Theorem 1 VIOLATED: {v}"),
+    }
+    print!("{}", ScheduleStats::compute(&g, &s).report());
+    for ps in &s.per_proc {
+        println!(
+            "  {}: |L0|={} |L1|={} |L2|={} |L3|={}  send {:?}  recv {:?}",
+            ps.proc,
+            ps.l0.len(),
+            ps.l1.len(),
+            ps.l2.len(),
+            ps.l3.len(),
+            ps.send.iter().map(|m| (m.peer.0, m.tasks.len())).collect::<Vec<_>>(),
+            ps.recv.iter().map(|m| (m.peer.0, m.tasks.len())).collect::<Vec<_>>(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &[&str]) -> Result<(), String> {
+    let mut defaults = Config::new();
+    defaults.set("n", 4096);
+    defaults.set("m", 32);
+    defaults.set("p", 8);
+    defaults.set("threads", 8);
+    defaults.set("alpha", 500.0);
+    defaults.set("beta", 0.1);
+    defaults.set("gamma", 1.0);
+    defaults.set("blocks", "2,4,8");
+    defaults.set("gantt", 0);
+    let (cfg, _) = config_from(defaults, args);
+    let (n, m, p): (u64, u32, u32) = (cfg.require("n")?, cfg.require("m")?, cfg.require("p")?);
+    let mach = Machine::new(
+        p,
+        cfg.require("threads")?,
+        cfg.require("alpha")?,
+        cfg.require("beta")?,
+        cfg.require("gamma")?,
+    );
+    let blocks: Vec<u32> = parse_list(&cfg.get_or("blocks", "2,4,8".to_string()))?;
+    let want_gantt = cfg.get_or("gantt", 0) != 0;
+
+    let g = heat1d_graph(n, m, p);
+    println!(
+        "1-D heat, n={n} m={m} p={p} threads={} α={} β={} γ={}",
+        mach.threads, mach.alpha, mach.beta, mach.gamma
+    );
+    let mut plans = vec![ExecPlan::naive(&g), ExecPlan::overlap(&g)];
+    for &b in &blocks {
+        plans.push(ExecPlan::ca(&g, b, TransformOptions::default())?);
+    }
+    for plan in &plans {
+        let r = simulate(&g, plan, &mach, want_gantt);
+        println!("{}", summary_line(&plan.label, &r));
+        if want_gantt {
+            print!("{}", gantt_ascii(&r.spans, r.total_time, 100));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cost(args: &[&str]) -> Result<(), String> {
+    let mut defaults = Config::new();
+    defaults.set("n", 65536);
+    defaults.set("m", 128);
+    defaults.set("p", 16);
+    defaults.set("alpha", 300.0);
+    defaults.set("beta", 0.2);
+    defaults.set("gamma", 1.0);
+    defaults.set("max_b", 64);
+    let (cfg, _) = config_from(defaults, args);
+    let c = CostModel::new(
+        cfg.require("n")?,
+        cfg.require("m")?,
+        cfg.require("p")?,
+        cfg.require("alpha")?,
+        cfg.require("beta")?,
+        cfg.require("gamma")?,
+    );
+    let max_b: u32 = cfg.require("max_b")?;
+    println!("T(b) = (M/b)α + Mβ + (MN/p + Mb)γ   with α={} β={} γ={}", c.alpha, c.beta, c.gamma);
+    println!("{:>6} {:>16} {:>16} {:>10}", "b", "T(b)", "overhead", "speedup");
+    let mut b = 1u32;
+    while b <= max_b {
+        println!(
+            "{b:>6} {:>16.1} {:>16.1} {:>10.4}",
+            c.cost(b),
+            c.overhead(b),
+            c.speedup(b)
+        );
+        b *= 2;
+    }
+    println!(
+        "optimal b: continuous sqrt(α/γ) = {:.2}, discrete argmin = {} (independent of N, M, p)",
+        c.optimal_b_continuous(),
+        c.optimal_b(max_b)
+    );
+    Ok(())
+}
+
+fn artifact_dir() -> std::path::PathBuf {
+    Registry::default_dir()
+}
+
+fn cmd_run_heat1d(args: &[&str]) -> Result<(), String> {
+    let (cfg, _) = config_from(preset_end_to_end(), args);
+    let c = heat1d::Heat1dConfig {
+        n_per_worker: cfg.require("n_per_worker")?,
+        workers: cfg.require("workers")?,
+        b: cfg.get_or("b", 8),
+        steps: cfg.require("steps")?,
+        nu: cfg.require("nu")?,
+        artifacts_dir: artifact_dir(),
+    };
+    let n = c.total_points();
+    let init: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.003).sin() * 0.5).collect();
+    let (field, stats) = heat1d::run(&c, &init).map_err(|e| e.to_string())?;
+    println!(
+        "heat1d: N={} workers={} b={} steps={} → wall {:.3}s (exchange {:.3}s, compute {:.3}s), {} msgs / {} words",
+        n, c.workers, c.b, c.steps, stats.wall_secs, stats.exchange_secs, stats.compute_secs,
+        stats.messages, stats.words
+    );
+    let reference = heat1d::reference(&artifact_dir(), &init, c.nu, c.steps)
+        .map_err(|e| e.to_string())?;
+    println!("rel-l2 vs sequential reference: {:.3e}", heat1d::rel_l2(&field, &reference));
+    Ok(())
+}
+
+fn cmd_run_heat2d(args: &[&str]) -> Result<(), String> {
+    let mut defaults = Config::new();
+    defaults.set("px", 2);
+    defaults.set("py", 2);
+    defaults.set("b", 2);
+    defaults.set("steps", 16);
+    defaults.set("nu", 0.15);
+    let (cfg, _) = config_from(defaults, args);
+    let c = heat2d::Heat2dConfig {
+        tile_h: 64,
+        tile_w: 64,
+        px: cfg.require("px")?,
+        py: cfg.require("py")?,
+        b: cfg.require("b")?,
+        steps: cfg.require("steps")?,
+        nu: cfg.require("nu")?,
+        artifacts_dir: artifact_dir(),
+    };
+    let (h, w) = (c.grid_h(), c.grid_w());
+    let init: Vec<f32> = (0..h * w)
+        .map(|k| ((k / w) as f32 * 0.37).sin() + ((k % w) as f32 * 0.23).cos())
+        .collect();
+    let (field, stats) = heat2d::run(&c, &init).map_err(|e| e.to_string())?;
+    let reference = heat2d::reference_periodic(&init, h, w, c.nu, c.steps);
+    println!(
+        "heat2d: {}x{} grid, {}x{} workers, b={} steps={} → wall {:.3}s, {} msgs, rel-l2 {:.3e}",
+        h,
+        w,
+        c.px,
+        c.py,
+        c.b,
+        c.steps,
+        stats.wall_secs,
+        stats.messages,
+        heat1d::rel_l2(&field, &reference)
+    );
+    Ok(())
+}
+
+fn cmd_run_cg(args: &[&str]) -> Result<(), String> {
+    let mut defaults = Config::new();
+    defaults.set("workers", 2);
+    defaults.set("tol", 1e-5);
+    defaults.set("max_iters", 2000);
+    defaults.set("pipelined", 0);
+    let (cfg, _) = config_from(defaults, args);
+    let c = CgConfig {
+        workers: cfg.require("workers")?,
+        tol: cfg.require("tol")?,
+        max_iters: cfg.require("max_iters")?,
+        pipelined: cfg.get_or("pipelined", 0) != 0,
+        artifacts_dir: artifact_dir(),
+    };
+    let n = dcg::SHARD * c.workers as usize;
+    let rhs: Vec<f32> = (0..n).map(|i| ((i * 13 + 5) % 29) as f32 / 29.0 - 0.5).collect();
+    let (_, stats) = dcg::solve(&c, &rhs).map_err(|e| e.to_string())?;
+    println!(
+        "cg({}): N={} workers={} → {} iters, residual {:.3e}, wall {:.3}s (compute {:.3}s, reduce-wait {:.3}s), {} msgs",
+        if c.pipelined { "pipelined" } else { "classic" },
+        n,
+        c.workers,
+        stats.iterations,
+        stats.final_residual,
+        stats.wall_secs,
+        stats.compute_secs,
+        stats.reduce_wait_secs,
+        stats.messages
+    );
+    Ok(())
+}
+
+fn cmd_powers(args: &[&str]) -> Result<(), String> {
+    let mut defaults = Config::new();
+    defaults.set("n", 4096);
+    defaults.set("workers", 4);
+    defaults.set("s", 8);
+    let (cfg, _) = config_from(defaults, args);
+    let n: usize = cfg.require("n")?;
+    let workers: u32 = cfg.require("workers")?;
+    let s: u32 = cfg.require("s")?;
+    let v: Vec<f32> = (0..n).map(|i| ((i * 17 + 3) % 23) as f32 / 23.0 - 0.5).collect();
+    let blocked =
+        imp_latency::krylov::powers::matrix_powers(&v, workers, s, true).map_err(|e| e.to_string())?;
+    let baseline =
+        imp_latency::krylov::powers::matrix_powers(&v, workers, s, false).map_err(|e| e.to_string())?;
+    println!(
+        "matrix powers [Ap..A^{s}p], N={n}, {workers} workers:\n  \
+         blocked : {} msgs / {} words / {:.4}s\n  \
+         baseline: {} msgs / {} words / {:.4}s\n  \
+         message reduction {}x (one s-wide exchange instead of s exchanges)",
+        blocked.messages,
+        blocked.words,
+        blocked.wall_secs,
+        baseline.messages,
+        baseline.words,
+        baseline.wall_secs,
+        baseline.messages / blocked.messages.max(1)
+    );
+    // Verify agreement.
+    let mut worst = 0.0f32;
+    for (a, b) in blocked.powers.iter().flatten().zip(baseline.powers.iter().flatten()) {
+        worst = worst.max((a - b).abs());
+    }
+    println!("  max |blocked − baseline| = {worst:.3e}");
+    Ok(())
+}
+
+fn cmd_autotune(args: &[&str]) -> Result<(), String> {
+    let mut defaults = Config::new();
+    defaults.set("n", 65536);
+    defaults.set("m", 64);
+    defaults.set("p", 16);
+    defaults.set("threads", 16);
+    defaults.set("alpha", 500.0);
+    defaults.set("beta", 0.1);
+    defaults.set("gamma", 1.0);
+    let (cfg, _) = config_from(defaults, args);
+    let mach = Machine::new(
+        cfg.require("p")?,
+        cfg.require("threads")?,
+        cfg.require("alpha")?,
+        cfg.require("beta")?,
+        cfg.require("gamma")?,
+    );
+    let r = imp_latency::transform::select_b(
+        cfg.require("n")?,
+        cfg.require("m")?,
+        &mach,
+        &[1, 2, 4, 8, 16, 32, 64],
+    );
+    println!(
+        "autotune: grid {:?}\n  §2.1 model b* = {} (continuous {:.1})\n  simulator b* = {}\n  \
+         chosen b = {}  (predicted {:.1}, naive {:.1}, speedup {:.2}x)",
+        r.grid,
+        r.model_b,
+        r.continuous_b,
+        r.sim_b,
+        r.chosen_b,
+        r.predicted_time,
+        r.naive_time,
+        r.predicted_speedup()
+    );
+    Ok(())
+}
+
+fn cmd_dot(args: &[&str]) -> Result<(), String> {
+    let mut defaults = Config::new();
+    defaults.set("n", 16);
+    defaults.set("m", 3);
+    defaults.set("p", 2);
+    let (cfg, _) = config_from(defaults, args);
+    let g = heat1d_graph(cfg.require("n")?, cfg.require("m")?, cfg.require("p")?);
+    let s = communication_avoiding(&g, TransformOptions::default());
+    let annot = |t: imp_latency::graph::TaskId| -> String {
+        let ps = &s.per_proc[g.owner(t).idx()];
+        for (name, set) in
+            [("L0", &ps.l0), ("L1", &ps.l1), ("L2", &ps.l2), ("L3", &ps.l3)]
+        {
+            if set.binary_search(&t.0).is_ok() {
+                return name.to_string();
+            }
+        }
+        String::new()
+    };
+    print!("{}", g.to_dot_annotated("transformed", annot));
+    Ok(())
+}

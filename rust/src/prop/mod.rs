@@ -1,0 +1,150 @@
+//! In-repo property-testing harness.
+//!
+//! The vendored crate set has no `proptest`, so this module provides the
+//! two pieces the test-suite needs: a seeded case runner with failure
+//! reporting, and generators for random DAGs / distributions that the
+//! Theorem-1 and simulator invariants are checked against.
+
+use crate::graph::{GraphBuilder, ProcId, TaskGraph};
+use crate::util::Rng;
+
+/// Run `f` on `cases` deterministic seeds; on panic-free failure (an `Err`
+/// return), panic with the offending seed so the case can be replayed.
+///
+/// ```no_run
+/// // (no_run: doctest binaries lack the libxla rpath of regular targets)
+/// imp_latency::prop::check(10, |rng| {
+///     let x = rng.below(100);
+///     if x + 1 > x { Ok(()) } else { Err("overflow".into()) }
+/// });
+/// ```
+pub fn check(cases: u64, mut f: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for seed in 1..=cases {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Parameters for random layered DAG generation.
+#[derive(Debug, Clone)]
+pub struct DagParams {
+    pub max_procs: u32,
+    pub max_levels: u32,
+    pub max_width: u32,
+    /// Probability that a (task, candidate-pred) pair becomes an edge.
+    pub edge_prob: f64,
+    /// How many levels back an edge may reach (1 = strictly level-by-level).
+    pub max_reach: u32,
+}
+
+impl Default for DagParams {
+    fn default() -> Self {
+        DagParams { max_procs: 5, max_levels: 6, max_width: 8, edge_prob: 0.35, max_reach: 2 }
+    }
+}
+
+/// Generate a random layered DAG: level 0 is `Input` data, each later task
+/// draws predecessors from the previous `max_reach` levels.  Every task
+/// gets at least one predecessor so the graph is connected downward
+/// (mirroring real dataflow graphs, where nothing is computed from thin air).
+pub fn random_dag(rng: &mut Rng, p: &DagParams) -> TaskGraph {
+    let nprocs = rng.range(1, p.max_procs as usize + 1) as u32;
+    let nlevels = rng.range(2, p.max_levels as usize + 1) as u32;
+    let mut b = GraphBuilder::new(nprocs);
+    let mut levels: Vec<Vec<crate::graph::TaskId>> = Vec::new();
+
+    let width0 = rng.range(1, p.max_width as usize + 1);
+    levels.push(
+        (0..width0)
+            .map(|i| b.add_input(ProcId(rng.below(nprocs as u64) as u32), i as u64))
+            .collect(),
+    );
+
+    let mut item = width0 as u64;
+    for lvl in 1..nlevels {
+        let width = rng.range(1, p.max_width as usize + 1);
+        let mut row = Vec::with_capacity(width);
+        for _ in 0..width {
+            let owner = ProcId(rng.below(nprocs as u64) as u32);
+            let t = b.add_task(owner, lvl, item, &[]);
+            item += 1;
+            // Candidate predecessors: tasks within reach.
+            let lo_lvl = lvl.saturating_sub(p.max_reach) as usize;
+            let mut got_pred = false;
+            for cand_lvl in lo_lvl..lvl as usize {
+                for &cand in &levels[cand_lvl] {
+                    if rng.chance(p.edge_prob) {
+                        b.add_pred(t, cand);
+                        got_pred = true;
+                    }
+                }
+            }
+            if !got_pred {
+                // Force one predecessor from the immediately previous level.
+                let prev = &levels[lvl as usize - 1];
+                let c = prev[rng.range(0, prev.len())];
+                b.add_pred(t, c);
+            }
+            row.push(t);
+        }
+        levels.push(row);
+    }
+    b.finish().expect("layered construction is acyclic")
+}
+
+/// Generate a random 1-D stencil problem: (n, m, p, r) within sane bounds.
+pub fn random_stencil(rng: &mut Rng) -> (u64, u32, u32, u32) {
+    let n = rng.range(4, 64) as u64;
+    let m = rng.range(1, 8) as u32;
+    let p = rng.range(1, 6).min(n as usize) as u32;
+    let r = rng.range(1, 3) as u32;
+    (n, m, p, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskKind;
+
+    #[test]
+    fn random_dag_valid() {
+        check(50, |rng| {
+            let g = random_dag(rng, &DagParams::default());
+            // Level-0 tasks are inputs; all others have ≥1 pred.
+            for t in g.tasks() {
+                if g.level(t) == 0 {
+                    if g.kind(t) != TaskKind::Input {
+                        return Err(format!("level-0 task {t} not input"));
+                    }
+                } else if g.preds(t).is_empty() {
+                    return Err(format!("task {t} has no preds"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn check_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check(5, |rng| {
+                if rng.below(1000) < 990 {
+                    Ok(())
+                } else {
+                    Err("boom".into())
+                }
+            })
+        });
+        // With 5 seeds the failure may or may not trigger; just ensure the
+        // harness runs without UB either way.
+        let _ = r;
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn check_panics_on_failure() {
+        check(3, |_| Err("always".into()));
+    }
+}

@@ -1,0 +1,352 @@
+//! The PJRT runtime: loads AOT-compiled HLO-text artifacts and executes
+//! them from the coordinator's hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire request-path compute engine.  Interchange is HLO *text* — the
+//! image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
+//! protos, while the text parser reassigns ids (see
+//! `/opt/xla-example/README.md` and `python/compile/aot.py`).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so a [`Runtime`] is
+//! thread-local: the coordinator creates one per worker thread.
+//! Executables are compiled lazily on first use and cached.
+
+mod registry;
+
+pub use registry::{ArtifactSpec, DType, Registry, TensorSpec};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// A tensor value crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Value {
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(_) => DType::I32,
+        }
+    }
+
+    /// Unwrap as f32 data.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(v) => Ok(v),
+            Value::I32(_) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32(v) => Ok(v),
+            Value::I32(_) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    /// Scalar f32 helper (shape `[1]`).
+    pub fn scalar(x: f32) -> Value {
+        Value::F32(vec![x])
+    }
+
+    /// Scalar i32 helper (shape `[1]`).
+    pub fn scalar_i32(x: i32) -> Value {
+        Value::I32(vec![x])
+    }
+}
+
+/// Cumulative execution metrics (per runtime instance).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeMetrics {
+    pub executions: u64,
+    pub compiles: u64,
+    /// Seconds spent inside PJRT execute calls.
+    pub execute_secs: f64,
+    /// Seconds spent compiling.
+    pub compile_secs: f64,
+}
+
+/// Thread-local artifact executor.
+pub struct Runtime {
+    registry: Registry,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    metrics: RefCell<RuntimeMetrics>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over the artifact directory.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let registry = Registry::load(&dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            registry,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            metrics: RefCell::new(RuntimeMetrics::default()),
+        })
+    }
+
+    /// Create a runtime over the default artifact directory
+    /// (`$IMP_ARTIFACTS` or `./artifacts`).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(Registry::default_dir())
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn metrics(&self) -> RuntimeMetrics {
+        *self.metrics.borrow()
+    }
+
+    /// Ensure `name` is compiled (idempotent).  Returns compile time in
+    /// seconds when a compile actually happened.
+    pub fn warm(&self, name: &str) -> Result<Option<f64>> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(None);
+        }
+        let path = self.registry.hlo_path(name);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        let mut m = self.metrics.borrow_mut();
+        m.compiles += 1;
+        m.compile_secs += dt;
+        Ok(Some(dt))
+    }
+
+    /// Execute artifact `name` with `inputs`; validates shapes against the
+    /// manifest and returns the output tuple as [`Value`]s.
+    pub fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.registry.get(name).map_err(|e| anyhow!(e))?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        for (i, (v, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if v.len() != s.elems() || v.dtype() != s.dtype {
+                bail!(
+                    "{name}: input {i} mismatch: got {:?}[{}], manifest says {}",
+                    v.dtype(),
+                    v.len(),
+                    s
+                );
+            }
+        }
+        self.warm(name)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(v, s)| -> Result<xla::Literal> {
+                let lit = match v {
+                    Value::F32(data) => xla::Literal::vec1(data),
+                    Value::I32(data) => xla::Literal::vec1(data),
+                };
+                // vec1 is rank-1; reshape to the manifest rank when needed.
+                if s.dims.len() == 1 {
+                    Ok(lit)
+                } else {
+                    Ok(lit.reshape(&s.dims_i64())?)
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        let t0 = std::time::Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("warmed above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let root = result[0][0].to_literal_sync()?;
+        {
+            let mut m = self.metrics.borrow_mut();
+            m.executions += 1;
+            m.execute_secs += t0.elapsed().as_secs_f64();
+        }
+
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: expected {} outputs, got {}", spec.outputs.len(), parts.len());
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, s)| -> Result<Value> {
+                match s.dtype {
+                    DType::F32 => Ok(Value::F32(lit.to_vec::<f32>()?)),
+                    DType::I32 => Ok(Value::I32(lit.to_vec::<i32>()?)),
+                }
+            })
+            .collect()
+    }
+
+    /// Convenience: execute with f32 slices, single-output artifacts.
+    pub fn execute_f32_1(&self, name: &str, inputs: &[Value]) -> Result<Vec<f32>> {
+        let mut out = self.execute(name, inputs)?;
+        if out.len() != 1 {
+            bail!("{name}: expected single output, got {}", out.len());
+        }
+        out.pop().unwrap().into_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! PJRT round-trip tests.  These need `artifacts/` built (`make
+    //! artifacts`); they are skipped gracefully when it is missing so
+    //! `cargo test` works on a fresh checkout, and the integration suite
+    //! + examples cover the full path in CI (`make test`).
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        match Runtime::from_default_dir() {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!("skipping PJRT test: {e}");
+                None
+            }
+        }
+    }
+
+    fn ref_heat1d(x: &[f32], nu: f32, b: usize) -> Vec<f32> {
+        let mut cur = x.to_vec();
+        for _ in 0..b {
+            cur = cur
+                .windows(3)
+                .map(|w| w[1] + nu * (w[0] - 2.0 * w[1] + w[2]))
+                .collect();
+        }
+        cur
+    }
+
+    #[test]
+    fn heat1d_artifact_matches_reference() {
+        let Some(rt) = runtime() else { return };
+        let b = 4usize;
+        let n = 256usize;
+        let x: Vec<f32> = (0..n + 2 * b).map(|i| ((i * 37) % 17) as f32 * 0.1 - 0.8).collect();
+        let out = rt
+            .execute_f32_1(
+                "heat1d_n256_b4",
+                &[Value::F32(x.clone()), Value::scalar(0.2)],
+            )
+            .unwrap();
+        let want = ref_heat1d(&x, 0.2, b);
+        assert_eq!(out.len(), n);
+        for (a, w) in out.iter().zip(&want) {
+            assert!((a - w).abs() < 1e-4, "{a} vs {w}");
+        }
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let Some(rt) = runtime() else { return };
+        let err = rt
+            .execute("heat1d_n256_b4", &[Value::F32(vec![0.0; 3]), Value::scalar(0.2)])
+            .unwrap_err();
+        assert!(format!("{err}").contains("mismatch"), "{err}");
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn multi_output_artifact() {
+        let Some(rt) = runtime() else { return };
+        let n = 2048usize;
+        let x = vec![0.0f32; n];
+        let r: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * 0.1).collect();
+        let p = r.clone();
+        let ap = vec![0.5f32; n];
+        let alpha = 0.25f32;
+        let out = rt
+            .execute(
+                "cg_xr_update_n2048",
+                &[
+                    Value::F32(x),
+                    Value::F32(r.clone()),
+                    Value::F32(p.clone()),
+                    Value::F32(ap.clone()),
+                    Value::scalar(alpha),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        let xn = out[0].as_f32().unwrap();
+        let rn = out[1].as_f32().unwrap();
+        let rr = out[2].as_f32().unwrap();
+        for i in 0..n {
+            assert!((xn[i] - alpha * p[i]).abs() < 1e-5);
+            assert!((rn[i] - (r[i] - alpha * ap[i])).abs() < 1e-5);
+        }
+        let want_rr: f32 = rn.iter().map(|v| v * v).sum();
+        assert!((rr[0] - want_rr).abs() / want_rr.max(1e-6) < 1e-3);
+    }
+
+    #[test]
+    fn dynamic_step_count_artifact() {
+        let Some(rt) = runtime() else { return };
+        let n = 2048usize;
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 / n as f32).sin()).collect();
+        let once = rt
+            .execute_f32_1(
+                "heat1d_full_n2048",
+                &[Value::F32(x.clone()), Value::scalar(0.2), Value::scalar_i32(2)],
+            )
+            .unwrap();
+        let twice = {
+            let mid = rt
+                .execute_f32_1(
+                    "heat1d_full_n2048",
+                    &[Value::F32(x), Value::scalar(0.2), Value::scalar_i32(1)],
+                )
+                .unwrap();
+            rt.execute_f32_1(
+                "heat1d_full_n2048",
+                &[Value::F32(mid), Value::scalar(0.2), Value::scalar_i32(1)],
+            )
+            .unwrap()
+        };
+        for (a, b) in once.iter().zip(&twice) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let Some(rt) = runtime() else { return };
+        let x = vec![0.0f32; 258];
+        rt.execute_f32_1("heat1d_n256_b1", &[Value::F32(x.clone()), Value::scalar(0.1)]).unwrap();
+        rt.execute_f32_1("heat1d_n256_b1", &[Value::F32(x), Value::scalar(0.1)]).unwrap();
+        let m = rt.metrics();
+        assert_eq!(m.executions, 2);
+        assert_eq!(m.compiles, 1); // cached after first call
+        assert!(m.execute_secs > 0.0);
+    }
+}

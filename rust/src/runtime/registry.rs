@@ -1,0 +1,233 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt`, one line per
+//! AOT-compiled module:
+//!
+//! ```text
+//! heat1d_n2048_b8: f32[2064], f32[1] -> f32[2048]
+//! heat2d_h64w64_b2: f32[68x68], f32[1] -> f32[64x64]
+//! ```
+//!
+//! This module parses that contract; it is the single source of truth for
+//! the shapes the Rust side feeds PJRT, so parsing is strict and fully
+//! unit-tested (no PJRT needed).
+
+use std::collections::HashMap;
+
+/// Element types used by the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(format!("unsupported dtype {other:?}")),
+        }
+    }
+}
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse `f32[68x68]` / `i32[1]` / `f32[]` (scalar).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        let open = s.find('[').ok_or_else(|| format!("missing '[' in {s:?}"))?;
+        if !s.ends_with(']') {
+            return Err(format!("missing ']' in {s:?}"));
+        }
+        let dtype = DType::parse(&s[..open])?;
+        let body = &s[open + 1..s.len() - 1];
+        let dims = if body.is_empty() {
+            Vec::new()
+        } else {
+            body.split('x')
+                .map(|d| d.parse::<usize>().map_err(|e| format!("bad dim {d:?}: {e}")))
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        Ok(TensorSpec { dtype, dims })
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Dims as i64 (what `Literal::reshape` wants).
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.dims.iter().map(|&d| d as i64).collect()
+    }
+}
+
+impl std::fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let d = match self.dtype {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        };
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}[{}]", d, dims.join("x"))
+    }
+}
+
+/// One artifact's interface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Parse one manifest line.
+    pub fn parse_line(line: &str) -> Result<Self, String> {
+        let (name, rest) =
+            line.split_once(':').ok_or_else(|| format!("missing ':' in {line:?}"))?;
+        let (ins, outs) =
+            rest.split_once("->").ok_or_else(|| format!("missing '->' in {line:?}"))?;
+        let parse_list = |s: &str| -> Result<Vec<TensorSpec>, String> {
+            s.split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(TensorSpec::parse)
+                .collect()
+        };
+        Ok(ArtifactSpec {
+            name: name.trim().to_string(),
+            inputs: parse_list(ins)?,
+            outputs: parse_list(outs)?,
+        })
+    }
+}
+
+/// The parsed manifest: artifact name → spec.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    pub specs: HashMap<String, ArtifactSpec>,
+    pub dir: std::path::PathBuf,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (directory recorded for later `.hlo.txt` loads).
+    pub fn parse(text: &str, dir: std::path::PathBuf) -> Result<Self, String> {
+        let mut specs = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let spec = ArtifactSpec::parse_line(line)?;
+            if specs.insert(spec.name.clone(), spec.clone()).is_some() {
+                return Err(format!("duplicate artifact {:?}", spec.name));
+            }
+        }
+        Ok(Registry { specs, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec, String> {
+        self.specs.get(name).ok_or_else(|| {
+            format!("artifact {name:?} not in manifest ({} entries)", self.specs.len())
+        })
+    }
+
+    /// Path of an artifact's HLO text.
+    pub fn hlo_path(&self, name: &str) -> std::path::PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Default artifact directory: `$IMP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var_os("IMP_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|| "artifacts".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tensor_specs() {
+        assert_eq!(
+            TensorSpec::parse("f32[2064]").unwrap(),
+            TensorSpec { dtype: DType::F32, dims: vec![2064] }
+        );
+        assert_eq!(
+            TensorSpec::parse("f32[68x68]").unwrap(),
+            TensorSpec { dtype: DType::F32, dims: vec![68, 68] }
+        );
+        assert_eq!(TensorSpec::parse("i32[1]").unwrap().dtype, DType::I32);
+        assert_eq!(TensorSpec::parse("f32[]").unwrap().elems(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(TensorSpec::parse("f32").is_err());
+        assert!(TensorSpec::parse("f16[2]").is_err());
+        assert!(TensorSpec::parse("f32[2y3]").is_err());
+    }
+
+    #[test]
+    fn parse_manifest_line() {
+        let s = ArtifactSpec::parse_line(
+            "cg_xr_update_n2048: f32[2048], f32[2048], f32[2048], f32[2048], f32[1] -> f32[2048], f32[2048], f32[1]",
+        )
+        .unwrap();
+        assert_eq!(s.name, "cg_xr_update_n2048");
+        assert_eq!(s.inputs.len(), 5);
+        assert_eq!(s.outputs.len(), 3);
+        assert_eq!(s.outputs[2].elems(), 1);
+    }
+
+    #[test]
+    fn parse_registry_text() {
+        let text = "a: f32[4] -> f32[2]\n\n# comment\nb: f32[2x3], i32[1] -> f32[1]\n";
+        let r = Registry::parse(text, "artifacts".into()).unwrap();
+        assert_eq!(r.specs.len(), 2);
+        assert_eq!(r.get("b").unwrap().inputs[0].dims, vec![2, 3]);
+        assert!(r.get("missing").is_err());
+        assert!(r.hlo_path("a").ends_with("a.hlo.txt"));
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let text = "a: f32[4] -> f32[2]\na: f32[4] -> f32[2]\n";
+        assert!(Registry::parse(text, ".".into()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        if let Ok(r) = Registry::load(Registry::default_dir()) {
+            assert!(r.specs.len() >= 19, "{}", r.specs.len());
+            let h = r.get("heat1d_n2048_b8").unwrap();
+            assert_eq!(h.inputs[0].dims, vec![2064]);
+            assert_eq!(h.outputs[0].dims, vec![2048]);
+        }
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let t = TensorSpec::parse("f32[68x68]").unwrap();
+        assert_eq!(t.to_string(), "f32[68x68]");
+    }
+}

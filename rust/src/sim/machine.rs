@@ -1,0 +1,101 @@
+//! The machine model of paper §2.1/§4: `p` nodes, `t` threads per node,
+//! and the classical α/β/γ parameters.
+
+/// Machine parameters.  Times are in arbitrary consistent units; the
+/// figures use "γ = 1 op" normalization so runtimes read as op-counts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Machine {
+    /// Number of nodes ("MPI processes" in the paper's simulation).
+    pub nprocs: u32,
+    /// Threads available for the task graph on each node (figure 7/8's
+    /// x-axis).
+    pub threads: u32,
+    /// Message latency α (per message).
+    pub alpha: f64,
+    /// Per-word transmission time β.
+    pub beta: f64,
+    /// Time per task execution γ (one `f` evaluation).
+    pub gamma: f64,
+}
+
+impl Machine {
+    pub fn new(nprocs: u32, threads: u32, alpha: f64, beta: f64, gamma: f64) -> Self {
+        assert!(nprocs > 0 && threads > 0);
+        assert!(alpha >= 0.0 && beta >= 0.0 && gamma > 0.0);
+        Machine { nprocs, threads, alpha, beta, gamma }
+    }
+
+    /// The paper's figure-7 regime: latency "moderate" relative to an
+    /// operation (α of order the block factor × γ) — blocking pays off
+    /// only at very high thread counts, where the per-node compute no
+    /// longer hides the redundant work.  Matches
+    /// [`crate::config::preset_fig7`].
+    pub fn moderate_latency(nprocs: u32, threads: u32) -> Self {
+        Machine::new(nprocs, threads, 8.0, 0.1, 1.0)
+    }
+
+    /// The paper's figure-8 regime: latency ≫ b·γ — blocking pays off
+    /// from moderate thread counts.  Matches [`crate::config::preset_fig8`].
+    pub fn high_latency(nprocs: u32, threads: u32) -> Self {
+        Machine::new(nprocs, threads, 500.0, 0.1, 1.0)
+    }
+
+    /// Time to compute `k` unit tasks on this node's thread pool
+    /// (list-scheduling bound for independent uniform tasks).
+    #[inline]
+    pub fn compute_time(&self, k: usize) -> f64 {
+        (k as f64 / self.threads as f64).ceil() * self.gamma
+    }
+
+    /// Wire time of one `words`-word message.
+    #[inline]
+    pub fn message_time(&self, words: usize) -> f64 {
+        if words == 0 {
+            0.0
+        } else {
+            self.alpha + self.beta * words as f64
+        }
+    }
+
+    /// Latency/compute ratio α/γ — the architectural constant that fixes
+    /// the optimal block size (paper §2.1).
+    pub fn latency_ratio(&self) -> f64 {
+        self.alpha / self.gamma
+    }
+
+    pub fn with_threads(self, threads: u32) -> Self {
+        Machine { threads, ..self }
+    }
+
+    pub fn with_alpha(self, alpha: f64) -> Self {
+        Machine { alpha, ..self }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_time_rounds_up_to_thread_waves() {
+        let m = Machine::new(2, 4, 0.0, 0.0, 1.0);
+        assert_eq!(m.compute_time(0), 0.0);
+        assert_eq!(m.compute_time(1), 1.0);
+        assert_eq!(m.compute_time(4), 1.0);
+        assert_eq!(m.compute_time(5), 2.0);
+    }
+
+    #[test]
+    fn message_time_zero_for_empty() {
+        let m = Machine::new(2, 1, 100.0, 1.0, 1.0);
+        assert_eq!(m.message_time(0), 0.0);
+        assert_eq!(m.message_time(8), 108.0);
+    }
+
+    #[test]
+    fn regimes_ordered() {
+        let lo = Machine::moderate_latency(4, 8);
+        let hi = Machine::high_latency(4, 8);
+        assert!(hi.latency_ratio() > lo.latency_ratio());
+    }
+}

@@ -1,0 +1,301 @@
+//! Execution plans: the phase-by-phase program each processor runs.
+//!
+//! A plan is the *operational* form of a schedule — the common input
+//! format for both the discrete-event simulator ([`super::discrete`]) and
+//! the real coordinator ([`crate::coordinator`]).  Three builders cover
+//! the paper's three strategies:
+//!
+//! * [`ExecPlan::naive`] — per-level halo exchange, no overlap (the
+//!   baseline of §4's simulation);
+//! * [`ExecPlan::overlap`] — paper figure 2 / the PETSc split: post the
+//!   sends, compute the interior while messages fly, then the boundary;
+//! * [`ExecPlan::ca`] — the §3 transformation applied per superstep of
+//!   `b` levels.
+
+use crate::graph::{ProcId, TaskGraph, TaskId, TaskKind};
+use crate::transform::{
+    communication_avoiding, superstep_graphs, CaSchedule, TransformOptions,
+};
+
+/// One step in a processor's program.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Phase {
+    /// Execute these tasks (original-graph ids, pre-sorted topologically
+    /// by `(level, id)`).  Dependencies *within* the list are honoured by
+    /// the simulator/coordinator; dependencies on earlier phases are
+    /// implicit in phase order.
+    Compute(Vec<u32>),
+    /// Post a message to `to` carrying the outputs of `tasks`
+    /// (non-blocking; the values are available from earlier phases).
+    Send { to: ProcId, tasks: Vec<u32> },
+    /// Block until the message from `from` carrying `tasks` has arrived.
+    Recv { from: ProcId, tasks: Vec<u32> },
+}
+
+/// Per-processor phase program.
+#[derive(Debug, Clone, Default)]
+pub struct ProcPlan {
+    pub phases: Vec<Phase>,
+}
+
+/// A whole-machine execution plan.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub per_proc: Vec<ProcPlan>,
+    /// Human-readable strategy tag ("naive", "overlap", "ca(b=4)").
+    pub label: String,
+}
+
+impl ExecPlan {
+    /// Total tasks executed across all processors (counts redundant work).
+    pub fn executed_tasks(&self) -> usize {
+        self.per_proc
+            .iter()
+            .flat_map(|p| &p.phases)
+            .map(|ph| match ph {
+                Phase::Compute(ts) => ts.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Total messages posted.
+    pub fn messages(&self) -> usize {
+        self.per_proc
+            .iter()
+            .flat_map(|p| &p.phases)
+            .filter(|ph| matches!(ph, Phase::Send { .. }))
+            .count()
+    }
+
+    /// Total words sent.
+    pub fn words(&self) -> usize {
+        self.per_proc
+            .iter()
+            .flat_map(|p| &p.phases)
+            .map(|ph| match ph {
+                Phase::Send { tasks, .. } => tasks.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Naive per-level execution: for every level, send the boundary
+    /// values just computed, wait for the mirror receives, then compute
+    /// the level.  No overlap: receives precede all of the level's work.
+    pub fn naive(g: &TaskGraph) -> ExecPlan {
+        build_levelwise(g, false, "naive")
+    }
+
+    /// Figure-2 overlap: sends posted first, the interior (tasks with all
+    /// preds local) computed while messages fly, boundary tasks after the
+    /// receives.
+    pub fn overlap(g: &TaskGraph) -> ExecPlan {
+        build_levelwise(g, true, "overlap")
+    }
+
+    /// The paper's communication-avoiding plan: slice `g` into supersteps
+    /// of `b` levels, transform each (§3), and emit
+    /// `L1 → sends → L2 → recvs → L3` per superstep.
+    pub fn ca(g: &TaskGraph, b: u32, options: TransformOptions) -> Result<ExecPlan, String> {
+        let mut per_proc = vec![ProcPlan::default(); g.num_procs() as usize];
+        for ss in superstep_graphs(g, b)? {
+            let schedule = communication_avoiding(&ss.graph, options);
+            append_ca_superstep(&mut per_proc, &schedule, &ss.orig);
+        }
+        Ok(ExecPlan { per_proc, label: format!("ca(b={b})") })
+    }
+
+    /// A CA plan from an already-computed schedule of a single-superstep
+    /// graph (ids are the graph's own).
+    pub fn from_schedule(s: &CaSchedule) -> ExecPlan {
+        let mut per_proc = vec![ProcPlan::default(); s.per_proc.len()];
+        append_ca(&mut per_proc, s, None);
+        ExecPlan { per_proc, label: "ca".into() }
+    }
+}
+
+fn append_ca_superstep(per_proc: &mut [ProcPlan], s: &CaSchedule, orig: &[u32]) {
+    append_ca(per_proc, s, Some(orig));
+}
+
+fn append_ca(per_proc: &mut [ProcPlan], s: &CaSchedule, orig: Option<&[u32]>) {
+    let map = |ts: &[u32]| -> Vec<u32> {
+        match orig {
+            Some(o) => ts.iter().map(|&t| o[t as usize]).collect(),
+            None => ts.to_vec(),
+        }
+    };
+    for ps in &s.per_proc {
+        let plan = &mut per_proc[ps.proc.idx()];
+        if !ps.l1.is_empty() {
+            plan.phases.push(Phase::Compute(map(&ps.l1)));
+        }
+        for m in &ps.send {
+            plan.phases.push(Phase::Send { to: m.peer, tasks: map(&m.tasks) });
+        }
+        if !ps.l2.is_empty() {
+            plan.phases.push(Phase::Compute(map(&ps.l2)));
+        }
+        for m in &ps.recv {
+            plan.phases.push(Phase::Recv { from: m.peer, tasks: map(&m.tasks) });
+        }
+        if !ps.l3.is_empty() {
+            plan.phases.push(Phase::Compute(map(&ps.l3)));
+        }
+    }
+}
+
+/// Shared builder for the two level-wise strategies.
+fn build_levelwise(g: &TaskGraph, overlap: bool, label: &str) -> ExecPlan {
+    let nprocs = g.num_procs() as usize;
+    let nlevels = g.num_levels();
+    let mut per_proc = vec![ProcPlan::default(); nprocs];
+
+    // tasks_by_proc_level[p][l] = owned tasks of p at level l.
+    let mut by_pl: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); nlevels as usize]; nprocs];
+    for t in g.tasks() {
+        by_pl[g.owner(t).idx()][g.level(t) as usize].push(t.0);
+    }
+
+    for lvl in 1..nlevels {
+        // Cross-processor values consumed at this level:
+        // crossings[(from, to)] = sorted pred ids.
+        let mut crossings: std::collections::BTreeMap<(u32, u32), Vec<u32>> =
+            std::collections::BTreeMap::new();
+        for t in g.tasks() {
+            if g.level(t) != lvl || g.kind(t) != TaskKind::Compute {
+                continue;
+            }
+            let to = g.owner(t).0;
+            for &pr in g.preds(t) {
+                let from = g.owner(TaskId(pr)).0;
+                if from != to {
+                    crossings.entry((from, to)).or_default().push(pr);
+                }
+            }
+        }
+        for v in crossings.values_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+
+        for p in 0..nprocs {
+            let plan = &mut per_proc[p];
+            // Post this level's sends (values from level lvl−1, already
+            // computed or initial).
+            for ((from, to), vals) in &crossings {
+                if *from == p as u32 {
+                    plan.phases
+                        .push(Phase::Send { to: ProcId(*to), tasks: vals.clone() });
+                }
+            }
+            let mine = &by_pl[p][lvl as usize];
+            if overlap {
+                // Interior first (all preds owned locally), then receives,
+                // then the boundary tasks.
+                let (interior, boundary): (Vec<u32>, Vec<u32>) =
+                    mine.iter().partition(|&&t| {
+                        g.preds(TaskId(t))
+                            .iter()
+                            .all(|&pr| g.owner(TaskId(pr)).0 == p as u32)
+                    });
+                if !interior.is_empty() {
+                    plan.phases.push(Phase::Compute(interior));
+                }
+                for ((from, to), vals) in &crossings {
+                    if *to == p as u32 {
+                        plan.phases
+                            .push(Phase::Recv { from: ProcId(*from), tasks: vals.clone() });
+                    }
+                }
+                if !boundary.is_empty() {
+                    plan.phases.push(Phase::Compute(boundary));
+                }
+            } else {
+                // Naive: all receives, then the whole level.
+                for ((from, to), vals) in &crossings {
+                    if *to == p as u32 {
+                        plan.phases
+                            .push(Phase::Recv { from: ProcId(*from), tasks: vals.clone() });
+                    }
+                }
+                if !mine.is_empty() {
+                    plan.phases.push(Phase::Compute(mine.clone()));
+                }
+            }
+        }
+    }
+    ExecPlan { per_proc, label: label.to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::heat1d_graph;
+    use crate::transform::HaloMode;
+
+    #[test]
+    fn naive_plan_message_count() {
+        // 2 procs, 3 levels: one crossing each way per level = 6 sends.
+        let g = heat1d_graph(16, 3, 2);
+        let plan = ExecPlan::naive(&g);
+        assert_eq!(plan.messages(), 6);
+        assert_eq!(plan.executed_tasks(), g.num_compute_tasks());
+    }
+
+    #[test]
+    fn overlap_plan_interleaves_interior() {
+        let g = heat1d_graph(16, 2, 2);
+        let plan = ExecPlan::overlap(&g);
+        // p0's phases per level: Send, Compute(interior), Recv, Compute(boundary)
+        let p0 = &plan.per_proc[0];
+        assert!(matches!(p0.phases[0], Phase::Send { .. }));
+        assert!(matches!(p0.phases[1], Phase::Compute(_)));
+        assert!(matches!(p0.phases[2], Phase::Recv { .. }));
+        assert!(matches!(p0.phases[3], Phase::Compute(_)));
+        assert_eq!(plan.executed_tasks(), g.num_compute_tasks());
+    }
+
+    #[test]
+    fn ca_plan_message_count_scales_with_supersteps() {
+        let g = heat1d_graph(32, 8, 2);
+        let p1 = ExecPlan::ca(&g, 8, TransformOptions::default()).unwrap();
+        let p2 = ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap();
+        // One superstep: 2 messages; four supersteps: 8.
+        assert_eq!(p1.messages(), 2);
+        assert_eq!(p2.messages(), 8);
+    }
+
+    #[test]
+    fn ca_plan_has_redundant_tasks() {
+        let g = heat1d_graph(32, 4, 4);
+        let plan = ExecPlan::ca(&g, 4, TransformOptions { halo: HaloMode::Level0Only }).unwrap();
+        assert!(plan.executed_tasks() > g.num_compute_tasks());
+    }
+
+    #[test]
+    fn ca_plan_ids_are_original() {
+        let g = heat1d_graph(16, 4, 2);
+        let plan = ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap();
+        let max_id = g.len() as u32;
+        for pp in &plan.per_proc {
+            for ph in &pp.phases {
+                let ts = match ph {
+                    Phase::Compute(t) | Phase::Send { tasks: t, .. } | Phase::Recv { tasks: t, .. } => t,
+                };
+                assert!(ts.iter().all(|&t| t < max_id));
+            }
+        }
+    }
+
+    #[test]
+    fn naive_vs_ca_words() {
+        // CA with Level0Only sends b ghost points once per superstep;
+        // naive sends 1 point per level.  Words comparable, messages fewer.
+        let g = heat1d_graph(64, 8, 2);
+        let naive = ExecPlan::naive(&g);
+        let ca = ExecPlan::ca(&g, 8, TransformOptions { halo: HaloMode::Level0Only }).unwrap();
+        assert!(ca.messages() < naive.messages());
+    }
+}

@@ -1,0 +1,153 @@
+//! Concrete problem generators: the grids and matrices whose task graphs
+//! the paper transforms.
+//!
+//! Everything here reduces to [`crate::imp::Program`] — the generators
+//! assemble the right distributions and signatures, so the transformation
+//! never sees anything problem-specific.
+
+mod csr;
+mod partition;
+
+pub use csr::CsrMatrix;
+pub use partition::{bisect, block_assign, quality, to_distribution, PartitionQuality};
+
+use crate::graph::TaskGraph;
+use crate::imp::{Distribution, Program, Signature};
+
+/// The paper's running example (eq. (1)): `m` steps of a radius-`r`
+/// 1-D stencil over `n` points, block-distributed over `p` processors.
+/// `r = 1` is the 3-point heat update.
+pub fn heat1d_program(n: u64, m: u32, p: u32, r: u32) -> Program {
+    Program::new(Distribution::block(n, p)).iterate("heat1d", Signature::stencil_radius(r), m)
+}
+
+/// Convenience: the unrolled graph of [`heat1d_program`].
+pub fn heat1d_graph(n: u64, m: u32, p: u32) -> TaskGraph {
+    heat1d_program(n, m, p, 1).unroll()
+}
+
+/// `m` steps of the 2-D five-point stencil on an `h × w` grid (row-major
+/// flattening), distributed over a `px × py` processor grid.
+pub fn heat2d_program(h: u64, w: u64, m: u32, px: u32, py: u32) -> Program {
+    let dist = block2d(h, w, px, py);
+    let sig = five_point_signature(h, w);
+    Program::new(dist).iterate("heat2d", sig, m)
+}
+
+/// Convenience: the unrolled graph of [`heat2d_program`].
+pub fn heat2d_graph(h: u64, w: u64, m: u32, px: u32, py: u32) -> TaskGraph {
+    heat2d_program(h, w, m, px, py).unroll()
+}
+
+/// `m` repeated SpMVs with an arbitrary CSR matrix: the paper's motivating
+/// irregular workload ("repeated sequence of sparse matrix-vector
+/// products").
+pub fn spmv_program(a: &CsrMatrix, m: u32, p: u32) -> Program {
+    Program::new(Distribution::block(a.n as u64, p)).iterate("spmv", a.signature(), m)
+}
+
+/// 2-D block distribution over a row-major `h × w` grid: processor
+/// `(qx, qy)` owns the cartesian block, flattened.
+pub fn block2d(h: u64, w: u64, px: u32, py: u32) -> Distribution {
+    use crate::imp::{block_bounds, IndexSet};
+    let mut parts = Vec::with_capacity((px * py) as usize);
+    for qr in 0..px {
+        let (rlo, rhi) = block_bounds(h, px, qr);
+        for qc in 0..py {
+            let (clo, chi) = block_bounds(w, py, qc);
+            let mut v = Vec::with_capacity(((rhi - rlo) * (chi - clo)) as usize);
+            for rr in rlo..rhi {
+                for cc in clo..chi {
+                    v.push(rr * w + cc);
+                }
+            }
+            parts.push(IndexSet::from_indices(v));
+        }
+    }
+    Distribution::irregular(h * w, parts).expect("block2d partitions the grid")
+}
+
+/// The five-point-cross dependence pattern on a flattened `h × w` grid as
+/// a sparse signature (offsets ±1 are only valid within a row, so a plain
+/// 1-D stencil signature cannot express it).
+pub fn five_point_signature(h: u64, w: u64) -> Signature {
+    let n = (h * w) as usize;
+    let mut rowptr = Vec::with_capacity(n + 1);
+    let mut colidx = Vec::with_capacity(n * 5);
+    rowptr.push(0u32);
+    for k in 0..n as u64 {
+        let (r, c) = (k / w, k % w);
+        if r > 0 {
+            colidx.push((k - w) as u32);
+        }
+        if c > 0 {
+            colidx.push((k - 1) as u32);
+        }
+        colidx.push(k as u32);
+        if c + 1 < w {
+            colidx.push((k + 1) as u32);
+        }
+        if r + 1 < h {
+            colidx.push((k + w) as u32);
+        }
+        rowptr.push(colidx.len() as u32);
+    }
+    Signature::Sparse { rowptr, colidx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ProcId, TaskId};
+
+    #[test]
+    fn heat1d_graph_shape() {
+        let g = heat1d_graph(12, 3, 4);
+        assert_eq!(g.len(), 12 * 4);
+        assert_eq!(g.num_levels(), 4);
+        assert_eq!(g.num_procs(), 4);
+        // Every proc owns 3 points per level.
+        for p in 0..4 {
+            assert_eq!(g.owned_by(ProcId(p)).len(), 3 * 4);
+        }
+    }
+
+    #[test]
+    fn heat2d_graph_shape() {
+        let g = heat2d_graph(4, 6, 2, 2, 2);
+        assert_eq!(g.len(), 24 * 3);
+        assert_eq!(g.num_procs(), 4);
+        // Interior point dependence count is 5.
+        // point (1,1) = index 7 at level 1 → id 24 + 7.
+        assert_eq!(g.preds(TaskId(24 + 7)).len(), 5);
+        // corner (0,0) has 3 preds.
+        assert_eq!(g.preds(TaskId(24)).len(), 3);
+    }
+
+    #[test]
+    fn block2d_partitions() {
+        let d = block2d(4, 6, 2, 3);
+        let total: usize = (0..6).map(|p| d.owned(ProcId(p)).len()).sum();
+        assert_eq!(total, 24);
+        // proc (0,0) owns rows 0-1, cols 0-1 → {0,1,6,7}
+        assert_eq!(d.owned(ProcId(0)).to_vec(), vec![0, 1, 6, 7]);
+    }
+
+    #[test]
+    fn five_point_matches_laplace2d_pattern() {
+        let sig = five_point_signature(3, 3);
+        let a = CsrMatrix::laplace2d(3, 3);
+        for i in 0..9usize {
+            let from_sig = sig.of_index(i as u64, 9);
+            let from_mat: Vec<u64> = a.row_cols(i).iter().map(|&c| c as u64).collect();
+            assert_eq!(from_sig, from_mat, "row {i}");
+        }
+    }
+
+    #[test]
+    fn spmv_graph_edges_match_nnz() {
+        let a = CsrMatrix::laplace1d(10);
+        let g = spmv_program(&a, 2, 2).unroll();
+        assert_eq!(g.num_edges(), 2 * a.nnz());
+    }
+}

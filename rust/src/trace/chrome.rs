@@ -1,0 +1,73 @@
+//! Chrome-trace (about://tracing, Perfetto) export of simulation spans.
+//!
+//! Hand-rolled JSON (no serde in the vendored crate set): each busy span
+//! becomes a complete ("X") event; processors map to pids, threads to
+//! tids; waits are colourable by name.
+
+use crate::sim::BusySpan;
+
+/// Render spans as a Chrome trace JSON array (`traceEvents` format).
+/// Times are interpreted as microseconds (the format's unit).
+pub fn chrome_trace_json(spans: &[BusySpan]) -> String {
+    let mut out = String::from("[\n");
+    for (i, s) in spans.iter().enumerate() {
+        let dur = (s.end - s.start).max(0.0);
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"ph\": \"X\", \"pid\": {}, \"tid\": {}, \"ts\": {:.3}, \"dur\": {:.3}}}{}\n",
+            s.what,
+            s.proc,
+            s.thread,
+            s.start,
+            dur,
+            if i + 1 == spans.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Write the Chrome trace to a file.
+pub fn write_chrome_trace(spans: &[BusySpan], path: &str) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, chrome_trace_json(spans))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(p: u32, t: u32, a: f64, b: f64, what: &'static str) -> BusySpan {
+        BusySpan { proc: p, thread: t, start: a, end: b, what }
+    }
+
+    #[test]
+    fn json_shape() {
+        let spans = vec![span(0, 0, 0.0, 5.0, "compute"), span(1, 2, 5.0, 9.0, "wait")];
+        let j = chrome_trace_json(&spans);
+        assert!(j.starts_with("[\n"));
+        assert!(j.contains("\"ph\": \"X\""));
+        assert!(j.contains("\"pid\": 1"));
+        assert!(j.contains("\"tid\": 2"));
+        assert!(j.contains("\"dur\": 4.000"));
+        // valid-ish JSON: balanced brackets, one comma between two events.
+        assert_eq!(j.matches('{').count(), 2);
+        assert_eq!(j.matches("},").count(), 1);
+    }
+
+    #[test]
+    fn empty_trace() {
+        assert_eq!(chrome_trace_json(&[]), "[\n]\n");
+    }
+
+    #[test]
+    fn from_real_simulation() {
+        use crate::sim::{simulate, ExecPlan, Machine};
+        use crate::stencil::heat1d_graph;
+        let g = heat1d_graph(32, 4, 2);
+        let r = simulate(&g, &ExecPlan::naive(&g), &Machine::new(2, 2, 10.0, 0.1, 1.0), true);
+        let j = chrome_trace_json(&r.spans);
+        assert!(j.matches('{').count() >= g.num_compute_tasks());
+    }
+}

@@ -1,0 +1,201 @@
+//! Execution traces: ASCII Gantt charts, Chrome-trace export, and CSV
+//! series for the figures.
+
+mod chrome;
+
+pub use chrome::{chrome_trace_json, write_chrome_trace};
+
+use crate::sim::{BusySpan, SimResult};
+use crate::util::Csv;
+
+/// Render per-processor thread activity as an ASCII Gantt chart.
+///
+/// Each row is one (proc, thread); time is quantized into `width` columns;
+/// `#` marks compute, `.` marks waiting in a receive, space is idle.
+pub fn gantt_ascii(spans: &[BusySpan], total_time: f64, width: usize) -> String {
+    if spans.is_empty() || total_time <= 0.0 {
+        return String::from("(no spans recorded)\n");
+    }
+    let mut keys: Vec<(u32, u32)> = spans.iter().map(|s| (s.proc, s.thread)).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let scale = width as f64 / total_time;
+    let mut out = String::new();
+    out.push_str(&format!("time 0 .. {total_time:.1} ({width} cols)\n"));
+    for (p, t) in keys {
+        let mut row = vec![b' '; width];
+        for s in spans.iter().filter(|s| s.proc == p && s.thread == t) {
+            let a = ((s.start * scale) as usize).min(width - 1);
+            let b = ((s.end * scale).ceil() as usize).clamp(a + 1, width);
+            let ch = if s.what == "wait" { b'.' } else { b'#' };
+            for c in &mut row[a..b] {
+                // compute wins over wait in shared cells
+                if *c != b'#' {
+                    *c = ch;
+                }
+            }
+        }
+        out.push_str(&format!("p{p:<2}t{t:<2} |{}|\n", String::from_utf8(row).unwrap()));
+    }
+    out
+}
+
+/// Summarize a [`SimResult`] in one line (used by the CLI and examples).
+pub fn summary_line(label: &str, r: &SimResult) -> String {
+    format!(
+        "{label:<12} time {:>12.1}   msgs {:>6}   words {:>8}   max wait {:>10.1}",
+        r.total_time,
+        r.messages,
+        r.words,
+        r.proc_wait.iter().copied().fold(0.0, f64::max),
+    )
+}
+
+/// A figure series: one x column and one y column per labelled strategy.
+pub struct FigureSeries {
+    pub xlabel: String,
+    pub labels: Vec<String>,
+    pub rows: Vec<(f64, Vec<f64>)>,
+}
+
+impl FigureSeries {
+    pub fn new(xlabel: &str, labels: &[&str]) -> Self {
+        FigureSeries {
+            xlabel: xlabel.to_string(),
+            labels: labels.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.labels.len());
+        self.rows.push((x, ys));
+    }
+
+    /// Render as CSV (header = xlabel + series labels).
+    pub fn to_csv(&self) -> String {
+        let mut header: Vec<&str> = vec![self.xlabel.as_str()];
+        header.extend(self.labels.iter().map(|s| s.as_str()));
+        let mut csv = Csv::new(&header);
+        for (x, ys) in &self.rows {
+            let mut row = vec![*x];
+            row.extend(ys.iter().copied());
+            csv.rowf(&row);
+        }
+        csv.finish()
+    }
+
+    /// Render as an ASCII table (fixed-width columns, for terminal output).
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{:>10}", self.xlabel));
+        for l in &self.labels {
+            out.push_str(&format!("{l:>14}"));
+        }
+        out.push('\n');
+        for (x, ys) in &self.rows {
+            out.push_str(&format!("{x:>10.0}"));
+            for y in ys {
+                out.push_str(&format!("{y:>14.1}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Crude ASCII line plot (log-y), one glyph per series.
+    pub fn to_ascii_plot(&self, height: usize) -> String {
+        if self.rows.is_empty() {
+            return String::new();
+        }
+        let glyphs = ['*', 'o', '+', 'x', '@', '%', '&', '~'];
+        let all: Vec<f64> =
+            self.rows.iter().flat_map(|(_, ys)| ys.iter().copied()).filter(|y| *y > 0.0).collect();
+        let (lo, hi) = all
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &y| (lo.min(y), hi.max(y)));
+        let (llo, lhi) = (lo.ln(), hi.ln().max(lo.ln() + 1e-9));
+        let cols = self.rows.len();
+        let mut grid = vec![vec![' '; cols]; height];
+        for (ci, (_, ys)) in self.rows.iter().enumerate() {
+            for (si, &y) in ys.iter().enumerate() {
+                if y <= 0.0 {
+                    continue;
+                }
+                let fr = (y.ln() - llo) / (lhi - llo);
+                let r = ((1.0 - fr) * (height - 1) as f64).round() as usize;
+                grid[r][ci] = glyphs[si % glyphs.len()];
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("log-scale runtime: {:.1} (top) .. {:.1} (bottom)\n", hi, lo));
+        for row in grid {
+            out.push('|');
+            out.extend(row);
+            out.push('\n');
+        }
+        out.push('+');
+        out.extend(std::iter::repeat_n('-', cols));
+        out.push('\n');
+        let legend: Vec<String> = self
+            .labels
+            .iter()
+            .enumerate()
+            .map(|(i, l)| format!("{} {}", glyphs[i % glyphs.len()], l))
+            .collect();
+        out.push_str(&format!("x: {} | {}\n", self.xlabel, legend.join("  ")));
+        out
+    }
+
+    /// Write the CSV to `path`.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(p: u32, t: u32, a: f64, b: f64, what: &'static str) -> BusySpan {
+        BusySpan { proc: p, thread: t, start: a, end: b, what }
+    }
+
+    #[test]
+    fn gantt_renders_rows() {
+        let spans =
+            vec![span(0, 0, 0.0, 5.0, "compute"), span(1, 0, 5.0, 10.0, "wait")];
+        let g = gantt_ascii(&spans, 10.0, 20);
+        assert!(g.contains("p0 t0") || g.contains("p0"));
+        assert!(g.contains('#'));
+        assert!(g.contains('.'));
+    }
+
+    #[test]
+    fn gantt_empty() {
+        assert!(gantt_ascii(&[], 0.0, 10).contains("no spans"));
+    }
+
+    #[test]
+    fn series_csv_roundtrip() {
+        let mut f = FigureSeries::new("threads", &["naive", "ca"]);
+        f.push(1.0, vec![100.0, 80.0]);
+        f.push(2.0, vec![60.0, 30.0]);
+        let csv = f.to_csv();
+        assert!(csv.starts_with("threads,naive,ca\n"));
+        assert!(csv.contains("2,60,30"));
+    }
+
+    #[test]
+    fn series_table_and_plot() {
+        let mut f = FigureSeries::new("threads", &["naive"]);
+        f.push(1.0, vec![100.0]);
+        f.push(2.0, vec![10.0]);
+        assert!(f.to_table().contains("naive"));
+        let plot = f.to_ascii_plot(5);
+        assert!(plot.contains('*'));
+    }
+}

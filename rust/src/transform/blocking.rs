@@ -1,0 +1,220 @@
+//! Step blocking: slicing an `M`-level task graph into supersteps of `b`
+//! levels each.
+//!
+//! The paper's scheme applies the §3 transformation *per block of b steps*
+//! (§2: "b is the number of steps we block together").  For an arbitrary
+//! graph this means: partition tasks by `⌈level / b⌉`, make the last level
+//! of superstep `k` the `Input` level of superstep `k+1`, and transform
+//! each superstep independently.  Latency is then paid `M/b` times instead
+//! of `M` times — the `(M/b)·α` term of the §2.1 cost model.
+
+use crate::graph::{GraphBuilder, TaskGraph, TaskId, TaskKind};
+
+/// One superstep sliced out of a larger graph.
+#[derive(Debug)]
+pub struct Superstep {
+    /// The sliced graph: levels `[lo, hi]` of the original, with level
+    /// `lo` tasks demoted to `Input`.
+    pub graph: TaskGraph,
+    /// Original task id for every task in `graph` (by new id).
+    pub orig: Vec<u32>,
+    /// Level range `[lo, hi]` in the original graph.
+    pub lo: u32,
+    pub hi: u32,
+}
+
+/// Slice `g` into supersteps of `b` levels each.
+///
+/// Superstep `k` contains original levels `(k·b, (k+1)·b]` as compute
+/// tasks, plus an `Input` layer holding the superstep's **live-in set**:
+/// every earlier task (level ≤ k·b) with a direct successor inside the
+/// superstep.  For level-by-level graphs (unrolled
+/// [`crate::imp::Program`]s) the live-ins are exactly the level-`k·b`
+/// values; for general DAGs with level-skipping edges, older values are
+/// carried too — their owners hold them from the superstep that computed
+/// them, so treating them as that owner's `L^(0)` is sound.
+pub fn superstep_graphs(g: &TaskGraph, b: u32) -> Result<Vec<Superstep>, String> {
+    assert!(b > 0);
+    let max_level = g.num_levels().saturating_sub(1);
+    if max_level == 0 {
+        // Inputs only (or empty): one trivial superstep.
+        return Ok(vec![slice(g, 0, 0)?]);
+    }
+    let nblocks = max_level.div_ceil(b);
+    let mut out = Vec::with_capacity(nblocks as usize);
+    for k in 0..nblocks {
+        let lo = k * b;
+        let hi = ((k + 1) * b).min(max_level);
+        out.push(slice(g, lo, hi)?);
+    }
+    Ok(out)
+}
+
+fn slice(g: &TaskGraph, lo: u32, hi: u32) -> Result<Superstep, String> {
+    let mut new_id = vec![u32::MAX; g.len()];
+    let mut orig = Vec::new();
+    let mut bld = GraphBuilder::new(g.num_procs());
+
+    // Live-in inputs: boundary-level tasks, plus any older task a
+    // superstep-interior task reads directly (level-skipping edges).
+    for t in g.tasks() {
+        let lvl = g.level(t);
+        let live_in = lvl == lo
+            || (lvl < lo
+                && g.succs(t).iter().any(|&s| {
+                    let sl = g.level(TaskId(s));
+                    sl > lo && sl <= hi
+                }));
+        if !live_in {
+            continue;
+        }
+        let id = bld.add_input(g.owner(t), g.item(t));
+        new_id[t.idx()] = id.0;
+        orig.push(t.0);
+    }
+    // Interior compute tasks.
+    for t in g.tasks() {
+        let lvl = g.level(t);
+        if lvl <= lo || lvl > hi {
+            continue;
+        }
+        let id = bld.add_task(g.owner(t), lvl - lo, g.item(t), &[]);
+        new_id[t.idx()] = id.0;
+        orig.push(t.0);
+    }
+    // Edges: every pred of an interior task is interior or live-in.
+    for t in g.tasks() {
+        let lvl = g.level(t);
+        if lvl <= lo || lvl > hi {
+            continue;
+        }
+        for &pr in g.preds(t) {
+            debug_assert_ne!(new_id[pr as usize], u32::MAX, "live-in analysis missed t{pr}");
+            bld.add_pred(TaskId(new_id[t.idx()]), TaskId(new_id[pr as usize]));
+        }
+    }
+    let graph = bld.finish().map_err(|e| e.to_string())?;
+    Ok(Superstep { graph, orig, lo, hi })
+}
+
+impl Superstep {
+    /// Levels of compute work in this superstep.
+    pub fn depth(&self) -> u32 {
+        self.hi - self.lo
+    }
+
+    /// Map a task of the sliced graph back to the original graph.
+    pub fn original_task(&self, t: TaskId) -> TaskId {
+        TaskId(self.orig[t.idx()])
+    }
+
+    /// Owner-preserving sanity check against the source graph.
+    pub fn validate_against(&self, g: &TaskGraph) -> Result<(), String> {
+        for t in self.graph.tasks() {
+            let o = self.original_task(t);
+            if self.graph.owner(t) != g.owner(o) {
+                return Err(format!("owner mismatch for {t}"));
+            }
+            if self.graph.item(t) != g.item(o) {
+                return Err(format!("item mismatch for {t}"));
+            }
+            let expect_kind =
+                if g.level(o) <= self.lo { TaskKind::Input } else { g.kind(o) };
+            if self.graph.kind(t) != expect_kind {
+                return Err(format!("kind mismatch for {t}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Owners of the final level of a superstep — the data that seeds the next
+/// superstep's `L^(0)`.  Returned as (proc → sorted original ids).
+pub fn final_level_by_proc(g: &TaskGraph, ss: &Superstep) -> Vec<Vec<u32>> {
+    let mut out = vec![Vec::new(); g.num_procs() as usize];
+    for t in ss.graph.tasks() {
+        if ss.graph.level(t) == ss.depth() {
+            let o = ss.original_task(t);
+            out[g.owner(o).idx() as usize].push(o.0);
+        }
+    }
+    for v in &mut out {
+        v.sort_unstable();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::heat1d_graph;
+    use crate::transform::{check_schedule, communication_avoiding_default};
+
+    #[test]
+    fn slices_cover_all_levels() {
+        let g = heat1d_graph(16, 8, 2);
+        let ss = superstep_graphs(&g, 3).unwrap();
+        assert_eq!(ss.len(), 3); // levels 0-3, 3-6, 6-8
+        assert_eq!((ss[0].lo, ss[0].hi), (0, 3));
+        assert_eq!((ss[1].lo, ss[1].hi), (3, 6));
+        assert_eq!((ss[2].lo, ss[2].hi), (6, 8));
+        for s in &ss {
+            s.validate_against(&g).unwrap();
+        }
+    }
+
+    #[test]
+    fn superstep_sizes() {
+        let g = heat1d_graph(10, 4, 2);
+        let ss = superstep_graphs(&g, 2).unwrap();
+        // Each superstep: boundary level (10 inputs) + 2 compute levels.
+        for s in &ss {
+            assert_eq!(s.graph.len(), 30);
+            assert_eq!(s.graph.num_compute_tasks(), 20);
+        }
+    }
+
+    #[test]
+    fn exact_division() {
+        let g = heat1d_graph(8, 8, 2);
+        let ss = superstep_graphs(&g, 4).unwrap();
+        assert_eq!(ss.len(), 2);
+        assert_eq!(ss[1].depth(), 4);
+    }
+
+    #[test]
+    fn b_larger_than_depth_gives_one_block() {
+        let g = heat1d_graph(8, 3, 2);
+        let ss = superstep_graphs(&g, 10).unwrap();
+        assert_eq!(ss.len(), 1);
+        assert_eq!(ss[0].depth(), 3);
+    }
+
+    #[test]
+    fn transformed_supersteps_are_well_formed() {
+        let g = heat1d_graph(32, 9, 4);
+        for ss in superstep_graphs(&g, 3).unwrap() {
+            let s = communication_avoiding_default(&ss.graph);
+            check_schedule(&ss.graph, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn final_level_partition() {
+        let g = heat1d_graph(12, 4, 3);
+        let ss = superstep_graphs(&g, 2).unwrap();
+        let by_proc = final_level_by_proc(&g, &ss[0]);
+        let total: usize = by_proc.iter().map(Vec::len).sum();
+        assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn inputs_only_graph() {
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new(1);
+        b.add_input(crate::graph::ProcId(0), 0);
+        let g = b.finish().unwrap();
+        let ss = superstep_graphs(&g, 2).unwrap();
+        assert_eq!(ss.len(), 1);
+    }
+}

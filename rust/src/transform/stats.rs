@@ -1,0 +1,186 @@
+//! Redundancy and communication accounting for transformed schedules.
+//!
+//! Quantifies the trade the paper makes explicit in §2.1: redundant work
+//! (`γ`-cost) bought in exchange for fewer messages (`α`-cost).
+
+use super::CaSchedule;
+use crate::graph::TaskGraph;
+
+/// Aggregate statistics of a [`CaSchedule`] against its source graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleStats {
+    /// Compute tasks in the original graph.
+    pub graph_tasks: usize,
+    /// Task executions in the transformed schedule (`Σ_p |L_p^(4) ∪ L_p^(3)|`).
+    pub executed_tasks: usize,
+    /// `executed − graph`: the paper's redundant computation.
+    pub redundant_tasks: usize,
+    /// `executed / graph`.
+    pub redundancy_factor: f64,
+    /// Point-to-point messages per execution of the schedule.
+    pub messages: usize,
+    /// Total words communicated.
+    pub words: usize,
+    /// Messages a naive per-level halo exchange would need (for the same
+    /// graph): one message per (proc, peer, level) with boundary traffic.
+    pub naive_messages: usize,
+    /// Words the naive exchange would move (every cross-processor edge's
+    /// value travels once per level).
+    pub naive_words: usize,
+    /// Largest `L^(2)` (the overlap budget — how much compute is available
+    /// to hide the latency behind).
+    pub max_l2: usize,
+    /// Smallest `L^(2)`.
+    pub min_l2: usize,
+}
+
+impl ScheduleStats {
+    /// Compute statistics for `s` against its source graph `g`.
+    pub fn compute(g: &TaskGraph, s: &CaSchedule) -> Self {
+        let graph_tasks = g.num_compute_tasks();
+        let executed_tasks = s.total_computed();
+        let messages = s.total_messages();
+        let words = s.total_words();
+
+        // Naive exchange: for every compute task, every predecessor owned
+        // by a different processor implies that value crossing the network
+        // at that level.  Messages are aggregated per (owner(pred) →
+        // owner(task), level(task)) pair, words per crossing value.
+        let mut naive_words = 0usize;
+        let mut pairs = std::collections::HashSet::new();
+        for t in g.tasks() {
+            if g.kind(t) != crate::graph::TaskKind::Compute {
+                continue;
+            }
+            let to = g.owner(t);
+            for &pr in g.preds(t) {
+                let from = g.owner(crate::graph::TaskId(pr));
+                if from != to {
+                    naive_words += 1;
+                    pairs.insert((from.0, to.0, g.level(t)));
+                }
+            }
+        }
+
+        let (mut max_l2, mut min_l2) = (0usize, usize::MAX);
+        for ps in &s.per_proc {
+            max_l2 = max_l2.max(ps.l2.len());
+            min_l2 = min_l2.min(ps.l2.len());
+        }
+        if s.per_proc.is_empty() {
+            min_l2 = 0;
+        }
+
+        ScheduleStats {
+            graph_tasks,
+            executed_tasks,
+            redundant_tasks: executed_tasks.saturating_sub(graph_tasks),
+            redundancy_factor: if graph_tasks == 0 {
+                1.0
+            } else {
+                executed_tasks as f64 / graph_tasks as f64
+            },
+            messages,
+            words,
+            naive_messages: pairs.len(),
+            naive_words,
+            max_l2,
+            min_l2,
+        }
+    }
+
+    /// Message reduction factor vs. the naive per-level exchange.
+    pub fn message_reduction(&self) -> f64 {
+        if self.messages == 0 {
+            f64::INFINITY
+        } else {
+            self.naive_messages as f64 / self.messages as f64
+        }
+    }
+
+    /// Render a one-page human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "graph tasks          {:>12}\n\
+             executed tasks       {:>12}\n\
+             redundant tasks      {:>12}  (factor {:.4})\n\
+             messages             {:>12}  (naive {}, reduction {:.2}x)\n\
+             words                {:>12}  (naive {})\n\
+             L2 overlap budget    {:>12}  min {} max\n",
+            self.graph_tasks,
+            self.executed_tasks,
+            self.redundant_tasks,
+            self.redundancy_factor,
+            self.messages,
+            self.naive_messages,
+            self.message_reduction(),
+            self.words,
+            self.naive_words,
+            self.min_l2,
+            self.max_l2,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::heat1d_graph;
+    use crate::transform::{communication_avoiding, communication_avoiding_default, HaloMode, TransformOptions};
+
+    #[test]
+    fn stats_on_single_proc_are_trivial() {
+        let g = heat1d_graph(32, 4, 1);
+        let s = communication_avoiding_default(&g);
+        let st = ScheduleStats::compute(&g, &s);
+        assert_eq!(st.redundant_tasks, 0);
+        assert_eq!(st.messages, 0);
+        assert_eq!(st.naive_messages, 0);
+        assert!((st.redundancy_factor - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blocking_reduces_messages() {
+        // b = 4 levels in one superstep: naive needs a message per level
+        // per boundary; CA needs one per boundary.
+        let g = heat1d_graph(64, 4, 4);
+        let s = communication_avoiding_default(&g);
+        let st = ScheduleStats::compute(&g, &s);
+        assert!(st.messages < st.naive_messages, "{st:?}");
+        assert!(st.message_reduction() > 2.0, "{st:?}");
+        assert!(st.redundant_tasks > 0);
+    }
+
+    #[test]
+    fn redundancy_grows_with_depth() {
+        let mk = |m| {
+            let g = heat1d_graph(128, m, 4);
+            let s = communication_avoiding(&g, TransformOptions { halo: HaloMode::Level0Only });
+            ScheduleStats::compute(&g, &s).redundant_tasks as f64 / m as f64
+        };
+        // Redundant work per level grows with block depth (≈ b²/2 per
+        // boundary, paper §2.1).
+        assert!(mk(8) > mk(4));
+        assert!(mk(4) > mk(2));
+    }
+
+    #[test]
+    fn naive_words_count_cross_edges() {
+        // 2 procs, 1 level, radius 1: one value crosses each way.
+        let g = heat1d_graph(8, 1, 2);
+        let s = communication_avoiding_default(&g);
+        let st = ScheduleStats::compute(&g, &s);
+        assert_eq!(st.naive_words, 2);
+        assert_eq!(st.naive_messages, 2);
+    }
+
+    #[test]
+    fn report_contains_key_figures() {
+        let g = heat1d_graph(32, 2, 2);
+        let s = communication_avoiding_default(&g);
+        let st = ScheduleStats::compute(&g, &s);
+        let r = st.report();
+        assert!(r.contains("redundant"));
+        assert!(r.contains("messages"));
+    }
+}

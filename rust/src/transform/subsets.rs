@@ -1,0 +1,330 @@
+//! The subset derivation — the formal content of paper §3.
+
+use super::{CaSchedule, HaloMode, Msg, ProcSets, TransformOptions};
+use crate::graph::{ProcId, TaskGraph, TaskId, TaskKind};
+use crate::util::{difference_sorted, Stamp};
+use std::collections::HashMap;
+
+/// Derive the full schedule.  See module docs for the set equations.
+pub fn derive(g: &TaskGraph, options: TransformOptions) -> CaSchedule {
+    let nprocs = g.num_procs() as usize;
+    let n = g.len();
+
+    // ---- Pass 0: ownership partition -------------------------------------
+    let mut owned: Vec<Vec<u32>> = vec![Vec::new(); nprocs];
+    let mut l0: Vec<Vec<u32>> = vec![Vec::new(); nprocs];
+    for t in g.tasks() {
+        let p = g.owner(t).idx();
+        match g.kind(t) {
+            TaskKind::Input => l0[p].push(t.0),
+            TaskKind::Compute => owned[p].push(t.0),
+        }
+    }
+
+    // ---- Pass 1: per-processor closures L^(5) and fixpoints L^(4) --------
+    let mut st_a = Stamp::new(n);
+    let mut st_b = Stamp::new(n);
+    let mut remaining = vec![0u32; n]; // counter scratch reused across procs
+    let mut l5: Vec<Vec<u32>> = Vec::with_capacity(nprocs);
+    let mut l4: Vec<Vec<u32>> = Vec::with_capacity(nprocs);
+    for p in 0..nprocs {
+        // Seeds are the *owned* result tasks; inputs join the closure via
+        // predecessor edges automatically.
+        let closure = g.backward_closure(&owned[p], &mut st_a);
+        let fix =
+            g.local_fixpoint_with(&l0[p], &closure, &mut st_a, &mut st_b, &mut remaining);
+        l5.push(closure);
+        l4.push(fix);
+    }
+
+    // ---- Pass 2: who needs what -------------------------------------------
+    // needs[q] = L_q^(5) − L_q^(0) − L_q^(4): values q cannot produce from
+    // its own initial data; they arrive by message or are recomputed in L^(3).
+    // needed_by: task -> sorted list of needy processors.
+    let mut needs: Vec<Vec<u32>> = Vec::with_capacity(nprocs);
+    let mut needed_by: HashMap<u32, Vec<u32>> = HashMap::new();
+    for q in 0..nprocs {
+        let mut nd = difference_sorted(&l5[q], &l4[q]);
+        nd = difference_sorted(&nd, &l0[q]);
+        for &t in &nd {
+            needed_by.entry(t).or_default().push(q as u32);
+        }
+        needs.push(nd);
+    }
+
+    // ---- Pass 3: L^(1) and send selection ---------------------------------
+    // L_p^(1) = L_p^(4) ∩ ⋃_{q≠p} L_q^(5) — the paper's definition, with
+    // the *full* closures on the right.  This is what makes L^(1)
+    // predecessor-closed over L^(0) ∪ L^(1) (Theorem 1): a pred of
+    // `t ∈ L4_p ∩ L5_q` is itself in `L5_q` (closure) and in
+    // `L0_p ∪ L4_p` (fixpoint), hence in `L0_p ∪ L1_p`.  Intersecting
+    // with the *trimmed* `needs` instead would break that closure (a pred
+    // that q computes itself would escape phase 1 and stall it).
+    //
+    // `t ∈ L4_p ⊆ L5_p` always, so "needed by some other closure" is
+    // simply `|{q : t ∈ L5_q}| ≥ 2` — one counting sweep, O(Σ|L5|).
+    //
+    // Under HaloMode::Level0Only only Input values are eligible to travel
+    // (paper figure 1); every needed compute value is recomputed in L^(3),
+    // and L^(1) stays empty.
+    let mut l1: Vec<Vec<u32>> = vec![Vec::new(); nprocs];
+    if options.halo == HaloMode::MultiLevel {
+        let mut closure_count = vec![0u8; n];
+        for q in 0..nprocs {
+            for &t in &l5[q] {
+                closure_count[t as usize] = closure_count[t as usize].saturating_add(1);
+            }
+        }
+        for p in 0..nprocs {
+            l1[p] = l4[p]
+                .iter()
+                .copied()
+                .filter(|&t| closure_count[t as usize] >= 2)
+                .collect();
+        }
+    }
+
+    // Choose a unique sender for every needed task: the owner if the owner
+    // can produce it in phase 1 (or holds it as input), else the
+    // lowest-numbered processor that can; if nobody can, the needy
+    // processor recomputes it in L^(3).
+    //
+    // can_send(p, t) ⇔ t ∈ L_p^(0) ∪ L_p^(1)  (inputs always sendable;
+    // computes only in MultiLevel mode, where l1 is populated).
+    // producers(t) = {p : can_send(p, t)}, inverted only for tasks someone
+    // actually needs.
+    let mut producers: HashMap<u32, Vec<u32>> = HashMap::new();
+    for p in 0..nprocs {
+        let eligible: Box<dyn Iterator<Item = &u32>> = match options.halo {
+            HaloMode::MultiLevel => Box::new(l0[p].iter().chain(l1[p].iter())),
+            HaloMode::Level0Only => Box::new(l0[p].iter()),
+        };
+        for &t in eligible {
+            if needed_by.contains_key(&t) {
+                producers.entry(t).or_default().push(p as u32);
+            }
+        }
+    }
+
+    // send_sets[p][q] = tasks p sends to q.
+    let mut send_sets: Vec<HashMap<u32, Vec<u32>>> = vec![HashMap::new(); nprocs];
+    let mut recv_sets: Vec<HashMap<u32, Vec<u32>>> = vec![HashMap::new(); nprocs];
+    for (&t, needy) in &needed_by {
+        let Some(cands) = producers.get(&t) else { continue };
+        let owner = g.owner(TaskId(t)).0;
+        for &q in needy {
+            // A producer other than q itself; prefer the owner.
+            let sender = if owner != q && cands.contains(&owner) {
+                Some(owner)
+            } else {
+                cands.iter().copied().find(|&c| c != q)
+            };
+            if let Some(s) = sender {
+                send_sets[s as usize].entry(q).or_default().push(t);
+                recv_sets[q as usize].entry(s).or_default().push(t);
+            }
+        }
+    }
+
+    // ---- Pass 4a: L^(3) per processor --------------------------------------
+    let mut l3_all: Vec<Vec<u32>> = Vec::with_capacity(nprocs);
+    for p in 0..nprocs {
+        let recv_tasks: Vec<u32> = {
+            let mut v: Vec<u32> =
+                recv_sets[p].values().flat_map(|ts| ts.iter().copied()).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let mut l3 = difference_sorted(&needs[p], &recv_tasks);
+        // Inputs cannot be recomputed; in a well-formed graph every needed
+        // input has a producer (its owner), so anything left in l3 must be
+        // a Compute task.
+        l3.retain(|&t| g.kind(TaskId(t)) == TaskKind::Compute);
+        l3_all.push(l3);
+    }
+
+    // ---- Pass 4b: trim messages to values actually consumed ----------------
+    // A receiver consumes a value iff it is a predecessor of something it
+    // computes after the receive (L^(3) — phase-1/2 preds are local by
+    // construction) or it is an owned task the receiver obtains by message
+    // instead of computing.  Everything else would be gratuitous traffic
+    // (e.g. a pred of a value that itself arrives precomputed).
+    let mut required = Stamp::new(n);
+    for q in 0..nprocs {
+        required.clear();
+        for &t in &l3_all[q] {
+            for &pr in g.preds(TaskId(t)) {
+                required.set(pr as usize);
+            }
+        }
+        for &t in owned[q].iter().chain(l0[q].iter()) {
+            required.set(t as usize);
+        }
+        for (_, ts) in recv_sets[q].iter_mut() {
+            ts.retain(|&t| required.contains(t as usize));
+        }
+        for sender in 0..nprocs {
+            if let Some(ts) = send_sets[sender].get_mut(&(q as u32)) {
+                ts.retain(|&t| required.contains(t as usize));
+            }
+        }
+    }
+
+    // ---- Pass 4c: assemble per-proc sets ------------------------------------
+    let to_msgs = |m: &HashMap<u32, Vec<u32>>| -> Vec<Msg> {
+        let mut v: Vec<Msg> = m
+            .iter()
+            .filter(|(_, ts)| !ts.is_empty())
+            .map(|(&peer, ts)| {
+                let mut ts = ts.clone();
+                ts.sort_unstable();
+                ts.dedup();
+                Msg { peer: ProcId(peer), tasks: ts }
+            })
+            .collect();
+        v.sort_by_key(|m| m.peer.0);
+        v
+    };
+
+    let mut per_proc = Vec::with_capacity(nprocs);
+    for p in 0..nprocs {
+        let l2 = difference_sorted(&l4[p], &l1[p]);
+        per_proc.push(ProcSets {
+            proc: ProcId(p as u32),
+            l0: l0[p].clone(),
+            l1: std::mem::take(&mut l1[p]),
+            l2,
+            l3: std::mem::take(&mut l3_all[p]),
+            l4: std::mem::take(&mut l4[p]),
+            l5: std::mem::take(&mut l5[p]),
+            send: to_msgs(&send_sets[p]),
+            recv: to_msgs(&recv_sets[p]),
+        });
+    }
+
+    CaSchedule { per_proc, options }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::heat1d_graph;
+    use crate::transform::check_schedule;
+
+    /// Index of task (point i, level s) in a heat1d graph of n points.
+    fn tid(n: u64, i: u64, s: u32) -> u32 {
+        (s as u64 * n + i) as u32
+    }
+
+    #[test]
+    fn two_proc_one_level_sets() {
+        // 8 points, 1 level, 2 procs: p0 owns [0,4), p1 owns [4,8).
+        let g = heat1d_graph(8, 1, 2);
+        let s = derive(&g, TransformOptions::default());
+        let p0 = &s.per_proc[0];
+        // L0 = inputs 0..4
+        assert_eq!(p0.l0, vec![0, 1, 2, 3]);
+        // L5 = own levels + input ghost: tasks for points 0..4 at level 1
+        // (ids 8..12) plus inputs 0..5 (point 4 is the ghost).
+        assert_eq!(p0.l5, vec![0, 1, 2, 3, 4, 8, 9, 10, 11]);
+        // L4: computable from inputs 0..4: points 0..3 at level 1.
+        assert_eq!(p0.l4, vec![tid(8, 0, 1), tid(8, 1, 1), tid(8, 2, 1)]);
+        // Nothing p0 computes is needed by p1 at one level with multilevel
+        // sends — p1 needs input 3 only.
+        assert_eq!(p0.l1, Vec::<u32>::new());
+        // p0's missing task (point 3) needs input 4 from p1 → received,
+        // then computed in l3.
+        assert_eq!(p0.l3, vec![tid(8, 3, 1)]);
+        assert_eq!(p0.recv.len(), 1);
+        assert_eq!(p0.recv[0].peer, ProcId(1));
+        assert_eq!(p0.recv[0].tasks, vec![4]); // input point 4
+        check_schedule(&g, &s).unwrap();
+    }
+
+    #[test]
+    fn multilevel_sends_computed_values() {
+        // 3 levels deep: the wedge near the boundary gets sent at
+        // intermediate levels (figure 3's refinement).
+        let n = 16;
+        let g = heat1d_graph(n, 3, 2);
+        let s = derive(&g, TransformOptions::default());
+        let p0 = &s.per_proc[0];
+        // p0 can locally compute points up to 8-1-s at level s; p1's cone
+        // at level s reaches down to 8-(3-s).  Level-1 tasks at points
+        // 5,6 and level-2 task at point 6... level-1: p1 needs points
+        // ≥ 8-(3-1) = 6; p0 computes ≤ 6 (point i needs i+1 ≤ 7): point 6
+        // at level 1 is in l1; level-2: p1 needs ≥ 7, p0 computes ≤ 5 — none.
+        assert!(p0.l1.contains(&tid(n as u64, 6, 1)));
+        assert!(!p0.l1.contains(&tid(n as u64, 5, 2)));
+        // And p0 sends computed values, not only inputs:
+        let sent: Vec<u32> = p0.send.iter().flat_map(|m| m.tasks.clone()).collect();
+        assert!(sent.iter().any(|&t| g.kind(TaskId(t)) == TaskKind::Compute));
+        check_schedule(&g, &s).unwrap();
+    }
+
+    #[test]
+    fn level0_mode_sends_only_inputs() {
+        let g = heat1d_graph(16, 3, 2);
+        let s = derive(&g, TransformOptions { halo: HaloMode::Level0Only });
+        for ps in &s.per_proc {
+            assert!(ps.l1.is_empty());
+            for m in &ps.send {
+                for &t in &m.tasks {
+                    assert_eq!(g.kind(TaskId(t)), TaskKind::Input);
+                }
+            }
+        }
+        check_schedule(&g, &s).unwrap();
+    }
+
+    #[test]
+    fn level0_mode_has_more_redundancy() {
+        let g = heat1d_graph(64, 4, 4);
+        let multi = derive(&g, TransformOptions::default());
+        let lvl0 = derive(&g, TransformOptions { halo: HaloMode::Level0Only });
+        assert!(
+            lvl0.total_computed() > multi.total_computed(),
+            "level0 {} vs multilevel {}",
+            lvl0.total_computed(),
+            multi.total_computed()
+        );
+        // Both over-cover the original graph (Theorem 1's redundancy).
+        assert!(multi.total_computed() >= g.num_compute_tasks());
+        check_schedule(&g, &lvl0).unwrap();
+    }
+
+    #[test]
+    fn single_proc_has_no_messages() {
+        let g = heat1d_graph(32, 4, 1);
+        let s = derive(&g, TransformOptions::default());
+        assert_eq!(s.total_messages(), 0);
+        assert_eq!(s.total_computed(), g.num_compute_tasks());
+        let ps = &s.per_proc[0];
+        assert!(ps.l1.is_empty() && ps.l3.is_empty());
+        assert_eq!(ps.l2.len(), g.num_compute_tasks());
+        check_schedule(&g, &s).unwrap();
+    }
+
+    #[test]
+    fn ghost_width_grows_with_levels() {
+        // The received initial data must span a b-deep ghost region
+        // (paper §2: "ghost region of width two" for b=2).
+        for b in 1..=4u32 {
+            let g = heat1d_graph(32, b, 2);
+            let s = derive(&g, TransformOptions { halo: HaloMode::Level0Only });
+            let p0 = &s.per_proc[0];
+            let inputs_recv: usize = p0.recv.iter().map(|m| m.tasks.len()).sum();
+            assert_eq!(inputs_recv, b as usize, "ghost width at b={b}");
+        }
+    }
+
+    #[test]
+    fn interior_procs_send_both_ways() {
+        let g = heat1d_graph(24, 2, 3);
+        let s = derive(&g, TransformOptions::default());
+        let p1 = &s.per_proc[1];
+        let peers: Vec<u32> = p1.send.iter().map(|m| m.peer.0).collect();
+        assert_eq!(peers, vec![0, 2]);
+    }
+}

@@ -1,0 +1,342 @@
+//! Small shared utilities: a deterministic PRNG, epoch-stamped membership
+//! marks, sorted-set operations, and CSV emission.
+//!
+//! The vendored crate set contains neither `rand` nor `serde`, so these are
+//! deliberately dependency-free.  Everything here is deterministic — the
+//! whole reproduction is seeded so figures regenerate bit-identically.
+
+/// xorshift64* PRNG — deterministic, seedable, good enough for workload
+/// generation and property tests (not cryptographic).
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Seed must be non-zero; zero is mapped to a fixed odd constant.
+    pub fn new(seed: u64) -> Self {
+        Rng(if seed == 0 { 0x9E3779B97F4A7C15 } else { seed })
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`; `n` must be positive.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Rejection-free modulo is fine for our non-crypto uses.
+        self.next_u64() % n
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[-1, 1)` — handy for synthetic field data.
+    pub fn f32_pm1(&mut self) -> f32 {
+        (self.f64() * 2.0 - 1.0) as f32
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+/// Epoch-stamped membership marks: O(1) set/test/clear-all over a fixed
+/// universe, reused across many rounds without re-zeroing.
+///
+/// Used heavily by the transformation's per-processor closures, where the
+/// same `|V|`-sized scratch is cycled through every processor.
+#[derive(Debug)]
+pub struct Stamp {
+    marks: Vec<u32>,
+    epoch: u32,
+}
+
+impl Stamp {
+    pub fn new(universe: usize) -> Self {
+        Stamp { marks: vec![0; universe], epoch: 1 }
+    }
+
+    /// Invalidate every mark in O(1) (amortized; re-zeroes on epoch wrap).
+    pub fn clear(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.marks.iter_mut().for_each(|m| *m = 0);
+            self.epoch = 1;
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        self.marks[i] = self.epoch;
+    }
+
+    #[inline]
+    pub fn unset(&mut self, i: usize) {
+        self.marks[i] = self.epoch.wrapping_sub(1);
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        self.marks[i] == self.epoch
+    }
+
+    pub fn len_universe(&self) -> usize {
+        self.marks.len()
+    }
+
+    /// Grow the universe (new elements unmarked).
+    pub fn grow(&mut self, universe: usize) {
+        if universe > self.marks.len() {
+            self.marks.resize(universe, 0);
+        }
+    }
+}
+
+/// Merge two sorted, deduplicated `u32` slices into a sorted, deduplicated
+/// vector (set union).
+pub fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+/// Set difference `a − b` over sorted, deduplicated slices.
+pub fn difference_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len());
+    let mut j = 0;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != x {
+            out.push(x);
+        }
+    }
+    out
+}
+
+/// Set intersection over sorted, deduplicated slices.
+pub fn intersect_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// True iff sorted slices `a` and `b` share no element.
+pub fn disjoint_sorted(a: &[u32], b: &[u32]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => return false,
+        }
+    }
+    true
+}
+
+/// True iff sorted slice `sub` ⊆ sorted slice `sup`.
+pub fn subset_sorted(sub: &[u32], sup: &[u32]) -> bool {
+    let mut j = 0;
+    for &x in sub {
+        while j < sup.len() && sup[j] < x {
+            j += 1;
+        }
+        if j >= sup.len() || sup[j] != x {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// A tiny CSV writer: quotes nothing (callers emit plain numerics/idents),
+/// used for the figure series the bench harness produces.
+pub struct Csv {
+    out: String,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { out: format!("{}\n", header.join(",")), cols: header.len() }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.cols, "csv row width mismatch");
+        self.out.push_str(&fields.join(","));
+        self.out.push('\n');
+    }
+
+    pub fn rowf(&mut self, fields: &[f64]) {
+        self.row(&fields.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+
+    pub fn write_file(self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.out)
+    }
+}
+
+/// Geometric mean of positive values (benchmark summaries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Simple monotonic wall-clock timer for the bench harness.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn rng_f64_unit_interval() {
+        let mut r = Rng::new(11);
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn stamp_epochs() {
+        let mut s = Stamp::new(10);
+        s.set(3);
+        assert!(s.contains(3));
+        assert!(!s.contains(4));
+        s.clear();
+        assert!(!s.contains(3));
+        s.set(4);
+        assert!(s.contains(4));
+    }
+
+    #[test]
+    fn stamp_epoch_wrap_rezeros() {
+        let mut s = Stamp::new(4);
+        s.epoch = u32::MAX; // force wrap on next clear
+        s.set(1);
+        s.clear();
+        assert!(!s.contains(1));
+        s.set(2);
+        assert!(s.contains(2));
+    }
+
+    #[test]
+    fn set_ops() {
+        let a = vec![1, 3, 5, 7];
+        let b = vec![3, 4, 7, 9];
+        assert_eq!(union_sorted(&a, &b), vec![1, 3, 4, 5, 7, 9]);
+        assert_eq!(difference_sorted(&a, &b), vec![1, 5]);
+        assert_eq!(intersect_sorted(&a, &b), vec![3, 7]);
+        assert!(!disjoint_sorted(&a, &b));
+        assert!(disjoint_sorted(&[1, 2], &[3, 4]));
+        assert!(subset_sorted(&[3, 7], &a));
+        assert!(!subset_sorted(&[3, 8], &a));
+        assert!(subset_sorted(&[], &a));
+    }
+
+    #[test]
+    fn set_ops_empty() {
+        assert_eq!(union_sorted(&[], &[1]), vec![1]);
+        assert_eq!(difference_sorted(&[], &[1]), Vec::<u32>::new());
+        assert_eq!(intersect_sorted(&[1], &[]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.rowf(&[1.0, 2.5]);
+        assert_eq!(c.finish(), "a,b\n1,2.5\n");
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,87 @@
+//! Property tests: the real threaded coordinator reproduces sequential
+//! semantics for every plan on random graphs.
+//!
+//! Each case spawns one OS thread per processor and real channels; task
+//! values are exact u64 mixes, so any routing, phase-ordering, message-
+//! pairing or state-management bug produces a hard divergence.
+
+use imp_latency::prop::{check, random_dag, random_stencil, DagParams};
+use imp_latency::sim::ExecPlan;
+use imp_latency::transform::{HaloMode, TransformOptions};
+use std::sync::Arc;
+
+#[test]
+fn naive_plans_execute_correctly_on_random_dags() {
+    check(40, |rng| {
+        let g = Arc::new(random_dag(rng, &DagParams::default()));
+        let plan = ExecPlan::naive(&g);
+        imp_latency::coordinator::run_and_verify(&g, &plan).map(|_| ())
+    });
+}
+
+#[test]
+fn overlap_plans_execute_correctly_on_random_dags() {
+    check(40, |rng| {
+        let g = Arc::new(random_dag(rng, &DagParams::default()));
+        let plan = ExecPlan::overlap(&g);
+        imp_latency::coordinator::run_and_verify(&g, &plan).map(|_| ())
+    });
+}
+
+#[test]
+fn ca_plans_execute_correctly_on_random_dags() {
+    check(40, |rng| {
+        let g = Arc::new(random_dag(rng, &DagParams::default()));
+        let depth = g.num_levels().saturating_sub(1).max(1);
+        let b = 1 + (rng.below(depth as u64) as u32);
+        for opts in [
+            TransformOptions { halo: HaloMode::MultiLevel },
+            TransformOptions { halo: HaloMode::Level0Only },
+        ] {
+            let plan = ExecPlan::ca(&g, b, opts)?;
+            imp_latency::coordinator::run_and_verify(&g, &plan)
+                .map_err(|e| format!("b={b} {opts:?}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ca_plans_execute_correctly_on_random_stencils() {
+    check(30, |rng| {
+        let (n, m, p, r) = random_stencil(rng);
+        let g = Arc::new(imp_latency::stencil::heat1d_program(n, m, p, r).unroll());
+        let b = 1 + (rng.below(m as u64) as u32);
+        let plan = ExecPlan::ca(&g, b, TransformOptions::default())?;
+        let res = imp_latency::coordinator::run_and_verify(&g, &plan)
+            .map_err(|e| format!("n={n} m={m} p={p} r={r} b={b}: {e}"))?;
+        // Message conservation: the run sends exactly what the plan says.
+        if res.messages as usize != plan.messages() {
+            return Err(format!("messages {} != plan {}", res.messages, plan.messages()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_task_owner_obtains_its_value_exactly_once_per_worker() {
+    // Execution counts: the CA plan executes each task at most once per
+    // worker (no double compute within one processor's phases).
+    check(30, |rng| {
+        let g = Arc::new(random_dag(rng, &DagParams::default()));
+        let plan = ExecPlan::ca(&g, 2, TransformOptions::default())?;
+        for (p, pp) in plan.per_proc.iter().enumerate() {
+            let mut seen = std::collections::HashSet::new();
+            for ph in &pp.phases {
+                if let imp_latency::sim::Phase::Compute(ts) = ph {
+                    for &t in ts {
+                        if !seen.insert(t) {
+                            return Err(format!("p{p} computes t{t} twice"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,216 @@
+//! Property tests: Theorem-1 invariants of the transformation on random
+//! graphs.
+//!
+//! The in-repo `prop` harness (no proptest in the vendored crate set)
+//! drives random layered DAGs and random stencil problems through both
+//! halo modes and re-verifies every invariant from scratch — the checker
+//! itself recomputes availability rather than trusting the derivation.
+
+use imp_latency::graph::TaskKind;
+use imp_latency::prop::{check, random_dag, random_stencil, DagParams};
+use imp_latency::sim::ExecPlan;
+use imp_latency::stencil::heat1d_graph;
+use imp_latency::transform::{
+    check_schedule, communication_avoiding, superstep_graphs, HaloMode, ScheduleStats,
+    TransformOptions,
+};
+
+const MODES: [TransformOptions; 2] = [
+    TransformOptions { halo: HaloMode::MultiLevel },
+    TransformOptions { halo: HaloMode::Level0Only },
+];
+
+#[test]
+fn random_dags_satisfy_theorem_1() {
+    check(120, |rng| {
+        let g = random_dag(rng, &DagParams::default());
+        for opts in MODES {
+            let s = communication_avoiding(&g, opts);
+            check_schedule(&g, &s).map_err(|v| format!("{opts:?}: {v}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_dags_coverage_and_redundancy() {
+    check(80, |rng| {
+        let g = random_dag(rng, &DagParams::default());
+        let s = communication_avoiding(&g, TransformOptions::default());
+        let st = ScheduleStats::compute(&g, &s);
+        // Theorem 1's final remark: the union over-covers L_p.
+        if st.executed_tasks < st.graph_tasks {
+            return Err(format!(
+                "under-covering: executed {} < graph {}",
+                st.executed_tasks, st.graph_tasks
+            ));
+        }
+        // Redundancy never exceeds p× the graph (every proc computing
+        // everything is the worst case).
+        let p = g.num_procs() as usize;
+        if st.executed_tasks > st.graph_tasks * p {
+            return Err("impossible redundancy".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_dags_multilevel_never_more_redundant_than_level0() {
+    check(60, |rng| {
+        let g = random_dag(rng, &DagParams::default());
+        let multi = communication_avoiding(&g, MODES[0]);
+        let lvl0 = communication_avoiding(&g, MODES[1]);
+        if multi.total_computed() > lvl0.total_computed() {
+            return Err(format!(
+                "multilevel {} > level0 {}",
+                multi.total_computed(),
+                lvl0.total_computed()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_stencils_satisfy_theorem_1() {
+    check(60, |rng| {
+        let (n, m, p, r) = random_stencil(rng);
+        let g = imp_latency::stencil::heat1d_program(n, m, p, r).unroll();
+        for opts in MODES {
+            let s = communication_avoiding(&g, opts);
+            check_schedule(&g, &s).map_err(|v| format!("n={n} m={m} p={p} r={r}: {v}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_stencil_l1_sets_are_pred_closed() {
+    // The key lemma behind Theorem 1: preds(L1) ⊆ L0 ∪ L1 — phase 1 can
+    // run with zero synchronization.
+    check(40, |rng| {
+        let (n, m, p, r) = random_stencil(rng);
+        let g = imp_latency::stencil::heat1d_program(n, m, p, r).unroll();
+        let s = communication_avoiding(&g, TransformOptions::default());
+        for ps in &s.per_proc {
+            let avail: std::collections::HashSet<u32> =
+                ps.l0.iter().chain(ps.l1.iter()).copied().collect();
+            for &t in &ps.l1 {
+                for &pr in g.preds(imp_latency::graph::TaskId(t)) {
+                    if !avail.contains(&pr) {
+                        return Err(format!("{}: pred t{pr} of L1 task t{t} escapes L0∪L1", ps.proc));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_blocking_supersteps_well_formed() {
+    check(50, |rng| {
+        let (n, m, p, _) = random_stencil(rng);
+        let g = heat1d_graph(n, m.max(2), p);
+        let b = 1 + (rng.below(m.max(2) as u64) as u32);
+        for ss in superstep_graphs(&g, b).map_err(|e| e)? {
+            ss.validate_against(&g).map_err(|e| format!("b={b}: {e}"))?;
+            let s = communication_avoiding(&ss.graph, TransformOptions::default());
+            check_schedule(&ss.graph, &s).map_err(|v| format!("b={b}: {v}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sends_are_never_empty_or_duplicated() {
+    check(60, |rng| {
+        let g = random_dag(rng, &DagParams::default());
+        let s = communication_avoiding(&g, TransformOptions::default());
+        for ps in &s.per_proc {
+            for m in &ps.send {
+                if m.tasks.is_empty() {
+                    return Err(format!("{}: empty message to {}", ps.proc, m.peer));
+                }
+                let mut d = m.tasks.clone();
+                d.dedup();
+                if d.len() != m.tasks.len() {
+                    return Err(format!("{}: duplicate values to {}", ps.proc, m.peer));
+                }
+                if m.peer == ps.proc {
+                    return Err(format!("{}: self-send", ps.proc));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn received_values_are_actually_needed() {
+    // No gratuitous traffic: every received value is a predecessor of
+    // something the receiver computes (or a task it owns).
+    check(60, |rng| {
+        let g = random_dag(rng, &DagParams::default());
+        let s = communication_avoiding(&g, TransformOptions::default());
+        for ps in &s.per_proc {
+            let mut needed: std::collections::HashSet<u32> = std::collections::HashSet::new();
+            for &t in ps.l3.iter().chain(ps.l4.iter()) {
+                for &pr in g.preds(imp_latency::graph::TaskId(t)) {
+                    needed.insert(pr);
+                }
+            }
+            for t in g.tasks() {
+                if g.owner(t) == ps.proc {
+                    needed.insert(t.0);
+                }
+            }
+            for m in &ps.recv {
+                for &t in &m.tasks {
+                    if !needed.contains(&t) {
+                        return Err(format!("{}: receives unneeded t{t}", ps.proc));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plans_from_random_graphs_are_consistent() {
+    check(40, |rng| {
+        let g = random_dag(rng, &DagParams::default());
+        let naive = ExecPlan::naive(&g);
+        // Naive executes exactly the graph's compute tasks.
+        if naive.executed_tasks() != g.num_compute_tasks() {
+            return Err("naive plan task count".into());
+        }
+        // CA plans (b = whole depth) execute at least as many.
+        let depth = g.num_levels().saturating_sub(1).max(1);
+        let ca = ExecPlan::ca(&g, depth, TransformOptions::default()).map_err(|e| e)?;
+        if ca.executed_tasks() < g.num_compute_tasks() {
+            return Err("ca plan under-executes".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn input_only_tasks_never_execute() {
+    check(30, |rng| {
+        let g = random_dag(rng, &DagParams::default());
+        let s = communication_avoiding(&g, TransformOptions::default());
+        for ps in &s.per_proc {
+            for set in [&ps.l1, &ps.l2, &ps.l3, &ps.l4] {
+                for &t in set.iter() {
+                    if g.kind(imp_latency::graph::TaskId(t)) == TaskKind::Input {
+                        return Err(format!("input t{t} scheduled for compute"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
