@@ -1,0 +1,33 @@
+# CI entry points for the Rust reproduction.  `make ci` is what the
+# GitHub workflow runs; each step is also callable on its own.
+
+CARGO ?= cargo
+
+.PHONY: ci build test clippy fmt fmt-fix bench artifacts
+
+ci: build test clippy fmt
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+fmt:
+	$(CARGO) fmt --check
+
+fmt-fix:
+	$(CARGO) fmt
+
+bench:
+	$(CARGO) bench
+
+# AOT-compile the Pallas/XLA artifacts (needs the Python toolchain with
+# jax; see python/compile/aot.py).  Real PJRT execution additionally
+# needs the non-stub `xla` crate (see rust/vendor/xla/src/lib.rs).
+# aot.py imports `from compile import ...`, so it must run from python/.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts

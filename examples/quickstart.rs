@@ -1,61 +1,70 @@
-//! Quickstart: the full pipeline in ~60 lines.
+//! Quickstart: the full pipeline in a handful of expressions.
 //!
-//! Build a task graph from a data-parallel description (IMP), run the
-//! paper's §3 communication-avoiding transformation, check Theorem 1,
-//! inspect the subsets, and compare naive vs. overlap vs. CA runtimes on
-//! the discrete-event simulator.
+//! One builder takes a problem description through the paper's whole
+//! story: IMP task graph → §3 communication-avoiding transformation
+//! (Theorem 1 checked on the way) → simulated strong-scaling runtimes →
+//! a *real* threads-and-channels execution verified against the
+//! sequential reference.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use imp_latency::sim::{simulate, ExecPlan, Machine};
-use imp_latency::stencil::heat1d_graph;
-use imp_latency::trace::summary_line;
-use imp_latency::transform::{
-    check_schedule, communication_avoiding_default, ScheduleStats, TransformOptions,
-};
+use imp_latency::pipeline::{Heat1d, Pipeline};
+use imp_latency::sim::Machine;
+use imp_latency::transform::check_schedule;
 
 fn main() {
-    // 1. A task graph: 512 points of the 1-D heat equation (paper eq. 1),
-    //    16 time steps, block-distributed over 8 processors.
-    let g = heat1d_graph(512, 16, 8);
+    // 1. Describe the problem: 512 points of the 1-D heat equation
+    //    (paper eq. 1), 16 time steps.  The description is all the
+    //    Pipeline needs — graphs are derived per processor count.
+    let heat = Heat1d::new(512, 16);
+
+    // 2. Transform: 8 processors, supersteps of 4 levels, multi-level
+    //    halo.  `transform()` verifies Theorem 1 per superstep and fails
+    //    loudly if the schedule were ever ill-formed.
+    let run = Pipeline::new(heat.clone()).procs(8).block(4).transform().expect("Theorem 1");
+    let stats = run.stats();
     println!(
-        "graph: {} tasks, {} edges, {} levels, {} procs",
-        g.len(),
-        g.num_edges(),
-        g.num_levels(),
-        g.num_procs()
+        "graph: {} compute tasks, {} edges, {} levels, {} procs",
+        stats.tasks, stats.edges, stats.levels, stats.procs
+    );
+    println!(
+        "transformed: {} executions ({:.3}x redundancy) for {} messages / {} words\n",
+        stats.executed_tasks, stats.redundancy_factor, stats.messages, stats.words
     );
 
-    // 2. The paper's transformation: derive L^(1), L^(2), L^(3) per proc.
-    let schedule = communication_avoiding_default(&g);
-    check_schedule(&g, &schedule).expect("Theorem 1");
-    println!("\nTheorem 1 holds. Subsets of processor 3:");
+    // 3. Inspect the §3 subsets of one processor (figure-4 view).
+    let schedule = run.full_schedule().expect("CA strategy");
+    check_schedule(&run.graph, &schedule).expect("whole-graph schedule is well-formed too");
     let ps = schedule.sets(imp_latency::graph::ProcId(3));
     println!(
-        "  |L0|={} (inputs)  |L1|={} (computed first, sent)  |L2|={} (overlaps comms)  |L3|={} (after recv)",
+        "processor 3 subsets: |L0|={} (inputs)  |L1|={} (computed first, sent)  \
+         |L2|={} (overlaps comms)  |L3|={} (after recv)\n",
         ps.l0.len(),
         ps.l1.len(),
         ps.l2.len(),
         ps.l3.len()
     );
 
-    // 3. What did the transformation buy? Redundancy vs. messages.
-    let stats = ScheduleStats::compute(&g, &schedule);
-    println!("\n{}", stats.report());
-
-    // 4. Simulate the strong-scaling scenario of paper §4.
+    // 4. Simulate the §4 strong-scaling scenario: naive vs. overlap vs.
+    //    CA at two block factors, all from the same description.
     let machine = Machine::high_latency(8, 16); // p=8 nodes, 16 threads each
     println!("simulated runtimes (α={}γ, {} threads/node):", machine.alpha, machine.threads);
-    for plan in [
-        ExecPlan::naive(&g),
-        ExecPlan::overlap(&g),
-        ExecPlan::ca(&g, 4, TransformOptions::default()).unwrap(),
-        ExecPlan::ca(&g, 16, TransformOptions::default()).unwrap(),
+    let base = Pipeline::new(heat).procs(8);
+    for pipeline in [
+        base.clone().naive(),
+        base.clone().overlap(),
+        base.clone().block(4),
+        base.clone().block(16),
     ] {
-        let r = simulate(&g, &plan, &machine, false);
-        println!("  {}", summary_line(&plan.label, &r));
+        let t = pipeline.transform().expect("transform");
+        println!("  {}", t.simulate(&machine).summary());
     }
+
+    // 5. Execute for real — worker threads, real channels — and verify
+    //    every value against the sequential reference solution.
+    let real = base.block(4).transform().expect("transform").execute().expect("verified run");
+    println!("\nreal execution: {}", real.summary());
     println!("\nblocking pays the α per superstep instead of per step — figure 8's effect.");
 }

@@ -20,10 +20,10 @@
 //! ```
 
 use imp_latency::imp::Program;
+use imp_latency::pipeline::{GraphWorkload, Pipeline};
 use imp_latency::sim::{simulate, ExecPlan, Machine};
 use imp_latency::stencil::{bisect, block_assign, quality, to_distribution, CsrMatrix};
 use imp_latency::transform::{check_schedule, communication_avoiding_default, ScheduleStats, TransformOptions};
-use std::sync::Arc;
 
 fn main() {
     let (h, w, steps, p) = (24usize, 24usize, 8u32, 4u32);
@@ -64,17 +64,17 @@ fn main() {
         results.push((name, g, st));
     }
 
-    // ---- Real threaded execution of the transformed plan -------------------
-    println!("\nreal threaded execution (exact value semantics):");
+    // ---- Real threaded execution via the Pipeline API ----------------------
+    println!("\nreal threaded execution (exact value semantics, via Pipeline):");
     for (name, g, _) in &results {
-        let g = Arc::new(g.clone());
-        let plan = ExecPlan::ca(&g, steps, TransformOptions::default()).unwrap();
-        let r = imp_latency::coordinator::run_and_verify(&g, &plan)
+        let report = Pipeline::new(GraphWorkload::new(*name, g.clone()))
+            .block(steps)
+            .transform()
+            .unwrap_or_else(|e| panic!("{name}: {e}"))
+            .execute()
             .unwrap_or_else(|e| panic!("{name}: {e}"));
-        println!(
-            "  {name:>11}: {} task executions, {} messages, all values match sequential ✓",
-            r.executed, r.messages
-        );
+        assert!(report.verification.is_verified());
+        println!("  {}", report.summary());
     }
 
     // ---- Simulated runtimes -------------------------------------------------

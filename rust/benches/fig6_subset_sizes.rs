@@ -9,7 +9,7 @@
 use imp_latency::figures;
 use imp_latency::stencil::heat1d_graph;
 use imp_latency::transform::{
-    communication_avoiding, HaloMode, ScheduleStats, TransformOptions,
+    communication_avoiding, ScheduleStats, TransformOptions,
 };
 use imp_latency::util::Csv;
 
@@ -42,8 +42,7 @@ fn main() {
     ]);
     for b in [2u32, 4, 8, 16] {
         let g = heat1d_graph(256, b, 4);
-        let s0 =
-            communication_avoiding(&g, TransformOptions { halo: HaloMode::Level0Only });
+        let s0 = communication_avoiding(&g, TransformOptions::level0());
         let sm = communication_avoiding(&g, TransformOptions::default());
         let st0 = ScheduleStats::compute(&g, &s0);
         let stm = ScheduleStats::compute(&g, &sm);
@@ -74,7 +73,7 @@ fn main() {
     // Redundancy per superstep grows ~ b² (paper §2.1's b²/2 per side).
     let quad = |b: u32| {
         let g = heat1d_graph(256, b, 4);
-        let s = communication_avoiding(&g, TransformOptions { halo: HaloMode::Level0Only });
+        let s = communication_avoiding(&g, TransformOptions::level0());
         ScheduleStats::compute(&g, &s).redundant_tasks as f64
     };
     let (r4, r8) = (quad(4), quad(8));

@@ -34,20 +34,44 @@ pub fn compute_value(item: u64, level: u32, pred_sum: u64) -> u64 {
         .rotate_left(17)
 }
 
+/// Pluggable task semantics for the generic engine: how an `Input` task's
+/// value derives from its item, and how a `Compute` task's value derives
+/// from (item, level, order-independent predecessor sum).  Plain function
+/// pointers so a semantics is `Copy + Send` and crosses worker threads
+/// for free; [`crate::pipeline::Workload`] implementations supply one and
+/// the same semantics drives both the distributed run and its sequential
+/// reference.
+#[derive(Debug, Clone, Copy)]
+pub struct ValueSemantics {
+    pub input: fn(u64) -> u64,
+    pub compute: fn(u64, u32, u64) -> u64,
+}
+
+impl Default for ValueSemantics {
+    fn default() -> Self {
+        ValueSemantics { input: input_value, compute: compute_value }
+    }
+}
+
 /// Sequentially evaluate every task's value (the reference).
 pub fn sequential_values(g: &TaskGraph) -> Vec<u64> {
+    sequential_values_with(g, ValueSemantics::default())
+}
+
+/// [`sequential_values`] under caller-chosen semantics.
+pub fn sequential_values_with(g: &TaskGraph, sem: ValueSemantics) -> Vec<u64> {
     let order = g.topo_order().0;
     let mut val = vec![0u64; g.len()];
     for t in order {
         let tid = TaskId(t);
         val[t as usize] = match g.kind(tid) {
-            TaskKind::Input => input_value(g.item(tid)),
+            TaskKind::Input => (sem.input)(g.item(tid)),
             TaskKind::Compute => {
                 let mut s = 0u64;
                 for &p in g.preds(tid) {
                     s = s.wrapping_add(val[p as usize]);
                 }
-                compute_value(g.item(tid), g.level(tid), s)
+                (sem.compute)(g.item(tid), g.level(tid), s)
             }
         };
     }
@@ -76,6 +100,15 @@ pub struct GenericRunResult {
 /// unavailable when needed) — the property tests rely on that to catch
 /// malformed schedules.
 pub fn run_generic(g: &Arc<TaskGraph>, plan: &ExecPlan) -> GenericRunResult {
+    run_generic_with(g, plan, ValueSemantics::default())
+}
+
+/// [`run_generic`] under caller-chosen value semantics.
+pub fn run_generic_with(
+    g: &Arc<TaskGraph>,
+    plan: &ExecPlan,
+    sem: ValueSemantics,
+) -> GenericRunResult {
     let nprocs = plan.per_proc.len();
     let endpoints = fabric(nprocs as u32);
     let t0 = std::time::Instant::now();
@@ -91,7 +124,7 @@ pub fn run_generic(g: &Arc<TaskGraph>, plan: &ExecPlan) -> GenericRunResult {
             // Inputs owned by this worker are available from the start.
             for t in g.tasks() {
                 if g.kind(t) == TaskKind::Input && g.owner(t).0 == p as u32 {
-                    store.insert(t.0, input_value(g.item(t)));
+                    store.insert(t.0, (sem.input)(g.item(t)));
                 }
             }
             let mut executed = 0u64;
@@ -111,7 +144,7 @@ pub fn run_generic(g: &Arc<TaskGraph>, plan: &ExecPlan) -> GenericRunResult {
                                 });
                                 s = s.wrapping_add(*v);
                             }
-                            store.insert(t, compute_value(g.item(tid), g.level(tid), s));
+                            store.insert(t, (sem.compute)(g.item(tid), g.level(tid), s));
                             executed += 1;
                         }
                     }
@@ -169,8 +202,17 @@ pub fn run_generic(g: &Arc<TaskGraph>, plan: &ExecPlan) -> GenericRunResult {
 /// Run and verify against the sequential reference; returns the result or
 /// a description of the first divergence.
 pub fn run_and_verify(g: &Arc<TaskGraph>, plan: &ExecPlan) -> Result<GenericRunResult, String> {
-    let reference = sequential_values(g);
-    let r = run_generic(g, plan);
+    run_and_verify_with(g, plan, ValueSemantics::default())
+}
+
+/// [`run_and_verify`] under caller-chosen value semantics.
+pub fn run_and_verify_with(
+    g: &Arc<TaskGraph>,
+    plan: &ExecPlan,
+    sem: ValueSemantics,
+) -> Result<GenericRunResult, String> {
+    let reference = sequential_values_with(g, sem);
+    let r = run_generic_with(g, plan, sem);
     for &(t, v) in &r.owned_values {
         if v == u64::MAX && reference[t as usize] != u64::MAX {
             return Err(format!("t{t}: owner never obtained a value"));
@@ -189,7 +231,7 @@ pub fn run_and_verify(g: &Arc<TaskGraph>, plan: &ExecPlan) -> Result<GenericRunR
 mod tests {
     use super::*;
     use crate::stencil::{heat1d_graph, heat2d_graph};
-    use crate::transform::{HaloMode, TransformOptions};
+    use crate::transform::TransformOptions;
 
     #[test]
     fn naive_plan_reproduces_reference() {
@@ -216,8 +258,7 @@ mod tests {
     #[test]
     fn ca_level0_reproduces_reference() {
         let g = Arc::new(heat1d_graph(48, 8, 3));
-        let plan =
-            ExecPlan::ca(&g, 4, TransformOptions { halo: HaloMode::Level0Only }).unwrap();
+        let plan = ExecPlan::ca(&g, 4, TransformOptions::level0()).unwrap();
         let r = run_and_verify(&g, &plan).unwrap();
         assert!(r.executed as usize > g.num_compute_tasks(), "level0 must be redundant");
     }

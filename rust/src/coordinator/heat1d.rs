@@ -1,24 +1,30 @@
-//! Real distributed execution of the 1-D heat equation: worker threads,
-//! channel halo exchange, PJRT blocked-stencil compute.
+//! 1-D heat equation geometry for the generic tiled engine
+//! ([`super::tile`]): tile-per-worker, `b`-deep ghost exchange once per
+//! superstep, blocked Pallas kernel `heat1d_n{n}_b{b}` via PJRT.
 //!
 //! This is the paper's scheme running for real: per superstep of `b`
 //! steps, each worker exchanges a `b`-deep ghost region with its
 //! neighbours (one message per neighbour per superstep — the `(M/b)·α`
-//! term) and then executes the **blocked Pallas kernel**
-//! `heat1d_n{n}_b{b}`, which recomputes the trapezoid of intermediate
-//! halo values inside VMEM — the redundant computation of §2 traded for
-//! the factor-`b` message reduction.  `b = 1` is the naive baseline.
+//! term) and then executes the blocked kernel, which recomputes the
+//! trapezoid of intermediate halo values inside VMEM — the redundant
+//! computation of §2 traded for the factor-`b` message reduction.
+//! `b = 1` is the naive baseline.
 //!
 //! Domain boundaries are odd-reflection ghosts (`ghost_j = 2·x_edge −
 //! x_j`), which for the linear 3-point update reproduces zero-Dirichlet
 //! semantics *exactly* for every block factor — so runs at different `b`
 //! are comparable to each other and to the `heat1d_full_*` reference
 //! artifact.
+//!
+//! All leader/worker plumbing lives in [`super::tile::run_tiled`]; this
+//! module only describes the 1-D exchange geometry.
 
-use super::messages::{fabric, Payload};
+use super::messages::{Endpoint, Payload};
+use super::tile::{run_tiled, TiledWorkload};
 use crate::runtime::{Runtime, Value};
-use anyhow::{bail, Context, Result};
-use std::thread;
+use anyhow::{bail, Result};
+
+pub use super::tile::RunStats;
 
 /// Configuration of one distributed 1-D heat run.
 #[derive(Debug, Clone)]
@@ -57,29 +63,72 @@ impl Heat1dConfig {
     }
 }
 
-/// Timing/traffic statistics of a run.
-#[derive(Debug, Clone, Default)]
-pub struct RunStats {
-    pub wall_secs: f64,
-    /// Max across workers of fixed setup time (PJRT client creation +
-    /// artifact compile) — pay-once cost a long-running service amortizes.
-    pub setup_secs: f64,
-    /// Max across workers of time spent in halo exchange (blocked).
-    pub exchange_secs: f64,
-    /// Max across workers of time spent in PJRT execute.
-    pub compute_secs: f64,
-    pub messages: u64,
-    pub words: u64,
-    pub supersteps: u32,
-    /// Per-worker PJRT executions.
-    pub executions: u64,
-}
+impl TiledWorkload for Heat1dConfig {
+    fn workers(&self) -> u32 {
+        self.workers
+    }
 
-impl RunStats {
-    /// Wall-clock excluding the pay-once setup — the steady-state figure
-    /// comparable across block factors.
-    pub fn steady_secs(&self) -> f64 {
-        (self.wall_secs - self.setup_secs).max(0.0)
+    fn supersteps(&self) -> u32 {
+        self.steps / self.b
+    }
+
+    fn artifact(&self) -> String {
+        self.artifact_name()
+    }
+
+    fn artifacts_dir(&self) -> &std::path::Path {
+        &self.artifacts_dir
+    }
+
+    fn owned_len(&self) -> usize {
+        self.n_per_worker
+    }
+
+    fn extract(&self, w: usize, global: &[f32]) -> Vec<f32> {
+        let n = self.n_per_worker;
+        global[w * n..(w + 1) * n].to_vec()
+    }
+
+    fn place(&self, w: usize, tile: &[f32], global: &mut [f32]) {
+        let n = self.n_per_worker;
+        global[w * n..(w + 1) * n].copy_from_slice(tile);
+    }
+
+    fn exchange(&self, w: usize, ep: &mut Endpoint, x: &[f32]) -> Vec<f32> {
+        let n = self.n_per_worker;
+        let b = self.b as usize;
+        let last = self.workers as usize - 1;
+        // Post edges to neighbours first (non-blocking sends)...
+        if w > 0 {
+            ep.send((w - 1) as u32, Payload { tasks: Vec::new(), values: x[..b].to_vec() });
+        }
+        if w < last {
+            ep.send((w + 1) as u32, Payload { tasks: Vec::new(), values: x[n - b..].to_vec() });
+        }
+        // ...then fill the ghost regions.
+        let mut tile = vec![0.0f32; n + 2 * b];
+        if w > 0 {
+            tile[..b].copy_from_slice(&ep.recv_from((w - 1) as u32).values);
+        } else {
+            // Odd reflection about x[0]: ghost[k] = 2 x0 − x[b−k].
+            for k in 0..b {
+                tile[k] = 2.0 * x[0] - x[b - k];
+            }
+        }
+        if w < last {
+            tile[n + b..].copy_from_slice(&ep.recv_from((w + 1) as u32).values);
+        } else {
+            // Odd reflection about x[n−1].
+            for k in 0..b {
+                tile[n + b + k] = 2.0 * x[n - 1] - x[n - 2 - k];
+            }
+        }
+        tile[b..n + b].copy_from_slice(x);
+        tile
+    }
+
+    fn kernel_args(&self) -> Vec<Value> {
+        vec![Value::scalar(self.nu)]
     }
 }
 
@@ -87,97 +136,7 @@ impl RunStats {
 /// (concatenated worker tiles) and statistics.
 pub fn run(cfg: &Heat1dConfig, initial: &[f32]) -> Result<(Vec<f32>, RunStats)> {
     cfg.validate()?;
-    let n = cfg.n_per_worker;
-    let p = cfg.workers as usize;
-    if initial.len() != n * p {
-        bail!("initial field has {} points, expected {}", initial.len(), n * p);
-    }
-    let b = cfg.b as usize;
-    let supersteps = cfg.steps / cfg.b;
-    let endpoints = fabric(cfg.workers);
-    let t0 = std::time::Instant::now();
-
-    let mut handles = Vec::with_capacity(p);
-    for (w, mut ep) in endpoints.into_iter().enumerate() {
-        let mut x: Vec<f32> = initial[w * n..(w + 1) * n].to_vec();
-        let cfg = cfg.clone();
-        handles.push(thread::spawn(move || -> Result<_> {
-            // Each worker owns its own PJRT client/executable (the xla
-            // client is Rc-based and cannot be shared across threads).
-            let t_setup = std::time::Instant::now();
-            let rt = Runtime::new(&cfg.artifacts_dir)?;
-            let art = cfg.artifact_name();
-            rt.warm(&art)?;
-            let setup_s = t_setup.elapsed().as_secs_f64();
-            let (mut exch_s, mut comp_s) = (0.0f64, 0.0f64);
-            let last = cfg.workers as usize - 1;
-
-            let mut tile = vec![0.0f32; n + 2 * b];
-            for _ss in 0..supersteps {
-                let te = std::time::Instant::now();
-                // Post edges to neighbours first (non-blocking sends)...
-                if w > 0 {
-                    ep.send(
-                        (w - 1) as u32,
-                        Payload { tasks: Vec::new(), values: x[..b].to_vec() },
-                    );
-                }
-                if w < last {
-                    ep.send(
-                        (w + 1) as u32,
-                        Payload { tasks: Vec::new(), values: x[n - b..].to_vec() },
-                    );
-                }
-                // ...then fill the ghost regions.
-                if w > 0 {
-                    let got = ep.recv_from((w - 1) as u32);
-                    tile[..b].copy_from_slice(&got.values);
-                } else {
-                    // Odd reflection about x[0]: ghost[k] = 2 x0 − x[b−k].
-                    for k in 0..b {
-                        tile[k] = 2.0 * x[0] - x[b - k];
-                    }
-                }
-                if w < last {
-                    let got = ep.recv_from((w + 1) as u32);
-                    tile[n + b..].copy_from_slice(&got.values);
-                } else {
-                    // Odd reflection about x[n−1].
-                    for k in 0..b {
-                        tile[n + b + k] = 2.0 * x[n - 1] - x[n - 2 - k];
-                    }
-                }
-                tile[b..n + b].copy_from_slice(&x);
-                exch_s += te.elapsed().as_secs_f64();
-
-                let tc = std::time::Instant::now();
-                x = rt
-                    .execute_f32_1(
-                        &art,
-                        &[Value::F32(tile.clone()), Value::scalar(cfg.nu)],
-                    )
-                    .with_context(|| format!("worker {w} superstep"))?;
-                comp_s += tc.elapsed().as_secs_f64();
-            }
-            Ok((x, setup_s, exch_s, comp_s, ep.sent_messages, ep.sent_words, rt.metrics().executions))
-        }));
-    }
-
-    let mut field = vec![0.0f32; n * p];
-    let mut stats = RunStats { supersteps, ..Default::default() };
-    for (w, h) in handles.into_iter().enumerate() {
-        let (tile, setup, exch, comp, msgs, words, execs) =
-            h.join().expect("worker thread panicked")?;
-        field[w * n..(w + 1) * n].copy_from_slice(&tile);
-        stats.setup_secs = stats.setup_secs.max(setup);
-        stats.exchange_secs = stats.exchange_secs.max(exch);
-        stats.compute_secs = stats.compute_secs.max(comp);
-        stats.messages += msgs;
-        stats.words += words;
-        stats.executions += execs;
-    }
-    stats.wall_secs = t0.elapsed().as_secs_f64();
-    Ok((field, stats))
+    run_tiled(cfg, initial)
 }
 
 /// Sequential reference via the `heat1d_full_n{N}` artifact (Dirichlet).
@@ -299,5 +258,37 @@ mod tests {
             artifacts_dir: "artifacts".into(),
         };
         assert!(cfg.validate().is_err()); // 8 % 3 != 0
+    }
+
+    #[test]
+    fn exchange_geometry_without_pjrt() {
+        // The trait geometry is testable with no artifacts: two workers
+        // exchange b-deep edges over a real fabric.
+        use crate::coordinator::messages::fabric;
+        let cfg = Heat1dConfig {
+            n_per_worker: 8,
+            workers: 2,
+            b: 2,
+            steps: 2,
+            nu: 0.1,
+            artifacts_dir: "artifacts".into(),
+        };
+        let x0: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let x1: Vec<f32> = (0..8).map(|i| 10.0 + i as f32).collect();
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let c = cfg.clone();
+        let x1c = x1.clone();
+        let h = std::thread::spawn(move || c.exchange(1, &mut e1, &x1c));
+        let t0 = cfg.exchange(0, &mut e0, &x0);
+        let t1 = h.join().unwrap();
+        // Worker 0: left ghost by odd reflection, right ghost = x1[..2].
+        assert_eq!(&t0[2..10], &x0[..]);
+        assert_eq!(&t0[10..], &x1[..2]);
+        assert_eq!(t0[1], 2.0 * x0[0] - x0[1]);
+        // Worker 1: left ghost = x0[6..], right ghost odd-reflected.
+        assert_eq!(&t1[..2], &x0[6..]);
+        assert_eq!(t1[10], 2.0 * x1[7] - x1[6]);
     }
 }

@@ -1,6 +1,6 @@
-//! Real distributed execution of the 2-D five-point heat equation on a
-//! periodic domain: a `px × py` worker grid with 8-neighbour ghost-frame
-//! exchange and PJRT blocked compute.
+//! 2-D five-point heat equation geometry for the generic tiled engine
+//! ([`super::tile`]): a `px × py` worker grid with 8-neighbour
+//! ghost-frame exchange and PJRT blocked compute on a periodic domain.
 //!
 //! The 2-D case is where the blocked exchange gets interesting: for
 //! `b > 1` the dependence cone reaches *diagonally*, so a worker needs
@@ -11,11 +11,17 @@
 //! The domain is periodic, which makes the trajectory independent of the
 //! block factor — runs at different `b` must agree to rounding, and the
 //! tests assert it against a pure-Rust reference.
+//!
+//! All leader/worker plumbing lives in [`super::tile::run_tiled`]; this
+//! module only describes the 2-D exchange geometry.
 
-use super::messages::{fabric, Payload};
-use crate::runtime::{Runtime, Value};
-use anyhow::{bail, Context, Result};
-use std::thread;
+use super::messages::{Endpoint, Payload};
+use super::tile::{run_tiled, TiledWorkload};
+use crate::runtime::Value;
+use anyhow::{bail, Result};
+
+/// Statistics of a 2-D run (same shape as 1-D).
+pub use super::tile::RunStats;
 
 /// Configuration of one distributed 2-D heat run.
 #[derive(Debug, Clone)]
@@ -65,145 +71,145 @@ impl Heat2dConfig {
         let qy = qy.rem_euclid(py);
         (qx * py + qy) as u32
     }
+
+    /// Worker grid coordinates of rank `w`.
+    fn coords(&self, w: usize) -> (i64, i64) {
+        ((w as u32 / self.py) as i64, (w as u32 % self.py) as i64)
+    }
 }
 
-/// Statistics of a 2-D run (same shape as 1-D).
-pub use super::heat1d::RunStats;
+impl TiledWorkload for Heat2dConfig {
+    fn workers(&self) -> u32 {
+        self.px * self.py
+    }
+
+    fn supersteps(&self) -> u32 {
+        self.steps / self.b
+    }
+
+    fn artifact(&self) -> String {
+        self.artifact_name()
+    }
+
+    fn artifacts_dir(&self) -> &std::path::Path {
+        &self.artifacts_dir
+    }
+
+    fn owned_len(&self) -> usize {
+        self.tile_h * self.tile_w
+    }
+
+    fn extract(&self, w: usize, global: &[f32]) -> Vec<f32> {
+        let (th, tw, gw) = (self.tile_h, self.tile_w, self.grid_w());
+        let (qx, qy) = self.coords(w);
+        let mut x = vec![0.0f32; th * tw];
+        for r in 0..th {
+            let gr = qx as usize * th + r;
+            let gc0 = qy as usize * tw;
+            x[r * tw..(r + 1) * tw].copy_from_slice(&global[gr * gw + gc0..gr * gw + gc0 + tw]);
+        }
+        x
+    }
+
+    fn place(&self, w: usize, tile: &[f32], global: &mut [f32]) {
+        let (th, tw, gw) = (self.tile_h, self.tile_w, self.grid_w());
+        let (qx, qy) = self.coords(w);
+        for r in 0..th {
+            let gr = qx as usize * th + r;
+            let gc0 = qy as usize * tw;
+            global[gr * gw + gc0..gr * gw + gc0 + tw].copy_from_slice(&tile[r * tw..(r + 1) * tw]);
+        }
+    }
+
+    fn exchange(&self, w: usize, ep: &mut Endpoint, x: &[f32]) -> Vec<f32> {
+        let (th, tw) = (self.tile_h, self.tile_w);
+        let b = self.b as usize;
+        let (eh, ew) = (th + 2 * b, tw + 2 * b);
+        let (qx, qy) = self.coords(w);
+
+        // Neighbour ranks (periodic): (dr, dc) offsets.
+        let dirs: [(i64, i64); 8] =
+            [(-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 1), (1, -1), (1, 0), (1, 1)];
+        let nbr: Vec<u32> = dirs.iter().map(|&(dr, dc)| self.rank(qx + dr, qy + dc)).collect();
+
+        // Sub-rectangle extraction on the owned tile.
+        let extract = |x: &[f32], r0: usize, c0: usize, h: usize, wd: usize| -> Vec<f32> {
+            let mut out = Vec::with_capacity(h * wd);
+            for r in r0..r0 + h {
+                out.extend_from_slice(&x[r * tw + c0..r * tw + c0 + wd]);
+            }
+            out
+        };
+
+        // What each neighbour needs is the part of *our* tile adjacent to
+        // it: e.g. the north neighbour needs our top b rows, the
+        // north-west corner our top-left b×b block.
+        let blocks: [Vec<f32>; 8] = [
+            extract(x, 0, 0, b, b),           // to NW: our top-left corner
+            extract(x, 0, 0, b, tw),          // to N:  top strip
+            extract(x, 0, tw - b, b, b),      // to NE
+            extract(x, 0, 0, th, b),          // to W:  left strip
+            extract(x, 0, tw - b, th, b),     // to E
+            extract(x, th - b, 0, b, b),      // to SW
+            extract(x, th - b, 0, b, tw),     // to S
+            extract(x, th - b, tw - b, b, b), // to SE
+        ];
+        for (i, blk) in blocks.iter().enumerate() {
+            ep.send(nbr[i], Payload { tasks: Vec::new(), values: blk.clone() });
+        }
+        // Receive the mirror blocks.  Our ghost on side `i` is the
+        // neighbour-at-`dirs[i]`'s block sent toward direction `7 − i`
+        // (`dirs[i] + dirs[7−i] = 0`).  On small periodic grids one rank
+        // serves several of our directions (px = 2 makes N and S the same
+        // rank), and `recv_from` consumes that rank's messages in *its*
+        // send order — ascending sender-direction `i' = 7 − i`, i.e. our
+        // `i` descending.
+        let mut incoming: Vec<Vec<f32>> = vec![Vec::new(); 8];
+        let mut by_rank: std::collections::BTreeMap<u32, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (i, &r) in nbr.iter().enumerate() {
+            by_rank.entry(r).or_default().push(i);
+        }
+        for (rank, mut sides) in by_rank {
+            sides.sort_unstable_by(|a, b| b.cmp(a)); // our i desc
+            for i in sides {
+                incoming[i] = ep.recv_from(rank).values;
+            }
+        }
+        // Assemble the extended tile.
+        let mut tile = vec![0.0f32; eh * ew];
+        let place = |t: &mut [f32], r0: usize, c0: usize, h: usize, wd: usize, v: &[f32]| {
+            for r in 0..h {
+                t[(r0 + r) * ew + c0..(r0 + r) * ew + c0 + wd]
+                    .copy_from_slice(&v[r * wd..(r + 1) * wd]);
+            }
+        };
+        place(&mut tile, 0, 0, b, b, &incoming[0]); // NW corner ghost
+        place(&mut tile, 0, b, b, tw, &incoming[1]); // N strip
+        place(&mut tile, 0, b + tw, b, b, &incoming[2]); // NE
+        place(&mut tile, b, 0, th, b, &incoming[3]); // W
+        place(&mut tile, b, b + tw, th, b, &incoming[4]); // E
+        place(&mut tile, b + th, 0, b, b, &incoming[5]); // SW
+        place(&mut tile, b + th, b, b, tw, &incoming[6]); // S
+        place(&mut tile, b + th, b + tw, b, b, &incoming[7]); // SE
+        place(&mut tile, b, b, th, tw, x); // centre
+        tile
+    }
+
+    fn kernel_args(&self) -> Vec<Value> {
+        vec![Value::scalar(self.nu)]
+    }
+}
 
 /// Run the distributed 2-D heat equation.  `initial` is the global
 /// row-major `grid_h × grid_w` field; the result is in the same layout.
 pub fn run(cfg: &Heat2dConfig, initial: &[f32]) -> Result<(Vec<f32>, RunStats)> {
     cfg.validate()?;
-    let (th, tw) = (cfg.tile_h, cfg.tile_w);
     let (gh, gw) = (cfg.grid_h(), cfg.grid_w());
     if initial.len() != gh * gw {
         bail!("initial field {} != {}x{}", initial.len(), gh, gw);
     }
-    let b = cfg.b as usize;
-    let nworkers = (cfg.px * cfg.py) as usize;
-    let supersteps = cfg.steps / cfg.b;
-    let endpoints = fabric(nworkers as u32);
-    let t0 = std::time::Instant::now();
-
-    let mut handles = Vec::with_capacity(nworkers);
-    for (w, mut ep) in endpoints.into_iter().enumerate() {
-        let (qx, qy) = ((w as u32 / cfg.py) as i64, (w as u32 % cfg.py) as i64);
-        // Extract this worker's tile from the global field.
-        let mut x = vec![0.0f32; th * tw];
-        for r in 0..th {
-            let gr = qx as usize * th + r;
-            let gc0 = qy as usize * tw;
-            x[r * tw..(r + 1) * tw].copy_from_slice(&initial[gr * gw + gc0..gr * gw + gc0 + tw]);
-        }
-        let cfg = cfg.clone();
-        handles.push(thread::spawn(move || -> Result<_> {
-            let t_setup = std::time::Instant::now();
-            let rt = Runtime::new(&cfg.artifacts_dir)?;
-            let art = cfg.artifact_name();
-            rt.warm(&art)?;
-            let setup_s = t_setup.elapsed().as_secs_f64();
-            let (mut exch_s, mut comp_s) = (0.0f64, 0.0f64);
-            let (eh, ew) = (th + 2 * b, tw + 2 * b);
-            let mut tile = vec![0.0f32; eh * ew];
-
-            // Neighbour ranks (periodic): (dr, dc) offsets.
-            let dirs: [(i64, i64); 8] =
-                [(-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 1), (1, -1), (1, 0), (1, 1)];
-            let nbr: Vec<u32> = dirs.iter().map(|&(dr, dc)| cfg.rank(qx + dr, qy + dc)).collect();
-
-            // Sub-rectangle extraction helpers on the owned tile.
-            let extract = |x: &[f32], r0: usize, c0: usize, h: usize, wd: usize| -> Vec<f32> {
-                let mut out = Vec::with_capacity(h * wd);
-                for r in r0..r0 + h {
-                    out.extend_from_slice(&x[r * tw + c0..r * tw + c0 + wd]);
-                }
-                out
-            };
-
-            for _ss in 0..supersteps {
-                let te = std::time::Instant::now();
-                // What each neighbour needs is the part of *our* tile
-                // adjacent to it: e.g. the north neighbour needs our top
-                // b rows, the north-west corner our top-left b×b block.
-                let blocks: [Vec<f32>; 8] = [
-                    extract(&x, 0, 0, b, b),               // to NW: our top-left corner
-                    extract(&x, 0, 0, b, tw),              // to N:  top strip
-                    extract(&x, 0, tw - b, b, b),          // to NE
-                    extract(&x, 0, 0, th, b),              // to W:  left strip
-                    extract(&x, 0, tw - b, th, b),         // to E
-                    extract(&x, th - b, 0, b, b),          // to SW
-                    extract(&x, th - b, 0, b, tw),         // to S
-                    extract(&x, th - b, tw - b, b, b),     // to SE
-                ];
-                for (i, blk) in blocks.iter().enumerate() {
-                    ep.send(nbr[i], Payload { tasks: Vec::new(), values: blk.clone() });
-                }
-                // Receive the mirror blocks.  Our ghost on side `i` is the
-                // neighbour-at-`dirs[i]`'s block sent toward direction
-                // `7 − i` (`dirs[i] + dirs[7−i] = 0`).  On small periodic
-                // grids one rank serves several of our directions (px = 2
-                // makes N and S the same rank), and `recv_from` consumes
-                // that rank's messages in *its* send order — ascending
-                // sender-direction `i' = 7 − i`, i.e. our `i` descending.
-                let mut incoming: Vec<Vec<f32>> = vec![Vec::new(); 8];
-                let mut by_rank: std::collections::BTreeMap<u32, Vec<usize>> =
-                    std::collections::BTreeMap::new();
-                for (i, &r) in nbr.iter().enumerate() {
-                    by_rank.entry(r).or_default().push(i);
-                }
-                for (rank, mut sides) in by_rank {
-                    sides.sort_unstable_by(|a, b| b.cmp(a)); // our i desc
-                    for i in sides {
-                        incoming[i] = ep.recv_from(rank).values;
-                    }
-                }
-                // Assemble the extended tile.
-                let place = |t: &mut [f32], r0: usize, c0: usize, h: usize, wd: usize, v: &[f32]| {
-                    for r in 0..h {
-                        t[(r0 + r) * ew + c0..(r0 + r) * ew + c0 + wd]
-                            .copy_from_slice(&v[r * wd..(r + 1) * wd]);
-                    }
-                };
-                place(&mut tile, 0, 0, b, b, &incoming[0]); // NW corner ghost
-                place(&mut tile, 0, b, b, tw, &incoming[1]); // N strip
-                place(&mut tile, 0, b + tw, b, b, &incoming[2]); // NE
-                place(&mut tile, b, 0, th, b, &incoming[3]); // W
-                place(&mut tile, b, b + tw, th, b, &incoming[4]); // E
-                place(&mut tile, b + th, 0, b, b, &incoming[5]); // SW
-                place(&mut tile, b + th, b, b, tw, &incoming[6]); // S
-                place(&mut tile, b + th, b + tw, b, b, &incoming[7]); // SE
-                place(&mut tile, b, b, th, tw, &x); // centre
-                exch_s += te.elapsed().as_secs_f64();
-
-                let tc = std::time::Instant::now();
-                x = rt
-                    .execute_f32_1(&art, &[Value::F32(tile.clone()), Value::scalar(cfg.nu)])
-                    .with_context(|| format!("worker {w} superstep"))?;
-                comp_s += tc.elapsed().as_secs_f64();
-            }
-            Ok((x, setup_s, exch_s, comp_s, ep.sent_messages, ep.sent_words, rt.metrics().executions))
-        }));
-    }
-
-    let mut field = vec![0.0f32; gh * gw];
-    let mut stats = RunStats { supersteps, ..Default::default() };
-    for (w, h) in handles.into_iter().enumerate() {
-        let (tile, setup, exch, comp, msgs, words, execs) = h.join().expect("worker panicked")?;
-        let (qx, qy) = (w / cfg.py as usize, w % cfg.py as usize);
-        for r in 0..th {
-            let gr = qx * th + r;
-            let gc0 = qy * tw;
-            field[gr * gw + gc0..gr * gw + gc0 + tw].copy_from_slice(&tile[r * tw..(r + 1) * tw]);
-        }
-        stats.setup_secs = stats.setup_secs.max(setup);
-        stats.exchange_secs = stats.exchange_secs.max(exch);
-        stats.compute_secs = stats.compute_secs.max(comp);
-        stats.messages += msgs;
-        stats.words += words;
-        stats.executions += execs;
-    }
-    stats.wall_secs = t0.elapsed().as_secs_f64();
-    Ok((field, stats))
+    run_tiled(cfg, initial)
 }
 
 /// Pure-Rust periodic reference (f32 arithmetic mirroring the kernel).
@@ -310,5 +316,27 @@ mod tests {
         assert_eq!(cfg.rank(-1, 0), cfg.rank(1, 0));
         assert_eq!(cfg.rank(0, -1), cfg.rank(0, 1));
         assert_eq!(cfg.rank(2, 2), cfg.rank(0, 0));
+    }
+
+    #[test]
+    fn extract_place_roundtrip() {
+        let cfg = Heat2dConfig {
+            tile_h: 4,
+            tile_w: 3,
+            px: 2,
+            py: 2,
+            b: 1,
+            steps: 1,
+            nu: 0.1,
+            artifacts_dir: "artifacts".into(),
+        };
+        let global: Vec<f32> = (0..cfg.grid_h() * cfg.grid_w()).map(|i| i as f32).collect();
+        let mut rebuilt = vec![0.0f32; global.len()];
+        for w in 0..4 {
+            let tile = cfg.extract(w, &global);
+            assert_eq!(tile.len(), cfg.owned_len());
+            cfg.place(w, &tile, &mut rebuilt);
+        }
+        assert_eq!(global, rebuilt);
     }
 }

@@ -1,17 +1,16 @@
 //! The real (not simulated) distributed runtime: leader + worker threads
 //! over channels, executing transformed schedules with PJRT compute.
 //!
-//! Three engines share the [`messages`] fabric:
+//! Two engines share the [`messages`] fabric:
 //!
-//! * [`generic`] — executes any [`crate::sim::ExecPlan`] with synthetic
+//! * [`generic`] — executes any [`crate::sim::ExecPlan`] with pluggable
 //!   deterministic task values; the routing/state-management correctness
 //!   core, verified bit-exactly against sequential evaluation (and
-//!   hammered by the property suite).
-//! * [`heat1d`] — the paper's running example for real: tile-per-worker,
-//!   `b`-deep ghost exchange once per superstep, blocked Pallas kernel
-//!   via PJRT.  `b = 1` is the naive baseline.
-//! * [`heat2d`] — the 2-D five-point version with 8-neighbour ghost-frame
-//!   exchange on a periodic domain.
+//!   hammered by the property suite).  This is what
+//!   [`crate::pipeline::Pipeline::execute`] runs.
+//! * [`tile`] — the single leader/worker loop behind every PJRT-backed
+//!   run; problems plug in as [`tile::TiledWorkload`] geometries.
+//!   [`heat1d`] and [`heat2d`] are thin geometry adapters over it.
 //!
 //! Python never runs here: every worker loads AOT artifacts through
 //! [`crate::runtime::Runtime`].
@@ -20,7 +19,12 @@ pub mod generic;
 pub mod heat1d;
 pub mod heat2d;
 pub mod messages;
+pub mod tile;
 
-pub use generic::{run_and_verify, run_generic, sequential_values, GenericRunResult};
-pub use heat1d::{Heat1dConfig, RunStats};
+pub use generic::{
+    run_and_verify, run_and_verify_with, run_generic, run_generic_with, sequential_values,
+    sequential_values_with, GenericRunResult, ValueSemantics,
+};
+pub use heat1d::Heat1dConfig;
 pub use heat2d::Heat2dConfig;
+pub use tile::{run_tiled, RunStats, TiledWorkload};

@@ -17,12 +17,38 @@
 //! the simulation study; the benches write their CSVs via these functions.
 
 use crate::config::{parse_list, Config};
+use crate::pipeline::{Heat1d, Pipeline};
 use crate::sim::{ca_time_for, naive_time_1d, overlap_time_1d, Machine};
 use crate::stencil::heat1d_graph;
 use crate::trace::FigureSeries;
-use crate::transform::{
-    communication_avoiding, CaSchedule, HaloMode, ScheduleStats, TransformOptions,
-};
+use crate::transform::{CaSchedule, ScheduleStats, TransformOptions};
+use std::sync::Arc;
+
+/// The figures' common front end: run a 1-D heat problem through the
+/// [`Pipeline`] and return the graph plus the whole-graph §3 schedule
+/// whose subsets they render.
+///
+/// The plan built inside `transform()` derives the same schedule once
+/// more than strictly necessary; figure graphs are tiny (tens of points,
+/// single-digit levels), so the uniform Pipeline front end wins over the
+/// saved microseconds.  Checking happens once, on the schedule returned.
+fn heat1d_schedule(
+    n: u64,
+    m: u32,
+    p: u32,
+    options: TransformOptions,
+) -> (Arc<crate::graph::TaskGraph>, CaSchedule) {
+    let t = Pipeline::new(Heat1d { n, steps: m, radius: 1 })
+        .procs(p)
+        .options(options)
+        .skip_check()
+        .transform()
+        .expect("heat1d transforms for every figure configuration");
+    let s = t.full_schedule().expect("CA strategy always has a schedule");
+    crate::transform::check_schedule(&t.graph, &s)
+        .expect("figure schedules satisfy Theorem 1");
+    (t.graph, s)
+}
 
 /// Render the (point × level) membership of one processor's subsets as an
 /// ASCII grid.  Rows are levels (top = latest), columns are grid points;
@@ -63,8 +89,7 @@ pub fn subset_grid(n: u64, m: u32, _p: u32, proc: u32, s: &CaSchedule) -> String
 /// Figure 1: the blocked update with a width-`b` level-0 ghost region and
 /// fully redundant intermediate recomputation (HaloMode::Level0Only).
 pub fn fig1(n: u64, b: u32, p: u32) -> String {
-    let g = heat1d_graph(n, b, p);
-    let s = communication_avoiding(&g, TransformOptions { halo: HaloMode::Level0Only });
+    let (g, s) = heat1d_schedule(n, b, p, TransformOptions::level0());
     let stats = ScheduleStats::compute(&g, &s);
     let mut out = format!(
         "Figure 1 — blocked computation, {n} points × {b} steps on {p} procs (level-0 halo)\n\
@@ -81,8 +106,7 @@ pub fn fig1(n: u64, b: u32, p: u32) -> String {
 /// Figure 2: the overlap schedule — what each phase contains and what the
 /// message flight hides.
 pub fn fig2(n: u64, b: u32, p: u32) -> String {
-    let g = heat1d_graph(n, b, p);
-    let s = communication_avoiding(&g, TransformOptions::default());
+    let (_, s) = heat1d_schedule(n, b, p, TransformOptions::default());
     let sets = &s.per_proc[(p / 2) as usize];
     format!(
         "Figure 2 — overlap of communication and computation ({n}×{b} on {p} procs)\n\
@@ -100,9 +124,8 @@ pub fn fig2(n: u64, b: u32, p: u32) -> String {
 /// Figure 3: the multi-level halo — intermediate-level values travel, so
 /// less is recomputed than under the level-0 scheme.
 pub fn fig3(n: u64, b: u32, p: u32) -> String {
-    let g = heat1d_graph(n, b, p);
-    let multi = communication_avoiding(&g, TransformOptions::default());
-    let lvl0 = communication_avoiding(&g, TransformOptions { halo: HaloMode::Level0Only });
+    let (g, multi) = heat1d_schedule(n, b, p, TransformOptions::default());
+    let (_, lvl0) = heat1d_schedule(n, b, p, TransformOptions::level0());
     let sm = ScheduleStats::compute(&g, &multi);
     let s0 = ScheduleStats::compute(&g, &lvl0);
     let mut out = format!(
@@ -120,8 +143,7 @@ pub fn fig3(n: u64, b: u32, p: u32) -> String {
 
 /// Figure 4: full subset listing of one processor.
 pub fn fig4(n: u64, m: u32, p: u32) -> String {
-    let g = heat1d_graph(n, m, p);
-    let s = communication_avoiding(&g, TransformOptions::default());
+    let (_, s) = heat1d_schedule(n, m, p, TransformOptions::default());
     let sets = &s.per_proc[(p / 2) as usize];
     let fmt_set = |name: &str, v: &Vec<u32>| {
         format!("  {name:<5} ({:>4} tasks): {}\n", v.len(), preview(v))
@@ -139,8 +161,7 @@ pub fn fig4(n: u64, m: u32, p: u32) -> String {
 /// Figure 5: the communicated sets — what is sent (parts of L⁰ and L¹)
 /// and what is received, per processor pair.
 pub fn fig5(n: u64, m: u32, p: u32) -> String {
-    let g = heat1d_graph(n, m, p);
-    let s = communication_avoiding(&g, TransformOptions::default());
+    let (_, s) = heat1d_schedule(n, m, p, TransformOptions::default());
     let mut out = format!("Figure 5 — communicated sets ({n}×{m} on {p} procs)\n");
     for ps in &s.per_proc {
         for msg in &ps.send {
@@ -172,8 +193,7 @@ pub struct Fig6Data {
 
 /// Figure 6: the k₁/k₂/k₃ sets for a processor doing a 1-D heat equation.
 pub fn fig6(n: u64, m: u32, p: u32) -> (String, Fig6Data) {
-    let g = heat1d_graph(n, m, p);
-    let s = communication_avoiding(&g, TransformOptions::default());
+    let (g, s) = heat1d_schedule(n, m, p, TransformOptions::default());
     let proc = p / 2;
     let sets = &s.per_proc[proc as usize];
     let mut out = format!(
@@ -304,6 +324,7 @@ fn preview(v: &[u32]) -> String {
 mod tests {
     use super::*;
     use crate::config::{preset_fig7, preset_fig8};
+    use crate::transform::communication_avoiding;
 
     #[test]
     fn fig1_renders_and_counts_ghost() {
@@ -322,8 +343,7 @@ mod tests {
     fn fig3_multilevel_less_redundant() {
         let g = heat1d_graph(64, 6, 4);
         let multi = communication_avoiding(&g, TransformOptions::default());
-        let lvl0 =
-            communication_avoiding(&g, TransformOptions { halo: HaloMode::Level0Only });
+        let lvl0 = communication_avoiding(&g, TransformOptions::level0());
         let rm = ScheduleStats::compute(&g, &multi).redundant_tasks;
         let r0 = ScheduleStats::compute(&g, &lvl0).redundant_tasks;
         assert!(rm < r0, "multi {rm} vs level0 {r0}");

@@ -8,20 +8,41 @@
 //! §4 strong-scaling study (figures 7/8), and a real leader/worker runtime
 //! that executes the transformed schedules with AOT-compiled XLA compute.
 //!
+//! ## Start here: the pipeline
+//!
+//! [`pipeline`] is the front door — one fluent builder from a problem
+//! description to a transformed schedule, a simulated run, and a real
+//! (threads + channels) verified execution:
+//!
+//! ```
+//! use imp_latency::pipeline::{Heat1d, Pipeline};
+//! use imp_latency::sim::Machine;
+//!
+//! let run = Pipeline::new(Heat1d::new(128, 8)).procs(4).block(4).transform().unwrap();
+//! println!("{}", run.simulate(&Machine::high_latency(4, 16)).summary());
+//! println!("{}", run.execute().unwrap().summary());
+//! ```
+//!
 //! ## Layer map
 //!
 //! * [`graph`] — the task-graph IR every other module consumes.
 //! * [`imp`] — the IMP formalism: index sets, distributions, signature
 //!   functions; derives task graphs from data-parallel programs.
-//! * [`stencil`] — concrete problem generators (1-D/2-D heat, CSR SpMV).
+//! * [`stencil`] — concrete problem generators (1-D/2-D heat, 9-point
+//!   Moore stencil, CSR SpMV).
 //! * [`transform`] — **the paper's contribution**: the subset derivation,
 //!   Theorem-1 checker, blocking, and redundancy accounting.
 //! * [`sim`] — α/β/γ discrete-event simulator for naive / overlap /
 //!   communication-avoiding schedules (paper §4).
+//! * [`pipeline`] — **the front door**: the [`pipeline::Workload`] trait
+//!   and the [`pipeline::Pipeline`] builder tying every layer below into
+//!   one expression, with a shared [`pipeline::RunReport`].
 //! * [`cost`] — the §2.1 analytic cost model `T(b) = (M/b)α + Mβ + (MN/p + Mb)γ`.
 //! * [`krylov`] — the motivating application: classic and latency-tolerant CG.
 //! * [`runtime`] — PJRT artifact loading/execution (`xla` crate).
-//! * [`coordinator`] — real threads+channels execution of transformed graphs.
+//! * [`coordinator`] — real threads+channels execution: the generic plan
+//!   engine behind [`pipeline::Transformed::execute`], and the tiled PJRT
+//!   engine ([`coordinator::tile`]) with its per-problem geometries.
 //! * [`trace`] — Gantt charts and CSV series for the figures.
 //! * [`config`] — experiment presets and a small key=value config parser.
 //! * [`figures`] — regenerates every paper figure's data.
@@ -34,6 +55,7 @@ pub mod figures;
 pub mod graph;
 pub mod imp;
 pub mod krylov;
+pub mod pipeline;
 pub mod prop;
 pub mod runtime;
 pub mod sim;
@@ -43,4 +65,5 @@ pub mod transform;
 pub mod util;
 
 pub use graph::{ProcId, TaskGraph, TaskId};
+pub use pipeline::{Pipeline, RunReport, Workload};
 pub use transform::{CaSchedule, HaloMode, TransformOptions};

@@ -3,6 +3,8 @@
 //! Subcommands (arguments are `key=value` pairs, see `--help`):
 //!
 //! * `figure <f1..f8|all>` — regenerate a paper figure (CSV + ASCII);
+//! * `pipeline` — any workload end to end through the [`Pipeline`] API:
+//!   transform, simulate, and verified real execution in one go;
 //! * `transform` — run the §3 transformation, print subsets + Theorem-1 verdict;
 //! * `simulate` — compare naive/overlap/CA on the discrete-event simulator;
 //! * `cost` — the §2.1 cost model table and optimal block factor;
@@ -15,13 +17,14 @@ use imp_latency::coordinator::{heat1d, heat2d};
 use imp_latency::cost::CostModel;
 use imp_latency::figures;
 use imp_latency::krylov::distributed::{self as dcg, CgConfig};
-use imp_latency::runtime::Registry;
-use imp_latency::sim::{simulate, ExecPlan, Machine};
-use imp_latency::stencil::heat1d_graph;
-use imp_latency::trace::{gantt_ascii, summary_line};
-use imp_latency::transform::{
-    check_schedule, communication_avoiding, HaloMode, ScheduleStats, TransformOptions,
+use imp_latency::pipeline::{
+    ConjugateGradient, Heat1d, Heat2d, Moore2d, Pipeline, Spmv, Strategy, Workload,
 };
+use imp_latency::runtime::Registry;
+use imp_latency::sim::{simulate, Machine};
+use imp_latency::stencil::CsrMatrix;
+use imp_latency::trace::{gantt_ascii, summary_line};
+use imp_latency::transform::{check_schedule, HaloMode, ScheduleStats, TransformOptions};
 
 const HELP: &str = "\
 imp-latency — Task Graph Transformations for Latency Tolerance (Eijkhout 2018)
@@ -30,6 +33,10 @@ USAGE: imp-latency <command> [key=value ...]
 
 COMMANDS
   figure <f1..f8|all> [out=results/]   regenerate paper figures
+  pipeline   [workload=heat1d|heat2d|moore2d|spmv|cg n=4096 m=16 p=4 b=4
+              strategy=ca|naive|overlap halo=multi|level0 h=32 w=32
+              threads=8 alpha=500 beta=0.1 gamma=1]
+             one workload end to end: transform + simulate + verified real run
   transform  [n=64 m=8 p=4 halo=multi] subsets + Theorem-1 check + stats
   simulate   [n=4096 m=32 p=8 threads=8 alpha=500 beta=0.1 gamma=1 blocks=2,4,8]
   cost       [n=65536 m=128 p=16 alpha=300 beta=0.2 gamma=1 max_b=64]
@@ -63,6 +70,7 @@ fn run(args: &[String]) -> Result<(), String> {
     let rest: Vec<&str> = args[1..].iter().map(String::as_str).collect();
     match cmd.as_str() {
         "figure" => cmd_figure(&rest),
+        "pipeline" => cmd_pipeline(&rest),
         "transform" => cmd_transform(&rest),
         "simulate" => cmd_simulate(&rest),
         "cost" => cmd_cost(&rest),
@@ -144,6 +152,14 @@ fn cmd_figure(args: &[&str]) -> Result<(), String> {
     Ok(())
 }
 
+fn parse_halo(cfg: &Config) -> Result<HaloMode, String> {
+    match cfg.get_or("halo", "multi".to_string()).as_str() {
+        "multi" => Ok(HaloMode::MultiLevel),
+        "level0" => Ok(HaloMode::Level0Only),
+        other => Err(format!("halo must be multi|level0, got {other:?}")),
+    }
+}
+
 fn cmd_transform(args: &[&str]) -> Result<(), String> {
     let mut defaults = Config::new();
     defaults.set("n", 64);
@@ -152,15 +168,19 @@ fn cmd_transform(args: &[&str]) -> Result<(), String> {
     defaults.set("halo", "multi");
     let (cfg, _) = config_from(defaults, args);
     let (n, m, p) = (cfg.require("n")?, cfg.require("m")?, cfg.require("p")?);
-    let halo = match cfg.get_or("halo", "multi".to_string()).as_str() {
-        "multi" => HaloMode::MultiLevel,
-        "level0" => HaloMode::Level0Only,
-        other => return Err(format!("halo must be multi|level0, got {other:?}")),
-    };
-    let g = heat1d_graph(n, m, p);
+    let halo = parse_halo(&cfg)?;
+    let t = Pipeline::new(Heat1d { n, steps: m, radius: 1 })
+        .procs(p)
+        .halo(halo)
+        .skip_check() // checked explicitly below, with a printed verdict
+        .transform()
+        .map_err(|e| e.to_string())?;
+    // Time exactly one whole-graph §3 derivation, so the printed
+    // Mtasks/s figure stays comparable across versions.
     let t0 = std::time::Instant::now();
-    let s = communication_avoiding(&g, TransformOptions { halo });
+    let s = t.full_schedule().expect("CA strategy");
     let dt = t0.elapsed().as_secs_f64();
+    let g = &t.graph;
     println!(
         "graph: {} tasks, {} edges, {} levels, {} procs  (transformed in {:.1} ms, {:.2} Mtasks/s)",
         g.len(),
@@ -213,22 +233,109 @@ fn cmd_simulate(args: &[&str]) -> Result<(), String> {
     let blocks: Vec<u32> = parse_list(&cfg.get_or("blocks", "2,4,8".to_string()))?;
     let want_gantt = cfg.get_or("gantt", 0) != 0;
 
-    let g = heat1d_graph(n, m, p);
     println!(
         "1-D heat, n={n} m={m} p={p} threads={} α={} β={} γ={}",
         mach.threads, mach.alpha, mach.beta, mach.gamma
     );
-    let mut plans = vec![ExecPlan::naive(&g), ExecPlan::overlap(&g)];
+    let base = Pipeline::new(Heat1d { n, steps: m, radius: 1 }).procs(p);
+    let mut runs = vec![
+        base.clone().naive().transform().map_err(|e| e.to_string())?,
+        base.clone().overlap().transform().map_err(|e| e.to_string())?,
+    ];
     for &b in &blocks {
-        plans.push(ExecPlan::ca(&g, b, TransformOptions::default())?);
+        runs.push(base.clone().block(b).transform().map_err(|e| e.to_string())?);
     }
-    for plan in &plans {
-        let r = simulate(&g, plan, &mach, want_gantt);
-        println!("{}", summary_line(&plan.label, &r));
+    for t in &runs {
+        let r = simulate(&t.graph, &t.plan, &mach, want_gantt);
+        println!("{}", summary_line(&t.plan.label, &r));
         if want_gantt {
             print!("{}", gantt_ascii(&r.spans, r.total_time, 100));
         }
     }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &[&str]) -> Result<(), String> {
+    let mut defaults = Config::new();
+    defaults.set("workload", "heat1d");
+    defaults.set("m", 16);
+    defaults.set("p", 4);
+    defaults.set("h", 32);
+    defaults.set("w", 32);
+    defaults.set("strategy", "ca");
+    defaults.set("halo", "multi");
+    defaults.set("threads", 8);
+    defaults.set("alpha", 500.0);
+    defaults.set("beta", 0.1);
+    defaults.set("gamma", 1.0);
+    let (cfg, _) = config_from(defaults, args);
+    let m: u32 = cfg.require("m")?;
+    let h: u64 = cfg.require("h")?;
+    let w: u64 = cfg.require("w")?;
+    match cfg.get_or("workload", "heat1d".to_string()).as_str() {
+        "heat1d" => run_pipeline(
+            Heat1d { n: cfg.get_or("n", 4096), steps: m, radius: cfg.get_or("r", 1) },
+            &cfg,
+        ),
+        "heat2d" => run_pipeline(Heat2d { h, w, steps: m }, &cfg),
+        "moore2d" => run_pipeline(Moore2d { h, w, steps: m }, &cfg),
+        "spmv" => run_pipeline(
+            Spmv { matrix: CsrMatrix::laplace2d(h as usize, w as usize), steps: m },
+            &cfg,
+        ),
+        // The AllToAll dot levels make CG graphs O(n²) in edges — keep
+        // the default system small.
+        "cg" => run_pipeline(
+            ConjugateGradient { unknowns: cfg.get_or("n", 256), iters: cfg.get_or("iters", 4) },
+            &cfg,
+        ),
+        other => Err(format!("unknown workload {other:?} (heat1d|heat2d|moore2d|spmv|cg)")),
+    }
+}
+
+/// Shared driver: transform `workload` per the config, then simulate and
+/// execute it, printing the uniform reports.
+fn run_pipeline<W: Workload>(workload: W, cfg: &Config) -> Result<(), String> {
+    let p: u32 = cfg.require("p")?;
+    let strategy = match cfg.get_or("strategy", "ca".to_string()).as_str() {
+        "ca" => Strategy::Ca,
+        "naive" => Strategy::Naive,
+        "overlap" => Strategy::Overlap,
+        other => return Err(format!("strategy must be ca|naive|overlap, got {other:?}")),
+    };
+    let mut pipeline = Pipeline::new(workload)
+        .procs(p)
+        .strategy(strategy)
+        .options(TransformOptions::default().with_halo(parse_halo(cfg)?));
+    if let Some(b) = cfg.get("b") {
+        pipeline = pipeline.block(b.parse().map_err(|_| format!("bad block factor {b:?}"))?);
+    }
+    let t0 = std::time::Instant::now();
+    let t = pipeline.transform().map_err(|e| e.to_string())?;
+    let st = t.stats();
+    println!(
+        "transformed in {:.1} ms: {} tasks / {} edges / {} levels on {} procs → \
+         {} executions ({:.3}x), {} msgs / {} words",
+        t0.elapsed().as_secs_f64() * 1e3,
+        st.tasks,
+        st.edges,
+        st.levels,
+        st.procs,
+        st.executed_tasks,
+        st.redundancy_factor,
+        st.messages,
+        st.words
+    );
+    let mach = Machine::new(
+        p,
+        cfg.require("threads")?,
+        cfg.require("alpha")?,
+        cfg.require("beta")?,
+        cfg.require("gamma")?,
+    );
+    println!("  {}", t.simulate(&mach).summary());
+    let report = t.execute().map_err(|e| e.to_string())?;
+    println!("  {}", report.summary());
     Ok(())
 }
 
@@ -450,8 +557,12 @@ fn cmd_dot(args: &[&str]) -> Result<(), String> {
     defaults.set("m", 3);
     defaults.set("p", 2);
     let (cfg, _) = config_from(defaults, args);
-    let g = heat1d_graph(cfg.require("n")?, cfg.require("m")?, cfg.require("p")?);
-    let s = communication_avoiding(&g, TransformOptions::default());
+    let run = Pipeline::new(Heat1d { n: cfg.require("n")?, steps: cfg.require("m")?, radius: 1 })
+        .procs(cfg.require("p")?)
+        .transform()
+        .map_err(|e| e.to_string())?;
+    let g = &run.graph;
+    let s = run.full_schedule().expect("CA strategy");
     let annot = |t: imp_latency::graph::TaskId| -> String {
         let ps = &s.per_proc[g.owner(t).idx()];
         for (name, set) in

@@ -1,0 +1,454 @@
+//! One builder from problem description to transformed schedule,
+//! simulation, and real execution.
+//!
+//! The paper's pipeline — data-parallel description → IMP task graph →
+//! §3 communication-avoiding transformation → simulated or real run —
+//! used to be re-wired by hand per scenario.  This module makes it one
+//! fluent expression over a [`Workload`]:
+//!
+//! ```
+//! use imp_latency::pipeline::{Heat1d, Pipeline};
+//! use imp_latency::sim::Machine;
+//!
+//! let run = Pipeline::new(Heat1d { n: 64, steps: 8, radius: 1 })
+//!     .procs(4)
+//!     .block(4)
+//!     .transform()
+//!     .expect("Theorem 1 holds");
+//!
+//! // §4 discrete-event simulation on an α/β/γ machine...
+//! let sim = run.simulate(&Machine::high_latency(4, 8));
+//! // ...and a real threads-and-channels execution, value-checked
+//! // against the workload's sequential reference solution.
+//! let real = run.execute().expect("distributed values match reference");
+//!
+//! assert!(real.verification.is_verified());
+//! assert_eq!(sim.messages, real.messages);
+//! println!("{}", real.summary());
+//! ```
+//!
+//! A [`Workload`] provides the task graph (for any processor count),
+//! per-task cost hints for the simulator, and the input-value/reference
+//! semantics the real run is verified against.  Five ship in
+//! [`workloads`] — [`Heat1d`], [`Heat2d`], [`Moore2d`], [`Spmv`],
+//! [`ConjugateGradient`] — plus [`GraphWorkload`] for ad-hoc graphs;
+//! adding a scenario means implementing the trait, nothing else.
+
+mod report;
+pub mod workloads;
+
+pub use report::{PipelineStats, RunReport, RunTime, Verification};
+pub use workloads::{ConjugateGradient, GraphWorkload, Heat1d, Heat2d, Moore2d, Spmv};
+
+use crate::coordinator::{run_and_verify_with, ValueSemantics};
+use crate::graph::TaskGraph;
+use crate::sim::{simulate, ExecPlan, Machine};
+use crate::transform::{communication_avoiding, CaSchedule, HaloMode, TransformOptions};
+use std::sync::Arc;
+
+/// A problem the pipeline can carry end to end.
+///
+/// Implementations are cheap descriptions; the graph is derived on demand
+/// so the same description serves any processor count and strategy.
+pub trait Workload {
+    /// Short identifier used in reports ("heat1d", "spmv", ...).
+    fn name(&self) -> String;
+
+    /// Derive the distributed task graph for `procs` processors.
+    fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError>;
+
+    /// Processor count used when the builder does not specify one.
+    fn default_procs(&self) -> u32 {
+        4
+    }
+
+    /// Per-task cost hint in γ units (scales the simulator's `gamma`).
+    fn cost_per_task(&self) -> f64 {
+        1.0
+    }
+
+    /// Words per transmitted value (scales the simulator's `beta`).
+    fn words_per_value(&self) -> usize {
+        1
+    }
+
+    /// Input-value / compute-value semantics for the real run; the same
+    /// semantics produce the sequential reference solution the run is
+    /// verified against.
+    fn semantics(&self) -> ValueSemantics {
+        ValueSemantics::default()
+    }
+}
+
+/// Execution strategy for the plan the pipeline builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Per-level halo exchange, no overlap (§4 baseline).
+    Naive,
+    /// Figure-2 split: interior compute overlaps the messages.
+    Overlap,
+    /// The §3 communication-avoiding transformation (the default).
+    Ca,
+}
+
+/// Everything that can go wrong between description and report.
+#[derive(Debug, Clone)]
+pub enum PipelineError {
+    /// The workload could not produce a graph for the requested layout.
+    Graph(String),
+    /// Slicing/transforming failed, or a superstep schedule violated
+    /// Theorem 1.
+    Transform(String),
+    /// The real run's values diverged from the reference solution.
+    Verify(String),
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::Graph(m) => write!(f, "graph construction: {m}"),
+            PipelineError::Transform(m) => write!(f, "transformation: {m}"),
+            PipelineError::Verify(m) => write!(f, "verification: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+/// The fluent builder.  Configure, then [`Pipeline::transform`] into a
+/// [`Transformed`] pipeline that can be simulated and executed any number
+/// of times.
+#[derive(Debug, Clone)]
+pub struct Pipeline<W: Workload> {
+    workload: W,
+    procs: Option<u32>,
+    block: Option<u32>,
+    strategy: Strategy,
+    options: TransformOptions,
+    check: bool,
+}
+
+impl<W: Workload> Pipeline<W> {
+    pub fn new(workload: W) -> Self {
+        Pipeline {
+            workload,
+            procs: None,
+            block: None,
+            strategy: Strategy::Ca,
+            options: TransformOptions::default(),
+            check: true,
+        }
+    }
+
+    /// Processor count (default: the workload's own default).
+    pub fn procs(mut self, procs: u32) -> Self {
+        self.procs = Some(procs);
+        self
+    }
+
+    /// Block factor `b` for the CA strategy — levels per superstep
+    /// (default: the whole graph depth, i.e. one superstep).
+    pub fn block(mut self, b: u32) -> Self {
+        self.block = Some(b);
+        self
+    }
+
+    /// Halo mode of the transformation (shorthand for
+    /// `options(TransformOptions::default().with_halo(..))`).
+    pub fn halo(mut self, halo: HaloMode) -> Self {
+        self.options = self.options.with_halo(halo);
+        self
+    }
+
+    /// Full transformation options.
+    pub fn options(mut self, options: TransformOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Execution strategy (default [`Strategy::Ca`]).
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Shorthand for `strategy(Strategy::Naive)`.
+    pub fn naive(self) -> Self {
+        self.strategy(Strategy::Naive)
+    }
+
+    /// Shorthand for `strategy(Strategy::Overlap)`.
+    pub fn overlap(self) -> Self {
+        self.strategy(Strategy::Overlap)
+    }
+
+    /// Skip the per-superstep Theorem-1 check during `transform()` (it is
+    /// on by default; skipping trades safety for transform speed on very
+    /// large graphs).
+    pub fn skip_check(mut self) -> Self {
+        self.check = false;
+        self
+    }
+
+    /// Build the graph and the execution plan.  For the CA strategy every
+    /// superstep schedule is verified against Theorem 1 unless
+    /// [`Pipeline::skip_check`] was requested.
+    pub fn transform(self) -> Result<Transformed<W>, PipelineError> {
+        let procs = self.procs.unwrap_or_else(|| self.workload.default_procs());
+        let graph = Arc::new(self.workload.build_graph(procs)?);
+        let depth = graph.num_levels().saturating_sub(1).max(1);
+        let (plan, block) = match self.strategy {
+            Strategy::Naive => (ExecPlan::naive(&graph), None),
+            Strategy::Overlap => (ExecPlan::overlap(&graph), None),
+            Strategy::Ca => {
+                let b = self.block.unwrap_or(depth);
+                if b == 0 {
+                    return Err(PipelineError::Transform(
+                        "block factor must be at least 1".into(),
+                    ));
+                }
+                let plan = if self.check {
+                    ExecPlan::ca_checked(&graph, b, self.options)
+                } else {
+                    ExecPlan::ca(&graph, b, self.options)
+                }
+                .map_err(PipelineError::Transform)?;
+                (plan, Some(b))
+            }
+        };
+        Ok(Transformed { workload: self.workload, graph, plan, procs, block, options: self.options })
+    }
+}
+
+/// A transformed pipeline: graph + plan, ready to simulate or execute.
+#[derive(Debug, Clone)]
+pub struct Transformed<W: Workload> {
+    workload: W,
+    /// The derived task graph (shared with worker threads on execute).
+    pub graph: Arc<TaskGraph>,
+    /// The per-processor phase program.
+    pub plan: ExecPlan,
+    procs: u32,
+    block: Option<u32>,
+    options: TransformOptions,
+}
+
+impl<W: Workload> Transformed<W> {
+    pub fn workload(&self) -> &W {
+        &self.workload
+    }
+
+    pub fn procs(&self) -> u32 {
+        self.procs
+    }
+
+    /// Block factor used (CA strategies only).
+    pub fn block(&self) -> Option<u32> {
+        self.block
+    }
+
+    /// Static accounting: graph size and the plan's work/traffic totals.
+    pub fn stats(&self) -> PipelineStats {
+        let graph_tasks = self.graph.num_compute_tasks();
+        let executed = self.plan.executed_tasks();
+        PipelineStats {
+            tasks: graph_tasks,
+            edges: self.graph.num_edges(),
+            levels: self.graph.num_levels(),
+            procs: self.procs,
+            executed_tasks: executed,
+            messages: self.plan.messages(),
+            words: self.plan.words(),
+            redundancy_factor: if graph_tasks == 0 {
+                1.0
+            } else {
+                executed as f64 / graph_tasks as f64
+            },
+        }
+    }
+
+    /// The whole-graph (single-superstep) §3 schedule — the per-processor
+    /// `L^(k)` subsets the figures render.  `None` for naive/overlap
+    /// strategies, which have no CA schedule.
+    pub fn full_schedule(&self) -> Option<CaSchedule> {
+        self.block?;
+        Some(communication_avoiding(&self.graph, self.options))
+    }
+
+    fn report(&self, time: RunTime, verification: Verification) -> RunReport {
+        let stats = self.stats();
+        RunReport {
+            workload: self.workload.name(),
+            strategy: self.plan.label.clone(),
+            procs: self.procs,
+            block: self.block,
+            graph_tasks: stats.tasks,
+            executed_tasks: stats.executed_tasks,
+            redundancy_factor: stats.redundancy_factor,
+            messages: stats.messages,
+            words: stats.words,
+            time,
+            verification,
+        }
+    }
+
+    /// Run the plan on the §4 discrete-event simulator.  The machine's
+    /// `nprocs` must match the pipeline's processor count; the workload's
+    /// cost hints scale `gamma` (per-task cost) and `beta` (words per
+    /// value).
+    pub fn simulate(&self, machine: &Machine) -> RunReport {
+        assert_eq!(
+            machine.nprocs, self.procs,
+            "machine has {} procs but the pipeline was built for {}",
+            machine.nprocs, self.procs
+        );
+        let m = Machine {
+            gamma: machine.gamma * self.workload.cost_per_task(),
+            beta: machine.beta * self.workload.words_per_value() as f64,
+            ..*machine
+        };
+        let r = simulate(&self.graph, &self.plan, &m, false);
+        let max_wait = r.proc_wait.iter().copied().fold(0.0, f64::max);
+        self.report(
+            RunTime::Simulated {
+                total: r.total_time,
+                max_wait,
+                utilization: r.utilization(&m),
+            },
+            Verification::NotChecked,
+        )
+    }
+
+    /// Execute the plan for real — one OS thread per processor, real
+    /// channels — under the workload's value semantics, and verify every
+    /// owner-held value against the sequential reference solution.
+    pub fn execute(&self) -> Result<RunReport, PipelineError> {
+        let r = run_and_verify_with(&self.graph, &self.plan, self.workload.semantics())
+            .map_err(PipelineError::Verify)?;
+        let mut report = self.report(
+            RunTime::Measured { wall_secs: r.wall_secs },
+            Verification::Verified { owned_values: r.owned_values.len() },
+        );
+        // Report what actually moved, not what the plan predicted (they
+        // agree — the property suite asserts it — but measurements win).
+        report.messages = r.messages as usize;
+        report.words = r.words as usize;
+        report.executed_tasks = r.executed as usize;
+        report.redundancy_factor = if report.graph_tasks == 0 {
+            1.0
+        } else {
+            report.executed_tasks as f64 / report.graph_tasks as f64
+        };
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::CsrMatrix;
+
+    #[test]
+    fn builder_defaults() {
+        let t = Pipeline::new(Heat1d::new(32, 4)).transform().unwrap();
+        assert_eq!(t.procs(), 4);
+        assert_eq!(t.block(), Some(4)); // whole depth = one superstep
+        assert_eq!(t.stats().tasks, 32 * 4);
+    }
+
+    #[test]
+    fn simulate_and_execute_agree_on_traffic() {
+        let t = Pipeline::new(Heat1d::new(64, 8)).procs(4).block(4).transform().unwrap();
+        let sim = t.simulate(&Machine::high_latency(4, 8));
+        let real = t.execute().unwrap();
+        assert_eq!(sim.messages, real.messages);
+        assert_eq!(sim.words, real.words);
+        assert_eq!(sim.executed_tasks, real.executed_tasks);
+        assert!(real.verification.is_verified());
+    }
+
+    #[test]
+    fn strategies_share_the_graph_level_contract() {
+        for strategy in [Strategy::Naive, Strategy::Overlap, Strategy::Ca] {
+            let t = Pipeline::new(Heat1d::new(48, 6))
+                .procs(3)
+                .strategy(strategy)
+                .block(3)
+                .transform()
+                .unwrap();
+            let r = t.execute().unwrap();
+            assert!(r.verification.is_verified(), "{strategy:?}");
+            if strategy == Strategy::Ca {
+                assert!(r.executed_tasks >= t.stats().tasks);
+            } else {
+                assert_eq!(r.executed_tasks, t.stats().tasks);
+            }
+        }
+    }
+
+    #[test]
+    fn halo_mode_flows_through() {
+        let lvl0 = Pipeline::new(Heat1d::new(64, 4))
+            .procs(4)
+            .block(4)
+            .halo(HaloMode::Level0Only)
+            .transform()
+            .unwrap();
+        let multi =
+            Pipeline::new(Heat1d::new(64, 4)).procs(4).block(4).transform().unwrap();
+        assert!(lvl0.stats().executed_tasks > multi.stats().executed_tasks);
+        lvl0.execute().unwrap();
+    }
+
+    #[test]
+    fn full_schedule_only_for_ca() {
+        let ca = Pipeline::new(Heat1d::new(32, 4)).procs(2).transform().unwrap();
+        assert!(ca.full_schedule().is_some());
+        let naive = Pipeline::new(Heat1d::new(32, 4)).procs(2).naive().transform().unwrap();
+        assert!(naive.full_schedule().is_none());
+    }
+
+    #[test]
+    fn zero_block_factor_is_an_error() {
+        let err = Pipeline::new(Heat1d::new(32, 4)).procs(2).block(0).transform().unwrap_err();
+        assert!(matches!(err, PipelineError::Transform(_)));
+    }
+
+    #[test]
+    fn graph_errors_surface() {
+        let err = Pipeline::new(Heat1d::new(2, 4)).procs(8).transform().unwrap_err();
+        assert!(matches!(err, PipelineError::Graph(_)));
+        assert!(err.to_string().contains("graph construction"));
+    }
+
+    #[test]
+    fn irregular_workload_end_to_end() {
+        let w = Spmv { matrix: CsrMatrix::laplace2d(5, 5), steps: 3 };
+        let t = Pipeline::new(w).procs(4).block(3).transform().unwrap();
+        let r = t.execute().unwrap();
+        assert!(r.verification.is_verified());
+        assert!(r.messages > 0);
+    }
+
+    #[test]
+    fn cost_hints_scale_simulated_time() {
+        struct Slow;
+        impl Workload for Slow {
+            fn name(&self) -> String {
+                "slow".into()
+            }
+            fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
+                Heat1d::new(32, 4).build_graph(procs)
+            }
+            fn cost_per_task(&self) -> f64 {
+                10.0
+            }
+        }
+        let fast = Pipeline::new(Heat1d::new(32, 4)).procs(2).transform().unwrap();
+        let slow = Pipeline::new(Slow).procs(2).transform().unwrap();
+        let m = Machine::new(2, 4, 0.0, 0.0, 1.0);
+        let tf = fast.simulate(&m).time.value();
+        let ts = slow.simulate(&m).time.value();
+        assert!((ts - 10.0 * tf).abs() < 1e-9, "fast {tf} slow {ts}");
+    }
+}

@@ -1,0 +1,147 @@
+//! The shared result types every pipeline run produces, whether it went
+//! through the discrete-event simulator or the real threaded coordinator.
+
+/// How the run's time was obtained.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunTime {
+    /// Discrete-event simulation on an α/β/γ machine (time in γ units).
+    Simulated {
+        total: f64,
+        /// Worst per-processor time blocked in receives.
+        max_wait: f64,
+        /// Fraction of machine capacity spent computing.
+        utilization: f64,
+    },
+    /// Real threads-and-channels execution (seconds).
+    Measured { wall_secs: f64 },
+}
+
+impl RunTime {
+    /// The headline number (simulated total or measured wall-clock).
+    pub fn value(&self) -> f64 {
+        match self {
+            RunTime::Simulated { total, .. } => *total,
+            RunTime::Measured { wall_secs } => *wall_secs,
+        }
+    }
+}
+
+/// Whether the run's values were checked against the workload's reference
+/// solution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verification {
+    /// Simulation only — there are no values to check.
+    NotChecked,
+    /// Every owner-held value matched the sequential reference.
+    Verified {
+        /// Number of owned values compared.
+        owned_values: usize,
+    },
+}
+
+impl Verification {
+    pub fn is_verified(&self) -> bool {
+        matches!(self, Verification::Verified { .. })
+    }
+}
+
+/// The uniform report of one pipeline run: identity, work/traffic
+/// accounting, time, and the correctness verdict.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Workload name ("heat1d", "spmv", ...).
+    pub workload: String,
+    /// Strategy label ("naive", "overlap", "ca(b=8)").
+    pub strategy: String,
+    pub procs: u32,
+    /// Block factor (CA strategies only).
+    pub block: Option<u32>,
+    /// Compute tasks in the source graph.
+    pub graph_tasks: usize,
+    /// Task executions including redundant recomputation.
+    pub executed_tasks: usize,
+    /// `executed / graph` — the §2 redundancy the blocking bought.
+    pub redundancy_factor: f64,
+    /// Point-to-point messages.
+    pub messages: usize,
+    /// Words moved.
+    pub words: usize,
+    pub time: RunTime,
+    pub verification: Verification,
+}
+
+impl RunReport {
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        let time = match &self.time {
+            RunTime::Simulated { total, .. } => format!("sim time {total:.1}"),
+            RunTime::Measured { wall_secs } => format!("wall {wall_secs:.4}s"),
+        };
+        let verdict = match self.verification {
+            Verification::NotChecked => String::new(),
+            Verification::Verified { owned_values } => {
+                format!("  verified {owned_values} values ✓")
+            }
+        };
+        format!(
+            "{:<10} {:<10} p={:<3} {}  tasks {} (+{} redundant)  msgs {}  words {}{}",
+            self.workload,
+            self.strategy,
+            self.procs,
+            time,
+            self.graph_tasks,
+            self.executed_tasks.saturating_sub(self.graph_tasks),
+            self.messages,
+            self.words,
+            verdict,
+        )
+    }
+}
+
+/// Static (pre-run) accounting of a transformed pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineStats {
+    pub tasks: usize,
+    pub edges: usize,
+    pub levels: u32,
+    pub procs: u32,
+    pub executed_tasks: usize,
+    pub messages: usize,
+    pub words: usize,
+    pub redundancy_factor: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_mentions_key_figures() {
+        let r = RunReport {
+            workload: "heat1d".into(),
+            strategy: "ca(b=4)".into(),
+            procs: 4,
+            block: Some(4),
+            graph_tasks: 100,
+            executed_tasks: 112,
+            redundancy_factor: 1.12,
+            messages: 6,
+            words: 24,
+            time: RunTime::Measured { wall_secs: 0.25 },
+            verification: Verification::Verified { owned_values: 100 },
+        };
+        let s = r.summary();
+        assert!(s.contains("heat1d") && s.contains("ca(b=4)"));
+        assert!(s.contains("+12 redundant"));
+        assert!(s.contains("verified 100"));
+        assert!(r.verification.is_verified());
+        assert!((r.time.value() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simulated_time_value() {
+        let t = RunTime::Simulated { total: 42.0, max_wait: 1.0, utilization: 0.5 };
+        assert_eq!(t.value(), 42.0);
+        assert!(!Verification::NotChecked.is_verified());
+    }
+}

@@ -1,0 +1,238 @@
+//! [`Workload`] implementations for every scenario the repository ships,
+//! plus [`GraphWorkload`] for bringing your own task graph.
+//!
+//! Each type is a small plain-data description; the graph is derived on
+//! demand for whatever processor count the [`super::Pipeline`] requests,
+//! so one description serves naive/overlap/CA comparisons at any scale.
+
+use super::{PipelineError, Workload};
+use crate::graph::TaskGraph;
+use crate::krylov::cg_program;
+use crate::stencil::{heat1d_program, heat2d_program, moore2d_program, spmv_program, CsrMatrix};
+use std::sync::Arc;
+
+/// Factor `procs` into the most square `px × py` grid (px ≤ py).
+fn grid_factor(procs: u32) -> (u32, u32) {
+    let mut px = (procs as f64).sqrt().floor() as u32;
+    while px > 1 && procs % px != 0 {
+        px -= 1;
+    }
+    let px = px.max(1);
+    (px, procs / px)
+}
+
+/// The paper's running example (eq. 1): `steps` applications of a
+/// radius-`radius` 1-D stencil over `n` points, block-distributed.
+#[derive(Debug, Clone)]
+pub struct Heat1d {
+    pub n: u64,
+    pub steps: u32,
+    pub radius: u32,
+}
+
+impl Heat1d {
+    /// The classic 3-point (radius-1) configuration.
+    pub fn new(n: u64, steps: u32) -> Self {
+        Heat1d { n, steps, radius: 1 }
+    }
+}
+
+impl Workload for Heat1d {
+    fn name(&self) -> String {
+        "heat1d".into()
+    }
+
+    fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
+        if procs == 0 || self.n < procs as u64 {
+            return Err(PipelineError::Graph(format!(
+                "heat1d: {} points cannot be distributed over {procs} procs",
+                self.n
+            )));
+        }
+        Ok(heat1d_program(self.n, self.steps, procs, self.radius).unroll())
+    }
+}
+
+/// The 2-D five-point heat equation on an `h × w` grid; the processor
+/// count is factored into the most square worker grid.
+#[derive(Debug, Clone)]
+pub struct Heat2d {
+    pub h: u64,
+    pub w: u64,
+    pub steps: u32,
+}
+
+impl Workload for Heat2d {
+    fn name(&self) -> String {
+        "heat2d".into()
+    }
+
+    fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
+        let (px, py) = grid_factor(procs);
+        if procs == 0 || self.h < px as u64 || self.w < py as u64 {
+            return Err(PipelineError::Graph(format!(
+                "heat2d: {}x{} grid cannot be distributed over {px}x{py} procs",
+                self.h, self.w
+            )));
+        }
+        Ok(heat2d_program(self.h, self.w, self.steps, px, py).unroll())
+    }
+}
+
+/// The 2-D **nine-point** (Moore neighbourhood) stencil — diagonal
+/// dependencies are direct, so corner traffic exists at every block
+/// factor.  Proof that a new scenario costs one type, not a new engine.
+#[derive(Debug, Clone)]
+pub struct Moore2d {
+    pub h: u64,
+    pub w: u64,
+    pub steps: u32,
+}
+
+impl Workload for Moore2d {
+    fn name(&self) -> String {
+        "moore2d".into()
+    }
+
+    fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
+        let (px, py) = grid_factor(procs);
+        if procs == 0 || self.h < px as u64 || self.w < py as u64 {
+            return Err(PipelineError::Graph(format!(
+                "moore2d: {}x{} grid cannot be distributed over {px}x{py} procs",
+                self.h, self.w
+            )));
+        }
+        Ok(moore2d_program(self.h, self.w, self.steps, px, py).unroll())
+    }
+}
+
+/// Repeated SpMV with an arbitrary CSR matrix — the paper's motivating
+/// irregular workload.  The matrix's sparsity *is* the dependence
+/// structure; no stencil assumptions anywhere downstream.
+#[derive(Debug, Clone)]
+pub struct Spmv {
+    pub matrix: CsrMatrix,
+    pub steps: u32,
+}
+
+impl Workload for Spmv {
+    fn name(&self) -> String {
+        "spmv".into()
+    }
+
+    fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
+        if procs == 0 || self.matrix.n < procs as usize {
+            return Err(PipelineError::Graph(format!(
+                "spmv: {} rows cannot be distributed over {procs} procs",
+                self.matrix.n
+            )));
+        }
+        Ok(spmv_program(&self.matrix, self.steps, procs).unroll())
+    }
+}
+
+/// Conjugate gradient on the 1-D Laplacian: matvec + `AllToAll` inner
+/// product + vector update per iteration.  The collectives bound what
+/// blocking can do — exactly the graph shape the s-step literature
+/// removes — making this the stress case for the transformation.
+#[derive(Debug, Clone)]
+pub struct ConjugateGradient {
+    pub unknowns: usize,
+    pub iters: u32,
+}
+
+impl Workload for ConjugateGradient {
+    fn name(&self) -> String {
+        "cg".into()
+    }
+
+    fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
+        if procs == 0 || self.unknowns < procs as usize {
+            return Err(PipelineError::Graph(format!(
+                "cg: {} unknowns cannot be distributed over {procs} procs",
+                self.unknowns
+            )));
+        }
+        let a = CsrMatrix::laplace1d(self.unknowns);
+        Ok(cg_program(&a, procs, self.iters).unroll())
+    }
+}
+
+/// Bring-your-own-graph workload: wraps an existing [`TaskGraph`] (with
+/// its baked-in distribution) so ad-hoc graphs ride the same pipeline.
+#[derive(Debug, Clone)]
+pub struct GraphWorkload {
+    pub label: String,
+    pub graph: Arc<TaskGraph>,
+}
+
+impl GraphWorkload {
+    pub fn new(label: impl Into<String>, graph: TaskGraph) -> Self {
+        GraphWorkload { label: label.into(), graph: Arc::new(graph) }
+    }
+}
+
+impl Workload for GraphWorkload {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn default_procs(&self) -> u32 {
+        self.graph.num_procs()
+    }
+
+    fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
+        if procs != self.graph.num_procs() {
+            return Err(PipelineError::Graph(format!(
+                "{}: graph is distributed over {} procs, {procs} requested",
+                self.label,
+                self.graph.num_procs()
+            )));
+        }
+        Ok((*self.graph).clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_factoring() {
+        assert_eq!(grid_factor(1), (1, 1));
+        assert_eq!(grid_factor(4), (2, 2));
+        assert_eq!(grid_factor(6), (2, 3));
+        assert_eq!(grid_factor(7), (1, 7));
+        assert_eq!(grid_factor(12), (3, 4));
+    }
+
+    #[test]
+    fn heat1d_graph_shape() {
+        let g = Heat1d::new(32, 4).build_graph(4).unwrap();
+        assert_eq!(g.len(), 32 * 5);
+        assert_eq!(g.num_procs(), 4);
+    }
+
+    #[test]
+    fn infeasible_distribution_rejected() {
+        assert!(Heat1d::new(2, 4).build_graph(4).is_err());
+        assert!(Spmv { matrix: CsrMatrix::laplace1d(3), steps: 1 }.build_graph(8).is_err());
+        assert!(Heat2d { h: 1, w: 1, steps: 1 }.build_graph(4).is_err());
+    }
+
+    #[test]
+    fn graph_workload_pins_procs() {
+        let g = crate::stencil::heat1d_graph(16, 2, 2);
+        let w = GraphWorkload::new("custom", g);
+        assert_eq!(w.default_procs(), 2);
+        assert!(w.build_graph(2).is_ok());
+        assert!(w.build_graph(3).is_err());
+    }
+
+    #[test]
+    fn moore2d_has_more_edges_than_heat2d() {
+        let nine = Moore2d { h: 6, w: 6, steps: 2 }.build_graph(4).unwrap();
+        let five = Heat2d { h: 6, w: 6, steps: 2 }.build_graph(4).unwrap();
+        assert!(nine.num_edges() > five.num_edges());
+    }
+}

@@ -173,7 +173,7 @@ mod tests {
     use crate::sim::discrete::simulate;
     use crate::sim::plan::ExecPlan;
     use crate::stencil::heat1d_graph;
-    use crate::transform::{HaloMode, TransformOptions};
+    use crate::transform::TransformOptions;
 
     #[test]
     fn naive_closed_form_matches_discrete() {
@@ -263,7 +263,7 @@ mod tests {
     fn level0_mode_evaluates_too() {
         let g = heat1d_graph(64, 4, 2);
         let m = Machine::new(2, 2, 50.0, 0.5, 1.0);
-        let t = ca_time_for(&g, 4, TransformOptions { halo: HaloMode::Level0Only }, &m);
+        let t = ca_time_for(&g, 4, TransformOptions::level0(), &m);
         assert!(t.is_finite() && t > 0.0);
     }
 }

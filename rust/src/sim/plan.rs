@@ -14,7 +14,7 @@
 
 use crate::graph::{ProcId, TaskGraph, TaskId, TaskKind};
 use crate::transform::{
-    communication_avoiding, superstep_graphs, CaSchedule, TransformOptions,
+    check_schedule, communication_avoiding, superstep_graphs, CaSchedule, TransformOptions,
 };
 
 /// One step in a processor's program.
@@ -98,9 +98,31 @@ impl ExecPlan {
     /// of `b` levels, transform each (§3), and emit
     /// `L1 → sends → L2 → recvs → L3` per superstep.
     pub fn ca(g: &TaskGraph, b: u32, options: TransformOptions) -> Result<ExecPlan, String> {
+        Self::ca_impl(g, b, options, false)
+    }
+
+    /// [`ExecPlan::ca`] with the Theorem-1 checker run on every superstep
+    /// schedule as it is built — the paranoid path the [`crate::pipeline`]
+    /// builder uses, so an ill-formed schedule surfaces as an error at
+    /// transform time instead of a panic (or silent corruption) at
+    /// execution time.
+    pub fn ca_checked(g: &TaskGraph, b: u32, options: TransformOptions) -> Result<ExecPlan, String> {
+        Self::ca_impl(g, b, options, true)
+    }
+
+    fn ca_impl(
+        g: &TaskGraph,
+        b: u32,
+        options: TransformOptions,
+        check: bool,
+    ) -> Result<ExecPlan, String> {
         let mut per_proc = vec![ProcPlan::default(); g.num_procs() as usize];
         for ss in superstep_graphs(g, b)? {
             let schedule = communication_avoiding(&ss.graph, options);
+            if check {
+                check_schedule(&ss.graph, &schedule)
+                    .map_err(|v| format!("superstep levels [{}, {}]: {v}", ss.lo, ss.hi))?;
+            }
             append_ca_superstep(&mut per_proc, &schedule, &ss.orig);
         }
         Ok(ExecPlan { per_proc, label: format!("ca(b={b})") })
@@ -233,7 +255,6 @@ fn build_levelwise(g: &TaskGraph, overlap: bool, label: &str) -> ExecPlan {
 mod tests {
     use super::*;
     use crate::stencil::heat1d_graph;
-    use crate::transform::HaloMode;
 
     #[test]
     fn naive_plan_message_count() {
@@ -270,7 +291,7 @@ mod tests {
     #[test]
     fn ca_plan_has_redundant_tasks() {
         let g = heat1d_graph(32, 4, 4);
-        let plan = ExecPlan::ca(&g, 4, TransformOptions { halo: HaloMode::Level0Only }).unwrap();
+        let plan = ExecPlan::ca(&g, 4, TransformOptions::level0()).unwrap();
         assert!(plan.executed_tasks() > g.num_compute_tasks());
     }
 
@@ -290,12 +311,22 @@ mod tests {
     }
 
     #[test]
+    fn ca_checked_builds_the_same_plan() {
+        let g = heat1d_graph(32, 4, 2);
+        let unchecked = ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap();
+        let checked = ExecPlan::ca_checked(&g, 2, TransformOptions::default()).unwrap();
+        assert_eq!(unchecked.messages(), checked.messages());
+        assert_eq!(unchecked.executed_tasks(), checked.executed_tasks());
+        assert_eq!(unchecked.words(), checked.words());
+    }
+
+    #[test]
     fn naive_vs_ca_words() {
         // CA with Level0Only sends b ghost points once per superstep;
         // naive sends 1 point per level.  Words comparable, messages fewer.
         let g = heat1d_graph(64, 8, 2);
         let naive = ExecPlan::naive(&g);
-        let ca = ExecPlan::ca(&g, 8, TransformOptions { halo: HaloMode::Level0Only }).unwrap();
+        let ca = ExecPlan::ca(&g, 8, TransformOptions::level0()).unwrap();
         assert!(ca.messages() < naive.messages());
     }
 }

@@ -67,6 +67,50 @@ pub fn block2d(h: u64, w: u64, px: u32, py: u32) -> Distribution {
     Distribution::irregular(h * w, parts).expect("block2d partitions the grid")
 }
 
+/// `m` steps of the 2-D **nine-point** (Moore neighbourhood) stencil on an
+/// `h × w` grid, distributed over a `px × py` processor grid.  Unlike the
+/// five-point cross, every diagonal is a *direct* dependence, so even the
+/// `b = 1` naive exchange needs corner traffic — the workload that makes
+/// the 2-D transformation earn its 8-neighbour messages at every block
+/// factor.
+pub fn moore2d_program(h: u64, w: u64, m: u32, px: u32, py: u32) -> Program {
+    let dist = block2d(h, w, px, py);
+    let sig = nine_point_signature(h, w);
+    Program::new(dist).iterate("moore2d", sig, m)
+}
+
+/// Convenience: the unrolled graph of [`moore2d_program`].
+pub fn moore2d_graph(h: u64, w: u64, m: u32, px: u32, py: u32) -> TaskGraph {
+    moore2d_program(h, w, m, px, py).unroll()
+}
+
+/// The nine-point (3×3 Moore block) dependence pattern on a flattened
+/// `h × w` grid as a sparse signature, clipped at the domain boundary.
+pub fn nine_point_signature(h: u64, w: u64) -> Signature {
+    let n = (h * w) as usize;
+    let mut rowptr = Vec::with_capacity(n + 1);
+    let mut colidx = Vec::with_capacity(n * 9);
+    rowptr.push(0u32);
+    for k in 0..n as u64 {
+        let (r, c) = (k / w, k % w);
+        for dr in -1i64..=1 {
+            let rr = r as i64 + dr;
+            if rr < 0 || rr >= h as i64 {
+                continue;
+            }
+            for dc in -1i64..=1 {
+                let cc = c as i64 + dc;
+                if cc < 0 || cc >= w as i64 {
+                    continue;
+                }
+                colidx.push((rr as u64 * w + cc as u64) as u32);
+            }
+        }
+        rowptr.push(colidx.len() as u32);
+    }
+    Signature::Sparse { rowptr, colidx }
+}
+
 /// The five-point-cross dependence pattern on a flattened `h × w` grid as
 /// a sparse signature (offsets ±1 are only valid within a row, so a plain
 /// 1-D stencil signature cannot express it).
@@ -142,6 +186,31 @@ mod tests {
             let from_mat: Vec<u64> = a.row_cols(i).iter().map(|&c| c as u64).collect();
             assert_eq!(from_sig, from_mat, "row {i}");
         }
+    }
+
+    #[test]
+    fn nine_point_interior_has_nine_preds() {
+        let g = moore2d_graph(4, 4, 1, 2, 2);
+        // Interior point (1,1) = index 5 at level 1 → id 16 + 5.
+        assert_eq!(g.preds(TaskId(16 + 5)).len(), 9);
+        // Corner (0,0) sees a 2×2 block.
+        assert_eq!(g.preds(TaskId(16)).len(), 4);
+        // Edge midpoint (0,1) sees a 2×3 block.
+        assert_eq!(g.preds(TaskId(16 + 1)).len(), 6);
+    }
+
+    #[test]
+    fn nine_point_supersets_five_point() {
+        let nine = nine_point_signature(3, 3);
+        let five = five_point_signature(3, 3);
+        for i in 0..9u64 {
+            let n9 = nine.of_index(i, 9);
+            for d in five.of_index(i, 9) {
+                assert!(n9.contains(&d), "row {i} missing {d}");
+            }
+        }
+        // Centre row has all 9 deps.
+        assert_eq!(nine.of_index(4, 9).len(), 9);
     }
 
     #[test]

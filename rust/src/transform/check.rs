@@ -326,12 +326,8 @@ mod tests {
 
     #[test]
     fn level0_mode_also_well_formed() {
-        use crate::transform::HaloMode;
         let g = heat1d_graph(48, 6, 3);
-        let s = crate::transform::communication_avoiding(
-            &g,
-            TransformOptions { halo: HaloMode::Level0Only },
-        );
+        let s = crate::transform::communication_avoiding(&g, TransformOptions::level0());
         assert!(check_schedule(&g, &s).is_ok());
     }
 }

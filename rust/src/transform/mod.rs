@@ -49,14 +49,42 @@ pub enum HaloMode {
 }
 
 /// Options controlling the transformation.
-#[derive(Debug, Clone, Copy)]
+///
+/// Construct through the builder — `TransformOptions::default()
+/// .with_halo(HaloMode::Level0Only)` — or via the named presets
+/// [`TransformOptions::multilevel`] / [`TransformOptions::level0`]; this
+/// keeps call sites forward-compatible as options grow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TransformOptions {
     pub halo: HaloMode,
 }
 
+impl TransformOptions {
+    /// The default configuration (multi-level halo, paper §3).
+    pub const fn new() -> Self {
+        TransformOptions { halo: HaloMode::MultiLevel }
+    }
+
+    /// Builder: set the halo mode.
+    pub const fn with_halo(mut self, halo: HaloMode) -> Self {
+        self.halo = halo;
+        self
+    }
+
+    /// Preset: the §3 multi-level halo (same as `default()`).
+    pub const fn multilevel() -> Self {
+        Self::new()
+    }
+
+    /// Preset: the figure-1 level-0-only halo (maximum redundancy).
+    pub const fn level0() -> Self {
+        Self::new().with_halo(HaloMode::Level0Only)
+    }
+}
+
 impl Default for TransformOptions {
     fn default() -> Self {
-        TransformOptions { halo: HaloMode::MultiLevel }
+        Self::new()
     }
 }
 

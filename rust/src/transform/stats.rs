@@ -126,7 +126,7 @@ impl ScheduleStats {
 mod tests {
     use super::*;
     use crate::stencil::heat1d_graph;
-    use crate::transform::{communication_avoiding, communication_avoiding_default, HaloMode, TransformOptions};
+    use crate::transform::{communication_avoiding, communication_avoiding_default, TransformOptions};
 
     #[test]
     fn stats_on_single_proc_are_trivial() {
@@ -155,7 +155,7 @@ mod tests {
     fn redundancy_grows_with_depth() {
         let mk = |m| {
             let g = heat1d_graph(128, m, 4);
-            let s = communication_avoiding(&g, TransformOptions { halo: HaloMode::Level0Only });
+            let s = communication_avoiding(&g, TransformOptions::level0());
             ScheduleStats::compute(&g, &s).redundant_tasks as f64 / m as f64
         };
         // Redundant work per level grows with block depth (≈ b²/2 per

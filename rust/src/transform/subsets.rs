@@ -266,7 +266,7 @@ mod tests {
     #[test]
     fn level0_mode_sends_only_inputs() {
         let g = heat1d_graph(16, 3, 2);
-        let s = derive(&g, TransformOptions { halo: HaloMode::Level0Only });
+        let s = derive(&g, TransformOptions::level0());
         for ps in &s.per_proc {
             assert!(ps.l1.is_empty());
             for m in &ps.send {
@@ -282,7 +282,7 @@ mod tests {
     fn level0_mode_has_more_redundancy() {
         let g = heat1d_graph(64, 4, 4);
         let multi = derive(&g, TransformOptions::default());
-        let lvl0 = derive(&g, TransformOptions { halo: HaloMode::Level0Only });
+        let lvl0 = derive(&g, TransformOptions::level0());
         assert!(
             lvl0.total_computed() > multi.total_computed(),
             "level0 {} vs multilevel {}",
@@ -312,7 +312,7 @@ mod tests {
         // (paper §2: "ghost region of width two" for b=2).
         for b in 1..=4u32 {
             let g = heat1d_graph(32, b, 2);
-            let s = derive(&g, TransformOptions { halo: HaloMode::Level0Only });
+            let s = derive(&g, TransformOptions::level0());
             let p0 = &s.per_proc[0];
             let inputs_recv: usize = p0.recv.iter().map(|m| m.tasks.len()).sum();
             assert_eq!(inputs_recv, b as usize, "ghost width at b={b}");

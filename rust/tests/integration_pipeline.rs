@@ -160,11 +160,11 @@ fn pjrt_radius2_artifact_ghost_width_matches_transform() {
     // transformation derives for Signature::stencil_radius(2).
     let Some(dir) = artifacts() else { return };
     use imp_latency::runtime::{Runtime, Value};
-    use imp_latency::transform::{communication_avoiding, HaloMode};
+    use imp_latency::transform::communication_avoiding;
 
     let b = 2u32;
     let g = imp_latency::stencil::heat1d_program(512, b, 2, 2).unroll();
-    let s = communication_avoiding(&g, TransformOptions { halo: HaloMode::Level0Only });
+    let s = communication_avoiding(&g, TransformOptions::level0());
     let ghost: usize = s.per_proc[0].recv.iter().map(|m| m.tasks.len()).sum();
     assert_eq!(ghost, 2 * b as usize, "transform-derived ghost width");
 

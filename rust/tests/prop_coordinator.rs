@@ -7,7 +7,7 @@
 
 use imp_latency::prop::{check, random_dag, random_stencil, DagParams};
 use imp_latency::sim::ExecPlan;
-use imp_latency::transform::{HaloMode, TransformOptions};
+use imp_latency::transform::TransformOptions;
 use std::sync::Arc;
 
 #[test]
@@ -34,10 +34,7 @@ fn ca_plans_execute_correctly_on_random_dags() {
         let g = Arc::new(random_dag(rng, &DagParams::default()));
         let depth = g.num_levels().saturating_sub(1).max(1);
         let b = 1 + (rng.below(depth as u64) as u32);
-        for opts in [
-            TransformOptions { halo: HaloMode::MultiLevel },
-            TransformOptions { halo: HaloMode::Level0Only },
-        ] {
+        for opts in [TransformOptions::multilevel(), TransformOptions::level0()] {
             let plan = ExecPlan::ca(&g, b, opts)?;
             imp_latency::coordinator::run_and_verify(&g, &plan)
                 .map_err(|e| format!("b={b} {opts:?}: {e}"))?;

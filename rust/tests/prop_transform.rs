@@ -11,14 +11,11 @@ use imp_latency::prop::{check, random_dag, random_stencil, DagParams};
 use imp_latency::sim::ExecPlan;
 use imp_latency::stencil::heat1d_graph;
 use imp_latency::transform::{
-    check_schedule, communication_avoiding, superstep_graphs, HaloMode, ScheduleStats,
-    TransformOptions,
+    check_schedule, communication_avoiding, superstep_graphs, ScheduleStats, TransformOptions,
 };
 
-const MODES: [TransformOptions; 2] = [
-    TransformOptions { halo: HaloMode::MultiLevel },
-    TransformOptions { halo: HaloMode::Level0Only },
-];
+const MODES: [TransformOptions; 2] =
+    [TransformOptions::multilevel(), TransformOptions::level0()];
 
 #[test]
 fn random_dags_satisfy_theorem_1() {
