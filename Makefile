@@ -3,9 +3,15 @@
 
 CARGO ?= cargo
 
-.PHONY: ci build test clippy fmt fmt-fix bench artifacts
+.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke
 
-ci: build test clippy fmt
+ci: build test clippy fmt sweep-smoke
+
+# The simulator perf tracker: a reduced fig-7/8 sweep across all four
+# network models, emitting per-cell makespan + simulator wall-time so the
+# trajectory is visible from every push (BENCH_sim.json).
+sweep-smoke: build
+	$(CARGO) run --release -- sweep --smoke
 
 build:
 	$(CARGO) build --release

@@ -115,6 +115,48 @@ pub fn preset_fig8() -> Config {
     c
 }
 
+/// The `sweep` CLI preset: the full (workload × strategy) × network ×
+/// α × threads grid on the event-driven engine — four wire models and an
+/// 8-point α axis over heat1d/heat2d/CG.
+pub fn preset_sweep() -> Config {
+    let mut c = Config::new();
+    c.set("workloads", "heat1d,heat2d,cg");
+    c.set("networks", "alphabeta,loggp,hier,contended");
+    c.set("alphas", "1,2,4,8,16,64,256,500");
+    c.set("threads", "1,4,16,64");
+    c.set("blocks", "2,4,8");
+    c.set("p", 4);
+    c.set("n", 4096);
+    c.set("m", 16);
+    c.set("h", 32);
+    c.set("w", 32);
+    c.set("cg_n", 256);
+    c.set("iters", 3);
+    c.set("beta", 0.1);
+    c.set("gamma", 1.0);
+    c.set("jobs", 0);
+    c.set("out", "results/sweep.json");
+    c
+}
+
+/// The `sweep --smoke` preset: the fig-7 (α=8) and fig-8 (α=500) regimes
+/// shrunk to run on every CI push, emitting `BENCH_sim.json` so the
+/// simulator's makespans and wall-times are tracked over time.
+pub fn preset_sweep_smoke() -> Config {
+    let mut c = preset_sweep();
+    c.set("alphas", "8,500");
+    c.set("threads", "1,8,64");
+    c.set("blocks", "4");
+    c.set("n", 2048);
+    c.set("m", 16);
+    c.set("h", 16);
+    c.set("w", 16);
+    c.set("cg_n", 64);
+    c.set("iters", 2);
+    c.set("out", "BENCH_sim.json");
+    c
+}
+
 /// The end-to-end driver preset (real PJRT run).
 pub fn preset_end_to_end() -> Config {
     let mut c = Config::new();
@@ -180,6 +222,16 @@ mod tests {
                 assert!(c.get(k).is_some(), "{k}");
             }
         }
+        for c in [preset_sweep(), preset_sweep_smoke()] {
+            for k in [
+                "workloads", "networks", "alphas", "threads", "blocks", "p", "n", "m", "h",
+                "w", "cg_n", "iters", "beta", "gamma", "jobs", "out",
+            ] {
+                assert!(c.get(k).is_some(), "{k}");
+            }
+        }
+        // The smoke grid is exactly the two paper regimes.
+        assert_eq!(preset_sweep_smoke().get("alphas"), Some("8,500"));
     }
 
     #[test]

@@ -17,8 +17,8 @@
 //! the simulation study; the benches write their CSVs via these functions.
 
 use crate::config::{parse_list, Config};
-use crate::pipeline::{Heat1d, Pipeline};
-use crate::sim::{ca_time_for, naive_time_1d, overlap_time_1d, Machine};
+use crate::pipeline::{strategy_sweep_inputs, Heat1d, Pipeline};
+use crate::sim::{ca_time_for, naive_time_1d, overlap_time_1d, sweep, Machine, NetworkKind};
 use crate::stencil::heat1d_graph;
 use crate::trace::FigureSeries;
 use crate::transform::{CaSchedule, ScheduleStats, TransformOptions};
@@ -251,6 +251,50 @@ pub fn fig78_sweep(cfg: &Config) -> Result<FigureSeries, String> {
     Ok(fig)
 }
 
+/// The figure-7/8 sweep on the event-driven engine: the same series as
+/// [`fig78_sweep`] — naive, overlap, CA per block factor vs. threads per
+/// node — but each point is a full discrete simulation under `network`
+/// (the analytic path cannot express LogGP gaps, hierarchy, or NIC
+/// contention).  Cells fan out across the [`sweep`] worker pool.
+pub fn fig78_sweep_sim(cfg: &Config, network: NetworkKind) -> Result<FigureSeries, String> {
+    let n: u64 = cfg.require("n")?;
+    let m: u32 = cfg.require("m")?;
+    let p: u32 = cfg.require("p")?;
+    let alpha: f64 = cfg.require("alpha")?;
+    let beta: f64 = cfg.require("beta")?;
+    let gamma: f64 = cfg.require("gamma")?;
+    let threads: Vec<u32> = parse_list(cfg.require::<String>("threads")?.as_str())?;
+    let blocks: Vec<u32> = parse_list(cfg.require::<String>("blocks")?.as_str())?;
+
+    let labels: Vec<String> = std::iter::once("naive".to_string())
+        .chain(std::iter::once("overlap".to_string()))
+        .chain(blocks.iter().map(|b| format!("ca_b{b}")))
+        .collect();
+    let label_refs: Vec<&str> = labels.iter().map(String::as_str).collect();
+    let mut fig = FigureSeries::new("threads", &label_refs);
+
+    let base = Pipeline::new(Heat1d { n, steps: m, radius: 1 }).procs(p);
+    let inputs = strategy_sweep_inputs(&base, &blocks).map_err(|e| e.to_string())?;
+    let nseries = inputs.len();
+    let grid = sweep::SweepGrid {
+        inputs,
+        networks: vec![network],
+        alphas: vec![alpha],
+        threads: threads.clone(),
+        beta,
+        gamma,
+        jobs: 0,
+    };
+    let cells = sweep::run(&grid)?;
+    // Cell order: inputs outermost, threads innermost.
+    let nt = threads.len();
+    for (ti, &t) in threads.iter().enumerate() {
+        let ys: Vec<f64> = (0..nseries).map(|si| cells[si * nt + ti].makespan).collect();
+        fig.push(t as f64, ys);
+    }
+    Ok(fig)
+}
+
 /// Shape assertions for figures 7/8 — the paper's qualitative claims,
 /// checked programmatically (see DESIGN.md §4 acceptance criteria).
 /// Returns a human-readable verdict; `Err` when a claim fails.
@@ -372,6 +416,34 @@ mod tests {
         let grid = subset_grid(16, 3, 2, 0, &s);
         assert_eq!(grid.lines().count(), 4); // levels 3,2,1,0
         assert!(grid.lines().all(|l| l.contains('|')));
+    }
+
+    #[test]
+    fn fig78_sim_engine_tracks_analytic() {
+        let mut c = preset_fig8();
+        c.set("n", 2048);
+        c.set("m", 8);
+        c.set("p", 4);
+        c.set("threads", "1,8,64");
+        c.set("blocks", "4");
+        let analytic = fig78_sweep(&c).unwrap();
+        let sim = fig78_sweep_sim(&c, NetworkKind::AlphaBeta).unwrap();
+        assert_eq!(analytic.labels, sim.labels);
+        assert_eq!(analytic.rows.len(), sim.rows.len());
+        // Naive has an exact closed form; the discrete engine must agree
+        // closely (the CA columns differ more: BSP coupling vs. pipelining).
+        for ((xa, ra), (xs, rs)) in analytic.rows.iter().zip(&sim.rows) {
+            assert_eq!(xa, xs);
+            let rel = (ra[0] - rs[0]).abs() / rs[0];
+            assert!(rel < 0.15, "threads={xa}: analytic {} sim {}", ra[0], rs[0]);
+        }
+        // Under NIC contention every point is at least as slow.
+        let cont = fig78_sweep_sim(&c, NetworkKind::Contended).unwrap();
+        for ((_, ideal), (_, slow)) in sim.rows.iter().zip(&cont.rows) {
+            for (a, b) in ideal.iter().zip(slow) {
+                assert!(b >= a, "contended {b} < ideal {a}");
+            }
+        }
     }
 
     #[test]

@@ -32,8 +32,12 @@
 //!   Moore stencil, CSR SpMV).
 //! * [`transform`] — **the paper's contribution**: the subset derivation,
 //!   Theorem-1 checker, blocking, and redundancy accounting.
-//! * [`sim`] — α/β/γ discrete-event simulator for naive / overlap /
-//!   communication-avoiding schedules (paper §4).
+//! * [`sim`] — the §4 simulation stack: an event-driven engine
+//!   (binary-heap event queue, blocked-receiver wakeup) with pluggable
+//!   wire models ([`sim::NetworkKind`]: α+β·words, LogGP, hierarchical,
+//!   contended NICs), a per-task [`sim::TaskCostModel`] hook, parallel
+//!   parameter sweeps ([`sim::sweep`]), and closed-form BSP evaluation
+//!   for naive / overlap / communication-avoiding schedules.
 //! * [`pipeline`] — **the front door**: the [`pipeline::Workload`] trait
 //!   and the [`pipeline::Pipeline`] builder tying every layer below into
 //!   one expression, with a shared [`pipeline::RunReport`].

@@ -12,7 +12,10 @@
 //! * `run-cg` — distributed CG, classic vs. pipelined;
 //! * `dot` — Graphviz export of a (small) transformed graph.
 
-use imp_latency::config::{parse_list, preset_end_to_end, preset_fig7, preset_fig8, Config};
+use imp_latency::config::{
+    parse_list, preset_end_to_end, preset_fig7, preset_fig8, preset_sweep, preset_sweep_smoke,
+    Config,
+};
 use imp_latency::coordinator::{heat1d, heat2d};
 use imp_latency::cost::CostModel;
 use imp_latency::figures;
@@ -21,7 +24,7 @@ use imp_latency::pipeline::{
     ConjugateGradient, Heat1d, Heat2d, Moore2d, Pipeline, Spmv, Strategy, Workload,
 };
 use imp_latency::runtime::Registry;
-use imp_latency::sim::{simulate, Machine};
+use imp_latency::sim::{sweep, try_simulate, Machine, NetworkKind, UniformCost};
 use imp_latency::stencil::CsrMatrix;
 use imp_latency::trace::{gantt_ascii, summary_line};
 use imp_latency::transform::{check_schedule, HaloMode, ScheduleStats, TransformOptions};
@@ -32,13 +35,21 @@ imp-latency — Task Graph Transformations for Latency Tolerance (Eijkhout 2018)
 USAGE: imp-latency <command> [key=value ...]
 
 COMMANDS
-  figure <f1..f8|all> [out=results/]   regenerate paper figures
+  figure <f1..f8|all> [out=results/ engine=analytic|sim network=alphabeta]
+             regenerate paper figures (f7/f8 optionally on the event engine)
   pipeline   [workload=heat1d|heat2d|moore2d|spmv|cg n=4096 m=16 p=4 b=4
               strategy=ca|naive|overlap halo=multi|level0 h=32 w=32
               threads=8 alpha=500 beta=0.1 gamma=1]
              one workload end to end: transform + simulate + verified real run
   transform  [n=64 m=8 p=4 halo=multi] subsets + Theorem-1 check + stats
-  simulate   [n=4096 m=32 p=8 threads=8 alpha=500 beta=0.1 gamma=1 blocks=2,4,8]
+  simulate   [n=4096 m=32 p=8 threads=8 alpha=500 beta=0.1 gamma=1 blocks=2,4,8
+              network=alphabeta|loggp|hier|contended]
+  sweep      [--smoke workloads=heat1d,heat2d,cg networks=alphabeta,loggp,hier,contended
+              alphas=1,2,4,8,16,64,256,500 threads=1,4,16,64 blocks=2,4,8 p=4
+              n=4096 m=16 h=32 w=32 cg_n=256 iters=3 beta=0.1 gamma=1 jobs=0
+              out=results/sweep.json csv=]
+             parallel (α × threads × block × network) grid on the event engine;
+             --smoke runs the reduced fig-7/8 preset and defaults out=BENCH_sim.json
   cost       [n=65536 m=128 p=16 alpha=300 beta=0.2 gamma=1 max_b=64]
   run-heat1d [n_per_worker=2048 workers=8 b=8 steps=256 nu=0.2]
   run-heat2d [px=2 py=2 b=2 steps=16 nu=0.15]
@@ -73,6 +84,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "pipeline" => cmd_pipeline(&rest),
         "transform" => cmd_transform(&rest),
         "simulate" => cmd_simulate(&rest),
+        "sweep" => cmd_sweep(&rest),
         "cost" => cmd_cost(&rest),
         "run-heat1d" => cmd_run_heat1d(&rest),
         "run-heat2d" => cmd_run_heat2d(&rest),
@@ -127,23 +139,48 @@ fn cmd_figure(args: &[&str]) -> Result<(), String> {
         did = true;
     }
     if all || which == "f7" || which == "f8" {
-        let f7 = figures::fig78_sweep(&preset_fig7())?;
-        let f8 = figures::fig78_sweep(&preset_fig8())?;
+        // `engine=analytic` (default) evaluates the closed-form model;
+        // `engine=sim` runs the event-driven engine via the sweep
+        // machinery, under any `network=` wire model.
+        let engine = cfg.get_or("engine", "analytic".to_string());
+        let (f7, f8, suffix) = match engine.as_str() {
+            "analytic" => (
+                figures::fig78_sweep(&preset_fig7())?,
+                figures::fig78_sweep(&preset_fig8())?,
+                "",
+            ),
+            "sim" => {
+                let kind =
+                    NetworkKind::parse(&cfg.get_or("network", "alphabeta".to_string()))?;
+                (
+                    figures::fig78_sweep_sim(&preset_fig7(), kind)?,
+                    figures::fig78_sweep_sim(&preset_fig8(), kind)?,
+                    "_sim",
+                )
+            }
+            other => return Err(format!("engine must be analytic|sim, got {other:?}")),
+        };
         if all || which == "f7" {
             println!("Figure 7 — runtime vs threads/node, moderate latency (α=8γ)");
             print!("{}", f7.to_table());
             print!("{}", f7.to_ascii_plot(12));
-            f7.write_csv(&format!("{out_dir}/fig7.csv")).map_err(|e| e.to_string())?;
-            println!("wrote {out_dir}/fig7.csv");
+            f7.write_csv(&format!("{out_dir}/fig7{suffix}.csv")).map_err(|e| e.to_string())?;
+            println!("wrote {out_dir}/fig7{suffix}.csv");
         }
         if all || which == "f8" {
             println!("Figure 8 — runtime vs threads/node, high latency (α=500γ)");
             print!("{}", f8.to_table());
             print!("{}", f8.to_ascii_plot(12));
-            f8.write_csv(&format!("{out_dir}/fig8.csv")).map_err(|e| e.to_string())?;
-            println!("wrote {out_dir}/fig8.csv");
+            f8.write_csv(&format!("{out_dir}/fig8{suffix}.csv")).map_err(|e| e.to_string())?;
+            println!("wrote {out_dir}/fig8{suffix}.csv");
         }
-        println!("{}", figures::check_fig78_claims(&f7, &f8)?);
+        match figures::check_fig78_claims(&f7, &f8) {
+            Ok(verdict) => println!("{verdict}"),
+            // The analytic claims are the paper's; under alternative wire
+            // models they are informative, not a hard gate.
+            Err(e) if suffix == "_sim" => println!("claims check (sim engine): {e}"),
+            Err(e) => return Err(e),
+        }
         did = true;
     }
     if !did {
@@ -221,6 +258,7 @@ fn cmd_simulate(args: &[&str]) -> Result<(), String> {
     defaults.set("gamma", 1.0);
     defaults.set("blocks", "2,4,8");
     defaults.set("gantt", 0);
+    defaults.set("network", "alphabeta");
     let (cfg, _) = config_from(defaults, args);
     let (n, m, p): (u64, u32, u32) = (cfg.require("n")?, cfg.require("m")?, cfg.require("p")?);
     let mach = Machine::new(
@@ -230,12 +268,17 @@ fn cmd_simulate(args: &[&str]) -> Result<(), String> {
         cfg.require("beta")?,
         cfg.require("gamma")?,
     );
+    let kind = NetworkKind::parse(&cfg.get_or("network", "alphabeta".to_string()))?;
     let blocks: Vec<u32> = parse_list(&cfg.get_or("blocks", "2,4,8".to_string()))?;
     let want_gantt = cfg.get_or("gantt", 0) != 0;
 
     println!(
-        "1-D heat, n={n} m={m} p={p} threads={} α={} β={} γ={}",
-        mach.threads, mach.alpha, mach.beta, mach.gamma
+        "1-D heat, n={n} m={m} p={p} threads={} α={} β={} γ={} wire={}",
+        mach.threads,
+        mach.alpha,
+        mach.beta,
+        mach.gamma,
+        kind.label()
     );
     let base = Pipeline::new(Heat1d { n, steps: m, radius: 1 }).procs(p);
     let mut runs = vec![
@@ -246,10 +289,130 @@ fn cmd_simulate(args: &[&str]) -> Result<(), String> {
         runs.push(base.clone().block(b).transform().map_err(|e| e.to_string())?);
     }
     for t in &runs {
-        let r = simulate(&t.graph, &t.plan, &mach, want_gantt);
+        let mut net = kind.build(&mach);
+        let r = try_simulate(&t.graph, &t.plan, &mach, net.as_mut(), &UniformCost, want_gantt)
+            .map_err(|e| e.to_string())?;
         println!("{}", summary_line(&t.plan.label, &r));
         if want_gantt {
             print!("{}", gantt_ascii(&r.spans, r.total_time, 100));
+        }
+    }
+    Ok(())
+}
+
+/// Build the sweep inputs for one workload name: naive + overlap + one CA
+/// plan per block factor, all sharing the workload's graph.
+fn sweep_inputs_for(
+    name: &str,
+    cfg: &Config,
+    blocks: &[u32],
+) -> Result<Vec<sweep::SweepInput>, String> {
+    fn collect<W: Workload + Clone>(
+        w: W,
+        p: u32,
+        blocks: &[u32],
+    ) -> Result<Vec<sweep::SweepInput>, String> {
+        imp_latency::pipeline::strategy_sweep_inputs(&Pipeline::new(w).procs(p), blocks)
+            .map_err(|e| e.to_string())
+    }
+    let p: u32 = cfg.require("p")?;
+    let m: u32 = cfg.require("m")?;
+    let (h, w): (u64, u64) = (cfg.require("h")?, cfg.require("w")?);
+    match name {
+        "heat1d" => collect(
+            Heat1d { n: cfg.get_or("n", 4096), steps: m, radius: cfg.get_or("r", 1) },
+            p,
+            blocks,
+        ),
+        "heat2d" => collect(Heat2d { h, w, steps: m }, p, blocks),
+        "moore2d" => collect(Moore2d { h, w, steps: m }, p, blocks),
+        "spmv" => collect(
+            Spmv { matrix: CsrMatrix::laplace2d(h as usize, w as usize), steps: m },
+            p,
+            blocks,
+        ),
+        // CG's AllToAll dot levels make the graph O(n²) in edges — its
+        // problem size is a separate, smaller knob.
+        "cg" => collect(
+            ConjugateGradient {
+                unknowns: cfg.get_or("cg_n", 256),
+                iters: cfg.get_or("iters", 3),
+            },
+            p,
+            blocks,
+        ),
+        other => Err(format!("unknown workload {other:?} (heat1d|heat2d|moore2d|spmv|cg)")),
+    }
+}
+
+fn cmd_sweep(args: &[&str]) -> Result<(), String> {
+    let smoke = args.contains(&"--smoke");
+    // `--smoke` is the CI perf tracker: the fig-7 (α=8) and fig-8 (α=500)
+    // regimes on problems small enough to run on every push.
+    let defaults = if smoke { preset_sweep_smoke() } else { preset_sweep() };
+    let (cfg, _) = config_from(defaults, args);
+
+    let workloads: Vec<String> = cfg
+        .require::<String>("workloads")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let mut networks = Vec::new();
+    for tag in cfg.require::<String>("networks")?.split(',') {
+        let tag = tag.trim();
+        if !tag.is_empty() {
+            networks.push(NetworkKind::parse(tag)?);
+        }
+    }
+    let alphas: Vec<f64> = parse_list(&cfg.require::<String>("alphas")?)?;
+    let threads: Vec<u32> = parse_list(&cfg.require::<String>("threads")?)?;
+    let blocks: Vec<u32> = parse_list(&cfg.require::<String>("blocks")?)?;
+
+    let mut inputs = Vec::new();
+    for wl in &workloads {
+        inputs.extend(sweep_inputs_for(wl, &cfg, &blocks)?);
+    }
+    let grid = sweep::SweepGrid {
+        inputs,
+        networks,
+        alphas,
+        threads,
+        beta: cfg.require("beta")?,
+        gamma: cfg.require("gamma")?,
+        jobs: cfg.get_or("jobs", 0),
+    };
+    println!(
+        "sweep: {} plans × {} networks × {} α values × {} thread counts = {} cells",
+        grid.inputs.len(),
+        grid.networks.len(),
+        grid.alphas.len(),
+        grid.threads.len(),
+        grid.num_cells()
+    );
+    let t0 = std::time::Instant::now();
+    let cells = sweep::run(&grid)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let max_u = cells.iter().map(|c| c.utilization).fold(0.0, f64::max);
+    let sim_secs: f64 = cells.iter().map(|c| c.sim_wall_secs).sum();
+    println!(
+        "{} cells in {wall:.2}s wall ({sim_secs:.2}s simulator time, max utilization {max_u:.3})",
+        cells.len()
+    );
+
+    let out = cfg.get_or("out", "results/sweep.json".to_string());
+    let json = sweep::to_json(if smoke { "smoke" } else { "sweep" }, &cells);
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    std::fs::write(&out, json).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    if let Some(csv_path) = cfg.get("csv") {
+        if !csv_path.is_empty() {
+            std::fs::write(csv_path, sweep::to_csv(&cells)).map_err(|e| e.to_string())?;
+            println!("wrote {csv_path}");
         }
     }
     Ok(())

@@ -33,16 +33,27 @@
 //! [`workloads`] — [`Heat1d`], [`Heat2d`], [`Moore2d`], [`Spmv`],
 //! [`ConjugateGradient`] — plus [`GraphWorkload`] for ad-hoc graphs;
 //! adding a scenario means implementing the trait, nothing else.
+//!
+//! The simulation side is fully configurable on the builder:
+//! `.machine(..)` fixes the α/β/γ machine for
+//! [`Transformed::simulate_configured`], `.network(..)` picks the wire model
+//! ([`crate::sim::NetworkKind`]: α+β·words, LogGP, hierarchical,
+//! contended), and `.costs(..)` overrides the workload's per-task
+//! [`crate::sim::TaskCostModel`].  [`Transformed::sweep_input`] packages
+//! a run for the parallel [`crate::sim::sweep`] grids.
 
 mod report;
 pub mod workloads;
 
 pub use report::{PipelineStats, RunReport, RunTime, Verification};
-pub use workloads::{ConjugateGradient, GraphWorkload, Heat1d, Heat2d, Moore2d, Spmv};
+pub use workloads::{
+    CgPhaseCost, ConjugateGradient, GraphWorkload, Heat1d, Heat2d, Moore2d, RowFillCost, Spmv,
+};
 
 use crate::coordinator::{run_and_verify_with, ValueSemantics};
 use crate::graph::TaskGraph;
-use crate::sim::{simulate, ExecPlan, Machine};
+use crate::sim::sweep::SweepInput;
+use crate::sim::{try_simulate, ExecPlan, Machine, NetworkKind, ScaledCost, TaskCostModel};
 use crate::transform::{communication_avoiding, CaSchedule, HaloMode, TransformOptions};
 use std::sync::Arc;
 
@@ -65,6 +76,14 @@ pub trait Workload {
     /// Per-task cost hint in γ units (scales the simulator's `gamma`).
     fn cost_per_task(&self) -> f64 {
         1.0
+    }
+
+    /// Per-task cost model for the simulator.  The default charges every
+    /// task the flat [`Workload::cost_per_task`] hint; irregular
+    /// workloads override this to weight individual tasks (e.g.
+    /// [`Spmv`] charges each row its fill).
+    fn cost_model(&self) -> Arc<dyn TaskCostModel> {
+        Arc::new(ScaledCost(self.cost_per_task()))
     }
 
     /// Words per transmitted value (scales the simulator's `beta`).
@@ -101,6 +120,9 @@ pub enum PipelineError {
     Transform(String),
     /// The real run's values diverged from the reference solution.
     Verify(String),
+    /// The builder configuration is incomplete or inconsistent (e.g.
+    /// [`Transformed::simulate_configured`] without a machine).
+    Config(String),
 }
 
 impl std::fmt::Display for PipelineError {
@@ -109,6 +131,7 @@ impl std::fmt::Display for PipelineError {
             PipelineError::Graph(m) => write!(f, "graph construction: {m}"),
             PipelineError::Transform(m) => write!(f, "transformation: {m}"),
             PipelineError::Verify(m) => write!(f, "verification: {m}"),
+            PipelineError::Config(m) => write!(f, "configuration: {m}"),
         }
     }
 }
@@ -126,6 +149,9 @@ pub struct Pipeline<W: Workload> {
     strategy: Strategy,
     options: TransformOptions,
     check: bool,
+    machine: Option<Machine>,
+    network: NetworkKind,
+    cost: Option<Arc<dyn TaskCostModel>>,
 }
 
 impl<W: Workload> Pipeline<W> {
@@ -137,6 +163,9 @@ impl<W: Workload> Pipeline<W> {
             strategy: Strategy::Ca,
             options: TransformOptions::default(),
             check: true,
+            machine: None,
+            network: NetworkKind::AlphaBeta,
+            cost: None,
         }
     }
 
@@ -190,6 +219,27 @@ impl<W: Workload> Pipeline<W> {
         self
     }
 
+    /// Machine to simulate on ([`Transformed::simulate_configured`]); its
+    /// processor count must match the pipeline's.
+    pub fn machine(mut self, machine: Machine) -> Self {
+        self.machine = Some(machine);
+        self
+    }
+
+    /// Wire model for simulation (default [`NetworkKind::AlphaBeta`],
+    /// the paper's α+β·words postal model).
+    pub fn network(mut self, network: NetworkKind) -> Self {
+        self.network = network;
+        self
+    }
+
+    /// Per-task cost model override (default: the workload's own
+    /// [`Workload::cost_model`]).
+    pub fn costs(mut self, cost: Arc<dyn TaskCostModel>) -> Self {
+        self.cost = Some(cost);
+        self
+    }
+
     /// Build the graph and the execution plan.  For the CA strategy every
     /// superstep schedule is verified against Theorem 1 unless
     /// [`Pipeline::skip_check`] was requested.
@@ -216,8 +266,37 @@ impl<W: Workload> Pipeline<W> {
                 (plan, Some(b))
             }
         };
-        Ok(Transformed { workload: self.workload, graph, plan, procs, block, options: self.options })
+        let cost = self.cost.unwrap_or_else(|| self.workload.cost_model());
+        Ok(Transformed {
+            workload: self.workload,
+            graph,
+            plan: Arc::new(plan),
+            procs,
+            block,
+            options: self.options,
+            machine: self.machine,
+            network: self.network,
+            cost,
+        })
     }
+}
+
+/// The strategy family of sweep inputs from one base builder: naive,
+/// overlap, and one CA plan per block factor in `blocks` — the input
+/// list every figure-7/8-shaped sweep wants, built once here so the CLI
+/// and [`crate::figures`] cannot drift apart.
+pub fn strategy_sweep_inputs<W: Workload + Clone>(
+    base: &Pipeline<W>,
+    blocks: &[u32],
+) -> Result<Vec<SweepInput>, PipelineError> {
+    let mut v = vec![
+        base.clone().naive().transform()?.sweep_input(),
+        base.clone().overlap().transform()?.sweep_input(),
+    ];
+    for &b in blocks {
+        v.push(base.clone().block(b).transform()?.sweep_input());
+    }
+    Ok(v)
 }
 
 /// A transformed pipeline: graph + plan, ready to simulate or execute.
@@ -226,11 +305,15 @@ pub struct Transformed<W: Workload> {
     workload: W,
     /// The derived task graph (shared with worker threads on execute).
     pub graph: Arc<TaskGraph>,
-    /// The per-processor phase program.
-    pub plan: ExecPlan,
+    /// The per-processor phase program (shared with sweep inputs, which
+    /// can hold multi-million-phase plans for figure-scale problems).
+    pub plan: Arc<ExecPlan>,
     procs: u32,
     block: Option<u32>,
     options: TransformOptions,
+    machine: Option<Machine>,
+    network: NetworkKind,
+    cost: Arc<dyn TaskCostModel>,
 }
 
 impl<W: Workload> Transformed<W> {
@@ -292,10 +375,11 @@ impl<W: Workload> Transformed<W> {
         }
     }
 
-    /// Run the plan on the §4 discrete-event simulator.  The machine's
+    /// Run the plan on the §4 event-driven simulator.  The machine's
     /// `nprocs` must match the pipeline's processor count; the workload's
-    /// cost hints scale `gamma` (per-task cost) and `beta` (words per
-    /// value).
+    /// hints supply the per-task cost model (unless overridden with
+    /// [`Pipeline::costs`]) and scale `beta` (words per value), and the
+    /// wire follows the configured [`Pipeline::network`].
     pub fn simulate(&self, machine: &Machine) -> RunReport {
         assert_eq!(
             machine.nprocs, self.procs,
@@ -303,11 +387,12 @@ impl<W: Workload> Transformed<W> {
             machine.nprocs, self.procs
         );
         let m = Machine {
-            gamma: machine.gamma * self.workload.cost_per_task(),
             beta: machine.beta * self.workload.words_per_value() as f64,
             ..*machine
         };
-        let r = simulate(&self.graph, &self.plan, &m, false);
+        let mut network = self.network.build(&m);
+        let r = try_simulate(&self.graph, &self.plan, &m, network.as_mut(), self.cost.as_ref(), false)
+            .expect("pipeline-built plans are deadlock-free");
         let max_wait = r.proc_wait.iter().copied().fold(0.0, f64::max);
         self.report(
             RunTime::Simulated {
@@ -317,6 +402,36 @@ impl<W: Workload> Transformed<W> {
             },
             Verification::NotChecked,
         )
+    }
+
+    /// [`Transformed::simulate`] on the machine configured with
+    /// [`Pipeline::machine`]; errors when none was set or its processor
+    /// count disagrees with the pipeline's.
+    pub fn simulate_configured(&self) -> Result<RunReport, PipelineError> {
+        let machine = self.machine.ok_or_else(|| {
+            PipelineError::Config("simulate_configured requires Pipeline::machine(..)".into())
+        })?;
+        if machine.nprocs != self.procs {
+            return Err(PipelineError::Config(format!(
+                "configured machine has {} procs but the pipeline was built for {}",
+                machine.nprocs, self.procs
+            )));
+        }
+        Ok(self.simulate(&machine))
+    }
+
+    /// Package this run as one input of a [`crate::sim::sweep`] grid —
+    /// graph and plan are shared, not copied, across the sweep's worker
+    /// threads.
+    pub fn sweep_input(&self) -> SweepInput {
+        SweepInput {
+            workload: self.workload.name(),
+            strategy: self.plan.label.clone(),
+            graph: Arc::clone(&self.graph),
+            plan: Arc::clone(&self.plan),
+            cost: Arc::clone(&self.cost),
+            words_per_value: self.workload.words_per_value(),
+        }
     }
 
     /// Execute the plan for real — one OS thread per processor, real
@@ -428,6 +543,58 @@ mod tests {
         let r = t.execute().unwrap();
         assert!(r.verification.is_verified());
         assert!(r.messages > 0);
+    }
+
+    #[test]
+    fn machine_network_costs_flow_through_builder() {
+        let mach = Machine::high_latency(2, 4);
+        let base = Pipeline::new(Heat1d::new(64, 4)).procs(2).machine(mach);
+        let ideal = base.clone().transform().unwrap();
+        let contended = base.clone().network(NetworkKind::Contended).transform().unwrap();
+        let ri = ideal.simulate_configured().unwrap();
+        let rc = contended.simulate_configured().unwrap();
+        assert!(rc.time.value() >= ri.time.value(), "{} < {}", rc.time.value(), ri.time.value());
+        assert_eq!(rc.messages, ri.messages);
+
+        let slow = base
+            .costs(Arc::new(ScaledCost(3.0)))
+            .transform()
+            .unwrap()
+            .simulate_configured()
+            .unwrap();
+        assert!(slow.time.value() > ri.time.value());
+    }
+
+    #[test]
+    fn simulate_configured_requires_matching_machine() {
+        let t = Pipeline::new(Heat1d::new(32, 4)).procs(2).transform().unwrap();
+        assert!(matches!(t.simulate_configured(), Err(PipelineError::Config(_))));
+        let t = Pipeline::new(Heat1d::new(32, 4))
+            .procs(2)
+            .machine(Machine::high_latency(4, 8))
+            .transform()
+            .unwrap();
+        let err = t.simulate_configured().unwrap_err();
+        assert!(err.to_string().contains("configuration"));
+    }
+
+    #[test]
+    fn sweep_input_shares_graph_and_plan() {
+        let t = Pipeline::new(Heat1d::new(32, 4)).procs(2).block(2).transform().unwrap();
+        let input = t.sweep_input();
+        assert_eq!(input.workload, "heat1d");
+        assert_eq!(input.strategy, "ca(b=2)");
+        assert_eq!(input.plan.messages(), t.plan.messages());
+        assert!(Arc::ptr_eq(&input.graph, &t.graph));
+        assert!(Arc::ptr_eq(&input.plan, &t.plan));
+    }
+
+    #[test]
+    fn strategy_sweep_inputs_builds_the_family() {
+        let base = Pipeline::new(Heat1d::new(32, 4)).procs(2);
+        let inputs = strategy_sweep_inputs(&base, &[2, 4]).unwrap();
+        let labels: Vec<&str> = inputs.iter().map(|i| i.strategy.as_str()).collect();
+        assert_eq!(labels, ["naive", "overlap", "ca(b=2)", "ca(b=4)"]);
     }
 
     #[test]

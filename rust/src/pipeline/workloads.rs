@@ -6,10 +6,58 @@
 //! so one description serves naive/overlap/CA comparisons at any scale.
 
 use super::{PipelineError, Workload};
-use crate::graph::TaskGraph;
+use crate::graph::{TaskGraph, TaskId};
 use crate::krylov::cg_program;
+use crate::sim::TaskCostModel;
 use crate::stencil::{heat1d_program, heat2d_program, moore2d_program, spmv_program, CsrMatrix};
 use std::sync::Arc;
+
+/// Row-fill-proportional task cost: a task updating matrix row `i` costs
+/// `nnz(i) / mean-nnz` γ, so irregular matrices load processors
+/// non-uniformly in the simulator exactly as they do on hardware.  The
+/// mean normalization keeps the *average* task at 1 γ — simulated times
+/// stay comparable with the flat-γ model.
+#[derive(Debug, Clone)]
+pub struct RowFillCost {
+    row_cost: Vec<f64>,
+}
+
+impl RowFillCost {
+    pub fn new(a: &CsrMatrix) -> Self {
+        let mean = (a.nnz() as f64 / a.n.max(1) as f64).max(f64::MIN_POSITIVE);
+        RowFillCost {
+            row_cost: (0..a.n).map(|i| a.row_cols(i).len() as f64 / mean).collect(),
+        }
+    }
+
+    fn row(&self, item: u64) -> f64 {
+        self.row_cost.get(item as usize).copied().unwrap_or(1.0)
+    }
+}
+
+impl TaskCostModel for RowFillCost {
+    fn task_cost(&self, g: &TaskGraph, t: TaskId) -> f64 {
+        self.row(g.item(t))
+    }
+}
+
+/// CG's per-phase weights: `cg_program` emits `matvec → dot → update`
+/// per iteration (levels `3k+1, 3k+2, 3k+3`), so matvec tasks carry the
+/// matrix row's fill while the dot/update tasks are single flops.
+#[derive(Debug, Clone)]
+pub struct CgPhaseCost {
+    matvec: RowFillCost,
+}
+
+impl TaskCostModel for CgPhaseCost {
+    fn task_cost(&self, g: &TaskGraph, t: TaskId) -> f64 {
+        if g.level(t) % 3 == 1 {
+            self.matvec.row(g.item(t))
+        } else {
+            1.0
+        }
+    }
+}
 
 /// Factor `procs` into the most square `px × py` grid (px ≤ py).
 fn grid_factor(procs: u32) -> (u32, u32) {
@@ -129,6 +177,10 @@ impl Workload for Spmv {
         }
         Ok(spmv_program(&self.matrix, self.steps, procs).unroll())
     }
+
+    fn cost_model(&self) -> Arc<dyn TaskCostModel> {
+        Arc::new(RowFillCost::new(&self.matrix))
+    }
 }
 
 /// Conjugate gradient on the 1-D Laplacian: matvec + `AllToAll` inner
@@ -155,6 +207,10 @@ impl Workload for ConjugateGradient {
         }
         let a = CsrMatrix::laplace1d(self.unknowns);
         Ok(cg_program(&a, procs, self.iters).unroll())
+    }
+
+    fn cost_model(&self) -> Arc<dyn TaskCostModel> {
+        Arc::new(CgPhaseCost { matvec: RowFillCost::new(&CsrMatrix::laplace1d(self.unknowns)) })
     }
 }
 
@@ -227,6 +283,42 @@ mod tests {
         assert_eq!(w.default_procs(), 2);
         assert!(w.build_graph(2).is_ok());
         assert!(w.build_graph(3).is_err());
+    }
+
+    #[test]
+    fn row_fill_cost_is_mean_normalized() {
+        let a = CsrMatrix::laplace2d(4, 4);
+        let c = RowFillCost::new(&a);
+        let g = Spmv { matrix: a, steps: 1 }.build_graph(2).unwrap();
+        // One task per row at level 1; mean normalization makes the
+        // total equal the row count.
+        let total: f64 =
+            g.tasks().filter(|&t| g.level(t) == 1).map(|t| c.task_cost(&g, t)).sum();
+        assert!((total - 16.0).abs() < 1e-9, "{total}");
+        // A corner row (2 off-diagonal neighbours) is cheaper than an
+        // interior row (4).
+        let cost_of = |item: u64| {
+            let t = g.tasks().find(|&t| g.level(t) == 1 && g.item(t) == item).unwrap();
+            c.task_cost(&g, t)
+        };
+        assert!(cost_of(0) < cost_of(5), "corner {} interior {}", cost_of(0), cost_of(5));
+    }
+
+    #[test]
+    fn cg_cost_weights_matvec_rows_over_reductions() {
+        let w = ConjugateGradient { unknowns: 8, iters: 1 };
+        let g = w.build_graph(2).unwrap();
+        let c = w.cost_model();
+        let matvec =
+            g.tasks().find(|&t| g.level(t) == 1 && g.item(t) == 4).unwrap();
+        let dot = g.tasks().find(|&t| g.level(t) == 2).unwrap();
+        assert!(
+            c.task_cost(&g, matvec) > c.task_cost(&g, dot),
+            "matvec {} dot {}",
+            c.task_cost(&g, matvec),
+            c.task_cost(&g, dot)
+        );
+        assert_eq!(c.task_cost(&g, dot), 1.0);
     }
 
     #[test]

@@ -170,7 +170,7 @@ pub fn paper_cost(n: u64, msteps: u32, b: u32, m: &Machine) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::discrete::simulate;
+    use crate::sim::engine::simulate;
     use crate::sim::plan::ExecPlan;
     use crate::stencil::heat1d_graph;
     use crate::transform::TransformOptions;

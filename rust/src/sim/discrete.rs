@@ -1,19 +1,14 @@
-//! Discrete-event simulation of an [`ExecPlan`] on a [`Machine`].
+//! Shared simulator data types and the per-phase list scheduler.
 //!
-//! This is the re-implementation of the paper's §4 simulator (the original
-//! lived in the IMP demo repository's `pocs/avoid`, now unavailable).  It
-//! executes the plan's phases per processor, list-scheduling each
-//! `Compute` phase's tasks onto the node's `t` threads while honouring
-//! intra-phase dependence edges, and models every message as arriving
-//! `α + β·words` after it is posted.
-//!
-//! The engine advances processors round-robin; a `Recv` blocks until the
-//! matching `Send` has executed on the peer, so the loop terminates for
-//! every deadlock-free plan (all plans built by [`super::plan`] are —
-//! sends always precede the matching receive's level/superstep).
+//! The production simulator is the event-driven engine in
+//! [`super::engine`]; this module keeps what both engines share — the
+//! [`SimResult`] / [`BusySpan`] result types and [`run_compute`], the
+//! intra-phase list scheduler — plus, behind `#[cfg(test)]`, the seed
+//! repository's original round-robin polling loop, retained verbatim as
+//! the *oracle* the engine's equivalence matrix is checked against.
 
+use super::engine::TaskCostModel;
 use super::machine::Machine;
-use super::plan::{ExecPlan, Phase};
 use crate::graph::{TaskGraph, TaskId};
 use std::collections::{BinaryHeap, HashMap};
 
@@ -49,28 +44,120 @@ pub struct SimResult {
 
 impl SimResult {
     /// Fraction of total machine time spent computing.
+    ///
+    /// `proc_busy` already sums *thread*-busy time (each task execution
+    /// contributes its duration once), so the capacity denominator
+    /// `total_time · nprocs · threads` is the whole normalization — the
+    /// seed version multiplied the numerator by `threads` again, which
+    /// inflated utilization ×t and exceeded 1.0 on saturated runs.
     pub fn utilization(&self, m: &Machine) -> f64 {
         let cap = self.total_time * m.nprocs as f64 * m.threads as f64;
         if cap == 0.0 {
             0.0
         } else {
-            self.proc_busy.iter().sum::<f64>() * m.threads as f64 / cap
+            self.proc_busy.iter().sum::<f64>() / cap
         }
     }
 }
 
-/// Simulate `plan` for graph `g` on machine `m`.
+/// List-schedule one compute phase on `m.threads` threads starting at
+/// `start`.  Returns (phase end time, total busy thread-time).
 ///
-/// `record_spans` controls whether per-thread Gantt spans are collected
-/// (costly for large runs).
-pub fn simulate(g: &TaskGraph, plan: &ExecPlan, m: &Machine, record_spans: bool) -> SimResult {
+/// Tasks are visited in `(level, id)` order (a topological order).  Each
+/// task starts at `max(latest intra-phase pred finish, earliest free
+/// thread)` and runs for `m.gamma · cost.task_cost(g, t)`.  For uniform
+/// task costs this matches the optimal level-by-level schedule.  Values
+/// produced *outside* the phase — earlier phases on this processor, or
+/// received messages — are available from `start` on (phase ordering plus
+/// the blocking `Recv` guarantee it), so only intra-phase predecessors
+/// are tracked; this also keeps the simulator correct under redundant
+/// computation, where the same task id is executed on several processors
+/// at different times.
+pub(crate) fn run_compute(
+    g: &TaskGraph,
+    tasks: &[u32],
+    m: &Machine,
+    start: f64,
+    proc: u32,
+    cost: &dyn TaskCostModel,
+    mut spans: Option<&mut Vec<BusySpan>>,
+) -> (f64, f64) {
+    let mut order: Vec<u32> = tasks.to_vec();
+    order.sort_unstable_by_key(|&t| (g.level(TaskId(t)), t));
+
+    // Finish times of tasks computed in *this* phase only.
+    let mut finish: HashMap<u32, f64> = HashMap::with_capacity(order.len());
+
+    // Min-heap of (free_at, thread-id).
+    let mut threads: BinaryHeap<std::cmp::Reverse<(u64, u32)>> = (0..m.threads)
+        .map(|i| std::cmp::Reverse((to_bits(start), i)))
+        .collect();
+
+    let mut busy = 0.0;
+    let mut end = start;
+    for &t in &order {
+        let mut est = start;
+        for &pr in g.preds(TaskId(t)) {
+            if let Some(&f) = finish.get(&pr) {
+                if f > est {
+                    est = f;
+                }
+            }
+        }
+        let std::cmp::Reverse((free_bits, tid)) = threads.pop().unwrap();
+        let free = from_bits(free_bits);
+        let s = est.max(free);
+        let dur = m.gamma * cost.task_cost(g, TaskId(t));
+        let f = s + dur;
+        finish.insert(t, f);
+        threads.push(std::cmp::Reverse((to_bits(f), tid)));
+        busy += dur;
+        if f > end {
+            end = f;
+        }
+        if let Some(sp) = spans.as_deref_mut() {
+            sp.push(BusySpan { proc, thread: tid, start: s, end: f, what: "compute" });
+        }
+    }
+    (end, busy)
+}
+
+// f64 ordering in the heap via monotone bit transform (times are finite
+// and non-negative here).
+#[inline]
+pub(crate) fn to_bits(x: f64) -> u64 {
+    debug_assert!(x >= 0.0 && x.is_finite());
+    x.to_bits()
+}
+
+#[inline]
+pub(crate) fn from_bits(b: u64) -> f64 {
+    f64::from_bits(b)
+}
+
+/// The seed repository's round-robin polling simulator, kept only as the
+/// oracle for the event-driven engine's equivalence matrix.  O(rounds ×
+/// procs × phases) — every round re-scans all processors — which is why
+/// it was replaced; its *semantics* are the contract the engine must
+/// reproduce bit-for-bit.  Two accounting fixes are applied here as in
+/// the engine: delivered messages are drained from the channel map, and
+/// zero-word sends (which cost `message_time(0) = 0` on the wire) are not
+/// counted as messages.
+#[cfg(test)]
+pub(crate) fn polling_simulate(
+    g: &TaskGraph,
+    plan: &super::plan::ExecPlan,
+    m: &Machine,
+    record_spans: bool,
+) -> SimResult {
+    use super::engine::UniformCost;
+    use super::plan::Phase;
+
     assert_eq!(plan.per_proc.len(), m.nprocs as usize, "plan/machine proc count mismatch");
     let nprocs = plan.per_proc.len();
 
-    // Message channel: (from, to, first-task-id) -> arrival time.  The
-    // first id disambiguates multiple messages on the same edge; plans
-    // never post two messages with identical (from, to, head) pairs
-    // because task sets differ per level/superstep.
+    // Message channel: (from, to, seq) -> arrival time; entries are
+    // removed when the matching Recv consumes them.
     let mut in_flight: HashMap<(u32, u32, u32), f64> = HashMap::new();
     let mut send_seq: HashMap<(u32, u32), u32> = HashMap::new();
     let mut recv_seq: HashMap<(u32, u32), u32> = HashMap::new();
@@ -96,6 +183,7 @@ pub fn simulate(g: &TaskGraph, plan: &ExecPlan, m: &Machine, record_spans: bool)
                             m,
                             clock[p],
                             p as u32,
+                            &UniformCost,
                             record_spans.then_some(&mut spans),
                         );
                         busy[p] += b;
@@ -106,12 +194,14 @@ pub fn simulate(g: &TaskGraph, plan: &ExecPlan, m: &Machine, record_spans: bool)
                         let arrival = clock[p] + m.message_time(tasks.len());
                         in_flight.insert((p as u32, to.0, *seq), arrival);
                         *seq += 1;
-                        messages += 1;
-                        words += tasks.len();
+                        if !tasks.is_empty() {
+                            messages += 1;
+                            words += tasks.len();
+                        }
                     }
                     Phase::Recv { from, tasks } => {
                         let seq = *recv_seq.entry((from.0, p as u32)).or_insert(0);
-                        let Some(&arrival) = in_flight.get(&(from.0, p as u32, seq)) else {
+                        let Some(arrival) = in_flight.remove(&(from.0, p as u32, seq)) else {
                             break; // sender not there yet — try another proc
                         };
                         recv_seq.insert((from.0, p as u32), seq + 1);
@@ -164,198 +254,52 @@ pub fn simulate(g: &TaskGraph, plan: &ExecPlan, m: &Machine, record_spans: bool)
     }
 }
 
-/// List-schedule one compute phase on `m.threads` threads starting at
-/// `start`.  Returns (phase end time, total busy thread-time).
-///
-/// Tasks are visited in `(level, id)` order (a topological order).  Each
-/// task starts at `max(latest intra-phase pred finish, earliest free
-/// thread)`.  For uniform task costs this matches the optimal
-/// level-by-level schedule.  Values produced *outside* the phase —
-/// earlier phases on this processor, or received messages — are available
-/// from `start` on (phase ordering plus the blocking `Recv` guarantee
-/// it), so only intra-phase predecessors are tracked; this also keeps the
-/// simulator correct under redundant computation, where the same task id
-/// is executed on several processors at different times.
-fn run_compute(
-    g: &TaskGraph,
-    tasks: &[u32],
-    m: &Machine,
-    start: f64,
-    proc: u32,
-    mut spans: Option<&mut Vec<BusySpan>>,
-) -> (f64, f64) {
-    let mut order: Vec<u32> = tasks.to_vec();
-    order.sort_unstable_by_key(|&t| (g.level(TaskId(t)), t));
-
-    // Finish times of tasks computed in *this* phase only.
-    let mut finish: HashMap<u32, f64> = HashMap::with_capacity(order.len());
-
-    // Min-heap of (free_at, thread-id).
-    let mut threads: BinaryHeap<std::cmp::Reverse<(u64, u32)>> = (0..m.threads)
-        .map(|i| std::cmp::Reverse((to_bits(start), i)))
-        .collect();
-
-    let mut busy = 0.0;
-    let mut end = start;
-    for &t in &order {
-        let mut est = start;
-        for &pr in g.preds(TaskId(t)) {
-            if let Some(&f) = finish.get(&pr) {
-                if f > est {
-                    est = f;
-                }
-            }
-        }
-        let std::cmp::Reverse((free_bits, tid)) = threads.pop().unwrap();
-        let free = from_bits(free_bits);
-        let s = est.max(free);
-        let f = s + m.gamma;
-        finish.insert(t, f);
-        threads.push(std::cmp::Reverse((to_bits(f), tid)));
-        busy += m.gamma;
-        if f > end {
-            end = f;
-        }
-        if let Some(sp) = spans.as_deref_mut() {
-            sp.push(BusySpan { proc, thread: tid, start: s, end: f, what: "compute" });
-        }
-    }
-    (end, busy)
-}
-
-// f64 ordering in the heap via monotone bit transform (times are finite
-// and non-negative here).
-#[inline]
-fn to_bits(x: f64) -> u64 {
-    debug_assert!(x >= 0.0 && x.is_finite());
-    x.to_bits()
-}
-
-#[inline]
-fn from_bits(b: u64) -> f64 {
-    f64::from_bits(b)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sim::plan::ExecPlan;
+    use crate::sim::simulate;
     use crate::stencil::heat1d_graph;
-    use crate::transform::TransformOptions;
-
-    fn m(nprocs: u32, threads: u32, alpha: f64) -> Machine {
-        Machine::new(nprocs, threads, alpha, 0.0, 1.0)
-    }
-
-    #[test]
-    fn single_proc_naive_time_is_levels_times_waves() {
-        // 8 points, 1 proc, 2 threads: each level = ceil(8/2) = 4γ.
-        let g = heat1d_graph(8, 3, 1);
-        let plan = ExecPlan::naive(&g);
-        let r = simulate(&g, &plan, &m(1, 2, 100.0), false);
-        assert_eq!(r.total_time, 3.0 * 4.0);
-        assert_eq!(r.messages, 0);
-    }
-
-    #[test]
-    fn zero_latency_naive_matches_ideal() {
-        let g = heat1d_graph(16, 4, 2);
-        let plan = ExecPlan::naive(&g);
-        let r = simulate(&g, &plan, &m(2, 8, 0.0), false);
-        // 8 points/proc, 8 threads → 1γ per level, 4 levels.
-        assert_eq!(r.total_time, 4.0);
-    }
-
-    #[test]
-    fn latency_adds_per_level_for_naive() {
-        let g = heat1d_graph(16, 4, 2);
-        let plan = ExecPlan::naive(&g);
-        let alpha = 50.0;
-        let r = simulate(&g, &plan, &m(2, 8, alpha), false);
-        // Levels 2..4 wait for the (level−1)-value message that was posted
-        // after the previous level's compute; level 1's inputs are initial
-        // data sent at time 0... every level still pays α on the critical
-        // path because compute (1γ) ≪ α.
-        assert!(r.total_time >= 3.0 * alpha, "{}", r.total_time);
-        assert!(r.total_time <= 4.0 * (alpha + 1.0) + 4.0, "{}", r.total_time);
-    }
-
-    #[test]
-    fn ca_single_superstep_pays_latency_once() {
-        let g = heat1d_graph(16, 4, 2);
-        let naive = ExecPlan::naive(&g);
-        let ca = ExecPlan::ca(&g, 4, TransformOptions::default()).unwrap();
-        let mach = m(2, 8, 50.0);
-        let rn = simulate(&g, &naive, &mach, false);
-        let rc = simulate(&g, &ca, &mach, false);
-        assert!(
-            rc.total_time < rn.total_time / 2.0,
-            "ca {} vs naive {}",
-            rc.total_time,
-            rn.total_time
-        );
-    }
-
-    #[test]
-    fn overlap_beats_naive_with_latency() {
-        let g = heat1d_graph(256, 8, 2);
-        let mach = m(2, 1, 60.0);
-        let rn = simulate(&g, &ExecPlan::naive(&g), &mach, false);
-        let ro = simulate(&g, &ExecPlan::overlap(&g), &mach, false);
-        // With 128 points/proc on one thread, the interior compute
-        // (≈126γ) hides the 60-unit latency entirely.
-        assert!(ro.total_time < rn.total_time, "overlap {} naive {}", ro.total_time, rn.total_time);
-    }
-
-    #[test]
-    fn work_conservation() {
-        let g = heat1d_graph(32, 4, 4);
-        for plan in [
-            ExecPlan::naive(&g),
-            ExecPlan::overlap(&g),
-            ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap(),
-        ] {
-            let r = simulate(&g, &plan, &m(4, 2, 10.0), false);
-            let total_busy: f64 = r.proc_busy.iter().sum();
-            assert!(
-                (total_busy - plan.executed_tasks() as f64).abs() < 1e-9,
-                "{}: busy {} vs tasks {}",
-                plan.label,
-                total_busy,
-                plan.executed_tasks()
-            );
-        }
-    }
-
-    #[test]
-    fn times_monotone_and_finite() {
-        let g = heat1d_graph(24, 3, 3);
-        let plan = ExecPlan::ca(&g, 3, TransformOptions::default()).unwrap();
-        let r = simulate(&g, &plan, &m(3, 2, 5.0), true);
-        assert!(r.total_time.is_finite() && r.total_time > 0.0);
-        for s in &r.spans {
-            assert!(s.end >= s.start);
-            assert!(s.start >= 0.0);
-        }
-    }
-
-    #[test]
-    fn more_threads_never_slower() {
-        let g = heat1d_graph(64, 8, 2);
-        let plan = ExecPlan::naive(&g);
-        let t1 = simulate(&g, &plan, &m(2, 1, 10.0), false).total_time;
-        let t4 = simulate(&g, &plan, &m(2, 4, 10.0), false).total_time;
-        let t16 = simulate(&g, &plan, &m(2, 16, 10.0), false).total_time;
-        assert!(t4 <= t1 && t16 <= t4);
-    }
 
     #[test]
     fn utilization_bounded() {
         let g = heat1d_graph(64, 4, 4);
         let plan = ExecPlan::naive(&g);
-        let mach = m(4, 2, 10.0);
+        let mach = Machine::new(4, 2, 10.0, 0.0, 1.0);
         let r = simulate(&g, &plan, &mach, false);
         let u = r.utilization(&mach);
         assert!(u > 0.0 && u <= 1.0, "{u}");
+    }
+
+    #[test]
+    fn utilization_regression_alpha_zero_saturated() {
+        // One processor, zero latency: every thread is busy the whole run,
+        // so a correct utilization is exactly 1.0.  The seed formula
+        // multiplied the summed thread-busy time by `threads` again and
+        // reported t (= 4.0 here).
+        let threads = 4u32;
+        let g = heat1d_graph(64, 4, 1);
+        let plan = ExecPlan::naive(&g);
+        let mach = Machine::new(1, threads, 0.0, 0.0, 1.0);
+        let r = simulate(&g, &plan, &mach, false);
+        let u = r.utilization(&mach);
+        assert!((u - 1.0).abs() < 1e-12, "{u}");
+        let cap = r.total_time * mach.nprocs as f64 * mach.threads as f64;
+        let seed_formula = r.proc_busy.iter().sum::<f64>() * threads as f64 / cap;
+        assert!((seed_formula - threads as f64).abs() < 1e-12, "{seed_formula}");
+    }
+
+    #[test]
+    fn utilization_zero_time_is_zero() {
+        let r = SimResult {
+            total_time: 0.0,
+            proc_finish: vec![0.0],
+            proc_busy: vec![0.0],
+            proc_wait: vec![0.0],
+            messages: 0,
+            words: 0,
+            spans: Vec::new(),
+        };
+        assert_eq!(r.utilization(&Machine::new(1, 4, 0.0, 0.0, 1.0)), 0.0);
     }
 }

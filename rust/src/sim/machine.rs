@@ -47,7 +47,10 @@ impl Machine {
         (k as f64 / self.threads as f64).ceil() * self.gamma
     }
 
-    /// Wire time of one `words`-word message.
+    /// Wire time of one `words`-word message under the classical
+    /// α+β·words postal model ([`super::AlphaBeta`]); the richer wire
+    /// models ([`super::NetworkKind`]) replace this in the event-driven
+    /// engine.
     #[inline]
     pub fn message_time(&self, words: usize) -> f64 {
         if words == 0 {

@@ -1,24 +1,44 @@
-//! The §4 simulation study: machine model, execution plans, and two
-//! runtime evaluators (event-driven and closed-form).
+//! The §4 simulation study: machine model, execution plans, and the
+//! runtime evaluators (event-driven engine and closed-form).
 //!
 //! The scenario is the paper's: **strong scaling** — a fixed problem and
 //! task partitioning, a fixed latency-to-flop ratio, runtime evaluated as
 //! a function of the threads available per MPI node.  Three strategies
 //! are compared: naive per-level exchange, the figure-2 overlap split,
 //! and the §3 communication-avoiding transformation at several block
-//! factors.  Figures 7 and 8 are regenerated by the benches on top of
-//! this module.
+//! factors.
+//!
+//! Module map:
+//!
+//! * [`machine`](Machine) — `p` nodes × `t` threads and the α/β/γ constants;
+//! * [`plan`](ExecPlan) — the phase programs the strategies compile to;
+//! * [`engine`](simulate) — the event-driven simulator (binary-heap event
+//!   queue, blocked-receiver wakeup), with pluggable [`NetworkModel`]
+//!   wires and a per-task [`TaskCostModel`] hook;
+//! * [`network`](NetworkKind) — [`AlphaBeta`], [`LogGp`], [`Hierarchical`],
+//!   [`Contended`] wire models;
+//! * [`sweep`] — parallel (α × threads × block × network) grids emitting
+//!   JSON/CSV figure data;
+//! * [`analytic`](ca_time) — closed-form BSP evaluation, the fast path for
+//!   huge parameter sweeps;
+//! * `discrete` — shared result types and, in tests, the seed polling
+//!   simulator kept as the engine's equivalence oracle.
 
 mod analytic;
 mod discrete;
+mod engine;
 mod machine;
+mod network;
 mod plan;
+pub mod sweep;
 
 pub use analytic::{
     ca_time, ca_time_exact, ca_time_for, ca_time_sequential, ca_time_sequential_for,
     naive_time_1d, overlap_time_1d, paper_cost, superstep_costs, ProcPhaseCost,
     SuperstepCosts,
 };
-pub use discrete::{simulate, BusySpan, SimResult};
+pub use discrete::{BusySpan, SimResult};
+pub use engine::{simulate, try_simulate, ScaledCost, SimError, TaskCostModel, UniformCost};
 pub use machine::Machine;
+pub use network::{AlphaBeta, Contended, Hierarchical, LogGp, NetworkKind, NetworkModel};
 pub use plan::{ExecPlan, Phase, ProcPlan};

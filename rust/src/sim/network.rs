@@ -1,0 +1,361 @@
+//! Pluggable wire models for the event-driven simulator.
+//!
+//! The seed simulator hardwired one cost: every message arrives
+//! `α + β·words` after it is posted.  That is [`AlphaBeta`] here; three
+//! further models widen the scenario space the §4 study can cover:
+//!
+//! | model | extra physics | paper-figure regime |
+//! |---|---|---|
+//! | [`AlphaBeta`] | none — pure latency/bandwidth | figures 7/8 as published |
+//! | [`LogGp`] | per-message injection gap `g`, per-word gap `G`, CPU overhead `o` | figure 7's "moderate latency" with send-rate limits: blocking also amortizes the injection gap, so CA wins slightly earlier |
+//! | [`Hierarchical`] | cheap intra-node vs. expensive inter-node latency from a proc→node mapping | multi-node figure 8: only the node-boundary messages pay full α, so the optimal block factor sits between the intra and inter predictions |
+//! | [`Contended`] | per-NIC serialization of concurrent sends | figure 8 with fan-out: naive's per-level message bursts queue at the NIC, widening CA's win |
+//!
+//! A model is *stateful* (NIC clocks, injection clocks), so the engine
+//! takes `&mut dyn NetworkModel` and calls [`NetworkModel::reset`] at the
+//! start of every run.  Cloneable *descriptions* live in [`NetworkKind`],
+//! which the [`crate::pipeline::Pipeline`] builder and the sweep grid
+//! store and instantiate per run:
+//!
+//! ```
+//! use imp_latency::pipeline::{Heat1d, Pipeline};
+//! use imp_latency::sim::{Machine, NetworkKind};
+//!
+//! let base = Pipeline::new(Heat1d::new(32, 4)).procs(2).machine(Machine::high_latency(2, 4));
+//! let ideal = base.clone().transform().unwrap().simulate_configured().unwrap();
+//! let contended = base
+//!     .network(NetworkKind::Contended)
+//!     .transform()
+//!     .unwrap()
+//!     .simulate_configured()
+//!     .unwrap();
+//! // Serialized NICs can only delay messages relative to the ideal wire.
+//! assert!(contended.time.value() >= ideal.time.value());
+//! ```
+
+use super::machine::Machine;
+use std::collections::HashMap;
+
+/// A wire model: given a posted message, when does it arrive?
+///
+/// Implementations may keep per-resource clocks (`&mut self`); the engine
+/// guarantees `deliver` is called in global simulation order *per sender*
+/// (a processor posts its sends at non-decreasing local times), and calls
+/// [`NetworkModel::reset`] before every simulation run.
+pub trait NetworkModel: Send {
+    /// Short tag for reports ("alphabeta", "loggp", ...).
+    fn label(&self) -> &'static str;
+
+    /// Arrival time at `to` of a `words`-word message posted by `from` at
+    /// time `post`.  Must be ≥ `post`.
+    fn deliver(&mut self, from: u32, to: u32, words: usize, post: f64) -> f64;
+
+    /// Clear any per-run state (NIC clocks etc.).
+    fn reset(&mut self) {}
+}
+
+/// The classical postal model: every message arrives `α + β·words` after
+/// it is posted, regardless of what else is in flight.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlphaBeta {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl AlphaBeta {
+    pub fn from_machine(m: &Machine) -> Self {
+        AlphaBeta { alpha: m.alpha, beta: m.beta }
+    }
+}
+
+impl NetworkModel for AlphaBeta {
+    fn label(&self) -> &'static str {
+        "alphabeta"
+    }
+
+    fn deliver(&mut self, _from: u32, _to: u32, words: usize, post: f64) -> f64 {
+        // Same association as `Machine::message_time` so the event engine
+        // reproduces the legacy simulator bit-for-bit under this model.
+        let wire = self.alpha + self.beta * words as f64;
+        post + wire
+    }
+}
+
+/// The LogGP model (Alexandrov et al.): wire latency `L`, per-end CPU
+/// overhead `o`, inter-message injection gap `g` (a sender's NIC accepts
+/// at most one message per `g`), and per-word gap `G` for long messages.
+///
+/// Arrival = `inject + o + L + (words−1)·G + o` where `inject` is the
+/// post time delayed behind the sender's previous injection by `g`.
+#[derive(Debug, Clone)]
+pub struct LogGp {
+    pub latency: f64,
+    pub overhead: f64,
+    pub gap: f64,
+    pub per_word_gap: f64,
+    next_inject: HashMap<u32, f64>,
+}
+
+impl LogGp {
+    pub fn new(latency: f64, overhead: f64, gap: f64, per_word_gap: f64) -> Self {
+        LogGp { latency, overhead, gap, per_word_gap, next_inject: HashMap::new() }
+    }
+
+    /// `L = α`, `G = β` from the machine; `o` and `g` supplied.
+    pub fn from_machine(m: &Machine, overhead: f64, gap: f64) -> Self {
+        LogGp::new(m.alpha, overhead, gap, m.beta)
+    }
+}
+
+impl NetworkModel for LogGp {
+    fn label(&self) -> &'static str {
+        "loggp"
+    }
+
+    fn deliver(&mut self, from: u32, _to: u32, words: usize, post: f64) -> f64 {
+        let free = self.next_inject.get(&from).copied().unwrap_or(0.0);
+        let inject = post.max(free);
+        self.next_inject.insert(from, inject + self.gap);
+        inject
+            + self.overhead
+            + self.latency
+            + words.saturating_sub(1) as f64 * self.per_word_gap
+            + self.overhead
+    }
+
+    fn reset(&mut self) {
+        self.next_inject.clear();
+    }
+}
+
+/// Two-tier network: processors are grouped onto nodes by an explicit
+/// proc→node mapping; messages that stay on a node use the cheap
+/// (`intra_alpha`, `intra_beta`) wire, messages that cross nodes pay the
+/// full (`inter_alpha`, `inter_beta`).
+#[derive(Debug, Clone)]
+pub struct Hierarchical {
+    /// `node_of[p]` = node hosting processor `p`.
+    pub node_of: Vec<u32>,
+    pub intra_alpha: f64,
+    pub intra_beta: f64,
+    pub inter_alpha: f64,
+    pub inter_beta: f64,
+}
+
+impl Hierarchical {
+    /// Contiguous packing: processors `[k·node_size, (k+1)·node_size)`
+    /// share node `k`.  Intra-node costs are `intra_factor` of the
+    /// machine's α/β.
+    pub fn contiguous(m: &Machine, node_size: u32, intra_factor: f64) -> Self {
+        let node_size = node_size.max(1);
+        Hierarchical {
+            node_of: (0..m.nprocs).map(|p| p / node_size).collect(),
+            intra_alpha: m.alpha * intra_factor,
+            intra_beta: m.beta * intra_factor,
+            inter_alpha: m.alpha,
+            inter_beta: m.beta,
+        }
+    }
+}
+
+impl NetworkModel for Hierarchical {
+    fn label(&self) -> &'static str {
+        "hier"
+    }
+
+    fn deliver(&mut self, from: u32, to: u32, words: usize, post: f64) -> f64 {
+        let same = self.node_of.get(from as usize) == self.node_of.get(to as usize);
+        let (a, b) = if same {
+            (self.intra_alpha, self.intra_beta)
+        } else {
+            (self.inter_alpha, self.inter_beta)
+        };
+        post + a + b * words as f64
+    }
+}
+
+/// α/β wire with per-NIC serialization: a sender's NIC transmits one
+/// message at a time, occupying the link for `β·words`; concurrent sends
+/// queue behind it.  Latency α is flight time and overlaps freely.
+#[derive(Debug, Clone)]
+pub struct Contended {
+    pub alpha: f64,
+    pub beta: f64,
+    nic_free: HashMap<u32, f64>,
+}
+
+impl Contended {
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        Contended { alpha, beta, nic_free: HashMap::new() }
+    }
+
+    pub fn from_machine(m: &Machine) -> Self {
+        Contended::new(m.alpha, m.beta)
+    }
+}
+
+impl NetworkModel for Contended {
+    fn label(&self) -> &'static str {
+        "contended"
+    }
+
+    fn deliver(&mut self, from: u32, _to: u32, words: usize, post: f64) -> f64 {
+        let occupy = self.beta * words as f64;
+        let free = self.nic_free.get(&from).copied().unwrap_or(0.0);
+        let start = post.max(free);
+        self.nic_free.insert(from, start + occupy);
+        start + self.alpha + occupy
+    }
+
+    fn reset(&mut self) {
+        self.nic_free.clear();
+    }
+}
+
+/// A cloneable, parseable *description* of a network model — what the
+/// [`crate::pipeline::Pipeline`] builder and the sweep grid carry; a
+/// fresh stateful [`NetworkModel`] is built per run with
+/// [`NetworkKind::build`] (α/β and the processor count come from the
+/// [`Machine`] of that run).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum NetworkKind {
+    /// [`AlphaBeta`] — the seed simulator's wire (the default).
+    #[default]
+    AlphaBeta,
+    /// [`LogGp`] with `L = α`, `G = β` and these `o`/`g` (γ units).
+    LogGp { overhead: f64, gap: f64 },
+    /// [`Hierarchical`] with contiguous `node_size`-wide nodes and
+    /// intra-node α/β scaled by `intra_factor`.
+    Hierarchical { node_size: u32, intra_factor: f64 },
+    /// [`Contended`] — per-NIC serialized sends.
+    Contended,
+}
+
+impl NetworkKind {
+    /// The four models at their default parameters — the sweep's network
+    /// axis.
+    pub fn all_default() -> Vec<NetworkKind> {
+        vec![
+            NetworkKind::AlphaBeta,
+            NetworkKind::LogGp { overhead: 1.0, gap: 2.0 },
+            NetworkKind::Hierarchical { node_size: 2, intra_factor: 0.1 },
+            NetworkKind::Contended,
+        ]
+    }
+
+    /// Parse a CLI tag: `alphabeta`, `loggp`, `hier`, `contended` (default
+    /// parameters).
+    pub fn parse(s: &str) -> Result<NetworkKind, String> {
+        match s.trim() {
+            "alphabeta" | "ab" => Ok(NetworkKind::AlphaBeta),
+            "loggp" => Ok(NetworkKind::LogGp { overhead: 1.0, gap: 2.0 }),
+            "hier" | "hierarchical" => {
+                Ok(NetworkKind::Hierarchical { node_size: 2, intra_factor: 0.1 })
+            }
+            "contended" => Ok(NetworkKind::Contended),
+            other => Err(format!(
+                "unknown network model {other:?} (alphabeta|loggp|hier|contended)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetworkKind::AlphaBeta => "alphabeta",
+            NetworkKind::LogGp { .. } => "loggp",
+            NetworkKind::Hierarchical { .. } => "hier",
+            NetworkKind::Contended => "contended",
+        }
+    }
+
+    /// Instantiate a fresh model for one simulation run on machine `m`.
+    pub fn build(&self, m: &Machine) -> Box<dyn NetworkModel> {
+        match *self {
+            NetworkKind::AlphaBeta => Box::new(AlphaBeta::from_machine(m)),
+            NetworkKind::LogGp { overhead, gap } => {
+                Box::new(LogGp::from_machine(m, overhead, gap))
+            }
+            NetworkKind::Hierarchical { node_size, intra_factor } => {
+                Box::new(Hierarchical::contiguous(m, node_size, intra_factor))
+            }
+            NetworkKind::Contended => Box::new(Contended::from_machine(m)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Machine {
+        Machine::new(4, 2, 100.0, 0.5, 1.0)
+    }
+
+    #[test]
+    fn alphabeta_matches_machine_message_time() {
+        let mach = m();
+        let mut n = AlphaBeta::from_machine(&mach);
+        for w in [1usize, 7, 100] {
+            assert_eq!(n.deliver(0, 1, w, 3.0), 3.0 + mach.message_time(w));
+        }
+    }
+
+    #[test]
+    fn loggp_injection_gap_serializes_bursts() {
+        let mut n = LogGp::new(100.0, 1.0, 10.0, 0.5);
+        let a1 = n.deliver(0, 1, 1, 0.0);
+        let a2 = n.deliver(0, 2, 1, 0.0); // same sender, same instant
+        assert_eq!(a2 - a1, 10.0); // delayed by one gap
+        let a3 = n.deliver(3, 2, 1, 0.0); // different sender: no gap
+        assert_eq!(a3, a1);
+        n.reset();
+        assert_eq!(n.deliver(0, 1, 1, 0.0), a1);
+    }
+
+    #[test]
+    fn hierarchical_intra_cheaper_than_inter() {
+        let mut n = Hierarchical::contiguous(&m(), 2, 0.1);
+        let intra = n.deliver(0, 1, 4, 0.0); // procs 0,1 share node 0
+        let inter = n.deliver(0, 2, 4, 0.0); // proc 2 is on node 1
+        assert!(intra < inter, "intra {intra} inter {inter}");
+        assert_eq!(inter, 100.0 + 0.5 * 4.0);
+    }
+
+    #[test]
+    fn contended_serializes_same_nic_only() {
+        let mut n = Contended::new(10.0, 2.0);
+        let a1 = n.deliver(0, 1, 3, 0.0); // occupies NIC 0 for 6.0
+        let a2 = n.deliver(0, 2, 3, 0.0); // queued behind it
+        assert_eq!(a1, 10.0 + 6.0);
+        assert_eq!(a2, 6.0 + 10.0 + 6.0);
+        let b = n.deliver(1, 2, 3, 0.0); // other NIC: unaffected
+        assert_eq!(b, a1);
+    }
+
+    #[test]
+    fn kind_parse_build_roundtrip() {
+        let mach = m();
+        for tag in ["alphabeta", "loggp", "hier", "contended"] {
+            let kind = NetworkKind::parse(tag).unwrap();
+            assert_eq!(kind.label(), tag);
+            let mut model = kind.build(&mach);
+            let arr = model.deliver(0, 1, 1, 5.0);
+            assert!(arr >= 5.0, "{tag}: {arr}");
+        }
+        assert!(NetworkKind::parse("token-ring").is_err());
+    }
+
+    #[test]
+    fn arrival_never_precedes_post() {
+        let mach = m();
+        for kind in NetworkKind::all_default() {
+            let mut model = kind.build(&mach);
+            let mut post = 0.0;
+            for i in 0..20u32 {
+                let arr = model.deliver(i % 4, (i + 1) % 4, (i as usize % 5) + 1, post);
+                assert!(arr >= post, "{}: {arr} < {post}", kind.label());
+                post += 1.5;
+            }
+        }
+    }
+}

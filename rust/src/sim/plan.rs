@@ -59,12 +59,15 @@ impl ExecPlan {
             .sum()
     }
 
-    /// Total messages posted.
+    /// Total messages posted.  Zero-word sends are excluded — they cost
+    /// nothing on the wire and the simulator does not count them either
+    /// (plans built by this module never emit them; the filter keeps the
+    /// static accounting consistent for hand-built plans too).
     pub fn messages(&self) -> usize {
         self.per_proc
             .iter()
             .flat_map(|p| &p.phases)
-            .filter(|ph| matches!(ph, Phase::Send { .. }))
+            .filter(|ph| matches!(ph, Phase::Send { tasks, .. } if !tasks.is_empty()))
             .count()
     }
 
@@ -318,6 +321,15 @@ mod tests {
         assert_eq!(unchecked.messages(), checked.messages());
         assert_eq!(unchecked.executed_tasks(), checked.executed_tasks());
         assert_eq!(unchecked.words(), checked.words());
+    }
+
+    #[test]
+    fn zero_word_sends_not_counted() {
+        let mut plan = ExecPlan { per_proc: vec![ProcPlan::default(); 2], label: "t".into() };
+        plan.per_proc[0].phases.push(Phase::Send { to: ProcId(1), tasks: vec![] });
+        plan.per_proc[0].phases.push(Phase::Send { to: ProcId(1), tasks: vec![3, 4] });
+        assert_eq!(plan.messages(), 1);
+        assert_eq!(plan.words(), 2);
     }
 
     #[test]

@@ -1,0 +1,362 @@
+//! Parallel parameter sweeps over the event-driven engine — the machinery
+//! behind the `sweep` CLI subcommand and the figure-7/8 data files.
+//!
+//! A sweep is a cartesian grid: prepared `(workload, strategy)` inputs ×
+//! network models × α values × thread counts.  Cells are independent
+//! simulations, so they fan out across `std::thread` workers pulling from
+//! a shared atomic counter; results come back in deterministic grid order
+//! regardless of scheduling.  [`to_json`] / [`to_csv`] render the cells
+//! as figure data.
+
+use super::engine::{try_simulate, TaskCostModel};
+use super::machine::Machine;
+use super::network::NetworkKind;
+use super::plan::ExecPlan;
+use crate::graph::TaskGraph;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// One prepared (workload, strategy) pair: the graph and plan are built
+/// once and shared read-only across every cell and worker thread.
+#[derive(Clone)]
+pub struct SweepInput {
+    /// Workload tag ("heat1d", "cg", ...).
+    pub workload: String,
+    /// Strategy label ("naive", "overlap", "ca(b=4)").
+    pub strategy: String,
+    pub graph: Arc<TaskGraph>,
+    pub plan: Arc<ExecPlan>,
+    /// Per-task cost model (the workload's hint).
+    pub cost: Arc<dyn TaskCostModel>,
+    /// Words per transmitted value (scales β).
+    pub words_per_value: usize,
+}
+
+/// The sweep grid: `inputs × networks × alphas × threads` cells.
+pub struct SweepGrid {
+    pub inputs: Vec<SweepInput>,
+    pub networks: Vec<NetworkKind>,
+    pub alphas: Vec<f64>,
+    pub threads: Vec<u32>,
+    pub beta: f64,
+    pub gamma: f64,
+    /// Worker threads; 0 = one per available core.
+    pub jobs: usize,
+}
+
+impl SweepGrid {
+    pub fn num_cells(&self) -> usize {
+        self.inputs.len() * self.networks.len() * self.alphas.len() * self.threads.len()
+    }
+}
+
+/// One simulated grid cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepCell {
+    pub workload: String,
+    pub strategy: String,
+    pub network: String,
+    pub procs: u32,
+    pub alpha: f64,
+    pub threads: u32,
+    /// Simulated makespan (γ units).
+    pub makespan: f64,
+    pub messages: usize,
+    pub words: usize,
+    /// Fraction of machine capacity spent computing (≤ 1).
+    pub utilization: f64,
+    /// Wall-clock seconds the simulation itself took.
+    pub sim_wall_secs: f64,
+}
+
+fn eval_cell(grid: &SweepGrid, i: usize) -> Result<SweepCell, String> {
+    let (nt, na, nn) = (grid.threads.len(), grid.alphas.len(), grid.networks.len());
+    let threads = grid.threads[i % nt];
+    let alpha = grid.alphas[(i / nt) % na];
+    let kind = grid.networks[(i / (nt * na)) % nn];
+    let input = &grid.inputs[i / (nt * na * nn)];
+    let procs = input.plan.per_proc.len() as u32;
+    let mach = Machine::new(
+        procs,
+        threads,
+        alpha,
+        grid.beta * input.words_per_value as f64,
+        grid.gamma,
+    );
+    let mut net = kind.build(&mach);
+    let t0 = std::time::Instant::now();
+    let r = try_simulate(
+        &input.graph,
+        &input.plan,
+        &mach,
+        net.as_mut(),
+        input.cost.as_ref(),
+        false,
+    )
+    .map_err(|e| {
+        format!(
+            "{}/{}/{}/α={alpha}/t={threads}: {e}",
+            input.workload,
+            input.strategy,
+            kind.label()
+        )
+    })?;
+    Ok(SweepCell {
+        workload: input.workload.clone(),
+        strategy: input.strategy.clone(),
+        network: kind.label().to_string(),
+        procs,
+        alpha,
+        threads,
+        makespan: r.total_time,
+        messages: r.messages,
+        words: r.words,
+        utilization: r.utilization(&mach),
+        sim_wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Run every cell of the grid, fanned across worker threads.  Cells come
+/// back in grid order (inputs outermost, threads innermost) independent
+/// of scheduling; any deadlocked cell aborts the sweep with its tag.
+pub fn run(grid: &SweepGrid) -> Result<Vec<SweepCell>, String> {
+    let total = grid.num_cells();
+    if total == 0 {
+        return Ok(Vec::new());
+    }
+    let jobs = if grid.jobs == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        grid.jobs
+    }
+    .clamp(1, total);
+
+    let next = AtomicUsize::new(0);
+    let mut cells: Vec<(usize, SweepCell)> = Vec::with_capacity(total);
+    let mut errors: Vec<String> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..jobs)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, SweepCell)> = Vec::new();
+                    let mut errs: Vec<String> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= total {
+                            break;
+                        }
+                        match eval_cell(grid, i) {
+                            Ok(c) => local.push((i, c)),
+                            Err(e) => errs.push(e),
+                        }
+                    }
+                    (local, errs)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (local, errs) = h.join().expect("sweep worker panicked");
+            cells.extend(local);
+            errors.extend(errs);
+        }
+    });
+    if !errors.is_empty() {
+        return Err(errors.join("; "));
+    }
+    cells.sort_by_key(|&(i, _)| i);
+    Ok(cells.into_iter().map(|(_, c)| c).collect())
+}
+
+/// Render cells as a JSON document: `{"sweep": tag, "cells": [...]}`.
+pub fn to_json(tag: &str, cells: &[SweepCell]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"sweep\": {tag:?},\n  \"cells\": [\n"));
+    for (i, c) in cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": {:?}, \"strategy\": {:?}, \"network\": {:?}, \
+             \"procs\": {}, \"alpha\": {}, \"threads\": {}, \"makespan\": {}, \
+             \"messages\": {}, \"words\": {}, \"utilization\": {}, \
+             \"sim_wall_secs\": {}}}{}",
+            c.workload,
+            c.strategy,
+            c.network,
+            c.procs,
+            c.alpha,
+            c.threads,
+            c.makespan,
+            c.messages,
+            c.words,
+            c.utilization,
+            c.sim_wall_secs,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Render cells as CSV (one row per cell).
+pub fn to_csv(cells: &[SweepCell]) -> String {
+    let mut s = String::from(
+        "workload,strategy,network,procs,alpha,threads,makespan,messages,words,utilization,sim_wall_secs\n",
+    );
+    for c in cells {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{}\n",
+            c.workload,
+            c.strategy,
+            c.network,
+            c.procs,
+            c.alpha,
+            c.threads,
+            c.makespan,
+            c.messages,
+            c.words,
+            c.utilization,
+            c.sim_wall_secs,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::UniformCost;
+    use crate::stencil::heat1d_graph;
+    use crate::transform::TransformOptions;
+
+    fn inputs() -> Vec<SweepInput> {
+        let g = Arc::new(heat1d_graph(32, 4, 2));
+        let naive = Arc::new(ExecPlan::naive(&g));
+        let ca = Arc::new(ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap());
+        vec![
+            SweepInput {
+                workload: "heat1d".into(),
+                strategy: naive.label.clone(),
+                graph: Arc::clone(&g),
+                plan: naive,
+                cost: Arc::new(UniformCost),
+                words_per_value: 1,
+            },
+            SweepInput {
+                workload: "heat1d".into(),
+                strategy: ca.label.clone(),
+                graph: g,
+                plan: ca,
+                cost: Arc::new(UniformCost),
+                words_per_value: 1,
+            },
+        ]
+    }
+
+    fn grid(jobs: usize) -> SweepGrid {
+        SweepGrid {
+            inputs: inputs(),
+            networks: NetworkKind::all_default(),
+            alphas: vec![1.0, 100.0],
+            threads: vec![1, 4],
+            beta: 0.1,
+            gamma: 1.0,
+            jobs,
+        }
+    }
+
+    #[test]
+    fn covers_grid_deterministically_and_bounds_utilization() {
+        let g3 = grid(3);
+        let cells = run(&g3).unwrap();
+        assert_eq!(cells.len(), g3.num_cells());
+        assert_eq!(cells.len(), 2 * 4 * 2 * 2);
+        for c in &cells {
+            assert!(c.makespan.is_finite() && c.makespan > 0.0, "{c:?}");
+            assert!(c.utilization > 0.0 && c.utilization <= 1.0 + 1e-12, "{c:?}");
+            assert!(c.messages > 0 && c.words > 0, "{c:?}");
+        }
+        // Parallel scheduling must not change results or order.
+        let serial: Vec<SweepCell> = run(&grid(1)).unwrap();
+        let key = |c: &SweepCell| {
+            (c.workload.clone(), c.strategy.clone(), c.network.clone(), c.threads)
+        };
+        assert_eq!(
+            cells.iter().map(key).collect::<Vec<_>>(),
+            serial.iter().map(key).collect::<Vec<_>>()
+        );
+        for (a, b) in cells.iter().zip(&serial) {
+            assert_eq!(a.makespan, b.makespan, "{a:?} vs {b:?}");
+            assert_eq!(a.messages, b.messages);
+        }
+    }
+
+    #[test]
+    fn grid_order_is_inputs_networks_alphas_threads() {
+        let cells = run(&grid(2)).unwrap();
+        // Innermost axis: threads; then alpha; then network; then input.
+        assert_eq!(cells[0].threads, 1);
+        assert_eq!(cells[1].threads, 4);
+        assert_eq!(cells[0].alpha, 1.0);
+        assert_eq!(cells[2].alpha, 100.0);
+        assert_eq!(cells[0].network, "alphabeta");
+        assert_eq!(cells[4].network, "loggp");
+        assert_eq!(cells[0].strategy, "naive");
+        assert_eq!(cells[16].strategy, "ca(b=2)");
+    }
+
+    #[test]
+    fn alphabeta_cell_matches_direct_simulation() {
+        let g = grid(2);
+        let cells = run(&g).unwrap();
+        let input = &g.inputs[0];
+        let mach = Machine::new(2, 4, 100.0, 0.1, 1.0);
+        let direct = crate::sim::simulate(&input.graph, &input.plan, &mach, false);
+        let cell = cells
+            .iter()
+            .find(|c| {
+                c.strategy == "naive" && c.network == "alphabeta" && c.alpha == 100.0 && c.threads == 4
+            })
+            .unwrap();
+        assert_eq!(cell.makespan, direct.total_time);
+        assert_eq!(cell.messages, direct.messages);
+        assert_eq!(cell.words, direct.words);
+    }
+
+    #[test]
+    fn json_and_csv_shapes() {
+        let cells = run(&SweepGrid {
+            inputs: inputs(),
+            networks: vec![NetworkKind::AlphaBeta],
+            alphas: vec![8.0],
+            threads: vec![2],
+            beta: 0.1,
+            gamma: 1.0,
+            jobs: 1,
+        })
+        .unwrap();
+        let json = to_json("smoke", &cells);
+        assert!(json.contains("\"sweep\": \"smoke\""));
+        assert!(json.contains("\"workload\": \"heat1d\""));
+        assert!(json.contains("\"makespan\":"));
+        assert!(json.contains("\"utilization\":"));
+        // Each cell is one line; no trailing comma before the closing `]`.
+        assert_eq!(json.matches("\"workload\"").count(), cells.len());
+        assert!(!json.contains("},\n  ]"));
+        let csv = to_csv(&cells);
+        assert!(csv.starts_with("workload,strategy,network,procs,alpha,"));
+        assert_eq!(csv.lines().count(), cells.len() + 1);
+    }
+
+    #[test]
+    fn empty_grid_is_empty() {
+        let g = SweepGrid {
+            inputs: Vec::new(),
+            networks: vec![NetworkKind::AlphaBeta],
+            alphas: vec![1.0],
+            threads: vec![1],
+            beta: 0.0,
+            gamma: 1.0,
+            jobs: 0,
+        };
+        assert_eq!(run(&g).unwrap().len(), 0);
+    }
+}
