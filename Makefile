@@ -3,15 +3,22 @@
 
 CARGO ?= cargo
 
-.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke
+.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke
 
-ci: build test clippy fmt sweep-smoke
+ci: build test clippy fmt sweep-smoke tune-smoke
 
 # The simulator perf tracker: a reduced fig-7/8 sweep across all four
 # network models, emitting per-cell makespan + simulator wall-time so the
 # trajectory is visible from every push (BENCH_sim.json).
 sweep-smoke: build
 	$(CARGO) run --release -- sweep --smoke
+
+# The autotuner tracker: tune two workloads across all four network
+# models, twice each (the second pass exercises the tuning cache),
+# emitting tuned-vs-naive makespan + search wall-time + cache hit rate
+# (BENCH_tune.json).
+tune-smoke: build
+	$(CARGO) run --release -- tune --smoke
 
 build:
 	$(CARGO) build --release

@@ -11,8 +11,9 @@
 //! ```
 
 use imp_latency::pipeline::{Heat1d, Pipeline};
-use imp_latency::sim::Machine;
+use imp_latency::sim::{Machine, NetworkKind};
 use imp_latency::transform::check_schedule;
+use imp_latency::tune::Tuner;
 
 fn main() {
     // 1. Describe the problem: 512 points of the 1-D heat equation
@@ -64,7 +65,33 @@ fn main() {
 
     // 5. Execute for real — worker threads, real channels — and verify
     //    every value against the sequential reference solution.
-    let real = base.block(4).transform().expect("transform").execute().expect("verified run");
+    let real =
+        base.clone().block(4).transform().expect("transform").execute().expect("verified run");
     println!("\nreal execution: {}", real.summary());
     println!("\nblocking pays the α per superstep instead of per step — figure 8's effect.");
+
+    // 6. Or let the autotuner pick: every (strategy × halo × block)
+    //    candidate is scored by the event engine under the configured
+    //    wire model — here a contended NIC, where §2.1's closed form no
+    //    longer applies — and the winner is cached, so tuning the same
+    //    problem again costs zero engine runs.
+    let mut tuner = Tuner::exhaustive();
+    let tuned = base
+        .clone()
+        .machine(machine)
+        .network(NetworkKind::Contended)
+        .autotune(&mut tuner)
+        .expect("tunable");
+    println!("\n{}", tuned.tune_report().expect("tuned").summary());
+    let again = base
+        .machine(machine)
+        .network(NetworkKind::Contended)
+        .autotune(&mut tuner)
+        .expect("tunable");
+    println!("{}", again.tune_report().expect("tuned").summary());
+    println!(
+        "tuning cache: {} hit / {} miss — repeat pipelines skip the search entirely.",
+        tuner.cache.hits(),
+        tuner.cache.misses()
+    );
 }

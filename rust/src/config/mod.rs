@@ -157,6 +157,62 @@ pub fn preset_sweep_smoke() -> Config {
     c
 }
 
+/// The `tune` CLI preset: engine-in-the-loop autotuning of each
+/// workload under every wire model, with a file-backed
+/// [`crate::tune::TuningCache`] so repeat invocations skip the search.
+pub fn preset_tune() -> Config {
+    let mut c = Config::new();
+    c.set("workloads", "heat1d,heat2d,spmv");
+    c.set("networks", "alphabeta,loggp,hier,contended");
+    c.set("search", "exhaustive");
+    c.set("p", 4);
+    c.set("n", 4096);
+    c.set("m", 32);
+    c.set("h", 32);
+    c.set("w", 32);
+    c.set("cg_n", 256);
+    c.set("iters", 3);
+    c.set("threads", 8);
+    c.set("alpha", 500.0);
+    c.set("beta", 0.1);
+    c.set("gamma", 1.0);
+    c.set("repeat", 1);
+    c.set("cache", "results/tune_cache.json");
+    c.set("out", "results/tune.json");
+    c
+}
+
+/// The `tune --smoke` preset: the CI perf tracker — two workloads ×
+/// four wire models, each tuned twice so the second pass exercises the
+/// cache (hit rate 0.5 in the emitted `BENCH_tune.json`).
+pub fn preset_tune_smoke() -> Config {
+    let mut c = preset_tune();
+    c.set("workloads", "heat1d,heat2d");
+    c.set("n", 1024);
+    c.set("m", 16);
+    c.set("h", 16);
+    c.set("w", 16);
+    c.set("repeat", 2);
+    c.set("cache", "");
+    c.set("out", "BENCH_tune.json");
+    c
+}
+
+/// The figure-9 preset: tuned vs fixed-b vs naive across the four wire
+/// models.  α is sized so the §2.1 closed form picks a block factor
+/// inside the default grid (sqrt(α·t/γ) ≈ 22.6 clamps to the depth).
+pub fn preset_fig9() -> Config {
+    let mut c = Config::new();
+    c.set("n", 2048);
+    c.set("m", 16);
+    c.set("p", 4);
+    c.set("threads", 8);
+    c.set("alpha", 64.0);
+    c.set("beta", 0.1);
+    c.set("gamma", 1.0);
+    c
+}
+
 /// The end-to-end driver preset (real PJRT run).
 pub fn preset_end_to_end() -> Config {
     let mut c = Config::new();
@@ -232,6 +288,19 @@ mod tests {
         }
         // The smoke grid is exactly the two paper regimes.
         assert_eq!(preset_sweep_smoke().get("alphas"), Some("8,500"));
+        for c in [preset_tune(), preset_tune_smoke()] {
+            for k in [
+                "workloads", "networks", "search", "p", "n", "m", "h", "w", "threads",
+                "alpha", "beta", "gamma", "repeat", "cache", "out",
+            ] {
+                assert!(c.get(k).is_some(), "{k}");
+            }
+        }
+        // The tune smoke pass runs everything twice to exercise the cache.
+        assert_eq!(preset_tune_smoke().get("repeat"), Some("2"));
+        for k in ["n", "m", "p", "threads", "alpha", "beta", "gamma"] {
+            assert!(preset_fig9().get(k).is_some(), "{k}");
+        }
     }
 
     #[test]

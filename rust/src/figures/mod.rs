@@ -10,11 +10,15 @@
 //! | 6 | k₁/k₂/k₃ sets for a 1-D heat-equation processor | [`fig6`] |
 //! | 7 | runtime vs. threads/node, moderate latency | [`fig78_sweep`] |
 //! | 8 | runtime vs. threads/node, high latency | [`fig78_sweep`] |
+//! | 9 | tuned vs. fixed-b vs. naive makespan per wire model (beyond the paper) | [`fig9_tuned`] |
 //!
 //! Figures 1–6 are structural (the paper draws diagrams; we render the
 //! *computed* sets as ASCII grids, which doubles as a check that the
 //! transformation produces the shapes the paper draws).  Figures 7/8 are
 //! the simulation study; the benches write their CSVs via these functions.
+//! Figure 9 extends the study with the [`crate::tune`] autotuner: it shows
+//! where the §2.1 machine-constant `b*` stops being optimal once the wire
+//! stops being the ideal α/β model.
 
 use crate::config::{parse_list, Config};
 use crate::pipeline::{strategy_sweep_inputs, Heat1d, Pipeline};
@@ -22,6 +26,7 @@ use crate::sim::{ca_time_for, naive_time_1d, overlap_time_1d, sweep, Machine, Ne
 use crate::stencil::heat1d_graph;
 use crate::trace::FigureSeries;
 use crate::transform::{CaSchedule, ScheduleStats, TransformOptions};
+use crate::tune::{Tuner, TuningSpace};
 use std::sync::Arc;
 
 /// The figures' common front end: run a 1-D heat problem through the
@@ -295,6 +300,80 @@ pub fn fig78_sweep_sim(cfg: &Config, network: NetworkKind) -> Result<FigureSerie
     Ok(fig)
 }
 
+/// Figure 9 (beyond the paper): makespan of naive, the §2.1 fixed-b
+/// closed-form pick, and the [`crate::tune`] autotuned configuration,
+/// across the four wire models (x = network index in
+/// [`NetworkKind::all_default`] order: alphabeta, loggp, hier,
+/// contended).  One [`crate::tune::Tuner`] serves all four tunings, so
+/// the run also exercises the cache keying across networks.
+///
+/// `cfg` keys: `n, m, p, threads, alpha, beta, gamma` (see
+/// [`crate::config::preset_fig9`]).
+pub fn fig9_tuned(cfg: &Config) -> Result<FigureSeries, String> {
+    let n: u64 = cfg.require("n")?;
+    let m: u32 = cfg.require("m")?;
+    let p: u32 = cfg.require("p")?;
+    let mach = Machine::new(
+        p,
+        cfg.require("threads")?,
+        cfg.require("alpha")?,
+        cfg.require("beta")?,
+        cfg.require("gamma")?,
+    );
+    // Radius-1 heat1d has depth = m; the closed form clamps into it.
+    let fixed_b = TuningSpace::closed_form_seed(&mach, m).unwrap_or(1);
+    let mut fig = FigureSeries::new("network", &["naive", "fixed_b", "tuned"]);
+    let mut tuner = Tuner::exhaustive();
+    for (i, kind) in NetworkKind::all_default().into_iter().enumerate() {
+        let base =
+            Pipeline::new(Heat1d { n, steps: m, radius: 1 }).procs(p).machine(mach).network(kind);
+        let naive = base
+            .clone()
+            .naive()
+            .transform()
+            .map_err(|e| e.to_string())?
+            .simulate_configured()
+            .map_err(|e| e.to_string())?;
+        let fixed = base
+            .clone()
+            .block(fixed_b)
+            .transform()
+            .map_err(|e| e.to_string())?
+            .simulate_configured()
+            .map_err(|e| e.to_string())?;
+        let tuned = base.autotune(&mut tuner).map_err(|e| e.to_string())?;
+        let report = tuned.tune_report().expect("autotune attaches a report");
+        fig.push(i as f64, vec![naive.time.value(), fixed.time.value(), report.makespan]);
+    }
+    Ok(fig)
+}
+
+/// Figure-9 shape assertion: on every wire the tuned configuration is
+/// never (beyond the plateau tolerance) slower than naive or the
+/// closed-form fixed-b pick — the tuner searched a space containing
+/// both.
+pub fn check_fig9_claims(fig: &FigureSeries) -> Result<String, String> {
+    for (x, row) in &fig.rows {
+        let (naive, fixed, tuned) = (row[0], row[1], row[2]);
+        if tuned > naive * 1.02 {
+            return Err(format!("network {x}: tuned {tuned} slower than naive {naive}"));
+        }
+        if tuned > fixed * 1.02 {
+            return Err(format!("network {x}: tuned {tuned} slower than fixed-b {fixed}"));
+        }
+    }
+    let gain = |i: usize| {
+        fig.rows.iter().map(|(_, r)| r[i] / r[2]).fold(1.0f64, f64::max)
+    };
+    Ok(format!(
+        "figure 9 claims hold: tuned ≤ min(naive, fixed-b) on all {} wires; \
+         best gain over naive {:.2}x, over fixed-b {:.2}x",
+        fig.rows.len(),
+        gain(0),
+        gain(1)
+    ))
+}
+
 /// Shape assertions for figures 7/8 — the paper's qualitative claims,
 /// checked programmatically (see DESIGN.md §4 acceptance criteria).
 /// Returns a human-readable verdict; `Err` when a claim fails.
@@ -444,6 +523,22 @@ mod tests {
                 assert!(b >= a, "contended {b} < ideal {a}");
             }
         }
+    }
+
+    #[test]
+    fn fig9_tuned_never_loses_to_fixed_or_naive() {
+        let mut c = crate::config::preset_fig9();
+        // Shrink for test speed; α·t keeps the closed form in-grid.
+        c.set("n", 256);
+        c.set("m", 8);
+        c.set("p", 2);
+        c.set("threads", 4);
+        c.set("alpha", 32.0);
+        let fig = fig9_tuned(&c).unwrap();
+        assert_eq!(fig.rows.len(), 4); // one row per wire model
+        assert_eq!(fig.labels, vec!["naive", "fixed_b", "tuned"]);
+        let verdict = check_fig9_claims(&fig).unwrap();
+        assert!(verdict.contains("claims hold"), "{verdict}");
     }
 
     #[test]

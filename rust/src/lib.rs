@@ -41,6 +41,12 @@
 //! * [`pipeline`] — **the front door**: the [`pipeline::Workload`] trait
 //!   and the [`pipeline::Pipeline`] builder tying every layer below into
 //!   one expression, with a shared [`pipeline::RunReport`].
+//! * [`tune`] — simulation-in-the-loop autotuning: a
+//!   [`tune::TuningSpace`] (strategy × halo × block × procs) explored by
+//!   pluggable [`tune::SearchStrategy`] impls, every candidate scored by
+//!   the event-driven engine via the [`sim::sweep`] worker pool, winners
+//!   persisted in a JSON [`tune::TuningCache`]; surfaced as
+//!   [`pipeline::Pipeline::autotune`] and the `tune` CLI subcommand.
 //! * [`cost`] — the §2.1 analytic cost model `T(b) = (M/b)α + Mβ + (MN/p + Mb)γ`.
 //! * [`krylov`] — the motivating application: classic and latency-tolerant CG.
 //! * [`runtime`] — PJRT artifact loading/execution (`xla` crate).
@@ -66,8 +72,10 @@ pub mod sim;
 pub mod stencil;
 pub mod trace;
 pub mod transform;
+pub mod tune;
 pub mod util;
 
 pub use graph::{ProcId, TaskGraph, TaskId};
 pub use pipeline::{Pipeline, RunReport, Workload};
 pub use transform::{CaSchedule, HaloMode, TransformOptions};
+pub use tune::Tuner;

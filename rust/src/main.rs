@@ -13,8 +13,8 @@
 //! * `dot` — Graphviz export of a (small) transformed graph.
 
 use imp_latency::config::{
-    parse_list, preset_end_to_end, preset_fig7, preset_fig8, preset_sweep, preset_sweep_smoke,
-    Config,
+    parse_list, preset_end_to_end, preset_fig7, preset_fig8, preset_fig9, preset_sweep,
+    preset_sweep_smoke, preset_tune, preset_tune_smoke, Config,
 };
 use imp_latency::coordinator::{heat1d, heat2d};
 use imp_latency::cost::CostModel;
@@ -28,6 +28,7 @@ use imp_latency::sim::{sweep, try_simulate, Machine, NetworkKind, UniformCost};
 use imp_latency::stencil::CsrMatrix;
 use imp_latency::trace::{gantt_ascii, summary_line};
 use imp_latency::transform::{check_schedule, HaloMode, ScheduleStats, TransformOptions};
+use imp_latency::tune::{self, SearchStrategy as _, Tuner, TuningCache};
 
 const HELP: &str = "\
 imp-latency — Task Graph Transformations for Latency Tolerance (Eijkhout 2018)
@@ -35,8 +36,9 @@ imp-latency — Task Graph Transformations for Latency Tolerance (Eijkhout 2018)
 USAGE: imp-latency <command> [key=value ...]
 
 COMMANDS
-  figure <f1..f8|all> [out=results/ engine=analytic|sim network=alphabeta]
-             regenerate paper figures (f7/f8 optionally on the event engine)
+  figure <f1..f9|all> [out=results/ engine=analytic|sim network=alphabeta]
+             regenerate paper figures (f7/f8 optionally on the event engine;
+             f9 is the tuned-vs-fixed-b study across the four wire models)
   pipeline   [workload=heat1d|heat2d|moore2d|spmv|cg n=4096 m=16 p=4 b=4
               strategy=ca|naive|overlap halo=multi|level0 h=32 w=32
               threads=8 alpha=500 beta=0.1 gamma=1]
@@ -56,6 +58,14 @@ COMMANDS
   run-cg     [workers=2 tol=1e-5 max_iters=2000 pipelined=0]
   powers     [n=4096 workers=4 s=8]    CA matrix-powers kernel vs baseline
   autotune   [n=65536 m=64 p=16 threads=16 alpha=500 beta=0.1 gamma=1]
+             the §2.1 closed-form-vs-analytic-simulator comparison (heat1d, α/β wire)
+  tune       [--smoke workloads=heat1d,heat2d,spmv networks=alphabeta,loggp,hier,contended
+              search=exhaustive|golden|coord n=4096 m=32 p=4 h=32 w=32 threads=8
+              alpha=500 beta=0.1 gamma=1 repeat=1 cache=results/tune_cache.json
+              out=results/tune.json]
+             engine-in-the-loop autotuner: any workload × any wire model, scored by
+             the event engine, persisted in a JSON tuning cache; --smoke runs the CI
+             preset twice (cache demo) and emits BENCH_tune.json
   dot        [n=16 m=3 p=2]            Graphviz of the transformed graph
 
 Artifacts are searched in $IMP_ARTIFACTS or ./artifacts (run `make artifacts`).
@@ -91,6 +101,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "run-cg" => cmd_run_cg(&rest),
         "powers" => cmd_powers(&rest),
         "autotune" => cmd_autotune(&rest),
+        "tune" => cmd_tune(&rest),
         "dot" => cmd_dot(&rest),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -183,8 +194,21 @@ fn cmd_figure(args: &[&str]) -> Result<(), String> {
         }
         did = true;
     }
+    if all || which == "f9" {
+        // Beyond the paper: the engine-backed tuner vs. the §2.1 fixed
+        // closed-form b, across the four wire models.
+        let (cfg9, _) = config_from(preset_fig9(), &args[args.len().min(1)..]);
+        let fig = figures::fig9_tuned(&cfg9)?;
+        println!("Figure 9 — tuned vs fixed-b vs naive makespan per wire model");
+        println!("  x = network index: 0 alphabeta, 1 loggp, 2 hier, 3 contended");
+        print!("{}", fig.to_table());
+        fig.write_csv(&format!("{out_dir}/fig9.csv")).map_err(|e| e.to_string())?;
+        println!("wrote {out_dir}/fig9.csv");
+        println!("{}", figures::check_fig9_claims(&fig)?);
+        did = true;
+    }
     if !did {
-        return Err(format!("unknown figure {which:?} (f1..f8 or all)"));
+        return Err(format!("unknown figure {which:?} (f1..f9 or all)"));
     }
     Ok(())
 }
@@ -300,6 +324,45 @@ fn cmd_simulate(args: &[&str]) -> Result<(), String> {
     Ok(())
 }
 
+/// Callback of [`dispatch_workload`]: one generic method, so each CLI
+/// surface states *what it does with a workload* exactly once.
+trait WorkloadVisitor {
+    type Out;
+    fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out;
+}
+
+/// The single workload-name → constructor map shared by the `sweep` and
+/// `tune` subcommands (key semantics: `n`/`r` for heat1d, `h`×`w` for
+/// the 2-D stencils and SpMV; CG's AllToAll dot levels make its graph
+/// O(n²) in edges, so its size is the separate, smaller `cg_n` knob).
+/// `pipeline` keeps its own mapping on purpose — there `n` names the
+/// size of whichever single workload was picked.
+fn dispatch_workload<V: WorkloadVisitor>(
+    name: &str,
+    cfg: &Config,
+    v: &mut V,
+) -> Result<V::Out, String> {
+    let m: u32 = cfg.require("m")?;
+    let (h, w): (u64, u64) = (cfg.require("h")?, cfg.require("w")?);
+    Ok(match name {
+        "heat1d" => {
+            v.visit(Heat1d { n: cfg.get_or("n", 4096), steps: m, radius: cfg.get_or("r", 1) })
+        }
+        "heat2d" => v.visit(Heat2d { h, w, steps: m }),
+        "moore2d" => v.visit(Moore2d { h, w, steps: m }),
+        "spmv" => {
+            v.visit(Spmv { matrix: CsrMatrix::laplace2d(h as usize, w as usize), steps: m })
+        }
+        "cg" => v.visit(ConjugateGradient {
+            unknowns: cfg.get_or("cg_n", 256),
+            iters: cfg.get_or("iters", 3),
+        }),
+        other => {
+            return Err(format!("unknown workload {other:?} (heat1d|heat2d|moore2d|spmv|cg)"))
+        }
+    })
+}
+
 /// Build the sweep inputs for one workload name: naive + overlap + one CA
 /// plan per block factor, all sharing the workload's graph.
 fn sweep_inputs_for(
@@ -307,42 +370,19 @@ fn sweep_inputs_for(
     cfg: &Config,
     blocks: &[u32],
 ) -> Result<Vec<sweep::SweepInput>, String> {
-    fn collect<W: Workload + Clone>(
-        w: W,
-        p: u32,
-        blocks: &[u32],
-    ) -> Result<Vec<sweep::SweepInput>, String> {
-        imp_latency::pipeline::strategy_sweep_inputs(&Pipeline::new(w).procs(p), blocks)
-            .map_err(|e| e.to_string())
+    struct V<'a> {
+        cfg: &'a Config,
+        blocks: &'a [u32],
     }
-    let p: u32 = cfg.require("p")?;
-    let m: u32 = cfg.require("m")?;
-    let (h, w): (u64, u64) = (cfg.require("h")?, cfg.require("w")?);
-    match name {
-        "heat1d" => collect(
-            Heat1d { n: cfg.get_or("n", 4096), steps: m, radius: cfg.get_or("r", 1) },
-            p,
-            blocks,
-        ),
-        "heat2d" => collect(Heat2d { h, w, steps: m }, p, blocks),
-        "moore2d" => collect(Moore2d { h, w, steps: m }, p, blocks),
-        "spmv" => collect(
-            Spmv { matrix: CsrMatrix::laplace2d(h as usize, w as usize), steps: m },
-            p,
-            blocks,
-        ),
-        // CG's AllToAll dot levels make the graph O(n²) in edges — its
-        // problem size is a separate, smaller knob.
-        "cg" => collect(
-            ConjugateGradient {
-                unknowns: cfg.get_or("cg_n", 256),
-                iters: cfg.get_or("iters", 3),
-            },
-            p,
-            blocks,
-        ),
-        other => Err(format!("unknown workload {other:?} (heat1d|heat2d|moore2d|spmv|cg)")),
+    impl WorkloadVisitor for V<'_> {
+        type Out = Result<Vec<sweep::SweepInput>, String>;
+        fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out {
+            let p: u32 = self.cfg.require("p")?;
+            imp_latency::pipeline::strategy_sweep_inputs(&Pipeline::new(w).procs(p), self.blocks)
+                .map_err(|e| e.to_string())
+        }
     }
+    dispatch_workload(name, cfg, &mut V { cfg, blocks })?
 }
 
 fn cmd_sweep(args: &[&str]) -> Result<(), String> {
@@ -698,7 +738,8 @@ fn cmd_autotune(args: &[&str]) -> Result<(), String> {
         cfg.require("m")?,
         &mach,
         &[1, 2, 4, 8, 16, 32, 64],
-    );
+    )
+    .map_err(|e| e.to_string())?;
     println!(
         "autotune: grid {:?}\n  §2.1 model b* = {} (continuous {:.1})\n  simulator b* = {}\n  \
          chosen b = {}  (predicted {:.1}, naive {:.1}, speedup {:.2}x)",
@@ -711,6 +752,114 @@ fn cmd_autotune(args: &[&str]) -> Result<(), String> {
         r.naive_time,
         r.predicted_speedup()
     );
+    Ok(())
+}
+
+/// Autotune one named workload under every configured wire model,
+/// `repeat` times each (repeats demonstrate the tuning cache: the
+/// second pass is served without engine runs).
+fn tune_rows_for(
+    name: &str,
+    cfg: &Config,
+    tuner: &mut Tuner,
+) -> Result<Vec<tune::TuneRow>, String> {
+    struct V<'a, 'b> {
+        cfg: &'a Config,
+        tuner: &'b mut Tuner,
+    }
+    impl WorkloadVisitor for V<'_, '_> {
+        type Out = Result<Vec<tune::TuneRow>, String>;
+        fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out {
+            let cfg = self.cfg;
+            let p: u32 = cfg.require("p")?;
+            let mach = Machine::new(
+                p,
+                cfg.require("threads")?,
+                cfg.require("alpha")?,
+                cfg.require("beta")?,
+                cfg.require("gamma")?,
+            );
+            let repeat: u32 = cfg.get_or("repeat", 1);
+            let mut rows = Vec::new();
+            for tag in cfg.require::<String>("networks")?.split(',') {
+                let tag = tag.trim();
+                if tag.is_empty() {
+                    continue;
+                }
+                let kind = NetworkKind::parse(tag)?;
+                for _ in 0..repeat.max(1) {
+                    let t = Pipeline::new(w.clone())
+                        .procs(p)
+                        .machine(mach)
+                        .network(kind)
+                        .autotune(self.tuner)
+                        .map_err(|e| e.to_string())?;
+                    let r = t.tune_report().expect("autotune attaches a report");
+                    println!("{}", r.summary());
+                    rows.push(tune::TuneRow::from_report(r));
+                }
+            }
+            Ok(rows)
+        }
+    }
+    dispatch_workload(name, cfg, &mut V { cfg, tuner })?
+}
+
+fn cmd_tune(args: &[&str]) -> Result<(), String> {
+    let smoke = args.contains(&"--smoke");
+    let defaults = if smoke { preset_tune_smoke() } else { preset_tune() };
+    let (cfg, _) = config_from(defaults, args);
+
+    let search = tune::search_from_tag(&cfg.get_or("search", "exhaustive".to_string()))?;
+    let cache = match cfg.get("cache") {
+        Some(path) if !path.is_empty() => TuningCache::with_path(path),
+        _ => TuningCache::new(),
+    };
+    let preloaded = cache.len();
+    let mut tuner = Tuner::new(search, cache);
+
+    let workloads: Vec<String> = cfg
+        .require::<String>("workloads")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    println!(
+        "tune: {} workloads × networks [{}], search={} ({} cached entries loaded)",
+        workloads.len(),
+        cfg.get_or("networks", String::new()),
+        tuner.search.label(),
+        preloaded
+    );
+    let t0 = std::time::Instant::now();
+    let mut rows: Vec<tune::TuneRow> = Vec::new();
+    for wl in &workloads {
+        rows.extend(tune_rows_for(wl, &cfg, &mut tuner)?);
+    }
+    let engine_runs: usize = rows.iter().map(|r| r.engine_runs).sum();
+    println!(
+        "{} tunings ({engine_runs} engine runs) in {:.2}s; cache {} hits / {} misses (hit rate {:.2})",
+        rows.len(),
+        t0.elapsed().as_secs_f64(),
+        tuner.cache.hits(),
+        tuner.cache.misses(),
+        tuner.cache.hit_rate()
+    );
+
+    let out = cfg.get_or("out", "results/tune.json".to_string());
+    let json = tune::rows_to_json(
+        if smoke { "smoke" } else { "tune" },
+        &rows,
+        tuner.cache.hits(),
+        tuner.cache.misses(),
+    );
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    std::fs::write(&out, json).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -55,6 +55,7 @@ use crate::graph::TaskGraph;
 use crate::sim::sweep::SweepInput;
 use crate::sim::{try_simulate, ExecPlan, Machine, NetworkKind, ScaledCost, TaskCostModel};
 use crate::transform::{communication_avoiding, CaSchedule, HaloMode, TransformOptions};
+use crate::tune::{TuneReport, Tuner};
 use std::sync::Arc;
 
 /// A problem the pipeline can carry end to end.
@@ -100,7 +101,7 @@ pub trait Workload {
 }
 
 /// Execution strategy for the plan the pipeline builds.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Strategy {
     /// Per-level halo exchange, no overlap (§4 baseline).
     Naive,
@@ -240,6 +241,59 @@ impl<W: Workload> Pipeline<W> {
         self
     }
 
+    /// The workload description this builder carries.
+    pub fn workload(&self) -> &W {
+        &self.workload
+    }
+
+    /// Resolved processor count (explicit or the workload's default).
+    pub fn resolved_procs(&self) -> u32 {
+        self.procs.unwrap_or_else(|| self.workload.default_procs())
+    }
+
+    /// The machine configured with [`Pipeline::machine`], if any.
+    pub fn machine_config(&self) -> Option<Machine> {
+        self.machine
+    }
+
+    /// The wire model configured with [`Pipeline::network`].
+    pub fn network_config(&self) -> NetworkKind {
+        self.network
+    }
+
+    /// The per-task cost model override set with [`Pipeline::costs`],
+    /// if any (the workload's own model applies otherwise).
+    pub fn cost_config(&self) -> Option<&Arc<dyn TaskCostModel>> {
+        self.cost.as_ref()
+    }
+
+    /// Let the [`crate::tune`] subsystem pick the configuration: search
+    /// the (strategy × halo × block × procs) space with `tuner`, scoring
+    /// every candidate on the event-driven engine under the configured
+    /// machine, wire model, and cost model, and build the winning plan.
+    /// Requires [`Pipeline::machine`].  Repeat problems are served from
+    /// the tuner's [`crate::tune::TuningCache`] without any engine runs;
+    /// the [`TuneReport`] rides on the returned pipeline
+    /// ([`Transformed::tune_report`]) and inside every [`RunReport`] it
+    /// produces.
+    pub fn autotune(self, tuner: &mut Tuner) -> Result<Transformed<W>, PipelineError>
+    where
+        W: Clone,
+    {
+        let outcome = crate::tune::tune_pipeline(&self, tuner)?;
+        let chosen = outcome.chosen;
+        let mut next = self.procs(chosen.procs).strategy(chosen.strategy).halo(chosen.halo);
+        next.block = chosen.block;
+        if let Some(machine) = next.machine {
+            if machine.nprocs != chosen.procs {
+                next.machine = Some(Machine { nprocs: chosen.procs, ..machine });
+            }
+        }
+        let mut t = next.transform()?;
+        t.tune = Some(outcome.report);
+        Ok(t)
+    }
+
     /// Build the graph and the execution plan.  For the CA strategy every
     /// superstep schedule is verified against Theorem 1 unless
     /// [`Pipeline::skip_check`] was requested.
@@ -277,24 +331,45 @@ impl<W: Workload> Pipeline<W> {
             machine: self.machine,
             network: self.network,
             cost,
+            tune: None,
         })
     }
 }
 
+/// Build the sweep input of **one** execution configuration of `base`:
+/// strategy, CA block factor (`None` = whole-graph superstep), and an
+/// optional halo override.  This is the single path through which both
+/// [`strategy_sweep_inputs`] and the [`crate::tune`] candidate
+/// evaluator construct their plan families, so the figures, the CLI
+/// sweeps, and the autotuner can never drift apart.
+pub fn candidate_sweep_input<W: Workload + Clone>(
+    base: &Pipeline<W>,
+    strategy: Strategy,
+    block: Option<u32>,
+    halo: Option<HaloMode>,
+) -> Result<SweepInput, PipelineError> {
+    let mut p = base.clone().strategy(strategy);
+    p.block = block; // the configuration *is* the candidate (CA only)
+    if let Some(h) = halo {
+        p = p.halo(h);
+    }
+    Ok(p.transform()?.sweep_input())
+}
+
 /// The strategy family of sweep inputs from one base builder: naive,
 /// overlap, and one CA plan per block factor in `blocks` — the input
-/// list every figure-7/8-shaped sweep wants, built once here so the CLI
-/// and [`crate::figures`] cannot drift apart.
+/// list every figure-7/8-shaped sweep wants, assembled through
+/// [`candidate_sweep_input`].
 pub fn strategy_sweep_inputs<W: Workload + Clone>(
     base: &Pipeline<W>,
     blocks: &[u32],
 ) -> Result<Vec<SweepInput>, PipelineError> {
     let mut v = vec![
-        base.clone().naive().transform()?.sweep_input(),
-        base.clone().overlap().transform()?.sweep_input(),
+        candidate_sweep_input(base, Strategy::Naive, None, None)?,
+        candidate_sweep_input(base, Strategy::Overlap, None, None)?,
     ];
     for &b in blocks {
-        v.push(base.clone().block(b).transform()?.sweep_input());
+        v.push(candidate_sweep_input(base, Strategy::Ca, Some(b), None)?);
     }
     Ok(v)
 }
@@ -314,11 +389,19 @@ pub struct Transformed<W: Workload> {
     machine: Option<Machine>,
     network: NetworkKind,
     cost: Arc<dyn TaskCostModel>,
+    /// Set by [`Pipeline::autotune`]: why this configuration won.
+    tune: Option<TuneReport>,
 }
 
 impl<W: Workload> Transformed<W> {
     pub fn workload(&self) -> &W {
         &self.workload
+    }
+
+    /// The tuning verdict, when this pipeline came from
+    /// [`Pipeline::autotune`].
+    pub fn tune_report(&self) -> Option<&TuneReport> {
+        self.tune.as_ref()
     }
 
     pub fn procs(&self) -> u32 {
@@ -372,6 +455,7 @@ impl<W: Workload> Transformed<W> {
             words: stats.words,
             time,
             verification,
+            tune: self.tune.clone(),
         }
     }
 
@@ -595,6 +679,52 @@ mod tests {
         let inputs = strategy_sweep_inputs(&base, &[2, 4]).unwrap();
         let labels: Vec<&str> = inputs.iter().map(|i| i.strategy.as_str()).collect();
         assert_eq!(labels, ["naive", "overlap", "ca(b=2)", "ca(b=4)"]);
+    }
+
+    #[test]
+    fn candidate_sweep_input_covers_every_knob() {
+        let base = Pipeline::new(Heat1d::new(32, 4)).procs(2);
+        // Whole-graph CA superstep via block = None.
+        let whole = candidate_sweep_input(&base, Strategy::Ca, None, None).unwrap();
+        assert_eq!(whole.strategy, "ca(b=4)");
+        // Halo override flows through: level-0 recomputes more.
+        let multi = candidate_sweep_input(&base, Strategy::Ca, Some(4), None).unwrap();
+        let lvl0 =
+            candidate_sweep_input(&base, Strategy::Ca, Some(4), Some(HaloMode::Level0Only))
+                .unwrap();
+        assert!(lvl0.plan.executed_tasks() > multi.plan.executed_tasks());
+        // A stale block on the base does not leak into non-CA inputs.
+        let naive =
+            candidate_sweep_input(&base.clone().block(2), Strategy::Naive, None, None).unwrap();
+        assert_eq!(naive.strategy, "naive");
+    }
+
+    #[test]
+    fn autotune_attaches_the_report_everywhere() {
+        let mut tuner = crate::tune::Tuner::exhaustive();
+        let t = Pipeline::new(Heat1d::new(64, 8))
+            .procs(2)
+            .machine(Machine::high_latency(2, 4))
+            .autotune(&mut tuner)
+            .unwrap();
+        let report = t.tune_report().expect("autotune attaches a report");
+        assert!(report.makespan <= report.naive_makespan * 1.01 + 1e-9);
+        // The verdict is embedded in simulated and executed reports.
+        let sim = t.simulate_configured().unwrap();
+        assert!(sim.tune.is_some());
+        let real = t.execute().unwrap();
+        assert_eq!(real.tune.as_ref().unwrap().key, report.key);
+        assert!(real.verification.is_verified());
+        // And the chosen configuration matches the built plan.
+        assert_eq!(t.block(), report.chosen.block.or(t.block()));
+    }
+
+    #[test]
+    fn autotune_without_machine_is_a_config_error() {
+        let mut tuner = crate::tune::Tuner::exhaustive();
+        let err =
+            Pipeline::new(Heat1d::new(64, 8)).procs(2).autotune(&mut tuner).unwrap_err();
+        assert!(matches!(err, PipelineError::Config(_)));
     }
 
     #[test]

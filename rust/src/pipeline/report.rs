@@ -1,6 +1,8 @@
 //! The shared result types every pipeline run produces, whether it went
 //! through the discrete-event simulator or the real threaded coordinator.
 
+use crate::tune::TuneReport;
+
 /// How the run's time was obtained.
 #[derive(Debug, Clone, PartialEq)]
 pub enum RunTime {
@@ -68,6 +70,10 @@ pub struct RunReport {
     pub words: usize,
     pub time: RunTime,
     pub verification: Verification,
+    /// Present when the configuration was chosen by
+    /// [`crate::pipeline::Pipeline::autotune`]: what the tuner searched
+    /// and why this configuration won.
+    pub tune: Option<TuneReport>,
 }
 
 impl RunReport {
@@ -129,6 +135,7 @@ mod tests {
             words: 24,
             time: RunTime::Measured { wall_secs: 0.25 },
             verification: Verification::Verified { owned_values: 100 },
+            tune: None,
         };
         let s = r.summary();
         assert!(s.contains("heat1d") && s.contains("ca(b=4)"));

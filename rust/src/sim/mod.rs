@@ -18,7 +18,9 @@
 //! * [`network`](NetworkKind) — [`AlphaBeta`], [`LogGp`], [`Hierarchical`],
 //!   [`Contended`] wire models;
 //! * [`sweep`] — parallel (α × threads × block × network) grids emitting
-//!   JSON/CSV figure data;
+//!   JSON/CSV figure data; the same worker pool fans out the
+//!   [`crate::tune`] autotuner's candidate evaluations (space → search →
+//!   engine score → cache → pipeline);
 //! * [`analytic`](ca_time) — closed-form BSP evaluation, the fast path for
 //!   huge parameter sweeps;
 //! * `discrete` — shared result types and, in tests, the seed polling

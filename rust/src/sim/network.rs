@@ -268,6 +268,20 @@ impl NetworkKind {
         }
     }
 
+    /// Parameter-bearing identity string — unlike [`NetworkKind::label`]
+    /// it distinguishes two LogGP wires with different gaps, so it is
+    /// what the [`crate::tune`] cache keys on.
+    pub fn key(&self) -> String {
+        match *self {
+            NetworkKind::AlphaBeta => "alphabeta".to_string(),
+            NetworkKind::LogGp { overhead, gap } => format!("loggp(o={overhead},g={gap})"),
+            NetworkKind::Hierarchical { node_size, intra_factor } => {
+                format!("hier(node={node_size},intra={intra_factor})")
+            }
+            NetworkKind::Contended => "contended".to_string(),
+        }
+    }
+
     /// Instantiate a fresh model for one simulation run on machine `m`.
     pub fn build(&self, m: &Machine) -> Box<dyn NetworkModel> {
         match *self {
@@ -330,6 +344,19 @@ mod tests {
         assert_eq!(a2, 6.0 + 10.0 + 6.0);
         let b = n.deliver(1, 2, 3, 0.0); // other NIC: unaffected
         assert_eq!(b, a1);
+    }
+
+    #[test]
+    fn kind_key_carries_parameters() {
+        assert_eq!(NetworkKind::AlphaBeta.key(), "alphabeta");
+        let a = NetworkKind::LogGp { overhead: 1.0, gap: 2.0 };
+        let b = NetworkKind::LogGp { overhead: 1.0, gap: 4.0 };
+        assert_ne!(a.key(), b.key());
+        assert_eq!(a.label(), b.label());
+        assert_eq!(
+            NetworkKind::Hierarchical { node_size: 2, intra_factor: 0.1 }.key(),
+            "hier(node=2,intra=0.1)"
+        );
     }
 
     #[test]

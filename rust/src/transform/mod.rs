@@ -30,12 +30,12 @@ mod tuning;
 pub use blocking::{final_level_by_proc, superstep_graphs, Superstep};
 pub use check::{assert_well_formed, check_schedule, Violation};
 pub use stats::ScheduleStats;
-pub use tuning::{select_b, TuningReport};
+pub use tuning::{select_b, TuningError, TuningReport};
 
 use crate::graph::{ProcId, TaskGraph};
 
 /// How ghost data travels between processors.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum HaloMode {
     /// Paper figure 1: only **level-0 data** is exchanged (a ghost region
     /// wide enough for the whole block of steps); every remote

@@ -2,16 +2,29 @@
 //!
 //! The paper observes that the optimal block factor depends only on the
 //! architectural parameters (`b* = sqrt(α/γ)`), which makes it a
-//! machine-level constant an autotuner can pick once.  [`select_b`]
-//! combines the closed-form prediction with an analytic-simulator sweep
-//! over a candidate grid, returning both so callers can see when the two
-//! disagree (they do once the figure-2 overlap starts hiding α — the
-//! simulator then prefers smaller b than the no-overlap model).
+//! machine-level constant an autotuner can pick once.  [`select_b`] is
+//! the §2.1 oracle: it combines the closed-form prediction with a sweep
+//! over a candidate grid scored by the *analytic* simulator, returning
+//! both so callers can see when the two disagree (they do once the
+//! figure-2 overlap starts hiding α — the simulator then prefers smaller
+//! b than the no-overlap model).
+//!
+//! Since the [`crate::tune`] subsystem exists, this module is a thin
+//! comparison wrapper over it: the grid sweep runs through
+//! [`crate::tune::ExhaustiveGrid`] with an analytic scorer, so the
+//! plateau rule ("smallest b within 1% of optimal") is literally the
+//! same code the engine-backed tuner uses.  For tuning under the richer
+//! wire models (LogGP, hierarchical, contended NICs) and per-task cost
+//! hooks — where no closed form survives — use
+//! [`crate::pipeline::Pipeline::autotune`] instead.
 
-use super::TransformOptions;
+use super::{HaloMode, TransformOptions};
 use crate::cost::CostModel;
+use crate::imp::block_bounds;
+use crate::pipeline::Strategy;
 use crate::sim::{ca_time_for, naive_time_1d, Machine};
 use crate::stencil::heat1d_graph;
+use crate::tune::{Candidate, Evaluator, ExhaustiveGrid, SearchStrategy, TuningSpace};
 
 /// The autotuner's verdict for one (problem, machine) pair.
 #[derive(Debug, Clone, PartialEq)]
@@ -40,17 +53,73 @@ impl TuningReport {
     }
 }
 
+/// Why [`select_b`] could not tune.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TuningError {
+    /// Every grid candidate failed the feasibility filter (`b` must
+    /// divide `m` and every per-processor tile must be wider than `2b`).
+    NoFeasibleBlock { n: u64, m: u32, procs: u32, grid: Vec<u32> },
+}
+
+impl std::fmt::Display for TuningError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TuningError::NoFeasibleBlock { n, m, procs, grid } => write!(
+                f,
+                "no feasible block factor for n={n}, m={m} on {procs} procs in grid {grid:?} \
+                 (need b | m and 2b < min tile width {})",
+                min_tile_width(*n, *procs)
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TuningError {}
+
+/// Exact minimum per-processor tile width under the balanced block
+/// distribution ([`block_bounds`]) — the §2.1 feasibility bound demands
+/// every tile be wider than `2b`, so the *narrowest* tile governs.
+/// Derived from the actual distribution rather than the truncating
+/// `n / p` so the filter can never drift from
+/// [`crate::imp::Distribution::block`] (for the balanced distribution
+/// `floor(n/p)` happens to be the narrowest tile; this form stays exact
+/// even if the distribution changes).
+fn min_tile_width(n: u64, procs: u32) -> u64 {
+    (0..procs)
+        .map(|p| {
+            let (lo, hi) = block_bounds(n, procs, p);
+            hi - lo
+        })
+        .min()
+        .unwrap_or(0)
+}
+
 /// Pick a block factor for an `n`-point, `m`-step 1-D stencil on `mach`.
 ///
 /// Candidates are filtered for feasibility: `b` must divide `m` (clean
-/// supersteps) and the per-processor tile must be wider than `2b`.
-pub fn select_b(n: u64, m: u32, mach: &Machine, grid: &[u32]) -> TuningReport {
+/// supersteps) and every per-processor tile must be wider than `2b`.
+/// An empty feasible set is an error (it used to abort the process),
+/// surfaced so CLI callers can report it.
+pub fn select_b(
+    n: u64,
+    m: u32,
+    mach: &Machine,
+    grid: &[u32],
+) -> Result<TuningReport, TuningError> {
+    let tile = min_tile_width(n, mach.nprocs);
     let feasible: Vec<u32> = grid
         .iter()
         .copied()
-        .filter(|&b| b >= 1 && m % b == 0 && (2 * b as u64) < n / mach.nprocs as u64)
+        .filter(|&b| b >= 1 && m % b == 0 && (2 * b as u64) < tile)
         .collect();
-    assert!(!feasible.is_empty(), "no feasible block factor in grid");
+    if feasible.is_empty() {
+        return Err(TuningError::NoFeasibleBlock {
+            n,
+            m,
+            procs: mach.nprocs,
+            grid: grid.to_vec(),
+        });
+    }
 
     let model = CostModel::from_machine(n, m, mach);
     let model_b = feasible
@@ -59,38 +128,48 @@ pub fn select_b(n: u64, m: u32, mach: &Machine, grid: &[u32]) -> TuningReport {
         .min_by(|&a, &b| model.cost(a).partial_cmp(&model.cost(b)).unwrap())
         .unwrap();
 
+    // The simulator side runs through the tune subsystem's exhaustive
+    // search (CA-only space, one candidate per grid point) with an
+    // analytic scorer — same plateau rule as the engine-backed tuner:
+    // once the overlap hides α, runtimes plateau across a wide b range,
+    // and the *smallest* b within 1% of optimal wins (least redundant
+    // work, least ghost memory, stable across problem sizes).
     let g = heat1d_graph(n, m, mach.nprocs);
     let naive_time = naive_time_1d(n, m, mach);
-    let times: Vec<(u32, f64)> = feasible
-        .iter()
-        .map(|&b| {
-            let t = if b == 1 {
-                naive_time
-            } else {
-                ca_time_for(&g, b, TransformOptions::default(), mach)
-            };
-            (b, t)
-        })
-        .collect();
-    let best_time = times.iter().map(|&(_, t)| t).fold(f64::INFINITY, f64::min);
-    // Once the overlap hides α, runtimes plateau across a wide b range;
-    // prefer the *smallest* b within 1% of optimal — least redundant
-    // work, least ghost memory, and a stable choice across problem sizes.
-    let (sim_b, best) = times
-        .iter()
-        .copied()
-        .find(|&(_, t)| t <= best_time * 1.01)
-        .expect("nonempty grid");
+    let space = TuningSpace {
+        strategies: vec![Strategy::Ca],
+        halos: vec![HaloMode::MultiLevel],
+        blocks: feasible.clone(),
+        procs: vec![mach.nprocs],
+    };
+    let mut ev = Evaluator::new(|cands: &[Candidate]| {
+        Ok(cands
+            .iter()
+            .map(|&c| {
+                let b = c.block.unwrap_or(1);
+                let t = if b == 1 {
+                    naive_time
+                } else {
+                    ca_time_for(&g, b, TransformOptions::default(), mach)
+                };
+                (c, Some(t))
+            })
+            .collect())
+    });
+    let out = ExhaustiveGrid::default()
+        .search(&space, &mut ev)
+        .expect("a nonempty feasible grid always yields a candidate");
+    let sim_b = out.chosen.block.unwrap_or(1);
 
-    TuningReport {
+    Ok(TuningReport {
         model_b,
         continuous_b: model.optimal_b_continuous(),
         sim_b,
         chosen_b: sim_b,
-        predicted_time: best,
+        predicted_time: out.makespan,
         naive_time,
         grid: feasible,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -102,7 +181,7 @@ mod tests {
     #[test]
     fn high_latency_prefers_blocking() {
         let mach = Machine::new(8, 16, 1000.0, 0.1, 1.0);
-        let r = select_b(8192, 64, &mach, &GRID);
+        let r = select_b(8192, 64, &mach, &GRID).unwrap();
         assert!(r.chosen_b > 1, "{r:?}");
         assert!(r.predicted_speedup() > 2.0, "{r:?}");
     }
@@ -110,7 +189,7 @@ mod tests {
     #[test]
     fn zero_latency_prefers_naive() {
         let mach = Machine::new(8, 4, 0.0, 0.0, 1.0);
-        let r = select_b(8192, 64, &mach, &GRID);
+        let r = select_b(8192, 64, &mach, &GRID).unwrap();
         assert_eq!(r.chosen_b, 1);
         assert!((r.predicted_speedup() - 1.0).abs() < 1e-9);
     }
@@ -123,8 +202,8 @@ mod tests {
         // is hidden and smaller b suffices — an observation beyond the
         // paper, asserted in `overlap_choice_shrinks_with_compute`.)
         let mach = Machine::new(8, 16, 500.0, 0.1, 1.0);
-        let a = select_b(4096, 64, &mach, &GRID).model_b;
-        let b = select_b(16384, 64, &mach, &GRID).model_b;
+        let a = select_b(4096, 64, &mach, &GRID).unwrap().model_b;
+        let b = select_b(16384, 64, &mach, &GRID).unwrap().model_b;
         let pos = |x: u32| GRID.iter().position(|&g| g == x).unwrap();
         assert!(pos(a).abs_diff(pos(b)) <= 1, "{a} vs {b}");
     }
@@ -133,15 +212,15 @@ mod tests {
     fn overlap_choice_shrinks_with_compute() {
         // More local compute per level → α hides sooner → smaller b picked.
         let mach = Machine::new(8, 16, 500.0, 0.1, 1.0);
-        let small = select_b(4096, 64, &mach, &GRID).chosen_b;
-        let large = select_b(16384, 64, &mach, &GRID).chosen_b;
+        let small = select_b(4096, 64, &mach, &GRID).unwrap().chosen_b;
+        let large = select_b(16384, 64, &mach, &GRID).unwrap().chosen_b;
         assert!(large <= small, "large-N choice {large} vs small-N {small}");
     }
 
     #[test]
     fn chosen_b_never_worse_than_model_b() {
         let mach = Machine::new(8, 16, 500.0, 0.1, 1.0);
-        let r = select_b(8192, 64, &mach, &GRID);
+        let r = select_b(8192, 64, &mach, &GRID).unwrap();
         let g = heat1d_graph(8192, 64, 8);
         let model_time = if r.model_b == 1 {
             r.naive_time
@@ -155,16 +234,102 @@ mod tests {
     fn infeasible_candidates_filtered() {
         let mach = Machine::new(8, 4, 100.0, 0.1, 1.0);
         // n/p = 64, so b ≥ 32 is infeasible; m = 24 excludes 16 and 64.
-        let r = select_b(512, 24, &mach, &GRID);
+        let r = select_b(512, 24, &mach, &GRID).unwrap();
         assert!(r.grid.iter().all(|&b| 24 % b == 0 && b < 32), "{:?}", r.grid);
     }
 
     #[test]
     fn model_and_sim_report_both_sides() {
         let mach = Machine::new(8, 16, 200.0, 0.1, 1.0);
-        let r = select_b(8192, 64, &mach, &GRID);
+        let r = select_b(8192, 64, &mach, &GRID).unwrap();
         assert!(r.grid.contains(&r.model_b));
         assert!(r.grid.contains(&r.sim_b));
         assert!(r.continuous_b > 0.0);
+    }
+
+    #[test]
+    fn empty_feasible_grid_is_an_error_not_a_panic() {
+        let mach = Machine::new(4, 4, 100.0, 0.1, 1.0);
+        // m = 5 excludes every even b; b = 1 excluded by the tiny tile
+        // (n/p = 2, need 2b < 2).
+        let err = select_b(8, 5, &mach, &GRID).unwrap_err();
+        let TuningError::NoFeasibleBlock { n, m, procs, ref grid } = err;
+        assert_eq!((n, m, procs), (8, 5, 4));
+        assert_eq!(grid, &GRID.to_vec());
+        assert!(err.to_string().contains("no feasible block factor"), "{err}");
+    }
+
+    #[test]
+    fn tile_bound_is_exact_at_non_dividing_n() {
+        // 130 points on 8 procs: balanced tiles are 17,17,16,…,16 — the
+        // narrowest tile (16) governs, so b = 8 (2b = 16) is infeasible.
+        assert_eq!(min_tile_width(130, 8), 16);
+        let mach = Machine::new(8, 4, 100.0, 0.1, 1.0);
+        let r = select_b(130, 8, &mach, &GRID).unwrap();
+        assert_eq!(r.grid, vec![1, 2, 4], "{:?}", r.grid);
+        // 136 points on 8 procs: every tile is exactly 17 > 16 = 2b.
+        assert_eq!(min_tile_width(136, 8), 17);
+        let r = select_b(136, 8, &mach, &GRID).unwrap();
+        assert_eq!(r.grid, vec![1, 2, 4, 8], "{:?}", r.grid);
+        // The helper agrees with the distribution it models, tile by tile.
+        for (n, p) in [(130u64, 8u32), (137, 8), (64, 8), (7, 3)] {
+            let widths: Vec<u64> = (0..p)
+                .map(|q| {
+                    let (lo, hi) = block_bounds(n, p, q);
+                    hi - lo
+                })
+                .collect();
+            assert_eq!(min_tile_width(n, p), widths.into_iter().min().unwrap());
+        }
+    }
+
+    /// The seed repository's `select_b` algorithm, kept verbatim as the
+    /// equivalence oracle (the way `sim::discrete` keeps the polling
+    /// simulator): feasibility by truncating division, analytic scoring,
+    /// smallest-b-within-1% plateau rule.
+    fn seed_oracle(n: u64, m: u32, mach: &Machine, grid: &[u32]) -> (u32, f64) {
+        let feasible: Vec<u32> = grid
+            .iter()
+            .copied()
+            .filter(|&b| b >= 1 && m % b == 0 && (2 * b as u64) < n / mach.nprocs as u64)
+            .collect();
+        assert!(!feasible.is_empty());
+        let g = heat1d_graph(n, m, mach.nprocs);
+        let naive_time = naive_time_1d(n, m, mach);
+        let times: Vec<(u32, f64)> = feasible
+            .iter()
+            .map(|&b| {
+                let t = if b == 1 {
+                    naive_time
+                } else {
+                    ca_time_for(&g, b, TransformOptions::default(), mach)
+                };
+                (b, t)
+            })
+            .collect();
+        let best = times.iter().map(|&(_, t)| t).fold(f64::INFINITY, f64::min);
+        times.iter().copied().find(|&(_, t)| t <= best * 1.01).unwrap()
+    }
+
+    #[test]
+    fn exhaustive_search_pins_to_the_seed_oracle() {
+        // The tune-subsystem routing must reproduce the seed algorithm
+        // bit-for-bit on α/β machines, across latency regimes.
+        for (n, m, alpha, threads) in [
+            (2048u64, 32u32, 500.0, 16u32),
+            (2048, 32, 8.0, 4),
+            (4096, 64, 0.0, 8),
+            (4096, 64, 1000.0, 16),
+        ] {
+            let mach = Machine::new(8, threads, alpha, 0.1, 1.0);
+            let (oracle_b, oracle_t) = seed_oracle(n, m, &mach, &GRID);
+            let r = select_b(n, m, &mach, &GRID).unwrap();
+            assert_eq!(r.chosen_b, oracle_b, "n={n} m={m} α={alpha}");
+            assert!(
+                (r.predicted_time - oracle_t).abs() < 1e-9,
+                "n={n} α={alpha}: {} vs {oracle_t}",
+                r.predicted_time
+            );
+        }
     }
 }

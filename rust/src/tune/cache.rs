@@ -1,0 +1,429 @@
+//! The persistent tuning cache: tuned configurations keyed by
+//! (workload signature, procs, machine, network).
+//!
+//! Repeated pipelines skip the search entirely: a cache hit rebuilds the
+//! winning [`Candidate`] without a single engine run.  The store is a
+//! small hand-rolled JSON document (no `serde` in the vendored crate
+//! set) written by [`TuningCache::save`] and re-read by
+//! [`TuningCache::with_path`]; a malformed or missing file degrades to
+//! an empty cache, never an error — tuning correctness does not depend
+//! on the cache, only tuning *speed* does.
+//!
+//! Hit/miss counters live on the in-memory handle and feed the
+//! `BENCH_tune.json` hit-rate figure.
+
+use super::space::Candidate;
+use crate::pipeline::Strategy;
+use crate::sim::{Machine, NetworkKind};
+use crate::transform::HaloMode;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Canonical cache key for one (workload, layout, machine, wire) tuning
+/// problem.  `signature` should pin everything that changes the graph
+/// (name, task/edge/level counts, words per value).
+pub fn cache_key(signature: &str, procs: u32, mach: &Machine, network: &NetworkKind) -> String {
+    format!(
+        "{signature}|p{procs}|m({},{},{},{},{})|net={}",
+        mach.nprocs,
+        mach.threads,
+        mach.alpha,
+        mach.beta,
+        mach.gamma,
+        network.key()
+    )
+}
+
+/// Deterministic FNV-1a over a tag string — used to fold arbitrary-size
+/// descriptions (e.g. a `Debug`-printed cost-model override) into the
+/// cache key without bloating it.
+pub fn tag_hash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One cached tuning verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    /// Winning strategy tag: "naive" | "overlap" | "ca".
+    pub strategy: String,
+    /// Halo tag: "multi" | "level0".
+    pub halo: String,
+    /// Winning block factor (0 = none / whole graph).
+    pub block: u32,
+    pub procs: u32,
+    /// Engine-predicted makespan of the winner.
+    pub makespan: f64,
+    /// Engine-predicted makespan of the naive baseline.
+    pub naive_makespan: f64,
+    /// Candidates considered by the search that produced this entry.
+    pub evaluations: usize,
+    /// Search strategy tag ("exhaustive", "golden", "coord").
+    pub search: String,
+    /// Search wall-clock seconds.
+    pub wall_secs: f64,
+}
+
+impl CacheEntry {
+    pub fn from_candidate(
+        c: &Candidate,
+        makespan: f64,
+        naive_makespan: f64,
+        evaluations: usize,
+        search: &str,
+        wall_secs: f64,
+    ) -> Self {
+        let strategy = match c.strategy {
+            Strategy::Naive => "naive",
+            Strategy::Overlap => "overlap",
+            Strategy::Ca => "ca",
+        };
+        let halo = match c.halo {
+            HaloMode::MultiLevel => "multi",
+            HaloMode::Level0Only => "level0",
+        };
+        CacheEntry {
+            strategy: strategy.to_string(),
+            halo: halo.to_string(),
+            block: c.block.unwrap_or(0),
+            procs: c.procs,
+            makespan,
+            naive_makespan,
+            evaluations,
+            search: search.to_string(),
+            wall_secs,
+        }
+    }
+
+    /// Rebuild the winning candidate; errors on unknown tags (e.g. an
+    /// entry written by a future version).
+    pub fn candidate(&self) -> Result<Candidate, String> {
+        let strategy = match self.strategy.as_str() {
+            "naive" => Strategy::Naive,
+            "overlap" => Strategy::Overlap,
+            "ca" => Strategy::Ca,
+            other => return Err(format!("cache entry has unknown strategy {other:?}")),
+        };
+        let halo = match self.halo.as_str() {
+            "multi" => HaloMode::MultiLevel,
+            "level0" => HaloMode::Level0Only,
+            other => return Err(format!("cache entry has unknown halo {other:?}")),
+        };
+        let block = if self.block == 0 { None } else { Some(self.block) };
+        Ok(Candidate::new(strategy, halo, block, self.procs))
+    }
+}
+
+/// The cache: an ordered key → entry map with optional file backing and
+/// hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct TuningCache {
+    path: Option<PathBuf>,
+    entries: BTreeMap<String, CacheEntry>,
+    hits: usize,
+    misses: usize,
+}
+
+impl TuningCache {
+    /// A fresh in-memory cache (no file backing).
+    pub fn new() -> Self {
+        TuningCache::default()
+    }
+
+    /// A file-backed cache: loads `path` if it exists and parses, else
+    /// starts empty; [`TuningCache::save`] writes back to the same path.
+    pub fn with_path(path: impl Into<PathBuf>) -> Self {
+        let path = path.into();
+        let entries = std::fs::read_to_string(&path)
+            .ok()
+            .map(|text| parse_entries(&text))
+            .unwrap_or_default();
+        TuningCache { path: Some(path), entries, hits: 0, misses: 0 }
+    }
+
+    /// Look up a key, counting the hit or miss.
+    pub fn lookup(&mut self, key: &str) -> Option<&CacheEntry> {
+        if self.entries.contains_key(key) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        self.entries.get(key)
+    }
+
+    /// Look up *and decode* a key, counting the statistics the way the
+    /// tuner experiences them: a hit only when the stored entry decodes
+    /// into a [`Candidate`].  An entry written by a newer version (or a
+    /// corrupted one) counts as a miss — the caller re-searches and
+    /// overwrites it, so a broken store never inflates the hit rate.
+    pub fn lookup_decoded(&mut self, key: &str) -> Option<(Candidate, CacheEntry)> {
+        let decoded = self
+            .entries
+            .get(key)
+            .and_then(|e| e.candidate().ok().map(|c| (c, e.clone())));
+        if decoded.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        decoded
+    }
+
+    /// Look without touching the statistics.
+    pub fn peek(&self, key: &str) -> Option<&CacheEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn insert(&mut self, key: String, entry: CacheEntry) {
+        self.entries.insert(key, entry);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// `hits / (hits + misses)`; 0 when nothing was looked up yet.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Write the store to its backing file (no-op without one).
+    pub fn save(&self) -> std::io::Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+    }
+
+    /// The JSON document [`TuningCache::save`] writes.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"version\": 1,\n  \"entries\": [\n");
+        for (i, (key, e)) in self.entries.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"key\": {:?}, \"strategy\": {:?}, \"halo\": {:?}, \"block\": {}, \
+                 \"procs\": {}, \"makespan\": {}, \"naive_makespan\": {}, \
+                 \"evaluations\": {}, \"search\": {:?}, \"wall_secs\": {}}}{}",
+                key,
+                e.strategy,
+                e.halo,
+                e.block,
+                e.procs,
+                e.makespan,
+                e.naive_makespan,
+                e.evaluations,
+                e.search,
+                e.wall_secs,
+                if i + 1 == self.entries.len() { "" } else { "," }
+            ));
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Parse the entries array of a cache document.  The format is the flat
+/// one this module writes (one object per entry, no nested braces, no
+/// escapes inside strings — keys are built from identifiers and
+/// numbers); anything unparsable is simply skipped.
+fn parse_entries(text: &str) -> BTreeMap<String, CacheEntry> {
+    let mut out = BTreeMap::new();
+    let Some(start) = text.find("\"entries\"") else { return out };
+    let body = &text[start..];
+    let mut rest = body;
+    while let Some(open) = rest.find('{') {
+        let Some(close) = rest[open..].find('}') else { break };
+        let obj = &rest[open + 1..open + close];
+        if let Some((key, entry)) = parse_entry(obj) {
+            out.insert(key, entry);
+        }
+        rest = &rest[open + close + 1..];
+    }
+    out
+}
+
+fn parse_entry(obj: &str) -> Option<(String, CacheEntry)> {
+    let key = str_field(obj, "key")?;
+    let entry = CacheEntry {
+        strategy: str_field(obj, "strategy")?,
+        halo: str_field(obj, "halo")?,
+        block: num_field(obj, "block")? as u32,
+        procs: num_field(obj, "procs")? as u32,
+        makespan: num_field(obj, "makespan")?,
+        naive_makespan: num_field(obj, "naive_makespan")?,
+        evaluations: num_field(obj, "evaluations")? as usize,
+        search: str_field(obj, "search")?,
+        wall_secs: num_field(obj, "wall_secs")?,
+    };
+    Some((key, entry))
+}
+
+fn raw_field<'a>(obj: &'a str, name: &str) -> Option<&'a str> {
+    let pat = format!("\"{name}\":");
+    let i = obj.find(&pat)? + pat.len();
+    Some(obj[i..].trim_start())
+}
+
+fn str_field(obj: &str, name: &str) -> Option<String> {
+    let rest = raw_field(obj, name)?;
+    let rest = rest.strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+fn num_field(obj: &str, name: &str) -> Option<f64> {
+    let rest = raw_field(obj, name)?;
+    let end = rest.find(',').unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(block: u32) -> CacheEntry {
+        CacheEntry::from_candidate(
+            &Candidate::ca(block, 4),
+            123.5,
+            456.25,
+            9,
+            "exhaustive",
+            0.0125,
+        )
+    }
+
+    fn key() -> String {
+        let mach = Machine::new(4, 8, 500.0, 0.1, 1.0);
+        cache_key("heat1d:v160:e214:l5:w1", 4, &mach, &NetworkKind::AlphaBeta)
+    }
+
+    #[test]
+    fn key_distinguishes_machine_and_network() {
+        let m1 = Machine::new(4, 8, 500.0, 0.1, 1.0);
+        let m2 = Machine::new(4, 8, 8.0, 0.1, 1.0);
+        let k1 = cache_key("sig", 4, &m1, &NetworkKind::AlphaBeta);
+        let k2 = cache_key("sig", 4, &m2, &NetworkKind::AlphaBeta);
+        let k3 = cache_key("sig", 4, &m1, &NetworkKind::Contended);
+        assert_ne!(k1, k2);
+        assert_ne!(k1, k3);
+        assert!(k1.contains("net=alphabeta"));
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let mut c = TuningCache::new();
+        assert!(c.lookup(&key()).is_none());
+        c.insert(key(), entry(8));
+        assert!(c.lookup(&key()).is_some());
+        assert!(c.lookup("other").is_none());
+        assert_eq!((c.hits(), c.misses()), (1, 2));
+        assert!((c.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        // peek leaves the counters alone.
+        assert!(c.peek(&key()).is_some());
+        assert_eq!((c.hits(), c.misses()), (1, 2));
+    }
+
+    #[test]
+    fn lookup_decoded_counts_undecodable_entries_as_misses() {
+        let mut c = TuningCache::new();
+        c.insert(key(), entry(8));
+        assert!(c.lookup_decoded(&key()).is_some());
+        assert_eq!((c.hits(), c.misses()), (1, 0));
+        let mut bad = entry(8);
+        bad.strategy = "quantum".into();
+        c.insert(key(), bad);
+        assert!(c.lookup_decoded(&key()).is_none());
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn tag_hash_is_deterministic_and_discriminating() {
+        assert_eq!(tag_hash("ScaledCost(3.0)"), tag_hash("ScaledCost(3.0)"));
+        assert_ne!(tag_hash("ScaledCost(3.0)"), tag_hash("ScaledCost(2.0)"));
+        assert_ne!(tag_hash(""), tag_hash("x"));
+    }
+
+    #[test]
+    fn entry_candidate_roundtrip() {
+        let winner = Candidate::ca(8, 4);
+        let e = CacheEntry::from_candidate(&winner, 1.0, 2.0, 3, "golden", 0.1);
+        assert_eq!(e.candidate().unwrap(), winner);
+        let naive = Candidate::naive(2);
+        let e = CacheEntry::from_candidate(&naive, 1.0, 1.0, 3, "coord", 0.1);
+        assert_eq!(e.block, 0);
+        assert_eq!(e.candidate().unwrap(), naive);
+        let bad = CacheEntry { strategy: "quantum".into(), ..entry(4) };
+        assert!(bad.candidate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = TuningCache::new();
+        c.insert(key(), entry(8));
+        c.insert("second|p2|m(2,1,8,0.1,1)|net=contended".into(), {
+            let mut e = entry(0);
+            e.strategy = "overlap".into();
+            e
+        });
+        let json = c.to_json();
+        assert!(json.contains("\"version\": 1"));
+        let parsed = parse_entries(&json);
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed.get(&key()), c.peek(&key()));
+    }
+
+    #[test]
+    fn file_roundtrip_and_corruption_tolerance() {
+        let path = std::env::temp_dir().join(format!(
+            "imp_latency_tune_cache_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut c = TuningCache::with_path(&path);
+            assert!(c.is_empty());
+            c.insert(key(), entry(16));
+            c.save().unwrap();
+        }
+        {
+            let mut c = TuningCache::with_path(&path);
+            assert_eq!(c.len(), 1);
+            let e = c.lookup(&key()).unwrap();
+            assert_eq!(e.block, 16);
+            assert_eq!(e.makespan, 123.5);
+            assert_eq!(e.naive_makespan, 456.25);
+            assert_eq!(e.evaluations, 9);
+            assert_eq!(e.wall_secs, 0.0125);
+            assert_eq!(e.candidate().unwrap(), Candidate::ca(16, 4));
+        }
+        // Corrupt file → empty cache, no panic.
+        std::fs::write(&path, "{ not json at all").unwrap();
+        assert!(TuningCache::with_path(&path).is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,225 @@
+//! The autotuner's verdict and the `BENCH_tune.json` emitter.
+//!
+//! A [`TuneReport`] travels with the [`crate::pipeline::Transformed`]
+//! the tuner builds (and is embedded in every
+//! [`crate::pipeline::RunReport`] that pipeline produces), so downstream
+//! consumers can always answer "why this configuration?": what was
+//! searched, what each candidate scored, what the closed form would
+//! have said, and whether the answer came from the cache.
+
+use super::space::Candidate;
+
+/// Everything one tuning run learned.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// Workload tag ("heat1d", "spmv", ...).
+    pub workload: String,
+    /// Wire model identity ([`crate::sim::NetworkKind::key`]).
+    pub network: String,
+    /// Full cache key of this tuning problem.
+    pub key: String,
+    /// The winning configuration.
+    pub chosen: Candidate,
+    /// Engine-predicted makespan of the winner.
+    pub makespan: f64,
+    /// Engine-predicted makespan of the naive baseline.
+    pub naive_makespan: f64,
+    /// §2.1's continuous prediction `sqrt(α·t/γ)` for this machine —
+    /// kept for closed-form-vs-tuner comparisons.
+    pub model_b_continuous: f64,
+    /// Distinct candidates considered (feasible or not).
+    pub evaluations: usize,
+    /// Engine simulations actually executed (0 on a cache hit).
+    pub engine_runs: usize,
+    /// Whether the verdict came from the [`super::TuningCache`].
+    pub cache_hit: bool,
+    /// Search strategy tag ("exhaustive", "golden", "coord").
+    pub search: String,
+    /// Search wall-clock seconds (0 on a cache hit).
+    pub wall_secs: f64,
+    /// Every feasible candidate scored, in evaluation order (empty on a
+    /// cache hit — the engine never ran).
+    pub evaluated: Vec<(Candidate, f64)>,
+}
+
+impl TuneReport {
+    /// Predicted speedup of the tuned configuration over naive.
+    pub fn speedup(&self) -> f64 {
+        self.naive_makespan / self.makespan
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        let source = if self.cache_hit {
+            "cache hit".to_string()
+        } else {
+            format!("search={}", self.search)
+        };
+        format!(
+            "tune {:<8} {:<22} → {:<16} makespan {:.1} (naive {:.1}, {:.2}x)  \
+             {} evals / {} engine runs in {:.3}s [{source}]",
+            self.workload,
+            self.network,
+            self.chosen.label(),
+            self.makespan,
+            self.naive_makespan,
+            self.speedup(),
+            self.evaluations,
+            self.engine_runs,
+            self.wall_secs,
+        )
+    }
+}
+
+/// One row of the `tune` CLI's JSON output.
+#[derive(Debug, Clone)]
+pub struct TuneRow {
+    pub workload: String,
+    pub network: String,
+    pub search: String,
+    pub config: String,
+    /// Explicit block factor; 0 = none (naive/overlap, or the
+    /// whole-graph `ca(b=all)` superstep — `config` disambiguates),
+    /// matching the [`super::CacheEntry`] convention.
+    pub block: u32,
+    pub makespan: f64,
+    pub naive_makespan: f64,
+    pub speedup: f64,
+    pub evaluations: usize,
+    pub engine_runs: usize,
+    pub cache_hit: bool,
+    pub wall_secs: f64,
+}
+
+impl TuneRow {
+    pub fn from_report(r: &TuneReport) -> Self {
+        TuneRow {
+            workload: r.workload.clone(),
+            network: r.network.clone(),
+            search: r.search.clone(),
+            config: r.chosen.label(),
+            block: r.chosen.block.unwrap_or(0),
+            makespan: r.makespan,
+            naive_makespan: r.naive_makespan,
+            speedup: r.speedup(),
+            evaluations: r.evaluations,
+            engine_runs: r.engine_runs,
+            cache_hit: r.cache_hit,
+            wall_secs: r.wall_secs,
+        }
+    }
+}
+
+/// Render tune rows plus cache statistics as the `BENCH_tune.json`
+/// document (same shape family as [`crate::sim::sweep::to_json`]).
+pub fn rows_to_json(tag: &str, rows: &[TuneRow], hits: usize, misses: usize) -> String {
+    let total = hits + misses;
+    let rate = if total == 0 { 0.0 } else { hits as f64 / total as f64 };
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"tune\": {tag:?},\n  \"cells\": [\n"));
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": {:?}, \"network\": {:?}, \"search\": {:?}, \
+             \"config\": {:?}, \"block\": {}, \"makespan\": {}, \"naive_makespan\": {}, \
+             \"speedup\": {}, \"evaluations\": {}, \"engine_runs\": {}, \
+             \"cache_hit\": {}, \"wall_secs\": {}}}{}",
+            r.workload,
+            r.network,
+            r.search,
+            r.config,
+            r.block,
+            r.makespan,
+            r.naive_makespan,
+            r.speedup,
+            r.evaluations,
+            r.engine_runs,
+            r.cache_hit,
+            r.wall_secs,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+        s.push('\n');
+    }
+    s.push_str(&format!(
+        "  ],\n  \"cache\": {{\"hits\": {hits}, \"misses\": {misses}, \"hit_rate\": {rate}}}\n}}\n"
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> TuneReport {
+        TuneReport {
+            workload: "heat1d".into(),
+            network: "contended".into(),
+            key: "heat1d:v160:e214:l5:w1|p4|m(4,8,500,0.1,1)|net=contended".into(),
+            chosen: Candidate::ca(8, 4),
+            makespan: 250.0,
+            naive_makespan: 1000.0,
+            model_b_continuous: 63.2,
+            evaluations: 12,
+            engine_runs: 11,
+            cache_hit: false,
+            search: "exhaustive".into(),
+            wall_secs: 0.025,
+            evaluated: vec![(Candidate::naive(4), 1000.0), (Candidate::ca(8, 4), 250.0)],
+        }
+    }
+
+    #[test]
+    fn summary_mentions_the_key_numbers() {
+        let r = report();
+        let s = r.summary();
+        assert!(s.contains("heat1d") && s.contains("contended"));
+        assert!(s.contains("ca(b=8)"));
+        assert!(s.contains("4.00x"));
+        assert!(s.contains("search=exhaustive"));
+        assert_eq!(r.speedup(), 4.0);
+        let mut hit = report();
+        hit.cache_hit = true;
+        assert!(hit.summary().contains("cache hit"));
+    }
+
+    #[test]
+    fn json_rows_shape() {
+        let rows = vec![TuneRow::from_report(&report())];
+        let json = rows_to_json("smoke", &rows, 3, 1);
+        assert!(json.contains("\"tune\": \"smoke\""));
+        assert!(json.contains("\"config\": \"ca(b=8)\""));
+        assert!(json.contains("\"speedup\": 4"));
+        assert!(json.contains("\"cache\": {\"hits\": 3, \"misses\": 1, \"hit_rate\": 0.75}"));
+        assert!(!json.contains("},\n  ]"));
+        let empty = rows_to_json("smoke", &[], 0, 0);
+        assert!(empty.contains("\"hit_rate\": 0"));
+    }
+
+    #[test]
+    fn row_from_report_maps_fields() {
+        let row = TuneRow::from_report(&report());
+        assert_eq!(row.block, 8);
+        assert_eq!(row.config, "ca(b=8)");
+        assert_eq!(row.speedup, 4.0);
+        assert!(!row.cache_hit);
+    }
+
+    #[test]
+    fn whole_graph_candidate_reports_block_zero_not_one() {
+        let mut r = report();
+        r.chosen = Candidate::new(
+            crate::pipeline::Strategy::Ca,
+            crate::transform::HaloMode::MultiLevel,
+            None,
+            4,
+        );
+        let row = TuneRow::from_report(&r);
+        assert_eq!(row.config, "ca(b=all)");
+        assert_eq!(row.block, 0, "whole-graph superstep must not masquerade as b=1");
+        let naive_row = TuneRow::from_report(&TuneReport {
+            chosen: Candidate::naive(4),
+            ..report()
+        });
+        assert_eq!(naive_row.block, 0);
+        assert_eq!(naive_row.config, "naive");
+    }
+}

@@ -1,0 +1,549 @@
+//! Search strategies over a [`TuningSpace`], scored by a pluggable
+//! batch evaluator.
+//!
+//! The [`Evaluator`] is the only thing that touches the simulator: a
+//! search asks it for scores (makespans, lower is better) in *batches*
+//! so the engine-backed evaluator can fan whole batches across the
+//! [`crate::sim::sweep`] worker pool.  Scores are memoized per
+//! candidate — no configuration is ever simulated twice in one search —
+//! and infeasible candidates (the transformation rejects them for this
+//! workload) come back as `None` and are skipped, not fatal.
+//!
+//! Three strategies ship:
+//!
+//! * [`ExhaustiveGrid`] — score everything; the reference oracle.
+//! * [`GoldenSection`] — section search over the block axis (runtime is
+//!   unimodal in `b` on α/β machines: latency amortization falls,
+//!   redundant work grows), everything else exhausted; `O(log |b|)`
+//!   engine runs per (halo, procs) line.
+//! * [`CoordinateDescent`] — hill-climb the joint space one dimension
+//!   at a time; the cheap option when the space has several axes.
+//!
+//! All strategies resolve plateaus identically: among candidates within
+//! `tolerance` of the best score, the earliest in
+//! [`Candidate::order_key`] order wins — least redundant work, least
+//! ghost memory, stable across problem sizes (the §2.1 tuner's rule).
+
+use super::space::{Candidate, TuningSpace};
+use super::TuneError;
+use crate::pipeline::Strategy;
+use std::collections::HashMap;
+
+/// Batch scoring callback: returns `(candidate, Some(makespan))` for
+/// feasible candidates and `(candidate, None)` for infeasible ones,
+/// covering exactly the requested slice.
+pub type EvalBatchFn<'a> =
+    Box<dyn FnMut(&[Candidate]) -> Result<Vec<(Candidate, Option<f64>)>, TuneError> + 'a>;
+
+/// Memoizing front end every search strategy scores through.
+pub struct Evaluator<'a> {
+    run: EvalBatchFn<'a>,
+    memo: HashMap<Candidate, Option<f64>>,
+    evaluated: Vec<(Candidate, f64)>,
+    engine_runs: usize,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(
+        run: impl FnMut(&[Candidate]) -> Result<Vec<(Candidate, Option<f64>)>, TuneError> + 'a,
+    ) -> Self {
+        Evaluator {
+            run: Box::new(run),
+            memo: HashMap::new(),
+            evaluated: Vec::new(),
+            engine_runs: 0,
+        }
+    }
+
+    /// Score a batch; unseen candidates go to the backend together (one
+    /// parallel sweep), memoized ones are free.  `None` = infeasible.
+    pub fn eval_batch(&mut self, cands: &[Candidate]) -> Result<Vec<Option<f64>>, TuneError> {
+        let mut fresh: Vec<Candidate> = Vec::new();
+        for &c in cands {
+            if !self.memo.contains_key(&c) && !fresh.contains(&c) {
+                fresh.push(c);
+            }
+        }
+        if !fresh.is_empty() {
+            let results = (self.run)(&fresh)?;
+            for (c, s) in results {
+                if let Some(v) = s {
+                    self.engine_runs += 1;
+                    self.evaluated.push((c, v));
+                }
+                self.memo.insert(c, s);
+            }
+        }
+        Ok(cands.iter().map(|c| self.memo.get(c).copied().flatten()).collect())
+    }
+
+    /// Score one candidate (memoized).
+    pub fn eval(&mut self, c: Candidate) -> Result<Option<f64>, TuneError> {
+        Ok(self.eval_batch(&[c])?[0])
+    }
+
+    /// Distinct candidates considered, feasible or not.
+    pub fn evaluations(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// Simulations actually executed (each feasible candidate once).
+    pub fn engine_runs(&self) -> usize {
+        self.engine_runs
+    }
+
+    /// Every feasible `(candidate, makespan)` scored so far, in
+    /// evaluation order.
+    pub fn evaluated(&self) -> &[(Candidate, f64)] {
+        &self.evaluated
+    }
+}
+
+/// A search's verdict: the winning candidate and its predicted makespan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchOutcome {
+    pub chosen: Candidate,
+    pub makespan: f64,
+}
+
+/// A strategy for exploring a [`TuningSpace`].
+pub trait SearchStrategy {
+    /// Short tag for reports ("exhaustive", "golden", "coord").
+    fn label(&self) -> &'static str;
+
+    /// Explore `space`, scoring through `ev`; returns the winner or an
+    /// error when no candidate is feasible.
+    fn search(&self, space: &TuningSpace, ev: &mut Evaluator<'_>)
+        -> Result<SearchOutcome, TuneError>;
+}
+
+/// Plateau rule shared by every strategy: among feasible scores within
+/// `tolerance` of the minimum, the candidate earliest in canonical
+/// order wins.  `scored` must already be in canonical order.
+pub(crate) fn pick_plateau(scored: &[(Candidate, f64)], tolerance: f64) -> Option<SearchOutcome> {
+    let best = scored.iter().map(|&(_, s)| s).fold(f64::INFINITY, f64::min);
+    if !best.is_finite() {
+        return None;
+    }
+    scored
+        .iter()
+        .find(|&&(_, s)| s <= best * (1.0 + tolerance))
+        .map(|&(chosen, makespan)| SearchOutcome { chosen, makespan })
+}
+
+fn canonical(scored: &[(Candidate, f64)]) -> Vec<(Candidate, f64)> {
+    let mut v = scored.to_vec();
+    v.sort_by_key(|&(c, _)| c.order_key());
+    v
+}
+
+fn no_feasible(space: &TuningSpace) -> TuneError {
+    TuneError::NoFeasibleCandidate(format!(
+        "all {} candidates infeasible for this workload",
+        space.num_candidates()
+    ))
+}
+
+/// Score every candidate in the space (the reference strategy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExhaustiveGrid {
+    /// Plateau width (relative); default 1%.
+    pub tolerance: f64,
+}
+
+impl Default for ExhaustiveGrid {
+    fn default() -> Self {
+        ExhaustiveGrid { tolerance: 0.01 }
+    }
+}
+
+impl SearchStrategy for ExhaustiveGrid {
+    fn label(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn search(
+        &self,
+        space: &TuningSpace,
+        ev: &mut Evaluator<'_>,
+    ) -> Result<SearchOutcome, TuneError> {
+        let cands = space.candidates();
+        if cands.is_empty() {
+            return Err(TuneError::NoFeasibleCandidate("empty tuning space".into()));
+        }
+        let scores = ev.eval_batch(&cands)?;
+        let scored: Vec<(Candidate, f64)> = cands
+            .iter()
+            .zip(&scores)
+            .filter_map(|(&c, &s)| s.map(|v| (c, v)))
+            .collect();
+        // Canonical order, not enumeration order: a user-supplied space
+        // may list candidates in any order, and the plateau rule must
+        // still prefer the least-redundant configuration.
+        pick_plateau(&canonical(&scored), self.tolerance).ok_or_else(|| no_feasible(space))
+    }
+}
+
+/// Golden-section search over the block axis (per halo × procs line);
+/// the non-CA strategies are evaluated exhaustively (there are at most
+/// two).  Assumes runtime is unimodal in `b`; on multimodal landscapes
+/// it still returns a feasible local optimum.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GoldenSection {
+    pub tolerance: f64,
+}
+
+impl Default for GoldenSection {
+    fn default() -> Self {
+        GoldenSection { tolerance: 0.01 }
+    }
+}
+
+impl GoldenSection {
+    /// Narrow `[lo, hi]` by golden sections until ≤ 4 candidates remain,
+    /// then score the remainder.  Infeasible probes count as +∞.
+    fn section_line(ev: &mut Evaluator<'_>, line: &[Candidate]) -> Result<(), TuneError> {
+        let (mut lo, mut hi) = (0usize, line.len() - 1);
+        while hi - lo > 3 {
+            let w = (hi - lo) as f64;
+            let mut m1 = lo + (w * 0.382).round() as usize;
+            let mut m2 = lo + (w * 0.618).round() as usize;
+            m1 = m1.clamp(lo + 1, hi - 1);
+            m2 = m2.clamp(lo + 1, hi - 1);
+            if m1 >= m2 {
+                m2 = m1 + 1; // hi - lo > 3 leaves room for two interior probes
+            }
+            let s = ev.eval_batch(&[line[m1], line[m2]])?;
+            let f1 = s[0].unwrap_or(f64::INFINITY);
+            let f2 = s[1].unwrap_or(f64::INFINITY);
+            if f1 <= f2 {
+                hi = m2;
+            } else {
+                lo = m1;
+            }
+        }
+        ev.eval_batch(&line[lo..=hi])?;
+        Ok(())
+    }
+}
+
+impl SearchStrategy for GoldenSection {
+    fn label(&self) -> &'static str {
+        "golden"
+    }
+
+    fn search(
+        &self,
+        space: &TuningSpace,
+        ev: &mut Evaluator<'_>,
+    ) -> Result<SearchOutcome, TuneError> {
+        let flat: Vec<Candidate> = space
+            .candidates()
+            .into_iter()
+            .filter(|c| c.strategy != Strategy::Ca)
+            .collect();
+        if !flat.is_empty() {
+            ev.eval_batch(&flat)?;
+        }
+        if space.strategies.contains(&Strategy::Ca) {
+            for &p in &space.procs {
+                if space.blocks.is_empty() {
+                    ev.eval(Candidate::new(Strategy::Ca, space.default_halo(), None, p))?;
+                    continue;
+                }
+                for &h in &space.halos {
+                    let line: Vec<Candidate> = space
+                        .blocks
+                        .iter()
+                        .map(|&b| Candidate::new(Strategy::Ca, h, Some(b), p))
+                        .collect();
+                    Self::section_line(ev, &line)?;
+                }
+            }
+        }
+        let scored = canonical(ev.evaluated());
+        pick_plateau(&scored, self.tolerance).ok_or_else(|| no_feasible(space))
+    }
+}
+
+/// Coordinate-descent hill climber over the joint space: start from the
+/// closed-form-adjacent CA candidate and sweep one dimension at a time
+/// (block, strategy, halo, procs), moving whenever a dimension offers a
+/// strictly better score, until a full round makes no move.  The final
+/// verdict applies the shared plateau rule over everything the climb
+/// scored (the climb's endpoint is the minimum of that set), so a flat
+/// landscape resolves to naive exactly as the other strategies do.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoordinateDescent {
+    pub max_rounds: usize,
+    pub tolerance: f64,
+}
+
+impl Default for CoordinateDescent {
+    fn default() -> Self {
+        CoordinateDescent { max_rounds: 8, tolerance: 0.01 }
+    }
+}
+
+impl CoordinateDescent {
+    fn mid_block(space: &TuningSpace) -> Option<u32> {
+        if space.blocks.is_empty() {
+            None
+        } else {
+            Some(space.blocks[space.blocks.len() / 2])
+        }
+    }
+
+    /// All values of dimension `dim` with the other coordinates of
+    /// `cur` held fixed (includes `cur` itself where applicable).
+    fn variants(space: &TuningSpace, cur: Candidate, dim: usize) -> Vec<Candidate> {
+        match dim {
+            // Block factor (CA only).
+            0 if cur.strategy == Strategy::Ca => space
+                .blocks
+                .iter()
+                .map(|&b| Candidate::new(Strategy::Ca, cur.halo, Some(b), cur.procs))
+                .collect(),
+            // Strategy (CA variants keep the current / middle block).
+            1 => space
+                .strategies
+                .iter()
+                .map(|&s| {
+                    let block = match s {
+                        Strategy::Ca => cur.block.or_else(|| Self::mid_block(space)),
+                        _ => None,
+                    };
+                    Candidate::new(s, cur.halo, block, cur.procs)
+                })
+                .collect(),
+            // Halo mode (CA only).
+            2 if cur.strategy == Strategy::Ca => space
+                .halos
+                .iter()
+                .map(|&h| Candidate::new(Strategy::Ca, h, cur.block, cur.procs))
+                .collect(),
+            // Processor count.
+            3 => space
+                .procs
+                .iter()
+                .map(|&p| Candidate::new(cur.strategy, cur.halo, cur.block, p))
+                .collect(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+impl SearchStrategy for CoordinateDescent {
+    fn label(&self) -> &'static str {
+        "coord"
+    }
+
+    fn search(
+        &self,
+        space: &TuningSpace,
+        ev: &mut Evaluator<'_>,
+    ) -> Result<SearchOutcome, TuneError> {
+        // Seed: the closed-form-adjacent CA candidate if feasible, else
+        // the first feasible candidate in canonical order.
+        let mut seeds: Vec<Candidate> = Vec::new();
+        if space.strategies.contains(&Strategy::Ca) {
+            if let Some(mid) = Self::mid_block(space) {
+                seeds.push(Candidate::new(
+                    Strategy::Ca,
+                    space.default_halo(),
+                    Some(mid),
+                    *space.procs.first().unwrap_or(&1),
+                ));
+            }
+        }
+        seeds.extend(space.candidates());
+        let mut cur: Option<(Candidate, f64)> = None;
+        for c in seeds {
+            if let Some(s) = ev.eval(c)? {
+                cur = Some((c, s));
+                break;
+            }
+        }
+        let (mut cur, mut cur_s) = cur.ok_or_else(|| no_feasible(space))?;
+
+        for _ in 0..self.max_rounds {
+            let mut improved = false;
+            for dim in 0..4 {
+                let variants = Self::variants(space, cur, dim);
+                if variants.len() < 2 {
+                    continue;
+                }
+                let scores = ev.eval_batch(&variants)?;
+                for (&c, &s) in variants.iter().zip(&scores) {
+                    if let Some(v) = s {
+                        if v < cur_s {
+                            cur = c;
+                            cur_s = v;
+                            improved = true;
+                        }
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        // The climb's endpoint is the minimum of everything evaluated
+        // (it only ever moves downhill past scores it has seen), so the
+        // plateau pick can only swap in an equally-fast, canonically
+        // earlier configuration.
+        pick_plateau(&canonical(ev.evaluated()), self.tolerance).ok_or_else(|| no_feasible(space))
+    }
+}
+
+/// Parse a CLI search tag.
+pub fn search_from_tag(tag: &str) -> Result<Box<dyn SearchStrategy>, String> {
+    match tag.trim() {
+        "exhaustive" | "grid" => Ok(Box::new(ExhaustiveGrid::default())),
+        "golden" => Ok(Box::new(GoldenSection::default())),
+        "coord" | "hillclimb" => Ok(Box::new(CoordinateDescent::default())),
+        other => Err(format!("unknown search strategy {other:?} (exhaustive|golden|coord)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::HaloMode;
+
+    /// Synthetic scorer: V-shaped in b with minimum at `opt`; naive and
+    /// overlap cost the `b = 1` point plus a constant handicap.
+    fn v_eval(opt: u32, handicap: f64) -> impl FnMut(
+        &[Candidate],
+    ) -> Result<Vec<(Candidate, Option<f64>)>, TuneError> {
+        move |cands: &[Candidate]| {
+            Ok(cands
+                .iter()
+                .map(|&c| {
+                    let b = c.effective_block() as f64;
+                    let mut s = 100.0 + (b - opt as f64).abs() * 10.0;
+                    if c.strategy == Strategy::Naive {
+                        s += handicap;
+                    }
+                    if c.halo == HaloMode::Level0Only {
+                        s += 5.0;
+                    }
+                    (c, Some(s))
+                })
+                .collect())
+        }
+    }
+
+    fn space_1_to_64(procs: u32) -> TuningSpace {
+        TuningSpace {
+            strategies: vec![Strategy::Naive, Strategy::Overlap, Strategy::Ca],
+            halos: vec![HaloMode::MultiLevel, HaloMode::Level0Only],
+            blocks: vec![1, 2, 4, 8, 12, 16, 24, 32, 48, 64],
+            procs: vec![procs],
+        }
+    }
+
+    #[test]
+    fn exhaustive_finds_the_v_minimum() {
+        let space = space_1_to_64(4);
+        let mut ev = Evaluator::new(v_eval(12, 50.0));
+        let out = ExhaustiveGrid::default().search(&space, &mut ev).unwrap();
+        assert_eq!(out.chosen, Candidate::ca(12, 4));
+        assert_eq!(out.makespan, 100.0);
+        assert_eq!(ev.evaluations(), space.num_candidates());
+    }
+
+    #[test]
+    fn golden_matches_exhaustive_on_unimodal_with_fewer_runs() {
+        let space = space_1_to_64(4);
+        let mut gx = Evaluator::new(v_eval(24, 50.0));
+        let golden = GoldenSection::default().search(&space, &mut gx).unwrap();
+        let mut ex = Evaluator::new(v_eval(24, 50.0));
+        let full = ExhaustiveGrid::default().search(&space, &mut ex).unwrap();
+        assert_eq!(golden.chosen, full.chosen);
+        assert_eq!(golden.makespan, full.makespan);
+        assert!(
+            gx.engine_runs() < ex.engine_runs(),
+            "golden {} vs exhaustive {}",
+            gx.engine_runs(),
+            ex.engine_runs()
+        );
+    }
+
+    #[test]
+    fn coordinate_descent_climbs_to_the_minimum() {
+        let space = space_1_to_64(4);
+        let mut ev = Evaluator::new(v_eval(8, 50.0));
+        let out = CoordinateDescent::default().search(&space, &mut ev).unwrap();
+        assert_eq!(out.chosen, Candidate::ca(8, 4));
+        // The block axis plus a strategy/halo sweep — far from exhaustive.
+        assert!(ev.engine_runs() <= space.num_candidates());
+    }
+
+    #[test]
+    fn plateau_prefers_earliest_canonical_candidate() {
+        // Flat landscape: everything scores 100 — naive must win.
+        let space = space_1_to_64(2);
+        let flat = |cands: &[Candidate]| -> Result<Vec<(Candidate, Option<f64>)>, TuneError> {
+            Ok(cands.iter().map(|&c| (c, Some(100.0))).collect())
+        };
+        let mut ev = Evaluator::new(flat);
+        let out = ExhaustiveGrid::default().search(&space, &mut ev).unwrap();
+        assert_eq!(out.chosen, Candidate::naive(2));
+        // Same flat landscape through golden section: same winner.
+        let mut gv = Evaluator::new(flat);
+        let gout = GoldenSection::default().search(&space, &mut gv).unwrap();
+        assert_eq!(gout.chosen, Candidate::naive(2));
+        // And through the hill climber, whose CA seed must not survive
+        // a plateau it cannot actually beat.
+        let mut cv = Evaluator::new(flat);
+        let cout = CoordinateDescent::default().search(&space, &mut cv).unwrap();
+        assert_eq!(cout.chosen, Candidate::naive(2));
+    }
+
+    #[test]
+    fn infeasible_candidates_are_skipped_not_fatal() {
+        let space = space_1_to_64(4);
+        // Every CA candidate infeasible; overlap beats naive.
+        let mut ev = Evaluator::new(|cands: &[Candidate]| {
+            Ok(cands
+                .iter()
+                .map(|&c| match c.strategy {
+                    Strategy::Ca => (c, None),
+                    Strategy::Naive => (c, Some(90.0)),
+                    Strategy::Overlap => (c, Some(80.0)),
+                })
+                .collect())
+        });
+        let out = ExhaustiveGrid::default().search(&space, &mut ev).unwrap();
+        assert_eq!(out.chosen, Candidate::overlap(4));
+        // All infeasible → NoFeasibleCandidate.
+        let mut none =
+            Evaluator::new(|cands: &[Candidate]| Ok(cands.iter().map(|&c| (c, None)).collect()));
+        let err = ExhaustiveGrid::default().search(&space, &mut none).unwrap_err();
+        assert!(matches!(err, TuneError::NoFeasibleCandidate(_)));
+    }
+
+    #[test]
+    fn evaluator_memoizes_and_counts() {
+        let mut calls = 0usize;
+        let mut ev = Evaluator::new(|cands: &[Candidate]| {
+            calls += cands.len();
+            Ok(cands.iter().map(|&c| (c, Some(c.effective_block() as f64))).collect())
+        });
+        let a = Candidate::ca(4, 2);
+        let b = Candidate::ca(8, 2);
+        assert_eq!(ev.eval_batch(&[a, b, a]).unwrap(), vec![Some(4.0), Some(8.0), Some(4.0)]);
+        assert_eq!(ev.eval(a).unwrap(), Some(4.0));
+        drop(ev);
+        assert_eq!(calls, 2, "duplicate and repeat evaluations must be memoized");
+    }
+
+    #[test]
+    fn search_tags_parse() {
+        for tag in ["exhaustive", "golden", "coord"] {
+            assert_eq!(search_from_tag(tag).unwrap().label(), tag);
+        }
+        assert!(search_from_tag("simulated-annealing").is_err());
+    }
+}

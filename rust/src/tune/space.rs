@@ -1,0 +1,317 @@
+//! The tuning space: what the autotuner is allowed to vary.
+//!
+//! A [`Candidate`] is one fully-specified execution configuration —
+//! strategy (naive / overlap / CA), halo mode, block factor, processor
+//! count — i.e. exactly the knobs of the [`crate::pipeline::Pipeline`]
+//! builder that change the schedule without changing the problem.  A
+//! [`TuningSpace`] is the cartesian family of candidates a
+//! [`super::search::SearchStrategy`] explores.
+//!
+//! Candidates are *descriptions*; building the plan (and discovering
+//! that a candidate is infeasible for the workload at hand) happens in
+//! the evaluator, so spaces can be enumerated without touching a graph.
+
+use crate::pipeline::Strategy;
+use crate::sim::Machine;
+use crate::transform::HaloMode;
+
+/// One point of the tuning space.
+///
+/// Non-CA strategies carry no block factor and no halo choice, so
+/// [`Candidate::new`] normalizes them to `block = None` /
+/// `halo = MultiLevel`; this keeps memoization keys canonical (a
+/// "naive with level-0 halo" duplicate can never be enumerated or
+/// cached separately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    pub strategy: Strategy,
+    pub halo: HaloMode,
+    /// Block factor (CA only; `None` means one whole-graph superstep).
+    pub block: Option<u32>,
+    pub procs: u32,
+}
+
+impl Candidate {
+    /// Canonical constructor — normalizes the CA-only dimensions away
+    /// for naive/overlap candidates.
+    pub fn new(strategy: Strategy, halo: HaloMode, block: Option<u32>, procs: u32) -> Self {
+        match strategy {
+            Strategy::Ca => Candidate { strategy, halo, block, procs },
+            _ => Candidate { strategy, halo: HaloMode::MultiLevel, block: None, procs },
+        }
+    }
+
+    pub fn naive(procs: u32) -> Self {
+        Candidate::new(Strategy::Naive, HaloMode::MultiLevel, None, procs)
+    }
+
+    pub fn overlap(procs: u32) -> Self {
+        Candidate::new(Strategy::Overlap, HaloMode::MultiLevel, None, procs)
+    }
+
+    pub fn ca(block: u32, procs: u32) -> Self {
+        Candidate::new(Strategy::Ca, HaloMode::MultiLevel, Some(block), procs)
+    }
+
+    /// Human-readable tag ("naive", "ca(b=8)", "ca(b=8,level0)").
+    pub fn label(&self) -> String {
+        match self.strategy {
+            Strategy::Naive => "naive".to_string(),
+            Strategy::Overlap => "overlap".to_string(),
+            Strategy::Ca => {
+                let b = match self.block {
+                    Some(b) => b.to_string(),
+                    None => "all".to_string(),
+                };
+                match self.halo {
+                    HaloMode::MultiLevel => format!("ca(b={b})"),
+                    HaloMode::Level0Only => format!("ca(b={b},level0)"),
+                }
+            }
+        }
+    }
+
+    /// The §2.1 block factor this candidate corresponds to: naive and
+    /// overlap exchange every level (`b = 1`); a CA candidate without an
+    /// explicit block is ONE whole-graph superstep — the *deepest*
+    /// possible blocking — reported as `u32::MAX` so orderings and
+    /// reports can never mistake it for `b = 1`.
+    pub fn effective_block(&self) -> u32 {
+        match self.strategy {
+            Strategy::Ca => self.block.unwrap_or(u32::MAX),
+            _ => 1,
+        }
+    }
+
+    /// Deterministic tie-break order: fewer-redundancy configurations
+    /// first (naive < overlap < CA by ascending block, multi-level halo
+    /// before level-0), so every search strategy resolves plateaus the
+    /// same way the §2.1 tuner does (smallest b within tolerance).
+    pub(crate) fn order_key(&self) -> (u32, u8, u32, u8) {
+        let srank = match self.strategy {
+            Strategy::Naive => 0u8,
+            Strategy::Overlap => 1,
+            Strategy::Ca => 2,
+        };
+        let hrank = match self.halo {
+            HaloMode::MultiLevel => 0u8,
+            HaloMode::Level0Only => 1,
+        };
+        (self.procs, srank, self.effective_block(), hrank)
+    }
+}
+
+/// The joint search space: `strategies × halos × blocks × procs`
+/// (halo and block apply to the CA strategy only).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TuningSpace {
+    pub strategies: Vec<Strategy>,
+    pub halos: Vec<HaloMode>,
+    /// CA block factors, ascending.
+    pub blocks: Vec<u32>,
+    /// Candidate processor counts (normally just the pipeline's own).
+    pub procs: Vec<u32>,
+}
+
+impl TuningSpace {
+    /// The §2.1 closed-form seed for this machine: `b* = sqrt(α/γ_eff)`
+    /// with `γ_eff = γ/threads` (the per-node thread pool divides the
+    /// work term), rounded and clamped into `[2, depth]`.  `None` when
+    /// the graph is too shallow to block at all.
+    pub fn closed_form_seed(mach: &Machine, depth: u32) -> Option<u32> {
+        if depth < 2 {
+            return None;
+        }
+        let b = (mach.alpha * mach.threads as f64 / mach.gamma).sqrt().round() as u32;
+        Some(b.clamp(2, depth))
+    }
+
+    /// The default space for a `depth`-level problem on `procs`
+    /// processors: all three strategies, both halo modes, and a block
+    /// axis of powers of two up to `min(depth, 64)` seeded with the
+    /// closed-form prediction and the whole-graph superstep (`b = depth`).
+    pub fn for_problem(procs: u32, depth: u32, mach: &Machine) -> Self {
+        let cap = depth.max(1);
+        let mut blocks: Vec<u32> = Vec::new();
+        let mut b = 2u32;
+        while b <= cap.min(64) {
+            blocks.push(b);
+            b *= 2;
+        }
+        if let Some(seed) = Self::closed_form_seed(mach, cap) {
+            blocks.push(seed);
+        }
+        if cap >= 2 {
+            blocks.push(cap);
+        }
+        blocks.sort_unstable();
+        blocks.dedup();
+        TuningSpace {
+            strategies: vec![Strategy::Naive, Strategy::Overlap, Strategy::Ca],
+            halos: vec![HaloMode::MultiLevel, HaloMode::Level0Only],
+            blocks,
+            procs: vec![procs],
+        }
+    }
+
+    /// First halo in the axis (multi-level unless the space says
+    /// otherwise) — the default for dimensions that need one.
+    pub fn default_halo(&self) -> HaloMode {
+        self.halos.first().copied().unwrap_or(HaloMode::MultiLevel)
+    }
+
+    /// Enumerate every candidate in canonical order: per processor
+    /// count, strategies as listed; the CA strategy fans out over
+    /// ascending blocks × halos.  The order doubles as the plateau
+    /// tie-break (earlier = preferred at equal predicted runtime).
+    pub fn candidates(&self) -> Vec<Candidate> {
+        let mut v: Vec<Candidate> = Vec::new();
+        fn push(c: Candidate, v: &mut Vec<Candidate>) {
+            if !v.contains(&c) {
+                v.push(c);
+            }
+        }
+        for &p in &self.procs {
+            for &s in &self.strategies {
+                match s {
+                    Strategy::Ca => {
+                        if self.blocks.is_empty() {
+                            push(Candidate::new(s, self.default_halo(), None, p), &mut v);
+                        }
+                        for &b in &self.blocks {
+                            for &h in &self.halos {
+                                push(Candidate::new(s, h, Some(b), p), &mut v);
+                            }
+                        }
+                    }
+                    _ => push(Candidate::new(s, HaloMode::MultiLevel, None, p), &mut v),
+                }
+            }
+        }
+        v
+    }
+
+    pub fn num_candidates(&self) -> usize {
+        self.candidates().len()
+    }
+
+    /// Compact identity string for cache keying: two spaces with equal
+    /// fingerprints enumerate exactly the same candidates.
+    pub fn fingerprint(&self) -> String {
+        let strategies: Vec<&str> = self
+            .strategies
+            .iter()
+            .map(|s| match s {
+                Strategy::Naive => "n",
+                Strategy::Overlap => "o",
+                Strategy::Ca => "c",
+            })
+            .collect();
+        let halos: Vec<&str> = self
+            .halos
+            .iter()
+            .map(|h| match h {
+                HaloMode::MultiLevel => "m",
+                HaloMode::Level0Only => "l0",
+            })
+            .collect();
+        let blocks: Vec<String> = self.blocks.iter().map(u32::to_string).collect();
+        let procs: Vec<String> = self.procs.iter().map(u32::to_string).collect();
+        format!(
+            "s={};h={};b={};p={}",
+            strategies.join(","),
+            halos.join(","),
+            blocks.join(","),
+            procs.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization_collapses_non_ca_dimensions() {
+        let a = Candidate::new(Strategy::Naive, HaloMode::Level0Only, Some(8), 4);
+        let b = Candidate::naive(4);
+        assert_eq!(a, b);
+        assert_eq!(a.block, None);
+        assert_eq!(a.halo, HaloMode::MultiLevel);
+        assert_eq!(a.effective_block(), 1);
+        // A whole-graph CA superstep is the deepest blocking, never b=1.
+        let whole = Candidate::new(Strategy::Ca, HaloMode::MultiLevel, None, 4);
+        assert_eq!(whole.effective_block(), u32::MAX);
+        assert!(whole.order_key() > Candidate::ca(64, 4).order_key());
+    }
+
+    #[test]
+    fn candidate_labels() {
+        assert_eq!(Candidate::naive(2).label(), "naive");
+        assert_eq!(Candidate::overlap(2).label(), "overlap");
+        assert_eq!(Candidate::ca(8, 2).label(), "ca(b=8)");
+        let l0 = Candidate::new(Strategy::Ca, HaloMode::Level0Only, Some(4), 2);
+        assert_eq!(l0.label(), "ca(b=4,level0)");
+    }
+
+    #[test]
+    fn enumeration_order_prefers_cheap_configs() {
+        let mach = Machine::new(4, 8, 64.0, 0.1, 1.0);
+        let space = TuningSpace::for_problem(4, 16, &mach);
+        let cands = space.candidates();
+        assert_eq!(cands[0], Candidate::naive(4));
+        assert_eq!(cands[1], Candidate::overlap(4));
+        assert_eq!(cands[2], Candidate::ca(2, 4));
+        // Ascending block order, multi-level halo before level-0.
+        let blocks: Vec<u32> = cands[2..]
+            .iter()
+            .filter(|c| c.halo == HaloMode::MultiLevel)
+            .map(|c| c.block.unwrap())
+            .collect();
+        let mut sorted = blocks.clone();
+        sorted.sort_unstable();
+        assert_eq!(blocks, sorted);
+        // Order keys are strictly increasing over the enumeration.
+        for w in cands.windows(2) {
+            assert!(w[0].order_key() < w[1].order_key(), "{w:?}");
+        }
+    }
+
+    #[test]
+    fn for_problem_seeds_closed_form_and_full_depth() {
+        let mach = Machine::new(4, 1, 100.0, 0.1, 1.0);
+        // sqrt(100) = 10 → the seed lands between the powers of two.
+        let space = TuningSpace::for_problem(4, 48, &mach);
+        assert!(space.blocks.contains(&10), "{:?}", space.blocks);
+        assert!(space.blocks.contains(&48), "{:?}", space.blocks);
+        assert!(space.blocks.windows(2).all(|w| w[0] < w[1]));
+        assert!(space.blocks.iter().all(|&b| (2..=48).contains(&b)));
+        assert_eq!(TuningSpace::closed_form_seed(&mach, 1), None);
+        // α = 0 clamps up to the minimum blockable factor.
+        let free = Machine::new(4, 1, 0.0, 0.0, 1.0);
+        assert_eq!(TuningSpace::closed_form_seed(&free, 32), Some(2));
+    }
+
+    #[test]
+    fn fingerprints_identify_spaces() {
+        let mach = Machine::new(4, 8, 64.0, 0.1, 1.0);
+        let a = TuningSpace::for_problem(4, 16, &mach);
+        assert_eq!(a.fingerprint(), TuningSpace::for_problem(4, 16, &mach).fingerprint());
+        assert!(a.fingerprint().starts_with("s=n,o,c;h=m,l0;b=2,4,8,16;"), "{}", a.fingerprint());
+        let mut narrower = a.clone();
+        narrower.blocks.pop();
+        assert_ne!(a.fingerprint(), narrower.fingerprint());
+    }
+
+    #[test]
+    fn shallow_graph_space_still_enumerates() {
+        let mach = Machine::new(2, 1, 8.0, 0.1, 1.0);
+        let space = TuningSpace::for_problem(2, 1, &mach);
+        assert!(space.blocks.is_empty());
+        let cands = space.candidates();
+        // naive, overlap, and the whole-graph CA superstep.
+        assert_eq!(cands.len(), 3);
+        assert_eq!(cands[2].strategy, Strategy::Ca);
+        assert_eq!(cands[2].block, None);
+    }
+}
