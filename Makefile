@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke
+.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke
 
-ci: build test clippy fmt sweep-smoke tune-smoke
+ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke
 
 # The simulator perf tracker: a reduced fig-7/8 sweep across all four
 # network models, emitting per-cell makespan + simulator wall-time so the
@@ -19,6 +19,13 @@ sweep-smoke: build
 # (BENCH_tune.json).
 tune-smoke: build
 	$(CARGO) run --release -- tune --smoke
+
+# The data-layout tracker: processor-grid shapes on heat2d and graph
+# partitioners on a banded+random SpMV, each simulated under all four
+# wire models, emitting per-cell makespan + edge-cut words + imbalance
+# (BENCH_partition.json).
+partition-smoke: build
+	$(CARGO) run --release -- partition --smoke
 
 build:
 	$(CARGO) build --release

@@ -6,8 +6,9 @@
 //!
 //! 1. build a 2-D Laplacian CSR matrix (the sparsity is all the
 //!    transformation sees);
-//! 2. partition it two ways — naive row blocks vs. dependency-aware
-//!    recursive bisection — and compare edge cuts;
+//! 2. partition it two ways — naive row blocks vs. the `partition`
+//!    layer's refined recursive coordinate bisection — and compare edge
+//!    cuts;
 //! 3. unroll an 8-step SpMV chain over each distribution, transform,
 //!    verify Theorem 1, and compare message/redundancy statistics;
 //! 4. execute the transformed plan on the real threaded coordinator
@@ -20,9 +21,10 @@
 //! ```
 
 use imp_latency::imp::Program;
+use imp_latency::partition::{to_distribution, PartitionQuality, Partitioner};
 use imp_latency::pipeline::{GraphWorkload, Pipeline};
 use imp_latency::sim::{simulate, ExecPlan, Machine};
-use imp_latency::stencil::{bisect, block_assign, quality, to_distribution, CsrMatrix};
+use imp_latency::stencil::CsrMatrix;
 use imp_latency::transform::{check_schedule, communication_avoiding_default, ScheduleStats, TransformOptions};
 
 fn main() {
@@ -31,23 +33,19 @@ fn main() {
     println!("matrix: {}x{} 2-D Laplacian, {} nonzeros\n", a.n, a.n, a.nnz());
 
     // ---- Partitioning ------------------------------------------------------
-    let blocks = block_assign(a.n, p);
-    let bis = bisect(&a, p);
-    let qb = quality(&a, &blocks, p);
-    let qm = quality(&a, &bis, p);
+    let blocks = Partitioner::RowBlock.assign(&a, p);
+    let bis = Partitioner::RcbRefined.assign(&a, p);
+    let qb = PartitionQuality::evaluate(&a, &blocks, p);
+    let qm = PartitionQuality::evaluate(&a, &bis, p);
     println!(
-        "partition quality (p={p}):\n  row blocks: edge cut {:>5} ({:.1}% of nnz), imbalance {:.3}\n  bisection : edge cut {:>5} ({:.1}% of nnz), imbalance {:.3}\n",
-        qb.edge_cut,
-        qb.cut_fraction() * 100.0,
-        qb.imbalance,
-        qm.edge_cut,
-        qm.cut_fraction() * 100.0,
-        qm.imbalance
+        "partition quality (p={p}):\n  row blocks: {}\n  rcb+refine: {}\n",
+        qb.summary(),
+        qm.summary()
     );
 
     // ---- Transform both distributions --------------------------------------
     let mut results = Vec::new();
-    for (name, assign) in [("row-blocks", &blocks), ("bisection", &bis)] {
+    for (name, assign) in [("row-blocks", &blocks), ("rcb+refine", &bis)] {
         let dist = to_distribution(assign, p);
         let g = Program::new(dist).iterate("spmv", a.signature(), steps).unroll();
         let s = communication_avoiding_default(&g);

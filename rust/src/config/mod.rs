@@ -198,6 +198,61 @@ pub fn preset_tune_smoke() -> Config {
     c
 }
 
+/// The `partition` CLI preset: processor-grid shapes on heat2d and
+/// graph partitioners on a banded+random SpMV matrix, each simulated
+/// under every wire model.  β is sized so the wire feels the words a
+/// layout moves (the quality metric's edge-cut words).
+pub fn preset_partition() -> Config {
+    let mut c = Config::new();
+    c.set("h", 30);
+    c.set("w", 30);
+    c.set("m", 8);
+    c.set("p", 9);
+    c.set("threads", 4);
+    c.set("alpha", 40.0);
+    c.set("beta", 1.0);
+    c.set("gamma", 1.0);
+    c.set("grids", "strip,1x9,3x3");
+    c.set("partitioners", "rowblock,rcb,rcb+refine");
+    c.set("networks", "alphabeta,loggp,hier,contended");
+    c.set("spmv_h", 8);
+    c.set("spmv_w", 32);
+    c.set("chords", 16);
+    c.set("out", "results/partition.json");
+    c
+}
+
+/// The `partition --smoke` preset: the CI layout tracker — grid shapes ×
+/// partitioners × wires shrunk to run on every push, emitting
+/// `BENCH_partition.json` (per-cell makespan + edge cut).
+pub fn preset_partition_smoke() -> Config {
+    let mut c = preset_partition();
+    c.set("h", 18);
+    c.set("w", 18);
+    c.set("m", 4);
+    c.set("spmv_h", 6);
+    c.set("spmv_w", 24);
+    c.set("chords", 8);
+    c.set("out", "BENCH_partition.json");
+    c
+}
+
+/// The figure-10 preset: SpMV partition quality vs. makespan per wire
+/// model on the banded+random matrix.
+pub fn preset_fig10() -> Config {
+    let mut c = Config::new();
+    c.set("h", 6);
+    c.set("w", 24);
+    c.set("chords", 8);
+    c.set("m", 6);
+    c.set("p", 4);
+    c.set("threads", 4);
+    c.set("alpha", 40.0);
+    c.set("beta", 1.0);
+    c.set("gamma", 1.0);
+    c
+}
+
 /// The figure-9 preset: tuned vs fixed-b vs naive across the four wire
 /// models.  α is sized so the §2.1 closed form picks a block factor
 /// inside the default grid (sqrt(α·t/γ) ≈ 22.6 clamps to the depth).
@@ -300,6 +355,18 @@ mod tests {
         assert_eq!(preset_tune_smoke().get("repeat"), Some("2"));
         for k in ["n", "m", "p", "threads", "alpha", "beta", "gamma"] {
             assert!(preset_fig9().get(k).is_some(), "{k}");
+        }
+        for c in [preset_partition(), preset_partition_smoke()] {
+            for k in [
+                "h", "w", "m", "p", "threads", "alpha", "beta", "gamma", "grids",
+                "partitioners", "networks", "spmv_h", "spmv_w", "chords", "out",
+            ] {
+                assert!(c.get(k).is_some(), "{k}");
+            }
+        }
+        assert_eq!(preset_partition_smoke().get("out"), Some("BENCH_partition.json"));
+        for k in ["h", "w", "chords", "m", "p", "threads", "alpha", "beta", "gamma"] {
+            assert!(preset_fig10().get(k).is_some(), "{k}");
         }
     }
 

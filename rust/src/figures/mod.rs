@@ -11,6 +11,7 @@
 //! | 7 | runtime vs. threads/node, moderate latency | [`fig78_sweep`] |
 //! | 8 | runtime vs. threads/node, high latency | [`fig78_sweep`] |
 //! | 9 | tuned vs. fixed-b vs. naive makespan per wire model (beyond the paper) | [`fig9_tuned`] |
+//! | 10 | SpMV partition quality (edge-cut words) vs. makespan per wire model (beyond the paper) | [`fig10_partition`] |
 //!
 //! Figures 1–6 are structural (the paper draws diagrams; we render the
 //! *computed* sets as ASCII grids, which doubles as a check that the
@@ -21,7 +22,8 @@
 //! stops being the ideal α/β model.
 
 use crate::config::{parse_list, Config};
-use crate::pipeline::{strategy_sweep_inputs, Heat1d, Pipeline};
+use crate::partition::{banded_random, Partitioner, Partitioning, PartitionQuality};
+use crate::pipeline::{strategy_sweep_inputs, Heat1d, Pipeline, Spmv};
 use crate::sim::{ca_time_for, naive_time_1d, overlap_time_1d, sweep, Machine, NetworkKind};
 use crate::stencil::heat1d_graph;
 use crate::trace::FigureSeries;
@@ -374,6 +376,90 @@ pub fn check_fig9_claims(fig: &FigureSeries) -> Result<String, String> {
     ))
 }
 
+/// Figure 10 (beyond the paper): SpMV partition quality vs. simulated
+/// makespan per wire model.  Each row is one [`Partitioner`] of the
+/// banded+random matrix ([`banded_random`]): x = the partition's edge
+/// cut in words ([`PartitionQuality::edge_cut_words`] — exactly what one
+/// naive exchange level sends), y = the naive plan's makespan under each
+/// of the four wire models.
+///
+/// `cfg` keys: `h, w, chords, m, p, threads, alpha, beta, gamma` (see
+/// [`crate::config::preset_fig10`]).
+pub fn fig10_partition(cfg: &Config) -> Result<FigureSeries, String> {
+    let h: usize = cfg.require("h")?;
+    let w: usize = cfg.require("w")?;
+    let m: u32 = cfg.require("m")?;
+    let p: u32 = cfg.require("p")?;
+    let mach = Machine::new(
+        p,
+        cfg.require("threads")?,
+        cfg.require("alpha")?,
+        cfg.require("beta")?,
+        cfg.require("gamma")?,
+    );
+    let a = banded_random(h, w, cfg.require("chords")?);
+    let kinds = NetworkKind::all_default();
+    let labels: Vec<&str> = kinds.iter().map(NetworkKind::label).collect();
+    let mut fig = FigureSeries::new("edge_cut_words", &labels);
+    for part in Partitioner::all() {
+        let q = PartitionQuality::evaluate(&a, &part.assign(&a, p), p);
+        // One transform per partition; the shared plan fans across the
+        // wire models through the sweep worker pool.
+        let t = Pipeline::new(Spmv { matrix: a.clone(), steps: m })
+            .procs(p)
+            .naive()
+            .partitioning(Partitioning::Graph(part))
+            .transform()
+            .map_err(|e| e.to_string())?;
+        let grid = sweep::SweepGrid {
+            inputs: vec![t.sweep_input()],
+            networks: kinds.clone(),
+            alphas: vec![mach.alpha],
+            threads: vec![mach.threads],
+            beta: mach.beta,
+            gamma: mach.gamma,
+            jobs: 0,
+        };
+        let cells = sweep::run(&grid)?;
+        fig.push(q.edge_cut_words as f64, cells.iter().map(|c| c.makespan).collect());
+    }
+    Ok(fig)
+}
+
+/// Figure-10 shape assertion: the partitioner family spans a real
+/// edge-cut range, and on every wire the lowest-cut partition is not
+/// slower (beyond tolerance) than the highest-cut one — words you do not
+/// send are time you do not spend, under every wire model.
+pub fn check_fig10_claims(fig: &FigureSeries) -> Result<String, String> {
+    let lo = fig
+        .rows
+        .iter()
+        .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        .ok_or("figure 10 is empty")?;
+    let hi = fig
+        .rows
+        .iter()
+        .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        .ok_or("figure 10 is empty")?;
+    if lo.0 >= hi.0 {
+        return Err(format!("edge-cut axis is degenerate: every partition cuts {} words", lo.0));
+    }
+    for (i, wire) in fig.labels.iter().enumerate() {
+        if lo.1[i] > hi.1[i] * 1.02 {
+            return Err(format!(
+                "{wire}: min-cut partition is slower ({} vs {})",
+                lo.1[i], hi.1[i]
+            ));
+        }
+    }
+    Ok(format!(
+        "figure 10 claims hold: cut range {}..{} words; min-cut no slower on all {} wires",
+        lo.0,
+        hi.0,
+        fig.labels.len()
+    ))
+}
+
 /// Shape assertions for figures 7/8 — the paper's qualitative claims,
 /// checked programmatically (see DESIGN.md §4 acceptance criteria).
 /// Returns a human-readable verdict; `Err` when a claim fails.
@@ -538,6 +624,21 @@ mod tests {
         assert_eq!(fig.rows.len(), 4); // one row per wire model
         assert_eq!(fig.labels, vec!["naive", "fixed_b", "tuned"]);
         let verdict = check_fig9_claims(&fig).unwrap();
+        assert!(verdict.contains("claims hold"), "{verdict}");
+    }
+
+    #[test]
+    fn fig10_low_cut_partitions_do_not_lose() {
+        let mut c = crate::config::preset_fig10();
+        // Shrink for test speed; β stays dominant so the cut matters.
+        c.set("h", 4);
+        c.set("w", 16);
+        c.set("chords", 4);
+        c.set("m", 4);
+        let fig = fig10_partition(&c).unwrap();
+        assert_eq!(fig.rows.len(), 3); // rowblock, rcb, rcb+refine
+        assert_eq!(fig.labels, vec!["alphabeta", "loggp", "hier", "contended"]);
+        let verdict = check_fig10_claims(&fig).unwrap();
         assert!(verdict.contains("claims hold"), "{verdict}");
     }
 

@@ -74,7 +74,15 @@ pub fn cg_reference(a: &CsrMatrix, rhs: &[f64], tol: f64, maxit: usize) -> (Vec<
 /// blocking across them, which is exactly why the s-step literature
 /// reformulates CG — quantified in the `fig6_subset_sizes` bench.
 pub fn cg_program(a: &CsrMatrix, p: u32, iters: u32) -> Program {
-    let mut prog = Program::new(Distribution::block(a.n as u64, p));
+    cg_program_on(a, Distribution::block(a.n as u64, p), iters)
+}
+
+/// [`cg_program`] under an explicit row distribution — the entry point
+/// the [`crate::partition`] layer's graph partitioners feed (the matvec
+/// halo follows the partition; the `AllToAll` dot levels are
+/// layout-indifferent by construction).
+pub fn cg_program_on(a: &CsrMatrix, input: Distribution, iters: u32) -> Program {
+    let mut prog = Program::new(input);
     for k in 0..iters {
         prog = prog
             .then(&format!("matvec[{k}]"), a.signature())

@@ -30,6 +30,15 @@
 //!   functions; derives task graphs from data-parallel programs.
 //! * [`stencil`] — concrete problem generators (1-D/2-D heat, 9-point
 //!   Moore stencil, CSR SpMV).
+//! * [`partition`] — data layout as a first-class dimension: processor
+//!   grids ([`partition::ProcGrid`]: strips, 2-D `px × py` grids, block /
+//!   block-cyclic tilings) for the structured stencils, and graph
+//!   partitioners ([`partition::Partitioner`]: row-block, recursive
+//!   coordinate bisection, greedy edge-cut refinement) for SpMV/CG, with
+//!   a [`partition::PartitionQuality`] report (edge cut in words, load
+//!   imbalance, max neighbor count); flows through
+//!   `Pipeline::partitioning`, the tuner's layout axis, and the
+//!   grid-aware hierarchical wire.
 //! * [`transform`] — **the paper's contribution**: the subset derivation,
 //!   Theorem-1 checker, blocking, and redundancy accounting.
 //! * [`sim`] — the §4 simulation stack: an event-driven engine
@@ -65,6 +74,7 @@ pub mod figures;
 pub mod graph;
 pub mod imp;
 pub mod krylov;
+pub mod partition;
 pub mod pipeline;
 pub mod prop;
 pub mod runtime;

@@ -13,13 +13,15 @@
 //! * `dot` — Graphviz export of a (small) transformed graph.
 
 use imp_latency::config::{
-    parse_list, preset_end_to_end, preset_fig7, preset_fig8, preset_fig9, preset_sweep,
-    preset_sweep_smoke, preset_tune, preset_tune_smoke, Config,
+    parse_list, preset_end_to_end, preset_fig10, preset_fig7, preset_fig8, preset_fig9,
+    preset_partition, preset_partition_smoke, preset_sweep, preset_sweep_smoke, preset_tune,
+    preset_tune_smoke, Config,
 };
 use imp_latency::coordinator::{heat1d, heat2d};
 use imp_latency::cost::CostModel;
 use imp_latency::figures;
 use imp_latency::krylov::distributed::{self as dcg, CgConfig};
+use imp_latency::partition::{self, Partitioner, Partitioning, PartitionQuality, ProcGrid};
 use imp_latency::pipeline::{
     ConjugateGradient, Heat1d, Heat2d, Moore2d, Pipeline, Spmv, Strategy, Workload,
 };
@@ -36,9 +38,10 @@ imp-latency — Task Graph Transformations for Latency Tolerance (Eijkhout 2018)
 USAGE: imp-latency <command> [key=value ...]
 
 COMMANDS
-  figure <f1..f9|all> [out=results/ engine=analytic|sim network=alphabeta]
+  figure <f1..f10|all> [out=results/ engine=analytic|sim network=alphabeta]
              regenerate paper figures (f7/f8 optionally on the event engine;
-             f9 is the tuned-vs-fixed-b study across the four wire models)
+             f9 is the tuned-vs-fixed-b study across the four wire models;
+             f10 is partition quality vs makespan per wire model)
   pipeline   [workload=heat1d|heat2d|moore2d|spmv|cg n=4096 m=16 p=4 b=4
               strategy=ca|naive|overlap halo=multi|level0 h=32 w=32
               threads=8 alpha=500 beta=0.1 gamma=1]
@@ -66,6 +69,14 @@ COMMANDS
              engine-in-the-loop autotuner: any workload × any wire model, scored by
              the event engine, persisted in a JSON tuning cache; --smoke runs the CI
              preset twice (cache demo) and emits BENCH_tune.json
+  partition  [--smoke h=30 w=30 m=8 p=9 threads=4 alpha=40 beta=1 gamma=1
+              grids=strip,1x9,3x3 partitioners=rowblock,rcb,rcb+refine
+              networks=alphabeta,loggp,hier,contended spmv_h=8 spmv_w=32 chords=16
+              out=results/partition.json]
+             data-layout study: heat2d under each processor-grid shape and a
+             banded+random SpMV under each graph partitioner, simulated per wire;
+             every cell pairs makespan with the layout's PartitionQuality (edge-cut
+             words, imbalance, max neighbors); --smoke emits BENCH_partition.json
   dot        [n=16 m=3 p=2]            Graphviz of the transformed graph
 
 Artifacts are searched in $IMP_ARTIFACTS or ./artifacts (run `make artifacts`).
@@ -102,6 +113,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "powers" => cmd_powers(&rest),
         "autotune" => cmd_autotune(&rest),
         "tune" => cmd_tune(&rest),
+        "partition" => cmd_partition(&rest),
         "dot" => cmd_dot(&rest),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -207,8 +219,22 @@ fn cmd_figure(args: &[&str]) -> Result<(), String> {
         println!("{}", figures::check_fig9_claims(&fig)?);
         did = true;
     }
+    if all || which == "f10" {
+        // Beyond the paper: the partition subsystem's quality-vs-makespan
+        // study — rowblock/rcb/rcb+refine on the banded+random SpMV
+        // matrix, x = the partition's edge cut in words.
+        let (cfg10, _) = config_from(preset_fig10(), &args[args.len().min(1)..]);
+        let fig = figures::fig10_partition(&cfg10)?;
+        println!("Figure 10 — SpMV partition quality (edge-cut words) vs makespan per wire");
+        println!("  rows = rowblock, rcb, rcb+refine on the banded+random matrix");
+        print!("{}", fig.to_table());
+        fig.write_csv(&format!("{out_dir}/fig10.csv")).map_err(|e| e.to_string())?;
+        println!("wrote {out_dir}/fig10.csv");
+        println!("{}", figures::check_fig10_claims(&fig)?);
+        did = true;
+    }
     if !did {
-        return Err(format!("unknown figure {which:?} (f1..f9 or all)"));
+        return Err(format!("unknown figure {which:?} (f1..f10 or all)"));
     }
     Ok(())
 }
@@ -853,6 +879,136 @@ fn cmd_tune(args: &[&str]) -> Result<(), String> {
         tuner.cache.hits(),
         tuner.cache.misses(),
     );
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    std::fs::write(&out, json).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// One layout's `BENCH_partition.json` cells: transform once, then fan
+/// the single shared plan across every wire model through the sweep
+/// worker pool — the same one-build-many-scores shape the tuner uses.
+fn partition_rows<W: Workload>(
+    pipeline: Pipeline<W>,
+    workload: &str,
+    layout: String,
+    networks: &[NetworkKind],
+    mach: &Machine,
+    q: &PartitionQuality,
+) -> Result<Vec<partition::PartitionRow>, String> {
+    let t = pipeline.transform().map_err(|e| e.to_string())?;
+    let grid = sweep::SweepGrid {
+        inputs: vec![t.sweep_input()],
+        networks: networks.to_vec(),
+        alphas: vec![mach.alpha],
+        threads: vec![mach.threads],
+        beta: mach.beta,
+        gamma: mach.gamma,
+        jobs: 0,
+    };
+    let cells = sweep::run(&grid)?;
+    Ok(networks
+        .iter()
+        .zip(&cells)
+        .map(|(kind, cell)| partition::PartitionRow {
+            workload: workload.to_string(),
+            layout: layout.clone(),
+            network: kind.key(),
+            makespan: cell.makespan,
+            messages: cell.messages,
+            words: cell.words,
+            edge_cut_words: q.edge_cut_words,
+            edge_cut_nnz: q.edge_cut_nnz,
+            imbalance: q.imbalance,
+            max_neighbors: q.max_neighbors,
+        })
+        .collect())
+}
+
+/// The data-layout study: every grid shape (heat2d) and every graph
+/// partitioner (banded+random SpMV) simulated under every wire model,
+/// with each cell pairing the simulated makespan against the layout's
+/// static [`PartitionQuality`].
+fn cmd_partition(args: &[&str]) -> Result<(), String> {
+    let smoke = args.contains(&"--smoke");
+    let defaults = if smoke { preset_partition_smoke() } else { preset_partition() };
+    let (cfg, _) = config_from(defaults, args);
+    let p: u32 = cfg.require("p")?;
+    let m: u32 = cfg.require("m")?;
+    let mach = Machine::new(
+        p,
+        cfg.require("threads")?,
+        cfg.require("alpha")?,
+        cfg.require("beta")?,
+        cfg.require("gamma")?,
+    );
+    let mut networks = Vec::new();
+    for tag in cfg.require::<String>("networks")?.split(',') {
+        let tag = tag.trim();
+        if !tag.is_empty() {
+            networks.push(NetworkKind::parse(tag)?);
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let mut rows: Vec<partition::PartitionRow> = Vec::new();
+
+    // Structured section: heat2d under each processor-grid shape.  The
+    // five-point pattern doubles as the quality metric's dependence graph.
+    let (h, w): (u64, u64) = (cfg.require("h")?, cfg.require("w")?);
+    let pattern = CsrMatrix::laplace2d(h as usize, w as usize);
+    for tag in cfg.require::<String>("grids")?.split(',') {
+        let tag = tag.trim();
+        if tag.is_empty() {
+            continue;
+        }
+        let grid = ProcGrid::parse(tag)?;
+        let dist = grid.distribution_2d(h, w, p)?;
+        let q = PartitionQuality::evaluate(&pattern, &partition::assignment_of(&dist), p);
+        println!("heat2d {:>10}: {}", grid.key(), q.summary());
+        rows.extend(partition_rows(
+            Pipeline::new(Heat2d { h, w, steps: m })
+                .procs(p)
+                .naive()
+                .partitioning(Partitioning::Grid(grid)),
+            "heat2d",
+            grid.key(),
+            &networks,
+            &mach,
+            &q,
+        )?);
+    }
+
+    // Irregular section: banded+random SpMV under each graph partitioner.
+    let (sh, sw): (usize, usize) = (cfg.require("spmv_h")?, cfg.require("spmv_w")?);
+    let a = partition::banded_random(sh, sw, cfg.require("chords")?);
+    for tag in cfg.require::<String>("partitioners")?.split(',') {
+        let tag = tag.trim();
+        if tag.is_empty() {
+            continue;
+        }
+        let part = Partitioner::parse(tag)?;
+        let q = PartitionQuality::evaluate(&a, &part.assign(&a, p), p);
+        println!("spmv   {:>10}: {}", part.key(), q.summary());
+        rows.extend(partition_rows(
+            Pipeline::new(Spmv { matrix: a.clone(), steps: m })
+                .procs(p)
+                .naive()
+                .partitioning(Partitioning::Graph(part)),
+            "spmv",
+            part.key().to_string(),
+            &networks,
+            &mach,
+            &q,
+        )?);
+    }
+
+    println!("{} cells in {:.2}s", rows.len(), t0.elapsed().as_secs_f64());
+    let out = cfg.get_or("out", "results/partition.json".to_string());
+    let json = partition::rows_to_json(if smoke { "smoke" } else { "partition" }, &rows);
     if let Some(dir) = std::path::Path::new(&out).parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;

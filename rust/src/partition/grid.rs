@@ -1,0 +1,355 @@
+//! Structured processor grids: how a regular domain is tiled over
+//! processors.
+//!
+//! A [`ProcGrid`] is a *shape* — 1-D strip, explicit or most-square 2-D
+//! `px × py` grid, block or block-cyclic tiling — that resolves against a
+//! concrete processor count into an IMP [`Distribution`].  Beyond the
+//! distribution, the shape answers the two geometric questions the rest
+//! of the stack asks:
+//!
+//! * [`ProcGrid::tile_bound`] — the narrowest tile extent, which bounds
+//!   how many levels the §3 transformation can block before a superstep's
+//!   halo outgrows the neighbouring tile; the layout-aware
+//!   [`crate::tune::TuningSpace`] clamps its block axis with it.
+//! * [`ProcGrid::node_map`] — a proc → node packing that keeps
+//!   grid-adjacent tiles on the same node, which is what the
+//!   [`crate::sim::Hierarchical`] wire wants instead of blind contiguous
+//!   packing (see [`crate::sim::NetworkKind::build_for`]).
+
+use crate::imp::{block_bounds, Distribution, IndexSet};
+
+/// Factor `procs` into the most square `px × py` grid (px ≤ py).
+pub fn square_factor(procs: u32) -> (u32, u32) {
+    let mut px = (procs as f64).sqrt().floor() as u32;
+    while px > 1 && procs % px != 0 {
+        px -= 1;
+    }
+    let px = px.max(1);
+    (px, procs / px)
+}
+
+/// A processor-grid shape.  Shapes are cheap descriptions; they resolve
+/// against a processor count with [`ProcGrid::resolve`] and against a
+/// domain with [`ProcGrid::distribution_2d`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProcGrid {
+    /// 1-D strip of row blocks: a `procs × 1` grid (the seed layout).
+    Strip,
+    /// The most square `px × py` factorization of the processor count
+    /// (what [`crate::pipeline::Heat2d`] has always used).
+    Square,
+    /// Explicit `px × py` grid with block tiling.
+    Grid { px: u32, py: u32 },
+    /// Explicit `px × py` grid dealing `th × tw` tiles round-robin
+    /// (2-D block-cyclic).
+    BlockCyclic { px: u32, py: u32, th: u32, tw: u32 },
+}
+
+impl ProcGrid {
+    /// Parse a CLI tag: `strip`, `square` (or `auto`), `3x3`, or
+    /// block-cyclic `3x3c2x2` (`px`x`py`c`th`x`tw`).
+    pub fn parse(s: &str) -> Result<ProcGrid, String> {
+        let s = s.trim();
+        match s {
+            "strip" => return Ok(ProcGrid::Strip),
+            "square" | "auto" => return Ok(ProcGrid::Square),
+            _ => {}
+        }
+        let (grid, tile) = match s.split_once('c') {
+            Some((g, t)) => (g, Some(t)),
+            None => (s, None),
+        };
+        let pair = |p: &str| -> Result<(u32, u32), String> {
+            let (a, b) = p.split_once('x').ok_or_else(|| {
+                format!("bad grid shape {s:?} (strip|square|PXxPY|PXxPYcTHxTW)")
+            })?;
+            let a: u32 =
+                a.trim().parse().map_err(|_| format!("bad grid dimension {a:?} in {s:?}"))?;
+            let b: u32 =
+                b.trim().parse().map_err(|_| format!("bad grid dimension {b:?} in {s:?}"))?;
+            if a == 0 || b == 0 {
+                return Err(format!("grid dimensions must be positive in {s:?}"));
+            }
+            Ok((a, b))
+        };
+        let (px, py) = pair(grid)?;
+        Ok(match tile {
+            None => ProcGrid::Grid { px, py },
+            Some(t) => {
+                let (th, tw) = pair(t)?;
+                ProcGrid::BlockCyclic { px, py, th, tw }
+            }
+        })
+    }
+
+    /// Identity tag, the inverse of [`ProcGrid::parse`] — what reports
+    /// and the tuning cache carry.
+    pub fn key(&self) -> String {
+        match *self {
+            ProcGrid::Strip => "strip".into(),
+            ProcGrid::Square => "square".into(),
+            ProcGrid::Grid { px, py } => format!("{px}x{py}"),
+            ProcGrid::BlockCyclic { px, py, th, tw } => format!("{px}x{py}c{th}x{tw}"),
+        }
+    }
+
+    /// Resolve the shape against a processor count into concrete
+    /// `(px, py)` grid extents; errors when the shape cannot cover
+    /// exactly `procs` processors.
+    pub fn resolve(&self, procs: u32) -> Result<(u32, u32), String> {
+        if procs == 0 {
+            return Err("cannot lay a processor grid over zero processors".into());
+        }
+        match *self {
+            ProcGrid::Strip => Ok((procs, 1)),
+            ProcGrid::Square => Ok(square_factor(procs)),
+            ProcGrid::Grid { px, py } | ProcGrid::BlockCyclic { px, py, .. } => {
+                if px as u64 * py as u64 == procs as u64 {
+                    Ok((px, py))
+                } else {
+                    Err(format!(
+                        "grid {} needs {} procs, the machine has {procs}",
+                        self.key(),
+                        px as u64 * py as u64
+                    ))
+                }
+            }
+        }
+    }
+
+    /// The IMP distribution of a row-major `h × w` domain under this
+    /// shape: processor `(qr, qc)` owns its cartesian block (or its
+    /// round-robin share of `th × tw` tiles for the cyclic variant).
+    pub fn distribution_2d(&self, h: u64, w: u64, procs: u32) -> Result<Distribution, String> {
+        let (px, py) = self.resolve(procs)?;
+        if let ProcGrid::BlockCyclic { th, tw, .. } = *self {
+            if th == 0 || tw == 0 {
+                return Err(format!("block-cyclic tile must be positive in {}", self.key()));
+            }
+            // Every proc row/column must receive at least one tile of the
+            // round-robin deal, or the layout silently starves processors
+            // (empty parts are *valid* distributions, just degenerate).
+            if h.div_ceil(th as u64) < px as u64 || w.div_ceil(tw as u64) < py as u64 {
+                return Err(format!(
+                    "{}: a {h}x{w} domain leaves some processor without a tile",
+                    self.key()
+                ));
+            }
+            let mut parts: Vec<Vec<u64>> = vec![Vec::new(); procs as usize];
+            for r in 0..h {
+                let qr = (r / th as u64) % px as u64;
+                for c in 0..w {
+                    let qc = (c / tw as u64) % py as u64;
+                    parts[(qr * py as u64 + qc) as usize].push(r * w + c);
+                }
+            }
+            return Distribution::irregular(
+                h * w,
+                parts.into_iter().map(IndexSet::from_indices).collect(),
+            );
+        }
+        Ok(crate::stencil::block2d(h, w, px, py))
+    }
+
+    /// The narrowest tile extent (rows or columns) any processor owns on
+    /// an `h × w` domain — the geometric bound on the §3 block factor: a
+    /// superstep of `b` levels grows a width-`b` halo, so `b` beyond this
+    /// bound reaches past the adjacent tile.  `None` when the shape does
+    /// not resolve or some tile is empty.
+    pub fn tile_bound(&self, procs: u32, h: u64, w: u64) -> Option<u32> {
+        let (px, py) = self.resolve(procs).ok()?;
+        let min_extent = |n: u64, parts: u32| -> u64 {
+            (0..parts)
+                .map(|q| {
+                    let (lo, hi) = block_bounds(n, parts, q);
+                    hi - lo
+                })
+                .min()
+                .unwrap_or(0)
+        };
+        // For the cyclic deal the narrowest run is the ragged last tile
+        // (`n mod t`), and a deal with fewer tiles than proc rows/columns
+        // starves a processor outright.
+        let min_cyclic = |n: u64, t: u32, parts: u32| -> u64 {
+            let t = t as u64;
+            if t == 0 || n.div_ceil(t) < parts as u64 {
+                0
+            } else if n % t == 0 {
+                t
+            } else {
+                n % t
+            }
+        };
+        let b = match *self {
+            ProcGrid::BlockCyclic { th, tw, .. } => {
+                min_cyclic(h, th, px).min(min_cyclic(w, tw, py))
+            }
+            _ => min_extent(h, px).min(min_extent(w, py)),
+        };
+        if b == 0 {
+            None
+        } else {
+            Some(b.min(u32::MAX as u64) as u32)
+        }
+    }
+
+    /// Pack processors onto `node_size`-wide nodes so that grid-adjacent
+    /// tiles share a node where possible: the proc grid is tiled by
+    /// near-square `node_size`-processor sub-blocks (degenerating to
+    /// contiguous runs on 1-D strips, where this equals
+    /// [`crate::sim::Hierarchical::contiguous`]).  `None` when the shape
+    /// does not resolve against `procs`.
+    pub fn node_map(&self, procs: u32, node_size: u32) -> Option<Vec<u32>> {
+        let (px, py) = self.resolve(procs).ok()?;
+        let node_size = node_size.max(1);
+        let (sx, sy) = if py == 1 {
+            (node_size, 1)
+        } else if px == 1 {
+            (1, node_size)
+        } else {
+            square_factor(node_size)
+        };
+        let tiles_per_row = py.div_ceil(sy);
+        Some(
+            (0..procs)
+                .map(|p| {
+                    let (qr, qc) = (p / py, p % py);
+                    (qr / sx) * tiles_per_row + qc / sy
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ProcId;
+
+    #[test]
+    fn square_factoring() {
+        assert_eq!(square_factor(1), (1, 1));
+        assert_eq!(square_factor(4), (2, 2));
+        assert_eq!(square_factor(6), (2, 3));
+        assert_eq!(square_factor(7), (1, 7));
+        assert_eq!(square_factor(12), (3, 4));
+    }
+
+    #[test]
+    fn parse_key_roundtrip() {
+        for tag in ["strip", "square", "3x3", "1x9", "2x4c3x2"] {
+            let g = ProcGrid::parse(tag).unwrap();
+            assert_eq!(g.key(), tag);
+        }
+        assert_eq!(ProcGrid::parse("auto").unwrap(), ProcGrid::Square);
+        assert!(ProcGrid::parse("3by3").is_err());
+        assert!(ProcGrid::parse("0x3").is_err());
+        assert!(ProcGrid::parse("3x").is_err());
+    }
+
+    #[test]
+    fn resolve_checks_the_processor_count() {
+        assert_eq!(ProcGrid::Strip.resolve(9).unwrap(), (9, 1));
+        assert_eq!(ProcGrid::Square.resolve(9).unwrap(), (3, 3));
+        assert_eq!(ProcGrid::Grid { px: 3, py: 3 }.resolve(9).unwrap(), (3, 3));
+        assert!(ProcGrid::Grid { px: 3, py: 3 }.resolve(8).is_err());
+        assert!(ProcGrid::Strip.resolve(0).is_err());
+    }
+
+    #[test]
+    fn block_distribution_matches_block2d() {
+        let g = ProcGrid::Grid { px: 2, py: 3 };
+        let d = g.distribution_2d(4, 6, 6).unwrap();
+        let reference = crate::stencil::block2d(4, 6, 2, 3);
+        for i in 0..24u64 {
+            assert_eq!(d.owner_of(i), reference.owner_of(i), "index {i}");
+        }
+    }
+
+    #[test]
+    fn block_cyclic_deals_tiles_round_robin() {
+        // 4x4 domain, 2x1 grid, 1x4-row tiles: rows 0,2 on proc 0; 1,3 on 1.
+        let g = ProcGrid::BlockCyclic { px: 2, py: 1, th: 1, tw: 4 };
+        let d = g.distribution_2d(4, 4, 2).unwrap();
+        for r in 0..4u64 {
+            for c in 0..4u64 {
+                assert_eq!(d.owner_of(r * 4 + c).0, (r % 2) as u32, "({r},{c})");
+            }
+        }
+        // The distribution is a partition (irregular() validated it), and
+        // both procs own half the domain.
+        assert_eq!(d.owned(ProcId(0)).len(), 8);
+        assert_eq!(d.owned(ProcId(1)).len(), 8);
+    }
+
+    #[test]
+    fn tile_bound_is_the_narrowest_extent() {
+        // 12x8 on a 2x2 grid: tiles 6x4 → bound 4.
+        assert_eq!(ProcGrid::Grid { px: 2, py: 2 }.tile_bound(4, 12, 8), Some(4));
+        // Strip of 9 over 18 rows: 2-row tiles.
+        assert_eq!(ProcGrid::Strip.tile_bound(9, 18, 18), Some(2));
+        // Uneven split: 10 rows over 3 procs → narrowest is 3.
+        assert_eq!(ProcGrid::Strip.tile_bound(3, 10, 10), Some(3));
+        // Cyclic: the dealt tile governs when the deal is exact...
+        assert_eq!(
+            ProcGrid::BlockCyclic { px: 2, py: 2, th: 3, tw: 5 }.tile_bound(4, 12, 20),
+            Some(3)
+        );
+        // ...and the ragged last tile governs when it is not: 13 rows in
+        // 3-row tiles leaves a 1-row remainder.
+        assert_eq!(
+            ProcGrid::BlockCyclic { px: 2, py: 1, th: 3, tw: 13 }.tile_bound(2, 13, 13),
+            Some(1)
+        );
+        // A deal with fewer tiles than proc rows starves a processor.
+        assert_eq!(
+            ProcGrid::BlockCyclic { px: 2, py: 1, th: 4, tw: 12 }.tile_bound(2, 2, 12),
+            None
+        );
+        // More procs than rows: some tile is empty.
+        assert_eq!(ProcGrid::Strip.tile_bound(8, 4, 4), None);
+        assert_eq!(ProcGrid::Grid { px: 2, py: 2 }.tile_bound(5, 8, 8), None);
+    }
+
+    #[test]
+    fn block_cyclic_starving_deals_are_rejected() {
+        // Both grid rows need a tile: 2 domain rows in 4-row tiles is one
+        // tile for proc-row 0 and nothing for proc-row 1.
+        let g = ProcGrid::BlockCyclic { px: 2, py: 1, th: 4, tw: 12 };
+        let err = g.distribution_2d(2, 12, 2).unwrap_err();
+        assert!(err.contains("without a tile"), "{err}");
+        // The same shape on a tall enough domain is fine.
+        assert!(g.distribution_2d(8, 12, 2).is_ok());
+    }
+
+    #[test]
+    fn node_map_on_strips_is_contiguous() {
+        let map = ProcGrid::Strip.node_map(6, 2).unwrap();
+        assert_eq!(map, vec![0, 0, 1, 1, 2, 2]);
+        // Column strip packs along the column.
+        let map = ProcGrid::Grid { px: 1, py: 6 }.node_map(6, 3).unwrap();
+        assert_eq!(map, vec![0, 0, 0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn node_map_on_grids_keeps_tile_rows_together() {
+        // 3x3 grid, 3-proc nodes → one proc-grid row per node.
+        let map = ProcGrid::Grid { px: 3, py: 3 }.node_map(9, 3).unwrap();
+        assert_eq!(map, vec![0, 0, 0, 1, 1, 1, 2, 2, 2]);
+        // Every node holds at most node_size procs.
+        for (procs, size) in [(9u32, 2u32), (12, 4), (6, 3)] {
+            let g = ProcGrid::Square;
+            let map = g.node_map(procs, size).unwrap();
+            let mut counts = std::collections::BTreeMap::new();
+            for n in map {
+                *counts.entry(n).or_insert(0u32) += 1;
+            }
+            assert!(counts.values().all(|&k| k <= size), "{procs}/{size}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn node_map_rejects_unresolvable_shapes() {
+        assert!(ProcGrid::Grid { px: 3, py: 3 }.node_map(8, 2).is_none());
+    }
+}

@@ -1,0 +1,214 @@
+//! Partition quality: what a layout will cost before anything is
+//! simulated.
+//!
+//! [`PartitionQuality::evaluate`] scores an assignment against the
+//! dependence pattern it distributes.  The headline number is
+//! **edge cut in words** — distinct `(value, consumer part)` pairs across
+//! the cut — because that is *exactly* what one level of a naive exchange
+//! sends (each owner sends a needed value once per consuming peer), so
+//! the metric ties directly to the simulator's message accounting: a
+//! naive `m`-step plan moves `m × edge_cut_words` words, asserted in
+//! `tests/partition_matrix.rs`.
+
+use crate::stencil::CsrMatrix;
+use std::collections::HashSet;
+
+/// Quality report for one partition of a dependence pattern.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionQuality {
+    /// Number of parts the assignment targets.
+    pub parts: u32,
+    /// Max part size / mean part size (1.0 = perfect balance).
+    pub imbalance: f64,
+    /// Nonzeros whose row and column land in different parts.
+    pub edge_cut_nnz: usize,
+    /// Distinct `(value, consumer part)` pairs across the cut — the words
+    /// one naive exchange level sends.
+    pub edge_cut_words: usize,
+    /// Ordered peer pairs that communicate — the messages one naive
+    /// exchange level posts.
+    pub message_pairs: usize,
+    /// Max over parts of the distinct peers it receives values from.
+    pub max_neighbors: usize,
+    /// Total nonzeros (for normalizing).
+    pub nnz: usize,
+}
+
+impl PartitionQuality {
+    /// Score `assign` against the pattern of `a`.
+    pub fn evaluate(a: &CsrMatrix, assign: &[u32], nparts: u32) -> PartitionQuality {
+        assert_eq!(assign.len(), a.n, "one part per matrix row");
+        assert!(nparts > 0);
+        let mut sizes = vec![0usize; nparts as usize];
+        for &p in assign {
+            sizes[p as usize] += 1;
+        }
+        let mean = a.n as f64 / nparts as f64;
+        let imbalance = sizes.iter().copied().max().unwrap_or(0) as f64 / mean.max(1e-12);
+
+        let mut cut_nnz = 0usize;
+        let mut words: HashSet<(u32, u32)> = HashSet::new(); // (value, consumer part)
+        let mut pairs: HashSet<(u32, u32)> = HashSet::new(); // (owner part, consumer part)
+        for r in 0..a.n {
+            let pr = assign[r];
+            for &c in a.row_cols(r) {
+                let pc = assign[c as usize];
+                if pc != pr {
+                    cut_nnz += 1;
+                    words.insert((c, pr));
+                    pairs.insert((pc, pr));
+                }
+            }
+        }
+        let mut in_neighbors = vec![0usize; nparts as usize];
+        for &(_, to) in &pairs {
+            in_neighbors[to as usize] += 1;
+        }
+        PartitionQuality {
+            parts: nparts,
+            imbalance,
+            edge_cut_nnz: cut_nnz,
+            edge_cut_words: words.len(),
+            message_pairs: pairs.len(),
+            max_neighbors: in_neighbors.iter().copied().max().unwrap_or(0),
+            nnz: a.nnz(),
+        }
+    }
+
+    /// Fraction of dependencies that cross parts.
+    pub fn cut_fraction(&self) -> f64 {
+        self.edge_cut_nnz as f64 / self.nnz.max(1) as f64
+    }
+
+    /// One-line human-readable report.
+    pub fn summary(&self) -> String {
+        format!(
+            "cut {} words / {} nnz ({:.1}% of nnz), imbalance {:.3}, \
+             max {} neighbors, {} msgs/level",
+            self.edge_cut_words,
+            self.edge_cut_nnz,
+            self.cut_fraction() * 100.0,
+            self.imbalance,
+            self.max_neighbors,
+            self.message_pairs,
+        )
+    }
+}
+
+/// One row of the `partition` CLI's `BENCH_partition.json`: a (layout,
+/// wire) cell pairing the static quality report with the simulated
+/// makespan.
+#[derive(Debug, Clone)]
+pub struct PartitionRow {
+    pub workload: String,
+    /// Layout tag: a [`super::ProcGrid::key`] or [`super::Partitioner::key`].
+    pub layout: String,
+    /// Wire identity ([`crate::sim::NetworkKind::key`]).
+    pub network: String,
+    pub makespan: f64,
+    pub messages: usize,
+    pub words: usize,
+    pub edge_cut_words: usize,
+    pub edge_cut_nnz: usize,
+    pub imbalance: f64,
+    pub max_neighbors: usize,
+}
+
+/// Render partition rows as the `BENCH_partition.json` document (same
+/// shape family as [`crate::sim::sweep::to_json`]).
+pub fn rows_to_json(tag: &str, rows: &[PartitionRow]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"partition\": {tag:?},\n  \"cells\": [\n"));
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": {:?}, \"layout\": {:?}, \"network\": {:?}, \
+             \"makespan\": {}, \"messages\": {}, \"words\": {}, \
+             \"edge_cut_words\": {}, \"edge_cut_nnz\": {}, \"imbalance\": {}, \
+             \"max_neighbors\": {}}}{}",
+            r.workload,
+            r.layout,
+            r.network,
+            r.makespan,
+            r.messages,
+            r.words,
+            r.edge_cut_words,
+            r.edge_cut_nnz,
+            r.imbalance,
+            r.max_neighbors,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::spmv::row_block;
+
+    #[test]
+    fn chain_cut_counts_words_and_pairs() {
+        // 8-point chain split in two: one cut edge, both directions.
+        let a = CsrMatrix::laplace1d(8);
+        let q = PartitionQuality::evaluate(&a, &row_block(8, 2), 2);
+        assert_eq!(q.edge_cut_nnz, 2);
+        // Each side needs exactly one foreign value.
+        assert_eq!(q.edge_cut_words, 2);
+        assert_eq!(q.message_pairs, 2);
+        assert_eq!(q.max_neighbors, 1);
+        assert!((q.imbalance - 1.0).abs() < 1e-9);
+        assert!((q.cut_fraction() - 2.0 / 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn words_deduplicate_per_consumer_not_per_nnz() {
+        // Star: rows 1..4 all read value 0 (and 0 reads them back).
+        let rows = vec![
+            vec![(0u32, 1.0f32), (1, 1.0), (2, 1.0), (3, 1.0)],
+            vec![(0, 1.0), (1, 1.0)],
+            vec![(0, 1.0), (2, 1.0)],
+            vec![(0, 1.0), (3, 1.0)],
+        ];
+        let a = CsrMatrix::from_rows(rows);
+        // 0 alone in part 0; 1,2,3 in part 1.
+        let assign = vec![0u32, 1, 1, 1];
+        let q = PartitionQuality::evaluate(&a, &assign, 2);
+        assert_eq!(q.edge_cut_nnz, 6);
+        // Part 1 needs value 0 once; part 0 needs values 1, 2, 3.
+        assert_eq!(q.edge_cut_words, 4);
+        assert_eq!(q.message_pairs, 2);
+        assert_eq!(q.max_neighbors, 1);
+    }
+
+    #[test]
+    fn imbalance_reports_max_over_mean() {
+        let a = CsrMatrix::laplace1d(6);
+        let assign = vec![0u32, 0, 0, 0, 1, 1]; // 4 vs 2, mean 3
+        let q = PartitionQuality::evaluate(&a, &assign, 2);
+        assert!((q.imbalance - 4.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_shape() {
+        let rows = vec![PartitionRow {
+            workload: "spmv".into(),
+            layout: "rcb".into(),
+            network: "hier(node=2,intra=0.1)".into(),
+            makespan: 123.5,
+            messages: 6,
+            words: 42,
+            edge_cut_words: 14,
+            edge_cut_nnz: 28,
+            imbalance: 1.05,
+            max_neighbors: 3,
+        }];
+        let json = rows_to_json("smoke", &rows);
+        assert!(json.contains("\"partition\": \"smoke\""));
+        assert!(json.contains("\"layout\": \"rcb\""));
+        assert!(json.contains("\"edge_cut_words\": 14"));
+        assert!(!json.contains("},\n  ]"));
+        assert_eq!(json.matches("\"workload\"").count(), rows.len());
+    }
+}

@@ -1,0 +1,186 @@
+//! Processor grids and graph partitioning as a first-class layer.
+//!
+//! The paper's IMP formalism derives task graphs *from data
+//! distributions* — yet until this subsystem every workload distributed
+//! over a 1-D strip of processors, hardcoded.  This module turns "how is
+//! the data laid out" into a searchable dimension:
+//!
+//! * [`grid`](ProcGrid) — structured shapes for stencil domains: 1-D
+//!   strips, explicit/most-square 2-D `px × py` grids, block and
+//!   block-cyclic tilings, plus the tile-geometry bound on the §3 block
+//!   factor and grid-aware proc→node packings for the
+//!   [`crate::sim::Hierarchical`] wire;
+//! * [`spmv`](Partitioner) — irregular partitioners for SpMV/CG row
+//!   spaces: row-block baseline, recursive coordinate bisection, greedy
+//!   edge-cut refinement;
+//! * [`metrics`](PartitionQuality) — the quality report (edge cut in
+//!   words, load imbalance, max neighbor count) whose word count is
+//!   exactly what a naive exchange level sends.
+//!
+//! A [`Partitioning`] names either kind of layout.  It flows through the
+//! stack as:
+//!
+//! ```text
+//! Workload::partitioning (hint) ──┐
+//! Pipeline::partitioning (override) ─→ Workload::build_graph_with → TaskGraph
+//!                                   │
+//!             tune::TuningSpace::layouts (search axis, Candidate::layout)
+//!                                   │
+//!             sim::NetworkKind::build_for (grid-aware hierarchical wire)
+//! ```
+//!
+//! surfaced as the `partition` CLI subcommand, `figure f10`, and the
+//! `partition_matrix` integration test.
+
+pub mod grid;
+pub mod metrics;
+pub mod spmv;
+
+pub use grid::{square_factor, ProcGrid};
+pub use metrics::{rows_to_json, PartitionQuality, PartitionRow};
+pub use spmv::{
+    banded_random, bfs_coords, greedy_refine, grid_coords, rcb, rcb_with_coords, row_block,
+    to_distribution, Partitioner,
+};
+
+use crate::imp::Distribution;
+use crate::stencil::CsrMatrix;
+
+/// How a workload's index space is laid out across processors: a
+/// structured [`ProcGrid`] (stencil domains) or an irregular
+/// [`Partitioner`] (SpMV/CG row spaces).
+///
+/// The default — a 1-D strip — is what every workload did before this
+/// subsystem existed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Partitioning {
+    /// Structured processor-grid layout.
+    Grid(ProcGrid),
+    /// Irregular graph-partitioned layout.
+    Graph(Partitioner),
+}
+
+impl Default for Partitioning {
+    fn default() -> Self {
+        Partitioning::Grid(ProcGrid::Strip)
+    }
+}
+
+impl Partitioning {
+    /// Identity tag ("strip", "3x3", "rcb", ...) — grid and partitioner
+    /// key spaces are disjoint, so the tag alone round-trips through
+    /// [`Partitioning::parse`].
+    pub fn key(&self) -> String {
+        match self {
+            Partitioning::Grid(g) => g.key(),
+            Partitioning::Graph(p) => p.key().to_string(),
+        }
+    }
+
+    /// Parse a layout tag: partitioner names first, grid shapes second.
+    pub fn parse(s: &str) -> Result<Partitioning, String> {
+        if let Ok(p) = Partitioner::parse(s) {
+            return Ok(Partitioning::Graph(p));
+        }
+        ProcGrid::parse(s).map(Partitioning::Grid).map_err(|_| {
+            format!(
+                "unknown layout {s:?} (strip|square|PXxPY|PXxPYcTHxTW|rowblock|rcb|rcb+refine)"
+            )
+        })
+    }
+}
+
+/// Per-index owner vector of a distribution — the `assign` form the
+/// [`PartitionQuality`] metrics consume.
+pub fn assignment_of(dist: &Distribution) -> Vec<u32> {
+    (0..dist.size()).map(|i| dist.owner_of(i).0).collect()
+}
+
+/// Distribution of an irregular workload's row space under `layout`: a
+/// graph [`Partitioner`] applies directly; a strip degenerates to the
+/// row-block baseline; any other grid shape is rejected (a 2-D processor
+/// grid needs a structured domain).
+pub fn graph_distribution(
+    a: &CsrMatrix,
+    procs: u32,
+    layout: &Partitioning,
+) -> Result<Distribution, String> {
+    match layout {
+        Partitioning::Graph(p) => Ok(p.distribution(a, procs)),
+        Partitioning::Grid(ProcGrid::Strip) => Ok(Distribution::block(a.n as u64, procs)),
+        Partitioning::Grid(g) => Err(format!(
+            "grid {} needs a structured domain; partition irregular workloads with \
+             rowblock|rcb|rcb+refine",
+            g.key()
+        )),
+    }
+}
+
+/// The grid layout axis for `procs` processors: the strip baseline plus
+/// every 2-D `px × py` factorization — what the tuner's layout dimension
+/// and the `partition` CLI sweep over.
+pub fn grid_axis(procs: u32) -> Vec<Partitioning> {
+    let mut v = vec![Partitioning::Grid(ProcGrid::Strip)];
+    for px in 1..=procs {
+        if procs % px != 0 || px == procs {
+            continue; // px == procs is the strip again
+        }
+        v.push(Partitioning::Grid(ProcGrid::Grid { px, py: procs / px }));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_keys_roundtrip() {
+        for tag in ["strip", "square", "3x3", "2x2c2x2", "rowblock", "rcb", "rcb+refine"] {
+            let l = Partitioning::parse(tag).unwrap();
+            assert_eq!(l.key(), tag);
+        }
+        assert!(Partitioning::parse("hilbert").is_err());
+        assert_eq!(Partitioning::default(), Partitioning::Grid(ProcGrid::Strip));
+    }
+
+    #[test]
+    fn assignment_of_matches_owner_of() {
+        let d = Distribution::block_cyclic(12, 3, 2);
+        let assign = assignment_of(&d);
+        for i in 0..12u64 {
+            assert_eq!(assign[i as usize], d.owner_of(i).0);
+        }
+    }
+
+    #[test]
+    fn graph_distribution_accepts_partitioners_and_strips_only() {
+        let a = CsrMatrix::laplace1d(12);
+        let strip = graph_distribution(&a, 3, &Partitioning::default()).unwrap();
+        let rowblock =
+            graph_distribution(&a, 3, &Partitioning::Graph(Partitioner::RowBlock)).unwrap();
+        for i in 0..12u64 {
+            assert_eq!(strip.owner_of(i), rowblock.owner_of(i));
+        }
+        let err = graph_distribution(
+            &a,
+            4,
+            &Partitioning::Grid(ProcGrid::Grid { px: 2, py: 2 }),
+        )
+        .unwrap_err();
+        assert!(err.contains("structured domain"), "{err}");
+    }
+
+    #[test]
+    fn grid_axis_spans_strip_and_every_factorization() {
+        let axis = grid_axis(9);
+        assert_eq!(axis[0], Partitioning::Grid(ProcGrid::Strip));
+        assert!(axis.contains(&Partitioning::Grid(ProcGrid::Grid { px: 3, py: 3 })));
+        assert!(axis.contains(&Partitioning::Grid(ProcGrid::Grid { px: 1, py: 9 })));
+        // The 9x1 grid IS the strip — not listed twice.
+        assert!(!axis.contains(&Partitioning::Grid(ProcGrid::Grid { px: 9, py: 1 })));
+        assert_eq!(axis.len(), 3);
+        // A prime count still has the strip and the column strip.
+        assert_eq!(grid_axis(7).len(), 2);
+    }
+}

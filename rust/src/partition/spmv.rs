@@ -1,0 +1,491 @@
+//! Irregular partitioners for SpMV/CG row spaces.
+//!
+//! The transformation is distribution-agnostic, but *which* distribution
+//! it starts from decides how much halo traffic exists to avoid.  Three
+//! partitioners ship, in increasing awareness of the sparsity pattern:
+//!
+//! * [`row_block`] — contiguous row blocks, the seed baseline;
+//! * [`rcb`] — recursive coordinate bisection: recursively split the
+//!   widest coordinate direction at the proportional median.  Real
+//!   geometry goes in via [`rcb_with_coords`] / [`grid_coords`]; without
+//!   it, [`bfs_coords`] derives pseudo-coordinates from two BFS sweeps;
+//! * [`greedy_refine`] — a KL/FM-lite edge-cut refiner: greedy
+//!   gain-positive vertex moves under a balance bound, so any starting
+//!   partition (including row blocks or RCB) can only get better.
+//!
+//! [`Partitioner`] names the combinations the CLI, the tuning layout
+//! axis, and the [`crate::pipeline::Workload`] implementations use.
+
+use crate::imp::{block_bounds, Distribution, IndexSet};
+use crate::stencil::CsrMatrix;
+use std::collections::VecDeque;
+
+/// Balance bound [`Partitioner::RcbRefined`] hands to [`greedy_refine`]:
+/// no part may grow beyond `ceil(1.1 × mean)` vertices.
+pub const DEFAULT_IMBALANCE: f64 = 1.1;
+
+/// A named graph-partitioning recipe for an irregular workload's rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Partitioner {
+    /// Contiguous row blocks (the seed default; identical owners to
+    /// [`Distribution::block`]).
+    RowBlock,
+    /// Recursive coordinate bisection over BFS pseudo-coordinates.
+    Rcb,
+    /// [`Partitioner::Rcb`] polished by [`greedy_refine`].
+    RcbRefined,
+}
+
+impl Partitioner {
+    /// Every partitioner, in baseline-first order.
+    pub fn all() -> Vec<Partitioner> {
+        vec![Partitioner::RowBlock, Partitioner::Rcb, Partitioner::RcbRefined]
+    }
+
+    /// Parse a CLI tag: `rowblock`, `rcb`, `rcb+refine`.
+    pub fn parse(s: &str) -> Result<Partitioner, String> {
+        match s.trim() {
+            "rowblock" | "rows" | "block" => Ok(Partitioner::RowBlock),
+            "rcb" => Ok(Partitioner::Rcb),
+            "rcb+refine" | "refined" => Ok(Partitioner::RcbRefined),
+            other => Err(format!(
+                "unknown partitioner {other:?} (rowblock|rcb|rcb+refine)"
+            )),
+        }
+    }
+
+    /// Identity tag, the inverse of [`Partitioner::parse`].
+    pub fn key(&self) -> &'static str {
+        match self {
+            Partitioner::RowBlock => "rowblock",
+            Partitioner::Rcb => "rcb",
+            Partitioner::RcbRefined => "rcb+refine",
+        }
+    }
+
+    /// Partition `a`'s rows into `nparts`; returns the per-row part
+    /// assignment.  Deterministic for a given matrix.
+    pub fn assign(&self, a: &CsrMatrix, nparts: u32) -> Vec<u32> {
+        match self {
+            Partitioner::RowBlock => row_block(a.n, nparts),
+            Partitioner::Rcb => rcb(a, nparts),
+            Partitioner::RcbRefined => {
+                let mut assign = rcb(a, nparts);
+                greedy_refine(a, &mut assign, nparts, DEFAULT_IMBALANCE, 8);
+                assign
+            }
+        }
+    }
+
+    /// The assignment as an IMP [`Distribution`] ([`row_block`] keeps the
+    /// compact [`Distribution::block`] representation).
+    pub fn distribution(&self, a: &CsrMatrix, nparts: u32) -> Distribution {
+        match self {
+            Partitioner::RowBlock => Distribution::block(a.n as u64, nparts),
+            _ => to_distribution(&self.assign(a, nparts), nparts),
+        }
+    }
+}
+
+/// Contiguous row blocks over `n` rows (the baseline; owner-identical to
+/// [`Distribution::block`]).
+pub fn row_block(n: usize, nparts: u32) -> Vec<u32> {
+    assert!(nparts > 0);
+    let mut assign = vec![0u32; n];
+    for p in 0..nparts {
+        let (lo, hi) = block_bounds(n as u64, nparts, p);
+        for v in lo..hi {
+            assign[v as usize] = p;
+        }
+    }
+    assign
+}
+
+/// Recursive coordinate bisection with [`bfs_coords`] pseudo-coordinates.
+pub fn rcb(a: &CsrMatrix, nparts: u32) -> Vec<u32> {
+    rcb_with_coords(a, nparts, &bfs_coords(a))
+}
+
+/// Recursive coordinate bisection over explicit per-vertex coordinates:
+/// recursively split the widest coordinate direction of the region at the
+/// proportional point, so `nparts` need not be a power of two.
+/// Deterministic (coordinate ties resolve by vertex index); part sizes
+/// are balanced to within one vertex per bisection level.
+pub fn rcb_with_coords(a: &CsrMatrix, nparts: u32, coords: &[(f64, f64)]) -> Vec<u32> {
+    assert!(nparts > 0);
+    assert_eq!(coords.len(), a.n, "one coordinate pair per matrix row");
+    let mut assign = vec![0u32; a.n];
+    let verts: Vec<u32> = (0..a.n as u32).collect();
+    rcb_recurse(coords, verts, 0, nparts, &mut assign);
+    assign
+}
+
+fn rcb_recurse(
+    coords: &[(f64, f64)],
+    mut verts: Vec<u32>,
+    first: u32,
+    parts: u32,
+    assign: &mut [u32],
+) {
+    if parts == 1 {
+        for &v in &verts {
+            assign[v as usize] = first;
+        }
+        return;
+    }
+    let left_parts = parts / 2;
+    let left_target = verts.len() * left_parts as usize / parts as usize;
+    // Cut across the widest coordinate direction of this region.
+    let spread = |pick: fn(&(f64, f64)) -> f64| -> f64 {
+        let lo = verts.iter().map(|&v| pick(&coords[v as usize])).fold(f64::INFINITY, f64::min);
+        let hi =
+            verts.iter().map(|&v| pick(&coords[v as usize])).fold(f64::NEG_INFINITY, f64::max);
+        hi - lo
+    };
+    let along_x = spread(|c| c.0) >= spread(|c| c.1);
+    verts.sort_by(|&u, &v| {
+        let (ku, kv) = if along_x {
+            (coords[u as usize].0, coords[v as usize].0)
+        } else {
+            (coords[u as usize].1, coords[v as usize].1)
+        };
+        ku.partial_cmp(&kv).unwrap_or(std::cmp::Ordering::Equal).then(u.cmp(&v))
+    });
+    let right = verts.split_off(left_target);
+    rcb_recurse(coords, verts, first, left_parts, assign);
+    rcb_recurse(coords, right, first + left_parts, parts - left_parts, assign);
+}
+
+/// Geometric coordinates for a row-major `h × w` grid domain — what
+/// [`rcb_with_coords`] wants when the matrix came from a mesh.
+pub fn grid_coords(h: usize, w: usize) -> Vec<(f64, f64)> {
+    assert!(w > 0);
+    (0..h * w).map(|k| ((k / w) as f64, (k % w) as f64)).collect()
+}
+
+/// BFS pseudo-coordinates for matrices without geometry: coordinate 0 is
+/// the BFS distance from a peripheral vertex (found by a double sweep),
+/// coordinate 1 the distance from the opposite end.  Crude — grid-shaped
+/// patterns get diagonal-ish axes — but enough for the bisection to find
+/// short cut directions; pass real geometry via [`rcb_with_coords`] when
+/// it exists.
+pub fn bfs_coords(a: &CsrMatrix) -> Vec<(f64, f64)> {
+    if a.n == 0 {
+        return Vec::new();
+    }
+    let d0 = bfs_distances(a, 0);
+    let s = farthest(&d0);
+    let ds = bfs_distances(a, s);
+    let t = farthest(&ds);
+    let dt = bfs_distances(a, t);
+    ds.iter().zip(&dt).map(|(&x, &y)| (x as f64, y as f64)).collect()
+}
+
+fn bfs_distances(a: &CsrMatrix, start: usize) -> Vec<u32> {
+    let mut dist = vec![u32::MAX; a.n];
+    let mut queue = VecDeque::new();
+    dist[start] = 0;
+    queue.push_back(start);
+    let mut max_d = 0u32;
+    loop {
+        while let Some(v) = queue.pop_front() {
+            let d = dist[v];
+            max_d = max_d.max(d);
+            for &c in a.row_cols(v) {
+                let c = c as usize;
+                if dist[c] == u32::MAX {
+                    dist[c] = d + 1;
+                    queue.push_back(c);
+                }
+            }
+        }
+        // Disconnected leftovers restart past the current frontier, so
+        // separate components land in separate coordinate ranges.
+        match dist.iter().position(|&d| d == u32::MAX) {
+            Some(v) => {
+                dist[v] = max_d + 1;
+                queue.push_back(v);
+            }
+            None => break,
+        }
+    }
+    dist
+}
+
+fn farthest(dist: &[u32]) -> usize {
+    let mut best = 0usize;
+    for (v, &d) in dist.iter().enumerate() {
+        if d > dist[best] {
+            best = v;
+        }
+    }
+    best
+}
+
+/// Greedy edge-cut refinement (KL/FM-lite): sweep the vertices in index
+/// order, moving each to the neighbouring part that reduces the cut the
+/// most, subject to balance — no part grows beyond
+/// `ceil(max_imbalance × n / nparts)` vertices or shrinks to empty — for
+/// up to `max_passes` passes or until a pass makes no move.
+/// Deterministic, and never increases the cut (moves need strictly
+/// positive gain).  Gains assume a structurally symmetric pattern (true
+/// of every matrix in this repository); on an asymmetric one the result
+/// is still a valid partition, the gains merely approximate.
+pub fn greedy_refine(
+    a: &CsrMatrix,
+    assign: &mut [u32],
+    nparts: u32,
+    max_imbalance: f64,
+    max_passes: usize,
+) {
+    assert_eq!(assign.len(), a.n);
+    if nparts <= 1 || a.n == 0 {
+        return;
+    }
+    let cap = ((a.n as f64 / nparts as f64) * max_imbalance).ceil().max(1.0) as usize;
+    let mut sizes = vec![0usize; nparts as usize];
+    for &p in assign.iter() {
+        sizes[p as usize] += 1;
+    }
+    let mut links: Vec<(u32, usize)> = Vec::new();
+    for _ in 0..max_passes {
+        let mut moved = false;
+        for v in 0..a.n {
+            let from = assign[v];
+            if sizes[from as usize] <= 1 {
+                continue;
+            }
+            links.clear();
+            for &c in a.row_cols(v) {
+                let c = c as usize;
+                if c == v {
+                    continue;
+                }
+                let p = assign[c];
+                match links.iter_mut().find(|(q, _)| *q == p) {
+                    Some((_, k)) => *k += 1,
+                    None => links.push((p, 1)),
+                }
+            }
+            let own = links.iter().find(|(q, _)| *q == from).map(|&(_, k)| k).unwrap_or(0);
+            // Best strictly-improving, balance-respecting destination;
+            // ties resolve to the smallest part id for determinism.
+            let mut best: Option<(u32, usize)> = None;
+            for &(q, k) in &links {
+                if q == from || k <= own || sizes[q as usize] >= cap {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((bq, bk)) => k > bk || (k == bk && q < bq),
+                };
+                if better {
+                    best = Some((q, k));
+                }
+            }
+            if let Some((q, _)) = best {
+                assign[v] = q;
+                sizes[from as usize] -= 1;
+                sizes[q as usize] += 1;
+                moved = true;
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+}
+
+/// Wrap an assignment vector as an IMP [`Distribution`] (validated as a
+/// partition of the row space).
+pub fn to_distribution(assign: &[u32], nparts: u32) -> Distribution {
+    let mut parts: Vec<Vec<u64>> = vec![Vec::new(); nparts as usize];
+    for (v, &p) in assign.iter().enumerate() {
+        parts[p as usize].push(v as u64);
+    }
+    Distribution::irregular(
+        assign.len() as u64,
+        parts.into_iter().map(IndexSet::from_indices).collect(),
+    )
+    .expect("assignment is a partition")
+}
+
+/// Deterministic banded+random test matrix: the five-point band of an
+/// `h × w` grid plus `chords` symmetric pseudo-random long-range entries
+/// (fixed-seed LCG) — the irregular stress case the partition benches
+/// and figure 10 run on.
+pub fn banded_random(h: usize, w: usize, chords: u32) -> CsrMatrix {
+    let n = h * w;
+    assert!(n > 1);
+    let band = CsrMatrix::laplace2d(h, w);
+    let mut rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|i| band.row_cols(i).iter().zip(band.row_vals(i)).map(|(&c, &v)| (c, v)).collect())
+        .collect();
+    let mut state: u64 = 0x243F_6A88_85A3_08D3;
+    let mut next = || {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (state >> 33) as usize
+    };
+    let mut placed = 0u32;
+    let mut attempts = 0u32;
+    while placed < chords && attempts < chords * 20 {
+        attempts += 1;
+        let u = next() % n;
+        let v = next() % n;
+        if u == v || rows[u].iter().any(|&(c, _)| c as usize == v) {
+            continue;
+        }
+        rows[u].push((v as u32, -0.125));
+        rows[v].push((u as u32, -0.125));
+        placed += 1;
+    }
+    CsrMatrix::from_rows(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_partition(assign: &[u32], nparts: u32) {
+        assert!(assign.iter().all(|&p| p < nparts));
+        let mut sizes = vec![0usize; nparts as usize];
+        for &p in assign {
+            sizes[p as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s > 0), "{sizes:?}");
+    }
+
+    #[test]
+    fn row_block_matches_block_distribution() {
+        let assign = row_block(10, 3);
+        let d = Distribution::block(10, 3);
+        for v in 0..10u64 {
+            assert_eq!(assign[v as usize], d.owner_of(v).0);
+        }
+    }
+
+    #[test]
+    fn rcb_1d_chain_gives_contiguous_halves() {
+        let a = CsrMatrix::laplace1d(16);
+        let assign = rcb(&a, 2);
+        is_partition(&assign, 2);
+        // A chain split at the middle: each half is one contiguous run.
+        assert!(assign[..8].iter().all(|&p| p == assign[0]));
+        assert!(assign[8..].iter().all(|&p| p == assign[8]));
+        assert_ne!(assign[0], assign[8]);
+    }
+
+    #[test]
+    fn rcb_with_grid_coords_beats_row_blocks_on_wide_grids() {
+        use crate::partition::PartitionQuality;
+        let (h, w) = (4usize, 32usize);
+        let a = CsrMatrix::laplace2d(h, w);
+        let coords = grid_coords(h, w);
+        let bis = rcb_with_coords(&a, 4, &coords);
+        is_partition(&bis, 4);
+        let blk = row_block(a.n, 4);
+        let qb = PartitionQuality::evaluate(&a, &bis, 4);
+        let qn = PartitionQuality::evaluate(&a, &blk, 4);
+        assert!(
+            qb.edge_cut_nnz < qn.edge_cut_nnz,
+            "rcb {} vs rowblock {}",
+            qb.edge_cut_nnz,
+            qn.edge_cut_nnz
+        );
+    }
+
+    #[test]
+    fn nonpow2_parts_stay_balanced() {
+        let a = CsrMatrix::laplace1d(30);
+        for part in Partitioner::all() {
+            let assign = part.assign(&a, 3);
+            is_partition(&assign, 3);
+            let q = crate::partition::PartitionQuality::evaluate(&a, &assign, 3);
+            assert!(q.imbalance < 1.2, "{}: {q:?}", part.key());
+        }
+    }
+
+    #[test]
+    fn refine_only_reduces_the_cut_and_respects_balance() {
+        let a = banded_random(6, 24, 8);
+        for start in [Partitioner::RowBlock, Partitioner::Rcb] {
+            let base = start.assign(&a, 4);
+            let q0 = crate::partition::PartitionQuality::evaluate(&a, &base, 4);
+            let mut refined = base.clone();
+            greedy_refine(&a, &mut refined, 4, DEFAULT_IMBALANCE, 8);
+            is_partition(&refined, 4);
+            let q1 = crate::partition::PartitionQuality::evaluate(&a, &refined, 4);
+            assert!(
+                q1.edge_cut_nnz <= q0.edge_cut_nnz,
+                "{}: refined {} > start {}",
+                start.key(),
+                q1.edge_cut_nnz,
+                q0.edge_cut_nnz
+            );
+            let cap = ((a.n as f64 / 4.0) * DEFAULT_IMBALANCE).ceil();
+            assert!(q1.imbalance * (a.n as f64 / 4.0) <= cap + 1e-9, "{q1:?}");
+        }
+    }
+
+    #[test]
+    fn to_distribution_roundtrip() {
+        let a = CsrMatrix::laplace1d(12);
+        let assign = rcb(&a, 3);
+        let d = to_distribution(&assign, 3);
+        for v in 0..12u64 {
+            assert_eq!(d.owner_of(v).0, assign[v as usize]);
+        }
+    }
+
+    #[test]
+    fn transform_runs_on_partitioned_spmv() {
+        use crate::imp::Program;
+        use crate::transform::{check_schedule, communication_avoiding_default};
+        let a = CsrMatrix::laplace2d(6, 6);
+        for part in Partitioner::all() {
+            let d = part.distribution(&a, 4);
+            let g = Program::new(d).iterate("spmv", a.signature(), 3).unroll();
+            let s = communication_avoiding_default(&g);
+            check_schedule(&g, &s).unwrap_or_else(|v| panic!("{}: {v}", part.key()));
+        }
+    }
+
+    #[test]
+    fn disconnected_graph_partitions() {
+        // Two disjoint chains.
+        let rows: Vec<Vec<(u32, f32)>> = (0..8)
+            .map(|i| {
+                let mut r = vec![(i as u32, 2.0)];
+                if i % 4 > 0 {
+                    r.push((i as u32 - 1, -1.0));
+                }
+                if i % 4 < 3 {
+                    r.push((i as u32 + 1, -1.0));
+                }
+                r
+            })
+            .collect();
+        let a = CsrMatrix::from_rows(rows);
+        for part in Partitioner::all() {
+            is_partition(&part.assign(&a, 2), 2);
+        }
+    }
+
+    #[test]
+    fn banded_random_is_deterministic_and_symmetric() {
+        let a = banded_random(6, 24, 8);
+        let b = banded_random(6, 24, 8);
+        assert_eq!(a.rowptr, b.rowptr);
+        assert_eq!(a.colidx, b.colidx);
+        assert!(a.nnz() > CsrMatrix::laplace2d(6, 24).nnz(), "chords were placed");
+        // Structural symmetry (what greedy_refine's gains assume).
+        for r in 0..a.n {
+            for &c in a.row_cols(r) {
+                assert!(
+                    a.row_cols(c as usize).contains(&(r as u32)),
+                    "asymmetric entry ({r},{c})"
+                );
+            }
+        }
+    }
+}

@@ -52,6 +52,7 @@ pub use workloads::{
 
 use crate::coordinator::{run_and_verify_with, ValueSemantics};
 use crate::graph::TaskGraph;
+use crate::partition::Partitioning;
 use crate::sim::sweep::SweepInput;
 use crate::sim::{try_simulate, ExecPlan, Machine, NetworkKind, ScaledCost, TaskCostModel};
 use crate::transform::{communication_avoiding, CaSchedule, HaloMode, TransformOptions};
@@ -68,6 +69,36 @@ pub trait Workload {
 
     /// Derive the distributed task graph for `procs` processors.
     fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError>;
+
+    /// The data layout this workload distributes over by default — a
+    /// [`crate::partition::ProcGrid`] for structured domains, a
+    /// [`crate::partition::Partitioner`] for irregular ones.  The 1-D
+    /// strip default is what every workload did before the layout became
+    /// a first-class dimension.
+    fn partitioning(&self) -> Partitioning {
+        Partitioning::default()
+    }
+
+    /// Derive the graph under an explicit layout
+    /// ([`Pipeline::partitioning`] and the [`crate::tune`] layout axis
+    /// call this).  The default supports only the workload's own
+    /// [`Workload::partitioning`] hint and rejects everything else, so a
+    /// layout can never be silently ignored; workloads with a real
+    /// layout degree of freedom override it.
+    fn build_graph_with(
+        &self,
+        procs: u32,
+        layout: &Partitioning,
+    ) -> Result<TaskGraph, PipelineError> {
+        if *layout != self.partitioning() {
+            return Err(PipelineError::Graph(format!(
+                "{}: workload does not support the {} layout",
+                self.name(),
+                layout.key()
+            )));
+        }
+        self.build_graph(procs)
+    }
 
     /// Processor count used when the builder does not specify one.
     fn default_procs(&self) -> u32 {
@@ -153,6 +184,7 @@ pub struct Pipeline<W: Workload> {
     machine: Option<Machine>,
     network: NetworkKind,
     cost: Option<Arc<dyn TaskCostModel>>,
+    partitioning: Option<Partitioning>,
 }
 
 impl<W: Workload> Pipeline<W> {
@@ -167,6 +199,7 @@ impl<W: Workload> Pipeline<W> {
             machine: None,
             network: NetworkKind::AlphaBeta,
             cost: None,
+            partitioning: None,
         }
     }
 
@@ -241,6 +274,18 @@ impl<W: Workload> Pipeline<W> {
         self
     }
 
+    /// Data-layout override (default: the workload's own
+    /// [`Workload::partitioning`] hint) — a
+    /// [`crate::partition::ProcGrid`] shape for the 2-D stencils, a
+    /// [`crate::partition::Partitioner`] for SpMV/CG.  The graph is
+    /// derived from the chosen layout, and a Hierarchical wire maps its
+    /// processors onto nodes grid-aware (see
+    /// [`crate::sim::NetworkKind::build_for`]).
+    pub fn partitioning(mut self, layout: Partitioning) -> Self {
+        self.partitioning = Some(layout);
+        self
+    }
+
     /// The workload description this builder carries.
     pub fn workload(&self) -> &W {
         &self.workload
@@ -267,6 +312,26 @@ impl<W: Workload> Pipeline<W> {
         self.cost.as_ref()
     }
 
+    /// The layout override set with [`Pipeline::partitioning`], if any.
+    pub fn partitioning_config(&self) -> Option<Partitioning> {
+        self.partitioning
+    }
+
+    /// Resolved layout: the explicit override or the workload's own hint.
+    pub fn resolved_partitioning(&self) -> Partitioning {
+        self.partitioning.unwrap_or_else(|| self.workload.partitioning())
+    }
+
+    /// Build (once) the graph this pipeline would transform, ready to
+    /// share across many [`Pipeline::transform_on`] calls — the
+    /// [`crate::tune`] evaluator uses this so same-layout candidates stop
+    /// rebuilding the graph per evaluation.
+    pub fn build_graph_shared(&self) -> Result<Arc<TaskGraph>, PipelineError> {
+        let procs = self.resolved_procs();
+        let layout = self.resolved_partitioning();
+        Ok(Arc::new(self.workload.build_graph_with(procs, &layout)?))
+    }
+
     /// Let the [`crate::tune`] subsystem pick the configuration: search
     /// the (strategy × halo × block × procs) space with `tuner`, scoring
     /// every candidate on the event-driven engine under the configured
@@ -284,6 +349,9 @@ impl<W: Workload> Pipeline<W> {
         let chosen = outcome.chosen;
         let mut next = self.procs(chosen.procs).strategy(chosen.strategy).halo(chosen.halo);
         next.block = chosen.block;
+        if let Some(layout) = chosen.layout {
+            next = next.partitioning(layout);
+        }
         if let Some(machine) = next.machine {
             if machine.nprocs != chosen.procs {
                 next.machine = Some(Machine { nprocs: chosen.procs, ..machine });
@@ -298,8 +366,23 @@ impl<W: Workload> Pipeline<W> {
     /// superstep schedule is verified against Theorem 1 unless
     /// [`Pipeline::skip_check`] was requested.
     pub fn transform(self) -> Result<Transformed<W>, PipelineError> {
-        let procs = self.procs.unwrap_or_else(|| self.workload.default_procs());
-        let graph = Arc::new(self.workload.build_graph(procs)?);
+        let graph = self.build_graph_shared()?;
+        self.transform_on(graph)
+    }
+
+    /// [`Pipeline::transform`] against a prebuilt, `Arc`-shared graph —
+    /// skips the graph build but keeps everything else of the workload
+    /// (cost model, value semantics, words per value), unlike wrapping
+    /// the graph in a [`GraphWorkload`].  The graph must be distributed
+    /// over exactly the pipeline's resolved processor count.
+    pub fn transform_on(self, graph: Arc<TaskGraph>) -> Result<Transformed<W>, PipelineError> {
+        let procs = self.resolved_procs();
+        if graph.num_procs() != procs {
+            return Err(PipelineError::Graph(format!(
+                "prebuilt graph is distributed over {} procs but the pipeline resolves to {procs}",
+                graph.num_procs()
+            )));
+        }
         let depth = graph.num_levels().saturating_sub(1).max(1);
         let (plan, block) = match self.strategy {
             Strategy::Naive => (ExecPlan::naive(&graph), None),
@@ -320,6 +403,7 @@ impl<W: Workload> Pipeline<W> {
                 (plan, Some(b))
             }
         };
+        let layout = self.resolved_partitioning();
         let cost = self.cost.unwrap_or_else(|| self.workload.cost_model());
         Ok(Transformed {
             workload: self.workload,
@@ -331,6 +415,7 @@ impl<W: Workload> Pipeline<W> {
             machine: self.machine,
             network: self.network,
             cost,
+            layout,
             tune: None,
         })
     }
@@ -354,6 +439,25 @@ pub fn candidate_sweep_input<W: Workload + Clone>(
         p = p.halo(h);
     }
     Ok(p.transform()?.sweep_input())
+}
+
+/// [`candidate_sweep_input`] against a prebuilt graph
+/// ([`Pipeline::build_graph_shared`]) — the [`crate::tune`] evaluator's
+/// path, where every same-layout candidate of a tuning run shares one
+/// graph build instead of re-deriving it per evaluation.
+pub fn candidate_sweep_input_on<W: Workload + Clone>(
+    base: &Pipeline<W>,
+    graph: Arc<TaskGraph>,
+    strategy: Strategy,
+    block: Option<u32>,
+    halo: Option<HaloMode>,
+) -> Result<SweepInput, PipelineError> {
+    let mut p = base.clone().strategy(strategy);
+    p.block = block;
+    if let Some(h) = halo {
+        p = p.halo(h);
+    }
+    Ok(p.transform_on(graph)?.sweep_input())
 }
 
 /// The strategy family of sweep inputs from one base builder: naive,
@@ -389,6 +493,7 @@ pub struct Transformed<W: Workload> {
     machine: Option<Machine>,
     network: NetworkKind,
     cost: Arc<dyn TaskCostModel>,
+    layout: Partitioning,
     /// Set by [`Pipeline::autotune`]: why this configuration won.
     tune: Option<TuneReport>,
 }
@@ -396,6 +501,11 @@ pub struct Transformed<W: Workload> {
 impl<W: Workload> Transformed<W> {
     pub fn workload(&self) -> &W {
         &self.workload
+    }
+
+    /// The resolved data layout the graph was derived from.
+    pub fn partitioning(&self) -> Partitioning {
+        self.layout
     }
 
     /// The tuning verdict, when this pipeline came from
@@ -474,7 +584,7 @@ impl<W: Workload> Transformed<W> {
             beta: machine.beta * self.workload.words_per_value() as f64,
             ..*machine
         };
-        let mut network = self.network.build(&m);
+        let mut network = self.network.build_for(&m, Some(&self.layout));
         let r = try_simulate(&self.graph, &self.plan, &m, network.as_mut(), self.cost.as_ref(), false)
             .expect("pipeline-built plans are deadlock-free");
         let max_wait = r.proc_wait.iter().copied().fold(0.0, f64::max);
@@ -515,6 +625,7 @@ impl<W: Workload> Transformed<W> {
             plan: Arc::clone(&self.plan),
             cost: Arc::clone(&self.cost),
             words_per_value: self.workload.words_per_value(),
+            layout: Some(self.layout),
         }
     }
 
@@ -725,6 +836,58 @@ mod tests {
         let err =
             Pipeline::new(Heat1d::new(64, 8)).procs(2).autotune(&mut tuner).unwrap_err();
         assert!(matches!(err, PipelineError::Config(_)));
+    }
+
+    #[test]
+    fn transform_on_shares_a_prebuilt_graph_and_keeps_the_cost_model() {
+        let w = Spmv { matrix: CsrMatrix::laplace2d(5, 5), steps: 2 };
+        let base = Pipeline::new(w).procs(4);
+        let g = base.build_graph_shared().unwrap();
+        let t = base.clone().block(2).transform_on(Arc::clone(&g)).unwrap();
+        assert!(Arc::ptr_eq(&t.graph, &g), "the prebuilt graph must be shared, not rebuilt");
+        // Identical plan and cost model as the self-building path — the
+        // workload's RowFillCost survives, unlike a GraphWorkload wrap.
+        let mach = Machine::new(4, 2, 10.0, 0.1, 1.0);
+        let via_self = base.clone().block(2).transform().unwrap().simulate(&mach);
+        let via_shared = t.simulate(&mach);
+        assert_eq!(via_shared.time.value(), via_self.time.value());
+        assert_eq!(via_shared.words, via_self.words);
+        // A procs mismatch is rejected, not silently accepted.
+        let err = base.procs(2).transform_on(g).unwrap_err();
+        assert!(matches!(err, PipelineError::Graph(_)), "{err}");
+    }
+
+    #[test]
+    fn partitioning_override_flows_to_graph_and_reports() {
+        use crate::partition::{Partitioner, Partitioning, ProcGrid};
+        // heat2d: an explicit column-strip grid changes the distribution.
+        let base = Pipeline::new(Heat2d { h: 8, w: 8, steps: 2 }).procs(4);
+        let square = base.clone().transform().unwrap();
+        assert_eq!(square.partitioning(), Partitioning::Grid(ProcGrid::Square));
+        let strip = base
+            .clone()
+            .partitioning(Partitioning::Grid(ProcGrid::Strip))
+            .transform()
+            .unwrap();
+        assert_eq!(strip.partitioning(), Partitioning::Grid(ProcGrid::Strip));
+        // Same tasks, different halo traffic: a 2x2 grid cuts both ways.
+        assert_eq!(strip.stats().tasks, square.stats().tasks);
+        assert_ne!(strip.stats().words, square.stats().words);
+        strip.execute().unwrap();
+        // A layout the workload cannot honour is a graph error.
+        let err = base
+            .partitioning(Partitioning::Graph(Partitioner::Rcb))
+            .transform()
+            .unwrap_err();
+        assert!(matches!(err, PipelineError::Graph(_)), "{err}");
+        // Workloads without a layout dimension reject non-default layouts
+        // instead of silently ignoring them.
+        let err = Pipeline::new(Heat1d::new(32, 4))
+            .procs(2)
+            .partitioning(Partitioning::Grid(ProcGrid::Grid { px: 1, py: 2 }))
+            .transform()
+            .unwrap_err();
+        assert!(err.to_string().contains("does not support"), "{err}");
     }
 
     #[test]

@@ -7,9 +7,13 @@
 
 use super::{PipelineError, Workload};
 use crate::graph::{TaskGraph, TaskId};
-use crate::krylov::cg_program;
+use crate::imp::Distribution;
+use crate::krylov::cg_program_on;
+use crate::partition::{graph_distribution, Partitioner, Partitioning, ProcGrid};
 use crate::sim::TaskCostModel;
-use crate::stencil::{heat1d_program, heat2d_program, moore2d_program, spmv_program, CsrMatrix};
+use crate::stencil::{
+    heat1d_program, heat2d_program_on, moore2d_program_on, spmv_program_on, CsrMatrix,
+};
 use std::sync::Arc;
 
 /// Row-fill-proportional task cost: a task updating matrix row `i` costs
@@ -59,14 +63,31 @@ impl TaskCostModel for CgPhaseCost {
     }
 }
 
-/// Factor `procs` into the most square `px × py` grid (px ≤ py).
-fn grid_factor(procs: u32) -> (u32, u32) {
-    let mut px = (procs as f64).sqrt().floor() as u32;
-    while px > 1 && procs % px != 0 {
-        px -= 1;
+/// Resolve a structured layout into a 2-D grid distribution, with the
+/// workload-tagged feasibility errors the pipeline reports.
+fn grid2d_distribution(
+    name: &str,
+    layout: &Partitioning,
+    procs: u32,
+    h: u64,
+    w: u64,
+) -> Result<Distribution, PipelineError> {
+    let grid = match layout {
+        Partitioning::Grid(g) => *g,
+        Partitioning::Graph(p) => {
+            return Err(PipelineError::Graph(format!(
+                "{name}: graph partitioner {} needs an irregular workload; pick a ProcGrid",
+                p.key()
+            )))
+        }
+    };
+    let (px, py) = grid.resolve(procs).map_err(PipelineError::Graph)?;
+    if h < px as u64 || w < py as u64 {
+        return Err(PipelineError::Graph(format!(
+            "{name}: {h}x{w} grid cannot be distributed over {px}x{py} procs"
+        )));
     }
-    let px = px.max(1);
-    (px, procs / px)
+    grid.distribution_2d(h, w, procs).map_err(PipelineError::Graph)
 }
 
 /// The paper's running example (eq. 1): `steps` applications of a
@@ -115,15 +136,21 @@ impl Workload for Heat2d {
         "heat2d".into()
     }
 
+    fn partitioning(&self) -> Partitioning {
+        Partitioning::Grid(ProcGrid::Square)
+    }
+
     fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
-        let (px, py) = grid_factor(procs);
-        if procs == 0 || self.h < px as u64 || self.w < py as u64 {
-            return Err(PipelineError::Graph(format!(
-                "heat2d: {}x{} grid cannot be distributed over {px}x{py} procs",
-                self.h, self.w
-            )));
-        }
-        Ok(heat2d_program(self.h, self.w, self.steps, px, py).unroll())
+        self.build_graph_with(procs, &self.partitioning())
+    }
+
+    fn build_graph_with(
+        &self,
+        procs: u32,
+        layout: &Partitioning,
+    ) -> Result<TaskGraph, PipelineError> {
+        let dist = grid2d_distribution("heat2d", layout, procs, self.h, self.w)?;
+        Ok(heat2d_program_on(self.h, self.w, self.steps, dist).unroll())
     }
 }
 
@@ -142,15 +169,21 @@ impl Workload for Moore2d {
         "moore2d".into()
     }
 
+    fn partitioning(&self) -> Partitioning {
+        Partitioning::Grid(ProcGrid::Square)
+    }
+
     fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
-        let (px, py) = grid_factor(procs);
-        if procs == 0 || self.h < px as u64 || self.w < py as u64 {
-            return Err(PipelineError::Graph(format!(
-                "moore2d: {}x{} grid cannot be distributed over {px}x{py} procs",
-                self.h, self.w
-            )));
-        }
-        Ok(moore2d_program(self.h, self.w, self.steps, px, py).unroll())
+        self.build_graph_with(procs, &self.partitioning())
+    }
+
+    fn build_graph_with(
+        &self,
+        procs: u32,
+        layout: &Partitioning,
+    ) -> Result<TaskGraph, PipelineError> {
+        let dist = grid2d_distribution("moore2d", layout, procs, self.h, self.w)?;
+        Ok(moore2d_program_on(self.h, self.w, self.steps, dist).unroll())
     }
 }
 
@@ -168,14 +201,28 @@ impl Workload for Spmv {
         "spmv".into()
     }
 
+    fn partitioning(&self) -> Partitioning {
+        Partitioning::Graph(Partitioner::RowBlock)
+    }
+
     fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
+        self.build_graph_with(procs, &self.partitioning())
+    }
+
+    fn build_graph_with(
+        &self,
+        procs: u32,
+        layout: &Partitioning,
+    ) -> Result<TaskGraph, PipelineError> {
         if procs == 0 || self.matrix.n < procs as usize {
             return Err(PipelineError::Graph(format!(
                 "spmv: {} rows cannot be distributed over {procs} procs",
                 self.matrix.n
             )));
         }
-        Ok(spmv_program(&self.matrix, self.steps, procs).unroll())
+        let dist =
+            graph_distribution(&self.matrix, procs, layout).map_err(PipelineError::Graph)?;
+        Ok(spmv_program_on(&self.matrix, self.steps, dist).unroll())
     }
 
     fn cost_model(&self) -> Arc<dyn TaskCostModel> {
@@ -198,7 +245,19 @@ impl Workload for ConjugateGradient {
         "cg".into()
     }
 
+    fn partitioning(&self) -> Partitioning {
+        Partitioning::Graph(Partitioner::RowBlock)
+    }
+
     fn build_graph(&self, procs: u32) -> Result<TaskGraph, PipelineError> {
+        self.build_graph_with(procs, &self.partitioning())
+    }
+
+    fn build_graph_with(
+        &self,
+        procs: u32,
+        layout: &Partitioning,
+    ) -> Result<TaskGraph, PipelineError> {
         if procs == 0 || self.unknowns < procs as usize {
             return Err(PipelineError::Graph(format!(
                 "cg: {} unknowns cannot be distributed over {procs} procs",
@@ -206,7 +265,8 @@ impl Workload for ConjugateGradient {
             )));
         }
         let a = CsrMatrix::laplace1d(self.unknowns);
-        Ok(cg_program(&a, procs, self.iters).unroll())
+        let dist = graph_distribution(&a, procs, layout).map_err(PipelineError::Graph)?;
+        Ok(cg_program_on(&a, dist, self.iters).unroll())
     }
 
     fn cost_model(&self) -> Arc<dyn TaskCostModel> {
@@ -254,12 +314,42 @@ mod tests {
     use super::*;
 
     #[test]
-    fn grid_factoring() {
-        assert_eq!(grid_factor(1), (1, 1));
-        assert_eq!(grid_factor(4), (2, 2));
-        assert_eq!(grid_factor(6), (2, 3));
-        assert_eq!(grid_factor(7), (1, 7));
-        assert_eq!(grid_factor(12), (3, 4));
+    fn default_layouts_match_the_seed_distributions() {
+        // Heat2d's hint is the most-square grid grid_factor always chose.
+        let via_default = Heat2d { h: 6, w: 6, steps: 2 }.build_graph(4).unwrap();
+        let via_layout = Heat2d { h: 6, w: 6, steps: 2 }
+            .build_graph_with(4, &Partitioning::Grid(ProcGrid::Grid { px: 2, py: 2 }))
+            .unwrap();
+        for t in via_default.tasks() {
+            assert_eq!(via_default.owner(t), via_layout.owner(t), "{t}");
+        }
+        // Spmv's hint is the row-block distribution the seed hardcoded.
+        let w = Spmv { matrix: CsrMatrix::laplace1d(12), steps: 1 };
+        let rows = w.build_graph(3).unwrap();
+        let strip = w
+            .build_graph_with(3, &Partitioning::Grid(ProcGrid::Strip))
+            .unwrap();
+        for t in rows.tasks() {
+            assert_eq!(rows.owner(t), strip.owner(t), "{t}");
+        }
+    }
+
+    #[test]
+    fn partitioned_spmv_and_cg_build_and_cut_less() {
+        use crate::partition::{assignment_of, PartitionQuality};
+        let a = CsrMatrix::laplace2d(4, 8);
+        let w = Spmv { matrix: a.clone(), steps: 2 };
+        let layout = Partitioning::Graph(Partitioner::RcbRefined);
+        let g = w.build_graph_with(4, &layout).unwrap();
+        assert_eq!(g.num_procs(), 4);
+        // The refined layout's static quality is reflected in the graph:
+        // words per naive level == edge-cut words of the partition.
+        let dist = crate::partition::graph_distribution(&a, 4, &layout).unwrap();
+        let q = PartitionQuality::evaluate(&a, &assignment_of(&dist), 4);
+        assert!(q.edge_cut_words > 0);
+        // CG accepts the same layouts on its Laplacian row space.
+        let cg = ConjugateGradient { unknowns: 16, iters: 1 };
+        assert!(cg.build_graph_with(4, &layout).is_ok());
     }
 
     #[test]

@@ -34,6 +34,7 @@
 //! ```
 
 use super::machine::Machine;
+use crate::partition::Partitioning;
 use std::collections::HashMap;
 
 /// A wire model: given a posted message, when does it arrive?
@@ -148,8 +149,16 @@ impl Hierarchical {
     /// machine's α/β.
     pub fn contiguous(m: &Machine, node_size: u32, intra_factor: f64) -> Self {
         let node_size = node_size.max(1);
+        Hierarchical::with_node_map(m, (0..m.nprocs).map(|p| p / node_size).collect(), intra_factor)
+    }
+
+    /// Explicit proc→node mapping (e.g. from
+    /// [`crate::partition::ProcGrid::node_map`], which keeps grid-adjacent
+    /// tiles on one node); intra-node costs are `intra_factor` of the
+    /// machine's α/β.
+    pub fn with_node_map(m: &Machine, node_of: Vec<u32>, intra_factor: f64) -> Self {
         Hierarchical {
-            node_of: (0..m.nprocs).map(|p| p / node_size).collect(),
+            node_of,
             intra_alpha: m.alpha * intra_factor,
             intra_beta: m.beta * intra_factor,
             inter_alpha: m.alpha,
@@ -295,6 +304,22 @@ impl NetworkKind {
             NetworkKind::Contended => Box::new(Contended::from_machine(m)),
         }
     }
+
+    /// [`NetworkKind::build`], layout-aware: a [`Hierarchical`] wire takes
+    /// its proc→node mapping from the run's processor grid when the
+    /// layout carries one (grid-adjacent tiles share a node), and falls
+    /// back to contiguous packing otherwise.  The other wires ignore the
+    /// layout — their physics has no node structure.
+    pub fn build_for(&self, m: &Machine, layout: Option<&Partitioning>) -> Box<dyn NetworkModel> {
+        if let NetworkKind::Hierarchical { node_size, intra_factor } = *self {
+            if let Some(Partitioning::Grid(g)) = layout {
+                if let Some(node_of) = g.node_map(m.nprocs, node_size) {
+                    return Box::new(Hierarchical::with_node_map(m, node_of, intra_factor));
+                }
+            }
+        }
+        self.build(m)
+    }
 }
 
 #[cfg(test)]
@@ -370,6 +395,36 @@ mod tests {
             assert!(arr >= 5.0, "{tag}: {arr}");
         }
         assert!(NetworkKind::parse("token-ring").is_err());
+    }
+
+    #[test]
+    fn build_for_maps_hier_nodes_from_the_grid() {
+        use crate::partition::{Partitioning, ProcGrid};
+        // 3x3 proc grid, 2-proc nodes.  Grid mapping pairs procs within a
+        // proc-grid row ({0,1},{2},{3,4},{5},…), so grid-adjacent 3 and 4
+        // share a node while contiguous packing ({2,3},{4,5},…) splits
+        // them.
+        let mach = Machine::new(9, 2, 100.0, 0.5, 1.0);
+        let kind = NetworkKind::Hierarchical { node_size: 2, intra_factor: 0.1 };
+        let layout = Partitioning::Grid(ProcGrid::Grid { px: 3, py: 3 });
+        let mut gridwise = kind.build_for(&mach, Some(&layout));
+        let mut contiguous = kind.build(&mach);
+        // 3 → 4: same grid row — intra under the grid mapping only.
+        assert!(gridwise.deliver(3, 4, 4, 0.0) < contiguous.deliver(3, 4, 4, 0.0));
+        // 0 → 3: different grid rows — inter under both mappings.
+        assert_eq!(gridwise.deliver(0, 3, 4, 0.0), contiguous.deliver(0, 3, 4, 0.0));
+        // A strip layout reproduces contiguous packing exactly.
+        let strip = Partitioning::Grid(ProcGrid::Strip);
+        let mut stripwise = kind.build_for(&mach, Some(&strip));
+        for (from, to) in [(0u32, 1u32), (2, 3), (4, 8)] {
+            assert_eq!(
+                stripwise.deliver(from, to, 2, 1.0),
+                kind.build(&mach).deliver(from, to, 2, 1.0)
+            );
+        }
+        // Non-hier wires ignore the layout.
+        let mut ab = NetworkKind::AlphaBeta.build_for(&mach, Some(&layout));
+        assert_eq!(ab.deliver(0, 5, 4, 0.0), 0.0 + 100.0 + 0.5 * 4.0);
     }
 
     #[test]

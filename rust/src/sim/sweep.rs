@@ -13,6 +13,7 @@ use super::machine::Machine;
 use super::network::NetworkKind;
 use super::plan::ExecPlan;
 use crate::graph::TaskGraph;
+use crate::partition::Partitioning;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -30,6 +31,10 @@ pub struct SweepInput {
     pub cost: Arc<dyn TaskCostModel>,
     /// Words per transmitted value (scales β).
     pub words_per_value: usize,
+    /// Data layout the plan was derived from (`None` for hand-built
+    /// inputs); a Hierarchical wire maps procs onto nodes grid-aware
+    /// ([`NetworkKind::build_for`]).
+    pub layout: Option<Partitioning>,
 }
 
 /// The sweep grid: `inputs × networks × alphas × threads` cells.
@@ -83,7 +88,7 @@ fn eval_cell(grid: &SweepGrid, i: usize) -> Result<SweepCell, String> {
         grid.beta * input.words_per_value as f64,
         grid.gamma,
     );
-    let mut net = kind.build(&mach);
+    let mut net = kind.build_for(&mach, input.layout.as_ref());
     let t0 = std::time::Instant::now();
     let r = try_simulate(
         &input.graph,
@@ -239,6 +244,7 @@ mod tests {
                 plan: naive,
                 cost: Arc::new(UniformCost),
                 words_per_value: 1,
+                layout: None,
             },
             SweepInput {
                 workload: "heat1d".into(),
@@ -247,6 +253,7 @@ mod tests {
                 plan: ca,
                 cost: Arc::new(UniformCost),
                 words_per_value: 1,
+                layout: None,
             },
         ]
     }

@@ -6,10 +6,8 @@
 //! never sees anything problem-specific.
 
 mod csr;
-mod partition;
 
 pub use csr::CsrMatrix;
-pub use partition::{bisect, block_assign, quality, to_distribution, PartitionQuality};
 
 use crate::graph::TaskGraph;
 use crate::imp::{Distribution, Program, Signature};
@@ -29,9 +27,13 @@ pub fn heat1d_graph(n: u64, m: u32, p: u32) -> TaskGraph {
 /// `m` steps of the 2-D five-point stencil on an `h × w` grid (row-major
 /// flattening), distributed over a `px × py` processor grid.
 pub fn heat2d_program(h: u64, w: u64, m: u32, px: u32, py: u32) -> Program {
-    let dist = block2d(h, w, px, py);
-    let sig = five_point_signature(h, w);
-    Program::new(dist).iterate("heat2d", sig, m)
+    heat2d_program_on(h, w, m, block2d(h, w, px, py))
+}
+
+/// [`heat2d_program`] under an explicit distribution — the entry point
+/// the [`crate::partition`] layer's grid shapes feed.
+pub fn heat2d_program_on(h: u64, w: u64, m: u32, dist: Distribution) -> Program {
+    Program::new(dist).iterate("heat2d", five_point_signature(h, w), m)
 }
 
 /// Convenience: the unrolled graph of [`heat2d_program`].
@@ -43,7 +45,13 @@ pub fn heat2d_graph(h: u64, w: u64, m: u32, px: u32, py: u32) -> TaskGraph {
 /// irregular workload ("repeated sequence of sparse matrix-vector
 /// products").
 pub fn spmv_program(a: &CsrMatrix, m: u32, p: u32) -> Program {
-    Program::new(Distribution::block(a.n as u64, p)).iterate("spmv", a.signature(), m)
+    spmv_program_on(a, m, Distribution::block(a.n as u64, p))
+}
+
+/// [`spmv_program`] under an explicit distribution — the entry point the
+/// [`crate::partition`] layer's graph partitioners feed.
+pub fn spmv_program_on(a: &CsrMatrix, m: u32, dist: Distribution) -> Program {
+    Program::new(dist).iterate("spmv", a.signature(), m)
 }
 
 /// 2-D block distribution over a row-major `h × w` grid: processor
@@ -74,9 +82,13 @@ pub fn block2d(h: u64, w: u64, px: u32, py: u32) -> Distribution {
 /// the 2-D transformation earn its 8-neighbour messages at every block
 /// factor.
 pub fn moore2d_program(h: u64, w: u64, m: u32, px: u32, py: u32) -> Program {
-    let dist = block2d(h, w, px, py);
-    let sig = nine_point_signature(h, w);
-    Program::new(dist).iterate("moore2d", sig, m)
+    moore2d_program_on(h, w, m, block2d(h, w, px, py))
+}
+
+/// [`moore2d_program`] under an explicit distribution — the entry point
+/// the [`crate::partition`] layer's grid shapes feed.
+pub fn moore2d_program_on(h: u64, w: u64, m: u32, dist: Distribution) -> Program {
+    Program::new(dist).iterate("moore2d", nine_point_signature(h, w), m)
 }
 
 /// Convenience: the unrolled graph of [`moore2d_program`].

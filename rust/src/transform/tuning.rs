@@ -141,6 +141,7 @@ pub fn select_b(
         halos: vec![HaloMode::MultiLevel],
         blocks: feasible.clone(),
         procs: vec![mach.nprocs],
+        layouts: Vec::new(),
     };
     let mut ev = Evaluator::new(|cands: &[Candidate]| {
         Ok(cands

@@ -13,6 +13,7 @@
 //! `BENCH_tune.json` hit-rate figure.
 
 use super::space::Candidate;
+use crate::partition::Partitioning;
 use crate::pipeline::Strategy;
 use crate::sim::{Machine, NetworkKind};
 use crate::transform::HaloMode;
@@ -56,6 +57,9 @@ pub struct CacheEntry {
     /// Winning block factor (0 = none / whole graph).
     pub block: u32,
     pub procs: u32,
+    /// Winning layout tag ([`Partitioning::key`]; "-" = the pipeline's
+    /// own layout).
+    pub layout: String,
     /// Engine-predicted makespan of the winner.
     pub makespan: f64,
     /// Engine-predicted makespan of the naive baseline.
@@ -91,6 +95,7 @@ impl CacheEntry {
             halo: halo.to_string(),
             block: c.block.unwrap_or(0),
             procs: c.procs,
+            layout: c.layout.map(|l| l.key()).unwrap_or_else(|| "-".to_string()),
             makespan,
             naive_makespan,
             evaluations,
@@ -114,7 +119,14 @@ impl CacheEntry {
             other => return Err(format!("cache entry has unknown halo {other:?}")),
         };
         let block = if self.block == 0 { None } else { Some(self.block) };
-        Ok(Candidate::new(strategy, halo, block, self.procs))
+        let layout = match self.layout.as_str() {
+            "-" => None,
+            s => Some(
+                Partitioning::parse(s)
+                    .map_err(|_| format!("cache entry has unknown layout {s:?}"))?,
+            ),
+        };
+        Ok(Candidate::new(strategy, halo, block, self.procs).with_layout(layout))
     }
 }
 
@@ -225,13 +237,14 @@ impl TuningCache {
         for (i, (key, e)) in self.entries.iter().enumerate() {
             s.push_str(&format!(
                 "    {{\"key\": {:?}, \"strategy\": {:?}, \"halo\": {:?}, \"block\": {}, \
-                 \"procs\": {}, \"makespan\": {}, \"naive_makespan\": {}, \
+                 \"procs\": {}, \"layout\": {:?}, \"makespan\": {}, \"naive_makespan\": {}, \
                  \"evaluations\": {}, \"search\": {:?}, \"wall_secs\": {}}}{}",
                 key,
                 e.strategy,
                 e.halo,
                 e.block,
                 e.procs,
+                e.layout,
                 e.makespan,
                 e.naive_makespan,
                 e.evaluations,
@@ -273,6 +286,9 @@ fn parse_entry(obj: &str) -> Option<(String, CacheEntry)> {
         halo: str_field(obj, "halo")?,
         block: num_field(obj, "block")? as u32,
         procs: num_field(obj, "procs")? as u32,
+        // Entries written before the layout dimension existed lack the
+        // field; decode them as the pipeline's own layout.
+        layout: str_field(obj, "layout").unwrap_or_else(|| "-".to_string()),
         makespan: num_field(obj, "makespan")?,
         naive_makespan: num_field(obj, "naive_makespan")?,
         evaluations: num_field(obj, "evaluations")? as usize,
@@ -371,12 +387,35 @@ mod tests {
     fn entry_candidate_roundtrip() {
         let winner = Candidate::ca(8, 4);
         let e = CacheEntry::from_candidate(&winner, 1.0, 2.0, 3, "golden", 0.1);
+        assert_eq!(e.layout, "-");
         assert_eq!(e.candidate().unwrap(), winner);
         let naive = Candidate::naive(2);
         let e = CacheEntry::from_candidate(&naive, 1.0, 1.0, 3, "coord", 0.1);
         assert_eq!(e.block, 0);
         assert_eq!(e.candidate().unwrap(), naive);
         let bad = CacheEntry { strategy: "quantum".into(), ..entry(4) };
+        assert!(bad.candidate().is_err());
+    }
+
+    #[test]
+    fn layout_dimension_roundtrips_and_gates_decoding() {
+        use crate::partition::{Partitioning, ProcGrid};
+        let winner =
+            Candidate::ca(4, 9).with_layout(Some(Partitioning::Grid(ProcGrid::Grid {
+                px: 3,
+                py: 3,
+            })));
+        let e = CacheEntry::from_candidate(&winner, 1.0, 2.0, 3, "exhaustive", 0.1);
+        assert_eq!(e.layout, "3x3");
+        assert_eq!(e.candidate().unwrap(), winner);
+        // The JSON store carries the layout through a save/parse cycle.
+        let mut c = TuningCache::new();
+        c.insert(key(), e.clone());
+        let parsed = parse_entries(&c.to_json());
+        assert_eq!(parsed.get(&key()).unwrap().candidate().unwrap(), winner);
+        // An unknown layout tag is an undecodable entry — a miss, not a
+        // wrong verdict.
+        let bad = CacheEntry { layout: "hilbert".into(), ..e };
         assert!(bad.candidate().is_err());
     }
 

@@ -14,11 +14,14 @@
 //! Module map / data flow:
 //!
 //! * [`space`](TuningSpace) — the candidate family: strategy
-//!   (naive/overlap/CA) × halo mode × block factor × processor count;
+//!   (naive/overlap/CA) × halo mode × block factor × processor count ×
+//!   data layout (a [`crate::partition::Partitioning`] axis — grid
+//!   shapes for stencils, graph partitioners for SpMV/CG);
 //! * [`search`](SearchStrategy) — how the space is explored:
 //!   [`ExhaustiveGrid`], [`GoldenSection`] over the block axis,
 //!   [`CoordinateDescent`] over the joint space; all score through the
-//!   memoizing [`Evaluator`];
+//!   memoizing [`Evaluator`], optionally under a [`SearchBudget`] that
+//!   stops at a fixed engine-run cap and keeps the incumbent;
 //! * evaluation — each batch becomes one [`crate::sim::sweep`] grid, so
 //!   candidate simulations fan out across the worker pool;
 //! * [`cache`](TuningCache) — winners persist in a JSON store keyed by
@@ -62,13 +65,17 @@ pub mod space;
 pub use cache::{cache_key, CacheEntry, TuningCache};
 pub use report::{rows_to_json, TuneReport, TuneRow};
 pub use search::{
-    search_from_tag, CoordinateDescent, Evaluator, ExhaustiveGrid, GoldenSection, SearchOutcome,
-    SearchStrategy,
+    search_from_tag, CoordinateDescent, Evaluator, ExhaustiveGrid, GoldenSection, SearchBudget,
+    SearchOutcome, SearchStrategy,
 };
 pub use space::{Candidate, TuningSpace};
 
-use crate::pipeline::{candidate_sweep_input, Pipeline, PipelineError, Workload};
+use crate::graph::TaskGraph;
+use crate::partition::Partitioning;
+use crate::pipeline::{candidate_sweep_input_on, Pipeline, PipelineError, Workload};
 use crate::sim::sweep::{self, SweepGrid, SweepInput};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Everything that can go wrong while tuning.
 #[derive(Debug, Clone, PartialEq)]
@@ -144,6 +151,13 @@ impl Tuner {
         self
     }
 
+    /// Cap the engine runs per search ([`SearchBudget`]): the search
+    /// stops scoring at the cap and keeps the incumbent.
+    pub fn with_budget(mut self, max_engine_runs: usize) -> Self {
+        self.search.set_budget(Some(SearchBudget { max_engine_runs }));
+        self
+    }
+
     /// Use a file-backed cache at `path`.
     pub fn with_cache_path(mut self, path: impl Into<std::path::PathBuf>) -> Self {
         self.cache = TuningCache::with_path(path);
@@ -181,10 +195,7 @@ pub fn tune_pipeline<W: Workload + Clone>(
     }
     let network = base.network_config();
     let workload = base.workload().name();
-    let g = base
-        .workload()
-        .build_graph(procs)
-        .map_err(|e| TuneError::Config(e.to_string()))?;
+    let g = base.build_graph_shared().map_err(|e| TuneError::Config(e.to_string()))?;
     let depth = g.num_levels().saturating_sub(1).max(1);
     let signature = format!(
         "{workload}:v{}:e{}:l{}:w{}:c{}",
@@ -208,6 +219,16 @@ pub fn tune_pipeline<W: Workload + Clone>(
     }
     if let Some(space) = &tuner.space {
         key = format!("{key}|space={}", space.fingerprint());
+    }
+    // The *resolved* layout always joins the key: it shapes both the
+    // graph and — via the grid-aware hierarchical wire — the scores, and
+    // two layouts can tie on the signature's size counts.
+    key = format!("{key}|layout={}", base.resolved_partitioning().key());
+    // A budget restricts what the search may look at, exactly like an
+    // explicit space: a truncated verdict must never be served to an
+    // unbudgeted (or differently budgeted) tuner.
+    if let Some(SearchBudget { max_engine_runs }) = tuner.search.budget() {
+        key = format!("{key}|budget={max_engine_runs}");
     }
     let model_b_continuous = (machine.alpha * machine.threads as f64 / machine.gamma).sqrt();
 
@@ -240,6 +261,12 @@ pub fn tune_pipeline<W: Workload + Clone>(
     let search_label = tuner.search.label().to_string();
 
     let t0 = std::time::Instant::now();
+    // One graph build per (procs, layout), shared across every candidate
+    // of a tuning run that only varies strategy/halo/block — the
+    // ROADMAP's "share one graph build (Arc) across a tuning run's
+    // candidates".  Failed builds are cached too (infeasible layouts stay
+    // infeasible).
+    let mut graphs: HashMap<(u32, Option<Partitioning>), Option<Arc<TaskGraph>>> = HashMap::new();
     let mut ev = Evaluator::new(|cands: &[Candidate]| {
         // Transformation failures mark a candidate infeasible; every
         // feasible plan joins one sweep grid so the whole batch fans
@@ -251,9 +278,17 @@ pub fn tune_pipeline<W: Workload + Clone>(
             // Scoring skips the per-superstep Theorem-1 re-check — the
             // winning configuration is rebuilt *checked* by
             // `Pipeline::autotune` before anything executes.
-            let candidate_base = base.clone().procs(c.procs).skip_check();
+            let mut candidate_base = base.clone().procs(c.procs).skip_check();
+            if let Some(layout) = c.layout {
+                candidate_base = candidate_base.partitioning(layout);
+            }
+            let graph = graphs
+                .entry((c.procs, c.layout))
+                .or_insert_with(|| candidate_base.build_graph_shared().ok())
+                .clone();
+            let Some(graph) = graph else { continue };
             if let Ok(input) =
-                candidate_sweep_input(&candidate_base, c.strategy, c.block, Some(c.halo))
+                candidate_sweep_input_on(&candidate_base, graph, c.strategy, c.block, Some(c.halo))
             {
                 feasible.push((i, input));
             }
@@ -278,6 +313,13 @@ pub fn tune_pipeline<W: Workload + Clone>(
     });
 
     let outcome = tuner.search.search(&space, &mut ev)?;
+    // The naive baseline is reporting context, not part of the search:
+    // score it *after* the verdict (so a space that excludes naive can
+    // never have its plateau contaminated by it) and outside the budget
+    // (so even a tight [`SearchBudget`] yields a real tuned-vs-naive
+    // ratio).  Searches that already scored naive are served from the
+    // memo and pay nothing extra.
+    ev.set_budget(None);
     let naive_makespan = ev.eval(Candidate::naive(procs))?.unwrap_or(outcome.makespan);
     let wall_secs = t0.elapsed().as_secs_f64();
 
@@ -405,6 +447,7 @@ mod tests {
             halos: vec![crate::transform::HaloMode::MultiLevel],
             blocks: vec![2, 4],
             procs: vec![2, 256],
+            layouts: Vec::new(),
         };
         let mut tuner = Tuner::exhaustive().with_space(space);
         let out = tune_pipeline(&base(64, 4, mach), &mut tuner).unwrap();
@@ -442,6 +485,63 @@ mod tests {
         // The bad entry was overwritten by the fresh verdict.
         assert!(tune_pipeline(&base(64, 4, mach), &mut tuner).unwrap().report.cache_hit);
         assert_eq!((tuner.cache.hits(), tuner.cache.misses()), (1, 2));
+    }
+
+    #[test]
+    fn budgeted_search_stops_at_cap_and_keeps_the_incumbent() {
+        let mach = Machine::high_latency(2, 8);
+        let mut unbounded = Tuner::exhaustive();
+        let full = tune_pipeline(&base(128, 8, mach), &mut unbounded).unwrap();
+        assert!(full.report.engine_runs > 4, "test premise: the space is bigger than the cap");
+
+        let mut tuner = Tuner::exhaustive().with_budget(4);
+        let out = tune_pipeline(&base(128, 8, mach), &mut tuner).unwrap();
+        let r = &out.report;
+        // The search itself stops at the cap; the out-of-budget naive
+        // baseline (memoized here — exhaustive scores naive first) may
+        // add at most one reporting run.
+        assert!(r.engine_runs <= 5, "budget violated: {} engine runs", r.engine_runs);
+        assert!(!r.cache_hit && r.naive_makespan >= r.makespan - 1e-9, "{r:?}");
+        // The budgeted verdict is in the evaluated set (the incumbent),
+        // and is the best of what was actually scored.
+        assert!(r.evaluated.iter().any(|(c, _)| *c == out.chosen), "{r:?}");
+        let best = r.evaluated.iter().map(|&(_, s)| s).fold(f64::INFINITY, f64::min);
+        assert!(r.makespan <= best * 1.01 + 1e-9, "{r:?}");
+    }
+
+    #[test]
+    fn tuning_shares_one_graph_build_across_candidates() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        #[derive(Clone)]
+        struct Counting {
+            inner: Heat1d,
+            builds: Arc<AtomicUsize>,
+        }
+        impl Workload for Counting {
+            fn name(&self) -> String {
+                "heat1d".into()
+            }
+            fn build_graph(&self, procs: u32) -> Result<crate::graph::TaskGraph, PipelineError> {
+                self.builds.fetch_add(1, Ordering::SeqCst);
+                self.inner.build_graph(procs)
+            }
+        }
+
+        let builds = Arc::new(AtomicUsize::new(0));
+        let mach = Machine::high_latency(2, 4);
+        let w = Counting { inner: Heat1d::new(96, 8), builds: Arc::clone(&builds) };
+        let mut tuner = Tuner::exhaustive();
+        let out = tune_pipeline(
+            &Pipeline::new(w).procs(2).machine(mach),
+            &mut tuner,
+        )
+        .unwrap();
+        assert!(out.report.engine_runs > 4, "many candidates were scored");
+        // One build for the cache-key signature + one shared across every
+        // candidate — not one per evaluation.
+        assert_eq!(builds.load(Ordering::SeqCst), 2, "graph must be built once per layout");
     }
 
     #[test]

@@ -35,12 +35,24 @@ use std::collections::HashMap;
 pub type EvalBatchFn<'a> =
     Box<dyn FnMut(&[Candidate]) -> Result<Vec<(Candidate, Option<f64>)>, TuneError> + 'a>;
 
+/// A hard cap on engine simulations for one search: the search stops
+/// scoring new candidates at the cap and keeps the incumbent — the best
+/// configuration among those actually evaluated.  Configure it on any
+/// [`SearchStrategy`] (or via [`super::Tuner::with_budget`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SearchBudget {
+    /// Maximum feasible candidates the engine may score (must be ≥ 1 for
+    /// any search to produce a verdict).
+    pub max_engine_runs: usize,
+}
+
 /// Memoizing front end every search strategy scores through.
 pub struct Evaluator<'a> {
     run: EvalBatchFn<'a>,
     memo: HashMap<Candidate, Option<f64>>,
     evaluated: Vec<(Candidate, f64)>,
     engine_runs: usize,
+    budget: Option<usize>,
 }
 
 impl<'a> Evaluator<'a> {
@@ -52,7 +64,15 @@ impl<'a> Evaluator<'a> {
             memo: HashMap::new(),
             evaluated: Vec::new(),
             engine_runs: 0,
+            budget: None,
         }
+    }
+
+    /// Cap the engine runs this evaluator will perform; candidates past
+    /// the cap score as `None` (indistinguishable from infeasible, so
+    /// every search degrades gracefully to its incumbent).
+    pub fn set_budget(&mut self, budget: Option<SearchBudget>) {
+        self.budget = budget.map(|b| b.max_engine_runs);
     }
 
     /// Score a batch; unseen candidates go to the backend together (one
@@ -63,6 +83,13 @@ impl<'a> Evaluator<'a> {
             if !self.memo.contains_key(&c) && !fresh.contains(&c) {
                 fresh.push(c);
             }
+        }
+        if let Some(cap) = self.budget {
+            // Each submitted candidate yields at most one engine run, so
+            // truncating to the remaining budget can never overshoot;
+            // unsubmitted candidates stay un-memoized (a later batch may
+            // still score them if infeasible ones freed budget).
+            fresh.truncate(cap.saturating_sub(self.engine_runs));
         }
         if !fresh.is_empty() {
             let results = (self.run)(&fresh)?;
@@ -115,6 +142,25 @@ pub trait SearchStrategy {
     /// error when no candidate is feasible.
     fn search(&self, space: &TuningSpace, ev: &mut Evaluator<'_>)
         -> Result<SearchOutcome, TuneError>;
+
+    /// The engine-run budget this strategy is configured with
+    /// (`None` = unlimited).
+    fn budget(&self) -> Option<SearchBudget> {
+        None
+    }
+
+    /// Reconfigure the budget (no-op for strategies without one).
+    fn set_budget(&mut self, budget: Option<SearchBudget>) {
+        let _ = budget;
+    }
+}
+
+/// Apply a strategy's configured budget to the evaluator without
+/// clobbering an externally imposed one.
+fn apply_budget(budget: Option<SearchBudget>, ev: &mut Evaluator<'_>) {
+    if budget.is_some() {
+        ev.set_budget(budget);
+    }
 }
 
 /// Plateau rule shared by every strategy: among feasible scores within
@@ -149,11 +195,13 @@ fn no_feasible(space: &TuningSpace) -> TuneError {
 pub struct ExhaustiveGrid {
     /// Plateau width (relative); default 1%.
     pub tolerance: f64,
+    /// Optional engine-run cap (keeps the incumbent at the cap).
+    pub budget: Option<SearchBudget>,
 }
 
 impl Default for ExhaustiveGrid {
     fn default() -> Self {
-        ExhaustiveGrid { tolerance: 0.01 }
+        ExhaustiveGrid { tolerance: 0.01, budget: None }
     }
 }
 
@@ -162,11 +210,20 @@ impl SearchStrategy for ExhaustiveGrid {
         "exhaustive"
     }
 
+    fn budget(&self) -> Option<SearchBudget> {
+        self.budget
+    }
+
+    fn set_budget(&mut self, budget: Option<SearchBudget>) {
+        self.budget = budget;
+    }
+
     fn search(
         &self,
         space: &TuningSpace,
         ev: &mut Evaluator<'_>,
     ) -> Result<SearchOutcome, TuneError> {
+        apply_budget(self.budget, ev);
         let cands = space.candidates();
         if cands.is_empty() {
             return Err(TuneError::NoFeasibleCandidate("empty tuning space".into()));
@@ -191,11 +248,13 @@ impl SearchStrategy for ExhaustiveGrid {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GoldenSection {
     pub tolerance: f64,
+    /// Optional engine-run cap (keeps the incumbent at the cap).
+    pub budget: Option<SearchBudget>,
 }
 
 impl Default for GoldenSection {
     fn default() -> Self {
-        GoldenSection { tolerance: 0.01 }
+        GoldenSection { tolerance: 0.01, budget: None }
     }
 }
 
@@ -232,11 +291,20 @@ impl SearchStrategy for GoldenSection {
         "golden"
     }
 
+    fn budget(&self) -> Option<SearchBudget> {
+        self.budget
+    }
+
+    fn set_budget(&mut self, budget: Option<SearchBudget>) {
+        self.budget = budget;
+    }
+
     fn search(
         &self,
         space: &TuningSpace,
         ev: &mut Evaluator<'_>,
     ) -> Result<SearchOutcome, TuneError> {
+        apply_budget(self.budget, ev);
         let flat: Vec<Candidate> = space
             .candidates()
             .into_iter()
@@ -247,17 +315,22 @@ impl SearchStrategy for GoldenSection {
         }
         if space.strategies.contains(&Strategy::Ca) {
             for &p in &space.procs {
-                if space.blocks.is_empty() {
-                    ev.eval(Candidate::new(Strategy::Ca, space.default_halo(), None, p))?;
-                    continue;
-                }
-                for &h in &space.halos {
-                    let line: Vec<Candidate> = space
-                        .blocks
-                        .iter()
-                        .map(|&b| Candidate::new(Strategy::Ca, h, Some(b), p))
-                        .collect();
-                    Self::section_line(ev, &line)?;
+                for l in space.layout_axis() {
+                    if space.blocks.is_empty() {
+                        ev.eval(
+                            Candidate::new(Strategy::Ca, space.default_halo(), None, p)
+                                .with_layout(l),
+                        )?;
+                        continue;
+                    }
+                    for &h in &space.halos {
+                        let line: Vec<Candidate> = space
+                            .blocks
+                            .iter()
+                            .map(|&b| Candidate::new(Strategy::Ca, h, Some(b), p).with_layout(l))
+                            .collect();
+                        Self::section_line(ev, &line)?;
+                    }
                 }
             }
         }
@@ -277,11 +350,13 @@ impl SearchStrategy for GoldenSection {
 pub struct CoordinateDescent {
     pub max_rounds: usize,
     pub tolerance: f64,
+    /// Optional engine-run cap (keeps the incumbent at the cap).
+    pub budget: Option<SearchBudget>,
 }
 
 impl Default for CoordinateDescent {
     fn default() -> Self {
-        CoordinateDescent { max_rounds: 8, tolerance: 0.01 }
+        CoordinateDescent { max_rounds: 8, tolerance: 0.01, budget: None }
     }
 }
 
@@ -302,7 +377,10 @@ impl CoordinateDescent {
             0 if cur.strategy == Strategy::Ca => space
                 .blocks
                 .iter()
-                .map(|&b| Candidate::new(Strategy::Ca, cur.halo, Some(b), cur.procs))
+                .map(|&b| {
+                    Candidate::new(Strategy::Ca, cur.halo, Some(b), cur.procs)
+                        .with_layout(cur.layout)
+                })
                 .collect(),
             // Strategy (CA variants keep the current / middle block).
             1 => space
@@ -313,20 +391,31 @@ impl CoordinateDescent {
                         Strategy::Ca => cur.block.or_else(|| Self::mid_block(space)),
                         _ => None,
                     };
-                    Candidate::new(s, cur.halo, block, cur.procs)
+                    Candidate::new(s, cur.halo, block, cur.procs).with_layout(cur.layout)
                 })
                 .collect(),
             // Halo mode (CA only).
             2 if cur.strategy == Strategy::Ca => space
                 .halos
                 .iter()
-                .map(|&h| Candidate::new(Strategy::Ca, h, cur.block, cur.procs))
+                .map(|&h| {
+                    Candidate::new(Strategy::Ca, h, cur.block, cur.procs).with_layout(cur.layout)
+                })
                 .collect(),
             // Processor count.
             3 => space
                 .procs
                 .iter()
-                .map(|&p| Candidate::new(cur.strategy, cur.halo, cur.block, p))
+                .map(|&p| Candidate::new(cur.strategy, cur.halo, cur.block, p).with_layout(cur.layout))
+                .collect(),
+            // Data layout.
+            4 => space
+                .layouts
+                .iter()
+                .map(|&l| {
+                    Candidate::new(cur.strategy, cur.halo, cur.block, cur.procs)
+                        .with_layout(Some(l))
+                })
                 .collect(),
             _ => Vec::new(),
         }
@@ -338,22 +427,34 @@ impl SearchStrategy for CoordinateDescent {
         "coord"
     }
 
+    fn budget(&self) -> Option<SearchBudget> {
+        self.budget
+    }
+
+    fn set_budget(&mut self, budget: Option<SearchBudget>) {
+        self.budget = budget;
+    }
+
     fn search(
         &self,
         space: &TuningSpace,
         ev: &mut Evaluator<'_>,
     ) -> Result<SearchOutcome, TuneError> {
+        apply_budget(self.budget, ev);
         // Seed: the closed-form-adjacent CA candidate if feasible, else
         // the first feasible candidate in canonical order.
         let mut seeds: Vec<Candidate> = Vec::new();
         if space.strategies.contains(&Strategy::Ca) {
             if let Some(mid) = Self::mid_block(space) {
-                seeds.push(Candidate::new(
-                    Strategy::Ca,
-                    space.default_halo(),
-                    Some(mid),
-                    *space.procs.first().unwrap_or(&1),
-                ));
+                seeds.push(
+                    Candidate::new(
+                        Strategy::Ca,
+                        space.default_halo(),
+                        Some(mid),
+                        *space.procs.first().unwrap_or(&1),
+                    )
+                    .with_layout(space.layout_axis()[0]),
+                );
             }
         }
         seeds.extend(space.candidates());
@@ -368,7 +469,7 @@ impl SearchStrategy for CoordinateDescent {
 
         for _ in 0..self.max_rounds {
             let mut improved = false;
-            for dim in 0..4 {
+            for dim in 0..5 {
                 let variants = Self::variants(space, cur, dim);
                 if variants.len() < 2 {
                     continue;
@@ -440,6 +541,7 @@ mod tests {
             halos: vec![HaloMode::MultiLevel, HaloMode::Level0Only],
             blocks: vec![1, 2, 4, 8, 12, 16, 24, 32, 48, 64],
             procs: vec![procs],
+            layouts: Vec::new(),
         }
     }
 
@@ -537,6 +639,93 @@ mod tests {
         assert_eq!(ev.eval(a).unwrap(), Some(4.0));
         drop(ev);
         assert_eq!(calls, 2, "duplicate and repeat evaluations must be memoized");
+    }
+
+    #[test]
+    fn budget_stops_at_the_cap_and_keeps_the_incumbent() {
+        let space = space_1_to_64(4);
+        assert!(space.num_candidates() > 5);
+        let mut ev = Evaluator::new(v_eval(12, 50.0));
+        let strategy =
+            ExhaustiveGrid { budget: Some(SearchBudget { max_engine_runs: 5 }), ..Default::default() };
+        let out = strategy.search(&space, &mut ev).unwrap();
+        assert_eq!(ev.engine_runs(), 5, "search must stop exactly at the cap");
+        // The verdict is the incumbent: best of what was actually scored,
+        // and a member of the evaluated set.
+        assert!(ev.evaluated().iter().any(|&(c, _)| c == out.chosen));
+        let best = ev.evaluated().iter().map(|&(_, s)| s).fold(f64::INFINITY, f64::min);
+        assert_eq!(out.makespan, best);
+
+        // The budgeted hill climber and golden section degrade the same way.
+        for (label, boxed) in [
+            ("golden", Box::new(GoldenSection {
+                budget: Some(SearchBudget { max_engine_runs: 5 }),
+                ..Default::default()
+            }) as Box<dyn SearchStrategy>),
+            ("coord", Box::new(CoordinateDescent {
+                budget: Some(SearchBudget { max_engine_runs: 5 }),
+                ..Default::default()
+            })),
+        ] {
+            let mut ev = Evaluator::new(v_eval(12, 50.0));
+            let out = boxed.search(&space, &mut ev).unwrap();
+            assert!(ev.engine_runs() <= 5, "{label}: {}", ev.engine_runs());
+            assert!(ev.evaluated().iter().any(|&(c, _)| c == out.chosen), "{label}");
+        }
+    }
+
+    #[test]
+    fn set_budget_reconfigures_through_the_trait_object() {
+        let mut boxed: Box<dyn SearchStrategy> = Box::new(ExhaustiveGrid::default());
+        assert!(boxed.budget().is_none());
+        boxed.set_budget(Some(SearchBudget { max_engine_runs: 3 }));
+        assert_eq!(boxed.budget(), Some(SearchBudget { max_engine_runs: 3 }));
+        let space = space_1_to_64(2);
+        let mut ev = Evaluator::new(v_eval(8, 50.0));
+        boxed.search(&space, &mut ev).unwrap();
+        assert_eq!(ev.engine_runs(), 3);
+    }
+
+    #[test]
+    fn searches_explore_the_layout_axis() {
+        use crate::partition::grid_axis;
+        // Scorer: the 2x2 grid layout halves every score.
+        let grid_eval = |cands: &[Candidate]| -> Result<Vec<(Candidate, Option<f64>)>, TuneError> {
+            Ok(cands
+                .iter()
+                .map(|&c| {
+                    let b = c.effective_block().min(64) as f64;
+                    let mut s = 100.0 + (b - 8.0).abs();
+                    if matches!(
+                        c.layout,
+                        Some(crate::partition::Partitioning::Grid(
+                            crate::partition::ProcGrid::Grid { px: 2, py: 2 }
+                        ))
+                    ) {
+                        s *= 0.5;
+                    }
+                    (c, Some(s))
+                })
+                .collect())
+        };
+        let space = space_1_to_64(4).with_layouts(grid_axis(4));
+        for strategy in [
+            Box::new(ExhaustiveGrid::default()) as Box<dyn SearchStrategy>,
+            Box::new(GoldenSection::default()),
+            Box::new(CoordinateDescent::default()),
+        ] {
+            let mut ev = Evaluator::new(grid_eval);
+            let out = strategy.search(&space, &mut ev).unwrap();
+            assert_eq!(
+                out.chosen.layout,
+                Some(crate::partition::Partitioning::Grid(
+                    crate::partition::ProcGrid::Grid { px: 2, py: 2 }
+                )),
+                "{}: {:?}",
+                strategy.label(),
+                out.chosen
+            );
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! that a candidate is infeasible for the workload at hand) happens in
 //! the evaluator, so spaces can be enumerated without touching a graph.
 
+use crate::partition::{Partitioning, ProcGrid};
 use crate::pipeline::Strategy;
 use crate::sim::Machine;
 use crate::transform::HaloMode;
@@ -29,6 +30,10 @@ pub struct Candidate {
     /// Block factor (CA only; `None` means one whole-graph superstep).
     pub block: Option<u32>,
     pub procs: u32,
+    /// Data-layout override (`None` = the pipeline's own layout); set by
+    /// the [`TuningSpace::layouts`] axis, applies to every strategy —
+    /// the layout changes the graph, not the plan.
+    pub layout: Option<Partitioning>,
 }
 
 impl Candidate {
@@ -36,9 +41,21 @@ impl Candidate {
     /// for naive/overlap candidates.
     pub fn new(strategy: Strategy, halo: HaloMode, block: Option<u32>, procs: u32) -> Self {
         match strategy {
-            Strategy::Ca => Candidate { strategy, halo, block, procs },
-            _ => Candidate { strategy, halo: HaloMode::MultiLevel, block: None, procs },
+            Strategy::Ca => Candidate { strategy, halo, block, procs, layout: None },
+            _ => Candidate {
+                strategy,
+                halo: HaloMode::MultiLevel,
+                block: None,
+                procs,
+                layout: None,
+            },
         }
+    }
+
+    /// Attach (or clear) the layout dimension.
+    pub fn with_layout(mut self, layout: Option<Partitioning>) -> Self {
+        self.layout = layout;
+        self
     }
 
     pub fn naive(procs: u32) -> Self {
@@ -53,9 +70,10 @@ impl Candidate {
         Candidate::new(Strategy::Ca, HaloMode::MultiLevel, Some(block), procs)
     }
 
-    /// Human-readable tag ("naive", "ca(b=8)", "ca(b=8,level0)").
+    /// Human-readable tag ("naive", "ca(b=8)", "ca(b=8,level0)"), with a
+    /// `@layout` suffix when the layout dimension is set ("naive@3x3").
     pub fn label(&self) -> String {
-        match self.strategy {
+        let base = match self.strategy {
             Strategy::Naive => "naive".to_string(),
             Strategy::Overlap => "overlap".to_string(),
             Strategy::Ca => {
@@ -68,6 +86,10 @@ impl Candidate {
                     HaloMode::Level0Only => format!("ca(b={b},level0)"),
                 }
             }
+        };
+        match self.layout {
+            None => base,
+            Some(l) => format!("{base}@{}", l.key()),
         }
     }
 
@@ -84,10 +106,12 @@ impl Candidate {
     }
 
     /// Deterministic tie-break order: fewer-redundancy configurations
-    /// first (naive < overlap < CA by ascending block, multi-level halo
-    /// before level-0), so every search strategy resolves plateaus the
-    /// same way the §2.1 tuner does (smallest b within tolerance).
-    pub(crate) fn order_key(&self) -> (u32, u8, u32, u8) {
+    /// first (simpler layouts before finer ones — a strip has fewer
+    /// neighbours and ghost buffers than a 2-D grid — then naive <
+    /// overlap < CA by ascending block, multi-level halo before
+    /// level-0), so every search strategy resolves plateaus the same way
+    /// the §2.1 tuner does (smallest b within tolerance).
+    pub(crate) fn order_key(&self) -> (u32, LayoutOrder, u8, u32, u8) {
         let srank = match self.strategy {
             Strategy::Naive => 0u8,
             Strategy::Overlap => 1,
@@ -97,12 +121,32 @@ impl Candidate {
             HaloMode::MultiLevel => 0u8,
             HaloMode::Level0Only => 1,
         };
-        (self.procs, srank, self.effective_block(), hrank)
+        (self.procs, layout_order(self.layout), srank, self.effective_block(), hrank)
     }
 }
 
-/// The joint search space: `strategies × halos × blocks × procs`
-/// (halo and block apply to the CA strategy only).
+/// Lexicographic layout rank: (variant tag, then the shape's own
+/// dimensions) — exact for any `u32` extents, no bit-packing.
+type LayoutOrder = (u8, u32, u32, u32, u32);
+
+/// Total order over the layout dimension: the pipeline's own layout,
+/// then strips, then ever finer grids, then graph partitioners.
+fn layout_order(layout: Option<Partitioning>) -> LayoutOrder {
+    match layout {
+        None => (0, 0, 0, 0, 0),
+        Some(Partitioning::Grid(ProcGrid::Strip)) => (1, 0, 0, 0, 0),
+        Some(Partitioning::Grid(ProcGrid::Square)) => (2, 0, 0, 0, 0),
+        Some(Partitioning::Grid(ProcGrid::Grid { px, py })) => (3, px, py, 0, 0),
+        Some(Partitioning::Grid(ProcGrid::BlockCyclic { px, py, th, tw })) => {
+            (4, px, py, th, tw)
+        }
+        Some(Partitioning::Graph(p)) => (5, p as u32, 0, 0, 0),
+    }
+}
+
+/// The joint search space: `strategies × halos × blocks × procs ×
+/// layouts` (halo and block apply to the CA strategy only; layouts to
+/// every strategy).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TuningSpace {
     pub strategies: Vec<Strategy>,
@@ -111,6 +155,9 @@ pub struct TuningSpace {
     pub blocks: Vec<u32>,
     /// Candidate processor counts (normally just the pipeline's own).
     pub procs: Vec<u32>,
+    /// Data-layout axis (empty = tune on the pipeline's own layout only;
+    /// see [`crate::partition::grid_axis`] for the grid family).
+    pub layouts: Vec<Partitioning>,
 }
 
 impl TuningSpace {
@@ -151,7 +198,36 @@ impl TuningSpace {
             halos: vec![HaloMode::MultiLevel, HaloMode::Level0Only],
             blocks,
             procs: vec![procs],
+            layouts: Vec::new(),
         }
+    }
+
+    /// Add a data-layout axis: every strategy/halo/block combination is
+    /// additionally tried under each layout.
+    pub fn with_layouts(mut self, layouts: Vec<Partitioning>) -> Self {
+        self.layouts = layouts;
+        self
+    }
+
+    /// Clamp the block axis to a tile-geometry bound
+    /// ([`crate::partition::ProcGrid::tile_bound`]): block factors whose
+    /// superstep halo would outgrow the narrowest tile are dropped, and
+    /// the bound itself joins the axis so the geometry's own maximum is
+    /// always tried.  A bound of one means no blocking fits the geometry
+    /// at all — the CA strategy is dropped outright (an empty block axis
+    /// would otherwise enumerate the *whole-graph* superstep, the
+    /// largest blocking there is).
+    pub fn clamp_blocks(mut self, tile_bound: u32) -> Self {
+        self.blocks.retain(|&b| b <= tile_bound);
+        if tile_bound >= 2 {
+            self.blocks.push(tile_bound);
+            self.blocks.sort_unstable();
+            self.blocks.dedup();
+        } else {
+            self.blocks.clear();
+            self.strategies.retain(|&s| s != Strategy::Ca);
+        }
+        self
     }
 
     /// First halo in the axis (multi-level unless the space says
@@ -160,10 +236,21 @@ impl TuningSpace {
         self.halos.first().copied().unwrap_or(HaloMode::MultiLevel)
     }
 
+    /// The layout axis as the per-candidate override list: `None` (the
+    /// pipeline's own layout) when the axis is empty.
+    pub fn layout_axis(&self) -> Vec<Option<Partitioning>> {
+        if self.layouts.is_empty() {
+            vec![None]
+        } else {
+            self.layouts.iter().map(|&l| Some(l)).collect()
+        }
+    }
+
     /// Enumerate every candidate in canonical order: per processor
-    /// count, strategies as listed; the CA strategy fans out over
-    /// ascending blocks × halos.  The order doubles as the plateau
-    /// tie-break (earlier = preferred at equal predicted runtime).
+    /// count, layouts as listed, strategies as listed; the CA strategy
+    /// fans out over ascending blocks × halos.  The order doubles as the
+    /// plateau tie-break (earlier = preferred at equal predicted
+    /// runtime).
     pub fn candidates(&self) -> Vec<Candidate> {
         let mut v: Vec<Candidate> = Vec::new();
         fn push(c: Candidate, v: &mut Vec<Candidate>) {
@@ -172,19 +259,28 @@ impl TuningSpace {
             }
         }
         for &p in &self.procs {
-            for &s in &self.strategies {
-                match s {
-                    Strategy::Ca => {
-                        if self.blocks.is_empty() {
-                            push(Candidate::new(s, self.default_halo(), None, p), &mut v);
-                        }
-                        for &b in &self.blocks {
-                            for &h in &self.halos {
-                                push(Candidate::new(s, h, Some(b), p), &mut v);
+            for l in self.layout_axis() {
+                for &s in &self.strategies {
+                    match s {
+                        Strategy::Ca => {
+                            if self.blocks.is_empty() {
+                                push(
+                                    Candidate::new(s, self.default_halo(), None, p)
+                                        .with_layout(l),
+                                    &mut v,
+                                );
+                            }
+                            for &b in &self.blocks {
+                                for &h in &self.halos {
+                                    push(Candidate::new(s, h, Some(b), p).with_layout(l), &mut v);
+                                }
                             }
                         }
+                        _ => push(
+                            Candidate::new(s, HaloMode::MultiLevel, None, p).with_layout(l),
+                            &mut v,
+                        ),
                     }
-                    _ => push(Candidate::new(s, HaloMode::MultiLevel, None, p), &mut v),
                 }
             }
         }
@@ -217,13 +313,18 @@ impl TuningSpace {
             .collect();
         let blocks: Vec<String> = self.blocks.iter().map(u32::to_string).collect();
         let procs: Vec<String> = self.procs.iter().map(u32::to_string).collect();
-        format!(
+        let mut fp = format!(
             "s={};h={};b={};p={}",
             strategies.join(","),
             halos.join(","),
             blocks.join(","),
             procs.join(",")
-        )
+        );
+        if !self.layouts.is_empty() {
+            let layouts: Vec<String> = self.layouts.iter().map(Partitioning::key).collect();
+            fp.push_str(&format!(";l={}", layouts.join(",")));
+        }
+        fp
     }
 }
 
@@ -301,6 +402,51 @@ mod tests {
         let mut narrower = a.clone();
         narrower.blocks.pop();
         assert_ne!(a.fingerprint(), narrower.fingerprint());
+    }
+
+    #[test]
+    fn layout_axis_fans_out_every_strategy() {
+        use crate::partition::grid_axis;
+        let mach = Machine::new(9, 4, 64.0, 0.1, 1.0);
+        let plain = TuningSpace::for_problem(9, 8, &mach);
+        let spaced = plain.clone().with_layouts(grid_axis(9));
+        // strip, 1x9, 3x3 — three layouts multiply the whole space.
+        assert_eq!(spaced.layouts.len(), 3);
+        assert_eq!(spaced.num_candidates(), 3 * plain.num_candidates());
+        // Layout-free candidates carry None; spaced ones carry the axis.
+        assert!(plain.candidates().iter().all(|c| c.layout.is_none()));
+        assert!(spaced.candidates().iter().all(|c| c.layout.is_some()));
+        // Canonical order still strictly increases (grid_axis lists
+        // strip before the finer grids, matching layout_order).
+        let cands = spaced.candidates();
+        for w in cands.windows(2) {
+            assert!(w[0].order_key() < w[1].order_key(), "{w:?}");
+        }
+        // Labels carry the layout.
+        assert!(cands[0].label() == "naive@strip", "{}", cands[0].label());
+        // The layout axis is part of the fingerprint.
+        assert_ne!(plain.fingerprint(), spaced.fingerprint());
+        assert!(spaced.fingerprint().ends_with(";l=strip,1x9,3x3"), "{}", spaced.fingerprint());
+    }
+
+    #[test]
+    fn clamp_blocks_respects_tile_geometry() {
+        use crate::partition::ProcGrid;
+        let mach = Machine::new(4, 4, 500.0, 0.1, 1.0);
+        // 12x8 over a 2x2 grid: tiles 6x4 → bound 4.
+        let grid = ProcGrid::Grid { px: 2, py: 2 };
+        let bound = grid.tile_bound(4, 12, 8).unwrap();
+        let space = TuningSpace::for_problem(4, 32, &mach).clamp_blocks(bound);
+        assert!(space.blocks.iter().all(|&b| b <= bound), "{:?}", space.blocks);
+        assert!(space.blocks.contains(&bound));
+        assert!(!space.blocks.is_empty());
+        // A 1-wide tile admits no blocking: CA drops out entirely rather
+        // than degenerating to the whole-graph superstep.
+        let flat = TuningSpace::for_problem(4, 32, &mach).clamp_blocks(1);
+        assert!(flat.blocks.is_empty());
+        assert!(!flat.strategies.contains(&Strategy::Ca));
+        assert!(flat.candidates().iter().all(|c| c.strategy != Strategy::Ca));
+        assert!(!flat.candidates().is_empty()); // naive/overlap remain
     }
 
     #[test]
