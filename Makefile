@@ -3,15 +3,23 @@
 
 CARGO ?= cargo
 
-.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke
+.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke
 
-ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke
+ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke
 
 # The simulator perf tracker: a reduced fig-7/8 sweep across all four
 # network models, emitting per-cell makespan + simulator wall-time so the
 # trajectory is visible from every push (BENCH_sim.json).
 sweep-smoke: build
 	$(CARGO) run --release -- sweep --smoke
+
+# The engine perf tracker: every cell of the sweep-smoke grid simulated
+# on both the compiled and the interpreting engine, cross-checked
+# bit-for-bit (any divergence fails this target), emitting events/sec,
+# sims/sec, the compile-vs-simulate split, and the compiled-vs-
+# interpreted speedup (BENCH_engine.json).
+bench-smoke: build
+	$(CARGO) run --release -- bench --smoke
 
 # The autotuner tracker: tune two workloads across all four network
 # models, twice each (the second pass exercises the tuning cache),

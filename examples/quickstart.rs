@@ -12,7 +12,7 @@
 
 use imp_latency::partition::{Partitioning, ProcGrid};
 use imp_latency::pipeline::{Heat1d, Heat2d, Pipeline};
-use imp_latency::sim::{Machine, NetworkKind};
+use imp_latency::sim::{simulate_compiled, EngineScratch, Machine, NetworkKind};
 use imp_latency::transform::check_schedule;
 use imp_latency::tune::Tuner;
 
@@ -118,4 +118,33 @@ fn main() {
             .expect("machine configured");
         println!("  {:>5}: {}", grid.key(), r.summary());
     }
+
+    // 8. Bench: the simulator's hot path.  `t.sweep_input()` lowers the
+    //    plan once into a CompiledPlan (flat phase streams, dense channel
+    //    table, baked per-task costs); `simulate_compiled` then replays
+    //    it against a reusable EngineScratch — allocation-free per run —
+    //    which is how sweep/tune afford thousands of grid cells.  The
+    //    `bench` CLI subcommand (`make bench-smoke` → BENCH_engine.json)
+    //    times exactly this against the interpreting engine.
+    let input = Pipeline::new(Heat1d::new(512, 16))
+        .procs(8)
+        .block(4)
+        .transform()
+        .expect("transform")
+        .sweep_input();
+    let mut scratch = EngineScratch::new();
+    let t0 = std::time::Instant::now();
+    let runs = 100;
+    let mut last = 0.0;
+    for _ in 0..runs {
+        let mut net = NetworkKind::AlphaBeta.build_for(&machine, input.layout.as_ref());
+        last = simulate_compiled(&input.compiled, &machine, net.as_mut(), &mut scratch, false)
+            .expect("pipeline plans are deadlock-free")
+            .total_time;
+    }
+    println!(
+        "\ncompiled engine: {runs} simulations of {} in {:.1} ms (makespan {last}, one compile)",
+        input.strategy,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
 }

@@ -157,6 +157,27 @@ pub fn preset_sweep_smoke() -> Config {
     c
 }
 
+/// The `bench` CLI preset: the engine micro-benchmark — the sweep-smoke
+/// grid (fig-7/8 regimes × all four wires) simulated `repeat` times per
+/// cell on both the compiled and the interpreting engine, with every
+/// cell cross-checked bit-for-bit between the two.
+pub fn preset_bench() -> Config {
+    let mut c = preset_sweep_smoke();
+    c.set("repeat", 20);
+    c.set("out", "results/bench.json");
+    c
+}
+
+/// The `bench --smoke` preset: the CI engine-perf tracker, emitting
+/// `BENCH_engine.json` (events/sec, sims/sec, compile-vs-simulate
+/// split, compiled-vs-interpreted speedup) on every push.
+pub fn preset_bench_smoke() -> Config {
+    let mut c = preset_bench();
+    c.set("repeat", 5);
+    c.set("out", "BENCH_engine.json");
+    c
+}
+
 /// The `tune` CLI preset: engine-in-the-loop autotuning of each
 /// workload under every wire model, with a file-backed
 /// [`crate::tune::TuningCache`] so repeat invocations skip the search.
@@ -343,6 +364,14 @@ mod tests {
         }
         // The smoke grid is exactly the two paper regimes.
         assert_eq!(preset_sweep_smoke().get("alphas"), Some("8,500"));
+        for c in [preset_bench(), preset_bench_smoke()] {
+            for k in [
+                "workloads", "networks", "alphas", "threads", "blocks", "p", "repeat", "out",
+            ] {
+                assert!(c.get(k).is_some(), "{k}");
+            }
+        }
+        assert_eq!(preset_bench_smoke().get("out"), Some("BENCH_engine.json"));
         for c in [preset_tune(), preset_tune_smoke()] {
             for k in [
                 "workloads", "networks", "search", "p", "n", "m", "h", "w", "threads",

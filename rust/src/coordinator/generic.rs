@@ -60,9 +60,10 @@ pub fn sequential_values(g: &TaskGraph) -> Vec<u64> {
 
 /// [`sequential_values`] under caller-chosen semantics.
 pub fn sequential_values_with(g: &TaskGraph, sem: ValueSemantics) -> Vec<u64> {
-    let order = g.topo_order().0;
+    // The topological order is cached on the graph at build time; no
+    // per-evaluation Kahn pass.
     let mut val = vec![0u64; g.len()];
-    for t in order {
+    for &t in g.topo() {
         let tid = TaskId(t);
         val[t as usize] = match g.kind(tid) {
             TaskKind::Input => (sem.input)(g.item(tid)),

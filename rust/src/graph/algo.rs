@@ -13,26 +13,19 @@ pub struct TopoOrder(pub Vec<u32>);
 pub struct Levels(pub Vec<u32>);
 
 impl TaskGraph {
-    /// Kahn topological order.  The graph is validated acyclic at build
-    /// time, so this cannot fail.
+    /// The graph's topological order, computed **once** by the builder's
+    /// Kahn validation pass and cached on the graph — transforms,
+    /// simulators, and the sequential reference evaluator all share it
+    /// instead of re-deriving it per call.
+    #[inline]
+    pub fn topo(&self) -> &[u32] {
+        &self.topo
+    }
+
+    /// The cached topological order as an owned [`TopoOrder`] (clones;
+    /// prefer [`TaskGraph::topo`] for borrowing consumers).
     pub fn topo_order(&self) -> TopoOrder {
-        let n = self.len();
-        let mut indeg: Vec<u32> =
-            (0..n).map(|i| self.pred_off[i + 1] - self.pred_off[i]).collect();
-        let mut queue: std::collections::VecDeque<u32> =
-            (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
-        let mut order = Vec::with_capacity(n);
-        while let Some(t) = queue.pop_front() {
-            order.push(t);
-            for &s in self.succs(TaskId(t)) {
-                indeg[s as usize] -= 1;
-                if indeg[s as usize] == 0 {
-                    queue.push_back(s);
-                }
-            }
-        }
-        debug_assert_eq!(order.len(), n);
-        TopoOrder(order)
+        TopoOrder(self.topo.clone())
     }
 
     /// Backward transitive closure: every task reachable from `seeds`
@@ -195,6 +188,9 @@ mod tests {
     fn topo_order_respects_edges() {
         let g = chain_graph(5, 3);
         let order = g.topo_order().0;
+        // The owned form clones the build-time cache.
+        assert_eq!(order, g.topo());
+        assert_eq!(order.len(), g.len());
         let mut pos = vec![0usize; g.len()];
         for (i, &t) in order.iter().enumerate() {
             pos[t as usize] = i;

@@ -161,12 +161,16 @@ impl GraphBuilder {
             pred_adj,
             succ_off,
             succ_adj,
+            topo: Vec::new(),
             nprocs: self.nprocs,
             nlevels: 0,
         };
 
-        // Kahn topological pass: detects cycles and recomputes levels as
-        // longest-path depth from the sources.
+        // Kahn topological pass: detects cycles, recomputes levels as
+        // longest-path depth from the sources, and records the visit
+        // order — the cached topological order every later consumer
+        // (transform, simulators, the sequential reference evaluator)
+        // shares instead of re-deriving per call.
         let mut indeg: Vec<u32> = (0..n)
             .map(|i| g.pred_off[i + 1] - g.pred_off[i])
             .collect();
@@ -174,9 +178,9 @@ impl GraphBuilder {
             .filter(|&i| indeg[i as usize] == 0)
             .collect();
         let mut depth = vec![0u32; n];
-        let mut seen = 0usize;
+        let mut order: Vec<u32> = Vec::with_capacity(n);
         while let Some(t) = queue.pop_front() {
-            seen += 1;
+            order.push(t);
             let (s0, s1) = (g.succ_off[t as usize], g.succ_off[t as usize + 1]);
             for k in s0..s1 {
                 let s = g.succ_adj[k as usize];
@@ -187,10 +191,11 @@ impl GraphBuilder {
                 }
             }
         }
-        if seen != n {
+        if order.len() != n {
             let involved = indeg.iter().position(|&d| d > 0).unwrap_or(0) as u32;
             return Err(GraphError::Cycle { involved });
         }
+        g.topo = order;
         g.level = depth;
         g.nlevels = g.level.iter().copied().max().map_or(0, |m| m + 1);
         Ok(g)

@@ -75,6 +75,10 @@ pub struct TaskGraph {
     pub(crate) pred_adj: Vec<u32>,
     pub(crate) succ_off: Vec<u32>,
     pub(crate) succ_adj: Vec<u32>,
+    /// A topological order, recorded by the builder's Kahn
+    /// validation/levelling pass — computed once at build instead of
+    /// per transform/execution ([`TaskGraph::topo`]).
+    pub(crate) topo: Vec<u32>,
     pub(crate) nprocs: u32,
     pub(crate) nlevels: u32,
 }

@@ -44,9 +44,13 @@
 //! * [`sim`] — the §4 simulation stack: an event-driven engine
 //!   (binary-heap event queue, blocked-receiver wakeup) with pluggable
 //!   wire models ([`sim::NetworkKind`]: α+β·words, LogGP, hierarchical,
-//!   contended NICs), a per-task [`sim::TaskCostModel`] hook, parallel
-//!   parameter sweeps ([`sim::sweep`]), and closed-form BSP evaluation
-//!   for naive / overlap / communication-avoiding schedules.
+//!   contended NICs) and a per-task [`sim::TaskCostModel`] hook.  Hot
+//!   path: plans are lowered **once** into a [`sim::CompiledPlan`] (flat
+//!   CSR phase streams, dense channel table, baked costs) and simulated
+//!   allocation-free against a reusable [`sim::EngineScratch`] — the
+//!   compile→simulate flow every [`sim::sweep`] grid and tuner candidate
+//!   rides (`bench` CLI tracks it); closed-form BSP evaluation covers
+//!   naive / overlap / communication-avoiding schedules analytically.
 //! * [`pipeline`] — **the front door**: the [`pipeline::Workload`] trait
 //!   and the [`pipeline::Pipeline`] builder tying every layer below into
 //!   one expression, with a shared [`pipeline::RunReport`].

@@ -13,9 +13,9 @@
 //! * `dot` — Graphviz export of a (small) transformed graph.
 
 use imp_latency::config::{
-    parse_list, preset_end_to_end, preset_fig10, preset_fig7, preset_fig8, preset_fig9,
-    preset_partition, preset_partition_smoke, preset_sweep, preset_sweep_smoke, preset_tune,
-    preset_tune_smoke, Config,
+    parse_list, preset_bench, preset_bench_smoke, preset_end_to_end, preset_fig10, preset_fig7,
+    preset_fig8, preset_fig9, preset_partition, preset_partition_smoke, preset_sweep,
+    preset_sweep_smoke, preset_tune, preset_tune_smoke, Config,
 };
 use imp_latency::coordinator::{heat1d, heat2d};
 use imp_latency::cost::CostModel;
@@ -26,7 +26,10 @@ use imp_latency::pipeline::{
     ConjugateGradient, Heat1d, Heat2d, Moore2d, Pipeline, Spmv, Strategy, Workload,
 };
 use imp_latency::runtime::Registry;
-use imp_latency::sim::{sweep, try_simulate, Machine, NetworkKind, UniformCost};
+use imp_latency::sim::{
+    simulate_compiled, sweep, try_simulate, CompiledPlan, EngineScratch, Machine, NetworkKind,
+    UniformCost,
+};
 use imp_latency::stencil::CsrMatrix;
 use imp_latency::trace::{gantt_ascii, summary_line};
 use imp_latency::transform::{check_schedule, HaloMode, ScheduleStats, TransformOptions};
@@ -55,6 +58,14 @@ COMMANDS
               out=results/sweep.json csv=]
              parallel (α × threads × block × network) grid on the event engine;
              --smoke runs the reduced fig-7/8 preset and defaults out=BENCH_sim.json
+  bench      [--smoke repeat=20 workloads=... networks=... alphas=... threads=...
+              out=results/bench.json]
+             engine micro-benchmark: every cell of the sweep-smoke grid simulated
+             repeat× on the compiled engine (CompiledPlan + reusable scratch) and
+             on the interpreting engine, cross-checked bit-for-bit; reports
+             events/sec, sims/sec, compile-vs-simulate split, and the
+             compiled-vs-interpreted speedup; --smoke emits BENCH_engine.json and
+             fails on any divergence
   cost       [n=65536 m=128 p=16 alpha=300 beta=0.2 gamma=1 max_b=64]
   run-heat1d [n_per_worker=2048 workers=8 b=8 steps=256 nu=0.2]
   run-heat2d [px=2 py=2 b=2 steps=16 nu=0.15]
@@ -106,6 +117,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "transform" => cmd_transform(&rest),
         "simulate" => cmd_simulate(&rest),
         "sweep" => cmd_sweep(&rest),
+        "bench" => cmd_bench(&rest),
         "cost" => cmd_cost(&rest),
         "run-heat1d" => cmd_run_heat1d(&rest),
         "run-heat2d" => cmd_run_heat2d(&rest),
@@ -411,19 +423,18 @@ fn sweep_inputs_for(
     dispatch_workload(name, cfg, &mut V { cfg, blocks })?
 }
 
-fn cmd_sweep(args: &[&str]) -> Result<(), String> {
-    let smoke = args.contains(&"--smoke");
-    // `--smoke` is the CI perf tracker: the fig-7 (α=8) and fig-8 (α=500)
-    // regimes on problems small enough to run on every push.
-    let defaults = if smoke { preset_sweep_smoke() } else { preset_sweep() };
-    let (cfg, _) = config_from(defaults, args);
-
-    let workloads: Vec<String> = cfg
+/// Comma-separated `workloads=` names from the config.
+fn workloads_from(cfg: &Config) -> Result<Vec<String>, String> {
+    Ok(cfg
         .require::<String>("workloads")?
         .split(',')
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
-        .collect();
+        .collect())
+}
+
+/// Comma-separated `networks=` tags from the config, parsed into kinds.
+fn networks_from(cfg: &Config) -> Result<Vec<NetworkKind>, String> {
     let mut networks = Vec::new();
     for tag in cfg.require::<String>("networks")?.split(',') {
         let tag = tag.trim();
@@ -431,6 +442,31 @@ fn cmd_sweep(args: &[&str]) -> Result<(), String> {
             networks.push(NetworkKind::parse(tag)?);
         }
     }
+    Ok(networks)
+}
+
+/// Write a report JSON to `out` (creating parent directories) and log it
+/// — the shared tail of every `BENCH_*.json`-emitting subcommand.
+fn write_json_report(out: &str, json: &str) -> Result<(), String> {
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    std::fs::write(out, json).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_sweep(args: &[&str]) -> Result<(), String> {
+    let smoke = args.contains(&"--smoke");
+    // `--smoke` is the CI perf tracker: the fig-7 (α=8) and fig-8 (α=500)
+    // regimes on problems small enough to run on every push.
+    let defaults = if smoke { preset_sweep_smoke() } else { preset_sweep() };
+    let (cfg, _) = config_from(defaults, args);
+
+    let workloads = workloads_from(&cfg)?;
+    let networks = networks_from(&cfg)?;
     let alphas: Vec<f64> = parse_list(&cfg.require::<String>("alphas")?)?;
     let threads: Vec<u32> = parse_list(&cfg.require::<String>("threads")?)?;
     let blocks: Vec<u32> = parse_list(&cfg.require::<String>("blocks")?)?;
@@ -468,13 +504,7 @@ fn cmd_sweep(args: &[&str]) -> Result<(), String> {
 
     let out = cfg.get_or("out", "results/sweep.json".to_string());
     let json = sweep::to_json(if smoke { "smoke" } else { "sweep" }, &cells);
-    if let Some(dir) = std::path::Path::new(&out).parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
-        }
-    }
-    std::fs::write(&out, json).map_err(|e| e.to_string())?;
-    println!("wrote {out}");
+    write_json_report(&out, &json)?;
     if let Some(csv_path) = cfg.get("csv") {
         if !csv_path.is_empty() {
             std::fs::write(csv_path, sweep::to_csv(&cells)).map_err(|e| e.to_string())?;
@@ -482,6 +512,219 @@ fn cmd_sweep(args: &[&str]) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+/// One benchmarked grid cell: both engines run `repeat` identical
+/// simulations, cross-checked bit-for-bit before timing is reported.
+struct BenchCell {
+    workload: String,
+    strategy: String,
+    network: &'static str,
+    alpha: f64,
+    threads: u32,
+    makespan: f64,
+    /// Heap events one simulation processes (compiled engine count).
+    events: u64,
+    interpreted_secs: f64,
+    compiled_secs: f64,
+}
+
+fn bench_to_json(tag: &str, repeat: usize, cells: &[BenchCell], compile_secs: f64) -> String {
+    let interp: f64 = cells.iter().map(|c| c.interpreted_secs).sum();
+    let compiled: f64 = cells.iter().map(|c| c.compiled_secs).sum();
+    let sims = (cells.len() * repeat) as f64;
+    let events: u64 = cells.iter().map(|c| c.events * repeat as u64).sum();
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"bench\": {tag:?},\n"));
+    s.push_str(&format!("  \"repeat\": {repeat},\n"));
+    s.push_str(&format!("  \"cells\": {},\n", cells.len()));
+    s.push_str(&format!("  \"sims_per_sec_compiled\": {},\n", sims / compiled.max(1e-12)));
+    s.push_str(&format!("  \"sims_per_sec_interpreted\": {},\n", sims / interp.max(1e-12)));
+    s.push_str(&format!("  \"speedup\": {},\n", interp / compiled.max(1e-12)));
+    s.push_str(&format!(
+        "  \"events_per_sec\": {},\n",
+        events as f64 / compiled.max(1e-12)
+    ));
+    s.push_str(&format!("  \"compile_secs\": {compile_secs},\n"));
+    s.push_str(&format!("  \"simulate_secs\": {compiled},\n"));
+    s.push_str(&format!(
+        "  \"compile_fraction\": {},\n",
+        compile_secs / (compile_secs + compiled).max(1e-12)
+    ));
+    s.push_str("  \"regimes\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": {:?}, \"strategy\": {:?}, \"network\": {:?}, \
+             \"alpha\": {}, \"threads\": {}, \"makespan\": {}, \"events\": {}, \
+             \"interpreted_secs\": {}, \"compiled_secs\": {}, \"speedup\": {}}}{}",
+            c.workload,
+            c.strategy,
+            c.network,
+            c.alpha,
+            c.threads,
+            c.makespan,
+            c.events,
+            c.interpreted_secs,
+            c.compiled_secs,
+            c.interpreted_secs / c.compiled_secs.max(1e-12),
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// The engine micro-benchmark behind `BENCH_engine.json`: the sweep-smoke
+/// grid (fig-7/8 regimes × the four wire models), every cell simulated
+/// `repeat` times by the compiled engine (one `CompiledPlan` per input,
+/// one reused `EngineScratch`) and by the interpreting engine, with the
+/// two results compared bit-for-bit — any divergence fails the run (and
+/// therefore `make bench-smoke` / CI).
+fn cmd_bench(args: &[&str]) -> Result<(), String> {
+    let smoke = args.contains(&"--smoke");
+    let defaults = if smoke { preset_bench_smoke() } else { preset_bench() };
+    let (cfg, _) = config_from(defaults, args);
+    let repeat: usize = cfg.get_or("repeat", 5).max(1);
+
+    let workloads = workloads_from(&cfg)?;
+    let networks = networks_from(&cfg)?;
+    let alphas: Vec<f64> = parse_list(&cfg.require::<String>("alphas")?)?;
+    let threads: Vec<u32> = parse_list(&cfg.require::<String>("threads")?)?;
+    let blocks: Vec<u32> = parse_list(&cfg.require::<String>("blocks")?)?;
+    let beta: f64 = cfg.require("beta")?;
+    let gamma: f64 = cfg.require("gamma")?;
+
+    let mut inputs = Vec::new();
+    for wl in &workloads {
+        inputs.extend(sweep_inputs_for(wl, &cfg, &blocks)?);
+    }
+
+    // Compile-vs-simulate split: time a fresh lowering of every input
+    // (each input already carries one, built by `sweep_input`; this
+    // measures what that one-time cost was).
+    let mut channels = 0usize;
+    let t0 = std::time::Instant::now();
+    for input in &inputs {
+        let cp = CompiledPlan::compile(&input.graph, &input.plan, input.cost.as_ref());
+        channels += cp.num_channels();
+    }
+    let compile_secs = t0.elapsed().as_secs_f64();
+
+    let mut scratch = EngineScratch::new();
+    let mut cells: Vec<BenchCell> = Vec::new();
+    for input in &inputs {
+        let procs = input.plan.per_proc.len() as u32;
+        for kind in &networks {
+            for &alpha in &alphas {
+                for &t in &threads {
+                    let mach = Machine::new(
+                        procs,
+                        t,
+                        alpha,
+                        beta * input.words_per_value as f64,
+                        gamma,
+                    );
+                    let tag = format!(
+                        "{}/{}/{}/α={alpha}/t={t}",
+                        input.workload,
+                        input.strategy,
+                        kind.label()
+                    );
+                    let t0 = std::time::Instant::now();
+                    let mut interp = None;
+                    for _ in 0..repeat {
+                        let mut net = kind.build_for(&mach, input.layout.as_ref());
+                        interp = Some(
+                            try_simulate(
+                                &input.graph,
+                                &input.plan,
+                                &mach,
+                                net.as_mut(),
+                                input.cost.as_ref(),
+                                false,
+                            )
+                            .map_err(|e| format!("{tag}: {e}"))?,
+                        );
+                    }
+                    let interpreted_secs = t0.elapsed().as_secs_f64();
+                    let t0 = std::time::Instant::now();
+                    let mut compiled = None;
+                    for _ in 0..repeat {
+                        let mut net = kind.build_for(&mach, input.layout.as_ref());
+                        compiled = Some(
+                            simulate_compiled(
+                                &input.compiled,
+                                &mach,
+                                net.as_mut(),
+                                &mut scratch,
+                                false,
+                            )
+                            .map_err(|e| format!("{tag}: {e}"))?,
+                        );
+                    }
+                    let compiled_secs = t0.elapsed().as_secs_f64();
+                    let (ri, rc) = (interp.unwrap(), compiled.unwrap());
+                    // The hard gate: the compiled engine must be
+                    // bit-for-bit the interpreting engine on every cell —
+                    // including the busy/wait accounting that only shows
+                    // up in utilization figures.
+                    if rc.total_time != ri.total_time
+                        || rc.messages != ri.messages
+                        || rc.words != ri.words
+                        || rc.proc_finish != ri.proc_finish
+                        || rc.proc_busy != ri.proc_busy
+                        || rc.proc_wait != ri.proc_wait
+                    {
+                        return Err(format!(
+                            "compiled/interpreted divergence on {tag}: \
+                             makespan {} vs {}, {} vs {} msgs, {} vs {} words",
+                            rc.total_time,
+                            ri.total_time,
+                            rc.messages,
+                            ri.messages,
+                            rc.words,
+                            ri.words
+                        ));
+                    }
+                    cells.push(BenchCell {
+                        workload: input.workload.to_string(),
+                        strategy: input.strategy.to_string(),
+                        network: kind.label(),
+                        alpha,
+                        threads: t,
+                        makespan: rc.total_time,
+                        events: scratch.events(),
+                        interpreted_secs,
+                        compiled_secs,
+                    });
+                }
+            }
+        }
+    }
+
+    let interp: f64 = cells.iter().map(|c| c.interpreted_secs).sum();
+    let compiled: f64 = cells.iter().map(|c| c.compiled_secs).sum();
+    let sims = cells.len() * repeat;
+    println!(
+        "bench: {} plans ({channels} channels) × {} cells × {repeat} sims, all \
+         compiled≡interpreted",
+        inputs.len(),
+        cells.len()
+    );
+    println!(
+        "  compiled    {:>10.0} sims/s  ({compiled:.3}s total, compile split {compile_secs:.3}s)",
+        sims as f64 / compiled.max(1e-12),
+    );
+    println!(
+        "  interpreted {:>10.0} sims/s  ({interp:.3}s total)",
+        sims as f64 / interp.max(1e-12)
+    );
+    println!("  speedup     {:>10.2}x", interp / compiled.max(1e-12));
+
+    let out = cfg.get_or("out", "results/bench.json".to_string());
+    let json = bench_to_json(if smoke { "smoke" } else { "bench" }, repeat, &cells, compile_secs);
+    write_json_report(&out, &json)
 }
 
 fn cmd_pipeline(args: &[&str]) -> Result<(), String> {
@@ -844,12 +1087,7 @@ fn cmd_tune(args: &[&str]) -> Result<(), String> {
     let preloaded = cache.len();
     let mut tuner = Tuner::new(search, cache);
 
-    let workloads: Vec<String> = cfg
-        .require::<String>("workloads")?
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
+    let workloads = workloads_from(&cfg)?;
     println!(
         "tune: {} workloads × networks [{}], search={} ({} cached entries loaded)",
         workloads.len(),
@@ -858,13 +1096,16 @@ fn cmd_tune(args: &[&str]) -> Result<(), String> {
         preloaded
     );
     let t0 = std::time::Instant::now();
+    let compiles0 = imp_latency::sim::compile_count();
     let mut rows: Vec<tune::TuneRow> = Vec::new();
     for wl in &workloads {
         rows.extend(tune_rows_for(wl, &cfg, &mut tuner)?);
     }
     let engine_runs: usize = rows.iter().map(|r| r.engine_runs).sum();
+    let compiles = imp_latency::sim::compile_count() - compiles0;
     println!(
-        "{} tunings ({engine_runs} engine runs) in {:.2}s; cache {} hits / {} misses (hit rate {:.2})",
+        "{} tunings ({engine_runs} engine runs, {compiles} plan compilations) in {:.2}s; \
+         cache {} hits / {} misses (hit rate {:.2})",
         rows.len(),
         t0.elapsed().as_secs_f64(),
         tuner.cache.hits(),
@@ -879,14 +1120,7 @@ fn cmd_tune(args: &[&str]) -> Result<(), String> {
         tuner.cache.hits(),
         tuner.cache.misses(),
     );
-    if let Some(dir) = std::path::Path::new(&out).parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
-        }
-    }
-    std::fs::write(&out, json).map_err(|e| e.to_string())?;
-    println!("wrote {out}");
-    Ok(())
+    write_json_report(&out, &json)
 }
 
 /// One layout's `BENCH_partition.json` cells: transform once, then fan
@@ -946,13 +1180,7 @@ fn cmd_partition(args: &[&str]) -> Result<(), String> {
         cfg.require("beta")?,
         cfg.require("gamma")?,
     );
-    let mut networks = Vec::new();
-    for tag in cfg.require::<String>("networks")?.split(',') {
-        let tag = tag.trim();
-        if !tag.is_empty() {
-            networks.push(NetworkKind::parse(tag)?);
-        }
-    }
+    let networks = networks_from(&cfg)?;
     let t0 = std::time::Instant::now();
     let mut rows: Vec<partition::PartitionRow> = Vec::new();
 
@@ -1009,14 +1237,7 @@ fn cmd_partition(args: &[&str]) -> Result<(), String> {
     println!("{} cells in {:.2}s", rows.len(), t0.elapsed().as_secs_f64());
     let out = cfg.get_or("out", "results/partition.json".to_string());
     let json = partition::rows_to_json(if smoke { "smoke" } else { "partition" }, &rows);
-    if let Some(dir) = std::path::Path::new(&out).parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
-        }
-    }
-    std::fs::write(&out, json).map_err(|e| e.to_string())?;
-    println!("wrote {out}");
-    Ok(())
+    write_json_report(&out, &json)
 }
 
 fn cmd_dot(args: &[&str]) -> Result<(), String> {

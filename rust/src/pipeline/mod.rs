@@ -616,17 +616,20 @@ impl<W: Workload> Transformed<W> {
 
     /// Package this run as one input of a [`crate::sim::sweep`] grid —
     /// graph and plan are shared, not copied, across the sweep's worker
-    /// threads.
+    /// threads, and the plan is lowered into its
+    /// [`crate::sim::CompiledPlan`] exactly once here, so every grid
+    /// cell (and every tuner evaluation of this candidate) simulates the
+    /// compiled form.
     pub fn sweep_input(&self) -> SweepInput {
-        SweepInput {
-            workload: self.workload.name(),
-            strategy: self.plan.label.clone(),
-            graph: Arc::clone(&self.graph),
-            plan: Arc::clone(&self.plan),
-            cost: Arc::clone(&self.cost),
-            words_per_value: self.workload.words_per_value(),
-            layout: Some(self.layout),
-        }
+        SweepInput::new(
+            self.workload.name(),
+            self.plan.label.clone(),
+            Arc::clone(&self.graph),
+            Arc::clone(&self.plan),
+            Arc::clone(&self.cost),
+            self.workload.words_per_value(),
+            Some(self.layout),
+        )
     }
 
     /// Execute the plan for real — one OS thread per processor, real
@@ -776,19 +779,23 @@ mod tests {
     #[test]
     fn sweep_input_shares_graph_and_plan() {
         let t = Pipeline::new(Heat1d::new(32, 4)).procs(2).block(2).transform().unwrap();
+        let before = crate::sim::compile_count();
         let input = t.sweep_input();
-        assert_eq!(input.workload, "heat1d");
-        assert_eq!(input.strategy, "ca(b=2)");
+        assert_eq!(&*input.workload, "heat1d");
+        assert_eq!(&*input.strategy, "ca(b=2)");
         assert_eq!(input.plan.messages(), t.plan.messages());
         assert!(Arc::ptr_eq(&input.graph, &t.graph));
         assert!(Arc::ptr_eq(&input.plan, &t.plan));
+        // Packaging lowers the plan exactly once.
+        assert_eq!(crate::sim::compile_count() - before, 1);
+        assert_eq!(input.compiled.num_procs(), 2);
     }
 
     #[test]
     fn strategy_sweep_inputs_builds_the_family() {
         let base = Pipeline::new(Heat1d::new(32, 4)).procs(2);
         let inputs = strategy_sweep_inputs(&base, &[2, 4]).unwrap();
-        let labels: Vec<&str> = inputs.iter().map(|i| i.strategy.as_str()).collect();
+        let labels: Vec<&str> = inputs.iter().map(|i| &*i.strategy).collect();
         assert_eq!(labels, ["naive", "overlap", "ca(b=2)", "ca(b=4)"]);
     }
 
@@ -797,7 +804,7 @@ mod tests {
         let base = Pipeline::new(Heat1d::new(32, 4)).procs(2);
         // Whole-graph CA superstep via block = None.
         let whole = candidate_sweep_input(&base, Strategy::Ca, None, None).unwrap();
-        assert_eq!(whole.strategy, "ca(b=4)");
+        assert_eq!(&*whole.strategy, "ca(b=4)");
         // Halo override flows through: level-0 recomputes more.
         let multi = candidate_sweep_input(&base, Strategy::Ca, Some(4), None).unwrap();
         let lvl0 =
@@ -807,7 +814,7 @@ mod tests {
         // A stale block on the base does not leak into non-CA inputs.
         let naive =
             candidate_sweep_input(&base.clone().block(2), Strategy::Naive, None, None).unwrap();
-        assert_eq!(naive.strategy, "naive");
+        assert_eq!(&*naive.strategy, "naive");
     }
 
     #[test]

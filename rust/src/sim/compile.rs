@@ -1,0 +1,794 @@
+//! Compiled simulation plans: the engine's hot path.
+//!
+//! [`super::engine::try_simulate`] interprets an [`ExecPlan`]'s nested
+//! `Vec<Phase>` directly: every run re-sorts each compute phase, chases
+//! graph predecessors through the cost hook, and routes messages through
+//! four tuple-keyed `HashMap`s (`channel`/`waiting`/`send_seq`/`recv_seq`)
+//! that are allocated from scratch per simulation.  That is fine for one
+//! simulation; a `sweep`/`tune` invocation dispatches the *same* plan
+//! across thousands of (network × α × threads) cells, so the per-run
+//! lowering dominates.
+//!
+//! [`CompiledPlan::compile`] performs that lowering **once** per
+//! `(graph, plan, cost model)`:
+//!
+//! * phase streams per processor in CSR form — `(kind, offset, len)`
+//!   records into one shared `u32` task array, compute phases pre-sorted
+//!   in the engine's `(level, id)` execution order;
+//! * intra-phase dependencies resolved to *positions within the phase*,
+//!   so the hot loop never touches the graph or a hash map;
+//! * per-task costs baked into a flat `f64` array indexed by `TaskId`;
+//! * a dense **channel table**: every `(from, to)` processor pair gets an
+//!   integer channel id, every `Send`/`Recv` its message slot — the
+//!   `k`-th send on a channel pairs with the `k`-th receive, so matching
+//!   is a single indexed load instead of four hash probes;
+//! * per-`Send` word counts, so wire cost needs no task list.
+//!
+//! [`simulate_compiled`] replays the same event-driven semantics as the
+//! interpreting engine — packed-integer events in the heap, per-channel
+//! resolved wire constants where the [`NetworkModel`] permits
+//! ([`NetworkModel::channel_cost`]: α/β and hierarchical wires are static
+//! per channel; LogGP and contended NICs keep their stateful `deliver`) —
+//! against a reusable [`EngineScratch`], so a sweep worker allocates once
+//! and simulates many cells allocation-free.  The interpreting path
+//! survives as this module's equivalence oracle, the same pattern as
+//! `sim/discrete.rs`: the matrix below pins the compiled engine
+//! **bit-for-bit** against it on every workload × strategy × wire model.
+
+use super::discrete::{to_bits, BusySpan, SimResult};
+use super::engine::{SimError, TaskCostModel};
+use super::machine::Machine;
+use super::network::NetworkModel;
+use super::plan::{ExecPlan, Phase};
+use crate::graph::{TaskGraph, TaskId};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+thread_local! {
+    static COMPILES: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of [`CompiledPlan::compile`] invocations performed by the
+/// *current thread* — instrumentation for the "exactly one compilation
+/// per scored candidate" assertions (plans are compiled on the thread
+/// that builds the sweep inputs, never inside sweep workers).
+pub fn compile_count() -> usize {
+    COMPILES.with(|c| c.get())
+}
+
+/// One lowered phase record.  `Compute` indexes the shared task array;
+/// `Send`/`Recv` carry their pre-matched message slot (and, for sends,
+/// the channel id and word count the wire needs).
+#[derive(Debug, Clone, Copy)]
+enum CPhase {
+    Compute { off: u32, len: u32 },
+    Send { msg: u32, chan: u32, words: u32 },
+    Recv { msg: u32 },
+}
+
+/// The one-time lowering of `(TaskGraph, ExecPlan, TaskCostModel)` —
+/// everything the event loop needs, in flat arrays.  Compile once, then
+/// [`simulate_compiled`] any number of machines/wires against it.
+#[derive(Debug, Clone)]
+pub struct CompiledPlan {
+    nprocs: u32,
+    /// Phase records of processor `p`: `phases[proc_off[p]..proc_off[p+1]]`.
+    phases: Vec<CPhase>,
+    proc_off: Vec<u32>,
+    /// Shared task array: compute phases' task lists, each pre-sorted by
+    /// `(level, id)` — the engine's execution order.
+    tasks: Vec<u32>,
+    /// Intra-phase dependency CSR aligned with `tasks`: for slot `k`,
+    /// `pred_pos[pred_off[k]..pred_off[k+1]]` are the *positions within
+    /// the same phase* whose finish times gate this task.
+    pred_off: Vec<u32>,
+    pred_pos: Vec<u32>,
+    /// `cost[t]` = task `t`'s cost in γ units (the cost model, baked).
+    cost: Vec<f64>,
+    /// Dense channel table: `channels[c]` = the `(from, to)` pair of
+    /// integer channel `c`.
+    channels: Vec<(u32, u32)>,
+    /// Message slots: channel `c`'s `k`-th message is slot
+    /// `chan_msg_off[c] + k`; `num_msgs` slots in total.
+    num_msgs: usize,
+    /// Widest compute phase (sizes the finish-time scratch).
+    max_phase: usize,
+}
+
+impl CompiledPlan {
+    /// Lower `plan` for `g` under `cost`.  The result is immutable and
+    /// `Send + Sync` — share it (`Arc`) across sweep workers.
+    pub fn compile(g: &TaskGraph, plan: &ExecPlan, cost: &dyn TaskCostModel) -> CompiledPlan {
+        COMPILES.with(|c| c.set(c.get() + 1));
+        let nprocs = plan.per_proc.len();
+
+        // Pass 1: the dense channel table (every (from, to) pair that any
+        // Send or Recv names) and per-channel traffic counts.  Slots are
+        // max(sends, recvs) so a malformed plan's unmatched Recv still
+        // has a slot to block on (and deadlock-detect through).
+        let mut chan_ids: HashMap<(u32, u32), u32> = HashMap::new();
+        let mut channels: Vec<(u32, u32)> = Vec::new();
+        let mut chan_id = |key: (u32, u32), channels: &mut Vec<(u32, u32)>| -> usize {
+            *chan_ids.entry(key).or_insert_with(|| {
+                channels.push(key);
+                (channels.len() - 1) as u32
+            }) as usize
+        };
+        let mut sends: Vec<u32> = Vec::new();
+        let mut recvs: Vec<u32> = Vec::new();
+        for (p, pp) in plan.per_proc.iter().enumerate() {
+            for ph in &pp.phases {
+                let (key, is_send) = match ph {
+                    Phase::Send { to, .. } => ((p as u32, to.0), true),
+                    Phase::Recv { from, .. } => ((from.0, p as u32), false),
+                    Phase::Compute(_) => continue,
+                };
+                let c = chan_id(key, &mut channels);
+                if c >= sends.len() {
+                    sends.resize(c + 1, 0);
+                    recvs.resize(c + 1, 0);
+                }
+                if is_send {
+                    sends[c] += 1;
+                } else {
+                    recvs[c] += 1;
+                }
+            }
+        }
+        let mut chan_msg_off: Vec<u32> = Vec::with_capacity(channels.len());
+        let mut num_msgs = 0u32;
+        for c in 0..channels.len() {
+            chan_msg_off.push(num_msgs);
+            num_msgs += sends[c].max(recvs[c]);
+        }
+
+        // Pass 2: lower the phase streams.  Message sequence numbers are
+        // assigned in program order, which is execution order — a
+        // channel's sends all live on one processor's stream, and a
+        // cursor only moves forward.
+        let mut phases: Vec<CPhase> = Vec::new();
+        let mut proc_off: Vec<u32> = Vec::with_capacity(nprocs + 1);
+        proc_off.push(0);
+        let mut tasks: Vec<u32> = Vec::new();
+        let mut pred_off: Vec<u32> = vec![0];
+        let mut pred_pos: Vec<u32> = Vec::new();
+        let mut send_seq = vec![0u32; channels.len()];
+        let mut recv_seq = vec![0u32; channels.len()];
+        let mut pos_of = vec![u32::MAX; g.len()];
+        let mut max_phase = 0usize;
+        for (p, pp) in plan.per_proc.iter().enumerate() {
+            for ph in &pp.phases {
+                match ph {
+                    Phase::Compute(ts) => {
+                        let off = tasks.len() as u32;
+                        let mut order = ts.clone();
+                        order.sort_unstable_by_key(|&t| (g.level(TaskId(t)), t));
+                        max_phase = max_phase.max(order.len());
+                        for (j, &t) in order.iter().enumerate() {
+                            pos_of[t as usize] = j as u32;
+                        }
+                        for &t in &order {
+                            // Predecessors computed in this same phase
+                            // gate the task; everything else was ready at
+                            // phase start (phase order + blocking Recv),
+                            // exactly as the interpreting engine treats
+                            // it.  Levels are longest-path depths, so an
+                            // in-phase pred always sorts earlier.
+                            for &pr in g.preds(TaskId(t)) {
+                                if pos_of[pr as usize] != u32::MAX {
+                                    pred_pos.push(pos_of[pr as usize]);
+                                }
+                            }
+                            pred_off.push(pred_pos.len() as u32);
+                            tasks.push(t);
+                        }
+                        for &t in &order {
+                            pos_of[t as usize] = u32::MAX;
+                        }
+                        phases.push(CPhase::Compute { off, len: order.len() as u32 });
+                    }
+                    Phase::Send { to, tasks: ts } => {
+                        let c = chan_id((p as u32, to.0), &mut channels);
+                        let msg = chan_msg_off[c] + send_seq[c];
+                        send_seq[c] += 1;
+                        phases.push(CPhase::Send {
+                            msg,
+                            chan: c as u32,
+                            words: ts.len() as u32,
+                        });
+                    }
+                    Phase::Recv { from, .. } => {
+                        let c = chan_id((from.0, p as u32), &mut channels);
+                        let msg = chan_msg_off[c] + recv_seq[c];
+                        recv_seq[c] += 1;
+                        phases.push(CPhase::Recv { msg });
+                    }
+                }
+            }
+            proc_off.push(phases.len() as u32);
+        }
+
+        let cost: Vec<f64> = g.tasks().map(|t| cost.task_cost(g, t)).collect();
+
+        CompiledPlan {
+            nprocs: nprocs as u32,
+            phases,
+            proc_off,
+            tasks,
+            pred_off,
+            pred_pos,
+            cost,
+            channels,
+            num_msgs: num_msgs as usize,
+            max_phase,
+        }
+    }
+
+    /// Processors the plan runs on.
+    pub fn num_procs(&self) -> u32 {
+        self.nprocs
+    }
+
+    /// Distinct `(from, to)` channels in the dense table.
+    pub fn num_channels(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Message slots (each send/recv pairing resolved at compile time).
+    pub fn num_messages(&self) -> usize {
+        self.num_msgs
+    }
+}
+
+/// Reusable per-worker simulation state: every vector and heap one
+/// [`simulate_compiled`] run needs, sized on first use and recycled —
+/// after warm-up a sweep worker simulates cell after cell without a
+/// single allocation in the event loop.
+#[derive(Debug, Default)]
+pub struct EngineScratch {
+    clock: Vec<f64>,
+    busy: Vec<f64>,
+    wait: Vec<f64>,
+    /// Per-proc *global* phase index into `CompiledPlan::phases`.
+    cursor: Vec<u32>,
+    /// Min-heap of packed events: `(time bits, tiebreak, payload)` with
+    /// `payload = proc << 1` for resumes, `msg << 1 | 1` for arrivals.
+    heap: BinaryHeap<Reverse<(u64, u64, u64)>>,
+    /// Per message slot: arrival time, or `-1.0` while unposted.
+    arrival: Vec<f64>,
+    /// Per message slot: the processor blocked on it (`u32::MAX` = none).
+    waiting: Vec<u32>,
+    /// Intra-phase finish times by position (entries < the running
+    /// position are always written before read, so no clearing needed).
+    finish: Vec<f64>,
+    /// Thread pool min-heap for the list scheduler.
+    threads: BinaryHeap<Reverse<(u64, u32)>>,
+    /// Per-channel resolved wire constants (static wires only).
+    chan_alpha: Vec<f64>,
+    chan_beta: Vec<f64>,
+    events: u64,
+}
+
+impl EngineScratch {
+    pub fn new() -> Self {
+        EngineScratch::default()
+    }
+
+    /// Heap events processed by the most recent run (for `bench`).
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    fn reset(&mut self, cp: &CompiledPlan) {
+        let n = cp.nprocs as usize;
+        self.clock.clear();
+        self.clock.resize(n, 0.0);
+        self.busy.clear();
+        self.busy.resize(n, 0.0);
+        self.wait.clear();
+        self.wait.resize(n, 0.0);
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&cp.proc_off[..n]);
+        self.heap.clear();
+        self.arrival.clear();
+        self.arrival.resize(cp.num_msgs, -1.0);
+        self.waiting.clear();
+        self.waiting.resize(cp.num_msgs, u32::MAX);
+        self.finish.clear();
+        self.finish.resize(cp.max_phase, 0.0);
+        self.events = 0;
+    }
+}
+
+/// One in-flight run: the compiled plan, the machine, and the scratch it
+/// mutates.  Mirrors `engine::Engine`, minus every hash map.
+struct CRun<'a> {
+    cp: &'a CompiledPlan,
+    m: &'a Machine,
+    s: &'a mut EngineScratch,
+    record_spans: bool,
+    spans: Vec<BusySpan>,
+    messages: usize,
+    words: usize,
+    tiebreak: u64,
+    /// Every channel's wire cost resolved to constants at run start.
+    static_wire: bool,
+}
+
+impl CRun<'_> {
+    #[inline]
+    fn push_event(&mut self, at: f64, payload: u64) {
+        self.tiebreak += 1;
+        self.s.heap.push(Reverse((to_bits(at), self.tiebreak, payload)));
+    }
+
+    /// Run processor `p` forward until it finishes or blocks on an
+    /// unposted message slot.
+    fn advance(&mut self, network: &mut dyn NetworkModel, p: usize) {
+        let end = self.cp.proc_off[p + 1];
+        while self.s.cursor[p] < end {
+            match self.cp.phases[self.s.cursor[p] as usize] {
+                CPhase::Compute { off, len } => {
+                    let (phase_end, busy) = self.run_compute(p, off as usize, len as usize);
+                    self.s.busy[p] += busy;
+                    self.s.clock[p] = phase_end;
+                }
+                CPhase::Send { msg, chan, words } => {
+                    let post = self.s.clock[p];
+                    // Zero-word sends cost nothing on the wire and are
+                    // not counted; they still post so the matching Recv
+                    // pairs up.
+                    let arrival = if words == 0 {
+                        post
+                    } else {
+                        self.messages += 1;
+                        self.words += words as usize;
+                        if self.static_wire {
+                            let wire = self.s.chan_alpha[chan as usize]
+                                + self.s.chan_beta[chan as usize] * words as f64;
+                            post + wire
+                        } else {
+                            let (from, to) = self.cp.channels[chan as usize];
+                            network.deliver(from, to, words as usize, post)
+                        }
+                    };
+                    self.s.arrival[msg as usize] = arrival;
+                    self.push_event(arrival, ((msg as u64) << 1) | 1);
+                }
+                CPhase::Recv { msg } => {
+                    let arrival = self.s.arrival[msg as usize];
+                    if arrival < 0.0 {
+                        // Sender has not posted yet: block until the
+                        // slot's arrival event wakes us.
+                        self.s.waiting[msg as usize] = p as u32;
+                        return;
+                    }
+                    if arrival > self.s.clock[p] {
+                        self.s.wait[p] += arrival - self.s.clock[p];
+                        if self.record_spans {
+                            self.spans.push(BusySpan {
+                                proc: p as u32,
+                                thread: 0,
+                                start: self.s.clock[p],
+                                end: arrival,
+                                what: "wait",
+                            });
+                        }
+                        self.s.clock[p] = arrival;
+                    }
+                }
+            }
+            self.s.cursor[p] += 1;
+        }
+    }
+
+    /// The compiled list scheduler: same semantics (and bit-for-bit the
+    /// same arithmetic) as `discrete::run_compute`, but the order is
+    /// pre-sorted and the intra-phase dependencies are positional.
+    fn run_compute(&mut self, p: usize, off: usize, len: usize) -> (f64, f64) {
+        let start = self.s.clock[p];
+        self.s.threads.clear();
+        for tid in 0..self.m.threads {
+            self.s.threads.push(Reverse((to_bits(start), tid)));
+        }
+        let mut busy = 0.0;
+        let mut end = start;
+        for j in 0..len {
+            let slot = off + j;
+            let mut est = start;
+            let (p0, p1) = (self.cp.pred_off[slot] as usize, self.cp.pred_off[slot + 1] as usize);
+            for &pi in &self.cp.pred_pos[p0..p1] {
+                let f = self.s.finish[pi as usize];
+                if f > est {
+                    est = f;
+                }
+            }
+            let Reverse((free_bits, tid)) = self.s.threads.pop().unwrap();
+            let free = f64::from_bits(free_bits);
+            let st = est.max(free);
+            let dur = self.m.gamma * self.cp.cost[self.cp.tasks[slot] as usize];
+            let f = st + dur;
+            self.s.finish[j] = f;
+            self.s.threads.push(Reverse((to_bits(f), tid)));
+            busy += dur;
+            if f > end {
+                end = f;
+            }
+            if self.record_spans {
+                self.spans.push(BusySpan {
+                    proc: p as u32,
+                    thread: tid,
+                    start: st,
+                    end: f,
+                    what: "compute",
+                });
+            }
+        }
+        (end, busy)
+    }
+}
+
+/// Simulate a [`CompiledPlan`] on machine `m` under `network`, reusing
+/// `scratch` across calls.  Same contract and **bit-for-bit** the same
+/// results as [`super::engine::try_simulate`] on the plan it was
+/// compiled from (the cost model is baked into the compiled plan).
+pub fn simulate_compiled(
+    cp: &CompiledPlan,
+    m: &Machine,
+    network: &mut dyn NetworkModel,
+    scratch: &mut EngineScratch,
+    record_spans: bool,
+) -> Result<SimResult, SimError> {
+    assert_eq!(cp.nprocs, m.nprocs, "plan/machine proc count mismatch");
+    let nprocs = cp.nprocs as usize;
+    network.reset();
+    scratch.reset(cp);
+
+    // Resolve per-channel wire constants where the model permits: the
+    // whole run then never crosses the dyn boundary per message.
+    scratch.chan_alpha.clear();
+    scratch.chan_beta.clear();
+    let mut static_wire = true;
+    for &(from, to) in &cp.channels {
+        match network.channel_cost(from, to) {
+            Some((a, b)) => {
+                scratch.chan_alpha.push(a);
+                scratch.chan_beta.push(b);
+            }
+            None => {
+                static_wire = false;
+                break;
+            }
+        }
+    }
+
+    let mut run = CRun {
+        cp,
+        m,
+        s: scratch,
+        record_spans,
+        spans: Vec::new(),
+        messages: 0,
+        words: 0,
+        tiebreak: 0,
+        static_wire,
+    };
+    for p in 0..nprocs {
+        run.push_event(0.0, (p as u64) << 1);
+    }
+    while let Some(Reverse((_, _, payload))) = run.s.heap.pop() {
+        run.s.events += 1;
+        if payload & 1 == 0 {
+            run.advance(network, (payload >> 1) as usize);
+        } else {
+            let msg = (payload >> 1) as usize;
+            let blocked = run.s.waiting[msg];
+            if blocked != u32::MAX {
+                // The receiver blocked on exactly this slot; wake it at
+                // the later of its own clock and the arrival.
+                run.s.waiting[msg] = u32::MAX;
+                let at = run.s.clock[blocked as usize].max(run.s.arrival[msg]);
+                run.push_event(at, (blocked as u64) << 1);
+            }
+        }
+    }
+
+    let stuck: Vec<(u32, usize)> = (0..nprocs)
+        .filter(|&p| run.s.cursor[p] < cp.proc_off[p + 1])
+        .map(|p| (p as u32, (run.s.cursor[p] - cp.proc_off[p]) as usize))
+        .collect();
+    if !stuck.is_empty() {
+        return Err(SimError::Deadlock { stuck });
+    }
+
+    Ok(SimResult {
+        total_time: run.s.clock.iter().copied().fold(0.0, f64::max),
+        proc_finish: run.s.clock.clone(),
+        proc_busy: run.s.busy.clone(),
+        proc_wait: run.s.wait.clone(),
+        messages: run.messages,
+        words: run.words,
+        spans: run.spans,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ProcId;
+    use crate::sim::engine::{try_simulate, UniformCost};
+    use crate::sim::network::{AlphaBeta, NetworkKind};
+    use crate::sim::plan::ProcPlan;
+    use crate::stencil::heat1d_graph;
+    use crate::transform::TransformOptions;
+
+    fn m(nprocs: u32, threads: u32, alpha: f64) -> Machine {
+        Machine::new(nprocs, threads, alpha, 0.5, 1.0)
+    }
+
+    #[test]
+    fn compile_shapes() {
+        let g = heat1d_graph(16, 3, 2);
+        let plan = ExecPlan::naive(&g);
+        let cp = CompiledPlan::compile(&g, &plan, &UniformCost);
+        assert_eq!(cp.num_procs(), 2);
+        // One channel each way.
+        assert_eq!(cp.num_channels(), 2);
+        // Three levels × one message each way.
+        assert_eq!(cp.num_messages(), 6);
+        assert_eq!(cp.cost.len(), g.len());
+    }
+
+    #[test]
+    fn compile_count_increments_per_compile() {
+        let g = heat1d_graph(8, 2, 2);
+        let plan = ExecPlan::naive(&g);
+        let before = compile_count();
+        let _a = CompiledPlan::compile(&g, &plan, &UniformCost);
+        let _b = CompiledPlan::compile(&g, &plan, &UniformCost);
+        assert_eq!(compile_count() - before, 2);
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_different_plans() {
+        let g1 = heat1d_graph(32, 4, 2);
+        let g2 = heat1d_graph(48, 6, 3);
+        let p1 = ExecPlan::naive(&g1);
+        let p2 = ExecPlan::ca(&g2, 3, TransformOptions::default()).unwrap();
+        let (m1, m2) = (m(2, 2, 50.0), m(3, 4, 10.0));
+        let cp1 = CompiledPlan::compile(&g1, &p1, &UniformCost);
+        let cp2 = CompiledPlan::compile(&g2, &p2, &UniformCost);
+
+        let mut shared = EngineScratch::new();
+        for _ in 0..2 {
+            // Interleave plans of different sizes through one scratch;
+            // every pass must reproduce the fresh-scratch result exactly.
+            for (cp, mach) in [(&cp1, &m1), (&cp2, &m2)] {
+                let mut net = AlphaBeta::from_machine(mach);
+                let r = simulate_compiled(cp, mach, &mut net, &mut shared, false).unwrap();
+                let mut fresh = EngineScratch::new();
+                let mut net2 = AlphaBeta::from_machine(mach);
+                let f = simulate_compiled(cp, mach, &mut net2, &mut fresh, false).unwrap();
+                assert_eq!(r.total_time, f.total_time);
+                assert_eq!(r.proc_finish, f.proc_finish);
+                assert_eq!(r.messages, f.messages);
+            }
+        }
+        assert!(shared.events() > 0);
+    }
+
+    #[test]
+    fn deadlocked_plan_is_detected_through_compiled_plan() {
+        // Cyclic wait: each processor receives before it sends — the
+        // engine.rs deadlock scenario, through the compiled path.
+        let g = heat1d_graph(8, 1, 2);
+        let mut per_proc = vec![ProcPlan::default(); 2];
+        per_proc[0].phases.push(Phase::Recv { from: ProcId(1), tasks: vec![0] });
+        per_proc[0].phases.push(Phase::Send { to: ProcId(1), tasks: vec![0] });
+        per_proc[1].phases.push(Phase::Recv { from: ProcId(0), tasks: vec![0] });
+        per_proc[1].phases.push(Phase::Send { to: ProcId(0), tasks: vec![0] });
+        let plan = ExecPlan { per_proc, label: "deadlock".into() };
+
+        let mach = m(2, 1, 10.0);
+        let cp = CompiledPlan::compile(&g, &plan, &UniformCost);
+        let mut net = AlphaBeta::from_machine(&mach);
+        let mut scratch = EngineScratch::new();
+        let err = simulate_compiled(&cp, &mach, &mut net, &mut scratch, false).unwrap_err();
+        let SimError::Deadlock { stuck } = &err;
+        assert_eq!(stuck.as_slice(), &[(0, 0), (1, 0)]);
+    }
+
+    #[test]
+    fn partial_deadlock_with_unmatched_recv() {
+        // p0 finishes; p1 waits for a message nobody ever sends — the
+        // channel has recvs but zero sends, exercising the
+        // max(sends, recvs) slot sizing.
+        let g = heat1d_graph(8, 1, 2);
+        let mut per_proc = vec![ProcPlan::default(); 2];
+        per_proc[0].phases.push(Phase::Compute(vec![8]));
+        per_proc[1].phases.push(Phase::Recv { from: ProcId(0), tasks: vec![0] });
+        let plan = ExecPlan { per_proc, label: "half-deadlock".into() };
+
+        let mach = m(2, 1, 10.0);
+        let cp = CompiledPlan::compile(&g, &plan, &UniformCost);
+        assert_eq!(cp.num_messages(), 1);
+        let mut net = AlphaBeta::from_machine(&mach);
+        let mut scratch = EngineScratch::new();
+        let err = simulate_compiled(&cp, &mach, &mut net, &mut scratch, false).unwrap_err();
+        assert_eq!(err, SimError::Deadlock { stuck: vec![(1, 0)] });
+    }
+
+    #[test]
+    fn zero_word_sends_pair_but_do_not_count() {
+        let g = heat1d_graph(8, 1, 2);
+        let mut per_proc = vec![ProcPlan::default(); 2];
+        per_proc[0].phases.push(Phase::Send { to: ProcId(1), tasks: vec![] });
+        per_proc[1].phases.push(Phase::Recv { from: ProcId(0), tasks: vec![] });
+        per_proc[1].phases.push(Phase::Compute(vec![8]));
+        let plan = ExecPlan { per_proc, label: "zero".into() };
+
+        let mach = m(2, 1, 25.0);
+        let cp = CompiledPlan::compile(&g, &plan, &UniformCost);
+        let mut net = AlphaBeta::from_machine(&mach);
+        let mut scratch = EngineScratch::new();
+        let r = simulate_compiled(&cp, &mach, &mut net, &mut scratch, false).unwrap();
+        assert_eq!(r.messages, 0);
+        assert_eq!(r.words, 0);
+        // The empty message pairs instantly: no α is paid.
+        assert_eq!(r.total_time, 1.0);
+    }
+
+    #[test]
+    fn per_channel_constants_cover_every_static_wire() {
+        // A hierarchical wire resolves different constants per channel;
+        // the compiled result must still match the interpreted engine
+        // exactly (the equivalence module pins the full matrix — this is
+        // the targeted unit check with β > 0).
+        let g = heat1d_graph(64, 6, 4);
+        let plan = ExecPlan::overlap(&g);
+        let mach = Machine::new(4, 2, 200.0, 0.7, 1.0);
+        let kind = NetworkKind::Hierarchical { node_size: 2, intra_factor: 0.1 };
+        let mut net_i = kind.build(&mach);
+        let interp = try_simulate(&g, &plan, &mach, net_i.as_mut(), &UniformCost, false).unwrap();
+        let cp = CompiledPlan::compile(&g, &plan, &UniformCost);
+        let mut net_c = kind.build(&mach);
+        let mut scratch = EngineScratch::new();
+        let comp = simulate_compiled(&cp, &mach, net_c.as_mut(), &mut scratch, false).unwrap();
+        assert_eq!(comp.total_time, interp.total_time);
+        assert_eq!(comp.proc_finish, interp.proc_finish);
+        assert_eq!(comp.proc_wait, interp.proc_wait);
+    }
+}
+
+/// The compiled engine's equivalence matrix (ISSUE 5 acceptance): the
+/// compiled path must reproduce the interpreting engine — and, under the
+/// α/β wire, the retained `sim/discrete.rs` polling oracle —
+/// **bit-for-bit** (`total_time`, per-proc clocks/busy/wait, `messages`,
+/// `words`) on every workload × strategy × processor count × wire model.
+#[cfg(test)]
+mod equivalence {
+    use super::*;
+    use crate::pipeline::{
+        ConjugateGradient, Heat1d, Heat2d, Moore2d, Pipeline, Spmv, Strategy, Workload,
+    };
+    use crate::sim::discrete::polling_simulate;
+    use crate::sim::engine::{try_simulate, UniformCost};
+    use crate::sim::network::NetworkKind;
+    use crate::stencil::CsrMatrix;
+
+    fn assert_equal(a: &SimResult, b: &SimResult, tag: &str) {
+        assert_eq!(a.total_time, b.total_time, "{tag}: total_time");
+        assert_eq!(a.proc_finish, b.proc_finish, "{tag}: proc_finish");
+        assert_eq!(a.proc_busy, b.proc_busy, "{tag}: proc_busy");
+        assert_eq!(a.proc_wait, b.proc_wait, "{tag}: proc_wait");
+        assert_eq!(a.messages, b.messages, "{tag}: messages");
+        assert_eq!(a.words, b.words, "{tag}: words");
+    }
+
+    fn run_matrix<W: Workload + Clone>(w: W, procs: &[u32]) {
+        let mut scratch = EngineScratch::new();
+        for &p in procs {
+            for strategy in [Strategy::Naive, Strategy::Overlap, Strategy::Ca] {
+                let t = Pipeline::new(w.clone())
+                    .procs(p)
+                    .strategy(strategy)
+                    .block(2)
+                    .transform()
+                    .unwrap_or_else(|e| panic!("{}/{strategy:?}/p{p}: {e}", w.name()));
+                // The workload's own cost model rides in the sweep input,
+                // compiled exactly as sweep/tune consume it.
+                let input = t.sweep_input();
+                for kind in NetworkKind::all_default() {
+                    for (threads, alpha, beta) in [(1u32, 50.0, 0.25), (4, 500.0, 0.0)] {
+                        let mach = Machine::new(p, threads, alpha, beta, 1.0);
+                        let tag = format!(
+                            "{}/{}/p{p}/{}/t{threads}/a{alpha}",
+                            input.workload,
+                            t.plan.label,
+                            kind.label()
+                        );
+                        let mut net_i = kind.build_for(&mach, input.layout.as_ref());
+                        let interp = try_simulate(
+                            &input.graph,
+                            &input.plan,
+                            &mach,
+                            net_i.as_mut(),
+                            input.cost.as_ref(),
+                            false,
+                        )
+                        .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                        let mut net_c = kind.build_for(&mach, input.layout.as_ref());
+                        let comp = simulate_compiled(
+                            &input.compiled,
+                            &mach,
+                            net_c.as_mut(),
+                            &mut scratch,
+                            false,
+                        )
+                        .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                        assert_equal(&comp, &interp, &tag);
+
+                        // Under the α/β wire with uniform costs the seed
+                        // polling loop is the ground truth for both.
+                        if kind == NetworkKind::AlphaBeta {
+                            let cp = CompiledPlan::compile(&t.graph, &t.plan, &UniformCost);
+                            let mut net = kind.build(&mach);
+                            let comp_u =
+                                simulate_compiled(&cp, &mach, net.as_mut(), &mut scratch, false)
+                                    .unwrap();
+                            let oracle = polling_simulate(&t.graph, &t.plan, &mach, false);
+                            assert_equal(&comp_u, &oracle, &format!("{tag} vs oracle"));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heat1d_matrix() {
+        run_matrix(Heat1d::new(48, 4), &[2, 3, 4]);
+    }
+
+    #[test]
+    fn heat2d_matrix() {
+        run_matrix(Heat2d { h: 8, w: 8, steps: 3 }, &[2, 3, 4]);
+    }
+
+    #[test]
+    fn moore2d_matrix() {
+        run_matrix(Moore2d { h: 8, w: 8, steps: 2 }, &[2, 3, 4]);
+    }
+
+    #[test]
+    fn spmv_matrix() {
+        run_matrix(Spmv { matrix: CsrMatrix::laplace2d(4, 5), steps: 3 }, &[2, 3, 4]);
+    }
+
+    #[test]
+    fn cg_matrix() {
+        run_matrix(ConjugateGradient { unknowns: 24, iters: 2 }, &[2, 3, 4]);
+    }
+
+    #[test]
+    fn spans_agree_with_the_interpreting_engine() {
+        let g = crate::stencil::heat1d_graph(32, 4, 2);
+        let plan =
+            ExecPlan::ca(&g, 2, crate::transform::TransformOptions::default()).unwrap();
+        let mach = Machine::new(2, 2, 25.0, 0.5, 1.0);
+        let mut net_i = crate::sim::network::AlphaBeta::from_machine(&mach);
+        let interp = try_simulate(&g, &plan, &mach, &mut net_i, &UniformCost, true).unwrap();
+        let cp = CompiledPlan::compile(&g, &plan, &UniformCost);
+        let mut net_c = crate::sim::network::AlphaBeta::from_machine(&mach);
+        let mut scratch = EngineScratch::new();
+        let comp = simulate_compiled(&cp, &mach, &mut net_c, &mut scratch, true).unwrap();
+        let norm = |mut spans: Vec<BusySpan>| {
+            spans.sort_by(|a, b| {
+                (a.proc, a.thread, to_bits(a.start), to_bits(a.end), a.what)
+                    .cmp(&(b.proc, b.thread, to_bits(b.start), to_bits(b.end), b.what))
+            });
+            spans
+        };
+        assert_eq!(norm(interp.spans), norm(comp.spans));
+    }
+}

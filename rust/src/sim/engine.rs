@@ -22,6 +22,15 @@
 //! semantics (α/β wire, uniform γ); the equivalence matrix in this
 //! module's tests pins it bit-for-bit against the retained polling
 //! oracle across every workload × strategy × processor count.
+//!
+//! This interpreting loop is the *reference* path: it re-sorts phases
+//! and routes messages through tuple-keyed hash maps per run, which is
+//! fine one-shot but not for the thousands of cells a sweep/tune grid
+//! dispatches.  The hot path lowers the plan once with
+//! [`super::compile::CompiledPlan`] and replays these exact semantics
+//! allocation-free ([`super::compile::simulate_compiled`]); this engine
+//! survives as that module's equivalence oracle, the same pattern as
+//! [`super::discrete`].
 
 use super::discrete::{run_compute, to_bits, BusySpan, SimResult};
 use super::machine::Machine;

@@ -12,21 +12,31 @@
 //!
 //! * [`machine`](Machine) — `p` nodes × `t` threads and the α/β/γ constants;
 //! * [`plan`](ExecPlan) — the phase programs the strategies compile to;
-//! * [`engine`](simulate) — the event-driven simulator (binary-heap event
-//!   queue, blocked-receiver wakeup), with pluggable [`NetworkModel`]
-//!   wires and a per-task [`TaskCostModel`] hook;
+//! * [`engine`](simulate) — the *interpreting* event-driven simulator
+//!   (binary-heap event queue, blocked-receiver wakeup), with pluggable
+//!   [`NetworkModel`] wires and a per-task [`TaskCostModel`] hook; the
+//!   reference path and one-shot entry point;
+//! * [`compile`](CompiledPlan) — the hot path: a one-time lowering of
+//!   `(graph, plan, cost model)` into flat CSR phase streams, a dense
+//!   channel table, and baked per-task costs, simulated allocation-free
+//!   against a reusable [`EngineScratch`] with per-channel wire constants
+//!   resolved up front ([`NetworkModel::channel_cost`]).  Data flow:
+//!   `ExecPlan ─compile→ CompiledPlan ─simulate_compiled→ SimResult`,
+//!   one compile amortized over every cell of a sweep/tune grid;
 //! * [`network`](NetworkKind) — [`AlphaBeta`], [`LogGp`], [`Hierarchical`],
 //!   [`Contended`] wire models;
 //! * [`sweep`] — parallel (α × threads × block × network) grids emitting
-//!   JSON/CSV figure data; the same worker pool fans out the
-//!   [`crate::tune`] autotuner's candidate evaluations (space → search →
-//!   engine score → cache → pipeline);
+//!   JSON/CSV figure data, each worker reusing one scratch across all its
+//!   cells; the same worker pool fans out the [`crate::tune`] autotuner's
+//!   candidate evaluations (space → search → engine score → cache →
+//!   pipeline);
 //! * [`analytic`](ca_time) — closed-form BSP evaluation, the fast path for
 //!   huge parameter sweeps;
 //! * `discrete` — shared result types and, in tests, the seed polling
-//!   simulator kept as the engine's equivalence oracle.
+//!   simulator kept as the engines' equivalence oracle.
 
 mod analytic;
+mod compile;
 mod discrete;
 mod engine;
 mod machine;
@@ -39,6 +49,7 @@ pub use analytic::{
     naive_time_1d, overlap_time_1d, paper_cost, superstep_costs, ProcPhaseCost,
     SuperstepCosts,
 };
+pub use compile::{compile_count, simulate_compiled, CompiledPlan, EngineScratch};
 pub use discrete::{BusySpan, SimResult};
 pub use engine::{simulate, try_simulate, ScaledCost, SimError, TaskCostModel, UniformCost};
 pub use machine::Machine;

@@ -53,6 +53,19 @@ pub trait NetworkModel: Send {
 
     /// Clear any per-run state (NIC clocks etc.).
     fn reset(&mut self) {}
+
+    /// Resolved per-channel wire constants, when this model's cost for
+    /// the `(from, to)` channel is the **stateless** postal form
+    /// `arrival = post + (α_c + β_c · words)`: return `Some((α_c, β_c))`
+    /// and the compiled engine ([`crate::sim::simulate_compiled`]) skips
+    /// the dyn `deliver` call per message.  Stateful models (LogGP
+    /// injection clocks, contended NICs) keep the default `None` and are
+    /// consulted per message.  Implementations must agree with `deliver`
+    /// bit-for-bit — the compiled/interpreted equivalence matrix pins it.
+    fn channel_cost(&self, from: u32, to: u32) -> Option<(f64, f64)> {
+        let _ = (from, to);
+        None
+    }
 }
 
 /// The classical postal model: every message arrives `α + β·words` after
@@ -79,6 +92,10 @@ impl NetworkModel for AlphaBeta {
         // reproduces the legacy simulator bit-for-bit under this model.
         let wire = self.alpha + self.beta * words as f64;
         post + wire
+    }
+
+    fn channel_cost(&self, _from: u32, _to: u32) -> Option<(f64, f64)> {
+        Some((self.alpha, self.beta))
     }
 }
 
@@ -173,13 +190,21 @@ impl NetworkModel for Hierarchical {
     }
 
     fn deliver(&mut self, from: u32, to: u32, words: usize, post: f64) -> f64 {
+        // Grouped as `post + (α + β·words)` — the same association as
+        // `AlphaBeta` and the compiled engine's per-channel fast path, so
+        // all three agree bit-for-bit.
+        let (a, b) = self.channel_cost(from, to).expect("hierarchical wires are static");
+        let wire = a + b * words as f64;
+        post + wire
+    }
+
+    fn channel_cost(&self, from: u32, to: u32) -> Option<(f64, f64)> {
         let same = self.node_of.get(from as usize) == self.node_of.get(to as usize);
-        let (a, b) = if same {
+        Some(if same {
             (self.intra_alpha, self.intra_beta)
         } else {
             (self.inter_alpha, self.inter_beta)
-        };
-        post + a + b * words as f64
+        })
     }
 }
 
@@ -425,6 +450,33 @@ mod tests {
         // Non-hier wires ignore the layout.
         let mut ab = NetworkKind::AlphaBeta.build_for(&mach, Some(&layout));
         assert_eq!(ab.deliver(0, 5, 4, 0.0), 0.0 + 100.0 + 0.5 * 4.0);
+    }
+
+    #[test]
+    fn channel_cost_agrees_with_deliver_on_static_wires() {
+        let mach = m();
+        // Static wires resolve constants; stateful ones decline.
+        assert!(AlphaBeta::from_machine(&mach).channel_cost(0, 1).is_some());
+        assert!(Hierarchical::contiguous(&mach, 2, 0.1).channel_cost(0, 3).is_some());
+        assert!(LogGp::from_machine(&mach, 1.0, 2.0).channel_cost(0, 1).is_none());
+        assert!(Contended::from_machine(&mach).channel_cost(0, 1).is_none());
+        // Where constants exist, `post + (α_c + β_c·words)` is bitwise
+        // the `deliver` result — the compiled engine's fast-path contract.
+        for kind in NetworkKind::all_default() {
+            let mut model = kind.build(&mach);
+            for (from, to) in [(0u32, 1u32), (0, 2), (3, 1)] {
+                let Some((a, b)) = model.channel_cost(from, to) else { continue };
+                for words in [1usize, 7, 100] {
+                    let wire = a + b * words as f64;
+                    assert_eq!(
+                        model.deliver(from, to, words, 2.5),
+                        2.5 + wire,
+                        "{}: ({from},{to}) x {words}",
+                        kind.label()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -2,13 +2,16 @@
 //! behind the `sweep` CLI subcommand and the figure-7/8 data files.
 //!
 //! A sweep is a cartesian grid: prepared `(workload, strategy)` inputs ×
-//! network models × α values × thread counts.  Cells are independent
-//! simulations, so they fan out across `std::thread` workers pulling from
-//! a shared atomic counter; results come back in deterministic grid order
-//! regardless of scheduling.  [`to_json`] / [`to_csv`] render the cells
-//! as figure data.
+//! network models × α values × thread counts.  Each input's plan is
+//! lowered once into a [`CompiledPlan`] ([`SweepInput::new`]); cells are
+//! independent simulations of that compiled form, so they fan out across
+//! `std::thread` workers pulling from a shared atomic counter — each
+//! worker reusing one [`EngineScratch`] across all its cells — and
+//! results come back in deterministic grid order regardless of
+//! scheduling.  [`to_json`] / [`to_csv`] render the cells as figure data.
 
-use super::engine::{try_simulate, TaskCostModel};
+use super::compile::{simulate_compiled, CompiledPlan, EngineScratch};
+use super::engine::TaskCostModel;
 use super::machine::Machine;
 use super::network::NetworkKind;
 use super::plan::ExecPlan;
@@ -17,17 +20,23 @@ use crate::partition::Partitioning;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-/// One prepared (workload, strategy) pair: the graph and plan are built
-/// once and shared read-only across every cell and worker thread.
+/// One prepared (workload, strategy) pair: the graph, plan, and its
+/// compiled form are built **once** (see [`SweepInput::new`]) and shared
+/// read-only across every cell and worker thread.  Labels are interned
+/// `Arc<str>` so a 10k-cell grid clones refcounts, not strings.
 #[derive(Clone)]
 pub struct SweepInput {
     /// Workload tag ("heat1d", "cg", ...).
-    pub workload: String,
+    pub workload: Arc<str>,
     /// Strategy label ("naive", "overlap", "ca(b=4)").
-    pub strategy: String,
+    pub strategy: Arc<str>,
     pub graph: Arc<TaskGraph>,
     pub plan: Arc<ExecPlan>,
-    /// Per-task cost model (the workload's hint).
+    /// The plan lowered once per (plan, cost model) — what every cell
+    /// actually simulates ([`super::simulate_compiled`]).
+    pub compiled: Arc<CompiledPlan>,
+    /// Per-task cost model (the workload's hint; already baked into
+    /// `compiled`, carried for the interpreting oracle and re-compiles).
     pub cost: Arc<dyn TaskCostModel>,
     /// Words per transmitted value (scales β).
     pub words_per_value: usize,
@@ -35,6 +44,33 @@ pub struct SweepInput {
     /// inputs); a Hierarchical wire maps procs onto nodes grid-aware
     /// ([`NetworkKind::build_for`]).
     pub layout: Option<Partitioning>,
+}
+
+impl SweepInput {
+    /// Prepare one input: compiles the plan under `cost` exactly once;
+    /// every grid cell (and every tuner evaluation of this candidate)
+    /// then simulates the compiled form.
+    pub fn new(
+        workload: impl Into<Arc<str>>,
+        strategy: impl Into<Arc<str>>,
+        graph: Arc<TaskGraph>,
+        plan: Arc<ExecPlan>,
+        cost: Arc<dyn TaskCostModel>,
+        words_per_value: usize,
+        layout: Option<Partitioning>,
+    ) -> SweepInput {
+        let compiled = Arc::new(CompiledPlan::compile(&graph, &plan, cost.as_ref()));
+        SweepInput {
+            workload: workload.into(),
+            strategy: strategy.into(),
+            graph,
+            plan,
+            compiled,
+            cost,
+            words_per_value,
+            layout,
+        }
+    }
 }
 
 /// The sweep grid: `inputs × networks × alphas × threads` cells.
@@ -55,12 +91,14 @@ impl SweepGrid {
     }
 }
 
-/// One simulated grid cell.
+/// One simulated grid cell.  Labels share the input's interned
+/// `Arc<str>`s (and the wire model's static tag) instead of cloning
+/// fresh `String`s per cell.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepCell {
-    pub workload: String,
-    pub strategy: String,
-    pub network: String,
+    pub workload: Arc<str>,
+    pub strategy: Arc<str>,
+    pub network: &'static str,
     pub procs: u32,
     pub alpha: f64,
     pub threads: u32,
@@ -74,7 +112,11 @@ pub struct SweepCell {
     pub sim_wall_secs: f64,
 }
 
-fn eval_cell(grid: &SweepGrid, i: usize) -> Result<SweepCell, String> {
+fn eval_cell(
+    grid: &SweepGrid,
+    i: usize,
+    scratch: &mut EngineScratch,
+) -> Result<SweepCell, String> {
     let (nt, na, nn) = (grid.threads.len(), grid.alphas.len(), grid.networks.len());
     let threads = grid.threads[i % nt];
     let alpha = grid.alphas[(i / nt) % na];
@@ -90,26 +132,20 @@ fn eval_cell(grid: &SweepGrid, i: usize) -> Result<SweepCell, String> {
     );
     let mut net = kind.build_for(&mach, input.layout.as_ref());
     let t0 = std::time::Instant::now();
-    let r = try_simulate(
-        &input.graph,
-        &input.plan,
-        &mach,
-        net.as_mut(),
-        input.cost.as_ref(),
-        false,
-    )
-    .map_err(|e| {
-        format!(
-            "{}/{}/{}/α={alpha}/t={threads}: {e}",
-            input.workload,
-            input.strategy,
-            kind.label()
-        )
-    })?;
+    let r = simulate_compiled(&input.compiled, &mach, net.as_mut(), scratch, false).map_err(
+        |e| {
+            format!(
+                "{}/{}/{}/α={alpha}/t={threads}: {e}",
+                input.workload,
+                input.strategy,
+                kind.label()
+            )
+        },
+    )?;
     Ok(SweepCell {
-        workload: input.workload.clone(),
-        strategy: input.strategy.clone(),
-        network: kind.label().to_string(),
+        workload: Arc::clone(&input.workload),
+        strategy: Arc::clone(&input.strategy),
+        network: kind.label(),
         procs,
         alpha,
         threads,
@@ -145,12 +181,16 @@ pub fn run(grid: &SweepGrid) -> Result<Vec<SweepCell>, String> {
                 s.spawn(|| {
                     let mut local: Vec<(usize, SweepCell)> = Vec::new();
                     let mut errs: Vec<String> = Vec::new();
+                    // One scratch per worker, reused across all its
+                    // cells: after the first cell the engine's event
+                    // loop runs allocation-free.
+                    let mut scratch = EngineScratch::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= total {
                             break;
                         }
-                        match eval_cell(grid, i) {
+                        match eval_cell(grid, i, &mut scratch) {
                             Ok(c) => local.push((i, c)),
                             Err(e) => errs.push(e),
                         }
@@ -237,24 +277,16 @@ mod tests {
         let naive = Arc::new(ExecPlan::naive(&g));
         let ca = Arc::new(ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap());
         vec![
-            SweepInput {
-                workload: "heat1d".into(),
-                strategy: naive.label.clone(),
-                graph: Arc::clone(&g),
-                plan: naive,
-                cost: Arc::new(UniformCost),
-                words_per_value: 1,
-                layout: None,
-            },
-            SweepInput {
-                workload: "heat1d".into(),
-                strategy: ca.label.clone(),
-                graph: g,
-                plan: ca,
-                cost: Arc::new(UniformCost),
-                words_per_value: 1,
-                layout: None,
-            },
+            SweepInput::new(
+                "heat1d",
+                naive.label.clone(),
+                Arc::clone(&g),
+                naive,
+                Arc::new(UniformCost),
+                1,
+                None,
+            ),
+            SweepInput::new("heat1d", ca.label.clone(), g, ca, Arc::new(UniformCost), 1, None),
         ]
     }
 
@@ -306,8 +338,8 @@ mod tests {
         assert_eq!(cells[2].alpha, 100.0);
         assert_eq!(cells[0].network, "alphabeta");
         assert_eq!(cells[4].network, "loggp");
-        assert_eq!(cells[0].strategy, "naive");
-        assert_eq!(cells[16].strategy, "ca(b=2)");
+        assert_eq!(&*cells[0].strategy, "naive");
+        assert_eq!(&*cells[16].strategy, "ca(b=2)");
     }
 
     #[test]
@@ -320,7 +352,10 @@ mod tests {
         let cell = cells
             .iter()
             .find(|c| {
-                c.strategy == "naive" && c.network == "alphabeta" && c.alpha == 100.0 && c.threads == 4
+                &*c.strategy == "naive"
+                    && c.network == "alphabeta"
+                    && c.alpha == 100.0
+                    && c.threads == 4
             })
             .unwrap();
         assert_eq!(cell.makespan, direct.total_time);
@@ -351,6 +386,20 @@ mod tests {
         let csv = to_csv(&cells);
         assert!(csv.starts_with("workload,strategy,network,procs,alpha,"));
         assert_eq!(csv.lines().count(), cells.len() + 1);
+    }
+
+    #[test]
+    fn cells_share_interned_labels_and_compiled_plans() {
+        let g = grid(1);
+        let cells = run(&g).unwrap();
+        // Labels are refcount clones of the input's interned strings —
+        // no per-cell String allocation.
+        assert!(Arc::ptr_eq(&cells[0].workload, &g.inputs[0].workload));
+        assert!(Arc::ptr_eq(&cells[0].strategy, &g.inputs[0].strategy));
+        // And preparing the input compiled the plan exactly once, up
+        // front: cloning the input shares it.
+        let clone = g.inputs[0].clone();
+        assert!(Arc::ptr_eq(&clone.compiled, &g.inputs[0].compiled));
     }
 
     #[test]

@@ -545,6 +545,33 @@ mod tests {
     }
 
     #[test]
+    fn tuning_compiles_each_scored_candidate_exactly_once() {
+        // The ISSUE-5 acceptance twin of the two-builds-per-run test
+        // above, one layer down: every feasible candidate's plan is
+        // lowered into a CompiledPlan exactly once (inside its
+        // SweepInput), then simulated — never re-compiled per cell, and
+        // nothing else in the tuning path compiles plans.  The counter
+        // is thread-local and candidates are compiled on the calling
+        // thread, so parallel tests cannot perturb it.
+        let mach = Machine::high_latency(2, 8);
+        let mut tuner = Tuner::exhaustive();
+        let before = crate::sim::compile_count();
+        let out = tune_pipeline(&base(128, 8, mach), &mut tuner).unwrap();
+        let compiles = crate::sim::compile_count() - before;
+        assert!(out.report.engine_runs > 4, "test premise: many candidates scored");
+        assert_eq!(
+            compiles, out.report.engine_runs,
+            "exactly one plan compilation per scored candidate"
+        );
+
+        // A cache hit performs zero compilations.
+        let before = crate::sim::compile_count();
+        let again = tune_pipeline(&base(128, 8, mach), &mut tuner).unwrap();
+        assert!(again.report.cache_hit);
+        assert_eq!(crate::sim::compile_count() - before, 0);
+    }
+
+    #[test]
     fn cost_override_is_part_of_the_cache_key() {
         let mach = Machine::high_latency(2, 4);
         let slow = || std::sync::Arc::new(crate::sim::ScaledCost(3.0));
