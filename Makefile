@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke
+.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke
 
-ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke
+ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke
 
 # The simulator perf tracker: a reduced fig-7/8 sweep across all four
 # network models, emitting per-cell makespan + simulator wall-time so the
@@ -27,6 +27,15 @@ bench-smoke: build
 # (BENCH_tune.json).
 tune-smoke: build
 	$(CARGO) run --release -- tune --smoke
+
+# The serving tracker: drive the daemon through a cold → warm →
+# duplicate-burst → batch request mix, emitting cold/warm req/s, dedupe
+# and batch-occupancy counters, and request latency percentiles
+# (BENCH_serve.json).  Fails unless warm throughput strictly beats cold,
+# warm hits cost zero engine runs, and at least one in-flight dedupe is
+# observed.
+serve-smoke: build
+	$(CARGO) run --release -- serve --smoke
 
 # The data-layout tracker: processor-grid shapes on heat2d and graph
 # partitioners on a banded+random SpMV, each simulated under all four

@@ -12,6 +12,7 @@
 
 use imp_latency::partition::{Partitioning, ProcGrid};
 use imp_latency::pipeline::{Heat1d, Heat2d, Pipeline};
+use imp_latency::serve::{Request, ServeConfig, Server};
 use imp_latency::sim::{simulate_compiled, EngineScratch, Machine, NetworkKind};
 use imp_latency::transform::check_schedule;
 use imp_latency::tune::Tuner;
@@ -147,4 +148,29 @@ fn main() {
         input.strategy,
         t0.elapsed().as_secs_f64() * 1e3
     );
+
+    // 9. Serve it: the same tuning and simulation behind a long-running
+    //    daemon.  A request is one flat JSON line; the server answers
+    //    cache-first (warm hits cost zero engine runs), collapses
+    //    identical in-flight searches onto one leader, and coalesces
+    //    compatible simulations into a single sweep grid.  The `serve`
+    //    CLI subcommand speaks the same protocol over stdin batches,
+    //    TCP, or a Unix socket (`make serve-smoke` → BENCH_serve.json).
+    let server = Server::new(ServeConfig {
+        workers: 2,
+        max_in_flight: 8,
+        budget: None,
+        cache_dir: None, // in-memory; point at a directory to persist shards across restarts
+        slots: 4,
+        search: "exhaustive".to_string(),
+    });
+    let tune_req = "{\"id\": \"t\", \"op\": \"tune\", \"workload\": \"heat1d\", \"n\": 128, \
+                    \"m\": 8, \"p\": 4, \"threads\": 8, \"alpha\": 500.0, \"beta\": 0.1, \
+                    \"gamma\": 1.0}";
+    println!("\nserve: the same request twice — a real search, then a free cache hit:");
+    for _ in 0..2 {
+        for resp in server.run_wave(vec![Request::parse(tune_req)]) {
+            println!("  {}", resp.to_json());
+        }
+    }
 }

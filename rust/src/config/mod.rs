@@ -258,6 +258,50 @@ pub fn preset_partition_smoke() -> Config {
     c
 }
 
+/// The `serve` CLI preset: the long-running tuning/simulation daemon.
+/// Request fields override the machine/problem defaults per request;
+/// these keys size the daemon itself (worker pool, admission cap,
+/// search-budget ceiling, cache shard directory) plus the smoke mix.
+pub fn preset_serve() -> Config {
+    let mut c = Config::new();
+    c.set("workloads", "heat1d,heat2d");
+    c.set("networks", "alphabeta,loggp");
+    c.set("search", "exhaustive");
+    c.set("p", 4);
+    c.set("n", 1024);
+    c.set("m", 16);
+    c.set("h", 16);
+    c.set("w", 16);
+    c.set("cg_n", 64);
+    c.set("iters", 2);
+    c.set("threads", 8);
+    c.set("alpha", 500.0);
+    c.set("beta", 0.1);
+    c.set("gamma", 1.0);
+    c.set("workers", 4);
+    c.set("max_in_flight", 64);
+    c.set("budget", 0);
+    c.set("slots", 8);
+    c.set("cache", "results/serve_cache");
+    c.set("requests", "-");
+    c
+}
+
+/// The `serve --smoke` preset: the CI serving tracker — the scripted
+/// cold → warm → duplicate-burst → batch mix on a throwaway cache,
+/// emitting `BENCH_serve.json` (cold/warm req/s, dedupe and batch
+/// counts, p50/p99 latency) on every push.
+pub fn preset_serve_smoke() -> Config {
+    let mut c = preset_serve();
+    c.set("n", 512);
+    c.set("m", 8);
+    c.set("h", 12);
+    c.set("w", 12);
+    c.set("cache", "");
+    c.set("out", "BENCH_serve.json");
+    c
+}
+
 /// The figure-10 preset: SpMV partition quality vs. makespan per wire
 /// model on the banded+random matrix.
 pub fn preset_fig10() -> Config {
@@ -394,6 +438,19 @@ mod tests {
             }
         }
         assert_eq!(preset_partition_smoke().get("out"), Some("BENCH_partition.json"));
+        for c in [preset_serve(), preset_serve_smoke()] {
+            for k in [
+                "workloads", "networks", "search", "p", "n", "m", "h", "w", "cg_n", "iters",
+                "threads", "alpha", "beta", "gamma", "workers", "max_in_flight", "budget",
+                "slots", "cache", "requests",
+            ] {
+                assert!(c.get(k).is_some(), "{k}");
+            }
+        }
+        // The smoke benchmark must start cold: an empty cache key routes
+        // it to a throwaway temp dir that is wiped before the run.
+        assert_eq!(preset_serve_smoke().get("cache"), Some(""));
+        assert_eq!(preset_serve_smoke().get("out"), Some("BENCH_serve.json"));
         for k in ["h", "w", "chords", "m", "p", "threads", "alpha", "beta", "gamma"] {
             assert!(preset_fig10().get(k).is_some(), "{k}");
         }

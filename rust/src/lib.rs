@@ -58,8 +58,17 @@
 //!   [`tune::TuningSpace`] (strategy × halo × block × procs) explored by
 //!   pluggable [`tune::SearchStrategy`] impls, every candidate scored by
 //!   the event-driven engine via the [`sim::sweep`] worker pool, winners
-//!   persisted in a JSON [`tune::TuningCache`]; surfaced as
-//!   [`pipeline::Pipeline::autotune`] and the `tune` CLI subcommand.
+//!   persisted in a JSON [`tune::TuningCache`] — sharded into
+//!   per-workload-signature files with single-writer file locks;
+//!   surfaced as [`pipeline::Pipeline::autotune`] and the `tune` CLI
+//!   subcommand.
+//! * [`serve`] — the serving story: a long-running daemon
+//!   ([`serve::Server`], `serve` CLI subcommand) answering JSON
+//!   tune/simulate request streams over stdin batches or TCP/Unix
+//!   sockets — cache-first (warm hits cost zero engine runs), in-flight
+//!   requests deduped by cache key, compatible simulations batched into
+//!   shared [`sim::sweep`] grids, overload shed by admission control,
+//!   SIGINT/SIGTERM flushing shards cleanly ([`serve::signals`]).
 //! * [`cost`] — the §2.1 analytic cost model `T(b) = (M/b)α + Mβ + (MN/p + Mb)γ`.
 //! * [`krylov`] — the motivating application: classic and latency-tolerant CG.
 //! * [`runtime`] — PJRT artifact loading/execution (`xla` crate).
@@ -82,6 +91,7 @@ pub mod partition;
 pub mod pipeline;
 pub mod prop;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod stencil;
 pub mod trace;

@@ -10,12 +10,18 @@
 //! * `cost` — the §2.1 cost model table and optimal block factor;
 //! * `run-heat1d` / `run-heat2d` — real distributed runs (PJRT compute);
 //! * `run-cg` — distributed CG, classic vs. pipelined;
+//! * `serve` — long-running tuning/simulation daemon: JSON request
+//!   streams over stdin batches or TCP/Unix sockets, cache-first with
+//!   in-flight dedupe, batching, and admission control;
 //! * `dot` — Graphviz export of a (small) transformed graph.
+//!
+//! Every subcommand lives in the [`COMMANDS`] table; `--help` documents
+//! each entry (a test keeps the two in sync).
 
 use imp_latency::config::{
     parse_list, preset_bench, preset_bench_smoke, preset_end_to_end, preset_fig10, preset_fig7,
-    preset_fig8, preset_fig9, preset_partition, preset_partition_smoke, preset_sweep,
-    preset_sweep_smoke, preset_tune, preset_tune_smoke, Config,
+    preset_fig8, preset_fig9, preset_partition, preset_partition_smoke, preset_serve,
+    preset_serve_smoke, preset_sweep, preset_sweep_smoke, preset_tune, preset_tune_smoke, Config,
 };
 use imp_latency::coordinator::{heat1d, heat2d};
 use imp_latency::cost::CostModel;
@@ -23,9 +29,11 @@ use imp_latency::figures;
 use imp_latency::krylov::distributed::{self as dcg, CgConfig};
 use imp_latency::partition::{self, Partitioner, Partitioning, PartitionQuality, ProcGrid};
 use imp_latency::pipeline::{
-    ConjugateGradient, Heat1d, Heat2d, Moore2d, Pipeline, Spmv, Strategy, Workload,
+    dispatch_workload, ConjugateGradient, Heat1d, Heat2d, Moore2d, Pipeline, Spmv, Strategy,
+    Workload, WorkloadVisitor,
 };
 use imp_latency::runtime::Registry;
+use imp_latency::serve::{self, signals, ServeConfig, Server};
 use imp_latency::sim::{
     simulate_compiled, sweep, try_simulate, CompiledPlan, EngineScratch, Machine, NetworkKind,
     UniformCost,
@@ -88,6 +96,17 @@ COMMANDS
              banded+random SpMV under each graph partitioner, simulated per wire;
              every cell pairs makespan with the layout's PartitionQuality (edge-cut
              words, imbalance, max neighbors); --smoke emits BENCH_partition.json
+  serve      [--smoke requests=-|FILE listen=tcp:HOST:PORT|unix:PATH
+              cache=results/serve_cache slots=8 workers=4 max_in_flight=64
+              budget=0 search=exhaustive out=BENCH_serve.json]
+             long-running tuning/simulation daemon: newline-delimited JSON
+             requests (ops tune|simulate|cache-stats) from a stdin/file batch
+             or a TCP/Unix socket; warm cache hits cost zero engine runs,
+             identical in-flight requests dedupe onto one search, compatible
+             simulate requests coalesce into shared sweep grids, excess load
+             is shed with an explicit overloaded response; SIGINT/SIGTERM
+             flush cache shards; --smoke drives the scripted cold → warm →
+             duplicate-burst → batch mix and emits BENCH_serve.json
   dot        [n=16 m=3 p=2]            Graphviz of the transformed graph
 
 Artifacts are searched in $IMP_ARTIFACTS or ./artifacts (run `make artifacts`).
@@ -105,33 +124,45 @@ fn main() {
     std::process::exit(code);
 }
 
+type Handler = fn(&[&str]) -> Result<(), String>;
+
+/// Every registered subcommand, in `--help` order.  `run` dispatches
+/// from this table; a test asserts the help text documents each entry.
+const COMMANDS: &[(&str, Handler)] = &[
+    ("figure", cmd_figure),
+    ("pipeline", cmd_pipeline),
+    ("transform", cmd_transform),
+    ("simulate", cmd_simulate),
+    ("sweep", cmd_sweep),
+    ("bench", cmd_bench),
+    ("cost", cmd_cost),
+    ("run-heat1d", cmd_run_heat1d),
+    ("run-heat2d", cmd_run_heat2d),
+    ("run-cg", cmd_run_cg),
+    ("powers", cmd_powers),
+    ("autotune", cmd_autotune),
+    ("tune", cmd_tune),
+    ("partition", cmd_partition),
+    ("serve", cmd_serve),
+    ("dot", cmd_dot),
+];
+
 fn run(args: &[String]) -> Result<(), String> {
-    let Some(cmd) = args.first() else {
+    let cmd = match args.first() {
+        Some(cmd) => cmd.as_str(),
+        None => {
+            print!("{HELP}");
+            return Ok(());
+        }
+    };
+    if matches!(cmd, "help" | "--help" | "-h") {
         print!("{HELP}");
         return Ok(());
-    };
+    }
     let rest: Vec<&str> = args[1..].iter().map(String::as_str).collect();
-    match cmd.as_str() {
-        "figure" => cmd_figure(&rest),
-        "pipeline" => cmd_pipeline(&rest),
-        "transform" => cmd_transform(&rest),
-        "simulate" => cmd_simulate(&rest),
-        "sweep" => cmd_sweep(&rest),
-        "bench" => cmd_bench(&rest),
-        "cost" => cmd_cost(&rest),
-        "run-heat1d" => cmd_run_heat1d(&rest),
-        "run-heat2d" => cmd_run_heat2d(&rest),
-        "run-cg" => cmd_run_cg(&rest),
-        "powers" => cmd_powers(&rest),
-        "autotune" => cmd_autotune(&rest),
-        "tune" => cmd_tune(&rest),
-        "partition" => cmd_partition(&rest),
-        "dot" => cmd_dot(&rest),
-        "help" | "--help" | "-h" => {
-            print!("{HELP}");
-            Ok(())
-        }
-        other => Err(format!("unknown command {other:?}; try --help")),
+    match COMMANDS.iter().find(|(name, _)| *name == cmd) {
+        Some((_, handler)) => handler(&rest),
+        None => Err(format!("unknown command {cmd:?}; try --help")),
     }
 }
 
@@ -362,45 +393,6 @@ fn cmd_simulate(args: &[&str]) -> Result<(), String> {
     Ok(())
 }
 
-/// Callback of [`dispatch_workload`]: one generic method, so each CLI
-/// surface states *what it does with a workload* exactly once.
-trait WorkloadVisitor {
-    type Out;
-    fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out;
-}
-
-/// The single workload-name → constructor map shared by the `sweep` and
-/// `tune` subcommands (key semantics: `n`/`r` for heat1d, `h`×`w` for
-/// the 2-D stencils and SpMV; CG's AllToAll dot levels make its graph
-/// O(n²) in edges, so its size is the separate, smaller `cg_n` knob).
-/// `pipeline` keeps its own mapping on purpose — there `n` names the
-/// size of whichever single workload was picked.
-fn dispatch_workload<V: WorkloadVisitor>(
-    name: &str,
-    cfg: &Config,
-    v: &mut V,
-) -> Result<V::Out, String> {
-    let m: u32 = cfg.require("m")?;
-    let (h, w): (u64, u64) = (cfg.require("h")?, cfg.require("w")?);
-    Ok(match name {
-        "heat1d" => {
-            v.visit(Heat1d { n: cfg.get_or("n", 4096), steps: m, radius: cfg.get_or("r", 1) })
-        }
-        "heat2d" => v.visit(Heat2d { h, w, steps: m }),
-        "moore2d" => v.visit(Moore2d { h, w, steps: m }),
-        "spmv" => {
-            v.visit(Spmv { matrix: CsrMatrix::laplace2d(h as usize, w as usize), steps: m })
-        }
-        "cg" => v.visit(ConjugateGradient {
-            unknowns: cfg.get_or("cg_n", 256),
-            iters: cfg.get_or("iters", 3),
-        }),
-        other => {
-            return Err(format!("unknown workload {other:?} (heat1d|heat2d|moore2d|spmv|cg)"))
-        }
-    })
-}
-
 /// Build the sweep inputs for one workload name: naive + overlap + one CA
 /// plan per block factor, all sharing the workload's graph.
 fn sweep_inputs_for(
@@ -492,8 +484,16 @@ fn cmd_sweep(args: &[&str]) -> Result<(), String> {
         grid.threads.len(),
         grid.num_cells()
     );
+    signals::install();
     let t0 = std::time::Instant::now();
-    let cells = sweep::run(&grid)?;
+    // Stop-aware: SIGINT/SIGTERM drains the workers and still flushes
+    // whatever cells finished, so a long sweep is never lost to Ctrl-C.
+    let outcome = sweep::run_with_stop(&grid, signals::flag())?;
+    let interrupted = match &outcome {
+        sweep::SweepRun::Complete(_) => None,
+        sweep::SweepRun::Interrupted { completed, total, .. } => Some((*completed, *total)),
+    };
+    let cells = outcome.cells();
     let wall = t0.elapsed().as_secs_f64();
     let max_u = cells.iter().map(|c| c.utilization).fold(0.0, f64::max);
     let sim_secs: f64 = cells.iter().map(|c| c.sim_wall_secs).sum();
@@ -503,7 +503,14 @@ fn cmd_sweep(args: &[&str]) -> Result<(), String> {
     );
 
     let out = cfg.get_or("out", "results/sweep.json".to_string());
-    let json = sweep::to_json(if smoke { "smoke" } else { "sweep" }, &cells);
+    let tag = if interrupted.is_some() {
+        "partial"
+    } else if smoke {
+        "smoke"
+    } else {
+        "sweep"
+    };
+    let json = sweep::to_json(tag, &cells);
     write_json_report(&out, &json)?;
     if let Some(csv_path) = cfg.get("csv") {
         if !csv_path.is_empty() {
@@ -511,7 +518,12 @@ fn cmd_sweep(args: &[&str]) -> Result<(), String> {
             println!("wrote {csv_path}");
         }
     }
-    Ok(())
+    match interrupted {
+        Some((completed, total)) => Err(format!(
+            "sweep interrupted after {completed} of {total} cells; partial {out} written"
+        )),
+        None => Ok(()),
+    }
 }
 
 /// One benchmarked grid cell: both engines run `repeat` identical
@@ -1057,6 +1069,11 @@ fn tune_rows_for(
                 }
                 let kind = NetworkKind::parse(tag)?;
                 for _ in 0..repeat.max(1) {
+                    // Shutdown boundary: every finished row is already in
+                    // `rows` and every cache entry is already on disk.
+                    if signals::shutdown_requested() {
+                        return Ok(rows);
+                    }
                     let t = Pipeline::new(w.clone())
                         .procs(p)
                         .machine(mach)
@@ -1080,8 +1097,12 @@ fn cmd_tune(args: &[&str]) -> Result<(), String> {
     let (cfg, _) = config_from(defaults, args);
 
     let search = tune::search_from_tag(&cfg.get_or("search", "exhaustive".to_string()))?;
+    // A `.json` path keeps the legacy single-file cache; any other
+    // non-empty path is a shard directory (per-signature files + locks),
+    // which is what the serve daemon shares with the CLI.
     let cache = match cfg.get("cache") {
-        Some(path) if !path.is_empty() => TuningCache::with_path(path),
+        Some(path) if path.ends_with(".json") => TuningCache::with_path(path),
+        Some(path) if !path.is_empty() => TuningCache::sharded(path),
         _ => TuningCache::new(),
     };
     let preloaded = cache.len();
@@ -1095,12 +1116,17 @@ fn cmd_tune(args: &[&str]) -> Result<(), String> {
         tuner.search.label(),
         preloaded
     );
+    signals::install();
     let t0 = std::time::Instant::now();
     let compiles0 = imp_latency::sim::compile_count();
     let mut rows: Vec<tune::TuneRow> = Vec::new();
     for wl in &workloads {
+        if signals::shutdown_requested() {
+            break;
+        }
         rows.extend(tune_rows_for(wl, &cfg, &mut tuner)?);
     }
+    let interrupted = signals::shutdown_requested();
     let engine_runs: usize = rows.iter().map(|r| r.engine_runs).sum();
     let compiles = imp_latency::sim::compile_count() - compiles0;
     println!(
@@ -1114,13 +1140,22 @@ fn cmd_tune(args: &[&str]) -> Result<(), String> {
     );
 
     let out = cfg.get_or("out", "results/tune.json".to_string());
-    let json = tune::rows_to_json(
-        if smoke { "smoke" } else { "tune" },
-        &rows,
-        tuner.cache.hits(),
-        tuner.cache.misses(),
-    );
-    write_json_report(&out, &json)
+    let tag = if interrupted {
+        "partial"
+    } else if smoke {
+        "smoke"
+    } else {
+        "tune"
+    };
+    let json = tune::rows_to_json(tag, &rows, tuner.cache.hits(), tuner.cache.misses());
+    write_json_report(&out, &json)?;
+    if interrupted {
+        // Cache entries persist as each tuning completes; the partial
+        // report is flushed above — exit nonzero so callers notice.
+        tuner.cache.save().map_err(|e| e.to_string())?;
+        return Err(format!("tune interrupted after {} rows; partial {out} written", rows.len()));
+    }
+    Ok(())
 }
 
 /// One layout's `BENCH_partition.json` cells: transform once, then fan
@@ -1240,6 +1275,129 @@ fn cmd_partition(args: &[&str]) -> Result<(), String> {
     write_json_report(&out, &json)
 }
 
+/// Bind-serve-unlink over a Unix socket; a stub error elsewhere so the
+/// command table stays platform-independent.
+#[cfg(unix)]
+fn serve_unix_at(server: &Server, path: &str) -> Result<usize, String> {
+    let _ = std::fs::remove_file(path);
+    let listener = std::os::unix::net::UnixListener::bind(path)
+        .map_err(|e| format!("bind unix:{path}: {e}"))?;
+    eprintln!("serve: listening on unix:{path} (SIGINT/SIGTERM to stop)");
+    let result = server.serve_unix(listener, signals::flag()).map_err(|e| e.to_string());
+    let _ = std::fs::remove_file(path);
+    result.map(|()| 0)
+}
+
+#[cfg(not(unix))]
+fn serve_unix_at(_server: &Server, path: &str) -> Result<usize, String> {
+    Err(format!("unix sockets are unsupported on this platform (listen=unix:{path})"))
+}
+
+/// The serving story.  `--smoke` drives the scripted cold → warm →
+/// duplicate-burst → batch mix into `BENCH_serve.json` and *gates* on
+/// the serving claims (warm strictly faster than cold at zero engine
+/// runs; concurrent duplicates dedupe onto one search).  Otherwise the
+/// daemon answers request waves from a stdin/file batch (`requests=`)
+/// or a TCP/Unix socket (`listen=`) until EOF or a shutdown signal,
+/// then flushes every cache shard.
+fn cmd_serve(args: &[&str]) -> Result<(), String> {
+    let smoke = args.contains(&"--smoke");
+    let defaults = if smoke { preset_serve_smoke() } else { preset_serve() };
+    let (cfg, _) = config_from(defaults, args);
+    signals::install();
+
+    if smoke {
+        let outcome = serve::run_smoke(&cfg, signals::flag())?;
+        let out = cfg.get_or("out", "BENCH_serve.json".to_string());
+        write_json_report(&out, &outcome.json)?;
+        if outcome.interrupted {
+            return Err(format!("serve --smoke interrupted; partial {out} written"));
+        }
+        let (cold, warm) = match (&outcome.cold, &outcome.warm) {
+            (Some(cold), Some(warm)) => (cold.clone(), warm.clone()),
+            _ => return Err("serve --smoke finished without cold and warm phases".into()),
+        };
+        println!(
+            "serve smoke: cold {:.1} req/s ({} engine runs) → warm {:.1} req/s ({} engine \
+             runs); {} duplicate(s) deduped onto {} search(es); {} grid(s) / {} cell(s) \
+             batched; p50 {:.2} ms, p99 {:.2} ms; {} shed",
+            cold.rps,
+            cold.engine_runs,
+            warm.rps,
+            warm.engine_runs,
+            outcome.dedupe_hits,
+            outcome.dedupe_searches,
+            outcome.batch_grids,
+            outcome.batch_cells,
+            outcome.p50_ms,
+            outcome.p99_ms,
+            outcome.overloaded,
+        );
+        // The hard serving gates; any miss fails `make serve-smoke` / CI.
+        if warm.rps <= cold.rps {
+            return Err(format!(
+                "warm throughput {:.1} req/s must strictly beat cold {:.1} req/s",
+                warm.rps, cold.rps
+            ));
+        }
+        if warm.engine_runs != 0 {
+            return Err(format!(
+                "warm wave cost {} engine runs; cache hits must be free",
+                warm.engine_runs
+            ));
+        }
+        if outcome.dedupe_hits < 1 {
+            return Err("duplicate burst produced no deduped requests".into());
+        }
+        return Ok(());
+    }
+
+    let server = Server::new(ServeConfig::from_config(&cfg));
+    let listen = cfg.get_or("listen", String::new());
+    let served = if let Some(addr) = listen.strip_prefix("tcp:") {
+        let listener =
+            std::net::TcpListener::bind(addr).map_err(|e| format!("bind tcp:{addr}: {e}"))?;
+        eprintln!("serve: listening on tcp:{addr} (SIGINT/SIGTERM to stop)");
+        server.serve_tcp(listener, signals::flag()).map_err(|e| e.to_string()).map(|()| 0)?
+    } else if let Some(path) = listen.strip_prefix("unix:") {
+        serve_unix_at(&server, path)?
+    } else if listen.is_empty() {
+        // Batch mode: responses own stdout; everything else is stderr.
+        let requests = cfg.get_or("requests", "-".to_string());
+        let mut out = std::io::stdout().lock();
+        let written = if requests == "-" {
+            server.serve_reader(std::io::stdin().lock(), &mut out, signals::flag())
+        } else {
+            let file = std::fs::File::open(&requests)
+                .map_err(|e| format!("requests file {requests:?}: {e}"))?;
+            server.serve_reader(std::io::BufReader::new(file), &mut out, signals::flag())
+        };
+        written.map_err(|e| e.to_string())?
+    } else {
+        return Err(format!("listen must be tcp:HOST:PORT or unix:PATH, got {listen:?}"));
+    };
+
+    server.flush().map_err(|e| format!("cache flush: {e}"))?;
+    let totals = server.cache_totals();
+    let stats = server.stats();
+    use std::sync::atomic::Ordering::Relaxed;
+    eprintln!(
+        "serve: {served} response(s); cache {} entries / {} shards ({} hits, {} misses); \
+         {} search(es), {} deduped, {} shed",
+        totals.entries,
+        totals.shards,
+        totals.hits,
+        totals.misses,
+        stats.searches.load(Relaxed),
+        stats.deduped.load(Relaxed),
+        server.admission().shed(),
+    );
+    if signals::shutdown_requested() {
+        eprintln!("serve: shutdown signal honoured; cache shards flushed");
+    }
+    Ok(())
+}
+
 fn cmd_dot(args: &[&str]) -> Result<(), String> {
     let mut defaults = Config::new();
     defaults.set("n", 16);
@@ -1265,4 +1423,27 @@ fn cmd_dot(args: &[&str]) -> Result<(), String> {
     };
     print!("{}", g.to_dot_annotated("transformed", annot));
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{COMMANDS, HELP};
+
+    /// The cleanup gate: every subcommand registered in the dispatch
+    /// table must be documented in `--help` (as the first word of a
+    /// COMMANDS line), so new commands cannot ship invisible.
+    #[test]
+    fn help_names_every_registered_subcommand() {
+        for (name, _) in COMMANDS {
+            let documented = HELP
+                .lines()
+                .any(|line| matches!(line.strip_prefix("  "), Some(l) if l.starts_with(name)));
+            assert!(documented, "--help does not document subcommand {name:?}");
+        }
+        // And the table really is the full surface: no stray duplicates.
+        let mut names: Vec<&str> = COMMANDS.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), COMMANDS.len(), "duplicate subcommand registration");
+    }
 }

@@ -50,8 +50,10 @@ pub use workloads::{
     CgPhaseCost, ConjugateGradient, GraphWorkload, Heat1d, Heat2d, Moore2d, RowFillCost, Spmv,
 };
 
+use crate::config::Config;
 use crate::coordinator::{run_and_verify_with, ValueSemantics};
 use crate::graph::TaskGraph;
+use crate::stencil::CsrMatrix;
 use crate::partition::Partitioning;
 use crate::sim::sweep::SweepInput;
 use crate::sim::{try_simulate, ExecPlan, Machine, NetworkKind, ScaledCost, TaskCostModel};
@@ -476,6 +478,47 @@ pub fn strategy_sweep_inputs<W: Workload + Clone>(
         v.push(candidate_sweep_input(base, Strategy::Ca, Some(b), None)?);
     }
     Ok(v)
+}
+
+/// Callback of [`dispatch_workload`]: one generic method, so each
+/// surface (the `sweep`/`tune` subcommands, the `serve` daemon) states
+/// *what it does with a workload* exactly once.
+pub trait WorkloadVisitor {
+    type Out;
+    fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out;
+}
+
+/// The single workload-name → constructor map shared by the `sweep` and
+/// `tune` subcommands and the `serve` daemon (key semantics: `n`/`r` for
+/// heat1d, `h`×`w` for the 2-D stencils and SpMV; CG's AllToAll dot
+/// levels make its graph O(n²) in edges, so its size is the separate,
+/// smaller `cg_n` knob).  The CLI `pipeline` subcommand keeps its own
+/// mapping on purpose — there `n` names the size of whichever single
+/// workload was picked.
+pub fn dispatch_workload<V: WorkloadVisitor>(
+    name: &str,
+    cfg: &Config,
+    v: &mut V,
+) -> Result<V::Out, String> {
+    let m: u32 = cfg.require("m")?;
+    let (h, w): (u64, u64) = (cfg.require("h")?, cfg.require("w")?);
+    Ok(match name {
+        "heat1d" => {
+            v.visit(Heat1d { n: cfg.get_or("n", 4096), steps: m, radius: cfg.get_or("r", 1) })
+        }
+        "heat2d" => v.visit(Heat2d { h, w, steps: m }),
+        "moore2d" => v.visit(Moore2d { h, w, steps: m }),
+        "spmv" => {
+            v.visit(Spmv { matrix: CsrMatrix::laplace2d(h as usize, w as usize), steps: m })
+        }
+        "cg" => v.visit(ConjugateGradient {
+            unknowns: cfg.get_or("cg_n", 256),
+            iters: cfg.get_or("iters", 3),
+        }),
+        other => {
+            return Err(format!("unknown workload {other:?} (heat1d|heat2d|moore2d|spmv|cg)"))
+        }
+    })
 }
 
 /// A transformed pipeline: graph + plan, ready to simulate or execute.

@@ -1,0 +1,119 @@
+//! Admission control: a fixed cap on concurrent engine searches.
+//!
+//! The daemon admits at most `limit` searches at once; everything past
+//! the cap is *shed* with an explicit `overloaded` response instead of
+//! queueing unboundedly (cache hits and deduped waits are never
+//! admitted — they cost no engine runs, so they always pass).  A
+//! [`Permit`] is RAII: dropping it releases the slot even when the
+//! search panics.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[derive(Debug)]
+pub struct Admission {
+    limit: usize,
+    active: AtomicUsize,
+    shed: AtomicUsize,
+}
+
+impl Admission {
+    /// `limit` = max concurrent permits.  `0` admits nothing — every
+    /// request sheds, which is the deterministic "drain mode" the tests
+    /// use to observe `overloaded` without a timing race.
+    pub fn new(limit: usize) -> Self {
+        Admission { limit, active: AtomicUsize::new(0), shed: AtomicUsize::new(0) }
+    }
+
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Take a slot, or count the request as shed and return `None`.
+    pub fn try_admit(&self) -> Option<Permit<'_>> {
+        let taken = self
+            .active
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                (n < self.limit).then_some(n + 1)
+            });
+        match taken {
+            Ok(_) => Some(Permit { owner: self }),
+            Err(_) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Permits currently held.
+    pub fn in_flight(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Requests refused since startup.
+    pub fn shed(&self) -> usize {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+/// One admitted slot; dropping it releases the slot.
+#[derive(Debug)]
+pub struct Permit<'a> {
+    owner: &'a Admission,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.owner.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permits_are_capped_and_released_on_drop() {
+        let a = Admission::new(2);
+        let p1 = a.try_admit().unwrap();
+        let p2 = a.try_admit().unwrap();
+        assert_eq!(a.in_flight(), 2);
+        assert!(a.try_admit().is_none());
+        assert_eq!(a.shed(), 1);
+        drop(p1);
+        assert_eq!(a.in_flight(), 1);
+        let p3 = a.try_admit().expect("slot freed by drop");
+        drop(p2);
+        drop(p3);
+        assert_eq!(a.in_flight(), 0);
+        assert_eq!(a.shed(), 1);
+    }
+
+    #[test]
+    fn limit_zero_sheds_everything() {
+        let a = Admission::new(0);
+        assert!(a.try_admit().is_none());
+        assert!(a.try_admit().is_none());
+        assert_eq!((a.in_flight(), a.shed()), (0, 2));
+    }
+
+    #[test]
+    fn concurrent_admits_never_exceed_the_limit() {
+        let a = Admission::new(3);
+        let peak = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..200 {
+                        if let Some(_p) = a.try_admit() {
+                            let now = a.in_flight();
+                            peak.fetch_max(now, Ordering::SeqCst);
+                            assert!(now <= 3, "{now} permits in flight");
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(a.in_flight(), 0);
+        assert!(peak.load(Ordering::SeqCst) >= 1);
+    }
+}

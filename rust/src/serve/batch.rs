@@ -1,0 +1,169 @@
+//! Batching: coalesce compatible simulation requests into shared
+//! [`SweepGrid`]s.
+//!
+//! Two requests are *compatible* when they agree on everything but the
+//! plan — wire model (including its parameters), α, β, γ, and thread
+//! count.  Compatible jobs become the `inputs` axis of one grid with
+//! singleton network/α/thread axes, so the whole batch fans across the
+//! sweep worker pool as one run: N requests cost one pool dispatch, and
+//! each already-compiled plan is simulated exactly once.
+
+use std::collections::BTreeMap;
+
+use crate::sim::sweep::{self, SweepCell, SweepGrid, SweepInput};
+use crate::sim::NetworkKind;
+
+/// One simulation request, lowered to engine terms.  `index` is the
+/// caller's correlation tag (the request's position in its wave) and
+/// survives coalescing.
+#[derive(Debug)]
+pub struct SimJob {
+    pub index: usize,
+    pub input: SweepInput,
+    pub network: NetworkKind,
+    pub alpha: f64,
+    pub threads: u32,
+    /// Per-word β *before* the words-per-value scaling the grid applies.
+    pub beta: f64,
+    pub gamma: f64,
+}
+
+impl SimJob {
+    /// Machine-compatibility key: jobs with equal keys share one grid.
+    /// Floats compare by bit pattern — the job came from parsed request
+    /// text, so equal text means equal bits.
+    fn batch_key(&self) -> (String, u64, u32, u64, u64) {
+        (
+            self.network.key(),
+            self.alpha.to_bits(),
+            self.threads,
+            self.beta.to_bits(),
+            self.gamma.to_bits(),
+        )
+    }
+}
+
+/// One coalesced grid plus the request indices of its cells, in cell
+/// order (`indices[i]` owns `cells[i]` of the run).
+#[derive(Debug)]
+pub struct Batch {
+    pub grid: SweepGrid,
+    pub indices: Vec<usize>,
+}
+
+impl Batch {
+    pub fn size(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// Group jobs by machine compatibility.  Returned batches are in
+/// deterministic key order; within a batch, jobs keep their given
+/// order (inputs are the grid's outermost axis, so cell order = input
+/// order when every other axis is singleton).
+pub fn coalesce(jobs: Vec<SimJob>) -> Vec<Batch> {
+    type Group = (Vec<SweepInput>, Vec<usize>, NetworkKind, f64, u32, f64, f64);
+    let mut groups: BTreeMap<(String, u64, u32, u64, u64), Group> = BTreeMap::new();
+    for job in jobs {
+        let entry = groups.entry(job.batch_key()).or_insert_with(|| {
+            (Vec::new(), Vec::new(), job.network, job.alpha, job.threads, job.beta, job.gamma)
+        });
+        entry.0.push(job.input);
+        entry.1.push(job.index);
+    }
+    groups
+        .into_values()
+        .map(|(inputs, indices, network, alpha, threads, beta, gamma)| Batch {
+            grid: SweepGrid {
+                inputs,
+                networks: vec![network],
+                alphas: vec![alpha],
+                threads: vec![threads],
+                beta,
+                gamma,
+                jobs: 0,
+            },
+            indices,
+        })
+        .collect()
+}
+
+/// Run one batch on the sweep pool, pairing each cell back with its
+/// request index.  A failing cell fails the whole batch (the grid runs
+/// as one unit); the caller maps the error onto every member.
+pub fn run_batch(batch: &Batch) -> Result<Vec<(usize, SweepCell)>, String> {
+    let cells = sweep::run(&batch.grid)?;
+    debug_assert_eq!(cells.len(), batch.indices.len());
+    Ok(batch.indices.iter().copied().zip(cells).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{Heat1d, Pipeline};
+
+    fn input(n: u64, block: u32) -> SweepInput {
+        Pipeline::new(Heat1d::new(n, 8))
+            .procs(2)
+            .block(block)
+            .transform()
+            .expect("transform")
+            .sweep_input()
+    }
+
+    #[test]
+    fn compatible_jobs_share_a_grid_and_keep_their_indices() {
+        let mk = |index, alpha| SimJob {
+            index,
+            input: input(64, 2),
+            network: NetworkKind::AlphaBeta,
+            alpha,
+            threads: 2,
+            beta: 1.0,
+            gamma: 1.0,
+        };
+        // Three at α=50 coalesce; the α=9 straggler rides alone.
+        let batches = coalesce(vec![mk(0, 50.0), mk(1, 9.0), mk(2, 50.0), mk(3, 50.0)]);
+        assert_eq!(batches.len(), 2);
+        let sizes: Vec<usize> = batches.iter().map(Batch::size).collect();
+        assert_eq!(sizes, vec![1, 3]); // BTreeMap order: α=9 sorts below α=50
+        assert_eq!(batches[1].indices, vec![0, 2, 3]);
+        assert_eq!(batches[1].grid.inputs.len(), 3);
+        assert_eq!(batches[1].grid.networks.len(), 1);
+    }
+
+    #[test]
+    fn run_batch_pairs_cells_with_request_indices() {
+        let jobs = vec![
+            SimJob {
+                index: 7,
+                input: input(64, 2),
+                network: NetworkKind::AlphaBeta,
+                alpha: 50.0,
+                threads: 2,
+                beta: 1.0,
+                gamma: 1.0,
+            },
+            SimJob {
+                index: 3,
+                input: input(64, 4),
+                network: NetworkKind::AlphaBeta,
+                alpha: 50.0,
+                threads: 2,
+                beta: 1.0,
+                gamma: 1.0,
+            },
+        ];
+        let batches = coalesce(jobs);
+        assert_eq!(batches.len(), 1);
+        let cells = run_batch(&batches[0]).expect("heat1d plans simulate");
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].0, 7);
+        assert_eq!(cells[1].0, 3);
+        // Different blockings really produced different cells.
+        assert_ne!(cells[0].1.strategy, cells[1].1.strategy);
+        for (_, cell) in &cells {
+            assert!(cell.makespan > 0.0 && cell.alpha == 50.0 && cell.threads == 2);
+        }
+    }
+}

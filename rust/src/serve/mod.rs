@@ -1,0 +1,57 @@
+//! `serve` — a long-running tuning/simulation daemon.
+//!
+//! Every other surface in this repo is one synchronous process: run a
+//! subcommand, get an answer, exit.  This layer is the serving story —
+//! one resident [`Server`] that answers *streams* of requests and gets
+//! cheaper the longer it lives:
+//!
+//! - **protocol** — newline-delimited JSON requests (`tune`, `simulate`,
+//!   `cache-stats`) and responses; the full schema is documented on
+//!   [`protocol`].
+//! - **shard** — the tuning cache split across mutex slots routed by
+//!   workload signature, each backed by the per-signature shard files
+//!   (and file locks) of [`crate::tune::cache`]; heat1d traffic never
+//!   contends with spmv traffic, in this process or across processes.
+//! - **server** — the cache-first tune path: peek (warm hits cost zero
+//!   engine runs) → in-flight dedupe (N identical concurrent requests
+//!   cost one search) → admission → search → merge + publish.
+//! - **batch** — compatible `simulate` requests in one wave coalesce
+//!   into shared [`crate::sim::sweep`] grids: one worker-pool dispatch
+//!   for the lot.
+//! - **admission** — a hard cap on concurrent searches; excess load is
+//!   *shed* with an explicit `overloaded` response instead of queueing.
+//! - **signals** — SIGINT/SIGTERM raise a flag the daemon (and the
+//!   `sweep`/`tune` CLIs) poll at work boundaries, so shutdown flushes
+//!   cache shards and emits partial output instead of truncating.
+//!
+//! # Quickstart: a three-request batch over stdin
+//!
+//! One wave: two identical tune requests (the second is answered by the
+//! first's cache entry or deduped against its in-flight search) and a
+//! stats probe.  A blank line ends a wave; EOF ends the session.
+//!
+//! ```sh
+//! printf '%s\n' \
+//!   '{"id": "t1", "op": "tune", "workload": "heat1d", "n": 2048, "m": 16, "p": 4, "threads": 8, "alpha": 500.0, "beta": 0.1, "gamma": 1.0}' \
+//!   '{"id": "t2", "op": "tune", "workload": "heat1d", "n": 2048, "m": 16, "p": 4, "threads": 8, "alpha": 500.0, "beta": 0.1, "gamma": 1.0}' \
+//!   '{"id": "s1", "op": "cache-stats"}' \
+//!   | cargo run --release -- serve requests=- cache=results/serve_cache
+//! ```
+//!
+//! Socket mode (`listen=tcp:127.0.0.1:7070` or `listen=unix:/tmp/imp.sock`)
+//! serves the same protocol with one wave per line per connection, and
+//! `serve --smoke` drives a scripted cold → warm → duplicate-burst →
+//! batch mix into `BENCH_serve.json`.
+
+pub mod admission;
+pub mod batch;
+pub mod protocol;
+pub mod server;
+pub mod shard;
+pub mod signals;
+
+pub use admission::{Admission, Permit};
+pub use batch::{coalesce, run_batch, Batch, SimJob};
+pub use protocol::{CacheOutcome, Op, Payload, Request, RequestError, Response};
+pub use server::{run_smoke, ServeConfig, Server, ServeStats, SmokeOutcome, SmokePhase};
+pub use shard::{lock_recover, CacheTotals, ShardedCache};

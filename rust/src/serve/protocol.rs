@@ -1,0 +1,370 @@
+//! The serve wire format: newline-delimited JSON requests and responses.
+//!
+//! One request per line, one response per line, in a deliberately small
+//! dialect the repo can parse without a JSON dependency: a **flat object
+//! of scalar fields** — string values are double-quoted *without escape
+//! sequences*, everything else (numbers, booleans) is a bare token.
+//! Nested objects, arrays, and `\"`-escapes are rejected; no tuning
+//! request needs them.
+//!
+//! # Request schema
+//!
+//! ```json
+//! {"id": "r1", "op": "tune", "workload": "heat1d", "n": 4096, "m": 16,
+//!  "p": 4, "threads": 8, "alpha": 500.0, "beta": 0.1, "gamma": 1.0,
+//!  "network": "alphabeta", "search": "exhaustive", "budget": 0}
+//! ```
+//!
+//! - `id` (required): caller-chosen tag, echoed verbatim in the response.
+//! - `op` (required): `"tune"`, `"simulate"`, or `"cache-stats"`.
+//! - every other field lands in a per-request [`Config`] and overrides
+//!   the server's defaults: `workload` (`heat1d|heat2d|moore2d|spmv|cg`),
+//!   problem size (`n`/`r`, `h`/`w`, `cg_n`/`iters`), steps `m`, procs
+//!   `p`, machine `threads`/`alpha`/`beta`/`gamma`, wire `network`
+//!   (`alphabeta|loggp|hier|contended`).  `tune` additionally honours
+//!   `search` (`exhaustive|golden|coord`) and a per-request `budget`
+//!   (max engine runs; `0` = unlimited, always clamped to the server's
+//!   own ceiling).  `simulate` honours `strategy` (`naive|overlap|ca`)
+//!   and block factor `b`.
+//!
+//! # Response schema
+//!
+//! One object per request, same order as the request wave:
+//!
+//! ```json
+//! {"id": "r1", "status": "ok", "chosen": "ca(b=8)", "makespan": 1234.0,
+//!  "naive_makespan": 2000.0, "engine_runs": 12, "evaluations": 18,
+//!  "search": "exhaustive", "cache": "miss", "latency_ms": 3.2}
+//! ```
+//!
+//! - `status`: `"ok"`, `"error"` (with `"error": "message"`), or
+//!   `"overloaded"` (admission control shed the request; retry later).
+//! - `tune` payload: `chosen`, `makespan`, `naive_makespan`,
+//!   `engine_runs` (0 on a cache hit or deduped wait), `evaluations`,
+//!   `search`, and `cache` — `"hit"` (served from the sharded cache,
+//!   zero engine runs), `"miss"` (this request ran the search), or
+//!   `"deduped"` (an identical request was already in flight; this one
+//!   waited for that result instead of searching again).
+//! - `simulate` payload: `strategy`, `makespan`, `messages`, `words`,
+//!   and `batch` — how many compatible requests shared one sweep grid.
+//! - `cache-stats` payload: `entries`, `shards`, `hits`, `misses`,
+//!   `deduped`, `shed`, `in_flight`.
+//! - `latency_ms`: wall time from wave start to this response.
+
+use crate::config::Config;
+
+/// Parse one line of the flat-object dialect into `(key, value)` pairs
+/// in source order.  String values lose their quotes; bare tokens are
+/// kept verbatim (the consumer parses them as needed).
+pub fn parse_flat_object(line: &str) -> Result<Vec<(String, String)>, String> {
+    let s = line.trim();
+    let s = s
+        .strip_prefix('{')
+        .ok_or_else(|| format!("expected a JSON object, got {line:?}"))?;
+    let s = s.strip_suffix('}').ok_or_else(|| format!("unterminated JSON object: {line:?}"))?;
+    let mut out = Vec::new();
+    let mut rest = s.trim();
+    while !rest.is_empty() {
+        rest = rest
+            .strip_prefix('"')
+            .ok_or_else(|| format!("expected a quoted key at {rest:?}"))?;
+        let end = rest.find('"').ok_or_else(|| format!("unterminated key in {line:?}"))?;
+        let key = rest[..end].to_string();
+        rest = rest[end + 1..].trim_start();
+        rest = rest
+            .strip_prefix(':')
+            .ok_or_else(|| format!("expected ':' after key {key:?}"))?
+            .trim_start();
+        let value = if let Some(v) = rest.strip_prefix('"') {
+            let end =
+                v.find('"').ok_or_else(|| format!("unterminated string value for {key:?}"))?;
+            rest = v[end + 1..].trim_start();
+            v[..end].to_string()
+        } else {
+            let end = rest.find(',').unwrap_or(rest.len());
+            let token = rest[..end].trim();
+            if token.is_empty() || token.contains(['{', '[', '"']) {
+                return Err(format!("expected a scalar value for key {key:?} in {line:?}"));
+            }
+            rest = &rest[end..];
+            token.to_string()
+        };
+        out.push((key, value));
+        match rest.strip_prefix(',') {
+            Some(r) => rest = r.trim_start(),
+            None if rest.is_empty() => {}
+            None => return Err(format!("expected ',' between fields in {line:?}")),
+        }
+    }
+    Ok(out)
+}
+
+/// What a request asks the daemon to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Autotune one pipeline (cache-first, deduped in flight).
+    Tune,
+    /// Simulate one configuration (batched into shared sweep grids).
+    Simulate,
+    /// Report cache/admission counters; never touches the engine.
+    CacheStats,
+}
+
+impl Op {
+    pub fn parse(tag: &str) -> Result<Op, String> {
+        match tag {
+            "tune" => Ok(Op::Tune),
+            "simulate" => Ok(Op::Simulate),
+            "cache-stats" => Ok(Op::CacheStats),
+            other => Err(format!("unknown op {other:?} (tune|simulate|cache-stats)")),
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Op::Tune => "tune",
+            Op::Simulate => "simulate",
+            Op::CacheStats => "cache-stats",
+        }
+    }
+}
+
+/// One parsed request line.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Caller's tag, echoed in the response.
+    pub id: String,
+    pub op: Op,
+    /// Every non-`id`/`op` field, as overrides on the server defaults.
+    pub params: Config,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let mut id = None;
+        let mut op = None;
+        let mut params = Config::new();
+        for (k, v) in parse_flat_object(line)? {
+            match k.as_str() {
+                "id" => id = Some(v),
+                "op" => op = Some(v),
+                _ => params.set(&k, v),
+            }
+        }
+        let id = id.ok_or_else(|| format!("request is missing \"id\": {line:?}"))?;
+        let op = op.ok_or_else(|| format!("request {id:?} is missing \"op\""))?;
+        Ok(Request { id, op: Op::parse(&op)?, params })
+    }
+}
+
+/// Why a request produced no payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// Admission control shed the request; the caller should retry.
+    Overloaded(String),
+    /// The request itself failed (bad params, infeasible transform, …).
+    Failed(String),
+}
+
+/// How a `tune` verdict was obtained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Served from the sharded cache — zero engine runs.
+    Hit,
+    /// Fresh search: this request ran the engine.
+    Miss,
+    /// Waited on an identical in-flight request — zero engine runs.
+    Deduped,
+}
+
+impl CacheOutcome {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            CacheOutcome::Hit => "hit",
+            CacheOutcome::Miss => "miss",
+            CacheOutcome::Deduped => "deduped",
+        }
+    }
+}
+
+/// Successful response payload, per op.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    Tune {
+        chosen: String,
+        makespan: f64,
+        naive_makespan: f64,
+        engine_runs: usize,
+        evaluations: usize,
+        search: String,
+        cache: CacheOutcome,
+    },
+    Simulate {
+        strategy: String,
+        makespan: f64,
+        messages: usize,
+        words: usize,
+        /// Size of the coalesced sweep grid this cell ran in.
+        batch: usize,
+    },
+    CacheStats {
+        entries: usize,
+        shards: usize,
+        hits: usize,
+        misses: usize,
+        deduped: usize,
+        shed: usize,
+        in_flight: usize,
+    },
+}
+
+/// One response line.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: String,
+    /// Wall time from wave start to this response.
+    pub latency_ms: f64,
+    pub result: Result<Payload, RequestError>,
+}
+
+impl Response {
+    /// Render as one JSON line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut s = format!("{{\"id\": {:?}, ", self.id);
+        match &self.result {
+            Ok(Payload::Tune {
+                chosen,
+                makespan,
+                naive_makespan,
+                engine_runs,
+                evaluations,
+                search,
+                cache,
+            }) => {
+                s.push_str(&format!(
+                    "\"status\": \"ok\", \"chosen\": {chosen:?}, \"makespan\": {makespan}, \
+                     \"naive_makespan\": {naive_makespan}, \"engine_runs\": {engine_runs}, \
+                     \"evaluations\": {evaluations}, \"search\": {search:?}, \"cache\": \"{}\"",
+                    cache.tag()
+                ));
+            }
+            Ok(Payload::Simulate { strategy, makespan, messages, words, batch }) => {
+                s.push_str(&format!(
+                    "\"status\": \"ok\", \"strategy\": {strategy:?}, \"makespan\": {makespan}, \
+                     \"messages\": {messages}, \"words\": {words}, \"batch\": {batch}"
+                ));
+            }
+            Ok(Payload::CacheStats { entries, shards, hits, misses, deduped, shed, in_flight }) => {
+                s.push_str(&format!(
+                    "\"status\": \"ok\", \"entries\": {entries}, \"shards\": {shards}, \
+                     \"hits\": {hits}, \"misses\": {misses}, \"deduped\": {deduped}, \
+                     \"shed\": {shed}, \"in_flight\": {in_flight}"
+                ));
+            }
+            Err(RequestError::Overloaded(msg)) => {
+                s.push_str(&format!("\"status\": \"overloaded\", \"error\": {msg:?}"));
+            }
+            Err(RequestError::Failed(msg)) => {
+                s.push_str(&format!("\"status\": \"error\", \"error\": {msg:?}"));
+            }
+        }
+        s.push_str(&format!(", \"latency_ms\": {}}}", self.latency_ms));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_object_parses_strings_and_bare_tokens() {
+        let fields =
+            parse_flat_object(r#"{"id": "r1", "op": "tune", "n": 4096, "alpha": 500.5}"#).unwrap();
+        assert_eq!(
+            fields,
+            vec![
+                ("id".into(), "r1".into()),
+                ("op".into(), "tune".into()),
+                ("n".into(), "4096".into()),
+                ("alpha".into(), "500.5".into()),
+            ]
+        );
+        assert!(parse_flat_object("{}").unwrap().is_empty());
+        // Whitespace-tolerant.
+        let fields = parse_flat_object("  { \"a\" : \"x\" , \"b\" : 2 }  ").unwrap();
+        assert_eq!(fields, vec![("a".into(), "x".into()), ("b".into(), "2".into())]);
+    }
+
+    #[test]
+    fn flat_object_rejects_malformed_lines() {
+        for bad in [
+            "",
+            "not json",
+            "{\"k\": }",
+            "{\"k\" 1}",
+            "{\"k\": 1",
+            "{k: 1}",
+            "{\"k\": [1]}",
+            "{\"k\": {\"nested\": 1}}",
+            "{\"k\": \"unterminated}",
+        ] {
+            assert!(parse_flat_object(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn request_parse_splits_id_op_and_params() {
+        let r = Request::parse(r#"{"id": "q7", "op": "tune", "workload": "heat2d", "p": 4}"#)
+            .unwrap();
+        assert_eq!(r.id, "q7");
+        assert_eq!(r.op, Op::Tune);
+        assert_eq!(r.params.get("workload"), Some("heat2d"));
+        assert_eq!(r.params.get_or("p", 0u32), 4);
+        assert!(r.params.get("id").is_none());
+
+        assert!(Request::parse(r#"{"op": "tune"}"#).unwrap_err().contains("id"));
+        assert!(Request::parse(r#"{"id": "x"}"#).unwrap_err().contains("op"));
+        assert!(Request::parse(r#"{"id": "x", "op": "fry"}"#).unwrap_err().contains("unknown op"));
+    }
+
+    #[test]
+    fn responses_render_one_json_line_per_status() {
+        let ok = Response {
+            id: "a".into(),
+            latency_ms: 1.5,
+            result: Ok(Payload::Tune {
+                chosen: "ca(b=8)".into(),
+                makespan: 10.0,
+                naive_makespan: 20.0,
+                engine_runs: 3,
+                evaluations: 5,
+                search: "exhaustive".into(),
+                cache: CacheOutcome::Miss,
+            }),
+        };
+        let line = ok.to_json();
+        assert!(!line.contains('\n'));
+        for needle in
+            ["\"status\": \"ok\"", "\"chosen\": \"ca(b=8)\"", "\"cache\": \"miss\"", "1.5"]
+        {
+            assert!(line.contains(needle), "{line}");
+        }
+        // Round-trips through our own parser.
+        let fields = parse_flat_object(&line).unwrap();
+        assert!(fields.iter().any(|(k, v)| k == "engine_runs" && v == "3"));
+
+        let over = Response {
+            id: "b".into(),
+            latency_ms: 0.1,
+            result: Err(RequestError::Overloaded("64 in flight".into())),
+        };
+        assert!(over.to_json().contains("\"status\": \"overloaded\""));
+        let failed = Response {
+            id: "c".into(),
+            latency_ms: 0.1,
+            result: Err(RequestError::Failed("bad workload".into())),
+        };
+        assert!(failed.to_json().contains("\"status\": \"error\""));
+    }
+}

@@ -1,0 +1,1145 @@
+//! The daemon: request waves in, response lines out.
+//!
+//! One [`Server`] owns the sharded cache, the in-flight dedupe map, and
+//! the admission gate; it is `&self`-threadsafe, so one instance serves
+//! stdin waves, every TCP/Unix connection, and the smoke driver alike.
+//!
+//! The tune path is cache-first and runs in four steps:
+//!
+//! 1. **Peek** the slot ([`ShardedCache::slot_for`]): a decoded entry is
+//!    a *hit* — answered with zero engine runs, never admitted.
+//! 2. **Dedupe**: a miss consults the in-flight map (keyed by the exact
+//!    [`crate::tune::pipeline_tune_key`] cache key).  An entry means an
+//!    identical search is already running — wait on its [`Flight`]
+//!    instead of searching again; N concurrent duplicates cost one
+//!    search.  No entry makes this request the leader (after a re-peek:
+//!    a prior leader may have finished between our peek and registering,
+//!    and the re-peek happens *after* registration, so its miss proves
+//!    no earlier leader's merge can be lost).
+//! 3. **Admission**: only leaders take a [`Permit`]; past
+//!    `max_in_flight` concurrent searches the request (and everyone
+//!    waiting on its flight) gets an explicit `overloaded` response.
+//! 4. **Search** on a fresh cache with the same backing — the slot
+//!    mutex is *not* held across the search, so other signatures (and
+//!    the peeks of would-be dedupers) never block behind it; the
+//!    per-shard file lock inside [`tune_pipeline`] still serializes
+//!    writers across processes.  The verdict is merged back into the
+//!    slot, published to the flight, and the map entry removed.
+//!
+//! `simulate` requests skip all of that: each wave's compatible jobs
+//! coalesce into shared sweep grids (see [`super::batch`]) and fan
+//! across the sweep worker pool in one dispatch per grid.
+
+use std::collections::HashMap;
+use std::io::{BufRead, Read, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::Config;
+use crate::pipeline::{dispatch_workload, Pipeline, Strategy, Workload, WorkloadVisitor};
+use crate::sim::sweep::{panic_message, SweepInput};
+use crate::sim::{Machine, NetworkKind};
+use crate::tune::search::{search_from_tag, SearchBudget};
+use crate::tune::{pipeline_tune_key, tune_pipeline, CacheEntry, Tuner, TuningCache};
+
+use super::admission::Admission;
+use super::batch::{self, coalesce, SimJob};
+use super::protocol::{CacheOutcome, Op, Payload, Request, RequestError, Response};
+use super::shard::{lock_recover, CacheTotals, ShardedCache};
+
+/// Daemon-level settings, read once at startup.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads per request wave (waves of ≤ 1 request run inline
+    /// on the caller's thread, which keeps the thread-local
+    /// [`crate::sim::compile_count`] meaningful to callers).
+    pub workers: usize,
+    /// Max concurrent engine searches; everything past it is shed.
+    pub max_in_flight: usize,
+    /// Server-wide ceiling on per-request search budgets (`None` =
+    /// unlimited).  Requests can only tighten it.
+    pub budget: Option<usize>,
+    /// Shard directory; `None` keeps the cache in memory.
+    pub cache_dir: Option<PathBuf>,
+    /// Cache mutex slots (signature-routed).
+    pub slots: usize,
+    /// Default search strategy tag when a request names none.
+    pub search: String,
+}
+
+impl ServeConfig {
+    pub fn from_config(cfg: &Config) -> ServeConfig {
+        let cache = cfg.get("cache").unwrap_or("").trim().to_string();
+        let budget = cfg.get_or("budget", 0usize);
+        ServeConfig {
+            workers: cfg.get_or("workers", 4usize).max(1),
+            max_in_flight: cfg.get_or("max_in_flight", 64usize),
+            budget: if budget > 0 { Some(budget) } else { None },
+            cache_dir: if cache.is_empty() { None } else { Some(PathBuf::from(cache)) },
+            slots: cfg.get_or("slots", 8usize).max(1),
+            search: cfg.get_or("search", "exhaustive".to_string()),
+        }
+    }
+}
+
+/// Monotonic counters; all relaxed — they order nothing.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Tune requests answered from the cache (zero engine runs).
+    pub warm_hits: AtomicUsize,
+    /// Engine searches actually run (excludes hits and dedupes).
+    pub searches: AtomicUsize,
+    /// Tune requests that waited on an identical in-flight search.
+    pub deduped: AtomicUsize,
+    /// Engine simulations spent by those searches.
+    pub engine_runs: AtomicUsize,
+    /// Coalesced sweep grids dispatched.
+    pub batches: AtomicUsize,
+    /// Simulation cells across those grids.
+    pub batch_cells: AtomicUsize,
+}
+
+/// What dedupers receive from their leader.
+#[derive(Debug, Clone)]
+struct TuneSummary {
+    chosen: String,
+    makespan: f64,
+    naive_makespan: f64,
+    engine_runs: usize,
+    evaluations: usize,
+    search: String,
+    cache_hit: bool,
+}
+
+/// One in-flight search: the leader publishes, dedupers wait.
+#[derive(Default)]
+struct Flight {
+    slot: Mutex<Option<Result<TuneSummary, RequestError>>>,
+    ready: Condvar,
+}
+
+impl Flight {
+    fn publish(&self, result: Result<TuneSummary, RequestError>) {
+        *lock_recover(&self.slot) = Some(result);
+        self.ready.notify_all();
+    }
+
+    fn wait(&self) -> Result<TuneSummary, RequestError> {
+        let mut guard = lock_recover(&self.slot);
+        loop {
+            if let Some(result) = guard.as_ref() {
+                return result.clone();
+            }
+            guard = match self.ready.wait(guard) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+}
+
+pub struct Server {
+    cfg: ServeConfig,
+    cache: ShardedCache,
+    inflight: Mutex<HashMap<String, Arc<Flight>>>,
+    admission: Admission,
+    stats: ServeStats,
+}
+
+fn ms(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+/// Build a [`Machine`] from request params, *validating* instead of
+/// asserting — a bad request must produce an `error` response, not a
+/// daemon panic.
+fn machine_from(cfg: &Config) -> Result<Machine, String> {
+    let nprocs: u32 = cfg.require("p")?;
+    let threads: u32 = cfg.require("threads")?;
+    let alpha: f64 = cfg.require("alpha")?;
+    let beta: f64 = cfg.require("beta")?;
+    let gamma: f64 = cfg.require("gamma")?;
+    if nprocs == 0 || threads == 0 {
+        return Err("p and threads must be at least 1".into());
+    }
+    if alpha.is_nan()
+        || alpha < 0.0
+        || beta.is_nan()
+        || beta < 0.0
+        || gamma.is_nan()
+        || gamma <= 0.0
+    {
+        return Err(format!("machine parameters out of range: α={alpha} β={beta} γ={gamma}"));
+    }
+    Ok(Machine { nprocs, threads, alpha, beta, gamma })
+}
+
+fn strategy_from(cfg: &Config) -> Result<Strategy, String> {
+    match cfg.get_or("strategy", "ca".to_string()).as_str() {
+        "naive" => Ok(Strategy::Naive),
+        "overlap" => Ok(Strategy::Overlap),
+        "ca" => Ok(Strategy::Ca),
+        other => Err(format!("strategy must be naive|overlap|ca, got {other:?}")),
+    }
+}
+
+/// Baseline every request starts from; request fields override.
+fn request_defaults() -> Config {
+    let mut c = Config::new();
+    c.set("workload", "heat1d");
+    c.set("network", "alphabeta");
+    c.set("n", 4096);
+    c.set("r", 1);
+    c.set("m", 16);
+    c.set("h", 32);
+    c.set("w", 32);
+    c.set("cg_n", 256);
+    c.set("iters", 3);
+    c.set("p", 4);
+    c.set("threads", 8);
+    c.set("alpha", 500.0);
+    c.set("beta", 0.1);
+    c.set("gamma", 1.0);
+    c
+}
+
+impl Server {
+    pub fn new(cfg: ServeConfig) -> Server {
+        let cache = ShardedCache::new(cfg.cache_dir.clone(), cfg.slots);
+        let admission = Admission::new(cfg.max_in_flight);
+        Server {
+            cfg,
+            cache,
+            inflight: Mutex::new(HashMap::new()),
+            admission,
+            stats: ServeStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    pub fn admission(&self) -> &Admission {
+        &self.admission
+    }
+
+    pub fn cache_totals(&self) -> CacheTotals {
+        self.cache.totals()
+    }
+
+    /// Persist every cache slot (shutdown path).
+    pub fn flush(&self) -> std::io::Result<()> {
+        self.cache.flush()
+    }
+
+    fn merged(&self, params: &Config) -> Config {
+        let mut merged = request_defaults();
+        for k in params.keys() {
+            if let Some(v) = params.get(k) {
+                merged.set(k, v);
+            }
+        }
+        merged
+    }
+
+    /// Answer one request (panics in handlers are caught by the caller).
+    pub fn handle(&self, req: &Request) -> Result<Payload, RequestError> {
+        match req.op {
+            Op::Tune => self.handle_tune(req),
+            Op::Simulate => self.handle_simulate(req),
+            Op::CacheStats => Ok(self.cache_stats_payload()),
+        }
+    }
+
+    fn respond(&self, req: &Request, t0: Instant) -> Response {
+        let result = match catch_unwind(AssertUnwindSafe(|| self.handle(req))) {
+            Ok(result) => result,
+            Err(payload) => Err(RequestError::Failed(format!(
+                "request {:?} panicked: {}",
+                req.id,
+                panic_message(payload.as_ref())
+            ))),
+        };
+        Response { id: req.id.clone(), latency_ms: ms(t0), result }
+    }
+
+    fn cache_stats_payload(&self) -> Payload {
+        let totals = self.cache.totals();
+        Payload::CacheStats {
+            entries: totals.entries,
+            shards: totals.shards,
+            hits: totals.hits,
+            misses: totals.misses,
+            deduped: self.stats.deduped.load(Ordering::Relaxed),
+            shed: self.admission.shed(),
+            in_flight: self.admission.in_flight(),
+        }
+    }
+
+    fn handle_tune(&self, req: &Request) -> Result<Payload, RequestError> {
+        struct Visit<'a> {
+            server: &'a Server,
+            params: &'a Config,
+        }
+        impl WorkloadVisitor for Visit<'_> {
+            type Out = Result<Payload, RequestError>;
+            fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out {
+                self.server.tune_workload(w, self.params)
+            }
+        }
+        let params = self.merged(&req.params);
+        let workload: String = params.get_or("workload", "heat1d".to_string());
+        dispatch_workload(&workload, &params, &mut Visit { server: self, params: &params })
+            .map_err(RequestError::Failed)?
+    }
+
+    fn tune_workload<W: Workload + Clone>(
+        &self,
+        w: W,
+        params: &Config,
+    ) -> Result<Payload, RequestError> {
+        let machine = machine_from(params).map_err(RequestError::Failed)?;
+        let network = NetworkKind::parse(&params.get_or("network", "alphabeta".to_string()))
+            .map_err(RequestError::Failed)?;
+        let requested = params.get_or("budget", 0usize);
+        let requested = if requested > 0 { Some(requested) } else { None };
+        let budget = SearchBudget::capped(requested, self.cfg.budget);
+        let base = Pipeline::new(w).procs(machine.nprocs).machine(machine).network(network);
+        let key = pipeline_tune_key(&base, None, budget)
+            .map_err(|e| RequestError::Failed(e.to_string()))?
+            .key;
+        let slot = self.cache.slot_for(&key);
+
+        // 1. Peek: warm answers never search and are never admitted.
+        {
+            let mut guard = lock_recover(slot);
+            guard.reload(&key);
+            if let Some((cand, entry)) = guard.lookup_decoded(&key) {
+                self.stats.warm_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(hit_payload(&cand.label(), &entry, CacheOutcome::Hit));
+            }
+        }
+
+        // 2. Dedupe: join an identical in-flight search, or lead one.
+        let (flight, leader) = {
+            let mut map = lock_recover(&self.inflight);
+            match map.get(&key) {
+                Some(flight) => (Arc::clone(flight), false),
+                None => {
+                    let flight = Arc::new(Flight::default());
+                    map.insert(key.clone(), Arc::clone(&flight));
+                    (flight, true)
+                }
+            }
+        };
+        if !leader {
+            self.stats.deduped.fetch_add(1, Ordering::Relaxed);
+            return flight.wait().map(|s| summary_payload(&s, CacheOutcome::Deduped, 0));
+        }
+
+        // Leader.  Re-peek first: a previous leader may have finished
+        // between our miss and our registration.
+        let already = {
+            let mut guard = lock_recover(slot);
+            guard.reload(&key);
+            guard.lookup_decoded(&key)
+        };
+        let result = match already {
+            Some((cand, entry)) => {
+                self.stats.warm_hits.fetch_add(1, Ordering::Relaxed);
+                Ok(TuneSummary {
+                    chosen: cand.label(),
+                    makespan: entry.makespan,
+                    naive_makespan: entry.naive_makespan,
+                    engine_runs: 0,
+                    evaluations: entry.evaluations,
+                    search: entry.search.clone(),
+                    cache_hit: true,
+                })
+            }
+            None => self.lead_search(&base, &key, params, budget),
+        };
+        flight.publish(result.clone());
+        lock_recover(&self.inflight).remove(&key);
+        match result {
+            Ok(summary) => {
+                let outcome =
+                    if summary.cache_hit { CacheOutcome::Hit } else { CacheOutcome::Miss };
+                Ok(summary_payload(&summary, outcome, summary.engine_runs))
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// 3 + 4: admission, then the search itself on a fresh same-backing
+    /// cache, then the merge back into the slot.
+    fn lead_search<W: Workload + Clone>(
+        &self,
+        base: &Pipeline<W>,
+        key: &str,
+        params: &Config,
+        budget: Option<SearchBudget>,
+    ) -> Result<TuneSummary, RequestError> {
+        let permit = match self.admission.try_admit() {
+            Some(permit) => permit,
+            None => {
+                return Err(RequestError::Overloaded(format!(
+                    "{} searches in flight (limit {})",
+                    self.admission.in_flight(),
+                    self.admission.limit()
+                )))
+            }
+        };
+        let tag = params.get_or("search", self.cfg.search.clone());
+        let mut search = search_from_tag(&tag).map_err(RequestError::Failed)?;
+        search.set_budget(budget);
+        let search_cache = match &self.cfg.cache_dir {
+            Some(dir) => TuningCache::sharded_unloaded(dir),
+            None => TuningCache::new(),
+        };
+        let mut tuner = Tuner::new(search, search_cache);
+        let outcome = catch_unwind(AssertUnwindSafe(|| tune_pipeline(base, &mut tuner)));
+        drop(permit);
+        match outcome {
+            Ok(Ok(out)) => {
+                let report = &out.report;
+                if !report.cache_hit {
+                    self.stats.searches.fetch_add(1, Ordering::Relaxed);
+                    self.stats.engine_runs.fetch_add(report.engine_runs, Ordering::Relaxed);
+                    // Merge the verdict into the slot so later peeks hit
+                    // in memory (disk already has it for file backing:
+                    // tune_pipeline saved under the shard lock).
+                    lock_recover(self.cache.slot_for(key)).insert(
+                        key.to_string(),
+                        CacheEntry::from_candidate(
+                            &report.chosen,
+                            report.makespan,
+                            report.naive_makespan,
+                            report.evaluations,
+                            &report.search,
+                            report.wall_secs,
+                        ),
+                    );
+                } else {
+                    // tune_pipeline found a concurrent process's verdict
+                    // on disk; adopt it.
+                    self.stats.warm_hits.fetch_add(1, Ordering::Relaxed);
+                    lock_recover(self.cache.slot_for(key)).reload(key);
+                }
+                Ok(TuneSummary {
+                    chosen: report.chosen.label(),
+                    makespan: report.makespan,
+                    naive_makespan: report.naive_makespan,
+                    engine_runs: report.engine_runs,
+                    evaluations: report.evaluations,
+                    search: report.search.clone(),
+                    cache_hit: report.cache_hit,
+                })
+            }
+            Ok(Err(e)) => Err(RequestError::Failed(e.to_string())),
+            Err(payload) => Err(RequestError::Failed(format!(
+                "search for {key:?} panicked: {}",
+                panic_message(payload.as_ref())
+            ))),
+        }
+    }
+
+    fn handle_simulate(&self, req: &Request) -> Result<Payload, RequestError> {
+        let job = self.build_sim_job(0, req).map_err(RequestError::Failed)?;
+        let batches = coalesce(vec![job]);
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.batch_cells.fetch_add(1, Ordering::Relaxed);
+        let cells = batch::run_batch(&batches[0]).map_err(RequestError::Failed)?;
+        let (_, cell) = cells
+            .into_iter()
+            .next()
+            .ok_or_else(|| RequestError::Failed("empty batch".into()))?;
+        Ok(Payload::Simulate {
+            strategy: cell.strategy.to_string(),
+            makespan: cell.makespan,
+            messages: cell.messages,
+            words: cell.words,
+            batch: 1,
+        })
+    }
+
+    /// Lower one simulate request to engine terms.  Runs on the wave's
+    /// thread: [`SweepInput::new`] compiles the plan exactly once here.
+    fn build_sim_job(&self, index: usize, req: &Request) -> Result<SimJob, String> {
+        struct Visit<'a> {
+            params: &'a Config,
+        }
+        impl WorkloadVisitor for Visit<'_> {
+            type Out = Result<(SweepInput, Machine, NetworkKind), String>;
+            fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out {
+                let machine = machine_from(self.params)?;
+                let network =
+                    NetworkKind::parse(&self.params.get_or("network", "alphabeta".to_string()))?;
+                let mut pipe =
+                    Pipeline::new(w).procs(machine.nprocs).strategy(strategy_from(self.params)?);
+                if let Some(b) = self.params.get("b") {
+                    pipe = pipe.block(b.parse().map_err(|_| format!("bad block factor {b:?}"))?);
+                }
+                let t = pipe.transform().map_err(|e| e.to_string())?;
+                Ok((t.sweep_input(), machine, network))
+            }
+        }
+        let params = self.merged(&req.params);
+        let workload: String = params.get_or("workload", "heat1d".to_string());
+        let (input, machine, network) =
+            dispatch_workload(&workload, &params, &mut Visit { params: &params })??;
+        Ok(SimJob {
+            index,
+            input,
+            network,
+            alpha: machine.alpha,
+            threads: machine.threads,
+            beta: machine.beta,
+            gamma: machine.gamma,
+        })
+    }
+
+    /// Answer one wave.  Parse errors become `error` responses in
+    /// place; simulate requests coalesce into shared grids; tune and
+    /// cache-stats requests fan across `workers` threads (inline when
+    /// the wave has ≤ 1 of them).  Response order = request order.
+    pub fn run_wave(&self, requests: Vec<Result<Request, String>>) -> Vec<Response> {
+        let t0 = Instant::now();
+        let mut responses: Vec<Option<Response>> = Vec::new();
+        responses.resize_with(requests.len(), || None);
+        let mut sims: Vec<(usize, Request)> = Vec::new();
+        let mut others: Vec<(usize, Request)> = Vec::new();
+        for (i, parsed) in requests.into_iter().enumerate() {
+            match parsed {
+                Err(e) => {
+                    responses[i] = Some(Response {
+                        id: String::new(),
+                        latency_ms: ms(t0),
+                        result: Err(RequestError::Failed(e)),
+                    })
+                }
+                Ok(req) if req.op == Op::Simulate => sims.push((i, req)),
+                Ok(req) => others.push((i, req)),
+            }
+        }
+
+        let mut jobs = Vec::new();
+        for (i, req) in &sims {
+            match self.build_sim_job(*i, req) {
+                Ok(job) => jobs.push(job),
+                Err(e) => {
+                    responses[*i] = Some(Response {
+                        id: req.id.clone(),
+                        latency_ms: ms(t0),
+                        result: Err(RequestError::Failed(e)),
+                    })
+                }
+            }
+        }
+        if !jobs.is_empty() {
+            let ids: HashMap<usize, &str> =
+                sims.iter().map(|(i, req)| (*i, req.id.as_str())).collect();
+            for b in coalesce(jobs) {
+                self.stats.batches.fetch_add(1, Ordering::Relaxed);
+                self.stats.batch_cells.fetch_add(b.size(), Ordering::Relaxed);
+                match batch::run_batch(&b) {
+                    Ok(cells) => {
+                        for (i, cell) in cells {
+                            responses[i] = Some(Response {
+                                id: ids[&i].to_string(),
+                                latency_ms: ms(t0),
+                                result: Ok(Payload::Simulate {
+                                    strategy: cell.strategy.to_string(),
+                                    makespan: cell.makespan,
+                                    messages: cell.messages,
+                                    words: cell.words,
+                                    batch: b.size(),
+                                }),
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        for i in &b.indices {
+                            responses[*i] = Some(Response {
+                                id: ids[i].to_string(),
+                                latency_ms: ms(t0),
+                                result: Err(RequestError::Failed(format!(
+                                    "batch simulation failed: {e}"
+                                ))),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        if others.len() <= 1 || self.cfg.workers <= 1 {
+            for (i, req) in &others {
+                responses[*i] = Some(self.respond(req, t0));
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            let done: Mutex<Vec<(usize, Response)>> = Mutex::new(Vec::with_capacity(others.len()));
+            std::thread::scope(|scope| {
+                for _ in 0..self.cfg.workers.min(others.len()) {
+                    scope.spawn(|| loop {
+                        let j = next.fetch_add(1, Ordering::Relaxed);
+                        if j >= others.len() {
+                            break;
+                        }
+                        let (i, req) = &others[j];
+                        let response = self.respond(req, t0);
+                        lock_recover(&done).push((*i, response));
+                    });
+                }
+            });
+            for (i, response) in done.into_inner().unwrap_or_else(|p| p.into_inner()) {
+                responses[i] = Some(response);
+            }
+        }
+        responses.into_iter().map(|r| r.expect("every request answered")).collect()
+    }
+
+    /// Drive waves from a reader: one request per line, a blank line
+    /// (or EOF) ends a wave; responses are written one JSON line each.
+    /// `stop` is honoured at wave boundaries.  Returns the number of
+    /// responses written.
+    pub fn serve_reader<R: BufRead, Out: Write>(
+        &self,
+        reader: R,
+        out: &mut Out,
+        stop: &AtomicBool,
+    ) -> std::io::Result<usize> {
+        let mut written = 0;
+        let mut wave: Vec<Result<Request, String>> = Vec::new();
+        for line in reader.lines() {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(written);
+            }
+            let line = line?;
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                written += self.write_wave(&mut wave, out)?;
+                continue;
+            }
+            wave.push(Request::parse(trimmed));
+        }
+        if !stop.load(Ordering::Relaxed) {
+            written += self.write_wave(&mut wave, out)?;
+        }
+        Ok(written)
+    }
+
+    fn write_wave<Out: Write>(
+        &self,
+        wave: &mut Vec<Result<Request, String>>,
+        out: &mut Out,
+    ) -> std::io::Result<usize> {
+        if wave.is_empty() {
+            return Ok(0);
+        }
+        let responses = self.run_wave(std::mem::take(wave));
+        let n = responses.len();
+        for response in responses {
+            writeln!(out, "{}", response.to_json())?;
+        }
+        out.flush()?;
+        Ok(n)
+    }
+
+    /// One connection: each line is its own wave, answered immediately.
+    /// The stream should have a short read timeout so `stop` is polled.
+    fn serve_connection<S: Read + Write>(&self, stream: &mut S, stop: &AtomicBool) {
+        let mut buf: Vec<u8> = Vec::new();
+        let mut chunk = [0u8; 4096];
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match stream.read(&mut chunk) {
+                Ok(0) => return,
+                Ok(n) => {
+                    buf.extend_from_slice(&chunk[..n]);
+                    while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+                        let line: Vec<u8> = buf.drain(..=pos).collect();
+                        let text = String::from_utf8_lossy(&line);
+                        let text = text.trim();
+                        if text.is_empty() {
+                            continue;
+                        }
+                        for response in self.run_wave(vec![Request::parse(text)]) {
+                            if writeln!(stream, "{}", response.to_json()).is_err() {
+                                return;
+                            }
+                        }
+                        let _ = stream.flush();
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue
+                }
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Accept loop over TCP; one scoped thread per connection.
+    pub fn serve_tcp(
+        &self,
+        listener: std::net::TcpListener,
+        stop: &AtomicBool,
+    ) -> std::io::Result<()> {
+        listener.set_nonblocking(true)?;
+        std::thread::scope(|scope| {
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut stream, _addr)) => {
+                        scope.spawn(move || {
+                            let _ = stream.set_nonblocking(false);
+                            let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+                            self.serve_connection(&mut stream, stop);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(15));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(())
+    }
+
+    /// Accept loop over a Unix socket; same shape as [`Server::serve_tcp`].
+    #[cfg(unix)]
+    pub fn serve_unix(
+        &self,
+        listener: std::os::unix::net::UnixListener,
+        stop: &AtomicBool,
+    ) -> std::io::Result<()> {
+        listener.set_nonblocking(true)?;
+        std::thread::scope(|scope| {
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut stream, _addr)) => {
+                        scope.spawn(move || {
+                            let _ = stream.set_nonblocking(false);
+                            let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+                            self.serve_connection(&mut stream, stop);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(15));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(())
+    }
+}
+
+fn hit_payload(chosen: &str, entry: &CacheEntry, outcome: CacheOutcome) -> Payload {
+    Payload::Tune {
+        chosen: chosen.to_string(),
+        makespan: entry.makespan,
+        naive_makespan: entry.naive_makespan,
+        engine_runs: 0,
+        evaluations: entry.evaluations,
+        search: entry.search.clone(),
+        cache: outcome,
+    }
+}
+
+fn summary_payload(s: &TuneSummary, outcome: CacheOutcome, engine_runs: usize) -> Payload {
+    Payload::Tune {
+        chosen: s.chosen.clone(),
+        makespan: s.makespan,
+        naive_makespan: s.naive_makespan,
+        engine_runs,
+        evaluations: s.evaluations,
+        search: s.search.clone(),
+        cache: outcome,
+    }
+}
+
+/// One timed smoke wave.
+#[derive(Debug, Clone)]
+pub struct SmokePhase {
+    pub requests: usize,
+    pub secs: f64,
+    pub rps: f64,
+    /// Engine simulations this wave cost (0 proves warm hits are free).
+    pub engine_runs: usize,
+}
+
+/// Everything `serve --smoke` measures; `json` is the BENCH document.
+#[derive(Debug)]
+pub struct SmokeOutcome {
+    pub json: String,
+    /// A shutdown signal arrived between phases; `json` is partial.
+    pub interrupted: bool,
+    pub cold: Option<SmokePhase>,
+    pub warm: Option<SmokePhase>,
+    /// Requests that waited on an identical in-flight search.
+    pub dedupe_hits: usize,
+    /// Engine searches the duplicate wave actually ran (must be 1).
+    pub dedupe_searches: usize,
+    pub batch_grids: usize,
+    pub batch_cells: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub overloaded: usize,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn phase_json(phase: &Option<SmokePhase>) -> String {
+    match phase {
+        Some(p) => format!(
+            "{{\"requests\": {}, \"secs\": {:.6}, \"rps\": {:.1}, \"engine_runs\": {}}}",
+            p.requests, p.secs, p.rps, p.engine_runs
+        ),
+        None => "null".to_string(),
+    }
+}
+
+/// The scripted request mix behind `serve --smoke` and
+/// `BENCH_serve.json`: a cold tune wave (every workload × network), the
+/// identical wave warm (must cost zero engine runs), a burst of
+/// concurrent duplicates on a fresh key (must dedupe to one search),
+/// and a compatible simulate wave (must coalesce into one grid).
+/// `stop` is polled between phases; an interrupt yields a partial
+/// document with `"interrupted": true`.
+pub fn run_smoke(cfg: &Config, stop: &AtomicBool) -> Result<SmokeOutcome, String> {
+    let spec = cfg.get("cache").unwrap_or("").trim().to_string();
+    let temp_cache = spec.is_empty();
+    let cache_dir = if temp_cache {
+        std::env::temp_dir().join(format!("imp_serve_smoke_{}", std::process::id()))
+    } else {
+        PathBuf::from(&spec)
+    };
+    // Cold means cold: the smoke benchmark always starts from scratch.
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
+    let mut scfg = ServeConfig::from_config(cfg);
+    scfg.cache_dir = Some(cache_dir.clone());
+    // The duplicate burst needs real concurrency to observe dedupes.
+    scfg.workers = scfg.workers.max(2);
+    let server = Server::new(scfg);
+
+    let workloads: Vec<String> = cfg
+        .get("workloads")
+        .unwrap_or("heat1d,heat2d")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let networks: Vec<String> = cfg
+        .get("networks")
+        .unwrap_or("alphabeta,loggp")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let (n, m) = (cfg.get_or("n", 512u64), cfg.get_or("m", 8u32));
+    let (h, w) = (cfg.get_or("h", 12u64), cfg.get_or("w", 12u64));
+    let (cg_n, iters) = (cfg.get_or("cg_n", 64u32), cfg.get_or("iters", 2u32));
+    let (p, threads) = (cfg.get_or("p", 4u32), cfg.get_or("threads", 8u32));
+    let alpha = cfg.get_or("alpha", 500.0f64);
+    let (beta, gamma) = (cfg.get_or("beta", 0.1f64), cfg.get_or("gamma", 1.0f64));
+    let search = cfg.get_or("search", "exhaustive".to_string());
+
+    let tune_line = |id: &str, workload: &str, network: &str, alpha: f64| {
+        format!(
+            "{{\"id\": \"{id}\", \"op\": \"tune\", \"workload\": \"{workload}\", \
+             \"network\": \"{network}\", \"n\": {n}, \"m\": {m}, \"h\": {h}, \"w\": {w}, \
+             \"cg_n\": {cg_n}, \"iters\": {iters}, \"p\": {p}, \"threads\": {threads}, \
+             \"alpha\": {alpha}, \"beta\": {beta}, \"gamma\": {gamma}, \"search\": \"{search}\"}}"
+        )
+    };
+    let sim_line = |id: &str, workload: &str, strategy: &str| {
+        let block = if strategy == "ca" { ", \"b\": 4" } else { "" };
+        format!(
+            "{{\"id\": \"{id}\", \"op\": \"simulate\", \"workload\": \"{workload}\", \
+             \"strategy\": \"{strategy}\"{block}, \"n\": {n}, \"m\": {m}, \"h\": {h}, \
+             \"w\": {w}, \"cg_n\": {cg_n}, \"iters\": {iters}, \"p\": {p}, \
+             \"threads\": {threads}, \"alpha\": {alpha}, \"beta\": {beta}, \"gamma\": {gamma}}}"
+        )
+    };
+
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut timed_wave = |lines: &[String]| -> Result<(SmokePhase, Vec<Response>), String> {
+        let runs_before = server.stats().engine_runs.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        let responses = server.run_wave(lines.iter().map(|l| Request::parse(l)).collect());
+        let secs = t0.elapsed().as_secs_f64();
+        for r in &responses {
+            match &r.result {
+                Ok(_) => latencies.push(r.latency_ms),
+                Err(RequestError::Overloaded(msg)) => {
+                    return Err(format!("smoke request {:?} shed: {msg}", r.id))
+                }
+                Err(RequestError::Failed(msg)) => {
+                    return Err(format!("smoke request {:?} failed: {msg}", r.id))
+                }
+            }
+        }
+        let engine_runs = server.stats().engine_runs.load(Ordering::Relaxed) - runs_before;
+        let rps = lines.len() as f64 / secs.max(1e-9);
+        Ok((SmokePhase { requests: lines.len(), secs, rps, engine_runs }, responses))
+    };
+
+    let mut cold = None;
+    let mut warm = None;
+    let (mut dedupe_hits, mut dedupe_searches) = (0, 0);
+    let (mut batch_grids, mut batch_cells) = (0, 0);
+
+    let mut stopped = stop.load(Ordering::Relaxed);
+    if !stopped {
+        let mut lines = Vec::new();
+        for wl in &workloads {
+            for net in &networks {
+                lines.push(tune_line(&format!("cold-{wl}-{net}"), wl, net, alpha));
+            }
+        }
+        cold = Some(timed_wave(&lines)?.0);
+        stopped = stop.load(Ordering::Relaxed);
+    }
+    if !stopped {
+        let mut lines = Vec::new();
+        for wl in &workloads {
+            for net in &networks {
+                lines.push(tune_line(&format!("warm-{wl}-{net}"), wl, net, alpha));
+            }
+        }
+        warm = Some(timed_wave(&lines)?.0);
+        stopped = stop.load(Ordering::Relaxed);
+    }
+    if !stopped {
+        // Fresh key (α+attempt) so the duplicates race a real search.
+        // On a loaded single-core machine the pool can serialise — the
+        // leader finishes before any follower starts, so every follower
+        // hits instead of deduping; retry on a fresh key until a true
+        // in-flight dedupe is observed (each attempt still costs
+        // exactly one search either way).
+        let wl = &workloads[0];
+        let net = &networks[0];
+        for attempt in 1..=5u32 {
+            let fresh = alpha + attempt as f64;
+            let lines: Vec<String> = (0..4)
+                .map(|i| tune_line(&format!("dup{attempt}-{i}"), wl, net, fresh))
+                .collect();
+            let deduped_before = server.stats().deduped.load(Ordering::Relaxed);
+            let searches_before = server.stats().searches.load(Ordering::Relaxed);
+            timed_wave(&lines)?;
+            dedupe_hits = server.stats().deduped.load(Ordering::Relaxed) - deduped_before;
+            dedupe_searches = server.stats().searches.load(Ordering::Relaxed) - searches_before;
+            if dedupe_hits > 0 || stop.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+        stopped = stop.load(Ordering::Relaxed);
+    }
+    if !stopped {
+        let mut lines = Vec::new();
+        for wl in &workloads {
+            for strategy in ["naive", "overlap", "ca"] {
+                lines.push(sim_line(&format!("sim-{wl}-{strategy}"), wl, strategy));
+            }
+        }
+        let grids_before = server.stats().batches.load(Ordering::Relaxed);
+        let cells_before = server.stats().batch_cells.load(Ordering::Relaxed);
+        timed_wave(&lines)?;
+        batch_grids = server.stats().batches.load(Ordering::Relaxed) - grids_before;
+        batch_cells = server.stats().batch_cells.load(Ordering::Relaxed) - cells_before;
+        stopped = stop.load(Ordering::Relaxed);
+    }
+
+    server.flush().map_err(|e| format!("cache flush failed: {e}"))?;
+    let totals = server.cache_totals();
+    if temp_cache {
+        let _ = std::fs::remove_dir_all(&cache_dir);
+    }
+
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    let (p50_ms, p99_ms) = (percentile(&latencies, 0.50), percentile(&latencies, 0.99));
+    let occupancy = if batch_grids == 0 { 0.0 } else { batch_cells as f64 / batch_grids as f64 };
+    let json = format!(
+        "{{\n  \"serve\": \"smoke\",\n  \"interrupted\": {stopped},\n  \"cold\": {},\n  \
+         \"warm\": {},\n  \"dedupe\": {{\"duplicates\": 4, \"deduped\": {dedupe_hits}, \
+         \"searches\": {dedupe_searches}}},\n  \"batch\": {{\"grids\": {batch_grids}, \
+         \"cells\": {batch_cells}, \"occupancy\": {occupancy:.2}}},\n  \
+         \"latency_ms\": {{\"p50\": {p50_ms:.3}, \"p99\": {p99_ms:.3}}},\n  \
+         \"overloaded\": {},\n  \"cache\": {{\"entries\": {}, \"shards\": {}, \"hits\": {}, \
+         \"misses\": {}}}\n}}\n",
+        phase_json(&cold),
+        phase_json(&warm),
+        server.admission().shed(),
+        totals.entries,
+        totals.shards,
+        totals.hits,
+        totals.misses,
+    );
+    Ok(SmokeOutcome {
+        json,
+        interrupted: stopped,
+        cold,
+        warm,
+        dedupe_hits,
+        dedupe_searches,
+        batch_grids,
+        batch_cells,
+        p50_ms,
+        p99_ms,
+        overloaded: server.admission().shed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(line: &str) -> Request {
+        Request::parse(line).expect("request parses")
+    }
+
+    fn memory_server(workers: usize) -> Server {
+        Server::new(ServeConfig {
+            workers,
+            max_in_flight: 64,
+            budget: None,
+            cache_dir: None,
+            slots: 4,
+            search: "exhaustive".to_string(),
+        })
+    }
+
+    #[test]
+    fn tune_misses_then_hits_with_zero_engine_runs() {
+        let server = memory_server(1);
+        let line = r#"{"id": "t", "op": "tune", "workload": "heat1d", "n": 64, "m": 8,
+                       "p": 2, "threads": 4, "alpha": 50.0, "beta": 1.0, "gamma": 1.0}"#
+            .replace('\n', " ");
+        let first = server.handle(&req(&line)).expect("tunable");
+        match &first {
+            Payload::Tune { cache, engine_runs, .. } => {
+                assert_eq!(*cache, CacheOutcome::Miss);
+                assert!(*engine_runs > 0);
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+        let second = server.handle(&req(&line)).expect("tunable");
+        match &second {
+            Payload::Tune { cache, engine_runs, chosen, .. } => {
+                assert_eq!(*cache, CacheOutcome::Hit);
+                assert_eq!(*engine_runs, 0);
+                assert!(!chosen.is_empty());
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+        assert_eq!(server.stats().warm_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(server.stats().searches.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn bad_requests_error_without_panicking_the_server() {
+        let server = memory_server(1);
+        // p = 0 would assert inside Machine::new; the server validates.
+        let r = server.handle(&req(
+            r#"{"id": "x", "op": "tune", "workload": "heat1d", "p": 0}"#,
+        ));
+        assert!(matches!(r, Err(RequestError::Failed(_))), "{r:?}");
+        let r = server.handle(&req(r#"{"id": "x", "op": "tune", "workload": "nope"}"#));
+        assert!(matches!(r, Err(RequestError::Failed(_))), "{r:?}");
+        let r = server.handle(&req(r#"{"id": "x", "op": "simulate", "strategy": "warp"}"#));
+        assert!(matches!(r, Err(RequestError::Failed(_))), "{r:?}");
+        // The server still works afterwards.
+        assert!(server.handle(&req(r#"{"id": "x", "op": "cache-stats"}"#)).is_ok());
+    }
+
+    #[test]
+    fn wave_responses_keep_request_order_and_batch_simulations() {
+        let server = memory_server(2);
+        let lines = [
+            r#"{"id": "s1", "op": "simulate", "workload": "heat1d", "n": 64, "m": 8, "strategy": "naive", "p": 2, "threads": 2, "alpha": 50.0, "beta": 1.0, "gamma": 1.0}"#,
+            r#"{"id": "broken""#,
+            r#"{"id": "c1", "op": "cache-stats"}"#,
+            r#"{"id": "s2", "op": "simulate", "workload": "heat1d", "n": 64, "m": 8, "strategy": "overlap", "p": 2, "threads": 2, "alpha": 50.0, "beta": 1.0, "gamma": 1.0}"#,
+        ];
+        let responses = server.run_wave(lines.iter().map(|l| Request::parse(l)).collect());
+        assert_eq!(responses.len(), 4);
+        assert_eq!(responses[0].id, "s1");
+        assert!(matches!(&responses[1].result, Err(RequestError::Failed(_))));
+        assert_eq!(responses[2].id, "c1");
+        assert_eq!(responses[3].id, "s2");
+        // Both simulations were compatible: one grid of two cells.
+        for (i, expect) in [(0, "naive"), (3, "overlap")] {
+            match &responses[i].result {
+                Ok(Payload::Simulate { strategy, batch, makespan, .. }) => {
+                    assert!(strategy.contains(expect), "{strategy}");
+                    assert_eq!(*batch, 2);
+                    assert!(*makespan > 0.0);
+                }
+                other => panic!("unexpected result {other:?}"),
+            }
+        }
+        assert_eq!(server.stats().batches.load(Ordering::Relaxed), 1);
+        assert_eq!(server.stats().batch_cells.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn overload_is_shed_with_an_explicit_response() {
+        let mut cfg = memory_server(1).cfg.clone();
+        cfg.max_in_flight = 0; // admits nothing: deterministic shedding
+        let server = Server::new(cfg);
+        let r = server.handle(&req(
+            r#"{"id": "x", "op": "tune", "workload": "heat1d", "n": 64, "m": 8, "p": 2, "threads": 4, "alpha": 50.0, "beta": 1.0, "gamma": 1.0}"#,
+        ));
+        assert!(matches!(r, Err(RequestError::Overloaded(_))), "{r:?}");
+        match server.handle(&req(r#"{"id": "s", "op": "cache-stats"}"#)).unwrap() {
+            Payload::CacheStats { shed, in_flight, .. } => {
+                assert_eq!(shed, 1);
+                assert_eq!(in_flight, 0);
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_reader_answers_waves_and_honours_stop() {
+        let server = memory_server(2);
+        let input = "{\"id\": \"a\", \"op\": \"cache-stats\"}\n\n{\"id\": \"b\", \"op\": \"cache-stats\"}\n";
+        let mut out = Vec::new();
+        let stop = AtomicBool::new(false);
+        let n = server.serve_reader(input.as_bytes(), &mut out, &stop).unwrap();
+        assert_eq!(n, 2);
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("\"id\": \"a\"") && text.contains("\"id\": \"b\""));
+
+        let stop = AtomicBool::new(true);
+        let mut out = Vec::new();
+        let n = server.serve_reader(input.as_bytes(), &mut out, &stop).unwrap();
+        assert_eq!(n, 0);
+        assert!(out.is_empty());
+    }
+}
+

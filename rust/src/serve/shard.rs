@@ -1,0 +1,141 @@
+//! The daemon's cache: N independent [`TuningCache`] slots, routed by
+//! workload signature.
+//!
+//! Each slot is its own mutex, so tuning heat1d never contends with
+//! tuning spmv; all slots share one on-disk shard directory (the
+//! per-signature files plus file locks in [`crate::tune::cache`] keep
+//! concurrent writers — threads here, or whole other processes — from
+//! clobbering each other).  Routing uses the same signature hash as the
+//! shard file names, so one slot owns each shard file end to end.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::tune::cache::tag_hash;
+use crate::tune::{signature_of, TuningCache};
+
+/// Lock a mutex, recovering from poison.  A handler that panicked while
+/// holding a slot must not wedge the daemon: the slot's `TuningCache`
+/// is valid after any interrupted sequence of its methods (worst case a
+/// fresh search re-runs), so the poison flag carries no information we
+/// act on.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Aggregated counters over every slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheTotals {
+    pub entries: usize,
+    pub shards: usize,
+    pub hits: usize,
+    pub misses: usize,
+}
+
+#[derive(Debug)]
+pub struct ShardedCache {
+    slots: Vec<Mutex<TuningCache>>,
+}
+
+impl ShardedCache {
+    /// `dir = None` keeps everything in memory (tests, throwaway runs);
+    /// otherwise each slot lazily loads per-signature shard files from
+    /// `dir` on first touch.  `slots` is clamped to ≥ 1.
+    pub fn new(dir: Option<PathBuf>, slots: usize) -> Self {
+        let slots = (0..slots.max(1))
+            .map(|_| {
+                Mutex::new(match &dir {
+                    Some(d) => TuningCache::sharded_unloaded(d),
+                    None => TuningCache::new(),
+                })
+            })
+            .collect();
+        ShardedCache { slots }
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The slot responsible for `key` — deterministic per workload
+    /// signature, so one signature's requests always serialize on the
+    /// same mutex (and the same shard file).
+    pub fn slot_for(&self, key: &str) -> &Mutex<TuningCache> {
+        let i = tag_hash(signature_of(key)) as usize % self.slots.len();
+        &self.slots[i]
+    }
+
+    pub fn totals(&self) -> CacheTotals {
+        let mut t = CacheTotals { entries: 0, shards: 0, hits: 0, misses: 0 };
+        for slot in &self.slots {
+            let c = lock_recover(slot);
+            t.entries += c.len();
+            t.shards += c.shard_count();
+            t.hits += c.hits();
+            t.misses += c.misses();
+        }
+        t
+    }
+
+    /// Persist every slot (no-op for memory-backed slots).  Called on
+    /// shutdown; individual saves during operation already happen under
+    /// the per-shard file lock inside `tune_pipeline`.
+    pub fn flush(&self) -> std::io::Result<()> {
+        for slot in &self.slots {
+            lock_recover(slot).save()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Machine, NetworkKind};
+    use crate::tune::space::Candidate;
+    use crate::tune::{cache_key, CacheEntry};
+
+    fn entry() -> CacheEntry {
+        CacheEntry::from_candidate(&Candidate::naive(2), 10.0, 20.0, 3, "exhaustive", 0.1)
+    }
+
+    fn key(sig: &str, procs: u32) -> String {
+        cache_key(sig, procs, &Machine::new(procs, 4, 5.0, 1.0, 1.0), &NetworkKind::AlphaBeta)
+    }
+
+    #[test]
+    fn same_signature_routes_to_the_same_slot() {
+        let cache = ShardedCache::new(None, 8);
+        assert_eq!(cache.num_slots(), 8);
+        let k1 = key("heat1d(v=1,e=1,l=4,w=1)", 2);
+        let k2 = cache_key(
+            "heat1d(v=1,e=1,l=4,w=1)",
+            8,
+            &Machine::new(8, 2, 9.0, 2.0, 1.0),
+            &NetworkKind::LogGp { overhead: 1.0, gap: 2.0 },
+        );
+        assert!(std::ptr::eq(cache.slot_for(&k1), cache.slot_for(&k2)));
+        // Zero slots is clamped, not a modulo-by-zero panic.
+        assert_eq!(ShardedCache::new(None, 0).num_slots(), 1);
+    }
+
+    #[test]
+    fn totals_aggregate_across_slots() {
+        let cache = ShardedCache::new(None, 4);
+        let keys = ["heat1d(v=1,e=1,l=4,w=1)", "heat2d(v=9,e=8,l=3,w=1)", "spmv(v=7,e=9,l=2,w=2)"]
+            .map(|sig| key(sig, 2));
+        for k in &keys {
+            lock_recover(cache.slot_for(k)).insert(k.clone(), entry());
+        }
+        for k in &keys {
+            assert!(lock_recover(cache.slot_for(k)).lookup_decoded(k).is_some());
+        }
+        assert!(lock_recover(cache.slot_for(&keys[0])).lookup_decoded("absent|key").is_none());
+        let t = cache.totals();
+        assert_eq!((t.entries, t.hits, t.misses), (3, 3, 1));
+        cache.flush().unwrap(); // memory-backed: a no-op, not an error
+    }
+}

@@ -1,0 +1,68 @@
+//! Cooperative shutdown: SIGINT/SIGTERM raise one global flag.
+//!
+//! No runtime dependency: on Unix the handler is installed through the
+//! C `signal` symbol directly; elsewhere [`install`] is a no-op and the
+//! flag can only be raised programmatically.  Long-running surfaces
+//! (`serve`, `sweep`, `tune`) poll [`shutdown_requested`] at their work
+//! boundaries — between waves, cells, or tuning rows — then flush
+//! caches and emit whatever partial output they have, so a Ctrl-C never
+//! truncates a shard file mid-write (shard writes themselves are
+//! tmp-file + rename, so even an unpolled kill leaves valid files).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static STOP: AtomicBool = AtomicBool::new(false);
+
+/// The flag itself, for APIs that take `&AtomicBool` (e.g.
+/// [`crate::sim::sweep::run_with_stop`]).
+pub fn flag() -> &'static AtomicBool {
+    &STOP
+}
+
+/// True once a signal arrived (or [`flag`] was raised by hand).
+pub fn shutdown_requested() -> bool {
+    STOP.load(Ordering::Relaxed)
+}
+
+/// Lower the flag (tests; a daemon restarting its accept loop).
+pub fn reset() {
+    STOP.store(false, Ordering::Relaxed)
+}
+
+/// Route SIGINT and SIGTERM to the flag.  Idempotent; keeps the
+/// process's default disposition for every other signal.
+#[cfg(unix)]
+pub fn install() {
+    extern "C" fn on_signal(_signum: i32) {
+        // Only async-signal-safe work here: one atomic store.
+        STOP.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_raises_and_resets() {
+        install();
+        reset();
+        assert!(!shutdown_requested());
+        flag().store(true, Ordering::SeqCst);
+        assert!(shutdown_requested());
+        reset();
+        assert!(!shutdown_requested());
+    }
+}

@@ -17,7 +17,8 @@ use super::network::NetworkKind;
 use super::plan::ExecPlan;
 use crate::graph::TaskGraph;
 use crate::partition::Partitioning;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// One prepared (workload, strategy) pair: the graph, plan, and its
@@ -157,13 +158,73 @@ fn eval_cell(
     })
 }
 
+/// Outcome of a stop-flag-aware sweep ([`run_with_stop`]).
+#[derive(Debug)]
+pub enum SweepRun {
+    /// Every cell was evaluated.
+    Complete(Vec<SweepCell>),
+    /// The stop flag was raised mid-sweep: `cells` holds the cells that
+    /// finished (grid order, with gaps) so partial results can still be
+    /// flushed on SIGINT/SIGTERM.
+    Interrupted { cells: Vec<SweepCell>, completed: usize, total: usize },
+}
+
+impl SweepRun {
+    /// The evaluated cells, complete or not.
+    pub fn cells(self) -> Vec<SweepCell> {
+        match self {
+            SweepRun::Complete(cells) => cells,
+            SweepRun::Interrupted { cells, .. } => cells,
+        }
+    }
+}
+
+/// Best-effort human-readable message out of a caught panic payload.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Label a cell for error messages without touching the engine (cell
+/// construction itself may be what panicked).
+fn cell_tag(grid: &SweepGrid, i: usize) -> String {
+    let (nt, na, nn) = (grid.threads.len(), grid.alphas.len(), grid.networks.len());
+    let input = &grid.inputs[i / (nt * na * nn)];
+    format!(
+        "{}/{}/{}/α={}/t={}",
+        input.workload,
+        input.strategy,
+        grid.networks[(i / (nt * na)) % nn].label(),
+        grid.alphas[(i / nt) % na],
+        grid.threads[i % nt],
+    )
+}
+
 /// Run every cell of the grid, fanned across worker threads.  Cells come
 /// back in grid order (inputs outermost, threads innermost) independent
-/// of scheduling; any deadlocked cell aborts the sweep with its tag.
+/// of scheduling; any deadlocked or panicking cell fails the sweep with
+/// its tag (a panic is caught per cell — it cannot strand the other
+/// workers on the shared counter or take down a long-running daemon).
 pub fn run(grid: &SweepGrid) -> Result<Vec<SweepCell>, String> {
+    static NEVER: AtomicBool = AtomicBool::new(false);
+    match run_with_stop(grid, &NEVER)? {
+        SweepRun::Complete(cells) => Ok(cells),
+        SweepRun::Interrupted { .. } => unreachable!("stop flag is never set"),
+    }
+}
+
+/// [`run`], but checking `stop` between cells: raising the flag (e.g.
+/// from a SIGINT handler) drains the workers and returns the cells that
+/// already finished instead of discarding them.
+pub fn run_with_stop(grid: &SweepGrid, stop: &AtomicBool) -> Result<SweepRun, String> {
     let total = grid.num_cells();
     if total == 0 {
-        return Ok(Vec::new());
+        return Ok(SweepRun::Complete(Vec::new()));
     }
     let jobs = if grid.jobs == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -186,13 +247,32 @@ pub fn run(grid: &SweepGrid) -> Result<Vec<SweepCell>, String> {
                     // loop runs allocation-free.
                     let mut scratch = EngineScratch::new();
                     loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= total {
                             break;
                         }
-                        match eval_cell(grid, i, &mut scratch) {
-                            Ok(c) => local.push((i, c)),
-                            Err(e) => errs.push(e),
+                        // A panicking cell (bad machine parameters, a
+                        // buggy cost model) must not unwind through the
+                        // worker: the other workers would keep pulling
+                        // from the counter while the scope waits forever
+                        // on a thread that already died.  Catch it, fail
+                        // the cell, keep draining.
+                        match catch_unwind(AssertUnwindSafe(|| eval_cell(grid, i, &mut scratch))) {
+                            Ok(Ok(c)) => local.push((i, c)),
+                            Ok(Err(e)) => errs.push(e),
+                            Err(payload) => {
+                                errs.push(format!(
+                                    "{}: cell panicked: {}",
+                                    cell_tag(grid, i),
+                                    panic_message(payload.as_ref())
+                                ));
+                                // The unwound cell may have left the
+                                // scratch mid-update; start clean.
+                                scratch = EngineScratch::new();
+                            }
                         }
                     }
                     (local, errs)
@@ -200,16 +280,31 @@ pub fn run(grid: &SweepGrid) -> Result<Vec<SweepCell>, String> {
             })
             .collect();
         for h in handles {
-            let (local, errs) = h.join().expect("sweep worker panicked");
-            cells.extend(local);
-            errors.extend(errs);
+            match h.join() {
+                Ok((local, errs)) => {
+                    cells.extend(local);
+                    errors.extend(errs);
+                }
+                // Unreachable now that cells catch their own unwinds,
+                // but a dead worker must degrade to an error, not abort
+                // the whole process from inside a daemon.
+                Err(payload) => {
+                    errors.push(format!("sweep worker died: {}", panic_message(payload.as_ref())))
+                }
+            }
         }
     });
     if !errors.is_empty() {
         return Err(errors.join("; "));
     }
     cells.sort_by_key(|&(i, _)| i);
-    Ok(cells.into_iter().map(|(_, c)| c).collect())
+    let completed = cells.len();
+    let cells: Vec<SweepCell> = cells.into_iter().map(|(_, c)| c).collect();
+    if completed < total {
+        Ok(SweepRun::Interrupted { cells, completed, total })
+    } else {
+        Ok(SweepRun::Complete(cells))
+    }
 }
 
 /// Render cells as a JSON document: `{"sweep": tag, "cells": [...]}`.
@@ -400,6 +495,51 @@ mod tests {
         // front: cloning the input shares it.
         let clone = g.inputs[0].clone();
         assert!(Arc::ptr_eq(&clone.compiled, &g.inputs[0].compiled));
+    }
+
+    #[test]
+    fn panicking_cell_fails_the_sweep_instead_of_hanging() {
+        // threads=0 trips Machine::new's assert inside the worker
+        // thread — exactly the shape of panic that used to strand the
+        // pool on the work-stealing counter (the join unwound, the
+        // remaining cells were never collected, and callers saw a
+        // process abort instead of an error).
+        let g = SweepGrid {
+            inputs: inputs(),
+            networks: vec![NetworkKind::AlphaBeta],
+            alphas: vec![8.0],
+            threads: vec![0, 2],
+            beta: 0.1,
+            gamma: 1.0,
+            jobs: 2,
+        };
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence expected unwind reports
+        let err = run(&g).unwrap_err();
+        std::panic::set_hook(hook);
+        assert!(err.contains("panicked"), "panic must surface as an error: {err}");
+        assert!(err.contains("heat1d"), "error must name the failing cell: {err}");
+        assert!(err.contains("t=0"), "error must carry the cell axes: {err}");
+    }
+
+    #[test]
+    fn stop_flag_returns_partial_results() {
+        let g = grid(1);
+        let stop = AtomicBool::new(true); // raised before the sweep starts
+        match run_with_stop(&g, &stop).unwrap() {
+            SweepRun::Interrupted { cells, completed, total } => {
+                assert_eq!(total, g.num_cells());
+                assert!(completed < total);
+                assert_eq!(cells.len(), completed);
+            }
+            SweepRun::Complete(_) => panic!("a pre-raised stop flag must interrupt the sweep"),
+        }
+        // Unset flag: identical to run().
+        let stop = AtomicBool::new(false);
+        match run_with_stop(&g, &stop).unwrap() {
+            SweepRun::Complete(cells) => assert_eq!(cells.len(), g.num_cells()),
+            SweepRun::Interrupted { .. } => panic!("nothing raised the flag"),
+        }
     }
 
     #[test]

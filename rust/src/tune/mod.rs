@@ -62,7 +62,7 @@ pub mod report;
 pub mod search;
 pub mod space;
 
-pub use cache::{cache_key, CacheEntry, TuningCache};
+pub use cache::{cache_key, signature_of, CacheEntry, ShardLock, TuningCache};
 pub use report::{rows_to_json, TuneReport, TuneRow};
 pub use search::{
     search_from_tag, CoordinateDescent, Evaluator, ExhaustiveGrid, GoldenSection, SearchBudget,
@@ -173,16 +173,29 @@ pub struct TuneOutcome {
     pub report: TuneReport,
 }
 
-/// Tune `base`: search the configuration space, scoring every candidate
-/// with the event-driven engine under `base`'s machine, network, and
-/// cost model, consulting (and feeding) the tuner's cache.
-///
-/// This is the engine room of [`Pipeline::autotune`]; call that instead
-/// unless you only want the verdict without building the plan.
-pub fn tune_pipeline<W: Workload + Clone>(
+/// The identity of one tuning problem, exactly as [`tune_pipeline`]
+/// computes it.  The serve layer uses this to dedupe in-flight requests
+/// and route cache shards *before* any search runs — key agreement
+/// between the two layers is what makes that dedupe sound.
+#[derive(Debug, Clone)]
+pub struct TuneKey {
+    /// Full cache key: signature | procs | machine | net | modifiers.
+    pub key: String,
+    /// Workload signature — the cache's sharding dimension.
+    pub signature: String,
+    /// Graph depth (levels − 1, min 1), the default space's block
+    /// ceiling; returned so callers don't rebuild the graph for it.
+    pub depth: u32,
+}
+
+/// Compute the cache key [`tune_pipeline`] will use for `base` under an
+/// optional explicit `space` and [`SearchBudget`] (pass the ones the
+/// tuner carries).  Builds the graph once for the signature.
+pub fn pipeline_tune_key<W: Workload + Clone>(
     base: &Pipeline<W>,
-    tuner: &mut Tuner,
-) -> Result<TuneOutcome, TuneError> {
+    space: Option<&TuningSpace>,
+    budget: Option<SearchBudget>,
+) -> Result<TuneKey, TuneError> {
     let machine = base
         .machine_config()
         .ok_or_else(|| TuneError::Config("autotune requires Pipeline::machine(..)".into()))?;
@@ -217,7 +230,7 @@ pub fn tune_pipeline<W: Workload + Clone>(
     if let Some(cost) = base.cost_config() {
         key = format!("{key}|costs=fnv{:016x}", cache::tag_hash(&format!("{cost:?}")));
     }
-    if let Some(space) = &tuner.space {
+    if let Some(space) = space {
         key = format!("{key}|space={}", space.fingerprint());
     }
     // The *resolved* layout always joins the key: it shapes both the
@@ -227,10 +240,42 @@ pub fn tune_pipeline<W: Workload + Clone>(
     // A budget restricts what the search may look at, exactly like an
     // explicit space: a truncated verdict must never be served to an
     // unbudgeted (or differently budgeted) tuner.
-    if let Some(SearchBudget { max_engine_runs }) = tuner.search.budget() {
+    if let Some(SearchBudget { max_engine_runs }) = budget {
         key = format!("{key}|budget={max_engine_runs}");
     }
+    Ok(TuneKey { key, signature, depth })
+}
+
+/// Tune `base`: search the configuration space, scoring every candidate
+/// with the event-driven engine under `base`'s machine, network, and
+/// cost model, consulting (and feeding) the tuner's cache.
+///
+/// This is the engine room of [`Pipeline::autotune`]; call that instead
+/// unless you only want the verdict without building the plan.
+pub fn tune_pipeline<W: Workload + Clone>(
+    base: &Pipeline<W>,
+    tuner: &mut Tuner,
+) -> Result<TuneOutcome, TuneError> {
+    let machine = base
+        .machine_config()
+        .ok_or_else(|| TuneError::Config("autotune requires Pipeline::machine(..)".into()))?;
+    let network = base.network_config();
+    let workload = base.workload().name();
+    let TuneKey { key, depth, .. } =
+        pipeline_tune_key(base, tuner.space.as_ref(), tuner.search.budget())?;
+    let procs = base.resolved_procs();
     let model_b_continuous = (machine.alpha * machine.threads as f64 / machine.gamma).sqrt();
+
+    // For file- or shard-backed caches, claim the shard's writer lock
+    // *before* the lookup and re-read the shard under it: if another
+    // process (or thread) is tuning this key right now, we block until
+    // its verdict is published and then hit — one search plus one hit,
+    // never two searches.  The lock is held across search and save and
+    // released on every return path (RAII).
+    let shard_lock = tuner.cache.lock_shard(&key);
+    if shard_lock.is_some() {
+        tuner.cache.reload(&key);
+    }
 
     // An entry whose tags this version cannot decode (hand-edited file,
     // store written by a newer version) counts as a miss and degrades
@@ -267,6 +312,12 @@ pub fn tune_pipeline<W: Workload + Clone>(
     // candidates".  Failed builds are cached too (infeasible layouts stay
     // infeasible).
     let mut graphs: HashMap<(u32, Option<Partitioning>), Option<Arc<TaskGraph>>> = HashMap::new();
+    // Candidate construction runs user code (workload graph builders,
+    // cost models) on this thread; a panic there must fail the
+    // candidate, not unwind through a serving daemon.  Messages are
+    // collected so an all-panicked search can explain itself.
+    let panics: std::rc::Rc<std::cell::RefCell<Vec<String>>> = Default::default();
+    let panics_in = std::rc::Rc::clone(&panics);
     let mut ev = Evaluator::new(|cands: &[Candidate]| {
         // Transformation failures mark a candidate infeasible; every
         // feasible plan joins one sweep grid so the whole batch fans
@@ -284,13 +335,31 @@ pub fn tune_pipeline<W: Workload + Clone>(
             }
             let graph = graphs
                 .entry((c.procs, c.layout))
-                .or_insert_with(|| candidate_base.build_graph_shared().ok())
+                .or_insert_with(|| {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        candidate_base.build_graph_shared().ok()
+                    }))
+                    .unwrap_or_else(|payload| {
+                        panics_in.borrow_mut().push(format!(
+                            "candidate {}: graph build panicked: {}",
+                            c.label(),
+                            sweep::panic_message(payload.as_ref())
+                        ));
+                        None
+                    })
+                })
                 .clone();
             let Some(graph) = graph else { continue };
-            if let Ok(input) =
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 candidate_sweep_input_on(&candidate_base, graph, c.strategy, c.block, Some(c.halo))
-            {
-                feasible.push((i, input));
+            })) {
+                Ok(Ok(input)) => feasible.push((i, input)),
+                Ok(Err(_)) => {} // infeasible, as before
+                Err(payload) => panics_in.borrow_mut().push(format!(
+                    "candidate {}: plan construction panicked: {}",
+                    c.label(),
+                    sweep::panic_message(payload.as_ref())
+                )),
             }
         }
         if feasible.is_empty() {
@@ -312,7 +381,17 @@ pub fn tune_pipeline<W: Workload + Clone>(
         Ok(results)
     });
 
-    let outcome = tuner.search.search(&space, &mut ev)?;
+    let outcome = tuner.search.search(&space, &mut ev).map_err(|e| {
+        let caught = panics.borrow();
+        match e {
+            // A space wiped out by panicking user code should say so,
+            // not just "nothing was feasible".
+            TuneError::NoFeasibleCandidate(m) if !caught.is_empty() => {
+                TuneError::NoFeasibleCandidate(format!("{m}; {}", caught.join("; ")))
+            }
+            e => e,
+        }
+    })?;
     // The naive baseline is reporting context, not part of the search:
     // score it *after* the verdict (so a space that excludes naive can
     // never have its plateau contaminated by it) and outside the budget
@@ -350,8 +429,10 @@ pub fn tune_pipeline<W: Workload + Clone>(
         ),
     );
     // Persistence is best-effort: an unwritable cache file must never
-    // fail the tuning itself.
-    let _ = tuner.cache.save();
+    // fail the tuning itself.  The shard lock taken before the lookup is
+    // still held here, so the publish is what concurrent tuners of the
+    // same key block on — and what they hit right after.
+    let _ = tuner.cache.save_with(shard_lock.as_ref());
     Ok(TuneOutcome { chosen: outcome.chosen, report })
 }
 
@@ -569,6 +650,39 @@ mod tests {
         let again = tune_pipeline(&base(128, 8, mach), &mut tuner).unwrap();
         assert!(again.report.cache_hit);
         assert_eq!(crate::sim::compile_count() - before, 0);
+    }
+
+    #[test]
+    fn panicking_cost_model_surfaces_an_error_instead_of_unwinding() {
+        // Costs are baked at candidate-construction time
+        // (CompiledPlan::compile inside SweepInput::new), so a buggy
+        // cost model detonates on the tuning thread.  The evaluator must
+        // catch it, mark the candidate infeasible, and — with the whole
+        // space wiped out — return an error that names the panic, so a
+        // long-running daemon survives a poisonous request.
+        #[derive(Debug)]
+        struct BombCost;
+        impl crate::sim::TaskCostModel for BombCost {
+            fn task_cost(&self, _g: &crate::graph::TaskGraph, _t: crate::graph::TaskId) -> f64 {
+                panic!("synthetic cost-model failure")
+            }
+        }
+
+        let mach = Machine::high_latency(2, 4);
+        let mut tuner = Tuner::exhaustive();
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence expected unwind reports
+        let err =
+            tune_pipeline(&base(64, 4, mach).costs(std::sync::Arc::new(BombCost)), &mut tuner)
+                .unwrap_err();
+        std::panic::set_hook(hook);
+        assert!(matches!(err, TuneError::NoFeasibleCandidate(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("panicked"), "error must say candidates panicked: {msg}");
+        assert!(msg.contains("synthetic cost-model failure"), "{msg}");
+        // The tuner (and its cache) remain usable afterwards.
+        let ok = tune_pipeline(&base(64, 4, mach), &mut tuner).unwrap();
+        assert!(ok.report.engine_runs > 0);
     }
 
     #[test]

@@ -46,6 +46,25 @@ pub struct SearchBudget {
     pub max_engine_runs: usize,
 }
 
+impl SearchBudget {
+    /// Combine a per-request budget with a server-side ceiling: the
+    /// tighter cap wins, and `None`/`0` on either side means "no cap
+    /// from me".  This is how the serve layer enforces that no single
+    /// request can exceed the daemon's configured search budget while
+    /// still letting requests ask for less.
+    pub fn capped(request: Option<usize>, ceiling: Option<usize>) -> Option<SearchBudget> {
+        let r = request.filter(|&n| n > 0);
+        let c = ceiling.filter(|&n| n > 0);
+        let max_engine_runs = match (r, c) {
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (None, None) => return None,
+        };
+        Some(SearchBudget { max_engine_runs })
+    }
+}
+
 /// Memoizing front end every search strategy scores through.
 pub struct Evaluator<'a> {
     run: EvalBatchFn<'a>,
@@ -734,5 +753,19 @@ mod tests {
             assert_eq!(search_from_tag(tag).unwrap().label(), tag);
         }
         assert!(search_from_tag("simulated-annealing").is_err());
+    }
+
+    #[test]
+    fn capped_budget_takes_the_tighter_of_request_and_ceiling() {
+        let b = |n| Some(SearchBudget { max_engine_runs: n });
+        assert_eq!(SearchBudget::capped(Some(3), Some(8)), b(3));
+        assert_eq!(SearchBudget::capped(Some(8), Some(3)), b(3));
+        assert_eq!(SearchBudget::capped(Some(5), None), b(5));
+        assert_eq!(SearchBudget::capped(None, Some(7)), b(7));
+        assert_eq!(SearchBudget::capped(None, None), None);
+        // 0 means "no cap from me", not "zero runs" — a zero budget
+        // could never produce a verdict.
+        assert_eq!(SearchBudget::capped(Some(0), Some(4)), b(4));
+        assert_eq!(SearchBudget::capped(Some(0), None), None);
     }
 }

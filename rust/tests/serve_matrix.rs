@@ -1,0 +1,343 @@
+//! Integration matrix for the `serve` daemon: the serving claims must
+//! hold end to end — warm cache hits cost zero engine work, concurrent
+//! duplicates collapse onto exactly one search (in-process, across
+//! threads, and across processes), compatible simulate requests share
+//! one coalesced grid, overload is shed explicitly, corrupt cache
+//! shards degrade to a miss for that shard alone, and the scripted
+//! smoke mix proves the daemon gets faster as the cache warms.
+
+use std::io::Cursor;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use imp_latency::config::Config;
+use imp_latency::pipeline::{Heat1d, Pipeline};
+use imp_latency::serve::protocol::parse_flat_object;
+use imp_latency::serve::{
+    run_smoke, CacheOutcome, Payload, Request, RequestError, Response, ServeConfig, Server,
+};
+use imp_latency::sim::{compile_count, Machine, NetworkKind};
+use imp_latency::tune::{search_from_tag, tune_pipeline, TuneReport, Tuner, TuningCache};
+
+/// Per-test scratch directory (unique per test name + process).
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imp_serve_matrix_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn server_with(cache_dir: Option<PathBuf>, workers: usize, max_in_flight: usize) -> Server {
+    Server::new(ServeConfig {
+        workers,
+        max_in_flight,
+        budget: None,
+        cache_dir,
+        slots: 4,
+        search: "exhaustive".to_string(),
+    })
+}
+
+/// A small tune request; `n`/`h`/`w` cover heat1d and heat2d alike.
+fn tune_line(id: &str, workload: &str, alpha: f64) -> String {
+    format!(
+        "{{\"id\": \"{id}\", \"op\": \"tune\", \"workload\": \"{workload}\", \"n\": 96, \
+         \"m\": 6, \"h\": 8, \"w\": 8, \"p\": 2, \"threads\": 4, \"alpha\": {alpha}, \
+         \"beta\": 0.1, \"gamma\": 1.0}}"
+    )
+}
+
+fn sim_line(id: &str, strategy: &str, alpha: f64) -> String {
+    format!(
+        "{{\"id\": \"{id}\", \"op\": \"simulate\", \"workload\": \"heat1d\", \"n\": 96, \
+         \"m\": 6, \"p\": 2, \"threads\": 4, \"alpha\": {alpha}, \"beta\": 0.1, \
+         \"gamma\": 1.0, \"strategy\": \"{strategy}\"}}"
+    )
+}
+
+fn wave(server: &Server, lines: &[String]) -> Vec<Response> {
+    server.run_wave(lines.iter().map(|l| Request::parse(l)).collect())
+}
+
+fn tune_outcome(r: &Response) -> (CacheOutcome, usize) {
+    match &r.result {
+        Ok(Payload::Tune { cache, engine_runs, .. }) => (*cache, *engine_runs),
+        other => panic!("expected a tune payload for {:?}, got {other:?}", r.id),
+    }
+}
+
+#[test]
+fn cold_tune_searches_then_warm_hits_are_engine_free() {
+    let dir = tmp("cold_warm");
+    let server = server_with(Some(dir.clone()), 1, 16);
+
+    let cold = wave(&server, &[tune_line("cold", "heat1d", 500.0)]);
+    let (outcome, runs) = tune_outcome(&cold[0]);
+    assert_eq!(outcome, CacheOutcome::Miss);
+    assert!(runs > 0, "a cold tune must run the engine");
+
+    // Single-request waves run inline on this thread, so the
+    // thread-local compile counter proves the warm path never touches
+    // the engine — no simulations, not even a plan lowering.
+    let compiles_before = compile_count();
+    let warm = wave(&server, &[tune_line("warm", "heat1d", 500.0)]);
+    let (outcome, runs) = tune_outcome(&warm[0]);
+    assert_eq!(outcome, CacheOutcome::Hit);
+    assert_eq!(runs, 0);
+    assert_eq!(compile_count(), compiles_before, "warm hit compiled a plan");
+    assert_eq!(server.stats().searches.load(Ordering::Relaxed), 1);
+    assert_eq!(server.stats().warm_hits.load(Ordering::Relaxed), 1);
+
+    // The verdict survives the process: a fresh server on the same
+    // shard directory answers from disk.
+    let reborn = server_with(Some(dir.clone()), 1, 16);
+    let warm = wave(&reborn, &[tune_line("reborn", "heat1d", 500.0)]);
+    let (outcome, runs) = tune_outcome(&warm[0]);
+    assert_eq!(outcome, CacheOutcome::Hit);
+    assert_eq!(runs, 0);
+    assert_eq!(reborn.stats().searches.load(Ordering::Relaxed), 0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_duplicates_cost_exactly_one_search() {
+    let server = server_with(None, 4, 16);
+    let lines: Vec<String> =
+        (0..6).map(|i| tune_line(&format!("dup{i}"), "heat1d", 333.0)).collect();
+    let responses = wave(&server, &lines);
+    assert_eq!(responses.len(), 6);
+
+    let mut searched = 0;
+    let mut free = 0;
+    for r in &responses {
+        let (outcome, runs) = tune_outcome(r);
+        match outcome {
+            CacheOutcome::Miss => {
+                searched += 1;
+                assert!(runs > 0, "{:?}: the miss is the one that searched", r.id);
+            }
+            CacheOutcome::Hit | CacheOutcome::Deduped => {
+                free += 1;
+                assert_eq!(runs, 0, "{:?}: followers must not re-run the engine", r.id);
+            }
+        }
+    }
+    assert_eq!(searched, 1, "exactly one request leads the search");
+    assert_eq!(free, 5);
+    assert_eq!(
+        server.stats().searches.load(Ordering::Relaxed),
+        1,
+        "N identical concurrent requests must collapse onto one engine search"
+    );
+}
+
+/// The tuning problem both sides of the thread/process tests share.
+fn probe_pipeline() -> Pipeline<Heat1d> {
+    Pipeline::new(Heat1d::new(96, 6))
+        .procs(2)
+        .machine(Machine::new(2, 4, 200.0, 0.1, 1.0))
+        .network(NetworkKind::AlphaBeta)
+}
+
+fn probe_tune(dir: &Path) -> TuneReport {
+    let mut tuner = Tuner::new(
+        search_from_tag("exhaustive").expect("exhaustive search exists"),
+        TuningCache::sharded_unloaded(dir),
+    );
+    tune_pipeline(&probe_pipeline(), &mut tuner).expect("heat1d tunes").report
+}
+
+#[test]
+fn two_threads_on_one_shard_dir_make_one_search_and_one_hit() {
+    let dir = tmp("two_threads");
+    let reports: Vec<TuneReport> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2).map(|_| s.spawn(|| probe_tune(&dir))).collect();
+        handles.into_iter().map(|h| h.join().expect("no panic")).collect()
+    });
+    // The shard file lock serialises the two: the loser re-reads the
+    // shard under the lock and adopts the winner's verdict.
+    assert_eq!(reports.iter().filter(|r| !r.cache_hit).count(), 1, "one search");
+    assert_eq!(reports.iter().filter(|r| r.cache_hit).count(), 1, "one hit");
+    assert_eq!(reports.iter().filter(|r| r.engine_runs > 0).count(), 1);
+    assert_eq!(reports[0].chosen.label(), reports[1].chosen.label());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Child half of the cross-process test: only active when the parent
+/// sets `SERVE_MATRIX_CHILD_DIR`; tunes the shared problem against the
+/// parent's shard directory and prints a machine-readable verdict.
+#[test]
+fn child_process_probe() {
+    let dir = match std::env::var("SERVE_MATRIX_CHILD_DIR") {
+        Ok(dir) => PathBuf::from(dir),
+        Err(_) => return,
+    };
+    let report = probe_tune(&dir);
+    println!("CHILD cache_hit={} engine_runs={}", report.cache_hit, report.engine_runs);
+}
+
+#[test]
+fn two_processes_on_one_shard_dir_make_one_search_and_one_hit() {
+    let dir = tmp("two_procs");
+    let parent = probe_tune(&dir);
+    assert!(!parent.cache_hit && parent.engine_runs > 0, "parent runs the search");
+
+    let exe = std::env::current_exe().expect("test binary path");
+    let output = std::process::Command::new(exe)
+        .args(["child_process_probe", "--exact", "--nocapture"])
+        .env("SERVE_MATRIX_CHILD_DIR", &dir)
+        .output()
+        .expect("child test process runs");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    assert!(output.status.success(), "child failed:\n{stdout}");
+    assert!(
+        stdout.contains("CHILD cache_hit=true engine_runs=0"),
+        "child must be served from the parent's shard files:\n{stdout}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_shard_is_a_miss_for_that_shard_alone() {
+    let dir = tmp("corrupt");
+    {
+        let server = server_with(Some(dir.clone()), 1, 16);
+        let responses = wave(
+            &server,
+            &[tune_line("a", "heat1d", 250.0), tune_line("b", "heat2d", 250.0)],
+        );
+        for r in &responses {
+            assert_eq!(tune_outcome(r).0, CacheOutcome::Miss);
+        }
+        server.flush().expect("flush shard files");
+    }
+
+    // Distinct workload signatures persist as distinct shard files.
+    let mut shards: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .expect("shard dir exists")
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|e| e == "json").unwrap_or(false))
+        .collect();
+    shards.sort();
+    assert!(shards.len() >= 2, "expected one shard per workload signature, got {shards:?}");
+    std::fs::write(&shards[0], "{ \"version\": garbage, truncated").expect("corrupt one shard");
+
+    // One workload lost its shard (miss → fresh search); the sibling
+    // shard still hits.  Neither request errors.
+    let server = server_with(Some(dir.clone()), 1, 16);
+    let responses = wave(
+        &server,
+        &[tune_line("a2", "heat1d", 250.0), tune_line("b2", "heat2d", 250.0)],
+    );
+    let outcomes = [tune_outcome(&responses[0]).0, tune_outcome(&responses[1]).0];
+    assert!(
+        outcomes.contains(&CacheOutcome::Hit) && outcomes.contains(&CacheOutcome::Miss),
+        "expected one hit and one miss, got {outcomes:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compatible_simulations_coalesce_into_one_grid() {
+    let server = server_with(None, 2, 16);
+    let responses = wave(
+        &server,
+        &[
+            sim_line("s1", "naive", 500.0),
+            sim_line("s2", "overlap", 500.0),
+            sim_line("s3", "naive", 9.0), // different machine → its own grid
+        ],
+    );
+    for (id, want_batch) in [("s1", 2), ("s2", 2), ("s3", 1)] {
+        let r = responses.iter().find(|r| r.id == id).expect(id);
+        match &r.result {
+            Ok(Payload::Simulate { batch, makespan, .. }) => {
+                assert_eq!(*batch, want_batch, "{id}");
+                assert!(*makespan > 0.0, "{id}");
+            }
+            other => panic!("{id}: expected simulate payload, got {other:?}"),
+        }
+    }
+    assert_eq!(server.stats().batches.load(Ordering::Relaxed), 2);
+    assert_eq!(server.stats().batch_cells.load(Ordering::Relaxed), 3);
+}
+
+#[test]
+fn overload_is_shed_and_reported_in_cache_stats() {
+    // Limit 0 deterministically admits nothing.
+    let server = server_with(None, 1, 0);
+    let responses = wave(&server, &[tune_line("over", "heat1d", 123.0)]);
+    match &responses[0].result {
+        Err(RequestError::Overloaded(_)) => {}
+        other => panic!("expected overloaded, got {other:?}"),
+    }
+    assert!(responses[0].to_json().contains("\"status\": \"overloaded\""));
+
+    let stats = wave(&server, &[String::from("{\"id\": \"st\", \"op\": \"cache-stats\"}")]);
+    match &stats[0].result {
+        Ok(Payload::CacheStats { shed, in_flight, .. }) => {
+            assert_eq!(*shed, 1);
+            assert_eq!(*in_flight, 0, "the shed permit must not leak");
+        }
+        other => panic!("expected cache-stats payload, got {other:?}"),
+    }
+}
+
+#[test]
+fn serve_reader_answers_blank_line_waves_and_honours_stop() {
+    let server = server_with(None, 2, 16);
+    let stop = AtomicBool::new(false);
+    let script = "{\"id\": \"a\", \"op\": \"cache-stats\"}\n\n\
+                  {\"id\": \"b\", \"op\": \"cache-stats\"}\n";
+    let mut out: Vec<u8> = Vec::new();
+    let n = server.serve_reader(Cursor::new(script), &mut out, &stop).expect("reader runs");
+    assert_eq!(n, 2);
+    let text = String::from_utf8(out).expect("utf8 output");
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2);
+    for line in &lines {
+        // Every response line is parseable by our own wire parser.
+        let fields = parse_flat_object(line).expect("valid response line");
+        assert!(fields.iter().any(|(k, v)| k == "status" && v == "ok"), "{line}");
+    }
+
+    // A raised stop flag ends the session before answering anything.
+    stop.store(true, Ordering::SeqCst);
+    let mut out: Vec<u8> = Vec::new();
+    let n = server
+        .serve_reader(Cursor::new("{\"id\": \"x\", \"op\": \"cache-stats\"}\n"), &mut out, &stop)
+        .expect("reader stops");
+    assert_eq!(n, 0);
+    assert!(out.is_empty());
+}
+
+#[test]
+fn smoke_mix_warms_up_dedupes_and_batches() {
+    let dir = tmp("smoke");
+    let mut cfg = Config::new();
+    cfg.set("workloads", "heat1d");
+    cfg.set("networks", "alphabeta");
+    cfg.set("n", 96);
+    cfg.set("m", 6);
+    cfg.set("p", 2);
+    cfg.set("threads", 4);
+    cfg.set("cache", dir.display().to_string());
+    let stop = AtomicBool::new(false);
+    let outcome = run_smoke(&cfg, &stop).expect("smoke runs");
+    assert!(!outcome.interrupted);
+
+    let cold = outcome.cold.expect("cold phase ran");
+    let warm = outcome.warm.expect("warm phase ran");
+    assert!(cold.engine_runs > 0, "cold wave must pay for its searches");
+    assert_eq!(warm.engine_runs, 0, "warm wave must be engine-free");
+    assert!(warm.rps > cold.rps, "warm {} must beat cold {} req/s", warm.rps, cold.rps);
+    assert!(outcome.dedupe_hits >= 1, "duplicate burst must dedupe");
+    assert_eq!(outcome.dedupe_searches, 1, "duplicate burst must share one search");
+    assert!(outcome.batch_grids >= 1);
+    assert!(outcome.batch_cells >= outcome.batch_grids);
+    for key in ["\"serve\"", "\"cold\"", "\"warm\"", "\"dedupe\"", "\"batch\"", "\"latency_ms\""] {
+        assert!(outcome.json.contains(key), "BENCH document is missing {key}: {}", outcome.json);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
