@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke
+.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke
 
-ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke
+ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke
 
 # The simulator perf tracker: a reduced fig-7/8 sweep across all four
 # network models, emitting per-cell makespan + simulator wall-time so the
@@ -36,6 +36,15 @@ tune-smoke: build
 # observed.
 serve-smoke: build
 	$(CARGO) run --release -- serve --smoke
+
+# The static-analysis tracker: verify every smoke-grid plan without the
+# engine (plans/sec), check the analytic critical-path lower bound
+# against every simulated cell (violations fail the target; the α-β wire
+# must be bit-exact), and audit lower-bound tuner pruning against an
+# un-pruned search (any winner drift fails; < 20% pruned fails),
+# emitting BENCH_analyze.json.
+analyze-smoke: build
+	$(CARGO) run --release -- analyze --smoke
 
 # The data-layout tracker: processor-grid shapes on heat2d and graph
 # partitioners on a banded+random SpMV, each simulated under all four

@@ -10,10 +10,11 @@
 //! cargo run --release --example quickstart
 //! ```
 
+use imp_latency::analysis;
 use imp_latency::partition::{Partitioning, ProcGrid};
 use imp_latency::pipeline::{Heat1d, Heat2d, Pipeline};
 use imp_latency::serve::{Request, ServeConfig, Server};
-use imp_latency::sim::{simulate_compiled, EngineScratch, Machine, NetworkKind};
+use imp_latency::sim::{simulate_compiled, try_simulate, EngineScratch, Machine, NetworkKind};
 use imp_latency::transform::check_schedule;
 use imp_latency::tune::Tuner;
 
@@ -173,4 +174,29 @@ fn main() {
             println!("  {}", resp.to_json());
         }
     }
+
+    // 10. Prove it before running it: `analysis::analyze` verifies the
+    //     plan statically — every k-th Send pairs its k-th Recv, word
+    //     counts match, no compute runs before its inputs exist, no
+    //     cyclic recv wait — so deadlock-freedom is a theorem, not an
+    //     observation.  `critical_path` replays the same phase streams
+    //     at zero cost into an analytic makespan lower bound: exact on
+    //     stateless wires like α-β, a sound floor on stateful ones.
+    //     The tuner prunes with it (`Tuner::exhaustive().with_pruning()`)
+    //     and the `analyze` CLI subcommand gates bound soundness and
+    //     prune rate in CI (`make analyze-smoke` → BENCH_analyze.json).
+    let report = analysis::analyze(&input.graph, &input.plan);
+    println!("\nstatic analysis: {}", report.summary());
+    assert!(report.is_clean(), "pipeline-built plans verify clean");
+    let mut net = NetworkKind::AlphaBeta.build_for(&machine, input.layout.as_ref());
+    let cost = input.cost.as_ref();
+    let cp = analysis::critical_path(&input.graph, &input.plan, &machine, net.as_ref(), cost)
+        .expect("verified plans have a critical path");
+    let sim = try_simulate(&input.graph, &input.plan, &machine, net.as_mut(), cost, false)
+        .expect("verified plans run");
+    println!(
+        "critical path: {} vs simulated {} — the α-β bound is exact ({}), so the \
+         tuner can discard candidates without ever running the engine.",
+        cp.makespan, sim.total_time, cp.exact_wire
+    );
 }

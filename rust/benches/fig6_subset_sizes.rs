@@ -15,7 +15,7 @@ use imp_latency::util::Csv;
 
 fn main() {
     // ---- Figure 6 proper -------------------------------------------------
-    let (text, d) = figures::fig6(64, 6, 4);
+    let (text, d) = figures::fig6(64, 6, 4).expect("figure-6 configuration is valid");
     print!("{text}");
 
     // Closed-form check: for a middle processor with n_p points and depth

@@ -1,0 +1,127 @@
+//! Channel safety: pair every `Send` with its `Recv` statically.
+//!
+//! The engine routes the k-th `Send` on a `(from, to)` channel to the
+//! k-th `Recv` on it — per-channel FIFO sequence numbers, no tags.  A
+//! processor executes its own phases in program order, so the k-th send
+//! a channel *will* carry is fully determined by the plan text; this
+//! census replays that pairing without timing and names every slot that
+//! cannot line up.
+
+use super::report::Diagnostic;
+use crate::sim::{ExecPlan, Phase};
+use std::collections::BTreeMap;
+
+/// Census every channel of `plan`: unmatched receives (fatal — the
+/// receiver blocks forever), orphaned sends and word-count mismatches
+/// (warnings — the engine completes, but slots leak or values misroute).
+///
+/// Diagnostics come back ordered by channel `(from, to)`, then sequence
+/// number, mismatches before unpaired slots.
+pub fn channel_census(plan: &ExecPlan) -> Vec<Diagnostic> {
+    // (from, to) → (send word counts, recv word counts), program order.
+    let mut chans: BTreeMap<(u32, u32), (Vec<usize>, Vec<usize>)> = BTreeMap::new();
+    for (p, pp) in plan.per_proc.iter().enumerate() {
+        for ph in &pp.phases {
+            match ph {
+                Phase::Send { to, tasks } => {
+                    chans.entry((p as u32, to.0)).or_default().0.push(tasks.len());
+                }
+                Phase::Recv { from, tasks } => {
+                    chans.entry((from.0, p as u32)).or_default().1.push(tasks.len());
+                }
+                Phase::Compute(_) => {}
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for (&(from, to), (sends, recvs)) in &chans {
+        for (k, (&sent, &received)) in sends.iter().zip(recvs.iter()).enumerate() {
+            if sent != received {
+                out.push(Diagnostic::WordMismatch { from, to, seq: k as u32, sent, received });
+            }
+        }
+        for k in recvs.len()..sends.len() {
+            out.push(Diagnostic::OrphanSend { from, to, seq: k as u32 });
+        }
+        for k in sends.len()..recvs.len() {
+            out.push(Diagnostic::UnmatchedRecv { from, to, seq: k as u32 });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ProcId;
+    use crate::sim::ProcPlan;
+    use crate::transform::TransformOptions;
+
+    fn two_proc(phases0: Vec<Phase>, phases1: Vec<Phase>) -> ExecPlan {
+        let mut per_proc = vec![ProcPlan::default(); 2];
+        per_proc[0].phases = phases0;
+        per_proc[1].phases = phases1;
+        ExecPlan { per_proc, label: "hand".into() }
+    }
+
+    #[test]
+    fn balanced_channels_are_silent() {
+        let g = crate::stencil::heat1d_graph(32, 4, 4);
+        for plan in [
+            ExecPlan::naive(&g),
+            ExecPlan::overlap(&g),
+            ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap(),
+        ] {
+            assert!(channel_census(&plan).is_empty(), "{}", plan.label);
+        }
+    }
+
+    #[test]
+    fn dropped_recv_orphans_the_send() {
+        let plan = two_proc(vec![Phase::Send { to: ProcId(1), tasks: vec![3, 4] }], vec![]);
+        let diags = channel_census(&plan);
+        assert_eq!(diags, vec![Diagnostic::OrphanSend { from: 0, to: 1, seq: 0 }]);
+    }
+
+    #[test]
+    fn extra_recv_is_the_half_deadlock() {
+        let plan = two_proc(vec![], vec![Phase::Recv { from: ProcId(0), tasks: vec![3] }]);
+        let diags = channel_census(&plan);
+        assert_eq!(diags, vec![Diagnostic::UnmatchedRecv { from: 0, to: 1, seq: 0 }]);
+    }
+
+    #[test]
+    fn inflated_word_count_mismatches() {
+        let plan = two_proc(
+            vec![Phase::Send { to: ProcId(1), tasks: vec![3, 4, 5] }],
+            vec![Phase::Recv { from: ProcId(0), tasks: vec![3, 4] }],
+        );
+        let diags = channel_census(&plan);
+        assert_eq!(
+            diags,
+            vec![Diagnostic::WordMismatch { from: 0, to: 1, seq: 0, sent: 3, received: 2 }]
+        );
+    }
+
+    #[test]
+    fn pairing_is_per_channel_fifo() {
+        // Two sends 0→1 pair in program order with two recvs; a shifted
+        // pairing (first recv dropped) surfaces as mismatch + orphan.
+        let plan = two_proc(
+            vec![
+                Phase::Send { to: ProcId(1), tasks: vec![1] },
+                Phase::Send { to: ProcId(1), tasks: vec![2, 3] },
+            ],
+            vec![Phase::Recv { from: ProcId(0), tasks: vec![2, 3] }],
+        );
+        let diags = channel_census(&plan);
+        assert_eq!(
+            diags,
+            vec![
+                Diagnostic::WordMismatch { from: 0, to: 1, seq: 0, sent: 1, received: 2 },
+                Diagnostic::OrphanSend { from: 0, to: 1, seq: 1 },
+            ]
+        );
+    }
+}

@@ -1,0 +1,284 @@
+//! Analytic critical path: a makespan lower bound without the engine.
+//!
+//! The engine's timing algebra is monotone — every clock is a `max`/`+`
+//! composition of non-negative durations — so replaying the plan with
+//! each message arrival replaced by its state-independent lower bound
+//! ([`crate::sim::NetworkModel::message_lower_bound`]) yields a lower
+//! bound on every processor's finish time, hence on the makespan.  On
+//! stateless wires (AlphaBeta, Hierarchical) the per-message bound *is*
+//! the exact delivery cost, so the "bound" reproduces the engine
+//! bit-for-bit ([`CritPath::exact_wire`]); on stateful wires (LogGP
+//! injection gaps, contended NICs) only the queueing terms are dropped.
+//!
+//! Compute phases are timed with the engine's own list scheduler
+//! (`run_compute`), so the compute side of the bound is exact
+//! everywhere.  The pass doubles as a deadlock check: a plan that cannot
+//! complete has no critical path.
+
+use super::report::{AnalysisError, Diagnostic};
+use crate::graph::TaskGraph;
+use crate::sim::sweep::SweepInput;
+use crate::sim::{run_compute, ExecPlan, Machine, NetworkKind, NetworkModel, Phase, TaskCostModel};
+use std::collections::HashMap;
+
+/// The timed result of the critical-path pass: lower bounds with the
+/// same shape as the engine's [`crate::sim::SimResult`] (and equal to it
+/// when [`CritPath::exact_wire`] holds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CritPath {
+    /// Lower bound on the plan's makespan (max proc finish), γ units.
+    pub makespan: f64,
+    /// Per-processor finish-time lower bounds.
+    pub proc_finish: Vec<f64>,
+    /// Per-processor busy thread-time (exact, not a bound: work is
+    /// timing-independent).
+    pub proc_busy: Vec<f64>,
+    /// Per-processor receive-wait lower bounds.
+    pub proc_wait: Vec<f64>,
+    /// Messages the plan posts (zero-word sends excluded, as in the
+    /// engine).
+    pub messages: usize,
+    /// Words the plan moves.
+    pub words: usize,
+    /// True iff every posted message resolved stateless per-channel
+    /// constants ([`crate::sim::NetworkModel::channel_cost`]): the
+    /// lower bound then equals the simulated makespan exactly.
+    pub exact_wire: bool,
+}
+
+/// Compute the critical path of `plan` on machine `m` under `network`'s
+/// per-channel lower bounds and `cost`'s task weights.
+///
+/// # Errors
+///
+/// A plan that deadlocks has no critical path; the error carries the
+/// static stuck frontier.
+///
+/// # Panics
+///
+/// Panics if `plan` and `m` disagree on the processor count — the same
+/// contract as [`crate::sim::try_simulate`].
+pub fn critical_path(
+    g: &TaskGraph,
+    plan: &ExecPlan,
+    m: &Machine,
+    network: &dyn NetworkModel,
+    cost: &dyn TaskCostModel,
+) -> Result<CritPath, AnalysisError> {
+    assert_eq!(plan.per_proc.len(), m.nprocs as usize, "plan/machine proc count mismatch");
+    let nprocs = plan.per_proc.len();
+    let mut clock = vec![0.0f64; nprocs];
+    let mut busy = vec![0.0f64; nprocs];
+    let mut wait = vec![0.0f64; nprocs];
+    let mut cursor = vec![0usize; nprocs];
+    let mut messages = 0usize;
+    let mut words = 0usize;
+    let mut exact_wire = true;
+    // Posted, unconsumed messages: (from, to, seq) → arrival lower bound.
+    let mut posted: HashMap<(u32, u32, u32), f64> = HashMap::new();
+    let mut send_seq: HashMap<(u32, u32), u32> = HashMap::new();
+    let mut recv_seq: HashMap<(u32, u32), u32> = HashMap::new();
+
+    loop {
+        let mut progressed = false;
+        for p in 0..nprocs {
+            let phases = &plan.per_proc[p].phases;
+            while cursor[p] < phases.len() {
+                match &phases[cursor[p]] {
+                    Phase::Compute(tasks) => {
+                        let (end, b) = run_compute(g, tasks, m, clock[p], p as u32, cost, None);
+                        busy[p] += b;
+                        clock[p] = end;
+                    }
+                    Phase::Send { to, tasks } => {
+                        let seq = send_seq.entry((p as u32, to.0)).or_insert(0);
+                        let key = (p as u32, to.0, *seq);
+                        *seq += 1;
+                        // Zero-word sends arrive instantly at the
+                        // sender's clock and are not counted — mirror of
+                        // the engine's accounting.
+                        let arrival = if tasks.is_empty() {
+                            clock[p]
+                        } else {
+                            messages += 1;
+                            words += tasks.len();
+                            exact_wire &= network.channel_cost(p as u32, to.0).is_some();
+                            clock[p] + network.message_lower_bound(p as u32, to.0, tasks.len())
+                        };
+                        posted.insert(key, arrival);
+                    }
+                    Phase::Recv { from, .. } => {
+                        let seq = *recv_seq.entry((from.0, p as u32)).or_insert(0);
+                        let key = (from.0, p as u32, seq);
+                        let Some(arrival) = posted.remove(&key) else {
+                            break; // blocked: re-examined next round
+                        };
+                        recv_seq.insert((from.0, p as u32), seq + 1);
+                        if arrival > clock[p] {
+                            wait[p] += arrival - clock[p];
+                            clock[p] = arrival;
+                        }
+                    }
+                }
+                cursor[p] += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+
+    let stuck: Vec<(u32, usize)> = (0..nprocs)
+        .filter(|&p| cursor[p] < plan.per_proc[p].phases.len())
+        .map(|p| (p as u32, cursor[p]))
+        .collect();
+    if !stuck.is_empty() {
+        return Err(AnalysisError {
+            plan_label: plan.label.clone(),
+            fatal: vec![Diagnostic::Deadlock { stuck }],
+        });
+    }
+
+    Ok(CritPath {
+        makespan: clock.iter().copied().fold(0.0, f64::max),
+        proc_finish: clock,
+        proc_busy: busy,
+        proc_wait: wait,
+        messages,
+        words,
+        exact_wire,
+    })
+}
+
+/// Makespan lower bound for one prepared sweep input on the *effective*
+/// machine a sweep cell would use — the β of the base machine scaled by
+/// the input's words-per-value, the wire built layout-aware — exactly
+/// mirroring the sweep's cell evaluation.  `None` when the input cannot
+/// be bounded (e.g. its plan deadlocks): callers must then evaluate it
+/// for real rather than prune it.
+///
+/// This is the [`crate::tune`] branch-and-bound hook: a candidate whose
+/// lower bound already exceeds the incumbent can never win.
+pub fn input_lower_bound(input: &SweepInput, base: &Machine, kind: NetworkKind) -> Option<f64> {
+    let procs = input.plan.per_proc.len() as u32;
+    let mach = Machine::new(
+        procs,
+        base.threads,
+        base.alpha,
+        base.beta * input.words_per_value as f64,
+        base.gamma,
+    );
+    let net = kind.build_for(&mach, input.layout.as_ref());
+    critical_path(&input.graph, &input.plan, &mach, net.as_ref(), input.cost.as_ref())
+        .ok()
+        .map(|cp| cp.makespan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, try_simulate, AlphaBeta, UniformCost};
+    use crate::stencil::heat1d_graph;
+    use crate::transform::TransformOptions;
+    use std::sync::Arc;
+
+    fn plans(g: &TaskGraph) -> Vec<ExecPlan> {
+        vec![
+            ExecPlan::naive(g),
+            ExecPlan::overlap(g),
+            ExecPlan::ca(g, 2, TransformOptions::default()).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn exact_on_the_alphabeta_wire() {
+        let g = heat1d_graph(32, 4, 4);
+        let mach = Machine::new(4, 2, 50.0, 0.5, 1.0);
+        for plan in plans(&g) {
+            let r = simulate(&g, &plan, &mach, false);
+            let net = AlphaBeta::from_machine(&mach);
+            let cp = critical_path(&g, &plan, &mach, &net, &UniformCost).unwrap();
+            assert!(cp.exact_wire, "{}", plan.label);
+            assert_eq!(cp.makespan, r.total_time, "{}", plan.label);
+            assert_eq!(cp.proc_finish, r.proc_finish, "{}", plan.label);
+            assert_eq!(cp.proc_busy, r.proc_busy, "{}", plan.label);
+            assert_eq!(cp.proc_wait, r.proc_wait, "{}", plan.label);
+            assert_eq!(cp.messages, r.messages, "{}", plan.label);
+            assert_eq!(cp.words, r.words, "{}", plan.label);
+        }
+    }
+
+    #[test]
+    fn lower_bounds_every_wire() {
+        let g = heat1d_graph(48, 4, 4);
+        let mach = Machine::new(4, 2, 60.0, 0.5, 1.0);
+        for plan in plans(&g) {
+            for kind in NetworkKind::all_default() {
+                let mut net = kind.build(&mach);
+                let r = try_simulate(&g, &plan, &mach, net.as_mut(), &UniformCost, false)
+                    .unwrap();
+                let cp = critical_path(&g, &plan, &mach, net.as_ref(), &UniformCost).unwrap();
+                assert!(
+                    cp.makespan <= r.total_time + 1e-9,
+                    "{}/{}: lb {} > sim {}",
+                    plan.label,
+                    kind.label(),
+                    cp.makespan,
+                    r.total_time
+                );
+                // Work is timing-independent: busy time is exact even on
+                // stateful wires.
+                for p in 0..4 {
+                    assert!((cp.proc_busy[p] - r.proc_busy[p]).abs() < 1e-9);
+                }
+                assert_eq!(cp.messages, r.messages);
+                assert_eq!(cp.words, r.words);
+                if cp.exact_wire {
+                    assert_eq!(cp.makespan, r.total_time, "{}", kind.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deadlocked_plan_has_no_critical_path() {
+        use crate::graph::ProcId;
+        use crate::sim::ProcPlan;
+        let g = heat1d_graph(8, 1, 2);
+        let mut per_proc = vec![ProcPlan::default(); 2];
+        per_proc[0].phases.push(Phase::Recv { from: ProcId(1), tasks: vec![0] });
+        per_proc[1].phases.push(Phase::Recv { from: ProcId(0), tasks: vec![1] });
+        let plan = ExecPlan { per_proc, label: "stuck".into() };
+        let mach = Machine::new(2, 1, 10.0, 0.1, 1.0);
+        let net = AlphaBeta::from_machine(&mach);
+        let err = critical_path(&g, &plan, &mach, &net, &UniformCost).unwrap_err();
+        assert_eq!(err.fatal, vec![Diagnostic::Deadlock { stuck: vec![(0, 0), (1, 0)] }]);
+    }
+
+    #[test]
+    fn input_lower_bound_scales_beta_by_words_per_value() {
+        let g = Arc::new(heat1d_graph(32, 4, 2));
+        let plan = Arc::new(ExecPlan::naive(&g));
+        let base = Machine::new(2, 2, 40.0, 0.5, 1.0);
+        let mk = |wpv: usize| {
+            SweepInput::new(
+                "heat1d",
+                "naive",
+                Arc::clone(&g),
+                Arc::clone(&plan),
+                Arc::new(UniformCost),
+                wpv,
+                None,
+            )
+        };
+        let lb1 = input_lower_bound(&mk(1), &base, NetworkKind::AlphaBeta).unwrap();
+        let lb4 = input_lower_bound(&mk(4), &base, NetworkKind::AlphaBeta).unwrap();
+        assert!(lb4 > lb1, "wider values must cost more wire: {lb4} vs {lb1}");
+        // And the exact-wire bound matches a direct simulation on the
+        // effective machine.
+        let eff = Machine::new(2, 2, 40.0, 0.5 * 4.0, 1.0);
+        let direct = simulate(&g, &plan, &eff, false);
+        assert_eq!(lb4, direct.total_time);
+    }
+}

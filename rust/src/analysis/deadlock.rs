@@ -1,0 +1,163 @@
+//! Static deadlock detection over the plan's wait-for structure.
+//!
+//! The engine blocks a `Recv` until the matching `Send` has *executed*
+//! (message timing decides when it unblocks, never whether).  So
+//! completability is a pure dataflow fact about the phase programs: run
+//! a timing-free worklist over the (proc, phase-cursor) states where a
+//! `Send` always advances (sends are non-blocking) and a `Recv` advances
+//! iff its channel has an unconsumed prior send.  The least fixed point
+//! either completes every program or leaves a stuck frontier — and that
+//! frontier equals [`crate::sim::try_simulate`]'s
+//! [`crate::sim::SimError::Deadlock`] list exactly, which the mutation
+//! matrix in `rust/tests/analysis_matrix.rs` pins.
+
+use crate::sim::{ExecPlan, Phase};
+use std::collections::HashMap;
+
+/// The outcome of [`deadlock_check`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DeadlockVerdict {
+    /// Every processor's program runs to completion.
+    Free,
+    /// The listed `(proc, phase index)` pairs block forever — the same
+    /// shape as [`crate::sim::SimError::Deadlock`]'s `stuck` list.
+    Stuck(Vec<(u32, usize)>),
+}
+
+impl DeadlockVerdict {
+    /// True iff the plan is deadlock-free.
+    pub fn is_free(&self) -> bool {
+        matches!(self, DeadlockVerdict::Free)
+    }
+
+    /// The stuck frontier (empty when free).
+    pub fn stuck(&self) -> &[(u32, usize)] {
+        match self {
+            DeadlockVerdict::Free => &[],
+            DeadlockVerdict::Stuck(s) => s,
+        }
+    }
+}
+
+/// Prove `plan` deadlock-free (or name its stuck frontier) without
+/// running the engine.  O(total phases) across worklist rounds.
+pub fn deadlock_check(plan: &ExecPlan) -> DeadlockVerdict {
+    let nprocs = plan.per_proc.len();
+    let mut cursor = vec![0usize; nprocs];
+    // Messages emitted / consumed per (from, to) channel so far.
+    let mut sent: HashMap<(u32, u32), u32> = HashMap::new();
+    let mut rcvd: HashMap<(u32, u32), u32> = HashMap::new();
+
+    loop {
+        let mut progressed = false;
+        for (p, pp) in plan.per_proc.iter().enumerate() {
+            let phases = &pp.phases;
+            while cursor[p] < phases.len() {
+                match &phases[cursor[p]] {
+                    Phase::Compute(_) => {}
+                    Phase::Send { to, .. } => {
+                        *sent.entry((p as u32, to.0)).or_insert(0) += 1;
+                    }
+                    Phase::Recv { from, .. } => {
+                        let key = (from.0, p as u32);
+                        let consumed = rcvd.get(&key).copied().unwrap_or(0);
+                        if sent.get(&key).copied().unwrap_or(0) <= consumed {
+                            break; // blocked: re-examined next round
+                        }
+                        rcvd.insert(key, consumed + 1);
+                    }
+                }
+                cursor[p] += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+
+    let stuck: Vec<(u32, usize)> = (0..nprocs)
+        .filter(|&p| cursor[p] < plan.per_proc[p].phases.len())
+        .map(|p| (p as u32, cursor[p]))
+        .collect();
+    if stuck.is_empty() {
+        DeadlockVerdict::Free
+    } else {
+        DeadlockVerdict::Stuck(stuck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ProcId;
+    use crate::sim::{
+        try_simulate, AlphaBeta, ExecPlan, Machine, ProcPlan, SimError, UniformCost,
+    };
+    use crate::stencil::heat1d_graph;
+    use crate::transform::TransformOptions;
+
+    /// The pinning harness: the static verdict must equal the dynamic one.
+    fn assert_pinned(plan: &ExecPlan, tag: &str) {
+        let g = heat1d_graph(8, 1, plan.per_proc.len() as u32);
+        let mach = Machine::new(plan.per_proc.len() as u32, 1, 10.0, 0.1, 1.0);
+        let mut net = AlphaBeta::from_machine(&mach);
+        let dynamic = try_simulate(&g, plan, &mach, &mut net, &UniformCost, false);
+        match (deadlock_check(plan), dynamic) {
+            (DeadlockVerdict::Free, Ok(_)) => {}
+            (DeadlockVerdict::Stuck(s), Err(SimError::Deadlock { stuck })) => {
+                assert_eq!(s, stuck, "{tag}: stuck frontiers differ");
+            }
+            (stat, dynam) => panic!("{tag}: static {stat:?} vs dynamic {dynam:?}"),
+        }
+    }
+
+    #[test]
+    fn cyclic_wait_is_stuck_everywhere() {
+        let mut per_proc = vec![ProcPlan::default(); 2];
+        per_proc[0].phases.push(Phase::Recv { from: ProcId(1), tasks: vec![0] });
+        per_proc[0].phases.push(Phase::Send { to: ProcId(1), tasks: vec![0] });
+        per_proc[1].phases.push(Phase::Recv { from: ProcId(0), tasks: vec![0] });
+        per_proc[1].phases.push(Phase::Send { to: ProcId(0), tasks: vec![0] });
+        let plan = ExecPlan { per_proc, label: "cycle".into() };
+        assert_eq!(deadlock_check(&plan), DeadlockVerdict::Stuck(vec![(0, 0), (1, 0)]));
+        assert_pinned(&plan, "cycle");
+    }
+
+    #[test]
+    fn half_deadlock_strands_one_proc() {
+        let mut per_proc = vec![ProcPlan::default(); 2];
+        per_proc[0].phases.push(Phase::Compute(vec![8]));
+        per_proc[1].phases.push(Phase::Recv { from: ProcId(0), tasks: vec![0] });
+        let plan = ExecPlan { per_proc, label: "half".into() };
+        assert_eq!(deadlock_check(&plan), DeadlockVerdict::Stuck(vec![(1, 0)]));
+        assert_pinned(&plan, "half");
+    }
+
+    #[test]
+    fn out_of_order_sends_still_complete() {
+        // p1 receives before it sends, but p0 sends first: no cycle.
+        let mut per_proc = vec![ProcPlan::default(); 2];
+        per_proc[0].phases.push(Phase::Send { to: ProcId(1), tasks: vec![0] });
+        per_proc[0].phases.push(Phase::Recv { from: ProcId(1), tasks: vec![1] });
+        per_proc[1].phases.push(Phase::Recv { from: ProcId(0), tasks: vec![0] });
+        per_proc[1].phases.push(Phase::Send { to: ProcId(0), tasks: vec![1] });
+        let plan = ExecPlan { per_proc, label: "pingpong".into() };
+        assert!(deadlock_check(&plan).is_free());
+        assert_pinned(&plan, "pingpong");
+    }
+
+    #[test]
+    fn pipeline_plans_are_free() {
+        let g = heat1d_graph(24, 3, 3);
+        for plan in [
+            ExecPlan::naive(&g),
+            ExecPlan::overlap(&g),
+            ExecPlan::ca(&g, 3, TransformOptions::default()).unwrap(),
+        ] {
+            let verdict = deadlock_check(&plan);
+            assert!(verdict.is_free(), "{}: {verdict:?}", plan.label);
+            assert!(verdict.stuck().is_empty());
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Whole-plan value-hazard analysis.
+//!
+//! The Theorem-1 check ([`crate::transform::check_schedule`]) proves the
+//! predecessor closure *per superstep* of a CA schedule; this pass
+//! generalizes it to any phase program by replaying availability: a
+//! value exists on processor `p` once `p` owns it as an `Input`,
+//! computes it, or receives it.  A `Compute` whose predecessor is
+//! neither available nor scheduled in the same phase (the engine's list
+//! scheduler orders same-phase tasks by `(level, id)`, so intra-phase
+//! producers always run first) is a RAW violation; a `Send` of an
+//! unavailable value ships garbage; producing twice is the WAW hazard
+//! overlap/CA reordering can introduce.
+
+use super::report::Diagnostic;
+use crate::graph::{ProcId, TaskGraph, TaskId, TaskKind};
+use crate::sim::{ExecPlan, Phase};
+use std::collections::{BTreeSet, HashSet};
+
+/// Replay value availability on every processor and report RAW/WAW
+/// hazards, ordered by proc, then phase, then task id.
+pub fn hazard_check(g: &TaskGraph, plan: &ExecPlan) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (p, pp) in plan.per_proc.iter().enumerate() {
+        // Values present on p before anything runs: its own inputs.
+        let mut avail: HashSet<u32> = g
+            .owned_by(ProcId(p as u32))
+            .into_iter()
+            .filter(|&t| g.kind(TaskId(t)) == TaskKind::Input)
+            .collect();
+        for (i, ph) in pp.phases.iter().enumerate() {
+            match ph {
+                Phase::Compute(tasks) => {
+                    let in_phase: HashSet<u32> = tasks.iter().copied().collect();
+                    // Dedup: one diagnostic per missing value per phase.
+                    let mut missing: BTreeSet<u32> = BTreeSet::new();
+                    for &t in tasks {
+                        for &pr in g.preds(TaskId(t)) {
+                            if !avail.contains(&pr) && !in_phase.contains(&pr) {
+                                missing.insert(pr);
+                            }
+                        }
+                    }
+                    out.extend(missing.into_iter().map(|task| Diagnostic::UseWithoutProduce {
+                        proc: p as u32,
+                        phase: i,
+                        task,
+                    }));
+                    let mut doubled: BTreeSet<u32> = BTreeSet::new();
+                    for &t in tasks {
+                        if !avail.insert(t) {
+                            doubled.insert(t);
+                        }
+                    }
+                    out.extend(doubled.into_iter().map(|task| Diagnostic::DoubleProduce {
+                        proc: p as u32,
+                        phase: i,
+                        task,
+                    }));
+                }
+                Phase::Send { tasks, .. } => {
+                    let mut missing: BTreeSet<u32> = BTreeSet::new();
+                    for &t in tasks {
+                        if !avail.contains(&t) {
+                            missing.insert(t);
+                        }
+                    }
+                    out.extend(missing.into_iter().map(|task| Diagnostic::SendWithoutProduce {
+                        proc: p as u32,
+                        phase: i,
+                        task,
+                    }));
+                }
+                Phase::Recv { tasks, .. } => {
+                    // Receiving a value twice is harmless redundancy in a
+                    // matched channel (the census flags the mismatch side);
+                    // availability just absorbs it.
+                    avail.extend(tasks.iter().copied());
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{ExecPlan, ProcPlan};
+    use crate::stencil::heat1d_graph;
+    use crate::transform::TransformOptions;
+
+    #[test]
+    fn pipeline_plans_have_no_hazards() {
+        let g = heat1d_graph(32, 4, 4);
+        for plan in [
+            ExecPlan::naive(&g),
+            ExecPlan::overlap(&g),
+            ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap(),
+            ExecPlan::ca(&g, 2, TransformOptions::level0()).unwrap(),
+        ] {
+            let diags = hazard_check(&g, &plan);
+            assert!(diags.is_empty(), "{}: {diags:?}", plan.label);
+        }
+    }
+
+    #[test]
+    fn reordering_a_dependent_compute_is_a_raw_hazard() {
+        // Take a valid naive plan and hoist the last compute phase of
+        // proc 0 to the very front: its predecessors (previous level,
+        // possibly received) are no longer available.
+        let g = heat1d_graph(16, 3, 2);
+        let plan = ExecPlan::naive(&g);
+        let mut broken = plan.clone();
+        let phases = &mut broken.per_proc[0].phases;
+        let last_compute = phases
+            .iter()
+            .rposition(|ph| matches!(ph, Phase::Compute(_)))
+            .expect("naive plans compute");
+        let ph = phases.remove(last_compute);
+        phases.insert(0, ph);
+        let diags = hazard_check(&g, &broken);
+        assert!(
+            diags.iter().any(|d| matches!(d, Diagnostic::UseWithoutProduce { proc: 0, .. })),
+            "{diags:?}"
+        );
+        assert!(hazard_check(&g, &plan).is_empty());
+    }
+
+    #[test]
+    fn sending_an_unproduced_value_is_flagged() {
+        use crate::graph::ProcId;
+        let g = heat1d_graph(8, 2, 2);
+        // Proc 0 ships a level-2 value it never computed.
+        let top = (0..g.len() as u32)
+            .find(|&t| g.level(TaskId(t)) == 2 && g.owner(TaskId(t)) == ProcId(1))
+            .unwrap();
+        let mut per_proc = vec![ProcPlan::default(); 2];
+        per_proc[0].phases.push(Phase::Send { to: ProcId(1), tasks: vec![top] });
+        per_proc[1].phases.push(Phase::Recv { from: ProcId(0), tasks: vec![top] });
+        let plan = ExecPlan { per_proc, label: "garbage".into() };
+        let diags = hazard_check(&g, &plan);
+        assert_eq!(
+            diags,
+            vec![Diagnostic::SendWithoutProduce { proc: 0, phase: 0, task: top }]
+        );
+    }
+
+    #[test]
+    fn computing_twice_is_a_waw_hazard() {
+        let g = heat1d_graph(8, 2, 1);
+        let mut plan = ExecPlan::naive(&g);
+        // Duplicate the first compute phase at the end of proc 0.
+        let first = plan.per_proc[0]
+            .phases
+            .iter()
+            .find(|ph| matches!(ph, Phase::Compute(_)))
+            .cloned()
+            .unwrap();
+        plan.per_proc[0].phases.push(first);
+        let diags = hazard_check(&g, &plan);
+        assert!(
+            diags.iter().all(|d| matches!(d, Diagnostic::DoubleProduce { proc: 0, .. })),
+            "{diags:?}"
+        );
+        assert!(!diags.is_empty());
+    }
+
+    #[test]
+    fn same_phase_producers_satisfy_consumers() {
+        // One proc, every level in a single compute phase: the intra-
+        // phase (level, id) ordering makes this legal, not a hazard.
+        let g = heat1d_graph(8, 3, 1);
+        let all: Vec<u32> =
+            (0..g.len() as u32).filter(|&t| g.kind(TaskId(t)) == TaskKind::Compute).collect();
+        let mut per_proc = vec![ProcPlan::default()];
+        per_proc[0].phases.push(Phase::Compute(all));
+        let plan = ExecPlan { per_proc, label: "fused".into() };
+        assert!(hazard_check(&g, &plan).is_empty());
+    }
+}

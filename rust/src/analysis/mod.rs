@@ -1,0 +1,135 @@
+//! Static plan analysis: prove properties of an [`ExecPlan`] **without
+//! running the engine**.
+//!
+//! The paper's latency-tolerance transforms reorder sends and receives
+//! across supersteps, so a wrong transform used to surface only as a
+//! *dynamic* [`crate::sim::SimError::Deadlock`] deep inside the engine.
+//! This module makes the failure modes static, named diagnostics, and
+//! turns the same machinery around to produce an *analytic* makespan
+//! lower bound that the autotuner uses to prune candidates.
+//!
+//! Module map (verify → prune → report data flow):
+//!
+//! * [`channels`](channel_census) — per-channel send/recv census: the
+//!   k-th `Send` on a `(from, to)` channel pairs with the k-th `Recv`;
+//!   unmatched receives (the engine's "half-deadlock"), orphaned sends,
+//!   and word-count disagreements become named diagnostics;
+//! * [`deadlock`](deadlock_check) — a timing-free worklist execution of
+//!   the plan's (proc, phase-cursor) wait-for structure; its stuck
+//!   frontier is pinned to match [`crate::sim::try_simulate`]'s dynamic
+//!   verdict exactly (message timing affects *when* a receive unblocks,
+//!   never *whether* it does);
+//! * [`hazards`](hazard_check) — whole-plan value-availability pass, the
+//!   Theorem-1 predecessor-closure check generalized from per-superstep
+//!   ([`crate::transform::check_schedule`]) to arbitrary phase programs:
+//!   uses-without-produce, sends-without-produce, double-produces
+//!   (WAW hazards from overlap/CA reordering);
+//! * [`critpath`](critical_path) — the longest weighted path through the
+//!   plan under a wire model's per-channel lower bounds
+//!   ([`crate::sim::NetworkModel::message_lower_bound`]): an analytic
+//!   makespan lower bound, *exact* on stateless wires (AlphaBeta,
+//!   Hierarchical) and safely below stateful ones (LogGP, Contended);
+//!   [`input_lower_bound`] is the tuner's branch-and-bound hook;
+//! * [`report`](AnalysisReport) — aggregation: severities, summaries,
+//!   JSON, and the structured [`AnalysisError`] that
+//!   [`crate::pipeline::Pipeline::transform`] surfaces as a pre-flight
+//!   failure instead of an engine panic.
+#![deny(missing_docs)]
+
+mod channels;
+mod critpath;
+mod deadlock;
+mod hazards;
+mod report;
+
+pub use channels::channel_census;
+pub use critpath::{critical_path, input_lower_bound, CritPath};
+pub use deadlock::{deadlock_check, DeadlockVerdict};
+pub use hazards::hazard_check;
+pub use report::{AnalysisError, AnalysisReport, Diagnostic, Severity};
+
+use crate::graph::TaskGraph;
+use crate::sim::ExecPlan;
+
+/// Run every structural check on `plan` and collect the findings.
+///
+/// Diagnostics come back in deterministic order: channel census first
+/// (by channel), then hazards (by proc and phase), then the deadlock
+/// verdict.  A plan built by [`crate::pipeline::Pipeline`] produces an
+/// empty diagnostic list ([`AnalysisReport::is_clean`]); the mutation
+/// matrix in `rust/tests/analysis_matrix.rs` pins that no corrupted
+/// plan does.
+pub fn analyze(g: &TaskGraph, plan: &ExecPlan) -> AnalysisReport {
+    let mut diagnostics = channel_census(plan);
+    diagnostics.extend(hazard_check(g, plan));
+    let verdict = deadlock_check(plan);
+    let stuck = verdict.stuck().to_vec();
+    if !stuck.is_empty() {
+        diagnostics.push(Diagnostic::Deadlock { stuck: stuck.clone() });
+    }
+    AnalysisReport {
+        plan_label: plan.label.clone(),
+        procs: plan.per_proc.len(),
+        phases: plan.per_proc.iter().map(|p| p.phases.len()).sum(),
+        diagnostics,
+        stuck,
+    }
+}
+
+/// The pre-flight gate: `Ok` iff [`analyze`] finds no fatal diagnostic
+/// (warnings — orphaned sends, word-count mismatches, double-produces —
+/// pass; the report carries them for inspection).
+///
+/// # Errors
+///
+/// Returns the structured [`AnalysisError`] listing every fatal
+/// diagnostic when the plan can deadlock or consumes values it never
+/// produced.
+pub fn verify(g: &TaskGraph, plan: &ExecPlan) -> Result<AnalysisReport, AnalysisError> {
+    let report = analyze(g, plan);
+    if report.is_safe() {
+        Ok(report)
+    } else {
+        Err(report.into_error())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ExecPlan;
+    use crate::stencil::heat1d_graph;
+    use crate::transform::TransformOptions;
+
+    #[test]
+    fn pipeline_built_plans_are_clean() {
+        let g = heat1d_graph(32, 4, 4);
+        for plan in [
+            ExecPlan::naive(&g),
+            ExecPlan::overlap(&g),
+            ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap(),
+        ] {
+            let report = analyze(&g, &plan);
+            assert!(report.is_clean(), "{}: {}", plan.label, report.summary());
+            assert!(report.deadlock_free());
+            assert!(verify(&g, &plan).is_ok());
+        }
+    }
+
+    #[test]
+    fn verify_rejects_a_cyclic_wait() {
+        use crate::graph::ProcId;
+        use crate::sim::{Phase, ProcPlan};
+        let g = heat1d_graph(8, 1, 2);
+        let mut per_proc = vec![ProcPlan::default(); 2];
+        per_proc[0].phases.push(Phase::Recv { from: ProcId(1), tasks: vec![0] });
+        per_proc[0].phases.push(Phase::Send { to: ProcId(1), tasks: vec![0] });
+        per_proc[1].phases.push(Phase::Recv { from: ProcId(0), tasks: vec![0] });
+        per_proc[1].phases.push(Phase::Send { to: ProcId(0), tasks: vec![0] });
+        let plan = ExecPlan { per_proc, label: "cycle".into() };
+        let err = verify(&g, &plan).unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+        let report = analyze(&g, &plan);
+        assert_eq!(report.stuck, vec![(0, 0), (1, 0)]);
+    }
+}

@@ -1,0 +1,378 @@
+//! Diagnostic vocabulary and the aggregated analysis report.
+
+/// How bad a [`Diagnostic`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// The plan runs to completion on the engine, but is value-unsafe or
+    /// wasteful (orphaned sends, word mismatches, double-produces).
+    Warning,
+    /// The plan cannot run to completion, or consumes values that are
+    /// never produced — it must not reach the engine or the coordinator.
+    Fatal,
+}
+
+/// One static finding about a plan.
+///
+/// Channel diagnostics name the `(from, to)` channel and the 0-based
+/// message sequence number on it; hazard diagnostics name the processor,
+/// the phase index in its program, and the offending task id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Diagnostic {
+    /// The `seq`-th `Recv` on the channel has no matching `Send`: the
+    /// receiver blocks forever — the engine's "half-deadlock", caught
+    /// statically.
+    UnmatchedRecv {
+        /// Sending processor of the channel.
+        from: u32,
+        /// Receiving processor of the channel.
+        to: u32,
+        /// 0-based message sequence number on the channel.
+        seq: u32,
+    },
+    /// The `seq`-th `Send` on the channel has no matching `Recv`: the
+    /// message is posted and never consumed (sends are non-blocking, so
+    /// the plan still completes — but the slot leaks).
+    OrphanSend {
+        /// Sending processor of the channel.
+        from: u32,
+        /// Receiving processor of the channel.
+        to: u32,
+        /// 0-based message sequence number on the channel.
+        seq: u32,
+    },
+    /// The `seq`-th `Send` and `Recv` on the channel disagree on the
+    /// message's word count: the wire charges for `sent` words while the
+    /// receiver unpacks `received` — values end up misrouted.
+    WordMismatch {
+        /// Sending processor of the channel.
+        from: u32,
+        /// Receiving processor of the channel.
+        to: u32,
+        /// 0-based message sequence number on the channel.
+        seq: u32,
+        /// Words in the `Send`'s payload.
+        sent: usize,
+        /// Words the `Recv` expects.
+        received: usize,
+    },
+    /// A `Compute` phase consumes `task`'s value before any earlier
+    /// phase on that processor produced it (RAW violation — the
+    /// reordered consumer ran ahead of its producer/receive).
+    UseWithoutProduce {
+        /// Processor whose program is at fault.
+        proc: u32,
+        /// Phase index in that processor's program.
+        phase: usize,
+        /// The consumed-but-never-produced task id.
+        task: u32,
+    },
+    /// A `Send` phase ships `task`'s value before any earlier phase on
+    /// that processor produced it.
+    SendWithoutProduce {
+        /// Processor whose program is at fault.
+        proc: u32,
+        /// Phase index in that processor's program.
+        phase: usize,
+        /// The shipped-but-never-produced task id.
+        task: u32,
+    },
+    /// A `Compute` phase produces `task`'s value a second time on the
+    /// same processor (WAW hazard from overlap/CA reordering).
+    DoubleProduce {
+        /// Processor whose program is at fault.
+        proc: u32,
+        /// Phase index in that processor's program.
+        phase: usize,
+        /// The twice-produced task id.
+        task: u32,
+    },
+    /// The wait-for structure has a stuck frontier: every listed
+    /// processor is blocked at the listed phase index and nothing can
+    /// unblock it — the same shape as
+    /// [`crate::sim::SimError::Deadlock`], proven statically.
+    Deadlock {
+        /// `(proc, phase index)` of every stuck processor.
+        stuck: Vec<(u32, usize)>,
+    },
+}
+
+impl Diagnostic {
+    /// The diagnostic's severity class.
+    pub fn severity(&self) -> Severity {
+        match self {
+            Diagnostic::UnmatchedRecv { .. }
+            | Diagnostic::UseWithoutProduce { .. }
+            | Diagnostic::SendWithoutProduce { .. }
+            | Diagnostic::Deadlock { .. } => Severity::Fatal,
+            Diagnostic::OrphanSend { .. }
+            | Diagnostic::WordMismatch { .. }
+            | Diagnostic::DoubleProduce { .. } => Severity::Warning,
+        }
+    }
+
+    /// Stable machine-readable tag ("unmatched-recv", "deadlock", ...).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Diagnostic::UnmatchedRecv { .. } => "unmatched-recv",
+            Diagnostic::OrphanSend { .. } => "orphan-send",
+            Diagnostic::WordMismatch { .. } => "word-mismatch",
+            Diagnostic::UseWithoutProduce { .. } => "use-without-produce",
+            Diagnostic::SendWithoutProduce { .. } => "send-without-produce",
+            Diagnostic::DoubleProduce { .. } => "double-produce",
+            Diagnostic::Deadlock { .. } => "deadlock",
+        }
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Diagnostic::UnmatchedRecv { from, to, seq } => write!(
+                f,
+                "unmatched-recv: message #{seq} on p{from}→p{to} is received but never sent"
+            ),
+            Diagnostic::OrphanSend { from, to, seq } => {
+                write!(f, "orphan-send: message #{seq} on p{from}→p{to} is sent but never received")
+            }
+            Diagnostic::WordMismatch { from, to, seq, sent, received } => write!(
+                f,
+                "word-mismatch: message #{seq} on p{from}→p{to} sends {sent} words but the receiver expects {received}"
+            ),
+            Diagnostic::UseWithoutProduce { proc, phase, task } => write!(
+                f,
+                "use-without-produce: p{proc} phase {phase} consumes t{task} before it is computed or received"
+            ),
+            Diagnostic::SendWithoutProduce { proc, phase, task } => write!(
+                f,
+                "send-without-produce: p{proc} phase {phase} ships t{task} before it is computed or received"
+            ),
+            Diagnostic::DoubleProduce { proc, phase, task } => {
+                write!(f, "double-produce: p{proc} phase {phase} produces t{task} a second time")
+            }
+            Diagnostic::Deadlock { stuck } => {
+                write!(f, "deadlock: ")?;
+                for (i, (p, phase)) in stuck.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "p{p} blocked at phase {phase}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Everything [`super::analyze`] found out about one plan.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    /// The analyzed plan's label.
+    pub plan_label: String,
+    /// Processors in the plan.
+    pub procs: usize,
+    /// Total phases across all processor programs.
+    pub phases: usize,
+    /// Every finding, deterministic order (channels, hazards, deadlock).
+    pub diagnostics: Vec<Diagnostic>,
+    /// The static stuck frontier — empty iff the plan is deadlock-free.
+    /// Matches [`crate::sim::SimError::Deadlock`]'s `stuck` list exactly
+    /// when non-empty.
+    pub stuck: Vec<(u32, usize)>,
+}
+
+impl AnalysisReport {
+    /// True iff the static wait-for execution completes every program.
+    pub fn deadlock_free(&self) -> bool {
+        self.stuck.is_empty()
+    }
+
+    /// No diagnostics at all — the bar every pipeline-built plan meets.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// No *fatal* diagnostics — warnings alone don't stop the engine.
+    pub fn is_safe(&self) -> bool {
+        self.fatal_count() == 0
+    }
+
+    /// Number of fatal diagnostics.
+    pub fn fatal_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity() == Severity::Fatal).count()
+    }
+
+    /// Number of warning diagnostics.
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.len() - self.fatal_count()
+    }
+
+    /// Convert an unsafe report into the error carrying its fatal
+    /// diagnostics (warnings are dropped; call only when
+    /// [`AnalysisReport::is_safe`] is false).
+    pub fn into_error(self) -> AnalysisError {
+        let fatal: Vec<Diagnostic> = self
+            .diagnostics
+            .into_iter()
+            .filter(|d| d.severity() == Severity::Fatal)
+            .collect();
+        AnalysisError { plan_label: self.plan_label, fatal }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        if self.is_clean() {
+            format!(
+                "{}: clean ({} procs, {} phases, deadlock-free)",
+                self.plan_label, self.procs, self.phases
+            )
+        } else {
+            format!(
+                "{}: {} fatal, {} warning ({} procs, {} phases){}",
+                self.plan_label,
+                self.fatal_count(),
+                self.warning_count(),
+                self.procs,
+                self.phases,
+                if self.deadlock_free() { "" } else { "; DEADLOCK" }
+            )
+        }
+    }
+
+    /// Single-line JSON object (the `serve` dialect: flat keys, one
+    /// line) listing counts and rendered diagnostics.
+    pub fn to_json(&self) -> String {
+        let diags: Vec<String> =
+            self.diagnostics.iter().map(|d| format!("{:?}", d.to_string())).collect();
+        format!(
+            "{{\"plan\": {:?}, \"procs\": {}, \"phases\": {}, \"deadlock_free\": {}, \
+             \"fatal\": {}, \"warnings\": {}, \"diagnostics\": [{}]}}",
+            self.plan_label,
+            self.procs,
+            self.phases,
+            self.deadlock_free(),
+            self.fatal_count(),
+            self.warning_count(),
+            diags.join(", ")
+        )
+    }
+}
+
+/// A plan failed static verification: the structured replacement for
+/// the engine's dynamic deadlock panic, carrying every fatal
+/// [`Diagnostic`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AnalysisError {
+    /// The rejected plan's label.
+    pub plan_label: String,
+    /// The fatal diagnostics, in report order.
+    pub fatal: Vec<Diagnostic>,
+}
+
+impl std::fmt::Display for AnalysisError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "plan {:?} failed static verification", self.plan_label)?;
+        for d in &self.fatal {
+            write!(f, "; {d}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for AnalysisError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> AnalysisReport {
+        AnalysisReport {
+            plan_label: "test".into(),
+            procs: 2,
+            phases: 7,
+            diagnostics: vec![
+                Diagnostic::OrphanSend { from: 0, to: 1, seq: 2 },
+                Diagnostic::UnmatchedRecv { from: 1, to: 0, seq: 0 },
+                Diagnostic::Deadlock { stuck: vec![(0, 3)] },
+            ],
+            stuck: vec![(0, 3)],
+        }
+    }
+
+    #[test]
+    fn severity_split_matches_engine_behavior() {
+        // Fatal = the engine cannot complete (or values are consumed
+        // unproduced); Warning = the engine completes anyway.
+        assert_eq!(
+            Diagnostic::UnmatchedRecv { from: 0, to: 1, seq: 0 }.severity(),
+            Severity::Fatal
+        );
+        assert_eq!(Diagnostic::Deadlock { stuck: vec![] }.severity(), Severity::Fatal);
+        assert_eq!(
+            Diagnostic::UseWithoutProduce { proc: 0, phase: 1, task: 2 }.severity(),
+            Severity::Fatal
+        );
+        assert_eq!(
+            Diagnostic::SendWithoutProduce { proc: 0, phase: 1, task: 2 }.severity(),
+            Severity::Fatal
+        );
+        assert_eq!(Diagnostic::OrphanSend { from: 0, to: 1, seq: 0 }.severity(), Severity::Warning);
+        assert_eq!(
+            Diagnostic::WordMismatch { from: 0, to: 1, seq: 0, sent: 2, received: 3 }.severity(),
+            Severity::Warning
+        );
+        assert_eq!(
+            Diagnostic::DoubleProduce { proc: 0, phase: 1, task: 2 }.severity(),
+            Severity::Warning
+        );
+    }
+
+    #[test]
+    fn report_counts_and_summary() {
+        let r = report();
+        assert!(!r.is_clean());
+        assert!(!r.is_safe());
+        assert!(!r.deadlock_free());
+        assert_eq!(r.fatal_count(), 2);
+        assert_eq!(r.warning_count(), 1);
+        let s = r.summary();
+        assert!(s.contains("2 fatal") && s.contains("DEADLOCK"), "{s}");
+    }
+
+    #[test]
+    fn error_keeps_only_fatal_diagnostics() {
+        let err = report().into_error();
+        assert_eq!(err.fatal.len(), 2);
+        let text = err.to_string();
+        assert!(text.contains("failed static verification"), "{text}");
+        assert!(text.contains("unmatched-recv"), "{text}");
+        assert!(!text.contains("orphan-send"), "{text}");
+    }
+
+    #[test]
+    fn json_is_one_flat_line() {
+        let json = report().to_json();
+        assert_eq!(json.lines().count(), 1);
+        assert!(json.contains("\"deadlock_free\": false"), "{json}");
+        assert!(json.contains("\"fatal\": 2"), "{json}");
+        assert!(json.contains("unmatched-recv"), "{json}");
+    }
+
+    #[test]
+    fn every_code_is_stable_and_distinct() {
+        let diags = [
+            Diagnostic::UnmatchedRecv { from: 0, to: 1, seq: 0 },
+            Diagnostic::OrphanSend { from: 0, to: 1, seq: 0 },
+            Diagnostic::WordMismatch { from: 0, to: 1, seq: 0, sent: 1, received: 2 },
+            Diagnostic::UseWithoutProduce { proc: 0, phase: 0, task: 0 },
+            Diagnostic::SendWithoutProduce { proc: 0, phase: 0, task: 0 },
+            Diagnostic::DoubleProduce { proc: 0, phase: 0, task: 0 },
+            Diagnostic::Deadlock { stuck: vec![] },
+        ];
+        let codes: std::collections::BTreeSet<&str> = diags.iter().map(|d| d.code()).collect();
+        assert_eq!(codes.len(), diags.len());
+        for d in &diags {
+            // The rendered message leads with the machine tag.
+            assert!(d.to_string().starts_with(d.code()), "{d}");
+        }
+    }
+}

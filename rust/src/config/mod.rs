@@ -302,6 +302,51 @@ pub fn preset_serve_smoke() -> Config {
     c
 }
 
+/// The `analyze` CLI preset: the static-analysis study — verify every
+/// pipeline-built plan of the sweep grid without the engine, check the
+/// analytic critical-path lower bound against the simulated makespan on
+/// every grid cell (α=0 rows pin the exact-equality corner), and audit
+/// lower-bound pruning ([`crate::tune::Tuner::with_pruning`]) against
+/// un-pruned tuning on `tune_workloads` × `networks`.
+pub fn preset_analyze() -> Config {
+    let mut c = Config::new();
+    c.set("workloads", "heat1d,heat2d,cg");
+    c.set("tune_workloads", "heat1d,heat2d");
+    c.set("networks", "alphabeta,loggp,hier,contended");
+    c.set("alphas", "0,8,64,500");
+    c.set("threads", "1,8,64");
+    c.set("blocks", "2,4,8");
+    c.set("p", 4);
+    c.set("n", 2048);
+    c.set("m", 16);
+    c.set("h", 16);
+    c.set("w", 16);
+    c.set("cg_n", 64);
+    c.set("iters", 2);
+    c.set("beta", 0.1);
+    c.set("gamma", 1.0);
+    c.set("jobs", 0);
+    c.set("repeat", 50);
+    c.set("tune_alpha", 500.0);
+    c.set("tune_threads", 8);
+    c.set("out", "results/analyze.json");
+    c
+}
+
+/// The `analyze --smoke` preset: the CI static-analysis tracker — the
+/// `BENCH_sim.json` regime grid (fig-7/8 α values plus the α=0
+/// exactness corner), emitting `BENCH_analyze.json` (plans verified/sec,
+/// bound tightness, prune rate) on every push; any violated soundness
+/// gate fails the run.
+pub fn preset_analyze_smoke() -> Config {
+    let mut c = preset_analyze();
+    c.set("alphas", "0,8,500");
+    c.set("blocks", "4");
+    c.set("repeat", 20);
+    c.set("out", "BENCH_analyze.json");
+    c
+}
+
 /// The figure-10 preset: SpMV partition quality vs. makespan per wire
 /// model on the banded+random matrix.
 pub fn preset_fig10() -> Config {
@@ -451,6 +496,19 @@ mod tests {
         // it to a throwaway temp dir that is wiped before the run.
         assert_eq!(preset_serve_smoke().get("cache"), Some(""));
         assert_eq!(preset_serve_smoke().get("out"), Some("BENCH_serve.json"));
+        for c in [preset_analyze(), preset_analyze_smoke()] {
+            for k in [
+                "workloads", "tune_workloads", "networks", "alphas", "threads", "blocks",
+                "p", "n", "m", "h", "w", "cg_n", "iters", "beta", "gamma", "jobs", "repeat",
+                "tune_alpha", "tune_threads", "out",
+            ] {
+                assert!(c.get(k).is_some(), "{k}");
+            }
+        }
+        // The smoke grid covers the BENCH_sim regimes plus the α=0
+        // corner where the bound must be bit-exact under uniform cost.
+        assert_eq!(preset_analyze_smoke().get("alphas"), Some("0,8,500"));
+        assert_eq!(preset_analyze_smoke().get("out"), Some("BENCH_analyze.json"));
         for k in ["h", "w", "chords", "m", "p", "threads", "alpha", "beta", "gamma"] {
             assert!(preset_fig10().get(k).is_some(), "{k}");
         }

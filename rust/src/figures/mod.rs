@@ -39,22 +39,28 @@ use std::sync::Arc;
 /// more than strictly necessary; figure graphs are tiny (tens of points,
 /// single-digit levels), so the uniform Pipeline front end wins over the
 /// saved microseconds.  Checking happens once, on the schedule returned.
+///
+/// A bad figure configuration (too few points per processor, zero
+/// steps, ...) surfaces as a structured error the CLI prints, not a
+/// panic.
 fn heat1d_schedule(
     n: u64,
     m: u32,
     p: u32,
     options: TransformOptions,
-) -> (Arc<crate::graph::TaskGraph>, CaSchedule) {
+) -> Result<(Arc<crate::graph::TaskGraph>, CaSchedule), String> {
     let t = Pipeline::new(Heat1d { n, steps: m, radius: 1 })
         .procs(p)
         .options(options)
         .skip_check()
         .transform()
-        .expect("heat1d transforms for every figure configuration");
-    let s = t.full_schedule().expect("CA strategy always has a schedule");
+        .map_err(|e| format!("figure configuration {n}x{m} on {p} procs: {e}"))?;
+    let s = t
+        .full_schedule()
+        .ok_or_else(|| format!("figure configuration {n}x{m} on {p} procs has no CA schedule"))?;
     crate::transform::check_schedule(&t.graph, &s)
-        .expect("figure schedules satisfy Theorem 1");
-    (t.graph, s)
+        .map_err(|e| format!("figure schedule {n}x{m} on {p} procs violates Theorem 1: {e}"))?;
+    Ok((t.graph, s))
 }
 
 /// Render the (point × level) membership of one processor's subsets as an
@@ -95,8 +101,8 @@ pub fn subset_grid(n: u64, m: u32, _p: u32, proc: u32, s: &CaSchedule) -> String
 
 /// Figure 1: the blocked update with a width-`b` level-0 ghost region and
 /// fully redundant intermediate recomputation (HaloMode::Level0Only).
-pub fn fig1(n: u64, b: u32, p: u32) -> String {
-    let (g, s) = heat1d_schedule(n, b, p, TransformOptions::level0());
+pub fn fig1(n: u64, b: u32, p: u32) -> Result<String, String> {
+    let (g, s) = heat1d_schedule(n, b, p, TransformOptions::level0())?;
     let stats = ScheduleStats::compute(&g, &s);
     let mut out = format!(
         "Figure 1 — blocked computation, {n} points × {b} steps on {p} procs (level-0 halo)\n\
@@ -107,15 +113,15 @@ pub fn fig1(n: u64, b: u32, p: u32) -> String {
         "ghost width = {b} (received level-0 points per side), redundant tasks = {}\n",
         stats.redundant_tasks
     ));
-    out
+    Ok(out)
 }
 
 /// Figure 2: the overlap schedule — what each phase contains and what the
 /// message flight hides.
-pub fn fig2(n: u64, b: u32, p: u32) -> String {
-    let (_, s) = heat1d_schedule(n, b, p, TransformOptions::default());
+pub fn fig2(n: u64, b: u32, p: u32) -> Result<String, String> {
+    let (_, s) = heat1d_schedule(n, b, p, TransformOptions::default())?;
     let sets = &s.per_proc[(p / 2) as usize];
-    format!(
+    Ok(format!(
         "Figure 2 — overlap of communication and computation ({n}×{b} on {p} procs)\n\
          phase 1: compute L1 ({} tasks) and post sends ({} msgs)\n\
          phase 2: compute L2 ({} tasks)  ← the {} in-flight messages hide behind this\n\
@@ -125,14 +131,14 @@ pub fn fig2(n: u64, b: u32, p: u32) -> String {
         sets.l2.len(),
         sets.recv.len(),
         sets.l3.len(),
-    )
+    ))
 }
 
 /// Figure 3: the multi-level halo — intermediate-level values travel, so
 /// less is recomputed than under the level-0 scheme.
-pub fn fig3(n: u64, b: u32, p: u32) -> String {
-    let (g, multi) = heat1d_schedule(n, b, p, TransformOptions::default());
-    let (_, lvl0) = heat1d_schedule(n, b, p, TransformOptions::level0());
+pub fn fig3(n: u64, b: u32, p: u32) -> Result<String, String> {
+    let (g, multi) = heat1d_schedule(n, b, p, TransformOptions::default())?;
+    let (_, lvl0) = heat1d_schedule(n, b, p, TransformOptions::level0())?;
     let sm = ScheduleStats::compute(&g, &multi);
     let s0 = ScheduleStats::compute(&g, &lvl0);
     let mut out = format!(
@@ -145,12 +151,12 @@ pub fn fig3(n: u64, b: u32, p: u32) -> String {
          words moved:   level-0 halo {}        →  multi-level halo {}\n",
         s0.redundant_tasks, sm.redundant_tasks, s0.words, sm.words
     ));
-    out
+    Ok(out)
 }
 
 /// Figure 4: full subset listing of one processor.
-pub fn fig4(n: u64, m: u32, p: u32) -> String {
-    let (_, s) = heat1d_schedule(n, m, p, TransformOptions::default());
+pub fn fig4(n: u64, m: u32, p: u32) -> Result<String, String> {
+    let (_, s) = heat1d_schedule(n, m, p, TransformOptions::default())?;
     let sets = &s.per_proc[(p / 2) as usize];
     let fmt_set = |name: &str, v: &Vec<u32>| {
         format!("  {name:<5} ({:>4} tasks): {}\n", v.len(), preview(v))
@@ -162,13 +168,13 @@ pub fn fig4(n: u64, m: u32, p: u32) -> String {
     out.push_str(&fmt_set("L(3)", &sets.l3));
     out.push_str(&fmt_set("L(4)", &sets.l4));
     out.push_str(&fmt_set("L(5)", &sets.l5));
-    out
+    Ok(out)
 }
 
 /// Figure 5: the communicated sets — what is sent (parts of L⁰ and L¹)
 /// and what is received, per processor pair.
-pub fn fig5(n: u64, m: u32, p: u32) -> String {
-    let (_, s) = heat1d_schedule(n, m, p, TransformOptions::default());
+pub fn fig5(n: u64, m: u32, p: u32) -> Result<String, String> {
+    let (_, s) = heat1d_schedule(n, m, p, TransformOptions::default())?;
     let mut out = format!("Figure 5 — communicated sets ({n}×{m} on {p} procs)\n");
     for ps in &s.per_proc {
         for msg in &ps.send {
@@ -185,7 +191,7 @@ pub fn fig5(n: u64, m: u32, p: u32) -> String {
             ));
         }
     }
-    out
+    Ok(out)
 }
 
 /// Figure 6 data: the k₁/k₂/k₃ set sizes for a middle processor.
@@ -199,8 +205,8 @@ pub struct Fig6Data {
 }
 
 /// Figure 6: the k₁/k₂/k₃ sets for a processor doing a 1-D heat equation.
-pub fn fig6(n: u64, m: u32, p: u32) -> (String, Fig6Data) {
-    let (g, s) = heat1d_schedule(n, m, p, TransformOptions::default());
+pub fn fig6(n: u64, m: u32, p: u32) -> Result<(String, Fig6Data), String> {
+    let (g, s) = heat1d_schedule(n, m, p, TransformOptions::default())?;
     let proc = p / 2;
     let sets = &s.per_proc[proc as usize];
     let mut out = format!(
@@ -221,7 +227,7 @@ pub fn fig6(n: u64, m: u32, p: u32) -> (String, Fig6Data) {
          received {} values; {} redundant task executions on this processor\n",
         data.k1, data.k2, data.k3, data.received, data.redundant
     ));
-    (out, data)
+    Ok((out, data))
 }
 
 /// The figure-7/8 sweep: strong-scaling runtime vs. threads per node.
@@ -537,15 +543,23 @@ mod tests {
 
     #[test]
     fn fig1_renders_and_counts_ghost() {
-        let s = fig1(32, 4, 4);
+        let s = fig1(32, 4, 4).unwrap();
         assert!(s.contains("ghost width = 4"));
         assert!(s.contains("redundant tasks"));
     }
 
     #[test]
     fn fig2_phases_nonempty() {
-        let s = fig2(64, 4, 4);
+        let s = fig2(64, 4, 4).unwrap();
         assert!(s.contains("phase 2"));
+    }
+
+    #[test]
+    fn impossible_figure_configuration_is_an_error_not_a_panic() {
+        // 2 points cannot strip over 8 procs: the graph build fails and
+        // the error carries the offending configuration.
+        let err = fig1(2, 4, 8).unwrap_err();
+        assert!(err.contains("2x4 on 8 procs"), "{err}");
     }
 
     #[test]
@@ -556,14 +570,14 @@ mod tests {
         let rm = ScheduleStats::compute(&g, &multi).redundant_tasks;
         let r0 = ScheduleStats::compute(&g, &lvl0).redundant_tasks;
         assert!(rm < r0, "multi {rm} vs level0 {r0}");
-        let s = fig3(64, 6, 4);
+        let s = fig3(64, 6, 4).unwrap();
         assert!(s.contains("redundant work"));
     }
 
     #[test]
     fn fig6_sets_match_1d_geometry() {
         // Middle processor, n/p = 16 points, m = 4 levels, multilevel.
-        let (_, d) = fig6(64, 4, 4);
+        let (_, d) = fig6(64, 4, 4).unwrap();
         // k2 is the interior trapezoid: Σ_{s=1..4} (16 − 2s) ≥ ... exact:
         // L4 = Σ max(0, 16 − 2s) = 14+12+10+8 = 44; k1 are the wedge tasks
         // needed by neighbours.

@@ -41,6 +41,14 @@
 //!   grid-aware hierarchical wire.
 //! * [`transform`] — **the paper's contribution**: the subset derivation,
 //!   Theorem-1 checker, blocking, and redundancy accounting.
+//! * [`analysis`] — static plan verification (verify → prune → report):
+//!   channel-safety census, deadlock-freedom proof pinned against the
+//!   engine's dynamic verdict, whole-plan RAW/WAW hazard analysis, and
+//!   an analytic critical-path makespan lower bound
+//!   ([`analysis::critical_path`], exact on stateless wires) that
+//!   pre-flights every [`pipeline::Pipeline::transform`], prunes tuner
+//!   candidates branch-and-bound style, and backs the `analyze` CLI
+//!   subcommand / `serve` op.
 //! * [`sim`] — the §4 simulation stack: an event-driven engine
 //!   (binary-heap event queue, blocked-receiver wakeup) with pluggable
 //!   wire models ([`sim::NetworkKind`]: α+β·words, LogGP, hierarchical,
@@ -80,6 +88,7 @@
 //! * [`figures`] — regenerates every paper figure's data.
 //! * [`prop`] — in-repo property-testing harness (no external deps vendored).
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod cost;

@@ -10,6 +10,9 @@
 //! * `cost` — the §2.1 cost model table and optimal block factor;
 //! * `run-heat1d` / `run-heat2d` — real distributed runs (PJRT compute);
 //! * `run-cg` — distributed CG, classic vs. pipelined;
+//! * `analyze` — static plan verification and analytic critical-path
+//!   bounds checked against the engine, plus a pruned-vs-full tuner
+//!   audit (CI gate: `make analyze-smoke` → `BENCH_analyze.json`);
 //! * `serve` — long-running tuning/simulation daemon: JSON request
 //!   streams over stdin batches or TCP/Unix sockets, cache-first with
 //!   in-flight dedupe, batching, and admission control;
@@ -18,10 +21,12 @@
 //! Every subcommand lives in the [`COMMANDS`] table; `--help` documents
 //! each entry (a test keeps the two in sync).
 
+use imp_latency::analysis;
 use imp_latency::config::{
-    parse_list, preset_bench, preset_bench_smoke, preset_end_to_end, preset_fig10, preset_fig7,
-    preset_fig8, preset_fig9, preset_partition, preset_partition_smoke, preset_serve,
-    preset_serve_smoke, preset_sweep, preset_sweep_smoke, preset_tune, preset_tune_smoke, Config,
+    parse_list, preset_analyze, preset_analyze_smoke, preset_bench, preset_bench_smoke,
+    preset_end_to_end, preset_fig10, preset_fig7, preset_fig8, preset_fig9, preset_partition,
+    preset_partition_smoke, preset_serve, preset_serve_smoke, preset_sweep, preset_sweep_smoke,
+    preset_tune, preset_tune_smoke, Config,
 };
 use imp_latency::coordinator::{heat1d, heat2d};
 use imp_latency::cost::CostModel;
@@ -96,11 +101,23 @@ COMMANDS
              banded+random SpMV under each graph partitioner, simulated per wire;
              every cell pairs makespan with the layout's PartitionQuality (edge-cut
              words, imbalance, max neighbors); --smoke emits BENCH_partition.json
+  analyze    [--smoke workloads=heat1d,heat2d,cg tune_workloads=heat1d,heat2d
+              networks=alphabeta,loggp,hier,contended alphas=0,8,64,500
+              threads=1,8,64 blocks=2,4,8 p=4 n=2048 m=16 h=16 w=16 cg_n=64
+              iters=2 beta=0.1 gamma=1 repeat=50 tune_alpha=500 tune_threads=8
+              out=results/analyze.json]
+             static plan verifier + critical-path analyzer: proves every
+             pipeline-built plan channel-safe, hazard-free and deadlock-free
+             without running the engine, checks the analytic makespan lower
+             bound against the simulated makespan on every grid cell (bit-exact
+             on stateless wires and at α=0), and audits lower-bound tuner
+             pruning against un-pruned tuning (identical winner required);
+             --smoke emits BENCH_analyze.json and fails on any violated gate
   serve      [--smoke requests=-|FILE listen=tcp:HOST:PORT|unix:PATH
               cache=results/serve_cache slots=8 workers=4 max_in_flight=64
               budget=0 search=exhaustive out=BENCH_serve.json]
              long-running tuning/simulation daemon: newline-delimited JSON
-             requests (ops tune|simulate|cache-stats) from a stdin/file batch
+             requests (ops tune|simulate|analyze|cache-stats) from a stdin/file batch
              or a TCP/Unix socket; warm cache hits cost zero engine runs,
              identical in-flight requests dedupe onto one search, compatible
              simulate requests coalesce into shared sweep grids, excess load
@@ -143,6 +160,7 @@ const COMMANDS: &[(&str, Handler)] = &[
     ("autotune", cmd_autotune),
     ("tune", cmd_tune),
     ("partition", cmd_partition),
+    ("analyze", cmd_analyze),
     ("serve", cmd_serve),
     ("dot", cmd_dot),
 ];
@@ -180,27 +198,27 @@ fn cmd_figure(args: &[&str]) -> Result<(), String> {
     let mut did = false;
 
     if all || which == "f1" {
-        print!("{}", figures::fig1(48, 4, 4));
+        print!("{}", figures::fig1(48, 4, 4)?);
         did = true;
     }
     if all || which == "f2" {
-        print!("{}", figures::fig2(64, 4, 4));
+        print!("{}", figures::fig2(64, 4, 4)?);
         did = true;
     }
     if all || which == "f3" {
-        print!("{}", figures::fig3(48, 4, 4));
+        print!("{}", figures::fig3(48, 4, 4)?);
         did = true;
     }
     if all || which == "f4" {
-        print!("{}", figures::fig4(48, 4, 4));
+        print!("{}", figures::fig4(48, 4, 4)?);
         did = true;
     }
     if all || which == "f5" {
-        print!("{}", figures::fig5(32, 3, 4));
+        print!("{}", figures::fig5(32, 3, 4)?);
         did = true;
     }
     if all || which == "f6" {
-        let (text, _) = figures::fig6(64, 6, 4);
+        let (text, _) = figures::fig6(64, 6, 4)?;
         print!("{text}");
         did = true;
     }
@@ -1291,6 +1309,324 @@ fn serve_unix_at(server: &Server, path: &str) -> Result<usize, String> {
 #[cfg(not(unix))]
 fn serve_unix_at(_server: &Server, path: &str) -> Result<usize, String> {
     Err(format!("unix sockets are unsupported on this platform (listen=unix:{path})"))
+}
+
+/// One tuning problem audited with and without lower-bound pruning.
+struct PruneAudit {
+    workload: String,
+    network: String,
+    /// Distinct candidates the un-pruned search considered.
+    considered: usize,
+    /// Candidates the pruning run skipped on analytic lower bounds.
+    pruned: usize,
+    engine_runs_full: usize,
+    engine_runs_pruned: usize,
+}
+
+/// Tune one named workload under each wire twice — un-pruned and with
+/// analytic lower-bound pruning, each search on its own in-memory cache
+/// — and fail unless both runs pick the identical winner (and agree on
+/// its makespan and the naive baseline bit-for-bit).
+fn prune_audit_for(
+    name: &str,
+    cfg: &Config,
+    networks: &[NetworkKind],
+) -> Result<Vec<PruneAudit>, String> {
+    struct V<'a> {
+        cfg: &'a Config,
+        networks: &'a [NetworkKind],
+    }
+    impl WorkloadVisitor for V<'_> {
+        type Out = Result<Vec<PruneAudit>, String>;
+        fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out {
+            let cfg = self.cfg;
+            let p: u32 = cfg.require("p")?;
+            let mach = Machine::new(
+                p,
+                cfg.require("tune_threads")?,
+                cfg.require("tune_alpha")?,
+                cfg.require("beta")?,
+                cfg.require("gamma")?,
+            );
+            let mut plain = Tuner::exhaustive();
+            let mut pruning = Tuner::exhaustive().with_pruning();
+            let mut audits = Vec::new();
+            for &kind in self.networks {
+                let base =
+                    Pipeline::new(w.clone()).procs(p).machine(mach).network(kind);
+                let full = base.clone().autotune(&mut plain).map_err(|e| e.to_string())?;
+                let full = full.tune_report().expect("autotune attaches a report").clone();
+                let cut = base.autotune(&mut pruning).map_err(|e| e.to_string())?;
+                let cut = cut.tune_report().expect("autotune attaches a report").clone();
+                if cut.chosen != full.chosen
+                    || cut.makespan != full.makespan
+                    || cut.naive_makespan != full.naive_makespan
+                {
+                    return Err(format!(
+                        "pruning changed the verdict on {}/{}: {} (makespan {}) vs {} \
+                         (makespan {})",
+                        full.workload,
+                        full.network,
+                        cut.chosen.label(),
+                        cut.makespan,
+                        full.chosen.label(),
+                        full.makespan
+                    ));
+                }
+                println!(
+                    "  {:<8} {:<22} winner {:<16} unchanged; {} of {} candidates pruned \
+                     ({} → {} engine runs)",
+                    full.workload,
+                    full.network,
+                    full.chosen.label(),
+                    cut.pruned,
+                    full.evaluations,
+                    full.engine_runs,
+                    cut.engine_runs
+                );
+                audits.push(PruneAudit {
+                    workload: full.workload.clone(),
+                    network: full.network.clone(),
+                    considered: full.evaluations,
+                    pruned: cut.pruned,
+                    engine_runs_full: full.engine_runs,
+                    engine_runs_pruned: cut.engine_runs,
+                });
+            }
+            Ok(audits)
+        }
+    }
+    dispatch_workload(name, cfg, &mut V { cfg, networks })?
+}
+
+fn analyze_to_json(
+    tag: &str,
+    plans: usize,
+    repeat: usize,
+    verify_secs: f64,
+    cells: usize,
+    min_ratio: f64,
+    mean_ratio: f64,
+    exact_cells: usize,
+    audits: &[PruneAudit],
+) -> String {
+    let verified = (plans * repeat) as f64;
+    let considered: usize = audits.iter().map(|a| a.considered).sum();
+    let pruned: usize = audits.iter().map(|a| a.pruned).sum();
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"analyze\": {tag:?},\n"));
+    s.push_str(&format!("  \"plans\": {plans},\n"));
+    s.push_str(&format!("  \"repeat\": {repeat},\n"));
+    s.push_str(&format!("  \"verify_secs\": {verify_secs},\n"));
+    s.push_str(&format!(
+        "  \"plans_per_sec\": {},\n",
+        verified / verify_secs.max(1e-12)
+    ));
+    s.push_str(&format!("  \"cells\": {cells},\n"));
+    s.push_str(&format!("  \"bound_min_ratio\": {min_ratio},\n"));
+    s.push_str(&format!("  \"bound_mean_ratio\": {mean_ratio},\n"));
+    s.push_str(&format!("  \"exact_cells\": {exact_cells},\n"));
+    s.push_str(&format!(
+        "  \"exact_fraction\": {},\n",
+        exact_cells as f64 / (cells as f64).max(1.0)
+    ));
+    s.push_str(&format!("  \"considered\": {considered},\n"));
+    s.push_str(&format!("  \"pruned\": {pruned},\n"));
+    s.push_str(&format!(
+        "  \"prune_rate\": {},\n",
+        pruned as f64 / (considered as f64).max(1.0)
+    ));
+    s.push_str("  \"tunings\": [\n");
+    for (i, a) in audits.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": {:?}, \"network\": {:?}, \"considered\": {}, \
+             \"pruned\": {}, \"engine_runs_full\": {}, \"engine_runs_pruned\": {}}}{}",
+            a.workload,
+            a.network,
+            a.considered,
+            a.pruned,
+            a.engine_runs_full,
+            a.engine_runs_pruned,
+            if i + 1 == audits.len() { "" } else { "," }
+        ));
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// The static-analysis study behind `BENCH_analyze.json`, in three
+/// gated phases:
+///
+/// 1. **Verify**: every pipeline-built plan of the grid must pass
+///    [`analysis::analyze`] with zero diagnostics, timed `repeat`× for a
+///    plans-verified/sec figure (no engine involved).
+/// 2. **Bound**: on every (plan × wire × α × threads) cell the analytic
+///    critical-path lower bound must not exceed the simulated makespan,
+///    and on stateless wires (α-β, hierarchical — and every wire at the
+///    α=0 corner rows) it must equal it bit-for-bit.
+/// 3. **Prune**: each `tune_workloads` × wire tuning problem is solved
+///    un-pruned and with lower-bound pruning; the winner must be
+///    identical and the aggregate prune rate at least 20%.
+///
+/// Any violated gate fails the run (and `make analyze-smoke` / CI).
+fn cmd_analyze(args: &[&str]) -> Result<(), String> {
+    let smoke = args.contains(&"--smoke");
+    let defaults = if smoke { preset_analyze_smoke() } else { preset_analyze() };
+    let (cfg, _) = config_from(defaults, args);
+
+    let workloads = workloads_from(&cfg)?;
+    let networks = networks_from(&cfg)?;
+    let alphas: Vec<f64> = parse_list(&cfg.require::<String>("alphas")?)?;
+    let threads: Vec<u32> = parse_list(&cfg.require::<String>("threads")?)?;
+    let blocks: Vec<u32> = parse_list(&cfg.require::<String>("blocks")?)?;
+    let beta: f64 = cfg.require("beta")?;
+    let gamma: f64 = cfg.require("gamma")?;
+    let repeat: usize = cfg.get_or("repeat", 1).max(1);
+
+    let mut inputs = Vec::new();
+    for wl in &workloads {
+        inputs.extend(sweep_inputs_for(wl, &cfg, &blocks)?);
+    }
+
+    // Phase 1: the verifier itself — every built plan must come back
+    // clean, and quickly (the whole point is running *before* the
+    // engine).
+    let t0 = std::time::Instant::now();
+    for _ in 0..repeat {
+        for input in &inputs {
+            let report = analysis::analyze(&input.graph, &input.plan);
+            if !report.is_clean() {
+                return Err(format!(
+                    "pipeline-built plan failed static analysis: {}",
+                    report.summary()
+                ));
+            }
+        }
+    }
+    let verify_secs = t0.elapsed().as_secs_f64();
+    let plans_per_sec = (inputs.len() * repeat) as f64 / verify_secs.max(1e-12);
+    println!(
+        "analyze: {} plans statically verified clean, {repeat}× in {verify_secs:.3}s \
+         ({plans_per_sec:.0} plans/sec)",
+        inputs.len()
+    );
+
+    // Phase 2: the bound against the engine on every regime cell.
+    let grid = sweep::SweepGrid {
+        inputs,
+        networks: networks.clone(),
+        alphas,
+        threads,
+        beta,
+        gamma,
+        jobs: cfg.get_or("jobs", 0),
+    };
+    let cells = sweep::run(&grid)?;
+    let (mut min_ratio, mut sum_ratio, mut exact_cells) = (f64::INFINITY, 0.0, 0usize);
+    let mut k = 0;
+    for input in &grid.inputs {
+        for kind in &grid.networks {
+            for &alpha in &grid.alphas {
+                for &t in &grid.threads {
+                    let cell = &cells[k];
+                    k += 1;
+                    let tag = format!(
+                        "{}/{}/{}/α={alpha}/t={t}",
+                        input.workload,
+                        input.strategy,
+                        kind.label()
+                    );
+                    let mach = Machine::new(
+                        input.plan.per_proc.len() as u32,
+                        t,
+                        alpha,
+                        beta * input.words_per_value as f64,
+                        gamma,
+                    );
+                    let net = kind.build_for(&mach, input.layout.as_ref());
+                    let cp = analysis::critical_path(
+                        &input.graph,
+                        &input.plan,
+                        &mach,
+                        net.as_ref(),
+                        input.cost.as_ref(),
+                    )
+                    .map_err(|e| format!("{tag}: {e}"))?;
+                    if cp.makespan > cell.makespan * (1.0 + 1e-9) {
+                        return Err(format!(
+                            "{tag}: lower bound {} exceeds simulated makespan {}",
+                            cp.makespan, cell.makespan
+                        ));
+                    }
+                    if cp.exact_wire {
+                        exact_cells += 1;
+                        if (cp.makespan - cell.makespan).abs()
+                            > 1e-9 * cell.makespan.max(1.0)
+                        {
+                            return Err(format!(
+                                "{tag}: stateless-wire bound {} must equal the simulated \
+                                 makespan {}",
+                                cp.makespan, cell.makespan
+                            ));
+                        }
+                    }
+                    let ratio = cp.makespan / cell.makespan.max(1e-12);
+                    min_ratio = min_ratio.min(ratio);
+                    sum_ratio += ratio;
+                }
+            }
+        }
+    }
+    let mean_ratio = sum_ratio / (cells.len() as f64).max(1.0);
+    if exact_cells == 0 {
+        return Err("no stateless-wire cells: the exactness gate never ran".into());
+    }
+    println!(
+        "bound ≤ makespan on all {} cells (tightness: min {min_ratio:.3}, mean \
+         {mean_ratio:.3}; {exact_cells} cells bit-exact)",
+        cells.len()
+    );
+
+    // Phase 3: pruning must speed the tuner up without touching its
+    // verdict.
+    let tune_workloads: Vec<String> = cfg
+        .require::<String>("tune_workloads")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let mut audits = Vec::new();
+    for wl in &tune_workloads {
+        audits.extend(prune_audit_for(wl, &cfg, &networks)?);
+    }
+    let considered: usize = audits.iter().map(|a| a.considered).sum();
+    let pruned: usize = audits.iter().map(|a| a.pruned).sum();
+    if pruned * 5 < considered {
+        return Err(format!(
+            "prune rate {pruned}/{considered} below the 20% gate"
+        ));
+    }
+    println!(
+        "pruning: {pruned} of {considered} candidates skipped ({:.0}%), every winner \
+         unchanged",
+        100.0 * pruned as f64 / considered as f64
+    );
+
+    let out = cfg.get_or("out", "results/analyze.json".to_string());
+    let tag = if smoke { "smoke" } else { "analyze" };
+    let json = analyze_to_json(
+        tag,
+        grid.inputs.len(),
+        repeat,
+        verify_secs,
+        cells.len(),
+        min_ratio,
+        mean_ratio,
+        exact_cells,
+        &audits,
+    );
+    write_json_report(&out, &json)
 }
 
 /// The serving story.  `--smoke` drives the scripted cold → warm →

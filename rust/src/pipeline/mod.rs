@@ -50,6 +50,7 @@ pub use workloads::{
     CgPhaseCost, ConjugateGradient, GraphWorkload, Heat1d, Heat2d, Moore2d, RowFillCost, Spmv,
 };
 
+use crate::analysis::AnalysisError;
 use crate::config::Config;
 use crate::coordinator::{run_and_verify_with, ValueSemantics};
 use crate::graph::TaskGraph;
@@ -157,6 +158,9 @@ pub enum PipelineError {
     /// The builder configuration is incomplete or inconsistent (e.g.
     /// [`Transformed::simulate_configured`] without a machine).
     Config(String),
+    /// The built plan failed static verification — it can deadlock or
+    /// consumes values it never produces ([`crate::analysis::verify`]).
+    Analysis(AnalysisError),
 }
 
 impl std::fmt::Display for PipelineError {
@@ -166,6 +170,7 @@ impl std::fmt::Display for PipelineError {
             PipelineError::Transform(m) => write!(f, "transformation: {m}"),
             PipelineError::Verify(m) => write!(f, "verification: {m}"),
             PipelineError::Config(m) => write!(f, "configuration: {m}"),
+            PipelineError::Analysis(e) => write!(f, "static analysis: {e}"),
         }
     }
 }
@@ -405,6 +410,13 @@ impl<W: Workload> Pipeline<W> {
                 (plan, Some(b))
             }
         };
+        // Pre-flight: statically prove the plan channel-safe, hazard-free
+        // and deadlock-free before anything simulates, caches, or executes
+        // it.  Rides the same switch as the Theorem-1 check so
+        // `skip_check` still trades safety for transform speed.
+        if self.check {
+            crate::analysis::verify(&graph, &plan).map_err(PipelineError::Analysis)?;
+        }
         let layout = self.resolved_partitioning();
         let cost = self.cost.unwrap_or_else(|| self.workload.cost_model());
         Ok(Transformed {
@@ -617,7 +629,24 @@ impl<W: Workload> Transformed<W> {
     /// hints supply the per-task cost model (unless overridden with
     /// [`Pipeline::costs`]) and scale `beta` (words per value), and the
     /// wire follows the configured [`Pipeline::network`].
+    ///
+    /// # Panics
+    ///
+    /// Panics with the [`PipelineError::Analysis`] diagnosis if the plan
+    /// deadlocks — impossible for pipeline-built plans unless the check
+    /// was skipped; [`Transformed::simulate_checked`] is the fallible
+    /// form.
     pub fn simulate(&self, machine: &Machine) -> RunReport {
+        self.simulate_checked(machine).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`Transformed::simulate`]: a plan the engine cannot
+    /// complete (possible only when the pipeline's static pre-flight was
+    /// skipped or the plan was built by hand) yields a structured
+    /// [`PipelineError::Analysis`] whose diagnostics name the cause —
+    /// the unmatched channel, the hazard, the stuck frontier — instead
+    /// of the engine's bare deadlock verdict.
+    pub fn simulate_checked(&self, machine: &Machine) -> Result<RunReport, PipelineError> {
         assert_eq!(
             machine.nprocs, self.procs,
             "machine has {} procs but the pipeline was built for {}",
@@ -628,17 +657,31 @@ impl<W: Workload> Transformed<W> {
             ..*machine
         };
         let mut network = self.network.build_for(&m, Some(&self.layout));
-        let r = try_simulate(&self.graph, &self.plan, &m, network.as_mut(), self.cost.as_ref(), false)
-            .expect("pipeline-built plans are deadlock-free");
+        let r = match try_simulate(
+            &self.graph,
+            &self.plan,
+            &m,
+            network.as_mut(),
+            self.cost.as_ref(),
+            false,
+        ) {
+            Ok(r) => r,
+            Err(_) => {
+                // Re-diagnose statically so the error explains *why*
+                // rather than just reporting where the engine stopped.
+                let report = crate::analysis::analyze(&self.graph, &self.plan);
+                return Err(PipelineError::Analysis(report.into_error()));
+            }
+        };
         let max_wait = r.proc_wait.iter().copied().fold(0.0, f64::max);
-        self.report(
+        Ok(self.report(
             RunTime::Simulated {
                 total: r.total_time,
                 max_wait,
                 utilization: r.utilization(&m),
             },
             Verification::NotChecked,
-        )
+        ))
     }
 
     /// [`Transformed::simulate`] on the machine configured with
@@ -817,6 +860,54 @@ mod tests {
             .unwrap();
         let err = t.simulate_configured().unwrap_err();
         assert!(err.to_string().contains("configuration"));
+    }
+
+    #[test]
+    fn simulate_checked_diagnoses_a_hand_broken_plan() {
+        // Dropping a Send leaves the peer's Recv waiting forever.  The
+        // engine would report a bare deadlock; the checked path must
+        // instead surface the static diagnosis naming the lost message.
+        let mut t = Pipeline::new(Heat1d::new(32, 4)).procs(2).naive().transform().unwrap();
+        let mut broken = (*t.plan).clone();
+        let phases = &mut broken.per_proc[0].phases;
+        let send = phases
+            .iter()
+            .position(|ph| matches!(ph, crate::sim::Phase::Send { .. }))
+            .expect("naive plans communicate");
+        phases.remove(send);
+        t.plan = Arc::new(broken);
+        let err = t.simulate_checked(&Machine::high_latency(2, 4)).unwrap_err();
+        let PipelineError::Analysis(e) = &err else {
+            panic!("expected an analysis error, got {err:?}");
+        };
+        assert!(e.fatal.iter().any(|d| d.code() == "unmatched-recv"), "{e}");
+        assert!(err.to_string().contains("static analysis"), "{err}");
+    }
+
+    #[test]
+    fn transform_preflight_verifies_every_built_plan() {
+        // The pre-flight runs on the default (checked) path and passes on
+        // everything the pipeline itself builds — including level-0 CA.
+        for strategy in [Strategy::Naive, Strategy::Overlap, Strategy::Ca] {
+            let t = Pipeline::new(Heat1d::new(48, 6))
+                .procs(3)
+                .strategy(strategy)
+                .block(3)
+                .halo(HaloMode::Level0Only)
+                .transform()
+                .unwrap();
+            // And the skip_check path still builds the identical plan.
+            let unchecked = Pipeline::new(Heat1d::new(48, 6))
+                .procs(3)
+                .strategy(strategy)
+                .block(3)
+                .halo(HaloMode::Level0Only)
+                .skip_check()
+                .transform()
+                .unwrap();
+            assert_eq!(t.plan.label, unchecked.plan.label, "{strategy:?}");
+            assert_eq!(t.plan.messages(), unchecked.plan.messages(), "{strategy:?}");
+        }
     }
 
     #[test]

@@ -16,7 +16,8 @@
 //! ```
 //!
 //! - `id` (required): caller-chosen tag, echoed verbatim in the response.
-//! - `op` (required): `"tune"`, `"simulate"`, or `"cache-stats"`.
+//! - `op` (required): `"tune"`, `"simulate"`, `"analyze"`, or
+//!   `"cache-stats"`.
 //! - every other field lands in a per-request [`Config`] and overrides
 //!   the server's defaults: `workload` (`heat1d|heat2d|moore2d|spmv|cg`),
 //!   problem size (`n`/`r`, `h`/`w`, `cg_n`/`iters`), steps `m`, procs
@@ -24,8 +25,8 @@
 //!   (`alphabeta|loggp|hier|contended`).  `tune` additionally honours
 //!   `search` (`exhaustive|golden|coord`) and a per-request `budget`
 //!   (max engine runs; `0` = unlimited, always clamped to the server's
-//!   own ceiling).  `simulate` honours `strategy` (`naive|overlap|ca`)
-//!   and block factor `b`.
+//!   own ceiling).  `simulate` and `analyze` honour `strategy`
+//!   (`naive|overlap|ca`) and block factor `b`.
 //!
 //! # Response schema
 //!
@@ -47,6 +48,10 @@
 //!   waited for that result instead of searching again).
 //! - `simulate` payload: `strategy`, `makespan`, `messages`, `words`,
 //!   and `batch` — how many compatible requests shared one sweep grid.
+//! - `analyze` payload: `strategy`, `procs`, `phases`, `deadlock_free`,
+//!   `fatal`/`warnings` diagnostic counts, and the analytic makespan
+//!   `lower_bound` with its `exact` flag ([`crate::analysis`]); the op
+//!   never runs the engine.
 //! - `cache-stats` payload: `entries`, `shards`, `hits`, `misses`,
 //!   `deduped`, `shed`, `in_flight`.
 //! - `latency_ms`: wall time from wave start to this response.
@@ -106,6 +111,9 @@ pub enum Op {
     Tune,
     /// Simulate one configuration (batched into shared sweep grids).
     Simulate,
+    /// Statically verify one configuration and report its analytic
+    /// makespan lower bound — never runs the engine.
+    Analyze,
     /// Report cache/admission counters; never touches the engine.
     CacheStats,
 }
@@ -115,8 +123,9 @@ impl Op {
         match tag {
             "tune" => Ok(Op::Tune),
             "simulate" => Ok(Op::Simulate),
+            "analyze" => Ok(Op::Analyze),
             "cache-stats" => Ok(Op::CacheStats),
-            other => Err(format!("unknown op {other:?} (tune|simulate|cache-stats)")),
+            other => Err(format!("unknown op {other:?} (tune|simulate|analyze|cache-stats)")),
         }
     }
 
@@ -124,6 +133,7 @@ impl Op {
         match self {
             Op::Tune => "tune",
             Op::Simulate => "simulate",
+            Op::Analyze => "analyze",
             Op::CacheStats => "cache-stats",
         }
     }
@@ -207,6 +217,20 @@ pub enum Payload {
         /// Size of the coalesced sweep grid this cell ran in.
         batch: usize,
     },
+    Analyze {
+        strategy: String,
+        procs: usize,
+        phases: usize,
+        deadlock_free: bool,
+        fatal: usize,
+        warnings: usize,
+        /// Analytic critical-path makespan lower bound under the
+        /// request's machine and wire.
+        lower_bound: f64,
+        /// True when the wire is stateless and the bound equals the
+        /// engine's makespan exactly.
+        exact: bool,
+    },
     CacheStats {
         entries: usize,
         shards: usize,
@@ -252,6 +276,23 @@ impl Response {
                 s.push_str(&format!(
                     "\"status\": \"ok\", \"strategy\": {strategy:?}, \"makespan\": {makespan}, \
                      \"messages\": {messages}, \"words\": {words}, \"batch\": {batch}"
+                ));
+            }
+            Ok(Payload::Analyze {
+                strategy,
+                procs,
+                phases,
+                deadlock_free,
+                fatal,
+                warnings,
+                lower_bound,
+                exact,
+            }) => {
+                s.push_str(&format!(
+                    "\"status\": \"ok\", \"strategy\": {strategy:?}, \"procs\": {procs}, \
+                     \"phases\": {phases}, \"deadlock_free\": {deadlock_free}, \
+                     \"fatal\": {fatal}, \"warnings\": {warnings}, \
+                     \"lower_bound\": {lower_bound}, \"exact\": {exact}"
                 ));
             }
             Ok(Payload::CacheStats { entries, shards, hits, misses, deduped, shed, in_flight }) => {
@@ -353,6 +394,28 @@ mod tests {
         // Round-trips through our own parser.
         let fields = parse_flat_object(&line).unwrap();
         assert!(fields.iter().any(|(k, v)| k == "engine_runs" && v == "3"));
+
+        let analyzed = Response {
+            id: "d".into(),
+            latency_ms: 0.2,
+            result: Ok(Payload::Analyze {
+                strategy: "ca(b=4)".into(),
+                procs: 4,
+                phases: 28,
+                deadlock_free: true,
+                fatal: 0,
+                warnings: 0,
+                lower_bound: 123.5,
+                exact: true,
+            }),
+        };
+        let line = analyzed.to_json();
+        for needle in
+            ["\"deadlock_free\": true", "\"lower_bound\": 123.5", "\"exact\": true"]
+        {
+            assert!(line.contains(needle), "{line}");
+        }
+        assert!(parse_flat_object(&line).is_ok(), "{line}");
 
         let over = Response {
             id: "b".into(),

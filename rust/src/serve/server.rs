@@ -255,6 +255,7 @@ impl Server {
         match req.op {
             Op::Tune => self.handle_tune(req),
             Op::Simulate => self.handle_simulate(req),
+            Op::Analyze => self.handle_analyze(req),
             Op::CacheStats => Ok(self.cache_stats_payload()),
         }
     }
@@ -469,6 +470,65 @@ impl Server {
             words: cell.words,
             batch: 1,
         })
+    }
+
+    /// Statically verify one configuration ([`crate::analysis`]) and
+    /// report its analytic makespan lower bound — the engine never runs.
+    fn handle_analyze(&self, req: &Request) -> Result<Payload, RequestError> {
+        struct Visit<'a> {
+            params: &'a Config,
+        }
+        impl WorkloadVisitor for Visit<'_> {
+            type Out = Result<Payload, String>;
+            fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out {
+                let machine = machine_from(self.params)?;
+                let network =
+                    NetworkKind::parse(&self.params.get_or("network", "alphabeta".to_string()))?;
+                let mut pipe =
+                    Pipeline::new(w).procs(machine.nprocs).strategy(strategy_from(self.params)?);
+                if let Some(b) = self.params.get("b") {
+                    pipe = pipe.block(b.parse().map_err(|_| format!("bad block factor {b:?}"))?);
+                }
+                let t = pipe.transform().map_err(|e| e.to_string())?;
+                let input = t.sweep_input();
+                let report = crate::analysis::analyze(&input.graph, &input.plan);
+                // Same effective machine a sweep cell would run: β scaled
+                // by words-per-value, wire built on the plan's layout.
+                let mach = Machine::new(
+                    input.plan.per_proc.len() as u32,
+                    machine.threads,
+                    machine.alpha,
+                    machine.beta * input.words_per_value as f64,
+                    machine.gamma,
+                );
+                let net = network.build_for(&mach, input.layout.as_ref());
+                let (lower_bound, exact) = match crate::analysis::critical_path(
+                    &input.graph,
+                    &input.plan,
+                    &mach,
+                    net.as_ref(),
+                    input.cost.as_ref(),
+                ) {
+                    Ok(cp) => (cp.makespan, cp.exact_wire),
+                    Err(_) => (0.0, false),
+                };
+                Ok(Payload::Analyze {
+                    strategy: input.strategy.to_string(),
+                    procs: report.procs,
+                    phases: report.phases,
+                    deadlock_free: report.deadlock_free(),
+                    fatal: report.fatal_count(),
+                    warnings: report.warning_count(),
+                    lower_bound,
+                    exact,
+                })
+            }
+        }
+        let params = self.merged(&req.params);
+        let workload: String = params.get_or("workload", "heat1d".to_string());
+        dispatch_workload(&workload, &params, &mut Visit { params: &params })
+            .map_err(RequestError::Failed)?
+            .map_err(RequestError::Failed)
     }
 
     /// Lower one simulate request to engine terms.  Runs on the wave's
@@ -1103,6 +1163,47 @@ mod tests {
         }
         assert_eq!(server.stats().batches.load(Ordering::Relaxed), 1);
         assert_eq!(server.stats().batch_cells.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn analyze_op_verifies_without_the_engine_and_bounds_the_simulated_makespan() {
+        let server = memory_server(1);
+        let common = r#""workload": "heat1d", "n": 64, "m": 8, "strategy": "ca", "b": 4,
+                        "p": 2, "threads": 2, "alpha": 50.0, "beta": 1.0, "gamma": 1.0"#
+            .replace('\n', " ");
+        let analyzed = server
+            .handle(&req(&format!("{{\"id\": \"a\", \"op\": \"analyze\", {common}}}")))
+            .expect("analyzable");
+        let (lb, exact) = match &analyzed {
+            Payload::Analyze { deadlock_free, fatal, lower_bound, exact, procs, .. } => {
+                assert!(*deadlock_free, "pipeline-built plan must verify");
+                assert_eq!(*fatal, 0);
+                assert_eq!(*procs, 2);
+                assert!(*lower_bound > 0.0);
+                (*lower_bound, *exact)
+            }
+            other => panic!("unexpected payload {other:?}"),
+        };
+        // Analysis alone runs no simulations.
+        assert_eq!(server.stats().engine_runs.load(Ordering::Relaxed), 0);
+        assert_eq!(server.stats().batches.load(Ordering::Relaxed), 0);
+        // On the stateless α-β wire the bound is the engine's makespan.
+        assert!(exact, "alphabeta wire is stateless");
+        let simulated = server
+            .handle(&req(&format!("{{\"id\": \"s\", \"op\": \"simulate\", {common}}}")))
+            .expect("simulable");
+        match &simulated {
+            Payload::Simulate { makespan, .. } => {
+                assert!(
+                    (lb - makespan).abs() <= 1e-9 * makespan.max(1.0),
+                    "exact bound {lb} vs simulated {makespan}"
+                );
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+        // Bad configurations error without panicking the daemon.
+        let r = server.handle(&req(r#"{"id": "x", "op": "analyze", "strategy": "warp"}"#));
+        assert!(matches!(r, Err(RequestError::Failed(_))), "{r:?}");
     }
 
     #[test]

@@ -50,6 +50,7 @@ pub use analytic::{
     SuperstepCosts,
 };
 pub use compile::{compile_count, simulate_compiled, CompiledPlan, EngineScratch};
+pub(crate) use discrete::run_compute;
 pub use discrete::{BusySpan, SimResult};
 pub use engine::{simulate, try_simulate, ScaledCost, SimError, TaskCostModel, UniformCost};
 pub use machine::Machine;

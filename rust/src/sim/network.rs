@@ -66,6 +66,25 @@ pub trait NetworkModel: Send {
         let _ = (from, to);
         None
     }
+
+    /// A state-independent lower bound on the wire delay of a
+    /// `words`-word message on the `(from, to)` channel:
+    /// `deliver(from, to, words, post) ≥ post + message_lower_bound(..)`
+    /// must hold for every post time and every prior traffic history.
+    /// Stateless wires return their exact cost (so the static analyzer's
+    /// critical path ([`crate::analysis::critical_path`]) is exact);
+    /// stateful wires drop the history-dependent terms (injection gaps,
+    /// NIC queueing).  `0.0` is always sound and is the default when no
+    /// per-channel constants are resolvable.
+    fn message_lower_bound(&self, from: u32, to: u32, words: usize) -> f64 {
+        if words == 0 {
+            return 0.0;
+        }
+        match self.channel_cost(from, to) {
+            Some((a, b)) => a + b * words as f64,
+            None => 0.0,
+        }
+    }
 }
 
 /// The classical postal model: every message arrives `α + β·words` after
@@ -143,6 +162,16 @@ impl NetworkModel for LogGp {
 
     fn reset(&mut self) {
         self.next_inject.clear();
+    }
+
+    fn message_lower_bound(&self, _from: u32, _to: u32, words: usize) -> f64 {
+        if words == 0 {
+            return 0.0;
+        }
+        // Drop the injection gap (inject ≥ post always): what remains is
+        // the state-free flight time of a single message.
+        self.overhead + self.latency + words.saturating_sub(1) as f64 * self.per_word_gap
+            + self.overhead
     }
 }
 
@@ -243,6 +272,15 @@ impl NetworkModel for Contended {
 
     fn reset(&mut self) {
         self.nic_free.clear();
+    }
+
+    fn message_lower_bound(&self, _from: u32, _to: u32, words: usize) -> f64 {
+        if words == 0 {
+            return 0.0;
+        }
+        // Drop the NIC queue (start ≥ post always): flight time plus the
+        // message's own link occupancy remain.
+        self.alpha + self.beta * words as f64
     }
 }
 
@@ -476,6 +514,35 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn message_lower_bound_never_exceeds_deliver() {
+        let mach = m();
+        for kind in NetworkKind::all_default() {
+            let mut model = kind.build(&mach);
+            // Burst traffic so the stateful wires accumulate queueing: the
+            // bound must stay below every actual delivery regardless.
+            for i in 0..30u32 {
+                let (from, to) = (i % 4, (i + 1) % 4);
+                let words = (i as usize % 5) + 1;
+                let post = (i as f64) * 0.25;
+                let lb = model.message_lower_bound(from, to, words);
+                let arr = model.deliver(from, to, words, post);
+                assert!(
+                    arr >= post + lb - 1e-12,
+                    "{}: deliver {arr} < post {post} + lb {lb}",
+                    kind.label()
+                );
+            }
+            // Where per-channel constants resolve, the bound is exact.
+            let model = kind.build(&mach);
+            if let Some((a, b)) = model.channel_cost(0, 1) {
+                assert_eq!(model.message_lower_bound(0, 1, 7), a + b * 7.0);
+            }
+            // Zero-word messages never touch the wire.
+            assert_eq!(model.message_lower_bound(0, 1, 0), 0.0);
         }
     }
 

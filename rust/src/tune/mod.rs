@@ -123,11 +123,15 @@ pub struct Tuner {
     /// pipeline (all strategies, both halos, power-of-two blocks seeded
     /// with the §2.1 prediction).
     pub space: Option<TuningSpace>,
+    /// Branch-and-bound pruning via the analytic critical-path lower
+    /// bound ([`crate::analysis::input_lower_bound`]) — see
+    /// [`Tuner::with_pruning`].  Off by default.
+    pub prune: bool,
 }
 
 impl Tuner {
     pub fn new(search: Box<dyn SearchStrategy>, cache: TuningCache) -> Self {
-        Tuner { search, cache, space: None }
+        Tuner { search, cache, space: None, prune: false }
     }
 
     /// Exhaustive search, in-memory cache — the reference setup.
@@ -161,6 +165,22 @@ impl Tuner {
     /// Use a file-backed cache at `path`.
     pub fn with_cache_path(mut self, path: impl Into<std::path::PathBuf>) -> Self {
         self.cache = TuningCache::with_path(path);
+        self
+    }
+
+    /// Prune candidates branch-and-bound style: each batch first scores
+    /// analytic makespan lower bounds
+    /// ([`crate::analysis::input_lower_bound`]), simulates the
+    /// best-bounded candidate to establish an incumbent, and skips every
+    /// candidate whose *lower bound* already exceeds the incumbent by
+    /// more than the plateau tolerance — its true makespan can only be
+    /// worse, so it can never win.  The exhaustive search returns the
+    /// identical winner with or without pruning (the naive baseline is
+    /// never pruned, so reports stay comparable too); pruned candidates
+    /// are counted in [`TuneReport::pruned`].  Off by default so
+    /// engine-run accounting stays exact for budgeted searches.
+    pub fn with_pruning(mut self) -> Self {
+        self.prune = true;
         self
     }
 }
@@ -291,6 +311,7 @@ pub fn tune_pipeline<W: Workload + Clone>(
             model_b_continuous,
             evaluations: entry.evaluations,
             engine_runs: 0,
+            pruned: 0,
             cache_hit: true,
             search: entry.search.clone(),
             wall_secs: 0.0,
@@ -318,6 +339,9 @@ pub fn tune_pipeline<W: Workload + Clone>(
     // collected so an all-panicked search can explain itself.
     let panics: std::rc::Rc<std::cell::RefCell<Vec<String>>> = Default::default();
     let panics_in = std::rc::Rc::clone(&panics);
+    let prune = tuner.prune;
+    let pruned: std::rc::Rc<std::cell::Cell<usize>> = Default::default();
+    let pruned_in = std::rc::Rc::clone(&pruned);
     let mut ev = Evaluator::new(|cands: &[Candidate]| {
         // Transformation failures mark a candidate infeasible; every
         // feasible plan joins one sweep grid so the whole batch fans
@@ -364,6 +388,58 @@ pub fn tune_pipeline<W: Workload + Clone>(
         }
         if feasible.is_empty() {
             return Ok(results);
+        }
+        // Branch-and-bound (opt-in): establish an incumbent by simulating
+        // the candidate with the smallest analytic lower bound, then drop
+        // every candidate whose *bound* already exceeds the incumbent by
+        // more than the 1% plateau tolerance — its true makespan is at
+        // least the bound, so it sits outside any plateau containing the
+        // winner.  Pruned candidates score `None` (like infeasible ones)
+        // and cost zero engine runs.  The naive baseline is exempt: it is
+        // the report's comparison point and must always be truly scored.
+        if prune && feasible.len() > 1 {
+            let bounds: Vec<Option<f64>> = feasible
+                .iter()
+                .map(|(_, input)| crate::analysis::input_lower_bound(input, &machine, network))
+                .collect();
+            let seed = bounds
+                .iter()
+                .enumerate()
+                .filter_map(|(j, lb)| lb.map(|v| (j, v)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|(j, _)| j);
+            if let Some(seed) = seed {
+                let (si, seed_input) = &feasible[seed];
+                let seed_grid = SweepGrid {
+                    inputs: vec![seed_input.clone()],
+                    networks: vec![network],
+                    alphas: vec![machine.alpha],
+                    threads: vec![machine.threads],
+                    beta: machine.beta,
+                    gamma: machine.gamma,
+                    jobs: 0,
+                };
+                let incumbent = sweep::run(&seed_grid).map_err(TuneError::Sim)?[0].makespan;
+                results[*si].1 = Some(incumbent);
+                let cutoff = incumbent * 1.01;
+                let mut kept = Vec::with_capacity(feasible.len());
+                for (j, pair) in feasible.into_iter().enumerate() {
+                    if j == seed {
+                        continue; // already scored as the incumbent
+                    }
+                    let is_naive = cands[pair.0].strategy == crate::pipeline::Strategy::Naive;
+                    match bounds[j] {
+                        Some(lb) if lb > cutoff && !is_naive => {
+                            pruned_in.set(pruned_in.get() + 1);
+                        }
+                        _ => kept.push(pair),
+                    }
+                }
+                feasible = kept;
+                if feasible.is_empty() {
+                    return Ok(results);
+                }
+            }
         }
         let grid = SweepGrid {
             inputs: feasible.iter().map(|(_, input)| input.clone()).collect(),
@@ -412,6 +488,7 @@ pub fn tune_pipeline<W: Workload + Clone>(
         model_b_continuous,
         evaluations: ev.evaluations(),
         engine_runs: ev.engine_runs(),
+        pruned: pruned.get(),
         cache_hit: false,
         search: search_label.clone(),
         wall_secs,
@@ -588,6 +665,38 @@ mod tests {
         assert!(r.evaluated.iter().any(|(c, _)| *c == out.chosen), "{r:?}");
         let best = r.evaluated.iter().map(|&(_, s)| s).fold(f64::INFINITY, f64::min);
         assert!(r.makespan <= best * 1.01 + 1e-9, "{r:?}");
+    }
+
+    #[test]
+    fn pruning_skips_candidates_but_never_changes_the_winner() {
+        // On the default α/β wire the analytic bound is exact, so the
+        // incumbent-relative cutoff prunes everything outside the 1%
+        // plateau (except the exempt naive baseline) — a large share of
+        // the space — while the verdict stays identical to the
+        // un-pruned exhaustive search.
+        let mach = Machine::high_latency(2, 8);
+        let mut plain = Tuner::exhaustive();
+        let full = tune_pipeline(&base(128, 8, mach), &mut plain).unwrap();
+        assert_eq!(full.report.pruned, 0, "pruning is opt-in");
+
+        let mut pruning = Tuner::exhaustive().with_pruning();
+        let out = tune_pipeline(&base(128, 8, mach), &mut pruning).unwrap();
+        let r = &out.report;
+        assert_eq!(out.chosen, full.chosen, "pruning must not change the winner");
+        assert_eq!(r.makespan, full.report.makespan);
+        assert_eq!(r.naive_makespan, full.report.naive_makespan);
+        let considered = r.engine_runs + r.pruned;
+        assert!(
+            r.pruned * 5 >= considered,
+            "expected ≥20% of {considered} candidates pruned, got {}",
+            r.pruned
+        );
+        assert!(r.engine_runs < full.report.engine_runs, "{r:?}");
+        assert!(r.summary().contains("pruned"), "{}", r.summary());
+        // The pruned verdict is cached like any other.
+        let again = tune_pipeline(&base(128, 8, mach), &mut pruning).unwrap();
+        assert!(again.report.cache_hit);
+        assert_eq!(again.chosen, out.chosen);
     }
 
     #[test]

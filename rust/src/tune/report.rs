@@ -31,6 +31,9 @@ pub struct TuneReport {
     pub evaluations: usize,
     /// Engine simulations actually executed (0 on a cache hit).
     pub engine_runs: usize,
+    /// Candidates skipped by analytic lower-bound pruning
+    /// ([`super::Tuner::with_pruning`]); 0 when pruning is off.
+    pub pruned: usize,
     /// Whether the verdict came from the [`super::TuningCache`].
     pub cache_hit: bool,
     /// Search strategy tag ("exhaustive", "golden", "coord").
@@ -55,9 +58,14 @@ impl TuneReport {
         } else {
             format!("search={}", self.search)
         };
+        let pruned = if self.pruned > 0 {
+            format!(" / {} pruned", self.pruned)
+        } else {
+            String::new()
+        };
         format!(
             "tune {:<8} {:<22} → {:<16} makespan {:.1} (naive {:.1}, {:.2}x)  \
-             {} evals / {} engine runs in {:.3}s [{source}]",
+             {} evals / {} engine runs{pruned} in {:.3}s [{source}]",
             self.workload,
             self.network,
             self.chosen.label(),
@@ -87,6 +95,7 @@ pub struct TuneRow {
     pub speedup: f64,
     pub evaluations: usize,
     pub engine_runs: usize,
+    pub pruned: usize,
     pub cache_hit: bool,
     pub wall_secs: f64,
 }
@@ -104,6 +113,7 @@ impl TuneRow {
             speedup: r.speedup(),
             evaluations: r.evaluations,
             engine_runs: r.engine_runs,
+            pruned: r.pruned,
             cache_hit: r.cache_hit,
             wall_secs: r.wall_secs,
         }
@@ -121,7 +131,7 @@ pub fn rows_to_json(tag: &str, rows: &[TuneRow], hits: usize, misses: usize) -> 
         s.push_str(&format!(
             "    {{\"workload\": {:?}, \"network\": {:?}, \"search\": {:?}, \
              \"config\": {:?}, \"block\": {}, \"makespan\": {}, \"naive_makespan\": {}, \
-             \"speedup\": {}, \"evaluations\": {}, \"engine_runs\": {}, \
+             \"speedup\": {}, \"evaluations\": {}, \"engine_runs\": {}, \"pruned\": {}, \
              \"cache_hit\": {}, \"wall_secs\": {}}}{}",
             r.workload,
             r.network,
@@ -133,6 +143,7 @@ pub fn rows_to_json(tag: &str, rows: &[TuneRow], hits: usize, misses: usize) -> 
             r.speedup,
             r.evaluations,
             r.engine_runs,
+            r.pruned,
             r.cache_hit,
             r.wall_secs,
             if i + 1 == rows.len() { "" } else { "," }
@@ -160,6 +171,7 @@ mod tests {
             model_b_continuous: 63.2,
             evaluations: 12,
             engine_runs: 11,
+            pruned: 3,
             cache_hit: false,
             search: "exhaustive".into(),
             wall_secs: 0.025,
@@ -175,6 +187,7 @@ mod tests {
         assert!(s.contains("ca(b=8)"));
         assert!(s.contains("4.00x"));
         assert!(s.contains("search=exhaustive"));
+        assert!(s.contains("3 pruned"), "{s}");
         assert_eq!(r.speedup(), 4.0);
         let mut hit = report();
         hit.cache_hit = true;
@@ -188,6 +201,7 @@ mod tests {
         assert!(json.contains("\"tune\": \"smoke\""));
         assert!(json.contains("\"config\": \"ca(b=8)\""));
         assert!(json.contains("\"speedup\": 4"));
+        assert!(json.contains("\"pruned\": 3"));
         assert!(json.contains("\"cache\": {\"hits\": 3, \"misses\": 1, \"hit_rate\": 0.75}"));
         assert!(!json.contains("},\n  ]"));
         let empty = rows_to_json("smoke", &[], 0, 0);

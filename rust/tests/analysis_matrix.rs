@@ -1,0 +1,257 @@
+//! The static-analysis mutation matrix: the verifier must agree with
+//! the engine on every workload the crate ships, and no corrupted plan
+//! may pass as clean.
+//!
+//! For every workload × {naive, overlap, CA} × processor count the test
+//! first pins the *healthy* contract — pipeline-built plans analyze
+//! clean, their static deadlock verdict matches `try_simulate`, and the
+//! analytic critical path equals the simulated makespan on the
+//! stateless α-β wire (and still at α=0) while lower-bounding every
+//! other wire.  It then corrupts each plan four ways — drop a `Recv`,
+//! re-aim a `Recv` at the wrong peer, hoist a dependent `Compute` above
+//! its inputs, inflate a `Send`'s word count — and asserts that static
+//! analysis never calls the corrupted plan clean and that its deadlock
+//! verdict (including the stuck frontier) still matches the engine's.
+
+use std::sync::Arc;
+
+use imp_latency::analysis::{analyze, critical_path, deadlock_check, verify, DeadlockVerdict};
+use imp_latency::graph::{ProcId, TaskGraph};
+use imp_latency::pipeline::{
+    ConjugateGradient, Heat1d, Heat2d, Moore2d, Pipeline, Spmv, Strategy, Workload,
+};
+use imp_latency::sim::{
+    try_simulate, ExecPlan, Machine, NetworkKind, Phase, SimError, UniformCost,
+};
+use imp_latency::stencil::CsrMatrix;
+
+/// Drop the first `Recv` phase anywhere in the plan.
+fn drop_a_recv(plan: &ExecPlan) -> Option<ExecPlan> {
+    let mut m = plan.clone();
+    for pp in &mut m.per_proc {
+        if let Some(i) = pp.phases.iter().position(|ph| matches!(ph, Phase::Recv { .. })) {
+            pp.phases.remove(i);
+            m.label = format!("{}+drop-recv", plan.label);
+            return Some(m);
+        }
+    }
+    None
+}
+
+/// Re-aim the first `Recv` at a peer that never feeds it (needs ≥ 3
+/// procs so the new peer is neither the old one nor the receiver).
+fn swap_a_peer(plan: &ExecPlan) -> Option<ExecPlan> {
+    let nprocs = plan.per_proc.len() as u32;
+    if nprocs < 3 {
+        return None;
+    }
+    let mut m = plan.clone();
+    for (p, pp) in m.per_proc.iter_mut().enumerate() {
+        for ph in &mut pp.phases {
+            if let Phase::Recv { from, .. } = ph {
+                let mut other = (from.0 + 1) % nprocs;
+                if other == p as u32 {
+                    other = (other + 1) % nprocs;
+                }
+                if other != from.0 && other != p as u32 {
+                    *from = ProcId(other);
+                    m.label = format!("{}+swap-peer", plan.label);
+                    return Some(m);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Hoist a processor's last `Compute` phase to the front, ahead of the
+/// phases that produce or receive its inputs.
+fn hoist_last_compute(plan: &ExecPlan) -> Option<ExecPlan> {
+    let mut m = plan.clone();
+    for pp in &mut m.per_proc {
+        let computes: Vec<usize> = pp
+            .phases
+            .iter()
+            .enumerate()
+            .filter(|(_, ph)| matches!(ph, Phase::Compute(_)))
+            .map(|(i, _)| i)
+            .collect();
+        if computes.len() >= 2 {
+            let ph = pp.phases.remove(*computes.last().unwrap());
+            pp.phases.insert(0, ph);
+            m.label = format!("{}+hoist-compute", plan.label);
+            return Some(m);
+        }
+    }
+    None
+}
+
+/// Inflate the first non-empty `Send`'s word count by duplicating one
+/// of its (already available) values.
+fn inflate_a_send(plan: &ExecPlan) -> Option<ExecPlan> {
+    let mut m = plan.clone();
+    for pp in &mut m.per_proc {
+        for ph in &mut pp.phases {
+            if let Phase::Send { tasks, .. } = ph {
+                if let Some(&t0) = tasks.first() {
+                    tasks.push(t0);
+                    m.label = format!("{}+inflate-send", plan.label);
+                    return Some(m);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// The pinning check: the static deadlock verdict — including the stuck
+/// frontier — must equal `try_simulate`'s dynamic one.
+fn assert_verdicts_agree(g: &TaskGraph, plan: &ExecPlan, mach: &Machine, ctx: &str) {
+    let mut net = NetworkKind::AlphaBeta.build(mach);
+    let dynamic = try_simulate(g, plan, mach, net.as_mut(), &UniformCost, false);
+    match (deadlock_check(plan), dynamic) {
+        (DeadlockVerdict::Free, Ok(_)) => {}
+        (DeadlockVerdict::Stuck(s), Err(SimError::Deadlock { stuck })) => {
+            assert_eq!(s, stuck, "{ctx}: stuck frontiers differ");
+        }
+        (stat, dynam) => panic!("{ctx}: static {stat:?} vs dynamic {:?}", dynam.map(|_| ())),
+    }
+}
+
+/// One healthy plan: clean analysis, matching verdicts, and a sound —
+/// on the α-β wire exact — critical-path bound.
+fn assert_healthy(g: &TaskGraph, plan: &ExecPlan, procs: u32, ctx: &str) {
+    let report = analyze(g, plan);
+    assert!(report.is_clean(), "{ctx}: {}", report.summary());
+    assert!(report.deadlock_free(), "{ctx}");
+    assert!(verify(g, plan).is_ok(), "{ctx}");
+
+    for alpha in [50.0, 0.0] {
+        let mach = Machine::new(procs, 2, alpha, 0.5, 1.0);
+        assert_verdicts_agree(g, plan, &mach, ctx);
+        for kind in [NetworkKind::AlphaBeta, NetworkKind::LogGp, NetworkKind::Contended] {
+            let mut net = kind.build(&mach);
+            let r = try_simulate(g, plan, &mach, net.as_mut(), &UniformCost, false)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            let cp = critical_path(g, plan, &mach, net.as_ref(), &UniformCost)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            assert!(
+                cp.makespan <= r.total_time + 1e-9,
+                "{ctx}/{}/α={alpha}: lb {} > sim {}",
+                kind.label(),
+                cp.makespan,
+                r.total_time
+            );
+            if cp.exact_wire {
+                assert_eq!(
+                    cp.makespan,
+                    r.total_time,
+                    "{ctx}/{}/α={alpha}: stateless bound must be exact",
+                    kind.label()
+                );
+            }
+        }
+    }
+}
+
+/// One corrupted plan: never clean, verdicts still pinned to the engine.
+fn assert_corrupted(g: &TaskGraph, mutated: &ExecPlan, procs: u32) {
+    let ctx = &mutated.label;
+    let report = analyze(g, mutated);
+    assert!(
+        !report.is_clean(),
+        "{ctx}: corrupted plan passed static analysis as clean"
+    );
+    let mach = Machine::new(procs, 2, 50.0, 0.5, 1.0);
+    assert_verdicts_agree(g, mutated, &mach, ctx);
+    // The report and the deadlock verdict must tell the same story.
+    assert_eq!(report.deadlock_free(), deadlock_check(mutated).is_free(), "{ctx}");
+}
+
+/// Drive one workload through strategies × procs × mutations.
+fn exercise<W: Workload + Clone>(workload: W, procs_list: &[u32]) {
+    for &procs in procs_list {
+        for strategy in [Strategy::Naive, Strategy::Overlap, Strategy::Ca] {
+            let mut p = Pipeline::new(workload.clone()).procs(procs).strategy(strategy);
+            if strategy == Strategy::Ca {
+                p = p.block(2);
+            }
+            let name = workload.name();
+            let ctx = format!("{name} p={procs} {strategy:?}");
+            let t = p.transform().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            let (g, plan) = (Arc::clone(&t.graph), Arc::clone(&t.plan));
+            assert_healthy(&g, &plan, procs, &ctx);
+
+            let mutations = [
+                drop_a_recv(&plan),
+                swap_a_peer(&plan),
+                hoist_last_compute(&plan),
+                inflate_a_send(&plan),
+            ];
+            let mut applied = 0;
+            for mutated in mutations.into_iter().flatten() {
+                assert_corrupted(&g, &mutated, procs);
+                applied += 1;
+            }
+            // Every plan in the matrix communicates and computes, so at
+            // least the recv-drop, compute-hoist and send-inflate
+            // mutations must have applied.
+            assert!(applied >= 3, "{ctx}: only {applied} mutations applied");
+        }
+    }
+}
+
+#[test]
+fn heat1d_analysis_matrix() {
+    exercise(Heat1d::new(48, 6), &[2, 3, 4]);
+}
+
+#[test]
+fn heat2d_analysis_matrix() {
+    exercise(Heat2d { h: 8, w: 8, steps: 4 }, &[2, 4]);
+}
+
+#[test]
+fn moore2d_analysis_matrix() {
+    exercise(Moore2d { h: 8, w: 8, steps: 4 }, &[2, 4]);
+}
+
+#[test]
+fn spmv_analysis_matrix() {
+    exercise(Spmv { matrix: CsrMatrix::laplace2d(6, 6), steps: 4 }, &[2, 4]);
+}
+
+#[test]
+fn cg_analysis_matrix() {
+    exercise(ConjugateGradient { unknowns: 24, iters: 2 }, &[2, 3]);
+}
+
+#[test]
+fn word_inflation_is_a_warning_not_a_false_deadlock() {
+    // The inflated-send mutation misroutes payload but cannot block the
+    // engine; the analyzer must classify it below Fatal so `verify`
+    // still passes while `analyze` reports it.
+    let t = Pipeline::new(Heat1d::new(32, 4)).procs(4).block(2).transform().unwrap();
+    let mutated = inflate_a_send(&t.plan).expect("CA plans send");
+    let report = analyze(&t.graph, &mutated);
+    assert!(!report.is_clean());
+    assert!(report.is_safe(), "{}", report.summary());
+    assert!(report.deadlock_free());
+    assert!(report.warning_count() > 0);
+    assert!(verify(&t.graph, &mutated).is_ok());
+}
+
+#[test]
+fn dropped_recv_is_caught_statically_before_the_engine_would_misroute() {
+    // Dropping a receive never deadlocks the engine (sends don't block),
+    // which is exactly why the static census must catch it instead.
+    let t = Pipeline::new(Heat1d::new(32, 4)).procs(4).strategy(Strategy::Naive)
+        .transform()
+        .unwrap();
+    let mutated = drop_a_recv(&t.plan).expect("naive plans receive");
+    let mach = Machine::new(4, 2, 50.0, 0.5, 1.0);
+    let mut net = NetworkKind::AlphaBeta.build(&mach);
+    assert!(try_simulate(&t.graph, &mutated, &mach, net.as_mut(), &UniformCost, false).is_ok());
+    let report = analyze(&t.graph, &mutated);
+    assert!(!report.is_clean(), "{}", report.summary());
+}
