@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke
+.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke trace-smoke
 
-ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke
+ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke trace-smoke
 
 # The simulator perf tracker: a reduced fig-7/8 sweep across all four
 # network models, emitting per-cell makespan + simulator wall-time so the
@@ -45,6 +45,15 @@ serve-smoke: build
 # emitting BENCH_analyze.json.
 analyze-smoke: build
 	$(CARGO) run --release -- analyze --smoke
+
+# The observability tracker: time the compiled engine with the telemetry
+# gate off, run a fully instrumented sim + serve + tune pass merged into
+# one Perfetto-loadable Chrome trace (results/trace_chrome.json), then
+# re-time with the gate off again (BENCH_trace.json).  Fails unless
+# disabled-gate throughput stays within 3% of the baseline and every
+# serve request's phase breakdown sums to its measured latency.
+trace-smoke: build
+	$(CARGO) run --release -- trace --smoke
 
 # The data-layout tracker: processor-grid shapes on heat2d and graph
 # partitioners on a banded+random SpMV, each simulated under all four

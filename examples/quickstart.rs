@@ -15,6 +15,8 @@ use imp_latency::partition::{Partitioning, ProcGrid};
 use imp_latency::pipeline::{Heat1d, Heat2d, Pipeline};
 use imp_latency::serve::{Request, ServeConfig, Server};
 use imp_latency::sim::{simulate_compiled, try_simulate, EngineScratch, Machine, NetworkKind};
+use imp_latency::telemetry;
+use imp_latency::trace::chrome_trace_with_telemetry;
 use imp_latency::transform::check_schedule;
 use imp_latency::tune::Tuner;
 
@@ -199,4 +201,31 @@ fn main() {
          tuner can discard candidates without ever running the engine.",
         cp.makespan, sim.total_time, cp.exact_wire
     );
+
+    // 11. Watch it: telemetry is one global gate away.  Installing a
+    //     recorder turns the instrumentation sites on — serve requests
+    //     get phase-tiled lifecycle spans, tuner searches record their
+    //     candidate timelines, the compiled engine samples event-loop
+    //     counters — and everything merges into one Perfetto-loadable
+    //     Chrome trace.  Disabled (the default), every site costs a
+    //     single branch; `make trace-smoke` (→ BENCH_trace.json) gates
+    //     that overhead at 3%.
+    let rec = telemetry::init();
+    println!("\ntelemetry on: a traced warm hit, then the metrics op reading the aggregates:");
+    for line in [tune_req, "{\"id\": \"m\", \"op\": \"metrics\"}"] {
+        for resp in server.run_wave(vec![Request::parse(line)]) {
+            println!("  {}", resp.to_json());
+        }
+    }
+    let mut net = NetworkKind::AlphaBeta.build_for(&machine, input.layout.as_ref());
+    let traced = simulate_compiled(&input.compiled, &machine, net.as_mut(), &mut scratch, true)
+        .expect("pipeline plans are deadlock-free");
+    let chrome = chrome_trace_with_telemetry(&traced.spans, &rec.drain_spans());
+    println!(
+        "telemetry: {} instrumented engine runs; merged Chrome trace is {} bytes — load \
+         it in ui.perfetto.dev (the `trace` CLI subcommand writes the full study).",
+        rec.counter("engine.runs").get(),
+        chrome.len()
+    );
+    telemetry::set_enabled(false);
 }

@@ -284,6 +284,8 @@ pub fn preset_serve() -> Config {
     c.set("slots", 8);
     c.set("cache", "results/serve_cache");
     c.set("requests", "-");
+    c.set("telemetry", 0);
+    c.set("metrics", 0);
     c
 }
 
@@ -344,6 +346,40 @@ pub fn preset_analyze_smoke() -> Config {
     c.set("blocks", "4");
     c.set("repeat", 20);
     c.set("out", "BENCH_analyze.json");
+    c
+}
+
+/// The `trace` CLI preset: the telemetry overhead/fidelity study — the
+/// compiled engine timed with the [`crate::telemetry`] gate off, then a
+/// fully instrumented sim + serve + tune pass merged into one Chrome
+/// trace, then the gate switched off again and the engine re-timed to
+/// bound the cost of the dormant instrumentation.
+pub fn preset_trace() -> Config {
+    let mut c = Config::new();
+    c.set("n", 4096);
+    c.set("m", 16);
+    c.set("p", 4);
+    c.set("threads", 8);
+    c.set("alpha", 500.0);
+    c.set("beta", 0.1);
+    c.set("gamma", 1.0);
+    c.set("network", "alphabeta");
+    c.set("repeat", 60);
+    c.set("trials", 3);
+    c.set("chrome", "results/trace_chrome.json");
+    c.set("out", "results/trace.json");
+    c
+}
+
+/// The `trace --smoke` preset: the CI observability tracker, emitting
+/// `BENCH_trace.json` (disabled-gate overhead ratio, phase-sum fidelity,
+/// span counts) plus the merged Perfetto-loadable Chrome trace on every
+/// push; the 3% overhead gate and the phase-sum gate fail the run.
+pub fn preset_trace_smoke() -> Config {
+    let mut c = preset_trace();
+    c.set("n", 2048);
+    c.set("repeat", 30);
+    c.set("out", "BENCH_trace.json");
     c
 }
 
@@ -487,7 +523,7 @@ mod tests {
             for k in [
                 "workloads", "networks", "search", "p", "n", "m", "h", "w", "cg_n", "iters",
                 "threads", "alpha", "beta", "gamma", "workers", "max_in_flight", "budget",
-                "slots", "cache", "requests",
+                "slots", "cache", "requests", "telemetry", "metrics",
             ] {
                 assert!(c.get(k).is_some(), "{k}");
             }
@@ -509,6 +545,15 @@ mod tests {
         // corner where the bound must be bit-exact under uniform cost.
         assert_eq!(preset_analyze_smoke().get("alphas"), Some("0,8,500"));
         assert_eq!(preset_analyze_smoke().get("out"), Some("BENCH_analyze.json"));
+        for c in [preset_trace(), preset_trace_smoke()] {
+            for k in [
+                "n", "m", "p", "threads", "alpha", "beta", "gamma", "network", "repeat",
+                "trials", "chrome", "out",
+            ] {
+                assert!(c.get(k).is_some(), "{k}");
+            }
+        }
+        assert_eq!(preset_trace_smoke().get("out"), Some("BENCH_trace.json"));
         for k in ["h", "w", "chords", "m", "p", "threads", "alpha", "beta", "gamma"] {
             assert!(preset_fig10().get(k).is_some(), "{k}");
         }

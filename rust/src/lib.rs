@@ -83,7 +83,17 @@
 //! * [`coordinator`] — real threads+channels execution: the generic plan
 //!   engine behind [`pipeline::Transformed::execute`], and the tiled PJRT
 //!   engine ([`coordinator::tile`]) with its per-problem geometries.
-//! * [`trace`] — Gantt charts and CSV series for the figures.
+//! * [`telemetry`] — observability: a serde-free metrics registry
+//!   (counters / gauges / log-bucketed histograms with p50/p90/p99) and
+//!   structured [`telemetry::SpanRecord`]s behind a global-but-injectable
+//!   [`telemetry::Recorder`] whose disabled path is a single branch —
+//!   serve requests get ids and phase breakdowns, tuner searches get
+//!   per-candidate eval/prune timelines, and the compiled engine samples
+//!   event-loop stats without giving up its allocation-free hot loop
+//!   (`trace` CLI subcommand gates the overhead in CI).
+//! * [`trace`] — exporters: Gantt charts, CSV series for the figures,
+//!   and the Chrome/Perfetto trace writer that merges simulator spans
+//!   with telemetry spans ([`trace::chrome`]).
 //! * [`config`] — experiment presets and a small key=value config parser.
 //! * [`figures`] — regenerates every paper figure's data.
 //! * [`prop`] — in-repo property-testing harness (no external deps vendored).
@@ -103,6 +113,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod stencil;
+pub mod telemetry;
 pub mod trace;
 pub mod transform;
 pub mod tune;

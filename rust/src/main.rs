@@ -16,6 +16,10 @@
 //! * `serve` — long-running tuning/simulation daemon: JSON request
 //!   streams over stdin batches or TCP/Unix sockets, cache-first with
 //!   in-flight dedupe, batching, and admission control;
+//! * `trace` — telemetry overhead + fidelity study: times the compiled
+//!   engine with the gate off, merges an instrumented sim + serve +
+//!   tune pass into one Chrome trace (CI gate: `make trace-smoke` →
+//!   `BENCH_trace.json`);
 //! * `dot` — Graphviz export of a (small) transformed graph.
 //!
 //! Every subcommand lives in the [`COMMANDS`] table; `--help` documents
@@ -26,7 +30,7 @@ use imp_latency::config::{
     parse_list, preset_analyze, preset_analyze_smoke, preset_bench, preset_bench_smoke,
     preset_end_to_end, preset_fig10, preset_fig7, preset_fig8, preset_fig9, preset_partition,
     preset_partition_smoke, preset_serve, preset_serve_smoke, preset_sweep, preset_sweep_smoke,
-    preset_tune, preset_tune_smoke, Config,
+    preset_trace, preset_trace_smoke, preset_tune, preset_tune_smoke, Config,
 };
 use imp_latency::coordinator::{heat1d, heat2d};
 use imp_latency::cost::CostModel;
@@ -38,15 +42,17 @@ use imp_latency::pipeline::{
     Workload, WorkloadVisitor,
 };
 use imp_latency::runtime::Registry;
-use imp_latency::serve::{self, signals, ServeConfig, Server};
+use imp_latency::serve::{self, signals, Request, ServeConfig, Server};
 use imp_latency::sim::{
     simulate_compiled, sweep, try_simulate, CompiledPlan, EngineScratch, Machine, NetworkKind,
     UniformCost,
 };
 use imp_latency::stencil::CsrMatrix;
-use imp_latency::trace::{gantt_ascii, summary_line};
+use imp_latency::telemetry::{self, Recorder};
+use imp_latency::trace::{chrome_trace_with_telemetry, gantt_ascii, summary_line};
 use imp_latency::transform::{check_schedule, HaloMode, ScheduleStats, TransformOptions};
 use imp_latency::tune::{self, SearchStrategy as _, Tuner, TuningCache};
+use std::sync::Arc;
 
 const HELP: &str = "\
 imp-latency — Task Graph Transformations for Latency Tolerance (Eijkhout 2018)
@@ -115,15 +121,27 @@ COMMANDS
              --smoke emits BENCH_analyze.json and fails on any violated gate
   serve      [--smoke requests=-|FILE listen=tcp:HOST:PORT|unix:PATH
               cache=results/serve_cache slots=8 workers=4 max_in_flight=64
-              budget=0 search=exhaustive out=BENCH_serve.json]
+              budget=0 search=exhaustive telemetry=0 metrics=0 out=BENCH_serve.json]
              long-running tuning/simulation daemon: newline-delimited JSON
-             requests (ops tune|simulate|analyze|cache-stats) from a stdin/file batch
-             or a TCP/Unix socket; warm cache hits cost zero engine runs,
-             identical in-flight requests dedupe onto one search, compatible
-             simulate requests coalesce into shared sweep grids, excess load
-             is shed with an explicit overloaded response; SIGINT/SIGTERM
-             flush cache shards; --smoke drives the scripted cold → warm →
+             requests (ops tune|simulate|analyze|cache-stats|metrics) from a
+             stdin/file batch or a TCP/Unix socket; warm cache hits cost zero
+             engine runs, identical in-flight requests dedupe onto one search,
+             compatible simulate requests coalesce into shared sweep grids,
+             excess load is shed with an explicit overloaded response;
+             SIGINT/SIGTERM flush cache shards; telemetry=1 gives every request
+             a phase-tiled lifecycle span (the metrics op reports the
+             percentiles), metrics=N dumps the Prometheus exposition to stderr
+             every N waves; --smoke drives the scripted cold → warm →
              duplicate-burst → batch mix and emits BENCH_serve.json
+  trace      [--smoke n=4096 m=16 p=4 threads=8 alpha=500 beta=0.1 gamma=1
+              network=alphabeta repeat=60 trials=3
+              chrome=results/trace_chrome.json out=results/trace.json]
+             telemetry overhead + fidelity study: times the compiled engine with
+             the gate off, runs an instrumented sim + serve + tune pass, merges
+             every span into one Perfetto-loadable Chrome trace, then re-times
+             the engine with the gate off again; gates: disabled-gate throughput
+             within 3% of baseline, and every serve request's phase breakdown
+             sums to its measured latency; --smoke emits BENCH_trace.json
   dot        [n=16 m=3 p=2]            Graphviz of the transformed graph
 
 Artifacts are searched in $IMP_ARTIFACTS or ./artifacts (run `make artifacts`).
@@ -162,6 +180,7 @@ const COMMANDS: &[(&str, Handler)] = &[
     ("partition", cmd_partition),
     ("analyze", cmd_analyze),
     ("serve", cmd_serve),
+    ("trace", cmd_trace),
     ("dot", cmd_dot),
 ];
 
@@ -1688,7 +1707,15 @@ fn cmd_serve(args: &[&str]) -> Result<(), String> {
         return Ok(());
     }
 
-    let server = Server::new(ServeConfig::from_config(&cfg));
+    // `telemetry=1` installs (and enables) the global recorder, so every
+    // request gets a sequence id and a phase-tiled lifecycle span and the
+    // `metrics` op has aggregates to report; `metrics=N` additionally
+    // dumps the Prometheus text exposition to stderr every N waves.
+    if cfg.get_or("telemetry", 0u32) != 0 {
+        telemetry::init();
+    }
+    let server = Server::new(ServeConfig::from_config(&cfg))
+        .with_metrics_every(cfg.get_or("metrics", 0u64));
     let listen = cfg.get_or("listen", String::new());
     let served = if let Some(addr) = listen.strip_prefix("tcp:") {
         let listener =
@@ -1732,6 +1759,210 @@ fn cmd_serve(args: &[&str]) -> Result<(), String> {
         eprintln!("serve: shutdown signal honoured; cache shards flushed");
     }
     Ok(())
+}
+
+/// One engine throughput measurement: `repeat` compiled simulations per
+/// trial, best of `trials` trials (the max filters scheduler noise on
+/// loaded CI machines), in events/sec.
+fn engine_events_per_sec(
+    input: &sweep::SweepInput,
+    mach: &Machine,
+    kind: NetworkKind,
+    scratch: &mut EngineScratch,
+    repeat: usize,
+    trials: usize,
+) -> Result<f64, String> {
+    let mut best = 0.0f64;
+    for _ in 0..trials.max(1) {
+        let t0 = std::time::Instant::now();
+        let mut events = 0u64;
+        for _ in 0..repeat {
+            let mut net = kind.build_for(mach, input.layout.as_ref());
+            simulate_compiled(&input.compiled, mach, net.as_mut(), scratch, false)
+                .map_err(|e| e.to_string())?;
+            events += scratch.events();
+        }
+        best = best.max(events as f64 / t0.elapsed().as_secs_f64().max(1e-12));
+    }
+    Ok(best)
+}
+
+/// The observability study behind `BENCH_trace.json`, in three gated
+/// phases:
+///
+/// 1. **Overhead**: compiled-engine events/sec is measured with the
+///    telemetry gate off, and re-measured (gate off again) after the
+///    instrumented phase; the dormant instrumentation must keep the
+///    engine within 3% of the baseline.
+/// 2. **Fidelity**: with a recorder installed, one simulation (engine
+///    counters + `BusySpan`s), a serve wave of tune requests (request
+///    lifecycles + phase marks), and the tuner searches they trigger
+///    all record into the same recorder; every request's phase
+///    breakdown must sum — within max(10%, 0.3 ms) — to its measured
+///    latency.
+/// 3. **Export**: simulator spans and telemetry spans merge into one
+///    Perfetto-loadable Chrome trace that must contain sim spans, at
+///    least one serve request lifecycle, and at least one tuner search
+///    timeline.
+///
+/// Any violated gate fails the run (and `make trace-smoke` / CI).
+fn cmd_trace(args: &[&str]) -> Result<(), String> {
+    let smoke = args.contains(&"--smoke");
+    let defaults = if smoke { preset_trace_smoke() } else { preset_trace() };
+    let (cfg, _) = config_from(defaults, args);
+    let repeat: usize = cfg.get_or("repeat", 30).max(1);
+    let trials: usize = cfg.get_or("trials", 3).max(1);
+    let (n, m, p): (u64, u32, u32) = (cfg.require("n")?, cfg.require("m")?, cfg.require("p")?);
+    let kind = NetworkKind::parse(&cfg.get_or("network", "alphabeta".to_string()))?;
+
+    // Phase 1a: the baseline — telemetry off (the process default), one
+    // CA plan on the compiled engine.
+    telemetry::set_enabled(false);
+    let t = Pipeline::new(Heat1d { n, steps: m, radius: 1 })
+        .procs(p)
+        .transform()
+        .map_err(|e| e.to_string())?;
+    let input = t.sweep_input();
+    let mach = Machine::new(
+        p,
+        cfg.require("threads")?,
+        cfg.require("alpha")?,
+        cfg.require::<f64>("beta")? * input.words_per_value as f64,
+        cfg.require("gamma")?,
+    );
+    let mut scratch = EngineScratch::new();
+    // One warm-up run so both measurements see a hot scratch.
+    let mut net = kind.build_for(&mach, input.layout.as_ref());
+    simulate_compiled(&input.compiled, &mach, net.as_mut(), &mut scratch, false)
+        .map_err(|e| e.to_string())?;
+    let baseline_eps = engine_events_per_sec(&input, &mach, kind, &mut scratch, repeat, trials)?;
+
+    // Phase 2: everything instrumented into one recorder — a sim run
+    // (recording spans), an enabled-gate engine measurement, and a
+    // serve wave of tune requests whose searches land on the same
+    // recorder through the global gate.
+    let rec = Arc::new(Recorder::new());
+    telemetry::install(Arc::clone(&rec));
+    let mut net = kind.build_for(&mach, input.layout.as_ref());
+    let sim = simulate_compiled(&input.compiled, &mach, net.as_mut(), &mut scratch, true)
+        .map_err(|e| e.to_string())?;
+    let enabled_eps = engine_events_per_sec(&input, &mach, kind, &mut scratch, repeat, 1)?;
+
+    let server = Server::new(ServeConfig {
+        workers: 2,
+        max_in_flight: 64,
+        budget: None,
+        cache_dir: None,
+        slots: 4,
+        search: "exhaustive".to_string(),
+    })
+    .with_recorder(Arc::clone(&rec));
+    // One request per wave, so each response's latency is the handler's
+    // own wall time: two cold searches, then a warm hit of the first.
+    let lines = [
+        r#"{"id": "c1", "op": "tune", "workload": "heat1d", "n": 64, "m": 8, "p": 2, "threads": 4, "alpha": 50.0, "beta": 1.0, "gamma": 1.0}"#,
+        r#"{"id": "c2", "op": "tune", "workload": "heat1d", "n": 64, "m": 8, "p": 2, "threads": 4, "alpha": 120.0, "beta": 1.0, "gamma": 1.0}"#,
+        r#"{"id": "w1", "op": "tune", "workload": "heat1d", "n": 64, "m": 8, "p": 2, "threads": 4, "alpha": 50.0, "beta": 1.0, "gamma": 1.0}"#,
+    ];
+    let mut tuned: Vec<(String, f64)> = Vec::new();
+    for line in lines {
+        let wave = server.run_wave(vec![Request::parse(line)]);
+        let r = wave.into_iter().next().expect("one response per wave");
+        if let Err(e) = &r.result {
+            return Err(format!("trace serve request {:?} failed: {e:?}", r.id));
+        }
+        tuned.push((r.id, r.latency_ms));
+    }
+
+    // Phase 1b: gate off again, re-measure — the 3% overhead gate.
+    telemetry::set_enabled(false);
+    let disabled_eps = engine_events_per_sec(&input, &mach, kind, &mut scratch, repeat, trials)?;
+    let overhead_ratio = disabled_eps / baseline_eps.max(1e-12);
+    if disabled_eps < baseline_eps * 0.97 {
+        return Err(format!(
+            "disabled-telemetry engine throughput {disabled_eps:.0} events/s fell more than \
+             3% below the baseline {baseline_eps:.0} events/s"
+        ));
+    }
+
+    // Phase 2's fidelity gate: each request's phase breakdown must sum
+    // to its measured latency.
+    let spans = rec.drain_spans();
+    let mut checked = 0usize;
+    let mut max_gap_ms = 0.0f64;
+    for (id, latency_ms) in &tuned {
+        let latency_ms = *latency_ms;
+        let name = format!("request:tune:{id}");
+        let lifecycle = spans
+            .iter()
+            .find(|s| s.track == "serve" && s.name == name)
+            .ok_or_else(|| format!("no lifecycle span recorded for request {id:?}"))?;
+        let phase_sum_ms = spans
+            .iter()
+            .filter(|s| s.track == "serve.phase" && s.tid == lifecycle.tid)
+            .map(|s| s.dur_us)
+            .sum::<f64>()
+            / 1e3;
+        let tol_ms = (0.10 * latency_ms).max(0.3);
+        let gap = (phase_sum_ms - latency_ms).abs();
+        max_gap_ms = max_gap_ms.max(gap);
+        if gap > tol_ms {
+            return Err(format!(
+                "request {id:?}: phase breakdown sums to {phase_sum_ms:.3} ms but measured \
+                 latency is {latency_ms:.3} ms (tolerance {tol_ms:.3} ms)"
+            ));
+        }
+        checked += 1;
+    }
+
+    // Phase 3: the merged export, with all three tracks present.
+    let have_serve = spans.iter().any(|s| s.track == "serve" && s.name.starts_with("request:"));
+    let have_search = spans.iter().any(|s| s.track == "tune" && s.name.starts_with("search:"));
+    if sim.spans.is_empty() || !have_serve || !have_search {
+        return Err(format!(
+            "merged trace is missing a required track: {} sim spans, serve lifecycle \
+             {have_serve}, tuner search {have_search}",
+            sim.spans.len()
+        ));
+    }
+    let chrome = chrome_trace_with_telemetry(&sim.spans, &spans);
+    let chrome_out = cfg.get_or("chrome", "results/trace_chrome.json".to_string());
+    write_json_report(&chrome_out, &chrome)?;
+
+    let engine_runs = rec.counter("engine.runs").get();
+    let engine_events = rec.counter("engine.events").get();
+    let searches = rec.counter("tune.searches").get();
+    println!(
+        "trace: engine {baseline_eps:.0} events/s off → {enabled_eps:.0} on → \
+         {disabled_eps:.0} off again ({:.1}% of baseline); {checked} request(s) \
+         phase-checked (max gap {max_gap_ms:.3} ms); {} sim + {} telemetry spans merged \
+         ({engine_runs} instrumented engine runs, {engine_events} events, {searches} \
+         search(es))",
+        100.0 * overhead_ratio,
+        sim.spans.len(),
+        spans.len(),
+    );
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"trace\": {:?},\n", if smoke { "smoke" } else { "trace" }));
+    json.push_str(&format!("  \"repeat\": {repeat},\n"));
+    json.push_str(&format!("  \"trials\": {trials},\n"));
+    json.push_str(&format!("  \"baseline_events_per_sec\": {baseline_eps},\n"));
+    json.push_str(&format!("  \"enabled_events_per_sec\": {enabled_eps},\n"));
+    json.push_str(&format!("  \"disabled_events_per_sec\": {disabled_eps},\n"));
+    json.push_str(&format!("  \"overhead_ratio\": {overhead_ratio},\n"));
+    json.push_str(&format!("  \"requests_checked\": {checked},\n"));
+    json.push_str(&format!("  \"max_phase_gap_ms\": {max_gap_ms},\n"));
+    json.push_str(&format!("  \"sim_spans\": {},\n", sim.spans.len()));
+    json.push_str(&format!("  \"telemetry_spans\": {},\n", spans.len()));
+    json.push_str(&format!("  \"dropped_spans\": {},\n", rec.dropped_spans()));
+    json.push_str(&format!("  \"engine_runs\": {engine_runs},\n"));
+    json.push_str(&format!("  \"engine_events\": {engine_events},\n"));
+    json.push_str(&format!("  \"searches\": {searches},\n"));
+    json.push_str(&format!("  \"chrome\": {chrome_out:?}\n"));
+    json.push_str("}\n");
+    let out = cfg.get_or("out", "results/trace.json".to_string());
+    write_json_report(&out, &json)
 }
 
 fn cmd_dot(args: &[&str]) -> Result<(), String> {

@@ -383,6 +383,9 @@ impl<W: Workload> Pipeline<W> {
     /// the graph in a [`GraphWorkload`].  The graph must be distributed
     /// over exactly the pipeline's resolved processor count.
     pub fn transform_on(self, graph: Arc<TaskGraph>) -> Result<Transformed<W>, PipelineError> {
+        // Telemetry: transforms counted and timed on the `pipeline`
+        // track; disabled telemetry pays one branch, nothing else.
+        let t_start = crate::telemetry::with(|r| r.now_us());
         let procs = self.resolved_procs();
         if graph.num_procs() != procs {
             return Err(PipelineError::Graph(format!(
@@ -419,6 +422,12 @@ impl<W: Workload> Pipeline<W> {
         }
         let layout = self.resolved_partitioning();
         let cost = self.cost.unwrap_or_else(|| self.workload.cost_model());
+        if let Some(start_us) = t_start {
+            crate::telemetry::with(|r| {
+                r.counter("pipeline.transforms").add(1);
+                r.histogram("pipeline.transform_ms").record((r.now_us() - start_us) / 1e3);
+            });
+        }
         Ok(Transformed {
             workload: self.workload,
             graph,

@@ -6,8 +6,8 @@
 //! cheaper the longer it lives:
 //!
 //! - **protocol** — newline-delimited JSON requests (`tune`, `simulate`,
-//!   `analyze`, `cache-stats`) and responses; the full schema is
-//!   documented on [`protocol`].
+//!   `analyze`, `cache-stats`, `metrics`) and responses; the full
+//!   schema is documented on [`protocol`].
 //! - **shard** — the tuning cache split across mutex slots routed by
 //!   workload signature, each backed by the per-signature shard files
 //!   (and file locks) of [`crate::tune::cache`]; heat1d traffic never
@@ -42,6 +42,12 @@
 //! serves the same protocol with one wave per line per connection, and
 //! `serve --smoke` drives a scripted cold → warm → duplicate-burst →
 //! batch mix into `BENCH_serve.json`.
+//!
+//! With telemetry on ([`crate::telemetry`]; `telemetry=1` on the CLI),
+//! every request gets a sequence id and a phase-tiled lifecycle span,
+//! the `metrics` op reports histogram-backed latency percentiles and
+//! per-phase means, and `metrics=N` on the CLI dumps the Prometheus
+//! text exposition every N waves.
 
 pub mod admission;
 pub mod batch;

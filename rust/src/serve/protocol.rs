@@ -16,8 +16,8 @@
 //! ```
 //!
 //! - `id` (required): caller-chosen tag, echoed verbatim in the response.
-//! - `op` (required): `"tune"`, `"simulate"`, `"analyze"`, or
-//!   `"cache-stats"`.
+//! - `op` (required): `"tune"`, `"simulate"`, `"analyze"`,
+//!   `"cache-stats"`, or `"metrics"`.
 //! - every other field lands in a per-request [`Config`] and overrides
 //!   the server's defaults: `workload` (`heat1d|heat2d|moore2d|spmv|cg`),
 //!   problem size (`n`/`r`, `h`/`w`, `cg_n`/`iters`), steps `m`, procs
@@ -54,6 +54,12 @@
 //!   never runs the engine.
 //! - `cache-stats` payload: `entries`, `shards`, `hits`, `misses`,
 //!   `deduped`, `shed`, `in_flight`.
+//! - `metrics` payload ([`crate::telemetry`]): `enabled`, `requests`,
+//!   histogram-backed request-latency `p50_ms`/`p90_ms`/`p99_ms`,
+//!   buffered `spans`, plus one `phase_<name>_ms` field per recorded
+//!   serve phase (mean latency) — flat scalar fields, so the payload
+//!   stays inside this dialect; the full Prometheus text exposition is
+//!   available via the `metrics=` periodic dump on the CLI.
 //! - `latency_ms`: wall time from wave start to this response.
 
 use crate::config::Config;
@@ -116,6 +122,9 @@ pub enum Op {
     Analyze,
     /// Report cache/admission counters; never touches the engine.
     CacheStats,
+    /// Report the telemetry recorder's aggregates (request counts,
+    /// latency percentiles, per-phase means); never touches the engine.
+    Metrics,
 }
 
 impl Op {
@@ -125,7 +134,10 @@ impl Op {
             "simulate" => Ok(Op::Simulate),
             "analyze" => Ok(Op::Analyze),
             "cache-stats" => Ok(Op::CacheStats),
-            other => Err(format!("unknown op {other:?} (tune|simulate|analyze|cache-stats)")),
+            "metrics" => Ok(Op::Metrics),
+            other => {
+                Err(format!("unknown op {other:?} (tune|simulate|analyze|cache-stats|metrics)"))
+            }
         }
     }
 
@@ -135,6 +147,7 @@ impl Op {
             Op::Simulate => "simulate",
             Op::Analyze => "analyze",
             Op::CacheStats => "cache-stats",
+            Op::Metrics => "metrics",
         }
     }
 }
@@ -240,6 +253,21 @@ pub enum Payload {
         shed: usize,
         in_flight: usize,
     },
+    Metrics {
+        /// Whether a telemetry recorder is attached to the server.
+        enabled: bool,
+        /// Requests observed by the recorder so far.
+        requests: u64,
+        /// Histogram-backed request-latency percentiles (ms).
+        p50_ms: f64,
+        p90_ms: f64,
+        p99_ms: f64,
+        /// Spans currently buffered in the recorder.
+        spans: usize,
+        /// Per-phase mean latencies (ms), rendered as flat
+        /// `phase_<name>_ms` fields.
+        phases: Vec<(String, f64)>,
+    },
 }
 
 /// One response line.
@@ -301,6 +329,18 @@ impl Response {
                      \"hits\": {hits}, \"misses\": {misses}, \"deduped\": {deduped}, \
                      \"shed\": {shed}, \"in_flight\": {in_flight}"
                 ));
+            }
+            Ok(Payload::Metrics { enabled, requests, p50_ms, p90_ms, p99_ms, spans, phases }) => {
+                s.push_str(&format!(
+                    "\"status\": \"ok\", \"enabled\": {enabled}, \"requests\": {requests}, \
+                     \"p50_ms\": {p50_ms}, \"p90_ms\": {p90_ms}, \"p99_ms\": {p99_ms}, \
+                     \"spans\": {spans}"
+                ));
+                for (name, mean_ms) in phases {
+                    // Phase names are static identifiers, so the field
+                    // stays inside the no-escape flat dialect.
+                    s.push_str(&format!(", \"phase_{name}_ms\": {mean_ms}"));
+                }
             }
             Err(RequestError::Overloaded(msg)) => {
                 s.push_str(&format!("\"status\": \"overloaded\", \"error\": {msg:?}"));
@@ -415,6 +455,32 @@ mod tests {
         {
             assert!(line.contains(needle), "{line}");
         }
+        assert!(parse_flat_object(&line).is_ok(), "{line}");
+
+        let metrics = Response {
+            id: "m".into(),
+            latency_ms: 0.05,
+            result: Ok(Payload::Metrics {
+                enabled: true,
+                requests: 12,
+                p50_ms: 1.0,
+                p90_ms: 2.0,
+                p99_ms: 4.0,
+                spans: 30,
+                phases: vec![("search".into(), 3.25), ("respond".into(), 0.5)],
+            }),
+        };
+        let line = metrics.to_json();
+        for needle in [
+            "\"enabled\": true",
+            "\"requests\": 12",
+            "\"p99_ms\": 4",
+            "\"phase_search_ms\": 3.25",
+            "\"phase_respond_ms\": 0.5",
+        ] {
+            assert!(line.contains(needle), "{line}");
+        }
+        // The metrics payload stays inside the flat dialect.
         assert!(parse_flat_object(&line).is_ok(), "{line}");
 
         let over = Response {

@@ -29,12 +29,19 @@
 //! `simulate` requests skip all of that: each wave's compatible jobs
 //! coalesce into shared sweep grids (see [`super::batch`]) and fan
 //! across the sweep worker pool in one dispatch per grid.
+//!
+//! With a telemetry recorder attached ([`Server::with_recorder`], or
+//! the global [`crate::telemetry`] gate), every request gets a unique
+//! monotone sequence id and a `request:<op>:<id>` lifecycle span whose
+//! phase marks (read → cache → dedupe → admission → search → respond)
+//! tile it exactly; the `metrics` op reports the registry's aggregates.
+//! Without one, the telemetry path costs a single branch per request.
 
 use std::collections::HashMap;
 use std::io::{BufRead, Read, Write};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -42,6 +49,7 @@ use crate::config::Config;
 use crate::pipeline::{dispatch_workload, Pipeline, Strategy, Workload, WorkloadVisitor};
 use crate::sim::sweep::{panic_message, SweepInput};
 use crate::sim::{Machine, NetworkKind};
+use crate::telemetry::Recorder;
 use crate::tune::search::{search_from_tag, SearchBudget};
 use crate::tune::{pipeline_tune_key, tune_pipeline, CacheEntry, Tuner, TuningCache};
 
@@ -147,6 +155,60 @@ pub struct Server {
     inflight: Mutex<HashMap<String, Arc<Flight>>>,
     admission: Admission,
     stats: ServeStats,
+    /// Request sequence ids — telemetry span lanes; only advanced when
+    /// a recorder is attached.
+    seq: AtomicU64,
+    /// Injected recorder; `None` falls back to the global gate.
+    recorder: Option<Arc<Recorder>>,
+    /// Dump the Prometheus exposition to stderr every N waves (0 = off).
+    metrics_every: u64,
+    /// Completed request waves (only advanced when `metrics_every > 0`).
+    waves: AtomicU64,
+}
+
+/// Phase timeline of one in-flight request.  Each [`PhaseTrace::mark`]
+/// closes the interval since the previous mark as a `serve.phase` span
+/// (same lane as the request's lifecycle span) and samples a
+/// `serve.phase.<name>_ms` histogram.  Consecutive marks tile the
+/// request, so per-phase durations sum to the lifecycle duration — the
+/// invariant `trace --smoke` gates on.
+struct PhaseTrace {
+    rec: Option<Arc<Recorder>>,
+    seq: u64,
+    last_us: f64,
+}
+
+impl PhaseTrace {
+    /// A no-op trace for the telemetry-off path.
+    fn off() -> PhaseTrace {
+        PhaseTrace { rec: None, seq: 0, last_us: 0.0 }
+    }
+
+    /// Close the phase that ran since the previous mark.
+    fn mark(&mut self, phase: &'static str) {
+        if let Some(rec) = &self.rec {
+            let now = rec.now_us();
+            rec.record_span("serve.phase", self.seq, phase.to_string(), self.last_us, now);
+            rec.histogram(&format!("serve.phase.{phase}_ms")).record((now - self.last_us) / 1e3);
+            self.last_us = now;
+        }
+    }
+}
+
+/// Per-phase mean latencies (ms) recorded under `serve.phase.*_ms`,
+/// prefix/suffix stripped, sorted by phase name.
+fn phase_means(rec: &Recorder) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for name in rec.registry.histogram_names() {
+        let Some(phase) = name.strip_prefix("serve.phase.").and_then(|s| s.strip_suffix("_ms"))
+        else {
+            continue;
+        };
+        if let Some(h) = rec.registry.find_histogram(&name) {
+            out.push((phase.to_string(), h.mean()));
+        }
+    }
+    out
 }
 
 fn ms(t0: Instant) -> f64 {
@@ -216,6 +278,35 @@ impl Server {
             inflight: Mutex::new(HashMap::new()),
             admission,
             stats: ServeStats::default(),
+            seq: AtomicU64::new(0),
+            recorder: None,
+            metrics_every: 0,
+            waves: AtomicU64::new(0),
+        }
+    }
+
+    /// Attach a dedicated telemetry recorder (instead of the global
+    /// one) — used by `serve --smoke` and tests so parallel servers
+    /// never share state through the global gate.
+    pub fn with_recorder(mut self, rec: Arc<Recorder>) -> Server {
+        self.recorder = Some(rec);
+        self
+    }
+
+    /// Dump the active recorder's Prometheus text exposition to stderr
+    /// every `every` completed waves (`0` disables; the CLI `metrics=N`
+    /// key).  A no-op while no recorder is active.
+    pub fn with_metrics_every(mut self, every: u64) -> Server {
+        self.metrics_every = every;
+        self
+    }
+
+    /// The active recorder: the injected one, else the global recorder
+    /// when telemetry is enabled, else `None` (the zero-overhead path).
+    fn rec(&self) -> Option<Arc<Recorder>> {
+        match &self.recorder {
+            Some(rec) => Some(Arc::clone(rec)),
+            None => crate::telemetry::recorder(),
         }
     }
 
@@ -251,12 +342,71 @@ impl Server {
     }
 
     /// Answer one request (panics in handlers are caught by the caller).
+    ///
+    /// With a recorder attached, the request takes the next sequence id
+    /// and leaves a `request:<op>:<id>` lifecycle span on the `serve`
+    /// track, tiled by its phase marks; its latency lands in the
+    /// `serve.request_latency_ms` histogram.
     pub fn handle(&self, req: &Request) -> Result<Payload, RequestError> {
+        match self.rec() {
+            None => self.dispatch(req, &mut PhaseTrace::off()),
+            Some(rec) => {
+                let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+                let start_us = rec.now_us();
+                let mut phases =
+                    PhaseTrace { rec: Some(Arc::clone(&rec)), seq, last_us: start_us };
+                let result = self.dispatch(req, &mut phases);
+                phases.mark("respond");
+                let end_us = phases.last_us;
+                rec.record_span(
+                    "serve",
+                    seq,
+                    format!("request:{}:{}", req.op.tag(), req.id),
+                    start_us,
+                    end_us,
+                );
+                rec.counter("serve.requests").add(1);
+                rec.histogram("serve.request_latency_ms").record((end_us - start_us) / 1e3);
+                result
+            }
+        }
+    }
+
+    fn dispatch(&self, req: &Request, phases: &mut PhaseTrace) -> Result<Payload, RequestError> {
         match req.op {
-            Op::Tune => self.handle_tune(req),
+            Op::Tune => self.handle_tune(req, phases),
             Op::Simulate => self.handle_simulate(req),
             Op::Analyze => self.handle_analyze(req),
             Op::CacheStats => Ok(self.cache_stats_payload()),
+            Op::Metrics => Ok(self.metrics_payload()),
+        }
+    }
+
+    /// The `metrics` op: aggregates from the attached recorder, or a
+    /// disabled payload when telemetry is off.
+    fn metrics_payload(&self) -> Payload {
+        match self.rec() {
+            None => Payload::Metrics {
+                enabled: false,
+                requests: 0,
+                p50_ms: 0.0,
+                p90_ms: 0.0,
+                p99_ms: 0.0,
+                spans: 0,
+                phases: Vec::new(),
+            },
+            Some(rec) => {
+                let lat = rec.histogram("serve.request_latency_ms");
+                Payload::Metrics {
+                    enabled: true,
+                    requests: rec.counter("serve.requests").get(),
+                    p50_ms: lat.percentile(0.50),
+                    p90_ms: lat.percentile(0.90),
+                    p99_ms: lat.percentile(0.99),
+                    spans: rec.span_count(),
+                    phases: phase_means(&rec),
+                }
+            }
         }
     }
 
@@ -285,27 +435,33 @@ impl Server {
         }
     }
 
-    fn handle_tune(&self, req: &Request) -> Result<Payload, RequestError> {
+    fn handle_tune(&self, req: &Request, phases: &mut PhaseTrace) -> Result<Payload, RequestError> {
         struct Visit<'a> {
             server: &'a Server,
             params: &'a Config,
+            phases: &'a mut PhaseTrace,
         }
         impl WorkloadVisitor for Visit<'_> {
             type Out = Result<Payload, RequestError>;
             fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out {
-                self.server.tune_workload(w, self.params)
+                self.server.tune_workload(w, self.params, self.phases)
             }
         }
         let params = self.merged(&req.params);
         let workload: String = params.get_or("workload", "heat1d".to_string());
-        dispatch_workload(&workload, &params, &mut Visit { server: self, params: &params })
-            .map_err(RequestError::Failed)?
+        dispatch_workload(
+            &workload,
+            &params,
+            &mut Visit { server: self, params: &params, phases },
+        )
+        .map_err(RequestError::Failed)?
     }
 
     fn tune_workload<W: Workload + Clone>(
         &self,
         w: W,
         params: &Config,
+        phases: &mut PhaseTrace,
     ) -> Result<Payload, RequestError> {
         let machine = machine_from(params).map_err(RequestError::Failed)?;
         let network = NetworkKind::parse(&params.get_or("network", "alphabeta".to_string()))
@@ -318,6 +474,7 @@ impl Server {
             .map_err(|e| RequestError::Failed(e.to_string()))?
             .key;
         let slot = self.cache.slot_for(&key);
+        phases.mark("read");
 
         // 1. Peek: warm answers never search and are never admitted.
         {
@@ -325,9 +482,11 @@ impl Server {
             guard.reload(&key);
             if let Some((cand, entry)) = guard.lookup_decoded(&key) {
                 self.stats.warm_hits.fetch_add(1, Ordering::Relaxed);
+                phases.mark("cache");
                 return Ok(hit_payload(&cand.label(), &entry, CacheOutcome::Hit));
             }
         }
+        phases.mark("cache");
 
         // 2. Dedupe: join an identical in-flight search, or lead one.
         let (flight, leader) = {
@@ -343,8 +502,11 @@ impl Server {
         };
         if !leader {
             self.stats.deduped.fetch_add(1, Ordering::Relaxed);
-            return flight.wait().map(|s| summary_payload(&s, CacheOutcome::Deduped, 0));
+            let waited = flight.wait();
+            phases.mark("dedupe");
+            return waited.map(|s| summary_payload(&s, CacheOutcome::Deduped, 0));
         }
+        phases.mark("dedupe");
 
         // Leader.  Re-peek first: a previous leader may have finished
         // between our miss and our registration.
@@ -366,7 +528,7 @@ impl Server {
                     cache_hit: true,
                 })
             }
-            None => self.lead_search(&base, &key, params, budget),
+            None => self.lead_search(&base, &key, params, budget, phases),
         };
         flight.publish(result.clone());
         lock_recover(&self.inflight).remove(&key);
@@ -388,17 +550,20 @@ impl Server {
         key: &str,
         params: &Config,
         budget: Option<SearchBudget>,
+        phases: &mut PhaseTrace,
     ) -> Result<TuneSummary, RequestError> {
         let permit = match self.admission.try_admit() {
             Some(permit) => permit,
             None => {
+                phases.mark("admission");
                 return Err(RequestError::Overloaded(format!(
                     "{} searches in flight (limit {})",
                     self.admission.in_flight(),
                     self.admission.limit()
-                )))
+                )));
             }
         };
+        phases.mark("admission");
         let tag = params.get_or("search", self.cfg.search.clone());
         let mut search = search_from_tag(&tag).map_err(RequestError::Failed)?;
         search.set_budget(budget);
@@ -409,6 +574,7 @@ impl Server {
         let mut tuner = Tuner::new(search, search_cache);
         let outcome = catch_unwind(AssertUnwindSafe(|| tune_pipeline(base, &mut tuner)));
         drop(permit);
+        phases.mark("search");
         match outcome {
             Ok(Ok(out)) => {
                 let report = &out.report;
@@ -573,6 +739,10 @@ impl Server {
     /// the wave has ≤ 1 of them).  Response order = request order.
     pub fn run_wave(&self, requests: Vec<Result<Request, String>>) -> Vec<Response> {
         let t0 = Instant::now();
+        // Simulate requests bypass handle(), so their request
+        // lifecycles are recorded here (wave start → cell answered).
+        let rec = self.rec();
+        let wave_us = rec.as_ref().map(|r| r.now_us()).unwrap_or(0.0);
         let mut responses: Vec<Option<Response>> = Vec::new();
         responses.resize_with(requests.len(), || None);
         let mut sims: Vec<(usize, Request)> = Vec::new();
@@ -613,6 +783,20 @@ impl Server {
                 match batch::run_batch(&b) {
                     Ok(cells) => {
                         for (i, cell) in cells {
+                            if let Some(rec) = &rec {
+                                let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+                                let end_us = rec.now_us();
+                                rec.record_span(
+                                    "serve",
+                                    seq,
+                                    format!("request:simulate:{}", ids[&i]),
+                                    wave_us,
+                                    end_us,
+                                );
+                                rec.counter("serve.requests").add(1);
+                                rec.histogram("serve.request_latency_ms")
+                                    .record((end_us - wave_us) / 1e3);
+                            }
                             responses[i] = Some(Response {
                                 id: ids[&i].to_string(),
                                 latency_ms: ms(t0),
@@ -663,6 +847,14 @@ impl Server {
             });
             for (i, response) in done.into_inner().unwrap_or_else(|p| p.into_inner()) {
                 responses[i] = Some(response);
+            }
+        }
+        if self.metrics_every > 0 {
+            let wave = self.waves.fetch_add(1, Ordering::Relaxed) + 1;
+            if wave % self.metrics_every == 0 {
+                if let Some(rec) = &rec {
+                    eprint!("{}", rec.registry.prometheus());
+                }
             }
         }
         responses.into_iter().map(|r| r.expect("every request answered")).collect()
@@ -858,17 +1050,13 @@ pub struct SmokeOutcome {
     pub dedupe_searches: usize,
     pub batch_grids: usize,
     pub batch_cells: usize,
+    /// Request-latency percentiles from the smoke server's telemetry
+    /// histogram (~9% bucket resolution), not a sorted sample vector.
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Mean per-phase latencies (ms) from the `serve.phase.*` histograms.
+    pub phases: Vec<(String, f64)>,
     pub overloaded: usize,
-}
-
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
 }
 
 fn phase_json(phase: &Option<SmokePhase>) -> String {
@@ -903,7 +1091,9 @@ pub fn run_smoke(cfg: &Config, stop: &AtomicBool) -> Result<SmokeOutcome, String
     scfg.cache_dir = Some(cache_dir.clone());
     // The duplicate burst needs real concurrency to observe dedupes.
     scfg.workers = scfg.workers.max(2);
-    let server = Server::new(scfg);
+    // The smoke's latency percentiles and phase breakdown come from a
+    // private recorder, so the benchmark never toggles the global gate.
+    let server = Server::new(scfg).with_recorder(Arc::new(Recorder::new()));
 
     let workloads: Vec<String> = cfg
         .get("workloads")
@@ -945,15 +1135,14 @@ pub fn run_smoke(cfg: &Config, stop: &AtomicBool) -> Result<SmokeOutcome, String
         )
     };
 
-    let mut latencies: Vec<f64> = Vec::new();
-    let mut timed_wave = |lines: &[String]| -> Result<(SmokePhase, Vec<Response>), String> {
+    let timed_wave = |lines: &[String]| -> Result<(SmokePhase, Vec<Response>), String> {
         let runs_before = server.stats().engine_runs.load(Ordering::Relaxed);
         let t0 = Instant::now();
         let responses = server.run_wave(lines.iter().map(|l| Request::parse(l)).collect());
         let secs = t0.elapsed().as_secs_f64();
         for r in &responses {
             match &r.result {
-                Ok(_) => latencies.push(r.latency_ms),
+                Ok(_) => {}
                 Err(RequestError::Overloaded(msg)) => {
                     return Err(format!("smoke request {:?} shed: {msg}", r.id))
                 }
@@ -1039,8 +1228,15 @@ pub fn run_smoke(cfg: &Config, stop: &AtomicBool) -> Result<SmokeOutcome, String
         let _ = std::fs::remove_dir_all(&cache_dir);
     }
 
-    latencies.sort_by(|a, b| a.total_cmp(b));
-    let (p50_ms, p99_ms) = (percentile(&latencies, 0.50), percentile(&latencies, 0.99));
+    let rec = server.rec().expect("smoke server has a recorder");
+    let lat = rec.histogram("serve.request_latency_ms");
+    let (p50_ms, p99_ms) = (lat.percentile(0.50), lat.percentile(0.99));
+    let phases = phase_means(&rec);
+    let phases_json: String = phases
+        .iter()
+        .map(|(name, mean)| format!("\"{name}\": {mean:.4}"))
+        .collect::<Vec<_>>()
+        .join(", ");
     let occupancy = if batch_grids == 0 { 0.0 } else { batch_cells as f64 / batch_grids as f64 };
     let json = format!(
         "{{\n  \"serve\": \"smoke\",\n  \"interrupted\": {stopped},\n  \"cold\": {},\n  \
@@ -1048,6 +1244,7 @@ pub fn run_smoke(cfg: &Config, stop: &AtomicBool) -> Result<SmokeOutcome, String
          \"searches\": {dedupe_searches}}},\n  \"batch\": {{\"grids\": {batch_grids}, \
          \"cells\": {batch_cells}, \"occupancy\": {occupancy:.2}}},\n  \
          \"latency_ms\": {{\"p50\": {p50_ms:.3}, \"p99\": {p99_ms:.3}}},\n  \
+         \"phase_mean_ms\": {{{phases_json}}},\n  \
          \"overloaded\": {},\n  \"cache\": {{\"entries\": {}, \"shards\": {}, \"hits\": {}, \
          \"misses\": {}}}\n}}\n",
         phase_json(&cold),
@@ -1069,6 +1266,7 @@ pub fn run_smoke(cfg: &Config, stop: &AtomicBool) -> Result<SmokeOutcome, String
         batch_cells,
         p50_ms,
         p99_ms,
+        phases,
         overloaded: server.admission().shed(),
     })
 }
@@ -1222,6 +1420,79 @@ mod tests {
             }
             other => panic!("unexpected payload {other:?}"),
         }
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_monotone_across_a_duplicate_burst() {
+        let rec = Arc::new(Recorder::new());
+        let server = memory_server(4).with_recorder(Arc::clone(&rec));
+        let line = |i: usize| {
+            format!(
+                "{{\"id\": \"dup-{i}\", \"op\": \"tune\", \"workload\": \"heat1d\", \
+                 \"n\": 64, \"m\": 8, \"p\": 2, \"threads\": 4, \"alpha\": 50.0, \
+                 \"beta\": 1.0, \"gamma\": 1.0}}"
+            )
+        };
+        let lines: Vec<String> = (0..4).map(line).collect();
+        let responses = server.run_wave(lines.iter().map(|l| Request::parse(l)).collect());
+        assert!(responses.iter().all(|r| r.result.is_ok()), "{responses:?}");
+        let spans = rec.snapshot_spans();
+        let mut ids: Vec<u64> = spans
+            .iter()
+            .filter(|s| s.track == "serve" && s.name.starts_with("request:tune:"))
+            .map(|s| s.tid)
+            .collect();
+        assert_eq!(ids.len(), 4, "one lifecycle span per request");
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids, vec![1, 2, 3, 4], "ids must be unique and gap-free monotone");
+        // Every request's phase marks tile its lifecycle span exactly.
+        for lifecycle in spans.iter().filter(|s| s.track == "serve") {
+            let sum: f64 = spans
+                .iter()
+                .filter(|p| p.track == "serve.phase" && p.tid == lifecycle.tid)
+                .map(|p| p.dur_us)
+                .sum();
+            assert!(
+                (sum - lifecycle.dur_us).abs() <= 1e-3 * lifecycle.dur_us.max(1.0),
+                "phases sum {sum}us vs lifecycle {}us on lane {}",
+                lifecycle.dur_us,
+                lifecycle.tid
+            );
+        }
+    }
+
+    #[test]
+    fn metrics_op_reports_histogram_percentiles_and_phase_means() {
+        let rec = Arc::new(Recorder::new());
+        let server = memory_server(1).with_recorder(Arc::clone(&rec));
+        let tune = r#"{"id": "t", "op": "tune", "workload": "heat1d", "n": 64, "m": 8, "p": 2, "threads": 4, "alpha": 50.0, "beta": 1.0, "gamma": 1.0}"#;
+        server.handle(&req(tune)).expect("tunable");
+        match server.handle(&req(r#"{"id": "m", "op": "metrics"}"#)).expect("metrics") {
+            Payload::Metrics { enabled, requests, p50_ms, p90_ms, p99_ms, spans, phases } => {
+                assert!(enabled);
+                // The metrics op reads the registry before its own
+                // lifecycle is recorded: only the tune is counted.
+                assert_eq!(requests, 1);
+                assert!(p50_ms > 0.0 && p50_ms <= p90_ms && p90_ms <= p99_ms);
+                assert!(spans > 0);
+                let names: Vec<&str> = phases.iter().map(|(n, _)| n.as_str()).collect();
+                for expect in ["read", "cache", "dedupe", "admission", "search", "respond"] {
+                    assert!(names.contains(&expect), "missing phase {expect}: {names:?}");
+                }
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+        // The rendered payload stays inside the flat wire dialect.
+        let responses = server.run_wave(vec![Request::parse(r#"{"id": "m2", "op": "metrics"}"#)]);
+        let line = responses[0].to_json();
+        assert!(crate::serve::protocol::parse_flat_object(&line).is_ok(), "{line}");
+        // A server with no recorder still answers the op.
+        let bare = memory_server(1);
+        assert!(matches!(
+            bare.handle(&req(r#"{"id": "m", "op": "metrics"}"#)),
+            Ok(Payload::Metrics { .. })
+        ));
     }
 
     #[test]

@@ -267,6 +267,8 @@ pub struct EngineScratch {
     chan_alpha: Vec<f64>,
     chan_beta: Vec<f64>,
     events: u64,
+    /// Lifetime run count for this scratch (telemetry: reuse tracking).
+    runs: u64,
 }
 
 impl EngineScratch {
@@ -297,6 +299,7 @@ impl EngineScratch {
         self.finish.clear();
         self.finish.resize(cp.max_phase, 0.0);
         self.events = 0;
+        self.runs += 1;
     }
 }
 
@@ -443,6 +446,11 @@ pub fn simulate_compiled(
     let nprocs = cp.nprocs as usize;
     network.reset();
     scratch.reset(cp);
+    // The telemetry gate is hoisted out of the event loop: when off,
+    // the hot path pays exactly this one relaxed load.
+    let telem = crate::telemetry::enabled();
+    let reused = scratch.runs > 1;
+    let mut heap_high_water = 0usize;
 
     // Resolve per-channel wire constants where the model permits: the
     // whole run then never crosses the dyn boundary per message.
@@ -478,6 +486,10 @@ pub fn simulate_compiled(
     }
     while let Some(Reverse((_, _, payload))) = run.s.heap.pop() {
         run.s.events += 1;
+        if telem {
+            // +1: the popped event itself was on the heap a moment ago.
+            heap_high_water = heap_high_water.max(run.s.heap.len() + 1);
+        }
         if payload & 1 == 0 {
             run.advance(network, (payload >> 1) as usize);
         } else {
@@ -491,6 +503,17 @@ pub fn simulate_compiled(
                 run.push_event(at, (blocked as u64) << 1);
             }
         }
+    }
+
+    if telem {
+        crate::telemetry::with(|r| {
+            r.counter("engine.runs").add(1);
+            r.counter("engine.events").add(run.s.events);
+            if reused {
+                r.counter("engine.scratch_reuse").add(1);
+            }
+            r.gauge("engine.heap_depth_high_water").set_max(heap_high_water as u64);
+        });
     }
 
     let stuck: Vec<(u32, usize)> = (0..nprocs)
@@ -790,5 +813,33 @@ mod equivalence {
             spans
         };
         assert_eq!(norm(interp.spans), norm(comp.spans));
+    }
+
+    #[test]
+    fn chrome_export_is_byte_equal_across_engines() {
+        // Satellite pin: the two engines' BusySpan streams are not just
+        // equivalent — rendered through chrome_trace_json (after the
+        // same deterministic ordering) they are the *same bytes*.
+        let g = crate::stencil::heat1d_graph(48, 5, 3);
+        let plan =
+            ExecPlan::ca(&g, 2, crate::transform::TransformOptions::default()).unwrap();
+        let mach = Machine::new(3, 2, 40.0, 0.25, 1.0);
+        let mut net_i = crate::sim::network::AlphaBeta::from_machine(&mach);
+        let interp = try_simulate(&g, &plan, &mach, &mut net_i, &UniformCost, true).unwrap();
+        let cp = CompiledPlan::compile(&g, &plan, &UniformCost);
+        let mut net_c = crate::sim::network::AlphaBeta::from_machine(&mach);
+        let mut scratch = EngineScratch::new();
+        let comp = simulate_compiled(&cp, &mach, &mut net_c, &mut scratch, true).unwrap();
+        let norm = |mut spans: Vec<BusySpan>| {
+            spans.sort_by(|a, b| {
+                (a.proc, a.thread, to_bits(a.start), to_bits(a.end), a.what)
+                    .cmp(&(b.proc, b.thread, to_bits(b.start), to_bits(b.end), b.what))
+            });
+            spans
+        };
+        let a = crate::trace::chrome_trace_json(&norm(interp.spans));
+        let b = crate::trace::chrome_trace_json(&norm(comp.spans));
+        assert!(!a.is_empty() && a.contains("compute"));
+        assert_eq!(a, b, "chrome exports diverge between engines");
     }
 }

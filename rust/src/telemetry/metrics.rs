@@ -1,0 +1,334 @@
+//! Metric primitives: counters, gauges, and log-bucketed histograms.
+//!
+//! Everything here is lock-free on the record path (atomics only); the
+//! registry maps are behind mutexes but are touched once per metric
+//! *lookup*, and callers are expected to either hold the returned `Arc`
+//! or look up by name outside hot loops.  No serde: the Prometheus
+//! exposition is hand-rolled text, like every other serializer in this
+//! repo.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Add `n` to the counter.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-written-wins instantaneous value (with a high-water helper).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    /// Set the gauge to `v`.
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if `v` is larger (high-water mark).
+    pub fn set_max(&self, v: u64) {
+        self.value.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of histogram buckets: 64 octaves x 8 sub-buckets.
+const BUCKETS: usize = 512;
+/// Sub-buckets per octave (power of two) — resolution ~9% per bucket.
+const SUBS: f64 = 8.0;
+/// The smallest representable exponent: bucket 0 starts at 2^-20
+/// (~1 microsecond when values are milliseconds).
+const MIN_EXP: f64 = -20.0;
+
+/// A log-linear latency histogram.
+///
+/// Values are bucketed by `floor((log2(v) - MIN_EXP) * SUBS)` into 512
+/// buckets spanning 2^-20 .. 2^44, giving ~9% relative error across 19
+/// decades — plenty for micro-benchmark-to-batch-job latencies.  All
+/// state is atomic; `record` is wait-free.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    /// Sum of recorded values, stored as f64 bits and updated by CAS.
+    sum_bits: AtomicU64,
+    /// Maximum recorded value, stored as f64 bits (values are >= 0).
+    max_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0),
+            max_bits: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_of(v: f64) -> usize {
+        if v <= 0.0 || !v.is_finite() {
+            return 0;
+        }
+        let b = ((v.log2() - MIN_EXP) * SUBS).floor();
+        b.clamp(0.0, (BUCKETS - 1) as f64) as usize
+    }
+
+    /// The representative (geometric-midpoint) value of bucket `i`.
+    fn bucket_value(i: usize) -> f64 {
+        let exp = MIN_EXP + (i as f64 + 0.5) / SUBS;
+        exp.exp2()
+    }
+
+    /// Record one observation.
+    pub fn record(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        let mut cur = self.max_bits.load(Ordering::Relaxed);
+        while v > f64::from_bits(cur) {
+            match self.max_bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded observations.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Largest recorded observation (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Mean of recorded observations (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// The value at quantile `q` in [0, 1], by cumulative bucket walk.
+    ///
+    /// Returns the geometric midpoint of the bucket holding the q-th
+    /// observation, so the answer carries the bucket's ~9% resolution.
+    /// Returns 0.0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max()
+    }
+}
+
+/// A named collection of counters, gauges, and histograms.
+///
+/// Lookups are get-or-create by name; the maps are `BTreeMap`s so the
+/// Prometheus exposition is deterministically ordered.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Registry {
+    /// Get or create the counter named `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = lock_recover(&self.counters);
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = lock_recover(&self.gauges);
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = lock_recover(&self.histograms);
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Look up a histogram without creating it.
+    pub fn find_histogram(&self, name: &str) -> Option<Arc<Histogram>> {
+        lock_recover(&self.histograms).get(name).cloned()
+    }
+
+    /// Names of all registered histograms (sorted).
+    pub fn histogram_names(&self) -> Vec<String> {
+        lock_recover(&self.histograms).keys().cloned().collect()
+    }
+
+    /// Render the whole registry as Prometheus text exposition.
+    ///
+    /// Counters and gauges become plain samples; histograms become
+    /// summary-style quantile samples plus `_sum`/`_count`.  Metric
+    /// names are sanitized to `[a-zA-Z0-9_]` (dots become underscores).
+    pub fn prometheus(&self) -> String {
+        fn sane(name: &str) -> String {
+            name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+        }
+        let mut out = String::new();
+        for (name, c) in lock_recover(&self.counters).iter() {
+            let n = sane(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
+        }
+        for (name, g) in lock_recover(&self.gauges).iter() {
+            let n = sane(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
+        }
+        for (name, h) in lock_recover(&self.histograms).iter() {
+            let n = sane(name);
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            for (label, q) in [("0.5", 0.50), ("0.9", 0.90), ("0.99", 0.99)] {
+                out.push_str(&format!("{n}{{quantile=\"{label}\"}} {}\n", h.percentile(q)));
+            }
+            out.push_str(&format!("{n}_sum {}\n{n}_count {}\n", h.sum(), h.count()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::default();
+        r.counter("a").add(2);
+        r.counter("a").add(3);
+        assert_eq!(r.counter("a").get(), 5);
+        r.gauge("g").set(7);
+        r.gauge("g").set_max(3); // lower: no-op
+        assert_eq!(r.gauge("g").get(), 7);
+        r.gauge("g").set_max(11);
+        assert_eq!(r.gauge("g").get(), 11);
+    }
+
+    #[test]
+    fn histogram_percentiles_track_the_distribution() {
+        let h = Histogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64); // uniform 1..1000
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 500.5).abs() < 1.0);
+        let p50 = h.percentile(0.50);
+        let p99 = h.percentile(0.99);
+        // Bucket resolution is ~9%, so allow 15% slack on each side.
+        assert!((p50 - 500.0).abs() / 500.0 < 0.15, "p50 = {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.15, "p99 = {p99}");
+        assert!(p50 < p99);
+        assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn histogram_edge_values_do_not_panic() {
+        let h = Histogram::default();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN); // dropped
+        h.record(f64::INFINITY); // dropped
+        h.record(1e300); // clamped to top bucket
+        h.record(1e-300); // clamped to bottom bucket
+        assert_eq!(h.count(), 4);
+        assert!(h.percentile(0.5).is_finite());
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::default();
+        r.counter("serve.requests").add(4);
+        r.gauge("engine.heap_depth_high_water").set(9);
+        r.histogram("serve.request_latency_ms").record(2.0);
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE serve_requests counter\nserve_requests 4\n"));
+        assert!(text.contains("# TYPE engine_heap_depth_high_water gauge\n"));
+        assert!(text.contains("serve_request_latency_ms{quantile=\"0.99\"}"));
+        assert!(text.contains("serve_request_latency_ms_count 1\n"));
+        // Every non-comment line is `name maybe{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split(' ').count(), 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn registry_lookup_is_get_or_create() {
+        let r = Registry::default();
+        let a = r.histogram("x");
+        let b = r.histogram("x");
+        a.record(1.0);
+        assert_eq!(b.count(), 1);
+        assert!(r.find_histogram("y").is_none());
+        assert_eq!(r.histogram_names(), vec!["x".to_string()]);
+    }
+}

@@ -1,0 +1,50 @@
+//! Structured span records: who did what, on which track, and when.
+//!
+//! A [`SpanRecord`] is one closed interval on a named track — the
+//! telemetry-side analogue of the simulator's `BusySpan`.  Tracks are
+//! static strings ("serve", "serve.phase", "tune", "engine") so
+//! recording never allocates for the track name; the span name is the
+//! only owned string, built once per span by the instrumentation site.
+
+/// One recorded interval on a telemetry track.
+///
+/// Times are microseconds since the owning recorder's epoch, matching
+/// the Chrome trace format's `ts`/`dur` units so export is a straight
+/// copy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// Track the span belongs to ("serve", "serve.phase", "tune", "engine").
+    pub track: &'static str,
+    /// Human-readable span name, e.g. `request:tune:42` or `eval:b4`.
+    pub name: String,
+    /// Lane within the track: serve request id, tuner search id, …
+    pub tid: u64,
+    /// Start time in microseconds since the recorder's epoch.
+    pub start_us: f64,
+    /// Duration in microseconds (>= 0).
+    pub dur_us: f64,
+}
+
+impl SpanRecord {
+    /// End time in microseconds since the recorder's epoch.
+    pub fn end_us(&self) -> f64 {
+        self.start_us + self.dur_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_is_start_plus_duration() {
+        let s = SpanRecord {
+            track: "serve",
+            name: "request:tune:1".into(),
+            tid: 1,
+            start_us: 10.0,
+            dur_us: 5.0,
+        };
+        assert_eq!(s.end_us(), 15.0);
+    }
+}

@@ -1,10 +1,58 @@
-//! Chrome-trace (about://tracing, Perfetto) export of simulation spans.
+//! Chrome-trace (about://tracing, Perfetto) export of simulation spans
+//! and telemetry spans.
 //!
 //! Hand-rolled JSON (no serde in the vendored crate set): each busy span
 //! becomes a complete ("X") event; processors map to pids, threads to
-//! tids; waits are colourable by name.
+//! tids; waits are colourable by name.  Telemetry spans
+//! ([`crate::telemetry::SpanRecord`]) ride the same file on reserved
+//! pids per track — serve request lifecycles, serve phases, tuner
+//! search timelines, and engine samples land next to the simulated
+//! processor rows, so one Perfetto load shows the whole stack.
 
 use crate::sim::BusySpan;
+use crate::telemetry::SpanRecord;
+
+/// JSON-escape a span name: `"` and `\` are escaped, common whitespace
+/// escapes are used for \n/\t/\r, and remaining control characters
+/// become `\u00XX`.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn push_event(
+    out: &mut String,
+    name: &str,
+    cat: &str,
+    pid: u64,
+    tid: u64,
+    ts: f64,
+    dur: f64,
+    last: bool,
+) {
+    out.push_str(&format!(
+        "  {{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"pid\": {}, \"tid\": {}, \
+         \"ts\": {:.3}, \"dur\": {:.3}}}{}\n",
+        esc(name),
+        esc(cat),
+        pid,
+        tid,
+        ts,
+        dur,
+        if last { "" } else { "," }
+    ));
+}
 
 /// Render spans as a Chrome trace JSON array (`traceEvents` format).
 /// Times are interpreted as microseconds (the format's unit).
@@ -14,7 +62,7 @@ pub fn chrome_trace_json(spans: &[BusySpan]) -> String {
         let dur = (s.end - s.start).max(0.0);
         out.push_str(&format!(
             "  {{\"name\": \"{}\", \"ph\": \"X\", \"pid\": {}, \"tid\": {}, \"ts\": {:.3}, \"dur\": {:.3}}}{}\n",
-            s.what,
+            esc(s.what),
             s.proc,
             s.thread,
             s.start,
@@ -26,12 +74,75 @@ pub fn chrome_trace_json(spans: &[BusySpan]) -> String {
     out
 }
 
+/// The reserved pid a telemetry track renders under (simulated procs
+/// own the low pids).
+fn track_pid(track: &str) -> u64 {
+    match track {
+        "serve" | "serve.phase" => 1001,
+        "tune" => 1002,
+        "engine" => 1003,
+        _ => 1004,
+    }
+}
+
+/// Render simulator spans and telemetry spans into one Chrome trace.
+///
+/// Sim spans keep their proc/thread pid/tid mapping; telemetry spans
+/// land on reserved pids per track (serve → 1001, tune → 1002, engine →
+/// 1003, other → 1004) with the span's own lane (request id, search id)
+/// as tid and the track name as the event category.
+pub fn chrome_trace_with_telemetry(spans: &[BusySpan], telem: &[SpanRecord]) -> String {
+    let total = spans.len() + telem.len();
+    let mut out = String::from("[\n");
+    let mut emitted = 0usize;
+    for s in spans {
+        emitted += 1;
+        push_event(
+            &mut out,
+            s.what,
+            "sim",
+            u64::from(s.proc),
+            u64::from(s.thread),
+            s.start,
+            (s.end - s.start).max(0.0),
+            emitted == total,
+        );
+    }
+    for t in telem {
+        emitted += 1;
+        push_event(
+            &mut out,
+            &t.name,
+            t.track,
+            track_pid(t.track),
+            t.tid,
+            t.start_us,
+            t.dur_us,
+            emitted == total,
+        );
+    }
+    out.push_str("]\n");
+    out
+}
+
 /// Write the Chrome trace to a file.
 pub fn write_chrome_trace(spans: &[BusySpan], path: &str) -> std::io::Result<()> {
     if let Some(dir) = std::path::Path::new(path).parent() {
         std::fs::create_dir_all(dir)?;
     }
     std::fs::write(path, chrome_trace_json(spans))
+}
+
+/// Write a combined sim + telemetry Chrome trace to a file.
+pub fn write_chrome_trace_with_telemetry(
+    spans: &[BusySpan],
+    telem: &[SpanRecord],
+    path: &str,
+) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, chrome_trace_with_telemetry(spans, telem))
 }
 
 #[cfg(test)]
@@ -59,6 +170,56 @@ mod tests {
     #[test]
     fn empty_trace() {
         assert_eq!(chrome_trace_json(&[]), "[\n]\n");
+    }
+
+    #[test]
+    fn names_are_json_escaped() {
+        // A name with a quote, a backslash, a newline, and a control
+        // char used to emit invalid JSON; now every byte is escaped.
+        let spans = vec![span(0, 0, 0.0, 1.0, "say \"hi\" \\ twice\n\u{1}")];
+        let j = chrome_trace_json(&spans);
+        assert!(j.contains("say \\\"hi\\\" \\\\ twice\\n\\u0001"));
+        // The name field closes exactly where it should: quote count is
+        // balanced (6 structural quotes per event * fields + escaped ones
+        // don't terminate strings).
+        let unescaped_quotes =
+            j.as_bytes().windows(2).filter(|w| w[1] == b'"' && w[0] != b'\\').count();
+        assert_eq!(unescaped_quotes % 2, 0, "unbalanced quotes in {j}");
+        assert!(!j.contains('\u{1}'), "raw control byte leaked into JSON");
+    }
+
+    #[test]
+    fn telemetry_spans_share_the_trace() {
+        let sim = vec![span(0, 0, 0.0, 5.0, "compute")];
+        let telem = vec![
+            SpanRecord {
+                track: "serve",
+                name: "request:tune:1".into(),
+                tid: 1,
+                start_us: 0.0,
+                dur_us: 100.0,
+            },
+            SpanRecord {
+                track: "tune",
+                name: "search:heat1d:exhaustive".into(),
+                tid: 0,
+                start_us: 5.0,
+                dur_us: 80.0,
+            },
+        ];
+        let j = chrome_trace_with_telemetry(&sim, &telem);
+        assert!(j.contains("\"name\": \"compute\", \"cat\": \"sim\""));
+        assert!(j.contains("\"name\": \"request:tune:1\", \"cat\": \"serve\", \"ph\": \"X\", \"pid\": 1001, \"tid\": 1"));
+        assert!(j.contains("\"name\": \"search:heat1d:exhaustive\", \"cat\": \"tune\", \"ph\": \"X\", \"pid\": 1002"));
+        // 3 events, 2 commas, closed array.
+        assert_eq!(j.matches('{').count(), 3);
+        assert_eq!(j.matches("},").count(), 2);
+        assert!(j.ends_with("]\n"));
+    }
+
+    #[test]
+    fn combined_trace_of_nothing_is_the_empty_array() {
+        assert_eq!(chrome_trace_with_telemetry(&[], &[]), "[\n]\n");
     }
 
     #[test]

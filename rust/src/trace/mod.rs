@@ -1,9 +1,31 @@
 //! Execution traces: ASCII Gantt charts, Chrome-trace export, and CSV
 //! series for the figures.
+//!
+//! ## Module map (record → aggregate → export)
+//!
+//! This module is the *export* end of the observability story.  The
+//! simulator records [`BusySpan`]s as it runs; [`crate::telemetry`]
+//! records [`crate::telemetry::SpanRecord`]s (serve request lifecycles
+//! and phases, tuner search/eval timelines, engine samples) and
+//! aggregates scalars in its registry.  Here they fan out to renderers:
+//!
+//! | item | input | output |
+//! |------|-------|--------|
+//! | [`gantt_ascii`] | sim spans | terminal Gantt chart |
+//! | [`chrome_trace_json`] | sim spans | Chrome/Perfetto JSON |
+//! | [`chrome_trace_with_telemetry`] | sim + telemetry spans | one combined Chrome/Perfetto JSON |
+//! | [`summary_line`] | a `SimResult` | one-line summary |
+//! | [`FigureSeries`] | figure data | CSV / ASCII table / ASCII plot |
+//!
+//! (Prometheus text exposition lives with the registry itself:
+//! `telemetry::Registry::prometheus`.)
 
 mod chrome;
 
-pub use chrome::{chrome_trace_json, write_chrome_trace};
+pub use chrome::{
+    chrome_trace_json, chrome_trace_with_telemetry, write_chrome_trace,
+    write_chrome_trace_with_telemetry,
+};
 
 use crate::sim::{BusySpan, SimResult};
 use crate::util::Csv;
@@ -12,8 +34,12 @@ use crate::util::Csv;
 ///
 /// Each row is one (proc, thread); time is quantized into `width` columns;
 /// `#` marks compute, `.` marks waiting in a receive, space is idle.
+///
+/// Degenerate inputs (no spans, a zero/negative/NaN `total_time`, or a
+/// zero-column `width`) all render the empty placeholder rather than
+/// panicking or emitting a `NaN` header.
 pub fn gantt_ascii(spans: &[BusySpan], total_time: f64, width: usize) -> String {
-    if spans.is_empty() || total_time <= 0.0 {
+    if spans.is_empty() || width == 0 || total_time.is_nan() || total_time <= 0.0 {
         return String::from("(no spans recorded)\n");
     }
     let mut keys: Vec<(u32, u32)> = spans.iter().map(|s| (s.proc, s.thread)).collect();
@@ -177,6 +203,17 @@ mod tests {
     #[test]
     fn gantt_empty() {
         assert!(gantt_ascii(&[], 0.0, 10).contains("no spans"));
+    }
+
+    #[test]
+    fn gantt_degenerate_inputs_render_the_placeholder() {
+        let spans = vec![span(0, 0, 0.0, 5.0, "compute")];
+        // width == 0 used to underflow at `.min(width - 1)`.
+        assert_eq!(gantt_ascii(&spans, 10.0, 0), "(no spans recorded)\n");
+        // NaN total_time used to sail past the `<= 0.0` guard and
+        // render a NaN header with an all-idle chart.
+        assert_eq!(gantt_ascii(&spans, f64::NAN, 20), "(no spans recorded)\n");
+        assert_eq!(gantt_ascii(&spans, -3.0, 20), "(no spans recorded)\n");
     }
 
     #[test]

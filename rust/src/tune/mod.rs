@@ -286,6 +286,14 @@ pub fn tune_pipeline<W: Workload + Clone>(
     let procs = base.resolved_procs();
     let model_b_continuous = (machine.alpha * machine.threads as f64 / machine.gamma).sqrt();
 
+    // Telemetry: one search id per tune_pipeline call; the whole search
+    // becomes a "tune"-track span, each scored batch contributes
+    // per-candidate eval/prune spans on the same lane.  All of it is
+    // behind the single global gate — a disabled recorder costs one
+    // relaxed load here and nothing in the evaluator.
+    let telem = crate::telemetry::recorder();
+    let search_id = telem.as_ref().map(|r| r.next_search_id()).unwrap_or(0);
+
     // For file- or shard-backed caches, claim the shard's writer lock
     // *before* the lookup and re-read the shard under it: if another
     // process (or thread) is tuning this key right now, we block until
@@ -301,6 +309,9 @@ pub fn tune_pipeline<W: Workload + Clone>(
     // store written by a newer version) counts as a miss and degrades
     // to a fresh search — never an error — and is overwritten below.
     if let Some((chosen, entry)) = tuner.cache.lookup_decoded(&key) {
+        if let Some(rec) = &telem {
+            rec.counter("tune.cache_hits").add(1);
+        }
         let report = TuneReport {
             workload,
             network: network.key(),
@@ -327,6 +338,7 @@ pub fn tune_pipeline<W: Workload + Clone>(
     let search_label = tuner.search.label().to_string();
 
     let t0 = std::time::Instant::now();
+    let t_search0 = telem.as_ref().map(|r| r.now_us());
     // One graph build per (procs, layout), shared across every candidate
     // of a tuning run that only varies strategy/halo/block — the
     // ROADMAP's "share one graph build (Arc) across a tuning run's
@@ -342,6 +354,7 @@ pub fn tune_pipeline<W: Workload + Clone>(
     let prune = tuner.prune;
     let pruned: std::rc::Rc<std::cell::Cell<usize>> = Default::default();
     let pruned_in = std::rc::Rc::clone(&pruned);
+    let telem_in = telem.clone();
     let mut ev = Evaluator::new(|cands: &[Candidate]| {
         // Transformation failures mark a candidate infeasible; every
         // feasible plan joins one sweep grid so the whole batch fans
@@ -419,7 +432,18 @@ pub fn tune_pipeline<W: Workload + Clone>(
                     gamma: machine.gamma,
                     jobs: 0,
                 };
+                let t_seed = telem_in.as_ref().map(|r| r.now_us());
                 let incumbent = sweep::run(&seed_grid).map_err(TuneError::Sim)?[0].makespan;
+                if let (Some(rec), Some(t0)) = (&telem_in, t_seed) {
+                    rec.record_span(
+                        "tune",
+                        search_id,
+                        format!("eval:{}", cands[*si].label()),
+                        t0,
+                        rec.now_us(),
+                    );
+                    rec.counter("tune.evaluations").add(1);
+                }
                 results[*si].1 = Some(incumbent);
                 let cutoff = incumbent * 1.01;
                 let mut kept = Vec::with_capacity(feasible.len());
@@ -431,6 +455,17 @@ pub fn tune_pipeline<W: Workload + Clone>(
                     match bounds[j] {
                         Some(lb) if lb > cutoff && !is_naive => {
                             pruned_in.set(pruned_in.get() + 1);
+                            if let Some(rec) = &telem_in {
+                                let at = rec.now_us();
+                                rec.record_span(
+                                    "tune",
+                                    search_id,
+                                    format!("prune:{}", cands[pair.0].label()),
+                                    at,
+                                    at,
+                                );
+                                rec.counter("tune.pruned").add(1);
+                            }
                         }
                         _ => kept.push(pair),
                     }
@@ -450,7 +485,24 @@ pub fn tune_pipeline<W: Workload + Clone>(
             gamma: machine.gamma,
             jobs: 0,
         };
+        let t_batch = telem_in.as_ref().map(|r| r.now_us());
         let cells = sweep::run(&grid).map_err(TuneError::Sim)?;
+        if let (Some(rec), Some(t0)) = (&telem_in, t_batch) {
+            // The batch fans out as one sweep grid, so every candidate in
+            // it shares the batch interval — the timeline shows which
+            // candidates were scored together and what each round cost.
+            let t1 = rec.now_us();
+            for (i, _) in &feasible {
+                rec.record_span(
+                    "tune",
+                    search_id,
+                    format!("eval:{}", cands[*i].label()),
+                    t0,
+                    t1,
+                );
+            }
+            rec.counter("tune.evaluations").add(feasible.len() as u64);
+        }
         for ((i, _), cell) in feasible.iter().zip(&cells) {
             results[*i].1 = Some(cell.makespan);
         }
@@ -494,6 +546,17 @@ pub fn tune_pipeline<W: Workload + Clone>(
         wall_secs,
         evaluated: ev.evaluated().to_vec(),
     };
+    if let (Some(rec), Some(ts0)) = (&telem, t_search0) {
+        rec.record_span(
+            "tune",
+            search_id,
+            format!("search:{workload}:{search_label}"),
+            ts0,
+            rec.now_us(),
+        );
+        rec.counter("tune.searches").add(1);
+        rec.histogram("tune.search_ms").record(wall_secs * 1e3);
+    }
     tuner.cache.insert(
         key,
         CacheEntry::from_candidate(

@@ -1,0 +1,235 @@
+//! Integration matrix for the telemetry layer: the observability
+//! claims must hold end to end — installing the global recorder turns
+//! on engine counters, tuner search timelines, and serve request
+//! lifecycles all at once and merges them into one Chrome trace; an
+//! injected recorder isolates a server from its siblings and from the
+//! global gate; the log-bucketed histograms order their percentiles
+//! and render a well-formed Prometheus exposition; and draining spans
+//! empties the buffer.
+//!
+//! This binary is its own process, so exercising the global
+//! `telemetry` gate here cannot race the library's unit tests.  Within
+//! the binary, only the first test touches the global recorder; every
+//! other test uses private `Recorder`s (injected or free-standing),
+//! which stay correct no matter what the global gate is doing on a
+//! sibling test thread.
+
+use std::sync::Arc;
+
+use imp_latency::pipeline::{Heat1d, Pipeline};
+use imp_latency::serve::{Payload, Request, Response, ServeConfig, Server};
+use imp_latency::sim::{simulate_compiled, EngineScratch, Machine, NetworkKind};
+use imp_latency::telemetry::{self, Recorder};
+use imp_latency::trace::chrome_trace_with_telemetry;
+use imp_latency::tune::Tuner;
+
+fn memory_server(workers: usize) -> Server {
+    Server::new(ServeConfig {
+        workers,
+        max_in_flight: 16,
+        budget: None,
+        cache_dir: None,
+        slots: 4,
+        search: "exhaustive".to_string(),
+    })
+}
+
+/// A small tune request (distinct `alpha`s keep per-test caches cold).
+fn tune_line(id: &str, alpha: f64) -> String {
+    format!(
+        "{{\"id\": \"{id}\", \"op\": \"tune\", \"workload\": \"heat1d\", \"n\": 96, \
+         \"m\": 6, \"p\": 2, \"threads\": 4, \"alpha\": {alpha}, \"beta\": 0.1, \
+         \"gamma\": 1.0}}"
+    )
+}
+
+fn wave(server: &Server, lines: &[String]) -> Vec<Response> {
+    server.run_wave(lines.iter().map(|l| Request::parse(l)).collect())
+}
+
+/// The whole stack through the one global gate: engine counters, the
+/// pipeline transform timer, a tuner search timeline, and a serve
+/// request lifecycle all land in the same installed recorder, merge
+/// into one Chrome trace, and disappear again when the gate closes.
+/// (The only test in this binary that touches the global recorder.)
+#[test]
+fn global_recorder_traces_engine_tuner_and_serve_end_to_end() {
+    let rec = Arc::new(Recorder::new());
+    telemetry::install(Arc::clone(&rec));
+
+    // Engine + pipeline: a compiled simulation behind the enabled gate.
+    let input = Pipeline::new(Heat1d::new(256, 8))
+        .procs(4)
+        .block(4)
+        .transform()
+        .expect("Theorem 1")
+        .sweep_input();
+    let mach = Machine::new(4, 4, 50.0, 1.0, 1.0);
+    let mut scratch = EngineScratch::new();
+    let mut net = NetworkKind::AlphaBeta.build_for(&mach, input.layout.as_ref());
+    let sim = simulate_compiled(&input.compiled, &mach, net.as_mut(), &mut scratch, true)
+        .expect("pipeline plans are deadlock-free");
+    assert!(!sim.spans.is_empty(), "record_spans=true must yield Gantt spans");
+    assert!(rec.counter("engine.runs").get() >= 1);
+    assert!(rec.counter("engine.events").get() > 0);
+    assert!(rec.counter("pipeline.transforms").get() >= 1);
+    assert!(rec.registry.find_histogram("pipeline.transform_ms").is_some());
+
+    // Tuner: a direct autotune records its search span + counters.
+    let mut tuner = Tuner::exhaustive();
+    Pipeline::new(Heat1d::new(96, 6))
+        .procs(2)
+        .machine(Machine::new(2, 4, 50.0, 1.0, 1.0))
+        .network(NetworkKind::AlphaBeta)
+        .autotune(&mut tuner)
+        .expect("tunable");
+    assert!(rec.counter("tune.searches").get() >= 1);
+
+    // Serve: a server with no injected recorder falls back to the
+    // installed global; the metrics op reads the same aggregates.
+    let server = memory_server(2);
+    let responses = wave(&server, &[tune_line("t1", 60.0)]);
+    assert!(responses[0].result.is_ok(), "{responses:?}");
+    let metrics = wave(&server, &[r#"{"id": "m", "op": "metrics"}"#.to_string()]);
+    match &metrics[0].result {
+        Ok(Payload::Metrics { enabled, requests, .. }) => {
+            assert!(*enabled, "the global recorder must be visible to the metrics op");
+            assert!(*requests >= 1);
+        }
+        other => panic!("expected a metrics payload, got {other:?}"),
+    }
+
+    // Export: all three instrumented layers share one trace.
+    let spans = rec.drain_spans();
+    let lifecycle = spans
+        .iter()
+        .find(|s| s.track == "serve" && s.name == "request:tune:t1")
+        .expect("serve lifecycle span");
+    assert!(
+        spans.iter().any(|s| s.track == "serve.phase" && s.tid == lifecycle.tid),
+        "lifecycle must carry phase marks on its lane"
+    );
+    assert!(
+        spans.iter().any(|s| s.track == "tune" && s.name.starts_with("search:heat1d:")),
+        "tuner search timeline missing: {spans:?}"
+    );
+    let chrome = chrome_trace_with_telemetry(&sim.spans, &spans);
+    assert!(chrome.contains("request:tune:t1"));
+    assert!(chrome.contains("search:heat1d:"));
+    assert!(chrome.contains("\"cat\": \"sim\""));
+    let prom = rec.registry.prometheus();
+    for needle in [
+        "engine_runs",
+        "tune_search_ms",
+        "serve_request_latency_ms",
+        "quantile=\"0.99\"",
+    ] {
+        assert!(prom.contains(needle), "missing {needle} in:\n{prom}");
+    }
+
+    telemetry::set_enabled(false);
+    assert!(telemetry::recorder().is_none(), "a closed gate hides the recorder");
+    assert!(telemetry::with(|r| r.now_us()).is_none());
+}
+
+/// An injected recorder beats the global fallback and keeps sibling
+/// servers' aggregates fully separate.
+#[test]
+fn injected_recorders_isolate_sibling_servers() {
+    let rec1 = Arc::new(Recorder::new());
+    let rec2 = Arc::new(Recorder::new());
+    let s1 = memory_server(1).with_recorder(Arc::clone(&rec1));
+    let s2 = memory_server(1).with_recorder(Arc::clone(&rec2));
+
+    let r = wave(&s1, &[tune_line("iso", 80.0)]);
+    assert!(r[0].result.is_ok(), "{r:?}");
+    assert_eq!(rec1.counter("serve.requests").get(), 1);
+    assert!(rec1.span_count() > 0, "the request must leave lifecycle + phase spans");
+    assert_eq!(rec2.counter("serve.requests").get(), 0);
+    assert_eq!(rec2.span_count(), 0);
+
+    // The sibling's metrics op reads its own (still empty) recorder —
+    // the registry snapshot is taken before the op's own lifecycle is
+    // recorded, so a fresh server reports zero requests.
+    match &wave(&s2, &[r#"{"id": "m", "op": "metrics"}"#.to_string()])[0].result {
+        Ok(Payload::Metrics { enabled, requests, spans, .. }) => {
+            assert!(*enabled);
+            assert_eq!(*requests, 0);
+            assert_eq!(*spans, 0);
+        }
+        other => panic!("expected a metrics payload, got {other:?}"),
+    }
+}
+
+/// Log-bucketed histograms: ordered percentiles, exact count/sum, and
+/// a Prometheus exposition with sanitized names, typed sections, and
+/// summary quantiles.
+#[test]
+fn histogram_percentiles_order_and_prometheus_renders() {
+    let rec = Recorder::new();
+    let h = rec.histogram("serve.request_latency_ms");
+    for v in 1..=100 {
+        h.record(f64::from(v));
+    }
+    let (p50, p90, p99) = (h.percentile(0.50), h.percentile(0.90), h.percentile(0.99));
+    assert!(p50 <= p90 && p90 <= p99, "percentiles out of order: {p50} {p90} {p99}");
+    // Log buckets trade ~9% resolution for O(1) memory; the median of
+    // 1..=100 must still land near 50.
+    assert!((40.0..=60.0).contains(&p50), "p50 {p50} too far from the true median");
+    assert_eq!(h.count(), 100);
+    assert!((h.sum() - 5050.0).abs() < 1e-9, "sum {} drifted", h.sum());
+
+    rec.counter("engine.runs").add(3);
+    rec.gauge("engine.heap_depth_high_water").set_max(7);
+    let prom = rec.registry.prometheus();
+    for needle in [
+        "# TYPE engine_runs counter",
+        "engine_runs 3",
+        "# TYPE engine_heap_depth_high_water gauge",
+        "engine_heap_depth_high_water 7",
+        "# TYPE serve_request_latency_ms summary",
+        "quantile=\"0.5\"",
+        "quantile=\"0.9\"",
+        "quantile=\"0.99\"",
+        "serve_request_latency_ms_count 100",
+    ] {
+        assert!(prom.contains(needle), "missing {needle} in:\n{prom}");
+    }
+}
+
+/// Merged export from a private recorder: simulator Gantt spans and
+/// serve telemetry share one well-formed Chrome trace, and draining
+/// leaves the span buffer empty.
+#[test]
+fn chrome_export_merges_sim_and_serve_spans_and_drain_empties() {
+    let input = Pipeline::new(Heat1d::new(128, 8))
+        .procs(4)
+        .block(4)
+        .transform()
+        .expect("Theorem 1")
+        .sweep_input();
+    let mach = Machine::new(4, 4, 50.0, 1.0, 1.0);
+    let mut scratch = EngineScratch::new();
+    let mut net = NetworkKind::AlphaBeta.build_for(&mach, input.layout.as_ref());
+    let sim = simulate_compiled(&input.compiled, &mach, net.as_mut(), &mut scratch, true)
+        .expect("pipeline plans are deadlock-free");
+    assert!(!sim.spans.is_empty());
+
+    let rec = Arc::new(Recorder::new());
+    let server = memory_server(1).with_recorder(Arc::clone(&rec));
+    let r = wave(&server, &[tune_line("m1", 120.0)]);
+    assert!(r[0].result.is_ok(), "{r:?}");
+    let telem = rec.drain_spans();
+    assert!(telem.iter().any(|s| s.track == "serve.phase"));
+    assert_eq!(rec.span_count(), 0, "drain must empty the buffer");
+    assert_eq!(rec.dropped_spans(), 0);
+
+    let chrome = chrome_trace_with_telemetry(&sim.spans, &telem);
+    assert!(chrome.starts_with("[\n") && chrome.ends_with("]\n"));
+    assert!(chrome.contains("request:tune:m1"));
+    // One complete ("X") event per span, exactly one comma between
+    // consecutive events: the array is machine-loadable.
+    let events = sim.spans.len() + telem.len();
+    assert_eq!(chrome.matches("\"ph\": \"X\"").count(), events);
+    assert_eq!(chrome.matches("},").count(), events - 1);
+}
