@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke trace-smoke
+.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke trace-smoke explain-smoke bench-compare bench-baseline
 
-ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke trace-smoke
+ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke trace-smoke explain-smoke
 
 # The simulator perf tracker: a reduced fig-7/8 sweep across all four
 # network models, emitting per-cell makespan + simulator wall-time so the
@@ -61,6 +61,31 @@ trace-smoke: build
 # (BENCH_partition.json).
 partition-smoke: build
 	$(CARGO) run --release -- partition --smoke
+
+# The causal-profiling tracker: explain every smoke-grid plan — record
+# per-task critical arrivals, extract the observed critical path, and
+# decompose the makespan into compute / exposed latency / bandwidth /
+# idle (BENCH_explain.json + results/explain_chrome.json with the path
+# highlighted as Perfetto flow arrows).  Fails unless every blame
+# decomposition sums bit-exactly, the observed path never undercuts the
+# analytic bound (bit-equal on α-β), CA strictly reduces exposed
+# latency vs naive at high α, and provenance-off throughput stays
+# within 3% of baseline.
+explain-smoke: build
+	$(CARGO) run --release -- explain --smoke
+
+# Advisory drift report: diff the freshly emitted BENCH_*.json smoke
+# artifacts against the committed snapshot in BENCH_baseline/.  Never
+# gates — the hard thresholds live inside each smoke; this surfaces the
+# slow regressions those gates are too coarse to catch.
+bench-compare: build
+	-$(CARGO) run --release -- bench-compare
+
+# Refresh the committed baseline from the current artifacts: run the
+# smokes, then copy every BENCH_*.json into BENCH_baseline/ and commit.
+bench-baseline:
+	mkdir -p BENCH_baseline
+	cp BENCH_*.json BENCH_baseline/
 
 build:
 	$(CARGO) build --release

@@ -11,6 +11,7 @@
 //! ```
 
 use imp_latency::analysis;
+use imp_latency::explain;
 use imp_latency::partition::{Partitioning, ProcGrid};
 use imp_latency::pipeline::{Heat1d, Heat2d, Pipeline};
 use imp_latency::serve::{Request, ServeConfig, Server};
@@ -228,4 +229,23 @@ fn main() {
         chrome.len()
     );
     telemetry::set_enabled(false);
+
+    // 12. Explain it: *why* is the plan this fast (or slow)?  The
+    //     provenance-recording engine replays the run — bit-identical
+    //     timing, one extra branch per event — then walks the
+    //     *observed* critical path back from the finish and decomposes
+    //     the makespan into compute, exposed latency (α actually
+    //     waited on), bandwidth, and idle.  The terms sum back to the
+    //     makespan bit-exactly, and the path is cross-checked against
+    //     the analytic bound from step 10.  `PlanDiff` (see the
+    //     `explain` CLI subcommand, `make explain-smoke`) then diffs
+    //     two plans of the same workload to show which α terms the CA
+    //     transform moved off the path — the paper's figures as a
+    //     machine-checkable artifact.
+    let e = explain::explain_input(&input, &machine, NetworkKind::AlphaBeta, &mut scratch)
+        .expect("verified plans explain");
+    e.blame.verify().expect("blame terms sum bit-exactly");
+    println!("\nwhy is {} this fast?", input.strategy);
+    println!("  {}", explain::report::share_line(&e.blame));
+    println!("  {}", explain::report::crosscheck_line(&e.cross));
 }

@@ -383,6 +383,53 @@ pub fn preset_trace_smoke() -> Config {
     c
 }
 
+/// The `explain` CLI preset: the causal-profiling study — run the
+/// provenance-recording engine over `workloads` × naive/overlap/CA ×
+/// `networks`, decompose every observed makespan into bit-exact
+/// compute / exposed-latency / bandwidth / idle blame terms, diff the
+/// strategies (which α terms the transforms moved off the observed
+/// critical path), attach the differential explanation to a tuned
+/// winner, and bound the cost of the dormant provenance gate.
+pub fn preset_explain() -> Config {
+    let mut c = Config::new();
+    c.set("workloads", "heat1d,heat2d,cg");
+    c.set("networks", "alphabeta,loggp,hier,contended");
+    c.set("n", 4096);
+    c.set("m", 16);
+    c.set("h", 16);
+    c.set("w", 16);
+    c.set("cg_n", 64);
+    c.set("iters", 2);
+    c.set("p", 4);
+    c.set("threads", 8);
+    c.set("alpha", 500.0);
+    c.set("beta", 0.1);
+    c.set("gamma", 1.0);
+    c.set("b", 8);
+    c.set("repeat", 60);
+    c.set("trials", 3);
+    c.set("chrome", "results/explain_chrome.json");
+    c.set("out", "results/explain.json");
+    c
+}
+
+/// The `explain --smoke` preset: the CI causal-profiling tracker,
+/// emitting `BENCH_explain.json` (per-cell blame decompositions, the
+/// naive→overlap→CA differential table, the tuned winner's explanation,
+/// provenance-gate overhead) plus the critical-path-highlighted Chrome
+/// trace on every push.  The exact-sum gate, the bound gate, the
+/// CA-beats-naive exposed-latency gate (α = 500 is deep in the
+/// latency-dominated regime), and the 3% overhead gate fail the run.
+pub fn preset_explain_smoke() -> Config {
+    let mut c = preset_explain();
+    c.set("n", 1024);
+    c.set("h", 12);
+    c.set("w", 12);
+    c.set("repeat", 30);
+    c.set("out", "BENCH_explain.json");
+    c
+}
+
 /// The figure-10 preset: SpMV partition quality vs. makespan per wire
 /// model on the banded+random matrix.
 pub fn preset_fig10() -> Config {
@@ -554,6 +601,18 @@ mod tests {
             }
         }
         assert_eq!(preset_trace_smoke().get("out"), Some("BENCH_trace.json"));
+        for c in [preset_explain(), preset_explain_smoke()] {
+            for k in [
+                "workloads", "networks", "n", "m", "h", "w", "cg_n", "iters", "p", "threads",
+                "alpha", "beta", "gamma", "b", "repeat", "trials", "chrome", "out",
+            ] {
+                assert!(c.get(k).is_some(), "{k}");
+            }
+        }
+        // α = 500 keeps the smoke in the latency-dominated regime the
+        // CA-beats-naive exposed-latency gate assumes.
+        assert_eq!(preset_explain_smoke().get("alpha"), Some("500"));
+        assert_eq!(preset_explain_smoke().get("out"), Some("BENCH_explain.json"));
         for k in ["h", "w", "chords", "m", "p", "threads", "alpha", "beta", "gamma"] {
             assert!(preset_fig10().get(k).is_some(), "{k}");
         }

@@ -1,0 +1,472 @@
+//! Makespan blame attribution: where did every unit of time go?
+//!
+//! The decomposition must **sum bit-exactly** to the engine makespan —
+//! a blame report that loses ulps cannot gate CI, because term drift
+//! and rounding noise become indistinguishable.  Two tools make that
+//! possible:
+//!
+//! * every attributed quantity is the width of an interval between
+//!   *representable* cut points on the engine's own clock, kept as a
+//!   Knuth [`two_diff`] pair whose real-valued sum is the width
+//!   **exactly**; category boundaries (where does bandwidth end and
+//!   latency begin inside one flight?) are rounded cut points, so
+//!   rounding only ever moves an ulp *between* categories, never in or
+//!   out of the total;
+//! * the intervals tile the explained span by construction (processor
+//!   windows tile `[0, finish]`, the observed critical path tiles
+//!   `[0, makespan]`), so the exact real total telescopes to a
+//!   *representable* number — and [`fsum`]'s correctly-rounded
+//!   summation therefore returns it bit-for-bit.
+//!
+//! Two decompositions are produced from one [`Observation`]:
+//!
+//! * **plan-level** ([`Blame::plan`]): walk the *observed critical
+//!   path* backward from the makespan-defining finish — compute windows
+//!   on the critical proc, jumping through each binding message's
+//!   flight (`[post, arrival]`, split into bandwidth / latency /
+//!   queueing by [`NetworkModel::message_cost_split`]) to the sender's
+//!   timeline.  Everything on the path is *exposed* by definition: this
+//!   is the chain that determines the makespan.
+//! * **per-proc** ([`Blame::per_proc`]): each processor's own windows —
+//!   compute, the waited-on part of each receive (split the same way,
+//!   anchored at the arrival), idle for late senders and queueing, plus
+//!   the imbalance tail `makespan − finish[p]` — so every processor's
+//!   terms also sum exactly to the makespan.
+
+use super::provenance::{Observation, WindowKind};
+use crate::analysis::CritPath;
+use crate::sim::NetworkModel;
+
+/// Knuth two-sum: `(s, e)` with `s = fl(a + b)` and `a + b = s + e`
+/// exactly in real arithmetic, for any two finite doubles.
+#[inline]
+pub fn two_sum(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let bv = s - a;
+    let av = s - bv;
+    (s, (a - av) + (b - bv))
+}
+
+/// Exact difference: `(d, e)` with `d = fl(a − b)` and `a − b = d + e`
+/// exactly in real arithmetic.
+#[inline]
+pub fn two_diff(a: f64, b: f64) -> (f64, f64) {
+    two_sum(a, -b)
+}
+
+/// Correctly-rounded sum of `xs` — the `math.fsum` algorithm: a
+/// Shewchuk non-overlapping partial expansion grown per input, summed
+/// largest-down with the round-half correction.  The result is the
+/// double nearest the exact real-valued sum regardless of ordering or
+/// intermediate cancellation; in particular, when the exact sum is
+/// representable (every total this module checks is), it is returned
+/// **bit-for-bit**.
+#[allow(clippy::needless_range_loop)] // the expansion is mutated in place
+pub fn fsum<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    let mut partials: Vec<f64> = Vec::new();
+    for x in xs {
+        let mut x = x;
+        let mut i = 0usize;
+        for j in 0..partials.len() {
+            let mut y = partials[j];
+            if x.abs() < y.abs() {
+                std::mem::swap(&mut x, &mut y);
+            }
+            let hi = x + y;
+            let lo = y - (hi - x);
+            if lo != 0.0 {
+                partials[i] = lo;
+                i += 1;
+            }
+            x = hi;
+        }
+        partials.truncate(i);
+        partials.push(x);
+    }
+    let Some(mut i) = partials.len().checked_sub(1) else {
+        return 0.0;
+    };
+    let mut hi = partials[i];
+    let mut lo = 0.0;
+    while i > 0 {
+        let x = hi;
+        i -= 1;
+        let y = partials[i];
+        hi = x + y;
+        lo = y - (hi - x);
+        if lo != 0.0 {
+            break;
+        }
+    }
+    // Half-ulp boundary: if the discarded tail agrees in sign with the
+    // next partial, the true sum is past the boundary — round once more.
+    if i > 0 && ((lo < 0.0 && partials[i - 1] < 0.0) || (lo > 0.0 && partials[i - 1] > 0.0)) {
+        let y = lo * 2.0;
+        let x = hi + y;
+        if (x - hi) == y {
+            hi = x;
+        }
+    }
+    hi
+}
+
+/// One span's blame, by category.  Components are kept as the raw
+/// [`two_diff`] pairs so totals stay exact; the scalar accessors are
+/// correctly-rounded [`fsum`]s over each category.
+#[derive(Debug, Clone, Default)]
+pub struct BlameTerms {
+    compute: Vec<f64>,
+    latency: Vec<f64>,
+    bandwidth: Vec<f64>,
+    idle: Vec<f64>,
+}
+
+impl BlameTerms {
+    #[inline]
+    fn push(v: &mut Vec<f64>, pair: (f64, f64)) {
+        v.push(pair.0);
+        if pair.1 != 0.0 {
+            v.push(pair.1);
+        }
+    }
+
+    /// Time spent computing (γ·cost of on-path / on-proc tasks).
+    pub fn compute(&self) -> f64 {
+        fsum(self.compute.iter().copied())
+    }
+
+    /// Exposed wire latency: the per-message fixed cost (α, LogGP
+    /// `2o + L`) actually paid on the path / actually waited on.
+    pub fn exposed_latency(&self) -> f64 {
+        fsum(self.latency.iter().copied())
+    }
+
+    /// Exposed wire bandwidth: the β·words streaming term on the path /
+    /// in the wait.
+    pub fn bandwidth(&self) -> f64 {
+        fsum(self.bandwidth.iter().copied())
+    }
+
+    /// Idle / imbalance: stateful-wire queueing (the part of a flight
+    /// above its state-free cost), waits on senders that had not posted
+    /// yet, and — per proc — the `makespan − finish` tail.
+    pub fn idle(&self) -> f64 {
+        fsum(self.idle.iter().copied())
+    }
+
+    /// The correctly-rounded total of **all** components: bit-equal to
+    /// the span being explained (the makespan), because the components'
+    /// exact real sum telescopes to it.
+    pub fn total(&self) -> f64 {
+        fsum(
+            self.compute
+                .iter()
+                .chain(&self.latency)
+                .chain(&self.bandwidth)
+                .chain(&self.idle)
+                .copied(),
+        )
+    }
+}
+
+/// The role of one observed-critical-path segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentKind {
+    /// On-proc compute.
+    Compute,
+    /// The β·words streaming tail of message `msg`'s flight.
+    Bandwidth {
+        /// Message slot on the wire.
+        msg: u32,
+    },
+    /// The per-message fixed cost (α / `2o + L`) of message `msg`.
+    Latency {
+        /// Message slot on the wire.
+        msg: u32,
+    },
+    /// Flight time above message `msg`'s state-free cost: stateful-wire
+    /// queueing (LogGP injection gaps, NIC occupancy).
+    Idle {
+        /// Message slot on the wire.
+        msg: u32,
+    },
+}
+
+/// One segment of the observed critical path.  Segments are
+/// time-ordered and tile `[0, makespan]` bit-contiguously.
+#[derive(Debug, Clone, Copy)]
+pub struct PathSegment {
+    /// The processor whose timeline the segment lies on (for flight
+    /// segments, the *receiving* processor — where the time manifests).
+    pub proc: u32,
+    /// Segment start on the global clock.
+    pub start: f64,
+    /// Segment end on the global clock.
+    pub end: f64,
+    /// What the time was spent on.
+    pub kind: SegmentKind,
+}
+
+/// A message whose flight is on the observed critical path — the flow
+/// arrows a trace renderer should draw.
+#[derive(Debug, Clone, Copy)]
+pub struct PathMessage {
+    /// Message slot.
+    pub msg: u32,
+    /// Sending processor.
+    pub from: u32,
+    /// Receiving processor.
+    pub to: u32,
+    /// Post time on the sender.
+    pub post: f64,
+    /// Delivery time at the receiver.
+    pub arrival: f64,
+}
+
+/// The full blame decomposition of one observed run.
+#[derive(Debug, Clone)]
+pub struct Blame {
+    /// The makespan being explained (bit-equal to the engine's).
+    pub makespan: f64,
+    /// Plan-level terms along the observed critical path.
+    pub plan: BlameTerms,
+    /// Per-processor terms; each (with its imbalance tail) also sums to
+    /// the makespan.
+    pub per_proc: Vec<BlameTerms>,
+    /// The observed critical path, time-ordered, tiling `[0, makespan]`.
+    pub path: Vec<PathSegment>,
+    /// The messages whose flights are on the path.
+    pub path_messages: Vec<PathMessage>,
+}
+
+/// Split the interval `[lo, hi]` backward into (bandwidth, latency,
+/// idle) sub-intervals via representable cut points, pushing the exact
+/// widths into `terms` and any non-empty segments onto `path` (in
+/// backward time order) when a path is being built.
+#[allow(clippy::too_many_arguments)]
+fn split_wait(
+    terms: &mut BlameTerms,
+    path: Option<&mut Vec<PathSegment>>,
+    proc: u32,
+    msg: u32,
+    lo: f64,
+    hi: f64,
+    lat: f64,
+    bw: f64,
+) {
+    let c1 = (hi - bw).clamp(lo, hi);
+    let c2 = (c1 - lat).clamp(lo, c1);
+    BlameTerms::push(&mut terms.bandwidth, two_diff(hi, c1));
+    BlameTerms::push(&mut terms.latency, two_diff(c1, c2));
+    BlameTerms::push(&mut terms.idle, two_diff(c2, lo));
+    if let Some(path) = path {
+        for (kind, s, e) in [
+            (SegmentKind::Bandwidth { msg }, c1, hi),
+            (SegmentKind::Latency { msg }, c2, c1),
+            (SegmentKind::Idle { msg }, lo, c2),
+        ] {
+            if e > s {
+                path.push(PathSegment { proc, start: s, end: e, kind });
+            }
+        }
+    }
+}
+
+impl Blame {
+    /// Decompose `obs` under the wire prices of `network` (the same
+    /// model — or an identically parameterized one — the observed run
+    /// used; only the stateless [`NetworkModel::message_cost_split`] is
+    /// consulted).
+    pub fn explain(obs: &Observation, network: &dyn NetworkModel) -> Blame {
+        let makespan = obs.makespan();
+        let cp = obs.compiled();
+        let nprocs = cp.num_procs() as usize;
+
+        // Per-proc view: every processor's own windows plus its
+        // imbalance tail.
+        let mut per_proc = Vec::with_capacity(nprocs);
+        for p in 0..nprocs {
+            let mut t = BlameTerms::default();
+            for w in obs.windows(p) {
+                match w.kind {
+                    WindowKind::Compute { .. } => {
+                        BlameTerms::push(&mut t.compute, two_diff(w.end, w.start));
+                    }
+                    WindowKind::Send { .. } => {}
+                    WindowKind::Recv { msg, arrival } => {
+                        if arrival > w.start {
+                            let (from, _) = obs.msg_endpoints(msg as usize);
+                            let words = obs.msg_words(msg as usize) as usize;
+                            let (lat, bw) = network.message_cost_split(from, p as u32, words);
+                            split_wait(&mut t, None, p as u32, msg, w.start, arrival, lat, bw);
+                        }
+                    }
+                }
+            }
+            BlameTerms::push(&mut t.idle, two_diff(makespan, obs.result.proc_finish[p]));
+            per_proc.push(t);
+        }
+
+        // Plan-level view: the observed critical path, walked backward
+        // from the makespan-defining finish, jumping through binding
+        // flights to their senders.
+        let mut plan = BlameTerms::default();
+        let mut path: Vec<PathSegment> = Vec::new();
+        let mut path_messages: Vec<PathMessage> = Vec::new();
+        if makespan > 0.0 {
+            let mut p = obs.critical_proc();
+            let mut k = cp.proc_phase_range(p).end;
+            // Each step consumes a window or jumps through a flight, so
+            // the walk is bounded; the guard makes that a hard invariant.
+            let mut guard = cp.num_phases() + cp.num_messages() + 2;
+            while k > cp.proc_phase_range(p).start && guard > 0 {
+                guard -= 1;
+                k -= 1;
+                let w = obs.window(k);
+                match w.kind {
+                    WindowKind::Compute { .. } => {
+                        BlameTerms::push(&mut plan.compute, two_diff(w.end, w.start));
+                        if w.end > w.start {
+                            path.push(PathSegment {
+                                proc: p as u32,
+                                start: w.start,
+                                end: w.end,
+                                kind: SegmentKind::Compute,
+                            });
+                        }
+                    }
+                    WindowKind::Send { .. } => {}
+                    WindowKind::Recv { msg, arrival } => {
+                        if arrival > w.start {
+                            // Binding: the chain runs through this
+                            // flight to the sender's timeline at post.
+                            let sp = obs
+                                .send_phase(msg as usize)
+                                .expect("a delivered message has a send phase");
+                            let post = obs.window(sp).start;
+                            let (from, to) = obs.msg_endpoints(msg as usize);
+                            let words = obs.msg_words(msg as usize) as usize;
+                            let (lat, bw) = network.message_cost_split(from, to, words);
+                            split_wait(
+                                &mut plan,
+                                Some(&mut path),
+                                to,
+                                msg,
+                                post,
+                                arrival,
+                                lat,
+                                bw,
+                            );
+                            path_messages.push(PathMessage { msg, from, to, post, arrival });
+                            p = from as usize;
+                            k = sp;
+                        }
+                    }
+                }
+            }
+            debug_assert!(guard > 0, "critical-path walk did not terminate");
+            path.reverse();
+            path_messages.reverse();
+        }
+
+        Blame { makespan, plan, per_proc, path, path_messages }
+    }
+
+    /// Check every exactness invariant: the plan terms and each proc's
+    /// terms total bit-equal to the makespan, and the path tiles
+    /// `[0, makespan]` bit-contiguously.  `Err` carries the first
+    /// violated invariant — this is what the explain smoke gates on.
+    pub fn verify(&self) -> Result<(), String> {
+        let t = self.plan.total();
+        if t.to_bits() != self.makespan.to_bits() {
+            return Err(format!("plan blame total {t} != makespan {}", self.makespan));
+        }
+        for (p, terms) in self.per_proc.iter().enumerate() {
+            let t = terms.total();
+            if t.to_bits() != self.makespan.to_bits() {
+                return Err(format!("proc {p} blame total {t} != makespan {}", self.makespan));
+            }
+        }
+        let mut clock = 0.0f64;
+        for (i, seg) in self.path.iter().enumerate() {
+            if seg.start.to_bits() != clock.to_bits() {
+                return Err(format!("path segment {i} starts at {} != {clock}", seg.start));
+            }
+            if seg.end < seg.start {
+                return Err(format!("path segment {i} runs backward"));
+            }
+            clock = seg.end;
+        }
+        if !self.path.is_empty() && clock.to_bits() != self.makespan.to_bits() {
+            return Err(format!("path ends at {clock} != makespan {}", self.makespan));
+        }
+        Ok(())
+    }
+}
+
+/// The observed-vs-analytic cross-check: the engine's observed makespan
+/// can never undercut [`crate::analysis::critical_path`]'s lower bound,
+/// and on exact wires (α-β, hierarchical) the two are bit-equal.
+#[derive(Debug, Clone, Copy)]
+pub struct CrossCheck {
+    /// The engine's observed makespan.
+    pub observed: f64,
+    /// The analytic critical-path lower bound.
+    pub bound: f64,
+    /// Whether the wire's per-channel costs resolved exactly.
+    pub exact_wire: bool,
+}
+
+impl CrossCheck {
+    /// Compare an observation against the analytic critical path of the
+    /// same `(graph, plan, machine, wire)` cell.
+    pub fn check(obs: &Observation, analytic: &CritPath) -> CrossCheck {
+        CrossCheck {
+            observed: obs.makespan(),
+            bound: analytic.makespan,
+            exact_wire: analytic.exact_wire,
+        }
+    }
+
+    /// Soundness: `observed ≥ bound`, and bit-equality on exact wires.
+    pub fn ok(&self) -> bool {
+        self.observed >= self.bound
+            && (!self.exact_wire || self.observed.to_bits() == self.bound.to_bits())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_sum_is_error_free() {
+        for (a, b) in [(1.0, 1e-30), (1e16, 1.0), (0.1, 0.2), (-3.5, 3.5e-17)] {
+            let (s, e) = two_sum(a, b);
+            assert_eq!(s, a + b);
+            // The error term recovers what naive addition lost:
+            // reconstruct in higher precision via string-free checks.
+            let (s2, e2) = two_sum(s, e);
+            assert_eq!(s2, s);
+            assert_eq!(e2, 0.0);
+        }
+    }
+
+    #[test]
+    fn fsum_is_correctly_rounded() {
+        assert_eq!(fsum([1e100, 1.0, -1e100]), 1.0);
+        assert_eq!(fsum([1e16, 1.0, -1e16, 1.0]), 2.0);
+        assert_eq!(fsum(vec![0.1f64; 10]), 1.0);
+        assert_eq!(fsum([]), 0.0);
+        // A telescoping chain of two_diff pairs distills to the exact
+        // total no matter how ragged the cut points are.
+        let cuts = [0.0, 0.1, 0.30000000001, 1.7e-3 + 0.5, 40.0 / 7.0, 1234.5678];
+        let mut parts = Vec::new();
+        for w in cuts.windows(2) {
+            let (d, e) = two_diff(w[1], w[0]);
+            parts.push(d);
+            parts.push(e);
+        }
+        assert_eq!(fsum(parts.iter().copied()), cuts[cuts.len() - 1]);
+    }
+}

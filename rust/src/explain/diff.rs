@@ -1,0 +1,131 @@
+//! Differential explanations: how blame moved between two plans of the
+//! same workload.
+//!
+//! The paper's whole §3 story is that the overlap and CA transforms
+//! move α terms *off the critical path*; [`PlanDiff`] states that as a
+//! machine-checkable artifact — the exposed-latency delta between a
+//! baseline plan (typically naive) and a candidate (overlap, CA, or a
+//! tuner winner), term by term.  The explain smoke gates on
+//! `latency_moved_off_path() > 0` for CA vs naive in the high-α regime,
+//! and [`crate::tune::TuneReport`] winners carry the one-line
+//! [`PlanDiff::summary`] against their naive baseline.
+
+use super::blame::Blame;
+
+/// The scalar blame profile of one plan — [`Blame`] flattened to the
+/// per-category totals a diff compares.
+#[derive(Debug, Clone)]
+pub struct BlameSummary {
+    /// Strategy label ("naive", "overlap", "ca(b=4)").
+    pub strategy: String,
+    /// Observed makespan.
+    pub makespan: f64,
+    /// On-path compute.
+    pub compute: f64,
+    /// On-path exposed latency (the α terms).
+    pub latency: f64,
+    /// On-path exposed bandwidth (the β·words terms).
+    pub bandwidth: f64,
+    /// On-path queueing / idle.
+    pub idle: f64,
+    /// Messages whose flights are on the observed critical path.
+    pub path_messages: usize,
+}
+
+impl BlameSummary {
+    /// Flatten `blame`'s plan-level terms under a strategy label.
+    pub fn from_blame(strategy: impl Into<String>, blame: &Blame) -> BlameSummary {
+        BlameSummary {
+            strategy: strategy.into(),
+            makespan: blame.makespan,
+            compute: blame.plan.compute(),
+            latency: blame.plan.exposed_latency(),
+            bandwidth: blame.plan.bandwidth(),
+            idle: blame.plan.idle(),
+            path_messages: blame.path_messages.len(),
+        }
+    }
+}
+
+/// A differential explanation of two plans of the same workload on the
+/// same machine and wire.
+#[derive(Debug, Clone)]
+pub struct PlanDiff {
+    /// The reference plan (typically naive).
+    pub baseline: BlameSummary,
+    /// The plan being explained against it.
+    pub candidate: BlameSummary,
+}
+
+impl PlanDiff {
+    /// Pair a baseline with a candidate profile.
+    pub fn between(baseline: BlameSummary, candidate: BlameSummary) -> PlanDiff {
+        PlanDiff { baseline, candidate }
+    }
+
+    /// Exposed latency the candidate removed from the critical path
+    /// (positive = the candidate waits on fewer α terms — the paper's
+    /// latency-hiding claim, quantified).
+    pub fn latency_moved_off_path(&self) -> f64 {
+        self.baseline.latency - self.candidate.latency
+    }
+
+    /// Critical-path messages the candidate removed.
+    pub fn messages_moved_off_path(&self) -> isize {
+        self.baseline.path_messages as isize - self.candidate.path_messages as isize
+    }
+
+    /// Makespan ratio baseline / candidate (> 1 = candidate faster).
+    pub fn speedup(&self) -> f64 {
+        if self.candidate.makespan > 0.0 {
+            self.baseline.makespan / self.candidate.makespan
+        } else {
+            1.0
+        }
+    }
+
+    /// One human-readable line, e.g. for a tune-report attachment:
+    /// `"ca(b=4) vs naive: 1.83x; exposed latency 4200 -> 600 (-3600);
+    /// path messages 84 -> 12"`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} vs {}: {:.2}x; exposed latency {:.4} -> {:.4} ({:+.4}); path messages {} -> {}",
+            self.candidate.strategy,
+            self.baseline.strategy,
+            self.speedup(),
+            self.baseline.latency,
+            self.candidate.latency,
+            -self.latency_moved_off_path(),
+            self.baseline.path_messages,
+            self.candidate.path_messages,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(strategy: &str, makespan: f64, latency: f64, msgs: usize) -> BlameSummary {
+        BlameSummary {
+            strategy: strategy.into(),
+            makespan,
+            compute: makespan - latency,
+            latency,
+            bandwidth: 0.0,
+            idle: 0.0,
+            path_messages: msgs,
+        }
+    }
+
+    #[test]
+    fn diff_directions() {
+        let d = PlanDiff::between(s("naive", 100.0, 40.0, 8), s("ca(b=4)", 70.0, 10.0, 2));
+        assert_eq!(d.latency_moved_off_path(), 30.0);
+        assert_eq!(d.messages_moved_off_path(), 6);
+        assert!((d.speedup() - 100.0 / 70.0).abs() < 1e-12);
+        let line = d.summary();
+        assert!(line.contains("ca(b=4) vs naive"), "{line}");
+        assert!(line.contains("path messages 8 -> 2"), "{line}");
+    }
+}

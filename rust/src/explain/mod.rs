@@ -1,0 +1,103 @@
+//! Causal profiling: *why* is this plan this slow?
+//!
+//! The engine can say *that* a plan is faster ([`crate::sim`]) and the
+//! analyzer can bound how fast it could ever be
+//! ([`crate::analysis::critical_path`]); this subsystem explains the
+//! gap.  Data flows through three stages:
+//!
+//! * [`provenance`] — run the compiled engine with observation on
+//!   ([`crate::sim::simulate_observed`]) and type the recorded phase
+//!   windows: [`Observation`] ties the [`crate::sim::CompiledPlan`] to
+//!   when every lowered phase actually ran and which message each
+//!   receive waited on.  Observed results are **bit-identical** to
+//!   unobserved runs; with no buffer attached the hot loop pays one
+//!   branch per phase.
+//! * [`blame`] — walk back from the makespan-defining finish to extract
+//!   the *observed critical path*, and decompose the makespan into
+//!   compute / exposed latency / bandwidth / idle-imbalance terms that
+//!   sum **bit-exactly** ([`fsum`] over [`two_diff`] pairs), per plan
+//!   (along the path) and per proc; cross-check against the analytic
+//!   bound ([`CrossCheck`]: observed ≥ bound always, bit-equal on exact
+//!   wires).
+//! * [`diff`] — compare two plans of the same workload ([`PlanDiff`]):
+//!   which α terms the overlap/CA transforms moved off the critical
+//!   path — the paper's §3 claim as a machine-checkable artifact.
+//!
+//! [`report`] renders one explanation in the repo's hand-rolled JSON
+//! style for `BENCH_explain.json`, the `explain` CLI subcommand, and
+//! the serve daemon's `explain` op.
+
+#![deny(missing_docs)]
+
+pub mod blame;
+pub mod diff;
+pub mod provenance;
+pub mod report;
+
+pub use blame::{fsum, two_diff, two_sum, Blame, BlameTerms, CrossCheck, PathSegment, SegmentKind};
+pub use diff::{BlameSummary, PlanDiff};
+pub use provenance::{Observation, PhaseWindow, WindowKind};
+pub use report::ExplainCell;
+
+use crate::analysis::critical_path;
+use crate::sim::sweep::SweepInput;
+use crate::sim::{EngineScratch, Machine, NetworkKind};
+use std::sync::Arc;
+
+/// One fully explained sweep cell: the observation, its blame
+/// decomposition, and the analytic cross-check.
+#[derive(Debug)]
+pub struct Explanation {
+    /// Workload tag of the input.
+    pub workload: String,
+    /// Strategy label of the input.
+    pub strategy: String,
+    /// Wire model label.
+    pub network: &'static str,
+    /// Processor count of the plan.
+    pub procs: u32,
+    /// The observed run.
+    pub obs: Observation,
+    /// Its blame decomposition.
+    pub blame: Blame,
+    /// Observed vs analytic critical path.
+    pub cross: CrossCheck,
+}
+
+/// Observe, blame, and cross-check one sweep input on the *effective*
+/// machine its sweep cell would use — the base machine's β scaled by the
+/// input's words-per-value, the wire built layout-aware — exactly
+/// mirroring the sweep's own cell evaluation (and
+/// [`crate::analysis::input_lower_bound`]'s bound construction).
+pub fn explain_input(
+    input: &SweepInput,
+    base: &Machine,
+    kind: NetworkKind,
+    scratch: &mut EngineScratch,
+) -> Result<Explanation, String> {
+    let procs = input.plan.per_proc.len() as u32;
+    let mach = Machine::new(
+        procs,
+        base.threads,
+        base.alpha,
+        base.beta * input.words_per_value as f64,
+        base.gamma,
+    );
+    let mut net = kind.build_for(&mach, input.layout.as_ref());
+    let obs = Observation::observe(Arc::clone(&input.compiled), &mach, net.as_mut(), scratch)
+        .map_err(|e| format!("{}/{}: {e:?}", input.workload, input.strategy))?;
+    let blame = Blame::explain(&obs, net.as_ref());
+    let analytic =
+        critical_path(&input.graph, &input.plan, &mach, net.as_ref(), input.cost.as_ref())
+            .map_err(|e| format!("{}/{}: {e}", input.workload, input.strategy))?;
+    let cross = CrossCheck::check(&obs, &analytic);
+    Ok(Explanation {
+        workload: input.workload.to_string(),
+        strategy: input.strategy.to_string(),
+        network: kind.label(),
+        procs,
+        obs,
+        blame,
+        cross,
+    })
+}

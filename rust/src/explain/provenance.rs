@@ -1,0 +1,268 @@
+//! Observed runs: one compiled simulation plus the engine's own record
+//! of when every lowered phase executed.
+//!
+//! [`Observation::observe`] runs [`crate::sim::simulate_observed`] — the
+//! PR-5 compiled engine with the provenance gate *on* — and packages the
+//! bit-identical [`SimResult`] together with the recorded
+//! [`ProvenanceBuffer`] and the message-resolution maps (slot → sending
+//! phase / channel / word count) the blame walk in
+//! [`super::blame`] jumps through.  This is the *only* module that
+//! interprets raw provenance indices; everything downstream sees typed
+//! [`PhaseWindow`]s.
+
+use crate::sim::{
+    simulate_compiled, simulate_observed, CPhase, CompiledPlan, EngineScratch, Machine,
+    NetworkModel, ProvenanceBuffer, SimError, SimResult,
+};
+use std::sync::Arc;
+
+/// The observed role of one lowered phase, with everything the blame
+/// walk needs resolved (channel endpoints, word counts, arrivals).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WindowKind {
+    /// A compute phase of `tasks` list-scheduled tasks.
+    Compute {
+        /// Number of tasks in the phase.
+        tasks: u32,
+    },
+    /// A send posting message slot `msg` of `words` words from proc
+    /// `from` to proc `to` (zero-width: posting costs the sender
+    /// nothing).
+    Send {
+        /// Message slot posted.
+        msg: u32,
+        /// Words on the wire (`0` = pure synchronization).
+        words: u32,
+        /// Sending processor.
+        from: u32,
+        /// Receiving processor.
+        to: u32,
+    },
+    /// A receive of message slot `msg`; `arrival` is when the wire
+    /// delivered it (the window's `end` is `max(start, arrival)`).
+    Recv {
+        /// Message slot received.
+        msg: u32,
+        /// Wire delivery time of that slot.
+        arrival: f64,
+    },
+}
+
+/// One lowered phase's observed execution window: `[start, end]` on
+/// processor `proc`'s clock, with the phase's role resolved.  Windows of
+/// one processor tile `[0, finish[proc]]` contiguously — the invariant
+/// the blame walk's exact arithmetic rests on (pinned by the engine's
+/// own provenance test and re-checked per proc by
+/// [`super::blame::Blame::verify`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseWindow {
+    /// Global phase index in the compiled stream.
+    pub index: usize,
+    /// Processor that executed the phase.
+    pub proc: u32,
+    /// Clock when the phase began (compute start / send post / the
+    /// clock a receive found, i.e. when any exposed wait began).
+    pub start: f64,
+    /// Clock when the phase was satisfied.
+    pub end: f64,
+    /// What the phase was.
+    pub kind: WindowKind,
+}
+
+/// One observed run: the compiled plan it replayed, the engine result
+/// (bit-identical to an unobserved run), and the provenance recorded
+/// along the way.
+///
+/// Unlike [`EngineScratch`], an `Observation` owns its
+/// [`ProvenanceBuffer`]: explanation is an offline, per-plan activity,
+/// not the sweep hot path, so the buffer is not recycled across plans.
+#[derive(Debug)]
+pub struct Observation {
+    cp: Arc<CompiledPlan>,
+    /// The engine result of the observed run.
+    pub result: SimResult,
+    prov: ProvenanceBuffer,
+    /// Per message slot: global phase index of its `Send` (`u32::MAX` =
+    /// the slot was never posted — only possible in malformed plans).
+    msg_send: Vec<u32>,
+    /// Per message slot: word count of its `Send`.
+    msg_words: Vec<u32>,
+    /// Per message slot: `(from, to)` endpoints of its channel.
+    msg_ends: Vec<(u32, u32)>,
+    /// Per global phase: the processor that owns it.
+    phase_proc: Vec<u32>,
+}
+
+impl Observation {
+    /// Run `cp` on `m` under `network` with provenance recording on and
+    /// package the result.  The returned [`SimResult`] is bit-identical
+    /// to what [`simulate_compiled`] produces for the same cell.
+    pub fn observe(
+        cp: Arc<CompiledPlan>,
+        m: &Machine,
+        network: &mut dyn NetworkModel,
+        scratch: &mut EngineScratch,
+    ) -> Result<Observation, SimError> {
+        let mut prov = ProvenanceBuffer::new();
+        let result = simulate_observed(&cp, m, network, scratch, false, &mut prov)?;
+        let mut msg_send = vec![u32::MAX; cp.num_messages()];
+        let mut msg_words = vec![0u32; cp.num_messages()];
+        let mut msg_ends = vec![(0u32, 0u32); cp.num_messages()];
+        let mut phase_proc = vec![0u32; cp.num_phases()];
+        for p in 0..cp.num_procs() as usize {
+            for k in cp.proc_phase_range(p) {
+                phase_proc[k] = p as u32;
+                if let CPhase::Send { msg, chan, words } = cp.phase(k) {
+                    msg_send[msg as usize] = k as u32;
+                    msg_words[msg as usize] = words;
+                    msg_ends[msg as usize] = cp.channel(chan as usize);
+                }
+            }
+        }
+        Ok(Observation { cp, result, prov, msg_send, msg_words, msg_ends, phase_proc })
+    }
+
+    /// The compiled plan this observation replayed.
+    pub fn compiled(&self) -> &CompiledPlan {
+        &self.cp
+    }
+
+    /// The observed makespan (bit-equal to `result.total_time`).
+    pub fn makespan(&self) -> f64 {
+        self.result.total_time
+    }
+
+    /// The processor whose finish *is* the makespan (first such proc on
+    /// bit-equal ties — the same `fold(0.0, f64::max)` the engine uses).
+    pub fn critical_proc(&self) -> usize {
+        let mut best = 0usize;
+        for (p, &f) in self.result.proc_finish.iter().enumerate() {
+            if f > self.result.proc_finish[best] {
+                best = p;
+            }
+        }
+        best
+    }
+
+    /// The typed window of global phase `k`.
+    pub fn window(&self, k: usize) -> PhaseWindow {
+        let kind = match self.cp.phase(k) {
+            CPhase::Compute { len, .. } => WindowKind::Compute { tasks: len },
+            CPhase::Send { msg, chan, words } => {
+                let (from, to) = self.cp.channel(chan as usize);
+                WindowKind::Send { msg, words, from, to }
+            }
+            CPhase::Recv { msg } => {
+                WindowKind::Recv { msg, arrival: self.prov.msg_arrival(msg as usize) }
+            }
+        };
+        PhaseWindow {
+            index: k,
+            proc: self.phase_proc[k],
+            start: self.prov.phase_start(k),
+            end: self.prov.phase_end(k),
+            kind,
+        }
+    }
+
+    /// Processor `p`'s windows in execution order; they tile
+    /// `[0, finish[p]]` contiguously.
+    pub fn windows(&self, p: usize) -> impl Iterator<Item = PhaseWindow> + '_ {
+        self.cp.proc_phase_range(p).map(move |k| self.window(k))
+    }
+
+    /// Global phase index of the `Send` that posts message slot `msg`
+    /// (`None` for a slot no send names — malformed plans only).
+    pub fn send_phase(&self, msg: usize) -> Option<usize> {
+        let k = self.msg_send[msg];
+        (k != u32::MAX).then_some(k as usize)
+    }
+
+    /// Word count of message slot `msg`.
+    pub fn msg_words(&self, msg: usize) -> u32 {
+        self.msg_words[msg]
+    }
+
+    /// `(from, to)` processor endpoints of message slot `msg`.
+    pub fn msg_endpoints(&self, msg: usize) -> (u32, u32) {
+        self.msg_ends[msg]
+    }
+
+    /// Wire delivery time of message slot `msg` (`-1.0` = never posted).
+    pub fn msg_arrival(&self, msg: usize) -> f64 {
+        self.prov.msg_arrival(msg)
+    }
+}
+
+/// Run the same cell unobserved and check the observed result is
+/// bit-identical — the "observation is pure" invariant, callable from
+/// smokes and tests without reaching into engine internals.  Returns the
+/// unobserved result.
+pub fn unobserved_twin(
+    obs: &Observation,
+    m: &Machine,
+    network: &mut dyn NetworkModel,
+    scratch: &mut EngineScratch,
+) -> Result<SimResult, SimError> {
+    let plain = simulate_compiled(obs.compiled(), m, network, scratch, false)?;
+    debug_assert_eq!(plain.total_time.to_bits(), obs.result.total_time.to_bits());
+    Ok(plain)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{AlphaBeta, ExecPlan, UniformCost};
+    use crate::stencil::heat1d_graph;
+
+    fn observe_heat1d() -> (Observation, Machine) {
+        let g = heat1d_graph(48, 5, 4);
+        let plan = ExecPlan::overlap(&g);
+        let cp = Arc::new(CompiledPlan::compile(&g, &plan, &UniformCost));
+        let mach = Machine::new(4, 2, 40.0, 0.5, 1.0);
+        let mut net = AlphaBeta::from_machine(&mach);
+        let mut scratch = EngineScratch::new();
+        let obs = Observation::observe(cp, &mach, &mut net, &mut scratch).unwrap();
+        (obs, mach)
+    }
+
+    #[test]
+    fn windows_tile_and_sends_resolve() {
+        let (obs, _) = observe_heat1d();
+        let cp = obs.compiled();
+        for p in 0..cp.num_procs() as usize {
+            let mut clock = 0.0f64;
+            for w in obs.windows(p) {
+                assert_eq!(w.proc, p as u32);
+                assert_eq!(w.start.to_bits(), clock.to_bits(), "phase {} tiles", w.index);
+                assert!(w.end >= w.start);
+                clock = w.end;
+                if let WindowKind::Recv { msg, arrival } = w.kind {
+                    // Every received slot was posted by a known send on
+                    // the channel's `from` proc, before it arrived.
+                    let sp = obs.send_phase(msg as usize).expect("posted");
+                    let sw = obs.window(sp);
+                    assert_eq!(sw.proc, obs.msg_endpoints(msg as usize).0);
+                    assert!(sw.start <= arrival);
+                    assert_eq!(obs.msg_arrival(msg as usize).to_bits(), arrival.to_bits());
+                }
+            }
+            assert_eq!(clock.to_bits(), obs.result.proc_finish[p].to_bits());
+        }
+    }
+
+    #[test]
+    fn critical_proc_matches_makespan() {
+        let (obs, mach) = observe_heat1d();
+        assert_eq!(
+            obs.result.proc_finish[obs.critical_proc()].to_bits(),
+            obs.makespan().to_bits()
+        );
+        // And the observed run is bit-identical to the unobserved twin.
+        let mut net = AlphaBeta::from_machine(&mach);
+        let mut scratch = EngineScratch::new();
+        let twin = unobserved_twin(&obs, &mach, &mut net, &mut scratch).unwrap();
+        assert_eq!(twin.total_time.to_bits(), obs.makespan().to_bits());
+        assert_eq!(twin.proc_finish, obs.result.proc_finish);
+    }
+}

@@ -1,0 +1,205 @@
+//! Rendering explanations in the repo's hand-rolled JSON style.
+//!
+//! One [`ExplainCell`] is the flat record of one explained sweep cell —
+//! what `BENCH_explain.json`, the `explain` CLI table, and the serve
+//! daemon's `explain` op all serialize.  Floats are formatted with
+//! Rust's shortest round-trip `Display`, so bit-exact values survive
+//! the JSON round trip.
+
+use super::blame::SegmentKind;
+use super::{Blame, CrossCheck, Explanation};
+use crate::sim::BusySpan;
+use crate::trace::MessageFlow;
+
+/// The flat, serializable record of one explained cell.
+#[derive(Debug, Clone)]
+pub struct ExplainCell {
+    /// Workload tag.
+    pub workload: String,
+    /// Strategy label.
+    pub strategy: String,
+    /// Wire model label.
+    pub network: &'static str,
+    /// Processor count.
+    pub procs: u32,
+    /// Observed makespan.
+    pub makespan: f64,
+    /// On-path compute total.
+    pub compute: f64,
+    /// On-path exposed latency total.
+    pub latency: f64,
+    /// On-path exposed bandwidth total.
+    pub bandwidth: f64,
+    /// On-path queueing / idle total.
+    pub idle: f64,
+    /// Every exactness invariant held ([`Blame::verify`]).
+    pub exact: bool,
+    /// Analytic critical-path lower bound of the same cell.
+    pub bound: f64,
+    /// The wire's costs resolved exactly (bound must be bit-equal).
+    pub exact_wire: bool,
+    /// Observed ≥ bound (bit-equal on exact wires).
+    pub bound_ok: bool,
+    /// Segments on the observed critical path.
+    pub path_segments: usize,
+    /// Messages whose flights are on the path.
+    pub path_messages: usize,
+}
+
+impl ExplainCell {
+    /// Flatten one [`Explanation`].
+    pub fn from_explanation(e: &Explanation) -> ExplainCell {
+        ExplainCell {
+            workload: e.workload.clone(),
+            strategy: e.strategy.clone(),
+            network: e.network,
+            procs: e.procs,
+            makespan: e.blame.makespan,
+            compute: e.blame.plan.compute(),
+            latency: e.blame.plan.exposed_latency(),
+            bandwidth: e.blame.plan.bandwidth(),
+            idle: e.blame.plan.idle(),
+            exact: e.blame.verify().is_ok(),
+            bound: e.cross.bound,
+            exact_wire: e.cross.exact_wire,
+            bound_ok: e.cross.ok(),
+            path_segments: e.blame.path.len(),
+            path_messages: e.blame.path_messages.len(),
+        }
+    }
+
+    /// One JSON object, every line prefixed with `indent`.
+    pub fn to_json(&self, indent: &str) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("{indent}{{\n"));
+        s.push_str(&format!("{indent}  \"workload\": \"{}\",\n", self.workload));
+        s.push_str(&format!("{indent}  \"strategy\": \"{}\",\n", self.strategy));
+        s.push_str(&format!("{indent}  \"network\": \"{}\",\n", self.network));
+        s.push_str(&format!("{indent}  \"procs\": {},\n", self.procs));
+        s.push_str(&format!("{indent}  \"makespan\": {},\n", self.makespan));
+        s.push_str(&format!("{indent}  \"compute\": {},\n", self.compute));
+        s.push_str(&format!("{indent}  \"exposed_latency\": {},\n", self.latency));
+        s.push_str(&format!("{indent}  \"bandwidth\": {},\n", self.bandwidth));
+        s.push_str(&format!("{indent}  \"idle\": {},\n", self.idle));
+        s.push_str(&format!("{indent}  \"exact\": {},\n", self.exact));
+        s.push_str(&format!("{indent}  \"bound\": {},\n", self.bound));
+        s.push_str(&format!("{indent}  \"exact_wire\": {},\n", self.exact_wire));
+        s.push_str(&format!("{indent}  \"bound_ok\": {},\n", self.bound_ok));
+        s.push_str(&format!("{indent}  \"path_segments\": {},\n", self.path_segments));
+        s.push_str(&format!("{indent}  \"path_messages\": {}\n", self.path_messages));
+        s.push_str(&format!("{indent}}}"));
+        s
+    }
+}
+
+/// A JSON array of cells, each rendered by [`ExplainCell::to_json`].
+pub fn cells_to_json(cells: &[ExplainCell], indent: &str) -> String {
+    let mut s = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        s.push_str(&c.to_json(&format!("{indent}  ")));
+        s.push_str(if i + 1 < cells.len() { ",\n" } else { "\n" });
+    }
+    s.push_str(&format!("{indent}]"));
+    s
+}
+
+/// The observed critical path as renderable spans: one `crit:*` span
+/// per path segment, on the owning processor's reserved lane (tid 99),
+/// so a Perfetto load shows the path highlighted alongside the normal
+/// compute/wait rows.
+pub fn path_spans(blame: &Blame) -> Vec<BusySpan> {
+    blame
+        .path
+        .iter()
+        .map(|seg| BusySpan {
+            proc: seg.proc,
+            thread: 99,
+            start: seg.start,
+            end: seg.end,
+            what: match seg.kind {
+                SegmentKind::Compute => "crit:compute",
+                SegmentKind::Bandwidth { .. } => "crit:bandwidth",
+                SegmentKind::Latency { .. } => "crit:latency",
+                SegmentKind::Idle { .. } => "crit:idle",
+            },
+        })
+        .collect()
+}
+
+/// The on-path message flights as Perfetto flow arrows
+/// ([`crate::trace::chrome_trace_with_flows`]).
+pub fn path_flows(blame: &Blame) -> Vec<MessageFlow> {
+    blame
+        .path_messages
+        .iter()
+        .map(|m| MessageFlow {
+            id: u64::from(m.msg),
+            from_proc: m.from,
+            post: m.post,
+            to_proc: m.to,
+            arrival: m.arrival,
+        })
+        .collect()
+}
+
+/// The blame share table of one decomposition: category → fraction of
+/// the makespan, for human-readable summaries (`explain` CLI output).
+pub fn share_line(blame: &Blame) -> String {
+    let m = if blame.makespan > 0.0 { blame.makespan } else { 1.0 };
+    format!(
+        "compute {:.1}% | exposed latency {:.1}% | bandwidth {:.1}% | idle {:.1}%",
+        100.0 * blame.plan.compute() / m,
+        100.0 * blame.plan.exposed_latency() / m,
+        100.0 * blame.plan.bandwidth() / m,
+        100.0 * blame.plan.idle() / m,
+    )
+}
+
+/// One line for the cross-check, e.g. `"observed 812.5 >= bound 812.5
+/// (exact wire, bit-equal)"`.
+pub fn crosscheck_line(c: &CrossCheck) -> String {
+    if c.exact_wire {
+        let eq = if c.observed.to_bits() == c.bound.to_bits() { "bit-equal" } else { "DRIFT" };
+        format!("observed {} >= bound {} (exact wire, {eq})", c.observed, c.bound)
+    } else {
+        format!("observed {} >= bound {} (lower bound only)", c.observed, c.bound)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{AlphaBeta, CompiledPlan, EngineScratch, ExecPlan, Machine, UniformCost};
+    use crate::stencil::heat1d_graph;
+    use std::sync::Arc;
+
+    #[test]
+    fn cell_json_is_balanced_and_keyed() {
+        let g = heat1d_graph(32, 3, 4);
+        let plan = ExecPlan::naive(&g);
+        let cp = Arc::new(CompiledPlan::compile(&g, &plan, &UniformCost));
+        let mach = Machine::new(4, 1, 100.0, 0.5, 1.0);
+        let mut net = AlphaBeta::from_machine(&mach);
+        let mut scratch = EngineScratch::new();
+        let obs =
+            super::super::Observation::observe(cp, &mach, &mut net, &mut scratch).unwrap();
+        let blame = Blame::explain(&obs, &net);
+        blame.verify().unwrap();
+        let e = Explanation {
+            workload: "heat1d".into(),
+            strategy: "naive".into(),
+            network: "alphabeta",
+            procs: 4,
+            cross: CrossCheck { observed: obs.makespan(), bound: obs.makespan(), exact_wire: true },
+            blame,
+            obs,
+        };
+        let cell = ExplainCell::from_explanation(&e);
+        assert!(cell.exact && cell.bound_ok);
+        let json = cells_to_json(&[cell], "");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        for key in ["\"exposed_latency\"", "\"bound_ok\"", "\"path_messages\""] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+    }
+}

@@ -77,6 +77,16 @@
 //!   requests deduped by cache key, compatible simulations batched into
 //!   shared [`sim::sweep`] grids, overload shed by admission control,
 //!   SIGINT/SIGTERM flushing shards cleanly ([`serve::signals`]).
+//! * [`explain`] — causal profiling: run the compiled engine with
+//!   provenance observation on ([`sim::simulate_observed`], bit-identical
+//!   results, one branch per phase when off), walk back from the
+//!   makespan-defining finish to the *observed* critical path, and
+//!   decompose the makespan into compute / exposed-latency / bandwidth /
+//!   idle blame terms that sum bit-exactly ([`explain::Blame`]),
+//!   cross-checked against [`analysis::critical_path`]; differential
+//!   reports ([`explain::PlanDiff`]) show which α terms the overlap/CA
+//!   transforms moved off the path — surfaced as the `explain` CLI
+//!   subcommand, a `serve` op, and Perfetto flow events.
 //! * [`cost`] — the §2.1 analytic cost model `T(b) = (M/b)α + Mβ + (MN/p + Mb)γ`.
 //! * [`krylov`] — the motivating application: classic and latency-tolerant CG.
 //! * [`runtime`] — PJRT artifact loading/execution (`xla` crate).
@@ -102,6 +112,7 @@ pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod cost;
+pub mod explain;
 pub mod figures;
 pub mod graph;
 pub mod imp;

@@ -20,6 +20,13 @@
 //!   engine with the gate off, merges an instrumented sim + serve +
 //!   tune pass into one Chrome trace (CI gate: `make trace-smoke` →
 //!   `BENCH_trace.json`);
+//! * `explain` — causal profiling: observed critical paths, bit-exact
+//!   makespan blame decompositions, naive→overlap→CA differential
+//!   explanations, and the provenance-gate overhead bound (CI gate:
+//!   `make explain-smoke` → `BENCH_explain.json`);
+//! * `bench-compare` — diff the freshly emitted `BENCH_*.json` smoke
+//!   artifacts against the committed `BENCH_baseline/` snapshots
+//!   (advisory — never fails the build);
 //! * `dot` — Graphviz export of a (small) transformed graph.
 //!
 //! Every subcommand lives in the [`COMMANDS`] table; `--help` documents
@@ -28,12 +35,14 @@
 use imp_latency::analysis;
 use imp_latency::config::{
     parse_list, preset_analyze, preset_analyze_smoke, preset_bench, preset_bench_smoke,
-    preset_end_to_end, preset_fig10, preset_fig7, preset_fig8, preset_fig9, preset_partition,
-    preset_partition_smoke, preset_serve, preset_serve_smoke, preset_sweep, preset_sweep_smoke,
-    preset_trace, preset_trace_smoke, preset_tune, preset_tune_smoke, Config,
+    preset_end_to_end, preset_explain, preset_explain_smoke, preset_fig10, preset_fig7,
+    preset_fig8, preset_fig9, preset_partition, preset_partition_smoke, preset_serve,
+    preset_serve_smoke, preset_sweep, preset_sweep_smoke, preset_trace, preset_trace_smoke,
+    preset_tune, preset_tune_smoke, Config,
 };
 use imp_latency::coordinator::{heat1d, heat2d};
 use imp_latency::cost::CostModel;
+use imp_latency::explain::{self, BlameSummary, PlanDiff};
 use imp_latency::figures;
 use imp_latency::krylov::distributed::{self as dcg, CgConfig};
 use imp_latency::partition::{self, Partitioner, Partitioning, PartitionQuality, ProcGrid};
@@ -44,12 +53,14 @@ use imp_latency::pipeline::{
 use imp_latency::runtime::Registry;
 use imp_latency::serve::{self, signals, Request, ServeConfig, Server};
 use imp_latency::sim::{
-    simulate_compiled, sweep, try_simulate, CompiledPlan, EngineScratch, Machine, NetworkKind,
-    UniformCost,
+    simulate_compiled, simulate_observed, sweep, try_simulate, CompiledPlan, EngineScratch,
+    Machine, NetworkKind, ProvenanceBuffer, UniformCost,
 };
 use imp_latency::stencil::CsrMatrix;
 use imp_latency::telemetry::{self, Recorder};
-use imp_latency::trace::{chrome_trace_with_telemetry, gantt_ascii, summary_line};
+use imp_latency::trace::{
+    chrome_trace_with_flows, chrome_trace_with_telemetry, gantt_ascii, summary_line,
+};
 use imp_latency::transform::{check_schedule, HaloMode, ScheduleStats, TransformOptions};
 use imp_latency::tune::{self, SearchStrategy as _, Tuner, TuningCache};
 use std::sync::Arc;
@@ -142,6 +153,23 @@ COMMANDS
              the engine with the gate off again; gates: disabled-gate throughput
              within 3% of baseline, and every serve request's phase breakdown
              sums to its measured latency; --smoke emits BENCH_trace.json
+  explain    [--smoke workloads=heat1d,heat2d,cg networks=alphabeta,loggp,hier,contended
+              n=4096 m=16 h=16 w=16 cg_n=64 iters=2 p=4 threads=8 alpha=500
+              beta=0.1 gamma=1 b=8 repeat=60 trials=3
+              chrome=results/explain_chrome.json out=results/explain.json]
+             causal profiling: every workload × naive/overlap/CA × wire cell runs
+             the provenance-recording engine and is decomposed into bit-exact
+             compute / exposed-latency / bandwidth / idle blame terms, checked
+             against the analytic critical-path bound; plans are diffed (which α
+             terms the transforms moved off the observed critical path), a tuned
+             winner carries its differential explanation, the observed critical
+             path is exported as a Chrome trace with flow arrows, and the dormant
+             provenance gate must keep the engine within 3% of baseline; --smoke
+             emits BENCH_explain.json and fails on any violated gate
+  bench-compare [dir=BENCH_baseline files=BENCH_explain.json,...]
+             diff current BENCH_*.json artifacts against the committed baseline
+             snapshots, metric by metric (advisory: exits 0 even on drift;
+             run `make bench-baseline` to refresh the snapshots)
   dot        [n=16 m=3 p=2]            Graphviz of the transformed graph
 
 Artifacts are searched in $IMP_ARTIFACTS or ./artifacts (run `make artifacts`).
@@ -181,6 +209,8 @@ const COMMANDS: &[(&str, Handler)] = &[
     ("analyze", cmd_analyze),
     ("serve", cmd_serve),
     ("trace", cmd_trace),
+    ("explain", cmd_explain),
+    ("bench-compare", cmd_bench_compare),
     ("dot", cmd_dot),
 ];
 
@@ -1963,6 +1993,249 @@ fn cmd_trace(args: &[&str]) -> Result<(), String> {
     json.push_str("}\n");
     let out = cfg.get_or("out", "results/trace.json".to_string());
     write_json_report(&out, &json)
+}
+
+/// The causal-profiling study behind `BENCH_explain.json`, in four
+/// gated phases:
+///
+/// 1. **Blame matrix**: every `workloads` × naive/overlap/CA(b) ×
+///    `networks` cell runs the provenance-recording engine
+///    ([`imp_latency::explain`]) and its makespan is decomposed into
+///    compute / exposed-latency / bandwidth / idle terms, which must
+///    sum back to the observed makespan **bit-exactly** and never
+///    undercut the analytic critical-path bound (bit-equal on exact
+///    wires).
+/// 2. **Differential**: on the α-β wire, each workload's overlap/CA
+///    cells are diffed against naive; for the stencil workloads the CA
+///    transform must *strictly* reduce exposed latency — the default
+///    α = 500 sits deep in the latency-dominated regime where the
+///    paper's §3 claim has to show up in the observed path.
+/// 3. **Tuned winner**: an exhaustive heat1d tune runs and the winner
+///    is explained against naive; the differential summary rides on
+///    the tune report (`why:` line).
+/// 4. **Overhead**: compiled-engine throughput is measured with
+///    provenance off before and after the observed runs; the dormant
+///    one-branch gate must keep the engine within 3% of baseline, and
+///    an observed run must reproduce the plain run's makespan
+///    bit-for-bit.
+///
+/// The heat1d CA cell's observed critical path is exported as a Chrome
+/// trace: `crit:*` spans on a reserved lane plus flow arrows for the
+/// on-path message flights.
+fn cmd_explain(args: &[&str]) -> Result<(), String> {
+    let smoke = args.contains(&"--smoke");
+    let defaults = if smoke { preset_explain_smoke() } else { preset_explain() };
+    let (cfg, _) = config_from(defaults, args);
+    let workloads = workloads_from(&cfg)?;
+    let networks = networks_from(&cfg)?;
+    let block: u32 = cfg.require("b")?;
+    let repeat: usize = cfg.get_or("repeat", 30).max(1);
+    let trials: usize = cfg.get_or("trials", 3).max(1);
+    let p: u32 = cfg.require("p")?;
+    let mach = Machine::new(
+        p,
+        cfg.require("threads")?,
+        cfg.require("alpha")?,
+        cfg.require("beta")?,
+        cfg.require("gamma")?,
+    );
+    telemetry::set_enabled(false);
+    let mut scratch = EngineScratch::new();
+
+    // Phase 4a: the overhead baseline, first thing — the heat1d CA plan
+    // on the plain compiled engine, after one warm-up run (mirrors
+    // `trace`'s measurement discipline).
+    let heat_inputs = sweep_inputs_for("heat1d", &cfg, &[block])?;
+    let probe = heat_inputs.last().expect("strategy inputs end with the CA plan");
+    let probe_mach = Machine::new(
+        p,
+        mach.threads,
+        mach.alpha,
+        mach.beta * probe.words_per_value as f64,
+        mach.gamma,
+    );
+    let mut net = NetworkKind::AlphaBeta.build_for(&probe_mach, probe.layout.as_ref());
+    simulate_compiled(&probe.compiled, &probe_mach, net.as_mut(), &mut scratch, false)
+        .map_err(|e| e.to_string())?;
+    let baseline_eps =
+        engine_events_per_sec(probe, &probe_mach, NetworkKind::AlphaBeta, &mut scratch, repeat, trials)?;
+
+    // Phase 1: the blame matrix, with the exact-sum and bound gates on
+    // every cell; phase 2's differential table rides on the α-β column.
+    let mut cells: Vec<explain::ExplainCell> = Vec::new();
+    let mut diff_lines: Vec<String> = Vec::new();
+    for wl in &workloads {
+        let inputs = sweep_inputs_for(wl, &cfg, &[block])?;
+        let mut summaries: Vec<BlameSummary> = Vec::new();
+        for input in &inputs {
+            for &kind in &networks {
+                let e = explain::explain_input(input, &mach, kind, &mut scratch)?;
+                if let Err(err) = e.blame.verify() {
+                    return Err(format!(
+                        "{wl}/{} on {}: inexact blame decomposition: {err}",
+                        e.strategy,
+                        kind.label()
+                    ));
+                }
+                if !e.cross.ok() {
+                    return Err(format!(
+                        "{wl}/{} on {}: observed {} vs analytic bound {} violates the \
+                         cross-check (exact wire: {})",
+                        e.strategy,
+                        kind.label(),
+                        e.cross.observed,
+                        e.cross.bound,
+                        e.cross.exact_wire
+                    ));
+                }
+                if kind == NetworkKind::AlphaBeta {
+                    summaries.push(BlameSummary::from_blame(e.strategy.clone(), &e.blame));
+                }
+                cells.push(explain::ExplainCell::from_explanation(&e));
+            }
+        }
+        let naive = summaries
+            .iter()
+            .find(|s| s.strategy == "naive")
+            .cloned()
+            .ok_or_else(|| format!("{wl}: no naive baseline on the alphabeta wire"))?;
+        for cand in summaries.iter().filter(|s| s.strategy != "naive") {
+            let d = PlanDiff::between(naive.clone(), cand.clone());
+            // The stencil CA gate: at high α the transform must have
+            // moved exposed latency off the observed critical path.
+            if wl.starts_with("heat")
+                && cand.strategy.starts_with("ca")
+                && d.latency_moved_off_path() <= 0.0
+            {
+                return Err(format!(
+                    "{wl}: CA moved no exposed latency off the observed critical path at \
+                     α={} (naive {} vs {} {})",
+                    mach.alpha, naive.latency, cand.strategy, cand.latency
+                ));
+            }
+            println!("explain {wl:<8} {}", d.summary());
+            diff_lines.push(format!("{wl}: {}", d.summary()));
+        }
+    }
+
+    // Phase 3: tune heat1d and attach the winner's differential
+    // explanation to its report.
+    let pipe = Pipeline::new(Heat1d { n: cfg.require("n")?, steps: cfg.require("m")?, radius: 1 })
+        .procs(p)
+        .machine(mach)
+        .network(NetworkKind::AlphaBeta);
+    let mut tuner = Tuner::exhaustive();
+    let outcome = tune::tune_pipeline(&pipe, &mut tuner).map_err(|e| e.to_string())?;
+    let win = outcome.chosen;
+    let win_input =
+        imp_latency::pipeline::candidate_sweep_input(&pipe, win.strategy, win.block, Some(win.halo))
+            .map_err(|e| e.to_string())?;
+    let naive_input =
+        imp_latency::pipeline::candidate_sweep_input(&pipe, Strategy::Naive, None, None)
+            .map_err(|e| e.to_string())?;
+    let win_e = explain::explain_input(&win_input, &mach, NetworkKind::AlphaBeta, &mut scratch)?;
+    let naive_e =
+        explain::explain_input(&naive_input, &mach, NetworkKind::AlphaBeta, &mut scratch)?;
+    let tuned_diff = PlanDiff::between(
+        BlameSummary::from_blame("naive", &naive_e.blame),
+        BlameSummary::from_blame(win_e.strategy.clone(), &win_e.blame),
+    );
+    let mut report = outcome.report;
+    report.explanation = Some(tuned_diff.summary());
+    println!("{}", report.summary());
+
+    // Phase 4b: observed runs between the two provenance-off
+    // measurements, then the 3% gate and the bit-identity gate.
+    let probe_e = explain::explain_input(probe, &mach, NetworkKind::AlphaBeta, &mut scratch)?;
+    let mut prov = ProvenanceBuffer::new();
+    let t0 = std::time::Instant::now();
+    let mut observed_events = 0u64;
+    for _ in 0..repeat {
+        let mut net = NetworkKind::AlphaBeta.build_for(&probe_mach, probe.layout.as_ref());
+        simulate_observed(&probe.compiled, &probe_mach, net.as_mut(), &mut scratch, false, &mut prov)
+            .map_err(|e| e.to_string())?;
+        observed_events += scratch.events();
+    }
+    let observed_eps = observed_events as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+    let disabled_eps =
+        engine_events_per_sec(probe, &probe_mach, NetworkKind::AlphaBeta, &mut scratch, repeat, trials)?;
+    let overhead_ratio = disabled_eps / baseline_eps.max(1e-12);
+    if disabled_eps < baseline_eps * 0.97 {
+        return Err(format!(
+            "provenance-off engine throughput {disabled_eps:.0} events/s fell more than 3% \
+             below the baseline {baseline_eps:.0} events/s"
+        ));
+    }
+    let mut net = NetworkKind::AlphaBeta.build_for(&probe_mach, probe.layout.as_ref());
+    let sim = simulate_compiled(&probe.compiled, &probe_mach, net.as_mut(), &mut scratch, true)
+        .map_err(|e| e.to_string())?;
+    if sim.total_time.to_bits() != probe_e.blame.makespan.to_bits() {
+        return Err(format!(
+            "observed makespan {} is not bit-identical to the plain run's {}",
+            probe_e.blame.makespan, sim.total_time
+        ));
+    }
+    println!("explain heat1d/{}: {}", probe_e.strategy, explain::report::share_line(&probe_e.blame));
+    println!("explain heat1d/{}: {}", probe_e.strategy, explain::report::crosscheck_line(&probe_e.cross));
+
+    // The critical-path-highlighted Chrome trace: normal sim spans plus
+    // `crit:*` lane spans plus flow arrows for on-path flights.
+    let mut spans = sim.spans.clone();
+    spans.extend(explain::report::path_spans(&probe_e.blame));
+    let flows = explain::report::path_flows(&probe_e.blame);
+    let chrome = chrome_trace_with_flows(&spans, &flows);
+    let chrome_out = cfg.get_or("chrome", "results/explain_chrome.json".to_string());
+    write_json_report(&chrome_out, &chrome)?;
+
+    println!(
+        "explain: {} cells gated bit-exact; engine {baseline_eps:.0} events/s off → \
+         {observed_eps:.0} observed → {disabled_eps:.0} off again ({:.1}% of baseline); \
+         {} on-path flights exported",
+        cells.len(),
+        100.0 * overhead_ratio,
+        flows.len(),
+    );
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"explain\": {:?},\n", if smoke { "smoke" } else { "explain" }));
+    json.push_str(&format!("  \"alpha\": {},\n", mach.alpha));
+    json.push_str(&format!("  \"block\": {block},\n"));
+    json.push_str(&format!("  \"cells\": {},\n", explain::report::cells_to_json(&cells, "  ")));
+    json.push_str("  \"diffs\": [\n");
+    for (i, d) in diff_lines.iter().enumerate() {
+        json.push_str(&format!("    {:?}{}\n", d, if i + 1 < diff_lines.len() { "," } else { "" }));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"tuned\": {:?},\n", win.label()));
+    json.push_str(&format!("  \"tuned_explanation\": {:?},\n", tuned_diff.summary()));
+    json.push_str(&format!("  \"path_messages\": {},\n", flows.len()));
+    json.push_str(&format!("  \"baseline_events_per_sec\": {baseline_eps},\n"));
+    json.push_str(&format!("  \"observed_events_per_sec\": {observed_eps},\n"));
+    json.push_str(&format!("  \"disabled_events_per_sec\": {disabled_eps},\n"));
+    json.push_str(&format!("  \"overhead_ratio\": {overhead_ratio},\n"));
+    json.push_str(&format!("  \"chrome\": {chrome_out:?}\n"));
+    json.push_str("}\n");
+    let out = cfg.get_or("out", "results/explain.json".to_string());
+    write_json_report(&out, &json)
+}
+
+/// Diff the current `BENCH_*.json` smoke artifacts against the
+/// committed `BENCH_baseline/` snapshots ([`imp_latency::trace`]'s
+/// comparer).  Advisory by design: drift is *reported*, never fatal —
+/// the gating happens inside each smoke's own invariants, while this
+/// surfaces slow regressions across pushes.
+fn cmd_bench_compare(args: &[&str]) -> Result<(), String> {
+    let (cfg, _) = config_from(Config::new(), args);
+    let dir = cfg.get_or("dir", "BENCH_baseline".to_string());
+    let files = cfg.get_or(
+        "files",
+        "BENCH_sim.json,BENCH_engine.json,BENCH_tune.json,BENCH_partition.json,\
+         BENCH_serve.json,BENCH_analyze.json,BENCH_trace.json,BENCH_explain.json"
+            .to_string(),
+    );
+    let names: Vec<&str> = files.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    print!("{}", imp_latency::trace::compare_bench_files(&dir, &names));
+    Ok(())
 }
 
 fn cmd_dot(args: &[&str]) -> Result<(), String> {

@@ -6,8 +6,8 @@
 //! cheaper the longer it lives:
 //!
 //! - **protocol** — newline-delimited JSON requests (`tune`, `simulate`,
-//!   `analyze`, `cache-stats`, `metrics`) and responses; the full
-//!   schema is documented on [`protocol`].
+//!   `analyze`, `explain`, `cache-stats`, `metrics`) and responses; the
+//!   full schema is documented on [`protocol`].
 //! - **shard** — the tuning cache split across mutex slots routed by
 //!   workload signature, each backed by the per-signature shard files
 //!   (and file locks) of [`crate::tune::cache`]; heat1d traffic never

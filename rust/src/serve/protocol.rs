@@ -16,7 +16,7 @@
 //! ```
 //!
 //! - `id` (required): caller-chosen tag, echoed verbatim in the response.
-//! - `op` (required): `"tune"`, `"simulate"`, `"analyze"`,
+//! - `op` (required): `"tune"`, `"simulate"`, `"analyze"`, `"explain"`,
 //!   `"cache-stats"`, or `"metrics"`.
 //! - every other field lands in a per-request [`Config`] and overrides
 //!   the server's defaults: `workload` (`heat1d|heat2d|moore2d|spmv|cg`),
@@ -25,8 +25,8 @@
 //!   (`alphabeta|loggp|hier|contended`).  `tune` additionally honours
 //!   `search` (`exhaustive|golden|coord`) and a per-request `budget`
 //!   (max engine runs; `0` = unlimited, always clamped to the server's
-//!   own ceiling).  `simulate` and `analyze` honour `strategy`
-//!   (`naive|overlap|ca`) and block factor `b`.
+//!   own ceiling).  `simulate`, `analyze`, and `explain` honour
+//!   `strategy` (`naive|overlap|ca`) and block factor `b`.
 //!
 //! # Response schema
 //!
@@ -52,6 +52,14 @@
 //!   `fatal`/`warnings` diagnostic counts, and the analytic makespan
 //!   `lower_bound` with its `exact` flag ([`crate::analysis`]); the op
 //!   never runs the engine.
+//! - `explain` payload ([`crate::explain`]): `strategy`, `procs`, the
+//!   observed `makespan`, its bit-exact blame decomposition `compute` /
+//!   `exposed_latency` / `bandwidth` / `idle` (the four sum back to the
+//!   makespan to the last bit; `exact` reports that invariant), the
+//!   analytic `bound` with `bound_ok` (observed ≥ bound, bit-equal on
+//!   exact wires), and `path_messages` — how many message flights sit
+//!   on the observed critical path.  Runs the provenance-recording
+//!   engine once; never searches.
 //! - `cache-stats` payload: `entries`, `shards`, `hits`, `misses`,
 //!   `deduped`, `shed`, `in_flight`.
 //! - `metrics` payload ([`crate::telemetry`]): `enabled`, `requests`,
@@ -120,6 +128,9 @@ pub enum Op {
     /// Statically verify one configuration and report its analytic
     /// makespan lower bound — never runs the engine.
     Analyze,
+    /// Run one provenance-recording simulation and report the bit-exact
+    /// makespan blame decomposition ([`crate::explain`]).
+    Explain,
     /// Report cache/admission counters; never touches the engine.
     CacheStats,
     /// Report the telemetry recorder's aggregates (request counts,
@@ -133,11 +144,12 @@ impl Op {
             "tune" => Ok(Op::Tune),
             "simulate" => Ok(Op::Simulate),
             "analyze" => Ok(Op::Analyze),
+            "explain" => Ok(Op::Explain),
             "cache-stats" => Ok(Op::CacheStats),
             "metrics" => Ok(Op::Metrics),
-            other => {
-                Err(format!("unknown op {other:?} (tune|simulate|analyze|cache-stats|metrics)"))
-            }
+            other => Err(format!(
+                "unknown op {other:?} (tune|simulate|analyze|explain|cache-stats|metrics)"
+            )),
         }
     }
 
@@ -146,6 +158,7 @@ impl Op {
             Op::Tune => "tune",
             Op::Simulate => "simulate",
             Op::Analyze => "analyze",
+            Op::Explain => "explain",
             Op::CacheStats => "cache-stats",
             Op::Metrics => "metrics",
         }
@@ -244,6 +257,29 @@ pub enum Payload {
         /// engine's makespan exactly.
         exact: bool,
     },
+    Explain {
+        strategy: String,
+        procs: usize,
+        /// Observed makespan of the provenance-recording run.
+        makespan: f64,
+        /// On-path compute total.
+        compute: f64,
+        /// On-path exposed latency total.
+        exposed_latency: f64,
+        /// On-path exposed bandwidth total.
+        bandwidth: f64,
+        /// On-path queueing / idle total.
+        idle: f64,
+        /// The four blame terms sum back to the makespan bit-exactly
+        /// and the path tiles `[0, makespan]` ([`crate::explain`]).
+        exact: bool,
+        /// Analytic critical-path lower bound of the same cell.
+        bound: f64,
+        /// Observed ≥ bound (bit-equal on exact wires).
+        bound_ok: bool,
+        /// Message flights on the observed critical path.
+        path_messages: usize,
+    },
     CacheStats {
         entries: usize,
         shards: usize,
@@ -321,6 +357,27 @@ impl Response {
                      \"phases\": {phases}, \"deadlock_free\": {deadlock_free}, \
                      \"fatal\": {fatal}, \"warnings\": {warnings}, \
                      \"lower_bound\": {lower_bound}, \"exact\": {exact}"
+                ));
+            }
+            Ok(Payload::Explain {
+                strategy,
+                procs,
+                makespan,
+                compute,
+                exposed_latency,
+                bandwidth,
+                idle,
+                exact,
+                bound,
+                bound_ok,
+                path_messages,
+            }) => {
+                s.push_str(&format!(
+                    "\"status\": \"ok\", \"strategy\": {strategy:?}, \"procs\": {procs}, \
+                     \"makespan\": {makespan}, \"compute\": {compute}, \
+                     \"exposed_latency\": {exposed_latency}, \"bandwidth\": {bandwidth}, \
+                     \"idle\": {idle}, \"exact\": {exact}, \"bound\": {bound}, \
+                     \"bound_ok\": {bound_ok}, \"path_messages\": {path_messages}"
                 ));
             }
             Ok(Payload::CacheStats { entries, shards, hits, misses, deduped, shed, in_flight }) => {
@@ -482,6 +539,36 @@ mod tests {
         }
         // The metrics payload stays inside the flat dialect.
         assert!(parse_flat_object(&line).is_ok(), "{line}");
+
+        let explained = Response {
+            id: "e".into(),
+            latency_ms: 0.3,
+            result: Ok(Payload::Explain {
+                strategy: "ca(b=8)".into(),
+                procs: 4,
+                makespan: 900.0,
+                compute: 512.0,
+                exposed_latency: 250.0,
+                bandwidth: 100.0,
+                idle: 38.0,
+                exact: true,
+                bound: 900.0,
+                bound_ok: true,
+                path_messages: 6,
+            }),
+        };
+        let line = explained.to_json();
+        for needle in [
+            "\"exposed_latency\": 250",
+            "\"exact\": true",
+            "\"bound_ok\": true",
+            "\"path_messages\": 6",
+        ] {
+            assert!(line.contains(needle), "{line}");
+        }
+        assert!(parse_flat_object(&line).is_ok(), "{line}");
+        assert_eq!(Op::parse("explain").unwrap(), Op::Explain);
+        assert_eq!(Op::Explain.tag(), "explain");
 
         let over = Response {
             id: "b".into(),

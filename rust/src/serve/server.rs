@@ -48,7 +48,7 @@ use std::time::{Duration, Instant};
 use crate::config::Config;
 use crate::pipeline::{dispatch_workload, Pipeline, Strategy, Workload, WorkloadVisitor};
 use crate::sim::sweep::{panic_message, SweepInput};
-use crate::sim::{Machine, NetworkKind};
+use crate::sim::{EngineScratch, Machine, NetworkKind};
 use crate::telemetry::Recorder;
 use crate::tune::search::{search_from_tag, SearchBudget};
 use crate::tune::{pipeline_tune_key, tune_pipeline, CacheEntry, Tuner, TuningCache};
@@ -377,6 +377,7 @@ impl Server {
             Op::Tune => self.handle_tune(req, phases),
             Op::Simulate => self.handle_simulate(req),
             Op::Analyze => self.handle_analyze(req),
+            Op::Explain => self.handle_explain(req),
             Op::CacheStats => Ok(self.cache_stats_payload()),
             Op::Metrics => Ok(self.metrics_payload()),
         }
@@ -697,6 +698,51 @@ impl Server {
             .map_err(RequestError::Failed)
     }
 
+    /// The `explain` op: one provenance-recording engine run, then the
+    /// bit-exact makespan blame decomposition ([`crate::explain`]).
+    /// Uncached and unbatched — an explanation is a diagnostic, not a
+    /// verdict, so freshness beats reuse.
+    fn handle_explain(&self, req: &Request) -> Result<Payload, RequestError> {
+        struct Visit<'a> {
+            params: &'a Config,
+        }
+        impl WorkloadVisitor for Visit<'_> {
+            type Out = Result<Payload, String>;
+            fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out {
+                let machine = machine_from(self.params)?;
+                let network =
+                    NetworkKind::parse(&self.params.get_or("network", "alphabeta".to_string()))?;
+                let mut pipe =
+                    Pipeline::new(w).procs(machine.nprocs).strategy(strategy_from(self.params)?);
+                if let Some(b) = self.params.get("b") {
+                    pipe = pipe.block(b.parse().map_err(|_| format!("bad block factor {b:?}"))?);
+                }
+                let t = pipe.transform().map_err(|e| e.to_string())?;
+                let input = t.sweep_input();
+                let mut scratch = EngineScratch::new();
+                let e = crate::explain::explain_input(&input, &machine, network, &mut scratch)?;
+                Ok(Payload::Explain {
+                    strategy: e.strategy.clone(),
+                    procs: e.procs as usize,
+                    makespan: e.blame.makespan,
+                    compute: e.blame.plan.compute(),
+                    exposed_latency: e.blame.plan.exposed_latency(),
+                    bandwidth: e.blame.plan.bandwidth(),
+                    idle: e.blame.plan.idle(),
+                    exact: e.blame.verify().is_ok(),
+                    bound: e.cross.bound,
+                    bound_ok: e.cross.ok(),
+                    path_messages: e.blame.path_messages.len(),
+                })
+            }
+        }
+        let params = self.merged(&req.params);
+        let workload: String = params.get_or("workload", "heat1d".to_string());
+        dispatch_workload(&workload, &params, &mut Visit { params: &params })
+            .map_err(RequestError::Failed)?
+            .map_err(RequestError::Failed)
+    }
+
     /// Lower one simulate request to engine terms.  Runs on the wave's
     /// thread: [`SweepInput::new`] compiles the plan exactly once here.
     fn build_sim_job(&self, index: usize, req: &Request) -> Result<SimJob, String> {
@@ -853,7 +899,7 @@ impl Server {
             let wave = self.waves.fetch_add(1, Ordering::Relaxed) + 1;
             if wave % self.metrics_every == 0 {
                 if let Some(rec) = &rec {
-                    eprint!("{}", rec.registry.prometheus());
+                    eprint!("{}", rec.prometheus());
                 }
             }
         }
@@ -1401,6 +1447,44 @@ mod tests {
         }
         // Bad configurations error without panicking the daemon.
         let r = server.handle(&req(r#"{"id": "x", "op": "analyze", "strategy": "warp"}"#));
+        assert!(matches!(r, Err(RequestError::Failed(_))), "{r:?}");
+    }
+
+    #[test]
+    fn explain_op_decomposes_the_makespan_bit_exactly() {
+        let server = memory_server(1);
+        let common = r#""workload": "heat1d", "n": 64, "m": 8, "strategy": "ca", "b": 4,
+                        "p": 2, "threads": 2, "alpha": 50.0, "beta": 1.0, "gamma": 1.0"#
+            .replace('\n', " ");
+        let explained = server
+            .handle(&req(&format!("{{\"id\": \"e\", \"op\": \"explain\", {common}}}")))
+            .expect("explainable");
+        match &explained {
+            Payload::Explain {
+                makespan,
+                compute,
+                exposed_latency,
+                bandwidth,
+                idle,
+                exact,
+                bound,
+                bound_ok,
+                procs,
+                ..
+            } => {
+                assert_eq!(*procs, 2);
+                assert!(*exact, "blame terms must sum back to the makespan bit-exactly");
+                assert!(*bound_ok, "observed {makespan} vs bound {bound}");
+                assert!(*makespan > 0.0 && *compute > 0.0);
+                // The α-β wire is stateless: observed == bound exactly.
+                assert_eq!(makespan.to_bits(), bound.to_bits());
+                for term in [compute, exposed_latency, bandwidth, idle] {
+                    assert!(*term >= 0.0 && term.is_finite(), "{term}");
+                }
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+        let r = server.handle(&req(r#"{"id": "y", "op": "explain", "strategy": "warp"}"#));
         assert!(matches!(r, Err(RequestError::Failed(_))), "{r:?}");
     }
 

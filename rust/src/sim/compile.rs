@@ -58,9 +58,10 @@ pub fn compile_count() -> usize {
 
 /// One lowered phase record.  `Compute` indexes the shared task array;
 /// `Send`/`Recv` carry their pre-matched message slot (and, for sends,
-/// the channel id and word count the wire needs).
+/// the channel id and word count the wire needs).  Crate-visible so the
+/// [`crate::explain`] blame walk can replay the lowered streams.
 #[derive(Debug, Clone, Copy)]
-enum CPhase {
+pub(crate) enum CPhase {
     Compute { off: u32, len: u32 },
     Send { msg: u32, chan: u32, words: u32 },
     Recv { msg: u32 },
@@ -238,6 +239,27 @@ impl CompiledPlan {
     pub fn num_messages(&self) -> usize {
         self.num_msgs
     }
+
+    /// Global phase records, across all processors.
+    pub fn num_phases(&self) -> usize {
+        self.phases.len()
+    }
+
+    /// Indices of processor `p`'s phase records in the global stream —
+    /// the range [`ProvenanceBuffer`] windows are keyed by.
+    pub(crate) fn proc_phase_range(&self, p: usize) -> std::ops::Range<usize> {
+        self.proc_off[p] as usize..self.proc_off[p + 1] as usize
+    }
+
+    /// The `k`-th global phase record.
+    pub(crate) fn phase(&self, k: usize) -> CPhase {
+        self.phases[k]
+    }
+
+    /// The `(from, to)` processor pair of dense channel `c`.
+    pub(crate) fn channel(&self, c: usize) -> (u32, u32) {
+        self.channels[c]
+    }
 }
 
 /// Reusable per-worker simulation state: every vector and heap one
@@ -303,6 +325,69 @@ impl EngineScratch {
     }
 }
 
+/// Reusable per-run provenance: the engine's own record of *when* every
+/// lowered phase ran — the raw material the [`crate::explain`] blame
+/// walk prices the observed critical path from.  Like [`EngineScratch`]
+/// it is engine-owned scratch, sized on first use and recycled across
+/// runs.  Recording is pure observation (two stores per executed phase,
+/// one arrival copy after the run), so an observed run's [`SimResult`]
+/// is bit-identical to an unobserved one; when no buffer is attached
+/// the hot loop pays exactly one branch per phase, mirroring the
+/// telemetry gate.
+#[derive(Debug, Default)]
+pub struct ProvenanceBuffer {
+    /// `start[k]` = the proc clock when global phase `k` began: compute
+    /// start, send post time, or the clock a receive found (i.e. when
+    /// any exposed wait began).
+    start: Vec<f64>,
+    /// `end[k]` = the clock after phase `k`: compute end, send post
+    /// time, or the receive's satisfied clock `max(start, arrival)`.
+    end: Vec<f64>,
+    /// Arrival time of every message slot (`-1.0` = never posted),
+    /// copied from the run's scratch after the event loop drains.
+    arrival: Vec<f64>,
+}
+
+impl ProvenanceBuffer {
+    /// A fresh buffer; sized by the first observed run.
+    pub fn new() -> Self {
+        ProvenanceBuffer::default()
+    }
+
+    fn reset(&mut self, cp: &CompiledPlan) {
+        self.start.clear();
+        self.start.resize(cp.phases.len(), -1.0);
+        self.end.clear();
+        self.end.resize(cp.phases.len(), -1.0);
+        self.arrival.clear();
+    }
+
+    /// Clock when global phase `k` began (`-1.0` = never executed).
+    pub fn phase_start(&self, k: usize) -> f64 {
+        self.start[k]
+    }
+
+    /// Clock when global phase `k` was satisfied (`-1.0` = never).
+    pub fn phase_end(&self, k: usize) -> f64 {
+        self.end[k]
+    }
+
+    /// Arrival time of message slot `msg` (`-1.0` = never posted).
+    pub fn msg_arrival(&self, msg: usize) -> f64 {
+        self.arrival[msg]
+    }
+
+    /// Phase windows recorded by the last observed run.
+    pub fn len(&self) -> usize {
+        self.start.len()
+    }
+
+    /// True before the first observed run.
+    pub fn is_empty(&self) -> bool {
+        self.start.is_empty()
+    }
+}
+
 /// One in-flight run: the compiled plan, the machine, and the scratch it
 /// mutates.  Mirrors `engine::Engine`, minus every hash map.
 struct CRun<'a> {
@@ -316,6 +401,9 @@ struct CRun<'a> {
     tiebreak: u64,
     /// Every channel's wire cost resolved to constants at run start.
     static_wire: bool,
+    /// Provenance observation sink (`None` = the unobserved hot path:
+    /// one branch per phase, nothing recorded).
+    prov: Option<&'a mut ProvenanceBuffer>,
 }
 
 impl CRun<'_> {
@@ -330,11 +418,17 @@ impl CRun<'_> {
     fn advance(&mut self, network: &mut dyn NetworkModel, p: usize) {
         let end = self.cp.proc_off[p + 1];
         while self.s.cursor[p] < end {
-            match self.cp.phases[self.s.cursor[p] as usize] {
+            let gidx = self.s.cursor[p] as usize;
+            match self.cp.phases[gidx] {
                 CPhase::Compute { off, len } => {
+                    let before = self.s.clock[p];
                     let (phase_end, busy) = self.run_compute(p, off as usize, len as usize);
                     self.s.busy[p] += busy;
                     self.s.clock[p] = phase_end;
+                    if let Some(prov) = self.prov.as_deref_mut() {
+                        prov.start[gidx] = before;
+                        prov.end[gidx] = phase_end;
+                    }
                 }
                 CPhase::Send { msg, chan, words } => {
                     let post = self.s.clock[p];
@@ -357,15 +451,22 @@ impl CRun<'_> {
                     };
                     self.s.arrival[msg as usize] = arrival;
                     self.push_event(arrival, ((msg as u64) << 1) | 1);
+                    if let Some(prov) = self.prov.as_deref_mut() {
+                        prov.start[gidx] = post;
+                        prov.end[gidx] = post;
+                    }
                 }
                 CPhase::Recv { msg } => {
                     let arrival = self.s.arrival[msg as usize];
                     if arrival < 0.0 {
                         // Sender has not posted yet: block until the
-                        // slot's arrival event wakes us.
+                        // slot's arrival event wakes us (the window is
+                        // recorded on the resumed attempt, when the
+                        // clock is still the one the wait began at).
                         self.s.waiting[msg as usize] = p as u32;
                         return;
                     }
+                    let before = self.s.clock[p];
                     if arrival > self.s.clock[p] {
                         self.s.wait[p] += arrival - self.s.clock[p];
                         if self.record_spans {
@@ -378,6 +479,10 @@ impl CRun<'_> {
                             });
                         }
                         self.s.clock[p] = arrival;
+                    }
+                    if let Some(prov) = self.prov.as_deref_mut() {
+                        prov.start[gidx] = before;
+                        prov.end[gidx] = self.s.clock[p];
                     }
                 }
             }
@@ -442,6 +547,36 @@ pub fn simulate_compiled(
     scratch: &mut EngineScratch,
     record_spans: bool,
 ) -> Result<SimResult, SimError> {
+    simulate_inner(cp, m, network, scratch, record_spans, None)
+}
+
+/// [`simulate_compiled`] with provenance observation: additionally
+/// records every phase's `(start, end)` window and every message's
+/// arrival into `prov` — everything the [`crate::explain`] blame walk
+/// needs to extract the *observed* critical path.  The returned
+/// [`SimResult`] is **bit-identical** to an unobserved run (recording
+/// never feeds back into the timing arithmetic); the cost is two stores
+/// per phase plus one arrival copy after the event loop.
+pub fn simulate_observed(
+    cp: &CompiledPlan,
+    m: &Machine,
+    network: &mut dyn NetworkModel,
+    scratch: &mut EngineScratch,
+    record_spans: bool,
+    prov: &mut ProvenanceBuffer,
+) -> Result<SimResult, SimError> {
+    prov.reset(cp);
+    simulate_inner(cp, m, network, scratch, record_spans, Some(prov))
+}
+
+fn simulate_inner(
+    cp: &CompiledPlan,
+    m: &Machine,
+    network: &mut dyn NetworkModel,
+    scratch: &mut EngineScratch,
+    record_spans: bool,
+    prov: Option<&mut ProvenanceBuffer>,
+) -> Result<SimResult, SimError> {
     assert_eq!(cp.nprocs, m.nprocs, "plan/machine proc count mismatch");
     let nprocs = cp.nprocs as usize;
     network.reset();
@@ -480,6 +615,7 @@ pub fn simulate_compiled(
         words: 0,
         tiebreak: 0,
         static_wire,
+        prov,
     };
     for p in 0..nprocs {
         run.push_event(0.0, (p as u64) << 1);
@@ -514,6 +650,11 @@ pub fn simulate_compiled(
             }
             r.gauge("engine.heap_depth_high_water").set_max(heap_high_water as u64);
         });
+    }
+
+    // Off the hot path: hand the observed arrivals over in one copy.
+    if let Some(prov) = run.prov.take() {
+        prov.arrival.extend_from_slice(&run.s.arrival);
     }
 
     let stuck: Vec<(u32, usize)> = (0..nprocs)
@@ -680,6 +821,45 @@ mod tests {
         assert_eq!(comp.total_time, interp.total_time);
         assert_eq!(comp.proc_finish, interp.proc_finish);
         assert_eq!(comp.proc_wait, interp.proc_wait);
+    }
+
+    #[test]
+    fn observed_runs_are_bit_identical_and_tile_each_proc() {
+        // Provenance is pure observation: the observed SimResult is the
+        // unobserved one bit-for-bit, and the recorded phase windows
+        // tile every processor's [0, finish] contiguously.
+        let g = heat1d_graph(48, 4, 3);
+        let plan = ExecPlan::ca(&g, 2, TransformOptions::default()).unwrap();
+        let mach = Machine::new(3, 2, 80.0, 0.5, 1.0);
+        let cp = CompiledPlan::compile(&g, &plan, &UniformCost);
+        let mut scratch = EngineScratch::new();
+        for kind in NetworkKind::all_default() {
+            let mut net_a = kind.build(&mach);
+            let plain = simulate_compiled(&cp, &mach, net_a.as_mut(), &mut scratch, false).unwrap();
+            let mut prov = ProvenanceBuffer::new();
+            let mut net_b = kind.build(&mach);
+            let obs =
+                simulate_observed(&cp, &mach, net_b.as_mut(), &mut scratch, false, &mut prov)
+                    .unwrap();
+            assert_eq!(plain.total_time, obs.total_time, "{}", kind.label());
+            assert_eq!(plain.proc_finish, obs.proc_finish, "{}", kind.label());
+            assert_eq!(plain.proc_busy, obs.proc_busy, "{}", kind.label());
+            assert_eq!(plain.proc_wait, obs.proc_wait, "{}", kind.label());
+            assert_eq!(prov.len(), cp.num_phases());
+            for p in 0..3usize {
+                let mut clock = 0.0;
+                for k in cp.proc_phase_range(p) {
+                    assert_eq!(prov.phase_start(k), clock, "{} phase {k}", kind.label());
+                    assert!(prov.phase_end(k) >= prov.phase_start(k));
+                    clock = prov.phase_end(k);
+                }
+                assert_eq!(clock, obs.proc_finish[p], "{} proc {p}", kind.label());
+            }
+            // Every message slot's arrival was captured.
+            for msg in 0..cp.num_messages() {
+                assert!(prov.msg_arrival(msg) >= 0.0, "{} msg {msg}", kind.label());
+            }
+        }
     }
 }
 

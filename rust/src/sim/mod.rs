@@ -23,6 +23,9 @@
 //!   resolved up front ([`NetworkModel::channel_cost`]).  Data flow:
 //!   `ExecPlan ─compile→ CompiledPlan ─simulate_compiled→ SimResult`,
 //!   one compile amortized over every cell of a sweep/tune grid;
+//!   [`simulate_observed`] is the same engine with a [`ProvenanceBuffer`]
+//!   attached — per-phase windows + message arrivals for the
+//!   [`crate::explain`] blame walk, bit-identical results;
 //! * [`network`](NetworkKind) — [`AlphaBeta`], [`LogGp`], [`Hierarchical`],
 //!   [`Contended`] wire models;
 //! * [`sweep`] — parallel (α × threads × block × network) grids emitting
@@ -49,7 +52,11 @@ pub use analytic::{
     naive_time_1d, overlap_time_1d, paper_cost, superstep_costs, ProcPhaseCost,
     SuperstepCosts,
 };
-pub use compile::{compile_count, simulate_compiled, CompiledPlan, EngineScratch};
+pub(crate) use compile::CPhase;
+pub use compile::{
+    compile_count, simulate_compiled, simulate_observed, CompiledPlan, EngineScratch,
+    ProvenanceBuffer,
+};
 pub(crate) use discrete::run_compute;
 pub use discrete::{BusySpan, SimResult};
 pub use engine::{simulate, try_simulate, ScaledCost, SimError, TaskCostModel, UniformCost};

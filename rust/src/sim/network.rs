@@ -85,6 +85,26 @@ pub trait NetworkModel: Send {
             None => 0.0,
         }
     }
+
+    /// The `(latency, bandwidth)` decomposition of one message's
+    /// state-free wire cost — the α/β split the blame attribution in
+    /// [`crate::explain`] prices exposed waits with.  The two terms must
+    /// sum to [`NetworkModel::message_lower_bound`]: stateless wires
+    /// split their exact cost into `(α_c, β_c·words)`, stateful wires
+    /// split the history-free flight time (LogGP: `2o + L` latency vs.
+    /// `(words−1)·G` bandwidth; contended NICs: `α` vs. `β·words`) and
+    /// the dropped queueing terms surface as *idle* in the blame walk
+    /// (flight time above the state-free cost is queueing, not wire
+    /// physics).  Zero-word messages never touch the wire.
+    fn message_cost_split(&self, from: u32, to: u32, words: usize) -> (f64, f64) {
+        if words == 0 {
+            return (0.0, 0.0);
+        }
+        match self.channel_cost(from, to) {
+            Some((a, b)) => (a, b * words as f64),
+            None => (0.0, 0.0),
+        }
+    }
 }
 
 /// The classical postal model: every message arrives `α + β·words` after
@@ -172,6 +192,19 @@ impl NetworkModel for LogGp {
         // the state-free flight time of a single message.
         self.overhead + self.latency + words.saturating_sub(1) as f64 * self.per_word_gap
             + self.overhead
+    }
+
+    fn message_cost_split(&self, _from: u32, _to: u32, words: usize) -> (f64, f64) {
+        if words == 0 {
+            return (0.0, 0.0);
+        }
+        // Per-message fixed cost (two CPU overheads + flight latency) vs.
+        // the per-word streaming term; the injection gap is queueing and
+        // is deliberately not here.
+        (
+            self.overhead + self.latency + self.overhead,
+            words.saturating_sub(1) as f64 * self.per_word_gap,
+        )
     }
 }
 
@@ -281,6 +314,15 @@ impl NetworkModel for Contended {
         // Drop the NIC queue (start ≥ post always): flight time plus the
         // message's own link occupancy remain.
         self.alpha + self.beta * words as f64
+    }
+
+    fn message_cost_split(&self, _from: u32, _to: u32, words: usize) -> (f64, f64) {
+        if words == 0 {
+            return (0.0, 0.0);
+        }
+        // Flight latency vs. the message's own link occupancy; NIC
+        // queueing behind earlier messages is deliberately not here.
+        (self.alpha, self.beta * words as f64)
     }
 }
 
@@ -544,6 +586,30 @@ mod tests {
             // Zero-word messages never touch the wire.
             assert_eq!(model.message_lower_bound(0, 1, 0), 0.0);
         }
+    }
+
+    #[test]
+    fn message_cost_split_tiles_the_lower_bound() {
+        let mach = m();
+        for kind in NetworkKind::all_default() {
+            let model = kind.build(&mach);
+            for words in [1usize, 7, 100] {
+                let (lat, bw) = model.message_cost_split(0, 1, words);
+                assert!(lat >= 0.0 && bw >= 0.0, "{}", kind.label());
+                let lb = model.message_lower_bound(0, 1, words);
+                assert!(
+                    (lat + bw - lb).abs() <= 1e-12 * lb.max(1.0),
+                    "{}: split {lat}+{bw} != lb {lb}",
+                    kind.label()
+                );
+            }
+            // Zero-word messages never touch the wire.
+            assert_eq!(model.message_cost_split(0, 1, 0), (0.0, 0.0));
+        }
+        // On static wires the split is the exact engine arithmetic:
+        // `(α_c, β_c·words)` bit-for-bit.
+        let ab = AlphaBeta::from_machine(&mach);
+        assert_eq!(ab.message_cost_split(0, 1, 7), (mach.alpha, mach.beta * 7.0));
     }
 
     #[test]

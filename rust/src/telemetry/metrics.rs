@@ -305,6 +305,22 @@ mod tests {
     }
 
     #[test]
+    fn empty_histogram_percentile_is_exactly_zero() {
+        // Regression: an empty histogram must pin every quantile to
+        // 0.0 — never NaN — so the Prometheus exposition and JSON
+        // reports stay parseable before the first observation lands.
+        let h = Histogram::default();
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            let p = h.percentile(q);
+            assert_eq!(p.to_bits(), 0.0f64.to_bits(), "percentile({q}) = {p}");
+        }
+        assert_eq!(h.mean(), 0.0);
+        let r = Registry::default();
+        r.histogram("never.recorded");
+        assert!(!r.prometheus().contains("NaN"), "{}", r.prometheus());
+    }
+
+    #[test]
     fn prometheus_exposition_shape() {
         let r = Registry::default();
         r.counter("serve.requests").add(4);

@@ -124,6 +124,24 @@ impl Recorder {
         self.next_search.fetch_add(1, Ordering::Relaxed)
     }
 
+    /// The full Prometheus text exposition: the registry's metrics plus
+    /// the span buffer's own health — `telemetry_spans_dropped` (spans
+    /// lost past the buffer cap; silent loss must be observable) and
+    /// `telemetry_spans_buffered` (current depth).  Surfaces everywhere
+    /// [`Registry::prometheus`] used to be dumped directly.
+    pub fn prometheus(&self) -> String {
+        let mut out = self.registry.prometheus();
+        out.push_str(&format!(
+            "# TYPE telemetry_spans_dropped counter\ntelemetry_spans_dropped {}\n",
+            self.dropped_spans()
+        ));
+        out.push_str(&format!(
+            "# TYPE telemetry_spans_buffered gauge\ntelemetry_spans_buffered {}\n",
+            self.span_count()
+        ));
+        out
+    }
+
     /// Shorthand: get-or-create a counter in this recorder's registry.
     pub fn counter(&self, name: &str) -> Arc<Counter> {
         self.registry.counter(name)
@@ -215,6 +233,22 @@ mod tests {
         let r = Recorder::new();
         r.record_span("serve", 0, "x".into(), 10.0, 5.0);
         assert_eq!(r.drain_spans()[0].dur_us, 0.0);
+    }
+
+    #[test]
+    fn recorder_prometheus_surfaces_span_buffer_health() {
+        let r = Recorder::new();
+        r.counter("serve.requests").add(3);
+        r.record_span("serve", 0, "request:tune:1".into(), 0.0, 5.0);
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE serve_requests counter\nserve_requests 3\n"));
+        assert!(text.contains("# TYPE telemetry_spans_dropped counter\ntelemetry_spans_dropped 0\n"));
+        assert!(text.contains("# TYPE telemetry_spans_buffered gauge\ntelemetry_spans_buffered 1\n"));
+        // Appending the buffer health must keep the exposition shape:
+        // every non-comment line is `name maybe{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split(' ').count(), 2, "bad line: {line}");
+        }
     }
 
     #[test]

@@ -125,6 +125,79 @@ pub fn chrome_trace_with_telemetry(spans: &[BusySpan], telem: &[SpanRecord]) -> 
     out
 }
 
+/// One message flight to draw as a Perfetto flow arrow: a paired
+/// `ph:"s"` (start, at the sender's post) / `ph:"f"` (finish, at the
+/// receiver's arrival) event sharing one flow `id`.  The explain layer
+/// emits one per message on the observed critical path, so Perfetto
+/// draws the causal chain across processor rows.
+#[derive(Debug, Clone, Copy)]
+pub struct MessageFlow {
+    /// Flow id — unique per arrow (the explain path uses message slots).
+    pub id: u64,
+    /// Sending processor (arrow tail pid).
+    pub from_proc: u32,
+    /// Post time on the sender (µs).
+    pub post: f64,
+    /// Receiving processor (arrow head pid).
+    pub to_proc: u32,
+    /// Delivery time at the receiver (µs).
+    pub arrival: f64,
+}
+
+fn push_flow(out: &mut String, f: &MessageFlow, last: bool) {
+    // `bp:"e"` binds the finish to the enclosing slice, the form both
+    // chrome://tracing and Perfetto accept for legacy flow events.
+    out.push_str(&format!(
+        "  {{\"name\": \"msg\", \"cat\": \"crit\", \"ph\": \"s\", \"id\": {}, \"pid\": {}, \
+         \"tid\": 0, \"ts\": {:.3}}},\n",
+        f.id, f.from_proc, f.post
+    ));
+    out.push_str(&format!(
+        "  {{\"name\": \"msg\", \"cat\": \"crit\", \"ph\": \"f\", \"bp\": \"e\", \"id\": {}, \
+         \"pid\": {}, \"tid\": 0, \"ts\": {:.3}}}{}\n",
+        f.id,
+        f.to_proc,
+        f.arrival,
+        if last { "" } else { "," }
+    ));
+}
+
+/// Render simulator spans plus Perfetto flow arrows for the messages on
+/// the observed critical path.  Span events come first (so every flow
+/// endpoint has a slice to bind to), then one `s`/`f` pair per flow.
+pub fn chrome_trace_with_flows(spans: &[BusySpan], flows: &[MessageFlow]) -> String {
+    let mut out = String::from("[\n");
+    for (i, s) in spans.iter().enumerate() {
+        push_event(
+            &mut out,
+            s.what,
+            "sim",
+            u64::from(s.proc),
+            u64::from(s.thread),
+            s.start,
+            (s.end - s.start).max(0.0),
+            flows.is_empty() && i + 1 == spans.len(),
+        );
+    }
+    for (i, f) in flows.iter().enumerate() {
+        push_flow(&mut out, f, i + 1 == flows.len());
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Write a spans + critical-path-flows Chrome trace to a file.
+pub fn write_chrome_trace_with_flows(
+    spans: &[BusySpan],
+    flows: &[MessageFlow],
+    path: &str,
+) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, chrome_trace_with_flows(spans, flows))
+}
+
 /// Write the Chrome trace to a file.
 pub fn write_chrome_trace(spans: &[BusySpan], path: &str) -> std::io::Result<()> {
     if let Some(dir) = std::path::Path::new(path).parent() {
@@ -186,6 +259,41 @@ mod tests {
             j.as_bytes().windows(2).filter(|w| w[1] == b'"' && w[0] != b'\\').count();
         assert_eq!(unescaped_quotes % 2, 0, "unbalanced quotes in {j}");
         assert!(!j.contains('\u{1}'), "raw control byte leaked into JSON");
+    }
+
+    #[test]
+    fn flow_events_are_well_formed() {
+        let spans = vec![span(0, 0, 0.0, 5.0, "compute"), span(1, 0, 7.0, 9.0, "compute")];
+        let flows = vec![
+            MessageFlow { id: 42, from_proc: 0, post: 5.0, to_proc: 1, arrival: 7.0 },
+            MessageFlow { id: 43, from_proc: 1, post: 9.0, to_proc: 0, arrival: 11.5 },
+        ];
+        let j = chrome_trace_with_flows(&spans, &flows);
+        // Every flow is one "s"/"f" pair sharing an id; the finish
+        // carries the enclosing-slice binding point.
+        assert_eq!(j.matches("\"ph\": \"s\"").count(), 2);
+        assert_eq!(j.matches("\"ph\": \"f\"").count(), 2);
+        assert_eq!(j.matches("\"bp\": \"e\"").count(), 2);
+        assert_eq!(j.matches("\"id\": 42").count(), 2);
+        assert_eq!(j.matches("\"id\": 43").count(), 2);
+        // The start sits on the sender's row, the finish on the receiver's.
+        assert!(j.contains("\"ph\": \"s\", \"id\": 42, \"pid\": 0, \"tid\": 0, \"ts\": 5.000"));
+        assert!(j.contains(
+            "\"ph\": \"f\", \"bp\": \"e\", \"id\": 42, \"pid\": 1, \"tid\": 0, \"ts\": 7.000"
+        ));
+        // Balanced JSON: 2 span + 4 flow events, comma-separated.
+        assert_eq!(j.matches('{').count(), 6);
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches("},").count(), 5);
+        assert!(j.ends_with("]\n"));
+        // No flows degrades to the plain span trace shape.
+        let plain = chrome_trace_with_flows(&spans, &[]);
+        assert_eq!(plain.matches('{').count(), 2);
+        assert_eq!(plain.matches("},").count(), 1);
+        // No spans still emits a closed array of flow pairs.
+        let only_flows = chrome_trace_with_flows(&[], &flows[..1]);
+        assert_eq!(only_flows.matches('{').count(), 2);
+        assert!(only_flows.ends_with("]\n"));
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Baseline comparison for the `BENCH_*.json` smoke artifacts.
+//!
+//! Every smoke emits a JSON document of gate results and throughput
+//! numbers; CI uploads them but nothing watches how they *drift* across
+//! pushes.  This module diffs a freshly emitted artifact against a
+//! committed snapshot in `BENCH_baseline/`, metric by metric, without a
+//! JSON dependency: a scanner collects every `"key": <number>` leaf in
+//! document order (repeated keys — per-cell rows — get `#N` suffixes so
+//! nothing collides), and the comparer reports the largest relative
+//! deltas.  Advisory by design: the hard gates live inside each smoke;
+//! this surfaces the slow regressions those gates are too coarse to
+//! catch.
+
+use std::collections::BTreeMap;
+
+/// Every `"key": <number>` pair in `json`, in document order.  The
+/// N-th repeat of a key is renamed `key#N` (N ≥ 1), so per-cell rows
+/// that share field names stay distinct and positionally comparable.
+/// Strings, booleans, and malformed numbers are skipped.
+pub fn numeric_leaves(json: &str) -> Vec<(String, f64)> {
+    let bytes = json.as_bytes();
+    let mut out = Vec::new();
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] != b'"' {
+            i += 1;
+            continue;
+        }
+        let start = i + 1;
+        let mut j = start;
+        while j < bytes.len() && bytes[j] != b'"' {
+            j += 1;
+        }
+        if j >= bytes.len() {
+            break; // unterminated string: nothing more to scan
+        }
+        let token = &json[start..j];
+        let mut k = j + 1;
+        while k < bytes.len() && bytes[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        if k < bytes.len() && bytes[k] == b':' {
+            k += 1;
+            while k < bytes.len() && bytes[k].is_ascii_whitespace() {
+                k += 1;
+            }
+            let mut e = k;
+            while e < bytes.len()
+                && (bytes[e].is_ascii_digit()
+                    || matches!(bytes[e], b'-' | b'+' | b'.' | b'e' | b'E'))
+            {
+                e += 1;
+            }
+            if e > k {
+                if let Ok(v) = json[k..e].parse::<f64>() {
+                    let n = counts.entry(token).or_insert(0);
+                    let name =
+                        if *n == 0 { token.to_string() } else { format!("{token}#{n}") };
+                    *n += 1;
+                    out.push((name, v));
+                }
+            }
+            // Continue from the value: a string value is re-scanned as
+            // a candidate key and rejected (no ':' follows it).
+            i = k;
+            continue;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Diff two versions of one artifact.  Reports how many metrics were
+/// comparable, how many exist on only one side (a structure change),
+/// and the largest relative deltas above a 1% noise floor — at most 8,
+/// biggest first.
+pub fn compare_documents(name: &str, baseline: &str, current: &str) -> String {
+    let base: BTreeMap<String, f64> = numeric_leaves(baseline).into_iter().collect();
+    let cur: BTreeMap<String, f64> = numeric_leaves(current).into_iter().collect();
+    // key, baseline value, current value, relative delta
+    let mut deltas: Vec<(&String, f64, f64, f64)> = Vec::new();
+    for (k, bv) in &base {
+        if let Some(cv) = cur.get(k) {
+            deltas.push((k, *bv, *cv, (cv - bv) / bv.abs().max(1e-12)));
+        }
+    }
+    let compared = deltas.len();
+    let only_base = base.len() - compared;
+    let only_cur = cur.len() - compared;
+    deltas.sort_by(|x, y| y.3.abs().total_cmp(&x.3.abs()));
+    let mut s = format!("{name}: {compared} metrics compared");
+    if only_base + only_cur > 0 {
+        s.push_str(&format!(
+            " ({only_base} baseline-only, {only_cur} current-only — structure changed)"
+        ));
+    }
+    let shown: Vec<_> = deltas.iter().take(8).filter(|d| d.3.abs() >= 0.01).collect();
+    if shown.is_empty() {
+        s.push_str(", all within 1% of baseline\n");
+    } else {
+        s.push('\n');
+        for (k, bv, cv, rel) in shown {
+            s.push_str(&format!("  {k}: {bv} -> {cv} ({:+.1}%)\n", 100.0 * rel));
+        }
+    }
+    s
+}
+
+/// Compare each named artifact in the working directory against its
+/// snapshot under `baseline_dir`.  Every outcome — including a missing
+/// baseline — is a report line, never an error: this surface must stay
+/// safe to run unconditionally in CI.
+pub fn compare_bench_files(baseline_dir: &str, names: &[&str]) -> String {
+    let dir = std::path::Path::new(baseline_dir);
+    if !dir.is_dir() {
+        return format!(
+            "bench-compare: no baseline directory {baseline_dir:?} — run the smokes, then \
+             `make bench-baseline` to commit a snapshot\n"
+        );
+    }
+    let mut out = String::new();
+    for name in names {
+        match (std::fs::read_to_string(name), std::fs::read_to_string(dir.join(name))) {
+            (Err(_), _) => {
+                out.push_str(&format!("{name}: no current artifact (run the smoke first)\n"));
+            }
+            (_, Err(_)) => out.push_str(&format!("{name}: no committed baseline\n")),
+            (Ok(current), Ok(baseline)) => {
+                out.push_str(&compare_documents(name, &baseline, &current));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaves_skip_strings_and_booleans_and_index_repeats() {
+        let json = r#"{
+          "tag": "smoke", "ok": true, "makespan": 1250.5,
+          "cells": [
+            {"workload": "heat1d", "makespan": 100.0, "exact": true},
+            {"workload": "heat2d", "makespan": -2.5e1}
+          ],
+          "overhead_ratio": 0.993
+        }"#;
+        let leaves = numeric_leaves(json);
+        assert_eq!(
+            leaves,
+            vec![
+                ("makespan".to_string(), 1250.5),
+                ("makespan#1".to_string(), 100.0),
+                ("makespan#2".to_string(), -25.0),
+                ("overhead_ratio".to_string(), 0.993),
+            ]
+        );
+    }
+
+    #[test]
+    fn document_diff_reports_drift_above_the_noise_floor() {
+        let baseline = r#"{"events_per_sec": 1000.0, "makespan": 50.0, "spans": 12}"#;
+        let current = r#"{"events_per_sec": 900.0, "makespan": 50.2, "spans": 12}"#;
+        let s = compare_documents("BENCH_x.json", baseline, current);
+        assert!(s.starts_with("BENCH_x.json: 3 metrics compared"), "{s}");
+        assert!(s.contains("events_per_sec: 1000 -> 900 (-10.0%)"), "{s}");
+        // makespan moved 0.4% — under the floor — and spans are equal.
+        assert!(!s.contains("makespan"), "{s}");
+        assert!(!s.contains("spans"), "{s}");
+        let same = compare_documents("BENCH_x.json", baseline, baseline);
+        assert!(same.contains("all within 1% of baseline"), "{same}");
+    }
+
+    #[test]
+    fn structure_changes_and_missing_baselines_are_reported_not_fatal() {
+        let s = compare_documents("b.json", r#"{"a": 1, "b": 2}"#, r#"{"a": 1, "c": 3}"#);
+        assert!(s.contains("1 metrics compared (1 baseline-only, 1 current-only"), "{s}");
+        let missing = compare_bench_files("definitely/not/a/dir", &["BENCH_x.json"]);
+        assert!(missing.contains("no baseline directory"), "{missing}");
+    }
+}

@@ -14,18 +14,22 @@
 //! | [`gantt_ascii`] | sim spans | terminal Gantt chart |
 //! | [`chrome_trace_json`] | sim spans | Chrome/Perfetto JSON |
 //! | [`chrome_trace_with_telemetry`] | sim + telemetry spans | one combined Chrome/Perfetto JSON |
+//! | [`chrome_trace_with_flows`] | sim spans + [`MessageFlow`]s | Chrome/Perfetto JSON with critical-path flow arrows |
 //! | [`summary_line`] | a `SimResult` | one-line summary |
 //! | [`FigureSeries`] | figure data | CSV / ASCII table / ASCII plot |
+//! | [`compare_bench_files`] | `BENCH_*.json` vs `BENCH_baseline/` | per-metric drift report |
 //!
 //! (Prometheus text exposition lives with the registry itself:
 //! `telemetry::Registry::prometheus`.)
 
 mod chrome;
+mod compare;
 
 pub use chrome::{
-    chrome_trace_json, chrome_trace_with_telemetry, write_chrome_trace,
-    write_chrome_trace_with_telemetry,
+    chrome_trace_json, chrome_trace_with_flows, chrome_trace_with_telemetry, write_chrome_trace,
+    write_chrome_trace_with_flows, write_chrome_trace_with_telemetry, MessageFlow,
 };
+pub use compare::{compare_bench_files, compare_documents, numeric_leaves};
 
 use crate::sim::{BusySpan, SimResult};
 use crate::util::Csv;

@@ -327,6 +327,7 @@ pub fn tune_pipeline<W: Workload + Clone>(
             search: entry.search.clone(),
             wall_secs: 0.0,
             evaluated: Vec::new(),
+            explanation: None,
         };
         return Ok(TuneOutcome { chosen, report });
     }
@@ -545,6 +546,7 @@ pub fn tune_pipeline<W: Workload + Clone>(
         search: search_label.clone(),
         wall_secs,
         evaluated: ev.evaluated().to_vec(),
+        explanation: None,
     };
     if let (Some(rec), Some(ts0)) = (&telem, t_search0) {
         rec.record_span(

@@ -43,6 +43,12 @@ pub struct TuneReport {
     /// Every feasible candidate scored, in evaluation order (empty on a
     /// cache hit — the engine never ran).
     pub evaluated: Vec<(Candidate, f64)>,
+    /// Differential explanation of the winner vs the naive baseline
+    /// ([`crate::explain::PlanDiff::summary`]): which α terms the
+    /// chosen transform moved off the observed critical path.  `None`
+    /// straight out of the search; surfaces that run the explain pass
+    /// (the `explain` CLI) attach it.
+    pub explanation: Option<String>,
 }
 
 impl TuneReport {
@@ -63,9 +69,13 @@ impl TuneReport {
         } else {
             String::new()
         };
+        let why = match &self.explanation {
+            Some(e) => format!("\n    why: {e}"),
+            None => String::new(),
+        };
         format!(
             "tune {:<8} {:<22} → {:<16} makespan {:.1} (naive {:.1}, {:.2}x)  \
-             {} evals / {} engine runs{pruned} in {:.3}s [{source}]",
+             {} evals / {} engine runs{pruned} in {:.3}s [{source}]{why}",
             self.workload,
             self.network,
             self.chosen.label(),
@@ -176,6 +186,7 @@ mod tests {
             search: "exhaustive".into(),
             wall_secs: 0.025,
             evaluated: vec![(Candidate::naive(4), 1000.0), (Candidate::ca(8, 4), 250.0)],
+            explanation: None,
         }
     }
 
@@ -192,6 +203,12 @@ mod tests {
         let mut hit = report();
         hit.cache_hit = true;
         assert!(hit.summary().contains("cache hit"));
+        // An attached differential explanation rides along.
+        assert!(!r.summary().contains("why:"));
+        let mut explained = report();
+        explained.explanation = Some("ca(b=8) vs naive: 4.00x".into());
+        let s = explained.summary();
+        assert!(s.contains("why: ca(b=8) vs naive: 4.00x"), "{s}");
     }
 
     #[test]
