@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke trace-smoke explain-smoke bench-compare bench-baseline
+.PHONY: ci build test clippy fmt fmt-fix bench artifacts sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke trace-smoke explain-smoke chaos-smoke bench-compare bench-baseline
 
-ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke trace-smoke explain-smoke
+ci: build test clippy fmt sweep-smoke tune-smoke partition-smoke bench-smoke serve-smoke analyze-smoke trace-smoke explain-smoke chaos-smoke
 
 # The simulator perf tracker: a reduced fig-7/8 sweep across all four
 # network models, emitting per-cell makespan + simulator wall-time so the
@@ -73,6 +73,16 @@ partition-smoke: build
 # within 3% of baseline.
 explain-smoke: build
 	$(CARGO) run --release -- explain --smoke
+
+# The fault-injection tracker: N-seed chaos ensembles per (workload ×
+# strategy × wire × straggler rate), emitting p50/p95/p99 degradation
+# ratios (BENCH_chaos.json).  Fails unless every perturbed member
+# replays bit-identically on both engines, every blame decomposition
+# still sums exactly, no perturbed run undercuts the clean analytic
+# lower bound, and — the latency-tolerance claim — the best transformed
+# strategy's p99 tail degrades no worse than naive's under stragglers.
+chaos-smoke: build
+	$(CARGO) run --release -- chaos --smoke
 
 # Advisory drift report: diff the freshly emitted BENCH_*.json smoke
 # artifacts against the committed snapshot in BENCH_baseline/.  Never

@@ -11,6 +11,7 @@
 //! ```
 
 use imp_latency::analysis;
+use imp_latency::chaos::{self, FaultConfig, JitterWire, WireFault};
 use imp_latency::explain;
 use imp_latency::partition::{Partitioning, ProcGrid};
 use imp_latency::pipeline::{Heat1d, Heat2d, Pipeline};
@@ -163,6 +164,7 @@ fn main() {
     let server = Server::new(ServeConfig {
         workers: 2,
         max_in_flight: 8,
+        reserve: 0, // slots held back from low-priority requests (§13)
         budget: None,
         cache_dir: None, // in-memory; point at a directory to persist shards across restarts
         slots: 4,
@@ -248,4 +250,45 @@ fn main() {
     println!("\nwhy is {} this fast?", input.strategy);
     println!("  {}", explain::report::share_line(&e.blame));
     println!("  {}", explain::report::crosscheck_line(&e.cross));
+
+    // 13. Break it on purpose: the chaos layer injects seed-reproducible
+    //     faults — per-proc heterogeneity, per-task jitter, probabilistic
+    //     stragglers, and per-message wire delays — as decorators around
+    //     the cost model and the wire.  Same seed ⇒ the same bits on both
+    //     engines, so a degraded run is a *reproducible experiment*; the
+    //     `chaos` CLI subcommand runs N-seed ensembles and gates on the
+    //     transforms' p99 tail (`make chaos-smoke` → BENCH_chaos.json).
+    let fc = FaultConfig {
+        seed: 1,
+        hetero: 0.1,
+        jitter: 0.05,
+        straggler_rate: 0.1,
+        straggler_factor: 8.0,
+        wire: WireFault::Exponential { mean: 2.0 },
+    };
+    let shaken = chaos::perturb_input(&input, &fc);
+    let mut net =
+        JitterWire::wrap(NetworkKind::AlphaBeta.build_for(&machine, shaken.layout.as_ref()), &fc);
+    let hurt = simulate_compiled(&shaken.compiled, &machine, net.as_mut(), &mut scratch, false)
+        .expect("perturbed plans still run");
+    println!(
+        "\nchaos (seed {}): clean makespan {last} → perturbed {} ({:.2}x degradation, \
+         reproducible bit-for-bit)",
+        fc.seed,
+        hurt.total_time,
+        hurt.total_time / last
+    );
+
+    //     The daemon degrades as gracefully as the plans do: a request
+    //     whose `deadline_ms` budget has expired is answered with
+    //     `"status": "deadline"` before it costs a single engine run, and
+    //     the `drain` op closes admission, waits out in-flight searches,
+    //     and flushes every cache shard for a clean shutdown.
+    println!("serve under pressure: an expired deadline, then a drain:");
+    let late = tune_req.replace("\"id\": \"t\"", "\"id\": \"late\", \"deadline_ms\": 0");
+    for line in [late.as_str(), "{\"id\": \"bye\", \"op\": \"drain\"}"] {
+        for resp in server.run_wave(vec![Request::parse(line)]) {
+            println!("  {}", resp.to_json());
+        }
+    }
 }

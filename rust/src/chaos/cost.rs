@@ -1,0 +1,92 @@
+//! [`PerturbedCost`] — fault injection as a [`TaskCostModel`] decorator.
+
+use super::FaultConfig;
+use crate::graph::{TaskGraph, TaskId};
+use crate::sim::TaskCostModel;
+use std::sync::Arc;
+
+/// A [`TaskCostModel`] decorator that scales the inner model's cost by
+/// the scenario's compute factor for `(owner proc, task)` — static
+/// per-proc heterogeneity × per-task jitter × probabilistic stragglers,
+/// every term ≥ 1 (see [`FaultConfig::compute_factor`]).
+///
+/// The factor is a pure function of the config and the task's identity,
+/// **not** of simulation time or evaluation order.  That purity is what
+/// keeps the two engines equivalent: [`crate::sim::CompiledPlan`] bakes
+/// the perturbed cost once per task at compile time while the
+/// interpreting engine calls it during the run, and both observe the
+/// identical bits.
+#[derive(Debug, Clone)]
+pub struct PerturbedCost {
+    inner: Arc<dyn TaskCostModel>,
+    fault: FaultConfig,
+}
+
+impl PerturbedCost {
+    /// Decorate `inner` with the scenario's compute perturbations.
+    pub fn new(inner: Arc<dyn TaskCostModel>, fault: FaultConfig) -> PerturbedCost {
+        PerturbedCost { inner, fault }
+    }
+
+    /// The fault scenario this decorator applies.
+    pub fn fault(&self) -> &FaultConfig {
+        &self.fault
+    }
+}
+
+impl TaskCostModel for PerturbedCost {
+    fn task_cost(&self, g: &TaskGraph, t: TaskId) -> f64 {
+        self.inner.task_cost(g, t) * self.fault.compute_factor(g.owner(t).0, t.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{ScaledCost, UniformCost};
+    use crate::stencil::heat1d_graph;
+
+    fn scenario() -> FaultConfig {
+        FaultConfig {
+            seed: 11,
+            hetero: 0.25,
+            jitter: 0.1,
+            straggler_rate: 0.3,
+            straggler_factor: 5.0,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn scales_the_inner_model_and_never_speeds_up() {
+        let g = heat1d_graph(32, 4, 3);
+        let clean: Arc<dyn TaskCostModel> = Arc::new(ScaledCost(2.0));
+        let perturbed = PerturbedCost::new(Arc::clone(&clean), scenario());
+        let mut straggled = 0;
+        for t in g.tasks() {
+            let base = clean.task_cost(&g, t);
+            let x = perturbed.task_cost(&g, t);
+            assert!(x >= base, "task {t:?} sped up: {x} < {base}");
+            // hetero+jitter alone bound the factor below the straggler
+            // multiplier, so anything past it must be a straggler.
+            if x / base >= 5.0 {
+                straggled += 1;
+            }
+        }
+        assert!(straggled > 0, "rate 0.3 over {} tasks drew no straggler", g.len());
+    }
+
+    #[test]
+    fn same_seed_same_costs_different_seed_different_costs() {
+        let g = heat1d_graph(32, 4, 3);
+        let a = PerturbedCost::new(Arc::new(UniformCost), scenario());
+        let b = PerturbedCost::new(Arc::new(UniformCost), scenario());
+        let c = PerturbedCost::new(Arc::new(UniformCost), scenario().with_seed(12));
+        let mut diverged = false;
+        for t in g.tasks() {
+            assert_eq!(a.task_cost(&g, t), b.task_cost(&g, t));
+            diverged |= a.task_cost(&g, t) != c.task_cost(&g, t);
+        }
+        assert!(diverged, "seed 12 reproduced seed 11's costs");
+    }
+}

@@ -1,0 +1,470 @@
+//! N-seed fault-injection ensembles over the sweep pool — the machinery
+//! behind the `chaos` CLI subcommand and `BENCH_chaos.json`.
+//!
+//! For every (workload × strategy) input and wire model the ensemble
+//! simulates one *clean* run, then `seeds` perturbed runs per straggler
+//! intensity, and reports tail percentiles plus the degradation ratio
+//! (perturbed / clean makespan).  Alongside the measurements it checks
+//! the three invariants that make the numbers trustworthy:
+//!
+//! 1. **Determinism** — the seed-0 member of every group is re-simulated
+//!    on the compiled engine *and* on the interpreting engine; all three
+//!    makespans (and message/word counts) must agree bit-for-bit.
+//! 2. **Blame closure** — the same member is run through the provenance
+//!    engine and its [`Blame`] decomposition must sum bit-exactly to the
+//!    perturbed makespan.
+//! 3. **Bound soundness** — the analytic critical-path lower bound of
+//!    the *clean* input ([`analysis::input_lower_bound`]) must stay ≤
+//!    every perturbed makespan (faults only ever slow down).
+//!
+//! Failures are collected into [`ChaosReport::gate_failures`] rather
+//! than thrown, so the caller can still emit the report JSON before
+//! failing CI.
+
+use super::{mix64, perturb_cost, FaultConfig, JitterWire};
+use crate::analysis;
+use crate::explain::{Blame, Observation};
+use crate::sim::sweep::{self, SweepCell, SweepGrid, SweepInput};
+use crate::sim::{try_simulate, EngineScratch, Machine, NetworkKind};
+use std::sync::Arc;
+
+/// Ensemble shape: which wires and straggler intensities to inject, how
+/// many seeds per group, and the machine the runs share.
+#[derive(Debug, Clone)]
+pub struct EnsembleConfig {
+    /// Wire models to run under.
+    pub networks: Vec<NetworkKind>,
+    /// Straggler rates (the intensity axis); each overrides
+    /// `base.straggler_rate`.
+    pub rates: Vec<f64>,
+    /// Ensemble members per (input × rate); each gets its own root seed
+    /// derived from `base.seed` by [`member_seed`].
+    pub seeds: u32,
+    /// Scenario template: heterogeneity / jitter / straggler magnitude /
+    /// wire fault shared by every member.
+    pub base: FaultConfig,
+    /// Wire latency (γ-units).
+    pub alpha: f64,
+    /// Per-word wire cost (scaled by each input's words-per-value).
+    pub beta: f64,
+    /// Cost of one unit task.
+    pub gamma: f64,
+    /// Threads per simulated processor.
+    pub threads: u32,
+    /// Sweep worker threads (0 = one per core).
+    pub jobs: usize,
+    /// Straggler rate at/above which [`degradation_gate`] applies.
+    pub gate_rate: f64,
+}
+
+/// One ensemble group: every seed of (workload × strategy × wire ×
+/// rate), reduced to tail percentiles against the group's clean run.
+#[derive(Debug, Clone)]
+pub struct ChaosCell {
+    /// Workload tag (shared with the input).
+    pub workload: Arc<str>,
+    /// Strategy label (shared with the input).
+    pub strategy: Arc<str>,
+    /// Wire-model tag.
+    pub network: &'static str,
+    /// Straggler rate injected into this group.
+    pub rate: f64,
+    /// Ensemble members.
+    pub seeds: u32,
+    /// Unperturbed makespan.
+    pub clean: f64,
+    /// Analytic critical-path bound of the clean input (`None` when the
+    /// analyzer cannot price this plan).
+    pub lower_bound: Option<f64>,
+    /// Median perturbed makespan.
+    pub p50: f64,
+    /// 95th-percentile perturbed makespan.
+    pub p95: f64,
+    /// 99th-percentile perturbed makespan.
+    pub p99: f64,
+    /// Worst member.
+    pub worst: f64,
+    /// `p50 / clean`.
+    pub ratio_p50: f64,
+    /// `p99 / clean` — the tail degradation ratio the gate compares.
+    pub ratio_p99: f64,
+}
+
+/// The ensemble's full outcome: measurement cells plus the invariant
+/// bookkeeping (see the module docs).
+#[derive(Debug, Clone, Default)]
+pub struct ChaosReport {
+    /// One entry per (input × wire × rate) group.
+    pub cells: Vec<ChaosCell>,
+    /// Simulations run (clean + perturbed + verification re-runs).
+    pub sims: usize,
+    /// Compiled-re-run + interpreted-engine equivalence checks passed.
+    pub determinism_checks: usize,
+    /// Blame decompositions verified bit-exact.
+    pub blame_checks: usize,
+    /// Perturbed cells that undercut the clean lower bound (must be 0).
+    pub lb_violations: usize,
+    /// Every violated invariant / gate, human-readable.  Empty = pass.
+    pub gate_failures: Vec<String>,
+    /// Wall-clock seconds for the whole ensemble.
+    pub wall_secs: f64,
+}
+
+/// Root seed of ensemble member `s`: decorrelated from neighbouring
+/// members by a golden-ratio stride through the mixer (member 0 is not
+/// the template seed itself, so `seeds=1` still perturbs).
+pub fn member_seed(base: u64, s: u32) -> u64 {
+    mix64(base.wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(s as u64 + 1)))
+}
+
+/// Re-prepare `input` under `fault`: the cost model is wrapped in a
+/// [`super::PerturbedCost`] (when compute is perturbed) and the plan is
+/// recompiled so the compiled engine bakes the perturbed costs; graph,
+/// plan, and labels stay shared.  The attached fault also makes every
+/// sweep cell wrap its wire in a [`JitterWire`].
+pub fn perturb_input(input: &SweepInput, fault: &FaultConfig) -> SweepInput {
+    let cost = perturb_cost(Arc::clone(&input.cost), fault);
+    let mut out = SweepInput::new(
+        Arc::clone(&input.workload),
+        Arc::clone(&input.strategy),
+        Arc::clone(&input.graph),
+        Arc::clone(&input.plan),
+        cost,
+        input.words_per_value,
+        input.layout.clone(),
+    );
+    out.fault = Some(fault.clone());
+    out
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// The machine a sweep cell builds for `input` (β scaled by the input's
+/// words-per-value) — verification re-runs must construct the identical
+/// machine to reproduce the identical bits.
+fn cell_machine(input: &SweepInput, cfg: &EnsembleConfig) -> Machine {
+    let procs = input.plan.per_proc.len() as u32;
+    Machine::new(
+        procs,
+        cfg.threads,
+        cfg.alpha,
+        cfg.beta * input.words_per_value as f64,
+        cfg.gamma,
+    )
+}
+
+/// Re-run one perturbed member on the compiled engine (fresh scratch),
+/// on the interpreting engine, and through the provenance/blame stack;
+/// append a failure string for anything that is not bit-identical.
+fn verify_member(
+    input: &SweepInput,
+    cfg: &EnsembleConfig,
+    kind: NetworkKind,
+    rate: f64,
+    want: &SweepCell,
+    scratch: &mut EngineScratch,
+    report: &mut ChaosReport,
+) {
+    let tag = format!("{}/{}/{}/rate={rate}", input.workload, input.strategy, kind.label());
+    let fault = input.fault.clone().unwrap_or_default();
+    let mach = cell_machine(input, cfg);
+
+    // Compiled re-run with a fresh wire: same bits as the sweep cell.
+    let mut net = JitterWire::wrap(kind.build_for(&mach, input.layout.as_ref()), &fault);
+    match crate::sim::simulate_compiled(&input.compiled, &mach, net.as_mut(), scratch, false) {
+        Ok(r) => {
+            report.sims += 1;
+            if r.total_time != want.makespan || r.messages != want.messages || r.words != want.words
+            {
+                report.gate_failures.push(format!(
+                    "{tag}: compiled re-run diverged: {} vs {} ({} vs {} msgs)",
+                    r.total_time, want.makespan, r.messages, want.messages
+                ));
+                return;
+            }
+        }
+        Err(e) => {
+            report.gate_failures.push(format!("{tag}: compiled re-run failed: {e}"));
+            return;
+        }
+    }
+
+    // Interpreting engine under the same perturbation: bit-for-bit.
+    let mut net = JitterWire::wrap(kind.build_for(&mach, input.layout.as_ref()), &fault);
+    match try_simulate(
+        &input.graph,
+        &input.plan,
+        &mach,
+        net.as_mut(),
+        input.cost.as_ref(),
+        false,
+    ) {
+        Ok(r) => {
+            report.sims += 1;
+            if r.total_time != want.makespan || r.messages != want.messages || r.words != want.words
+            {
+                report.gate_failures.push(format!(
+                    "{tag}: interpreted engine diverged under perturbation: {} vs {}",
+                    r.total_time, want.makespan
+                ));
+                return;
+            }
+            report.determinism_checks += 1;
+        }
+        Err(e) => {
+            report.gate_failures.push(format!("{tag}: interpreted engine failed: {e}"));
+            return;
+        }
+    }
+
+    // Provenance + blame on the perturbed run: the decomposition must
+    // still tile [0, makespan] bit-exactly (JitterWire keeps the inner
+    // wire's message_cost_split, so jitter lands in exposed latency).
+    let mut net = JitterWire::wrap(kind.build_for(&mach, input.layout.as_ref()), &fault);
+    match Observation::observe(Arc::clone(&input.compiled), &mach, net.as_mut(), scratch) {
+        Ok(obs) => {
+            report.sims += 1;
+            let blame = Blame::explain(&obs, net.as_ref());
+            if blame.makespan != want.makespan {
+                report.gate_failures.push(format!(
+                    "{tag}: observed makespan diverged: {} vs {}",
+                    blame.makespan, want.makespan
+                ));
+            } else if blame.plan.total() != blame.makespan {
+                report.gate_failures.push(format!(
+                    "{tag}: blame sum {} != perturbed makespan {}",
+                    blame.plan.total(),
+                    blame.makespan
+                ));
+            } else {
+                report.blame_checks += 1;
+            }
+        }
+        Err(e) => {
+            report.gate_failures.push(format!("{tag}: observed run failed: {e}"));
+        }
+    }
+}
+
+/// The paper-extending claim `make chaos-smoke` gates on: at straggler
+/// rates ≥ `gate_rate`, the best transformed strategy's p99 degradation
+/// ratio must not exceed naive's on the heat workloads under the
+/// `alphabeta` and `hier` wires.  (Naive re-synchronizes every level, so
+/// each level pays its slowest proc — a sum of maxima; the transforms
+/// synchronize every `b` levels, so stragglers average out within a
+/// block — a max of sums, which is never larger.)  Returns one failure
+/// string per violated group.
+pub fn degradation_gate(cells: &[ChaosCell], gate_rate: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    let gated: Vec<&ChaosCell> = cells
+        .iter()
+        .filter(|c| {
+            c.workload.starts_with("heat")
+                && matches!(c.network, "alphabeta" | "hier")
+                && c.rate >= gate_rate - 1e-12
+        })
+        .collect();
+    let mut groups: Vec<(Arc<str>, &'static str, f64)> = Vec::new();
+    for c in &gated {
+        let key = (Arc::clone(&c.workload), c.network, c.rate);
+        if !groups.contains(&key) {
+            groups.push(key);
+        }
+    }
+    for (workload, network, rate) in groups {
+        let of = |pred: &dyn Fn(&str) -> bool| -> Option<f64> {
+            gated
+                .iter()
+                .filter(|c| {
+                    c.workload == workload && c.network == network && c.rate == rate && pred(&c.strategy)
+                })
+                .map(|c| c.ratio_p99)
+                .fold(None, |m: Option<f64>, r| Some(m.map_or(r, |m| m.min(r))))
+        };
+        let (Some(naive), Some(transformed)) =
+            (of(&|s| s == "naive"), of(&|s| s != "naive"))
+        else {
+            continue; // group lacks a naive baseline or a transform
+        };
+        if transformed > naive + 1e-9 {
+            failures.push(format!(
+                "{workload}/{network}/rate={rate}: best transformed p99 degradation {transformed:.4} \
+                 exceeds naive's {naive:.4}"
+            ));
+        }
+    }
+    failures
+}
+
+/// Run the full ensemble over `inputs` (clean, unperturbed — typically
+/// naive/overlap/CA per workload) and reduce it to a [`ChaosReport`].
+pub fn run_ensemble(inputs: &[SweepInput], cfg: &EnsembleConfig) -> Result<ChaosReport, String> {
+    if inputs.is_empty() || cfg.networks.is_empty() || cfg.rates.is_empty() || cfg.seeds == 0 {
+        return Err("chaos ensemble needs ≥1 input, network, rate, and seed".to_string());
+    }
+    let t0 = std::time::Instant::now();
+    let mut report = ChaosReport::default();
+    let nn = cfg.networks.len();
+
+    // Clean baselines: one grid of the unperturbed inputs × wires.
+    let clean_grid = SweepGrid {
+        inputs: inputs.to_vec(),
+        networks: cfg.networks.clone(),
+        alphas: vec![cfg.alpha],
+        threads: vec![cfg.threads],
+        beta: cfg.beta,
+        gamma: cfg.gamma,
+        jobs: cfg.jobs,
+    };
+    let clean_cells = sweep::run(&clean_grid)?;
+    report.sims += clean_cells.len();
+
+    // Analytic bounds on the clean inputs (the perturbed floor).
+    let bounds: Vec<Vec<Option<f64>>> = inputs
+        .iter()
+        .map(|input| {
+            let base = cell_machine(input, cfg);
+            // input_lower_bound re-scales β by words_per_value itself.
+            let raw = Machine::new(base.nprocs, cfg.threads, cfg.alpha, cfg.beta, cfg.gamma);
+            cfg.networks.iter().map(|&k| analysis::input_lower_bound(input, &raw, k)).collect()
+        })
+        .collect();
+
+    // Perturbed members: inputs-major, then rate, then seed, so the
+    // sweep's grid order lets groups be sliced back out by index.
+    let mut members = Vec::with_capacity(inputs.len() * cfg.rates.len() * cfg.seeds as usize);
+    for input in inputs {
+        for &rate in &cfg.rates {
+            for s in 0..cfg.seeds {
+                let fault = FaultConfig {
+                    straggler_rate: rate,
+                    ..cfg.base.with_seed(member_seed(cfg.base.seed, s))
+                };
+                members.push(perturb_input(input, &fault));
+            }
+        }
+    }
+    let perturbed_grid = SweepGrid {
+        inputs: members,
+        networks: cfg.networks.clone(),
+        alphas: vec![cfg.alpha],
+        threads: vec![cfg.threads],
+        beta: cfg.beta,
+        gamma: cfg.gamma,
+        jobs: cfg.jobs,
+    };
+    let perturbed_cells = sweep::run(&perturbed_grid)?;
+    report.sims += perturbed_cells.len();
+
+    // Reduce each (input × rate × wire) group to a ChaosCell and verify
+    // the seed-0 member's determinism + blame closure.
+    let mut scratch = EngineScratch::new();
+    for (o, input) in inputs.iter().enumerate() {
+        for (ri, &rate) in cfg.rates.iter().enumerate() {
+            for (ni, kind) in cfg.networks.iter().enumerate() {
+                let clean = clean_cells[o * nn + ni].makespan;
+                let lower_bound = bounds[o][ni];
+                let mut makespans: Vec<f64> = (0..cfg.seeds as usize)
+                    .map(|s| {
+                        let member = (o * cfg.rates.len() + ri) * cfg.seeds as usize + s;
+                        perturbed_cells[member * nn + ni].makespan
+                    })
+                    .collect();
+                if let Some(lb) = lower_bound {
+                    for (s, &m) in makespans.iter().enumerate() {
+                        if m < lb - 1e-12 {
+                            report.lb_violations += 1;
+                            report.gate_failures.push(format!(
+                                "{}/{}/{}/rate={rate}/seed#{s}: perturbed makespan {m} \
+                                 undercuts the clean lower bound {lb}",
+                                input.workload,
+                                input.strategy,
+                                kind.label()
+                            ));
+                        }
+                    }
+                }
+                let member0 = (o * cfg.rates.len() + ri) * cfg.seeds as usize;
+                verify_member(
+                    &perturbed_grid.inputs[member0],
+                    cfg,
+                    *kind,
+                    rate,
+                    &perturbed_cells[member0 * nn + ni],
+                    &mut scratch,
+                    &mut report,
+                );
+                makespans.sort_by(f64::total_cmp);
+                let (p50, p95, p99) = (
+                    percentile(&makespans, 0.50),
+                    percentile(&makespans, 0.95),
+                    percentile(&makespans, 0.99),
+                );
+                report.cells.push(ChaosCell {
+                    workload: Arc::clone(&input.workload),
+                    strategy: Arc::clone(&input.strategy),
+                    network: kind.label(),
+                    rate,
+                    seeds: cfg.seeds,
+                    clean,
+                    lower_bound,
+                    p50,
+                    p95,
+                    p99,
+                    worst: *makespans.last().unwrap(),
+                    ratio_p50: p50 / clean,
+                    ratio_p99: p99 / clean,
+                });
+            }
+        }
+    }
+
+    report.gate_failures.extend(degradation_gate(&report.cells, cfg.gate_rate));
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Render the report as `BENCH_chaos.json`.
+pub fn to_json(tag: &str, report: &ChaosReport) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"chaos\": {tag:?},\n"));
+    s.push_str(&format!("  \"sims\": {},\n", report.sims));
+    s.push_str(&format!("  \"determinism_checks\": {},\n", report.determinism_checks));
+    s.push_str(&format!("  \"blame_checks\": {},\n", report.blame_checks));
+    s.push_str(&format!("  \"lb_violations\": {},\n", report.lb_violations));
+    s.push_str(&format!("  \"ensemble_wall_secs\": {},\n", report.wall_secs));
+    s.push_str("  \"gate_failures\": [");
+    for (i, f) in report.gate_failures.iter().enumerate() {
+        s.push_str(&format!("{}{f:?}", if i == 0 { "" } else { ", " }));
+    }
+    s.push_str("],\n  \"cells\": [\n");
+    for (i, c) in report.cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": {:?}, \"strategy\": {:?}, \"network\": {:?}, \
+             \"rate\": {}, \"seeds\": {}, \"clean\": {}, \"lower_bound\": {}, \
+             \"p50\": {}, \"p95\": {}, \"p99\": {}, \"worst\": {}, \
+             \"ratio_p50\": {}, \"ratio_p99\": {}}}{}",
+            c.workload,
+            c.strategy,
+            c.network,
+            c.rate,
+            c.seeds,
+            c.clean,
+            c.lower_bound.map_or("null".to_string(), |b| b.to_string()),
+            c.p50,
+            c.p95,
+            c.p99,
+            c.worst,
+            c.ratio_p50,
+            c.ratio_p99,
+            if i + 1 == report.cells.len() { "" } else { "," }
+        ));
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}

@@ -1,0 +1,382 @@
+//! Deterministic fault injection — the robustness layer the paper never
+//! tested.
+//!
+//! Every simulation in the repo runs on a perfectly uniform machine, yet
+//! the paper's subject is latency *tolerance*.  This module perturbs the
+//! machine instead of the plan: per-proc speed heterogeneity, seeded
+//! compute jitter, probabilistic stragglers ([`PerturbedCost`], a
+//! [`TaskCostModel`] decorator) and per-message latency drawn from seeded
+//! distributions ([`JitterWire`], a
+//! [`NetworkModel`](crate::sim::NetworkModel) decorator).  On top,
+//! [`run_ensemble`] fans N-seed ensembles per (workload × strategy ×
+//! wire × straggler intensity) through the sweep pool and reports tail
+//! percentiles plus a *degradation ratio* (perturbed / clean makespan) —
+//! the figure the paper never drew: do the §3 transforms degrade more
+//! gracefully than naive execution when the machine misbehaves?
+//!
+//! Three invariants make the injection trustworthy rather than noisy:
+//!
+//! * **Determinism.**  Every draw is a pure function of
+//!   `(seed, stream, entity)` through a splitmix64-style mixer — no RNG
+//!   state threads through the engine, so the same seed reproduces the
+//!   same perturbed makespan bit-for-bit on the compiled *and* the
+//!   interpreting engine, across any worker-thread schedule.
+//! * **Slowdown-only.**  Cost factors are ≥ 1 and wire jitter is ≥ 0, so
+//!   the analytic critical-path lower bound computed on the *clean*
+//!   input ([`crate::analysis::input_lower_bound`]) stays sound for
+//!   every perturbed run — the ensemble checks it on every cell.
+//! * **Blame still sums.**  [`JitterWire`] delegates
+//!   `message_cost_split` to its inner wire, so
+//!   [`crate::explain::Blame`] decompositions of perturbed runs still
+//!   sum bit-exactly to the perturbed makespan (jitter surfaces as
+//!   exposed latency, where it belongs).
+
+use crate::sim::TaskCostModel;
+
+mod cost;
+mod ensemble;
+mod wire;
+
+pub use cost::PerturbedCost;
+pub use ensemble::{
+    degradation_gate, perturb_input, run_ensemble, to_json, ChaosCell, ChaosReport, EnsembleConfig,
+};
+pub use wire::JitterWire;
+
+/// Domain-separation tags: each perturbation family draws from its own
+/// stream so a proc's speed factor can never collide with a task's
+/// jitter draw or a channel's latency draw (the "no accidental seed
+/// reuse" the determinism matrix pins).
+const STREAM_PROC: u64 = 0x9d39_247e_3377_6d41;
+const STREAM_JITTER: u64 = 0x2af7_398005_aaa5c7 ^ 0x44db_5d57_6c8a_8df0;
+const STREAM_STRAGGLER: u64 = 0x8f8f_47d1_56cf_5c4d;
+const STREAM_WIRE: u64 = 0x61c8_8646_80b5_83eb;
+
+/// SplitMix64 finalizer: a bijective avalanche mix, the entire RNG of
+/// this module.  Statelessness is the point — every draw is addressable
+/// by what it perturbs, never by when it is drawn.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Map a mixed hash to a uniform draw in `[0, 1)` (53 mantissa bits).
+#[inline]
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// One addressable draw: `seed` × `stream` select the family, `a` and
+/// `b` the entity (proc, task, channel, sequence number).
+#[inline]
+fn draw(seed: u64, stream: u64, a: u64, b: u64) -> u64 {
+    mix64(mix64(mix64(seed ^ stream).wrapping_add(a)) ^ b)
+}
+
+/// The per-message latency distribution a [`JitterWire`] draws from.
+/// Every variant is an *additive, non-negative* delay on top of the
+/// inner wire's arrival, so `deliver ≥ post + inner lower bound` is
+/// preserved by construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WireFault {
+    /// No wire perturbation (compute faults only).
+    None,
+    /// Uniform extra delay in `[0, spread)` γ-units.
+    Uniform {
+        /// Width of the uniform delay window (γ-units).
+        spread: f64,
+    },
+    /// Exponential extra delay with the given mean (γ-units) — the
+    /// classic memoryless OS-noise model.
+    Exponential {
+        /// Mean of the exponential delay (γ-units).
+        mean: f64,
+    },
+    /// Pareto-ish heavy tail, shifted to start at 0:
+    /// `scale · ((1-u)^(-1/shape) - 1)`.  Small `shape` ⇒ fatter tail;
+    /// `shape > 1` keeps the mean finite.
+    Pareto {
+        /// Scale of the tail (γ-units).
+        scale: f64,
+        /// Tail exponent (must be > 0; > 1 for a finite mean).
+        shape: f64,
+    },
+}
+
+impl WireFault {
+    /// Whether this fault actually perturbs anything.
+    pub fn is_active(&self) -> bool {
+        !matches!(self, WireFault::None)
+    }
+
+    /// Parse a CLI/config tag: `none`, `uniform:SPREAD`, `exp:MEAN`, or
+    /// `pareto:SCALE,SHAPE`.
+    pub fn parse(tag: &str) -> Result<WireFault, String> {
+        let tag = tag.trim();
+        if tag.is_empty() || tag == "none" {
+            return Ok(WireFault::None);
+        }
+        let (kind, arg) = tag.split_once(':').unwrap_or((tag, ""));
+        let num = |s: &str| -> Result<f64, String> {
+            s.trim().parse::<f64>().map_err(|_| format!("bad wire-fault number {s:?} in {tag:?}"))
+        };
+        match kind {
+            "uniform" => Ok(WireFault::Uniform { spread: num(arg)? }),
+            "exp" | "exponential" => Ok(WireFault::Exponential { mean: num(arg)? }),
+            "pareto" => {
+                let (scale, shape) = arg
+                    .split_once(',')
+                    .ok_or_else(|| format!("pareto needs SCALE,SHAPE, got {tag:?}"))?;
+                let shape = num(shape)?;
+                if shape <= 0.0 {
+                    return Err(format!("pareto shape must be > 0, got {shape}"));
+                }
+                Ok(WireFault::Pareto { scale: num(scale)?, shape })
+            }
+            _ => Err(format!(
+                "unknown wire fault {tag:?} (expected none|uniform:S|exp:M|pareto:SC,SH)"
+            )),
+        }
+    }
+
+    /// Stable tag for cache keys and reports (round-trips via [`parse`](Self::parse)).
+    pub fn key(&self) -> String {
+        match self {
+            WireFault::None => "none".to_string(),
+            WireFault::Uniform { spread } => format!("uniform:{spread}"),
+            WireFault::Exponential { mean } => format!("exp:{mean}"),
+            WireFault::Pareto { scale, shape } => format!("pareto:{scale},{shape}"),
+        }
+    }
+
+    /// The extra delay for message number `seq` on channel `(from, to)`
+    /// under `seed`.  Pure in its arguments; always ≥ 0 and finite.
+    pub fn sample(&self, seed: u64, from: u32, to: u32, seq: u64) -> f64 {
+        if !self.is_active() {
+            return 0.0;
+        }
+        let chan = ((from as u64) << 32) | to as u64;
+        let u = unit(draw(seed, STREAM_WIRE, chan, seq));
+        match *self {
+            WireFault::None => 0.0,
+            WireFault::Uniform { spread } => spread * u,
+            // u ∈ [0,1) so 1-u ∈ (0,1]: ln ≤ 0, the draw is ≥ 0 and finite.
+            WireFault::Exponential { mean } => -mean * (1.0 - u).ln(),
+            WireFault::Pareto { scale, shape } => scale * ((1.0 - u).powf(-1.0 / shape) - 1.0),
+        }
+    }
+}
+
+/// A complete fault scenario: one seed plus the intensity of each
+/// perturbation family.  `Default` is the null scenario (nothing
+/// perturbed); every field is a pure intensity so configs compose by
+/// struct update.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Root seed; every draw mixes it with a stream tag and an entity id.
+    pub seed: u64,
+    /// Per-proc speed spread: each proc slows by a fixed factor in
+    /// `[1, 1 + hetero)` for the whole run (static heterogeneity).
+    pub hetero: f64,
+    /// Per-task compute jitter: each task slows by `[1, 1 + jitter)`
+    /// (OS noise at task granularity).
+    pub jitter: f64,
+    /// Probability a task straggles.
+    pub straggler_rate: f64,
+    /// Multiplier a straggling task's cost is scaled by (≥ 1 enforced
+    /// at draw time — stragglers only ever slow down).
+    pub straggler_factor: f64,
+    /// Per-message wire latency distribution.
+    pub wire: WireFault,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            seed: 0,
+            hetero: 0.0,
+            jitter: 0.0,
+            straggler_rate: 0.0,
+            straggler_factor: 1.0,
+            wire: WireFault::None,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Same scenario under a different root seed (ensemble members).
+    pub fn with_seed(&self, seed: u64) -> FaultConfig {
+        FaultConfig { seed, ..self.clone() }
+    }
+
+    /// Whether any perturbation family is switched on.
+    pub fn is_active(&self) -> bool {
+        self.hetero > 0.0
+            || self.jitter > 0.0
+            || (self.straggler_rate > 0.0 && self.straggler_factor > 1.0)
+            || self.wire.is_active()
+    }
+
+    /// Stable tag for tuning-cache keys: two pipelines tuned under
+    /// different fault scenarios must never share a verdict
+    /// ([`crate::tune::pipeline_tune_key`] appends this).
+    pub fn key(&self) -> String {
+        format!(
+            "s{};het{};jit{};sr{};sf{};w{}",
+            self.seed,
+            self.hetero,
+            self.jitter,
+            self.straggler_rate,
+            self.straggler_factor,
+            self.wire.key()
+        )
+    }
+
+    /// The compute slowdown factor for task `task` owned by `proc`:
+    /// `hetero(proc) · jitter(task) · straggler(task)`, every term ≥ 1.
+    /// Pure in `(self, proc, task)` — the compiled engine bakes it once
+    /// per task, the interpreter re-evaluates it per run, and both see
+    /// the identical number.
+    pub fn compute_factor(&self, proc: u32, task: u32) -> f64 {
+        let mut f = 1.0;
+        if self.hetero > 0.0 {
+            f *= 1.0 + self.hetero * unit(draw(self.seed, STREAM_PROC, proc as u64, 0));
+        }
+        if self.jitter > 0.0 {
+            f *= 1.0 + self.jitter * unit(draw(self.seed, STREAM_JITTER, task as u64, 0));
+        }
+        if self.straggler_rate > 0.0
+            && unit(draw(self.seed, STREAM_STRAGGLER, task as u64, 0)) < self.straggler_rate
+        {
+            f *= self.straggler_factor.max(1.0);
+        }
+        f
+    }
+}
+
+/// Wrap `inner` in a [`PerturbedCost`] when the scenario perturbs
+/// compute; hand back `inner` untouched otherwise (the null scenario
+/// must not even change the cost model's `Debug` fingerprint).
+pub fn perturb_cost(
+    inner: std::sync::Arc<dyn TaskCostModel>,
+    fault: &FaultConfig,
+) -> std::sync::Arc<dyn TaskCostModel> {
+    if fault.hetero > 0.0
+        || fault.jitter > 0.0
+        || (fault.straggler_rate > 0.0 && fault.straggler_factor > 1.0)
+    {
+        std::sync::Arc::new(PerturbedCost::new(inner, fault.clone()))
+    } else {
+        inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_is_deterministic_and_streams_are_separated() {
+        assert_eq!(mix64(42), mix64(42));
+        assert_ne!(mix64(42), mix64(43));
+        // The same entity id in different streams draws different values.
+        assert_ne!(draw(1, STREAM_PROC, 7, 0), draw(1, STREAM_JITTER, 7, 0));
+        assert_ne!(draw(1, STREAM_JITTER, 7, 0), draw(1, STREAM_STRAGGLER, 7, 0));
+        assert_ne!(draw(1, STREAM_STRAGGLER, 7, 0), draw(1, STREAM_WIRE, 7, 0));
+    }
+
+    #[test]
+    fn unit_is_in_range() {
+        for x in [0u64, 1, 42, u64::MAX, 0xdead_beef] {
+            let u = unit(mix64(x));
+            assert!((0.0..1.0).contains(&u), "{u}");
+        }
+    }
+
+    #[test]
+    fn wire_fault_parse_roundtrips() {
+        for tag in ["none", "uniform:0.5", "exp:2", "pareto:1.5,2"] {
+            let f = WireFault::parse(tag).unwrap();
+            assert_eq!(WireFault::parse(&f.key()).unwrap(), f, "{tag}");
+        }
+        assert_eq!(WireFault::parse("").unwrap(), WireFault::None);
+        assert!(WireFault::parse("gaussian:1").is_err());
+        assert!(WireFault::parse("pareto:1").is_err());
+        assert!(WireFault::parse("pareto:1,0").is_err());
+        assert!(WireFault::parse("uniform:x").is_err());
+    }
+
+    #[test]
+    fn samples_are_nonnegative_finite_and_seed_sensitive() {
+        let faults = [
+            WireFault::Uniform { spread: 3.0 },
+            WireFault::Exponential { mean: 2.0 },
+            WireFault::Pareto { scale: 1.0, shape: 1.5 },
+        ];
+        for f in faults {
+            let mut distinct = false;
+            for seq in 0..64u64 {
+                let a = f.sample(1, 0, 1, seq);
+                let b = f.sample(2, 0, 1, seq);
+                assert!(a.is_finite() && a >= 0.0, "{f:?}: {a}");
+                assert_eq!(a, f.sample(1, 0, 1, seq), "{f:?} must be pure");
+                distinct |= a != b;
+            }
+            assert!(distinct, "{f:?}: two seeds drew identical streams");
+        }
+        assert_eq!(WireFault::None.sample(1, 0, 1, 0), 0.0);
+    }
+
+    #[test]
+    fn compute_factor_is_pure_slowdown_only_and_entity_addressed() {
+        let f = FaultConfig {
+            seed: 7,
+            hetero: 0.3,
+            jitter: 0.2,
+            straggler_rate: 0.5,
+            straggler_factor: 4.0,
+            ..FaultConfig::default()
+        };
+        for proc in 0..4u32 {
+            for task in 0..32u32 {
+                let x = f.compute_factor(proc, task);
+                assert!(x >= 1.0, "slowdown-only violated: {x}");
+                assert_eq!(x, f.compute_factor(proc, task), "must be pure");
+            }
+        }
+        // Different procs draw different heterogeneity factors.
+        let hetero_only =
+            FaultConfig { seed: 7, hetero: 0.3, ..FaultConfig::default() };
+        assert_ne!(hetero_only.compute_factor(0, 0), hetero_only.compute_factor(1, 0));
+        // Hetero ignores the task id; jitter ignores the proc id.
+        assert_eq!(hetero_only.compute_factor(0, 0), hetero_only.compute_factor(0, 9));
+        let jitter_only = FaultConfig { seed: 7, jitter: 0.3, ..FaultConfig::default() };
+        assert_eq!(jitter_only.compute_factor(0, 5), jitter_only.compute_factor(3, 5));
+        assert_ne!(jitter_only.compute_factor(0, 5), jitter_only.compute_factor(0, 6));
+    }
+
+    #[test]
+    fn null_config_is_inactive_and_identity() {
+        let f = FaultConfig::default();
+        assert!(!f.is_active());
+        for (p, t) in [(0u32, 0u32), (3, 17)] {
+            assert_eq!(f.compute_factor(p, t), 1.0);
+        }
+        // Rate without a factor > 1 perturbs nothing.
+        let f = FaultConfig { straggler_rate: 0.9, ..FaultConfig::default() };
+        assert!(!f.is_active());
+    }
+
+    #[test]
+    fn key_distinguishes_scenarios() {
+        let a = FaultConfig { seed: 1, straggler_rate: 0.2, ..FaultConfig::default() };
+        assert_ne!(a.key(), a.with_seed(2).key());
+        let b = FaultConfig { straggler_rate: 0.3, ..a.clone() };
+        assert_ne!(a.key(), b.key());
+        let c = FaultConfig { wire: WireFault::Exponential { mean: 2.0 }, ..a.clone() };
+        assert_ne!(a.key(), c.key());
+    }
+}

@@ -1,0 +1,163 @@
+//! [`JitterWire`] — fault injection as a network-model decorator.
+
+use super::{FaultConfig, WireFault};
+use crate::sim::NetworkModel;
+use std::collections::HashMap;
+
+/// A [`NetworkModel`] decorator adding a seeded, non-negative latency
+/// draw to every delivered message.
+///
+/// Draws are addressed by `(seed, channel, message sequence number on
+/// that channel)`, with the per-channel counters living in this
+/// decorator — not by wall-clock or global call order.  The two engines
+/// post each channel's messages in the identical program order (the
+/// stateful-wire equivalence matrix pins exactly that), so the compiled
+/// and interpreting engines observe the identical jitter stream and stay
+/// bit-for-bit equivalent under perturbation.
+///
+/// Contract preservation:
+/// * `channel_cost` returns `None` — the compiled engine must route
+///   every message through `deliver` so the sequence counters advance
+///   identically in both engines (the wire is stateful by nature now).
+/// * `message_lower_bound` and `message_cost_split` delegate to the
+///   inner wire: jitter is ≥ 0, so the inner bound stays sound, and
+///   [`crate::explain::Blame`] keeps summing bit-exactly (the drawn
+///   delay shows up as exposed latency).
+pub struct JitterWire {
+    inner: Box<dyn NetworkModel>,
+    seed: u64,
+    fault: WireFault,
+    /// Messages delivered so far per `(from, to)` channel — the draw
+    /// address, reset per run like any other wire state.
+    seq: HashMap<(u32, u32), u64>,
+}
+
+impl JitterWire {
+    /// Decorate `inner` with the scenario's wire fault.
+    pub fn new(inner: Box<dyn NetworkModel>, fault: &FaultConfig) -> JitterWire {
+        JitterWire { inner, seed: fault.seed, fault: fault.wire, seq: HashMap::new() }
+    }
+
+    /// Wrap only when the scenario actually perturbs the wire; the null
+    /// scenario hands `inner` back untouched (keeping the compiled
+    /// engine's static fast path available).
+    pub fn wrap(inner: Box<dyn NetworkModel>, fault: &FaultConfig) -> Box<dyn NetworkModel> {
+        if fault.wire.is_active() {
+            Box::new(JitterWire::new(inner, fault))
+        } else {
+            inner
+        }
+    }
+}
+
+impl NetworkModel for JitterWire {
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+
+    fn deliver(&mut self, from: u32, to: u32, words: usize, post: f64) -> f64 {
+        let base = self.inner.deliver(from, to, words, post);
+        let n = self.seq.entry((from, to)).or_insert(0);
+        let extra = self.fault.sample(self.seed, from, to, *n);
+        *n += 1;
+        base + extra
+    }
+
+    fn reset(&mut self) {
+        self.seq.clear();
+        self.inner.reset();
+    }
+
+    // Default `channel_cost` (None) is deliberate: see the type docs.
+
+    fn message_lower_bound(&self, from: u32, to: u32, words: usize) -> f64 {
+        self.inner.message_lower_bound(from, to, words)
+    }
+
+    fn message_cost_split(&self, from: u32, to: u32, words: usize) -> (f64, f64) {
+        self.inner.message_cost_split(from, to, words)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Machine, NetworkKind};
+
+    fn scenario(wire: WireFault) -> FaultConfig {
+        FaultConfig { seed: 5, wire, ..FaultConfig::default() }
+    }
+
+    fn mach() -> Machine {
+        Machine::new(4, 2, 10.0, 0.5, 1.0)
+    }
+
+    #[test]
+    fn adds_nonnegative_jitter_and_replays_after_reset() {
+        let fault = scenario(WireFault::Exponential { mean: 2.0 });
+        let mut clean = NetworkKind::AlphaBeta.build(&mach());
+        let mut jit = JitterWire::new(NetworkKind::AlphaBeta.build(&mach()), &fault);
+        let mut first = Vec::new();
+        let mut any_extra = false;
+        for i in 0..16u32 {
+            let (from, to, w) = (i % 4, (i + 1) % 4, 1 + i as usize % 3);
+            let base = clean.deliver(from, to, w, 1.0);
+            let got = jit.deliver(from, to, w, 1.0);
+            assert!(got >= base, "jitter sped a message up: {got} < {base}");
+            any_extra |= got > base;
+            first.push(got);
+        }
+        assert!(any_extra, "exponential jitter never fired over 16 messages");
+        // reset() must rewind the sequence counters: the second run is a
+        // bit-identical replay (what EngineScratch reuse relies on).
+        jit.reset();
+        for (i, want) in first.iter().enumerate() {
+            let i = i as u32;
+            let (from, to, w) = (i % 4, (i + 1) % 4, 1 + i as usize % 3);
+            assert_eq!(jit.deliver(from, to, w, 1.0), *want, "message {i} diverged after reset");
+        }
+    }
+
+    #[test]
+    fn channels_draw_independent_streams() {
+        let fault = scenario(WireFault::Uniform { spread: 4.0 });
+        let mut jit = JitterWire::new(NetworkKind::AlphaBeta.build(&mach()), &fault);
+        let mut base = NetworkKind::AlphaBeta.build(&mach());
+        // Same words, same post, same sequence position: the only thing
+        // distinguishing the draws is the channel identity.
+        let e01 = jit.deliver(0, 1, 2, 0.0) - base.deliver(0, 1, 2, 0.0);
+        let e10 = jit.deliver(1, 0, 2, 0.0) - base.deliver(1, 0, 2, 0.0);
+        let e23 = jit.deliver(2, 3, 2, 0.0) - base.deliver(2, 3, 2, 0.0);
+        assert!(e01 != e10 && e01 != e23, "channels shared a jitter stream: {e01} {e10} {e23}");
+    }
+
+    #[test]
+    fn wrap_is_identity_for_null_wire_and_forces_dyn_path_otherwise() {
+        let fault = scenario(WireFault::None);
+        let wrapped = JitterWire::wrap(NetworkKind::AlphaBeta.build(&mach()), &fault);
+        // Null scenario keeps the static fast path resolvable.
+        assert!(wrapped.channel_cost(0, 1).is_some());
+        let fault = scenario(WireFault::Uniform { spread: 1.0 });
+        let wrapped = JitterWire::wrap(NetworkKind::AlphaBeta.build(&mach()), &fault);
+        assert!(wrapped.channel_cost(0, 1).is_none(), "jitter must disable the static path");
+        assert_eq!(wrapped.label(), "alphabeta");
+    }
+
+    #[test]
+    fn lower_bound_and_split_delegate_to_the_inner_wire() {
+        let fault = scenario(WireFault::Pareto { scale: 2.0, shape: 1.5 });
+        let m = mach();
+        let jit = JitterWire::new(NetworkKind::AlphaBeta.build(&m), &fault);
+        let inner = NetworkKind::AlphaBeta.build(&m);
+        for w in [1usize, 7, 100] {
+            assert_eq!(jit.message_lower_bound(0, 1, w), inner.message_lower_bound(0, 1, w));
+            assert_eq!(jit.message_cost_split(0, 1, w), inner.message_cost_split(0, 1, w));
+        }
+        // And the bound stays sound under jitter (slowdown-only).
+        let mut jit = jit;
+        for i in 0..32u64 {
+            let arr = jit.deliver(0, 1, 3, i as f64);
+            assert!(arr >= i as f64 + jit.message_lower_bound(0, 1, 3));
+        }
+    }
+}

@@ -304,6 +304,62 @@ pub fn preset_serve_smoke() -> Config {
     c
 }
 
+/// The `chaos` CLI preset: deterministic fault-injection ensembles.
+/// Every (workload × strategy × wire × straggler-rate) group runs
+/// `seeds` perturbed members against one clean baseline and reports
+/// tail percentiles plus the p99 degradation ratio; `hetero`/`jitter`/
+/// `straggler_factor`/`wire` shape the shared fault scenario and
+/// `seed` roots every deterministic draw.  α is moderate so compute
+/// stragglers (not wire latency) dominate the tail, which is the regime
+/// the degradation gate reasons about.
+pub fn preset_chaos() -> Config {
+    let mut c = Config::new();
+    c.set("workloads", "heat1d,heat2d");
+    c.set("networks", "alphabeta,hier");
+    c.set("blocks", "4,8");
+    c.set("rates", "0.05,0.1,0.25");
+    c.set("seeds", 64);
+    c.set("p", 4);
+    c.set("n", 2048);
+    c.set("m", 16);
+    c.set("h", 24);
+    c.set("w", 24);
+    c.set("cg_n", 64);
+    c.set("iters", 2);
+    c.set("threads", 4);
+    c.set("alpha", 8.0);
+    c.set("beta", 0.1);
+    c.set("gamma", 1.0);
+    c.set("seed", 1);
+    c.set("hetero", 0.1);
+    c.set("jitter", 0.1);
+    c.set("straggler_factor", 8.0);
+    c.set("wire", "exp:2");
+    c.set("gate_rate", 0.2);
+    c.set("jobs", 0);
+    c.set("out", "results/chaos.json");
+    c
+}
+
+/// The `chaos --smoke` preset: the CI robustness tracker, emitting
+/// `BENCH_chaos.json` on every push.  Gates: bit-exact determinism
+/// (compiled ≡ interpreted per seed), bit-exact blame closure on
+/// perturbed runs, the clean analytic lower bound never undercut, and
+/// at straggler rates ≥ `gate_rate` the best transformed strategy's p99
+/// degradation ratio must not exceed naive's on the heat workloads.
+pub fn preset_chaos_smoke() -> Config {
+    let mut c = preset_chaos();
+    c.set("n", 256);
+    c.set("m", 12);
+    c.set("h", 12);
+    c.set("w", 12);
+    c.set("blocks", "4");
+    c.set("rates", "0.05,0.25");
+    c.set("seeds", 24);
+    c.set("out", "BENCH_chaos.json");
+    c
+}
+
 /// The `analyze` CLI preset: the static-analysis study — verify every
 /// pipeline-built plan of the sweep grid without the engine, check the
 /// analytic critical-path lower bound against the simulated makespan on
@@ -613,6 +669,20 @@ mod tests {
         // CA-beats-naive exposed-latency gate assumes.
         assert_eq!(preset_explain_smoke().get("alpha"), Some("500"));
         assert_eq!(preset_explain_smoke().get("out"), Some("BENCH_explain.json"));
+        for c in [preset_chaos(), preset_chaos_smoke()] {
+            for k in [
+                "workloads", "networks", "blocks", "rates", "seeds", "p", "n", "m", "h", "w",
+                "cg_n", "iters", "threads", "alpha", "beta", "gamma", "seed", "hetero",
+                "jitter", "straggler_factor", "wire", "gate_rate", "jobs", "out",
+            ] {
+                assert!(c.get(k).is_some(), "{k}");
+            }
+        }
+        // The chaos smoke must include a rate at/above the gate's
+        // threshold, or the degradation gate would trivially pass.
+        assert_eq!(preset_chaos_smoke().get("rates"), Some("0.05,0.25"));
+        assert_eq!(preset_chaos_smoke().get("gate_rate"), Some("0.2"));
+        assert_eq!(preset_chaos_smoke().get("out"), Some("BENCH_chaos.json"));
         for k in ["h", "w", "chords", "m", "p", "threads", "alpha", "beta", "gamma"] {
             assert!(preset_fig10().get(k).is_some(), "{k}");
         }

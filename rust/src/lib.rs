@@ -77,6 +77,15 @@
 //!   requests deduped by cache key, compatible simulations batched into
 //!   shared [`sim::sweep`] grids, overload shed by admission control,
 //!   SIGINT/SIGTERM flushing shards cleanly ([`serve::signals`]).
+//! * [`chaos`] — deterministic fault injection: seeded per-proc speed
+//!   heterogeneity, compute jitter, and probabilistic stragglers as a
+//!   [`sim::TaskCostModel`] decorator ([`chaos::PerturbedCost`]), seeded
+//!   per-message latency distributions as a network-model decorator
+//!   ([`chaos::JitterWire`]) — slowdown-only, so the clean analytic
+//!   bounds stay sound, and pure per-entity draws, so compiled and
+//!   interpreting engines stay bit-for-bit equivalent per seed; the
+//!   `chaos` CLI subcommand runs N-seed ensembles and gates on tail
+//!   degradation ratios (`make chaos-smoke`).
 //! * [`explain`] — causal profiling: run the compiled engine with
 //!   provenance observation on ([`sim::simulate_observed`], bit-identical
 //!   results, one branch per phase when off), walk back from the
@@ -109,6 +118,7 @@
 //! * [`prop`] — in-repo property-testing harness (no external deps vendored).
 
 pub mod analysis;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod cost;

@@ -33,12 +33,13 @@
 //! each entry (a test keeps the two in sync).
 
 use imp_latency::analysis;
+use imp_latency::chaos::{self, EnsembleConfig, FaultConfig, WireFault};
 use imp_latency::config::{
     parse_list, preset_analyze, preset_analyze_smoke, preset_bench, preset_bench_smoke,
-    preset_end_to_end, preset_explain, preset_explain_smoke, preset_fig10, preset_fig7,
-    preset_fig8, preset_fig9, preset_partition, preset_partition_smoke, preset_serve,
-    preset_serve_smoke, preset_sweep, preset_sweep_smoke, preset_trace, preset_trace_smoke,
-    preset_tune, preset_tune_smoke, Config,
+    preset_chaos, preset_chaos_smoke, preset_end_to_end, preset_explain, preset_explain_smoke,
+    preset_fig10, preset_fig7, preset_fig8, preset_fig9, preset_partition,
+    preset_partition_smoke, preset_serve, preset_serve_smoke, preset_sweep, preset_sweep_smoke,
+    preset_trace, preset_trace_smoke, preset_tune, preset_tune_smoke, Config,
 };
 use imp_latency::coordinator::{heat1d, heat2d};
 use imp_latency::cost::CostModel;
@@ -130,15 +131,34 @@ COMMANDS
              on stateless wires and at α=0), and audits lower-bound tuner
              pruning against un-pruned tuning (identical winner required);
              --smoke emits BENCH_analyze.json and fails on any violated gate
+  chaos      [--smoke workloads=heat1d,heat2d networks=alphabeta,hier blocks=4,8
+              rates=0.05,0.1,0.25 seeds=64 p=4 n=2048 m=16 h=24 w=24 threads=4
+              alpha=8 beta=0.1 gamma=1 seed=1 hetero=0.1 jitter=0.1
+              straggler_factor=8 wire=exp:2 gate_rate=0.2 out=results/chaos.json]
+             deterministic fault injection: every workload × strategy × wire ×
+             straggler-rate group runs an N-seed perturbed ensemble against its
+             clean baseline (per-proc speed heterogeneity, seeded compute
+             jitter, probabilistic stragglers, per-message wire-latency jitter —
+             every draw a pure function of the seed) and reports p50/p95/p99
+             makespan plus the perturbed/clean degradation ratio; gates:
+             compiled ≡ interpreted bit-for-bit per seed, blame sums bit-exact
+             on perturbed runs, the clean analytic lower bound is never
+             undercut, and at rates ≥ gate_rate the transforms' p99 degradation
+             must not exceed naive's; --smoke emits BENCH_chaos.json
   serve      [--smoke requests=-|FILE listen=tcp:HOST:PORT|unix:PATH
               cache=results/serve_cache slots=8 workers=4 max_in_flight=64
-              budget=0 search=exhaustive telemetry=0 metrics=0 out=BENCH_serve.json]
+              reserve=0 budget=0 search=exhaustive telemetry=0 metrics=0
+              out=BENCH_serve.json]
              long-running tuning/simulation daemon: newline-delimited JSON
-             requests (ops tune|simulate|analyze|cache-stats|metrics) from a
-             stdin/file batch or a TCP/Unix socket; warm cache hits cost zero
-             engine runs, identical in-flight requests dedupe onto one search,
-             compatible simulate requests coalesce into shared sweep grids,
-             excess load is shed with an explicit overloaded response;
+             requests (ops tune|simulate|analyze|explain|cache-stats|metrics|
+             drain) from a stdin/file batch or a TCP/Unix socket; warm cache
+             hits cost zero engine runs, identical in-flight requests dedupe
+             onto one search, compatible simulate requests coalesce into shared
+             sweep grids, excess load is shed with an explicit overloaded
+             response (priority=low|normal|high per request, reserve=N holds
+             slots back from low), per-request deadline_ms budgets answer
+             "deadline" with zero engine runs once expired, and the drain op
+             closes admission, waits out in-flight searches and flushes shards;
              SIGINT/SIGTERM flush cache shards; telemetry=1 gives every request
              a phase-tiled lifecycle span (the metrics op reports the
              percentiles), metrics=N dumps the Prometheus exposition to stderr
@@ -207,6 +227,7 @@ const COMMANDS: &[(&str, Handler)] = &[
     ("tune", cmd_tune),
     ("partition", cmd_partition),
     ("analyze", cmd_analyze),
+    ("chaos", cmd_chaos),
     ("serve", cmd_serve),
     ("trace", cmd_trace),
     ("explain", cmd_explain),
@@ -1685,6 +1706,85 @@ fn cmd_analyze(args: &[&str]) -> Result<(), String> {
 /// daemon answers request waves from a stdin/file batch (`requests=`)
 /// or a TCP/Unix socket (`listen=`) until EOF or a shutdown signal,
 /// then flushes every cache shard.
+/// Deterministic fault-injection ensembles ([`imp_latency::chaos`]):
+/// every (workload × strategy × wire × straggler-rate) group runs
+/// `seeds` perturbed members against one clean baseline.  The report
+/// carries tail percentiles and degradation ratios; the determinism,
+/// blame-closure, lower-bound, and degradation gates fail the run
+/// *after* the JSON is written, so CI keeps the evidence.
+fn cmd_chaos(args: &[&str]) -> Result<(), String> {
+    let smoke = args.contains(&"--smoke");
+    let defaults = if smoke { preset_chaos_smoke() } else { preset_chaos() };
+    let (cfg, _) = config_from(defaults, args);
+
+    let workloads = workloads_from(&cfg)?;
+    let blocks: Vec<u32> = parse_list(&cfg.require::<String>("blocks")?)?;
+    let mut inputs = Vec::new();
+    for wl in &workloads {
+        inputs.extend(sweep_inputs_for(wl, &cfg, &blocks)?);
+    }
+    let ecfg = EnsembleConfig {
+        networks: networks_from(&cfg)?,
+        rates: parse_list(&cfg.require::<String>("rates")?)?,
+        seeds: cfg.require("seeds")?,
+        base: FaultConfig {
+            seed: cfg.require("seed")?,
+            hetero: cfg.require("hetero")?,
+            jitter: cfg.require("jitter")?,
+            // Overridden per ensemble group by each `rates` entry.
+            straggler_rate: 0.0,
+            straggler_factor: cfg.require("straggler_factor")?,
+            wire: WireFault::parse(&cfg.require::<String>("wire")?)?,
+        },
+        alpha: cfg.require("alpha")?,
+        beta: cfg.require("beta")?,
+        gamma: cfg.require("gamma")?,
+        threads: cfg.require("threads")?,
+        jobs: cfg.get_or("jobs", 0),
+        gate_rate: cfg.require("gate_rate")?,
+    };
+    println!(
+        "chaos: {} plans × {} wires × {} rates × {} seeds = {} perturbed sims (+{} clean)",
+        inputs.len(),
+        ecfg.networks.len(),
+        ecfg.rates.len(),
+        ecfg.seeds,
+        inputs.len() * ecfg.networks.len() * ecfg.rates.len() * ecfg.seeds as usize,
+        inputs.len() * ecfg.networks.len(),
+    );
+
+    let report = chaos::run_ensemble(&inputs, &ecfg)?;
+    println!(
+        "{} sims in {:.2}s: {} determinism checks, {} blame closures, {} LB violations",
+        report.sims,
+        report.wall_secs,
+        report.determinism_checks,
+        report.blame_checks,
+        report.lb_violations
+    );
+    for c in &report.cells {
+        println!(
+            "  {}/{} {} rate={} clean={:.2} p50x{:.3} p99x{:.3}",
+            c.workload, c.strategy, c.network, c.rate, c.clean, c.ratio_p50, c.ratio_p99
+        );
+    }
+
+    let out = cfg.get_or("out", "results/chaos.json".to_string());
+    let tag = if smoke { "smoke" } else { "chaos" };
+    write_json_report(&out, &chaos::to_json(tag, &report))?;
+    if !report.gate_failures.is_empty() {
+        for f in &report.gate_failures {
+            eprintln!("gate failure: {f}");
+        }
+        return Err(format!(
+            "chaos: {} gate failure(s); see {out}",
+            report.gate_failures.len()
+        ));
+    }
+    println!("chaos: all gates passed");
+    Ok(())
+}
+
 fn cmd_serve(args: &[&str]) -> Result<(), String> {
     let smoke = args.contains(&"--smoke");
     let defaults = if smoke { preset_serve_smoke() } else { preset_serve() };
@@ -1881,6 +1981,7 @@ fn cmd_trace(args: &[&str]) -> Result<(), String> {
     let server = Server::new(ServeConfig {
         workers: 2,
         max_in_flight: 64,
+        reserve: 0,
         budget: None,
         cache_dir: None,
         slots: 4,

@@ -51,6 +51,7 @@ pub use workloads::{
 };
 
 use crate::analysis::AnalysisError;
+use crate::chaos::{perturb_cost, FaultConfig, JitterWire};
 use crate::config::Config;
 use crate::coordinator::{run_and_verify_with, ValueSemantics};
 use crate::graph::TaskGraph;
@@ -192,6 +193,7 @@ pub struct Pipeline<W: Workload> {
     network: NetworkKind,
     cost: Option<Arc<dyn TaskCostModel>>,
     partitioning: Option<Partitioning>,
+    chaos: Option<FaultConfig>,
 }
 
 impl<W: Workload> Pipeline<W> {
@@ -207,6 +209,7 @@ impl<W: Workload> Pipeline<W> {
             network: NetworkKind::AlphaBeta,
             cost: None,
             partitioning: None,
+            chaos: None,
         }
     }
 
@@ -291,6 +294,23 @@ impl<W: Workload> Pipeline<W> {
     pub fn partitioning(mut self, layout: Partitioning) -> Self {
         self.partitioning = Some(layout);
         self
+    }
+
+    /// Deterministic fault injection ([`crate::chaos`]): the compute
+    /// half ([`crate::chaos::PerturbedCost`]) wraps the resolved cost
+    /// model during `transform()`, the wire half
+    /// ([`crate::chaos::JitterWire`]) decorates the network at every
+    /// simulation of the transformed pipeline.  Both halves are pure
+    /// functions of the scenario's seed, so repeat runs — and the
+    /// compiled vs. interpreting engines — stay bit-for-bit equal.
+    pub fn chaos(mut self, fault: FaultConfig) -> Self {
+        self.chaos = Some(fault);
+        self
+    }
+
+    /// The fault scenario set with [`Pipeline::chaos`], if any.
+    pub fn chaos_config(&self) -> Option<&FaultConfig> {
+        self.chaos.as_ref()
     }
 
     /// The workload description this builder carries.
@@ -422,6 +442,13 @@ impl<W: Workload> Pipeline<W> {
         }
         let layout = self.resolved_partitioning();
         let cost = self.cost.unwrap_or_else(|| self.workload.cost_model());
+        // Chaos compute half bakes in here, so everything downstream —
+        // simulate, sweep inputs, compiled plans — sees the perturbed
+        // costs without knowing a fault scenario exists.
+        let cost = match &self.chaos {
+            Some(fault) => perturb_cost(cost, fault),
+            None => cost,
+        };
         if let Some(start_us) = t_start {
             crate::telemetry::with(|r| {
                 r.counter("pipeline.transforms").add(1);
@@ -439,6 +466,7 @@ impl<W: Workload> Pipeline<W> {
             network: self.network,
             cost,
             layout,
+            fault: self.chaos,
             tune: None,
         })
     }
@@ -558,6 +586,9 @@ pub struct Transformed<W: Workload> {
     network: NetworkKind,
     cost: Arc<dyn TaskCostModel>,
     layout: Partitioning,
+    /// Fault scenario ([`Pipeline::chaos`]); the compute half is already
+    /// baked into `cost`, the wire half decorates every simulation.
+    fault: Option<FaultConfig>,
     /// Set by [`Pipeline::autotune`]: why this configuration won.
     tune: Option<TuneReport>,
 }
@@ -576,6 +607,11 @@ impl<W: Workload> Transformed<W> {
     /// [`Pipeline::autotune`].
     pub fn tune_report(&self) -> Option<&TuneReport> {
         self.tune.as_ref()
+    }
+
+    /// The fault scenario riding on this pipeline ([`Pipeline::chaos`]).
+    pub fn fault(&self) -> Option<&FaultConfig> {
+        self.fault.as_ref()
     }
 
     pub fn procs(&self) -> u32 {
@@ -666,6 +702,9 @@ impl<W: Workload> Transformed<W> {
             ..*machine
         };
         let mut network = self.network.build_for(&m, Some(&self.layout));
+        if let Some(fault) = &self.fault {
+            network = JitterWire::wrap(network, fault);
+        }
         let r = match try_simulate(
             &self.graph,
             &self.plan,
@@ -716,7 +755,7 @@ impl<W: Workload> Transformed<W> {
     /// cell (and every tuner evaluation of this candidate) simulates the
     /// compiled form.
     pub fn sweep_input(&self) -> SweepInput {
-        SweepInput::new(
+        let mut input = SweepInput::new(
             self.workload.name(),
             self.plan.label.clone(),
             Arc::clone(&self.graph),
@@ -724,7 +763,11 @@ impl<W: Workload> Transformed<W> {
             Arc::clone(&self.cost),
             self.workload.words_per_value(),
             Some(self.layout),
-        )
+        );
+        // Compute perturbation is already inside `cost`; carrying the
+        // scenario lets every grid cell re-wrap its wire.
+        input.fault = self.fault.clone();
+        input
     }
 
     /// Execute the plan for real — one OS thread per processor, real
@@ -856,6 +899,48 @@ mod tests {
             .simulate_configured()
             .unwrap();
         assert!(slow.time.value() > ri.time.value());
+    }
+
+    #[test]
+    fn chaos_scenario_flows_through_builder_deterministically() {
+        let fault = crate::chaos::FaultConfig {
+            seed: 7,
+            hetero: 0.2,
+            jitter: 0.1,
+            straggler_rate: 0.25,
+            straggler_factor: 4.0,
+            wire: crate::chaos::WireFault::Exponential { mean: 2.0 },
+        };
+        let base = Pipeline::new(Heat1d::new(64, 8))
+            .procs(4)
+            .block(4)
+            .machine(Machine::high_latency(4, 8));
+        let clean = base.clone().transform().unwrap().simulate_configured().unwrap();
+        let perturbed = base.clone().chaos(fault.clone()).transform().unwrap();
+        let ra = perturbed.simulate_configured().unwrap();
+        let rb = base
+            .clone()
+            .chaos(fault.clone())
+            .transform()
+            .unwrap()
+            .simulate_configured()
+            .unwrap();
+        // Same seed: bit-identical; faults never change the traffic;
+        // slowdown-only: never faster than the clean run.
+        assert_eq!(ra.time.value(), rb.time.value());
+        assert_eq!(ra.messages, clean.messages);
+        assert_eq!(ra.words, clean.words);
+        assert!(ra.time.value() > clean.time.value(), "{} <= {}", ra.time.value(), clean.time.value());
+        let other = base
+            .chaos(fault.with_seed(8))
+            .transform()
+            .unwrap()
+            .simulate_configured()
+            .unwrap();
+        assert_ne!(ra.time.value(), other.time.value(), "two seeds drew identical runs");
+        // The scenario rides onto sweep inputs for the grid/tuner path.
+        let input = perturbed.sweep_input();
+        assert_eq!(input.fault.as_ref(), perturbed.fault());
     }
 
     #[test]

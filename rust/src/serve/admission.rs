@@ -6,14 +6,25 @@
 //! admitted — they cost no engine runs, so they always pass).  A
 //! [`Permit`] is RAII: dropping it releases the slot even when the
 //! search panics.
+//!
+//! Shedding is priority-aware: the last `reserve` slots are off-limits
+//! to [`Priority::Low`] requests, so when the daemon saturates, low
+//! traffic drops first while normal/high traffic still lands.  A
+//! [`Admission::close`]d gate (the `drain` op) admits nothing at any
+//! priority.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use super::protocol::Priority;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 #[derive(Debug)]
 pub struct Admission {
     limit: usize,
+    /// Slots [`Priority::Low`] requests may not take (≤ `limit`).
+    reserve: usize,
     active: AtomicUsize,
     shed: AtomicUsize,
+    /// Set by [`Admission::close`]: admit nothing, at any priority.
+    closed: AtomicBool,
 }
 
 impl Admission {
@@ -21,19 +32,52 @@ impl Admission {
     /// request sheds, which is the deterministic "drain mode" the tests
     /// use to observe `overloaded` without a timing race.
     pub fn new(limit: usize) -> Self {
-        Admission { limit, active: AtomicUsize::new(0), shed: AtomicUsize::new(0) }
+        Admission::with_reserve(limit, 0)
+    }
+
+    /// `reserve` of the `limit` slots are reserved for normal/high
+    /// priority (clamped to `limit`).
+    pub fn with_reserve(limit: usize, reserve: usize) -> Self {
+        Admission {
+            limit,
+            reserve: reserve.min(limit),
+            active: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+        }
     }
 
     pub fn limit(&self) -> usize {
         self.limit
     }
 
-    /// Take a slot, or count the request as shed and return `None`.
+    /// Slots off-limits to low-priority requests.
+    pub fn reserve(&self) -> usize {
+        self.reserve
+    }
+
+    /// Take a slot at [`Priority::Normal`], or count the request as
+    /// shed and return `None`.
     pub fn try_admit(&self) -> Option<Permit<'_>> {
+        self.try_admit_priority(Priority::Normal)
+    }
+
+    /// Take a slot at `priority`.  Low priority sees an effective limit
+    /// of `limit − reserve`; a closed gate admits nothing.
+    pub fn try_admit_priority(&self, priority: Priority) -> Option<Permit<'_>> {
+        let effective = if priority == Priority::Low {
+            self.limit.saturating_sub(self.reserve)
+        } else {
+            self.limit
+        };
+        if self.closed.load(Ordering::SeqCst) {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         let taken = self
             .active
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
-                (n < self.limit).then_some(n + 1)
+                (n < effective).then_some(n + 1)
             });
         match taken {
             Ok(_) => Some(Permit { owner: self }),
@@ -42,6 +86,17 @@ impl Admission {
                 None
             }
         }
+    }
+
+    /// Stop admitting (the `drain` op).  Irreversible for the gate's
+    /// lifetime; in-flight permits drain naturally via their RAII drop.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether the gate still admits requests.
+    pub fn is_open(&self) -> bool {
+        !self.closed.load(Ordering::SeqCst)
     }
 
     /// Permits currently held.
@@ -94,6 +149,45 @@ mod tests {
         assert!(a.try_admit().is_none());
         assert!(a.try_admit().is_none());
         assert_eq!((a.in_flight(), a.shed()), (0, 2));
+    }
+
+    #[test]
+    fn low_priority_sheds_first_at_the_reserve_boundary() {
+        let a = Admission::with_reserve(2, 1);
+        assert_eq!(a.reserve(), 1);
+        // One slot taken at any priority: low sees its effective limit
+        // (2 − 1 = 1) exhausted, normal and high still land.
+        let p1 = a.try_admit_priority(Priority::Low).expect("first low slot fits");
+        assert!(a.try_admit_priority(Priority::Low).is_none(), "reserve must shed low");
+        assert_eq!(a.shed(), 1);
+        let p2 = a.try_admit_priority(Priority::High).expect("reserve admits high");
+        assert!(a.try_admit_priority(Priority::High).is_none(), "hard cap still caps high");
+        drop(p2);
+        let p3 = a.try_admit_priority(Priority::Normal).expect("freed slot admits normal");
+        drop(p1);
+        drop(p3);
+        assert_eq!(a.in_flight(), 0);
+        // Reserve never exceeds the limit.
+        let tiny = Admission::with_reserve(1, 5);
+        assert_eq!(tiny.reserve(), 1);
+        assert!(tiny.try_admit_priority(Priority::Low).is_none());
+        assert!(tiny.try_admit_priority(Priority::Normal).is_some());
+    }
+
+    #[test]
+    fn closed_gate_admits_nothing_and_in_flight_drains() {
+        let a = Admission::new(4);
+        let p = a.try_admit().unwrap();
+        assert!(a.is_open());
+        a.close();
+        assert!(!a.is_open());
+        for prio in [Priority::Low, Priority::Normal, Priority::High] {
+            assert!(a.try_admit_priority(prio).is_none(), "{prio:?} admitted after close");
+        }
+        // The in-flight permit still drains via RAII.
+        assert_eq!(a.in_flight(), 1);
+        drop(p);
+        assert_eq!(a.in_flight(), 0);
     }
 
     #[test]

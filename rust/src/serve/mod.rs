@@ -6,8 +6,8 @@
 //! cheaper the longer it lives:
 //!
 //! - **protocol** — newline-delimited JSON requests (`tune`, `simulate`,
-//!   `analyze`, `explain`, `cache-stats`, `metrics`) and responses; the
-//!   full schema is documented on [`protocol`].
+//!   `analyze`, `explain`, `cache-stats`, `metrics`, `drain`) and
+//!   responses; the full schema is documented on [`protocol`].
 //! - **shard** — the tuning cache split across mutex slots routed by
 //!   workload signature, each backed by the per-signature shard files
 //!   (and file locks) of [`crate::tune::cache`]; heat1d traffic never
@@ -20,6 +20,13 @@
 //!   for the lot.
 //! - **admission** — a hard cap on concurrent searches; excess load is
 //!   *shed* with an explicit `overloaded` response instead of queueing.
+//!   Shedding is priority-aware (`priority: low|normal|high` plus the
+//!   `reserve=N` config key drops low traffic first), every engine op
+//!   honours a per-request `deadline_ms` budget checked between phases
+//!   (expired ⇒ `"status": "deadline"` with zero engine runs), and the
+//!   `drain` op closes the gate, waits out in-flight searches, and
+//!   flushes every cache shard — graceful degradation instead of
+//!   collapse when the daemon is overloaded or shutting down.
 //! - **signals** — SIGINT/SIGTERM raise a flag the daemon (and the
 //!   `sweep`/`tune` CLIs) poll at work boundaries, so shutdown flushes
 //!   cache shards and emits partial output instead of truncating.
@@ -58,6 +65,6 @@ pub mod signals;
 
 pub use admission::{Admission, Permit};
 pub use batch::{coalesce, run_batch, Batch, SimJob};
-pub use protocol::{CacheOutcome, Op, Payload, Request, RequestError, Response};
+pub use protocol::{CacheOutcome, Op, Payload, Priority, Request, RequestError, Response};
 pub use server::{run_smoke, ServeConfig, Server, ServeStats, SmokeOutcome, SmokePhase};
 pub use shard::{lock_recover, CacheTotals, ShardedCache};

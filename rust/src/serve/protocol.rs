@@ -17,7 +17,15 @@
 //!
 //! - `id` (required): caller-chosen tag, echoed verbatim in the response.
 //! - `op` (required): `"tune"`, `"simulate"`, `"analyze"`, `"explain"`,
-//!   `"cache-stats"`, or `"metrics"`.
+//!   `"cache-stats"`, `"metrics"`, or `"drain"`.
+//! - `deadline_ms` (optional): per-request latency budget.  Checked at
+//!   admission and again between the server's search phases; once
+//!   expired the request answers `"status": "deadline"` without
+//!   (further) engine runs.  `0` expires immediately — the
+//!   deterministic way to observe the deadline path.
+//! - `priority` (optional): `"low"`, `"normal"` (default), or
+//!   `"high"`.  Under load the admission gate sheds low-priority
+//!   requests first (they cannot take the last `reserve` slots).
 //! - every other field lands in a per-request [`Config`] and overrides
 //!   the server's defaults: `workload` (`heat1d|heat2d|moore2d|spmv|cg`),
 //!   problem size (`n`/`r`, `h`/`w`, `cg_n`/`iters`), steps `m`, procs
@@ -38,8 +46,10 @@
 //!  "search": "exhaustive", "cache": "miss", "latency_ms": 3.2}
 //! ```
 //!
-//! - `status`: `"ok"`, `"error"` (with `"error": "message"`), or
-//!   `"overloaded"` (admission control shed the request; retry later).
+//! - `status`: `"ok"`, `"error"` (with `"error": "message"`),
+//!   `"overloaded"` (admission control shed the request; retry later),
+//!   or `"deadline"` (the request's `deadline_ms` budget expired before
+//!   a result was ready; partial work is discarded).
 //! - `tune` payload: `chosen`, `makespan`, `naive_makespan`,
 //!   `engine_runs` (0 on a cache hit or deduped wait), `evaluations`,
 //!   `search`, and `cache` — `"hit"` (served from the sharded cache,
@@ -62,6 +72,12 @@
 //!   engine once; never searches.
 //! - `cache-stats` payload: `entries`, `shards`, `hits`, `misses`,
 //!   `deduped`, `shed`, `in_flight`.
+//! - `drain` payload: `in_flight_waited` (engine searches that were
+//!   still running when the drain began), `shards_flushed` (dirty cache
+//!   shards written out), `accepting` (always `false` afterwards — the
+//!   daemon stops admitting new engine work and answers everything else
+//!   `overloaded` until shutdown).  Graceful-shutdown op: stop
+//!   admitting, finish in-flight, flush, report.
 //! - `metrics` payload ([`crate::telemetry`]): `enabled`, `requests`,
 //!   histogram-backed request-latency `p50_ms`/`p90_ms`/`p99_ms`,
 //!   buffered `spans`, plus one `phase_<name>_ms` field per recorded
@@ -136,6 +152,9 @@ pub enum Op {
     /// Report the telemetry recorder's aggregates (request counts,
     /// latency percentiles, per-phase means); never touches the engine.
     Metrics,
+    /// Graceful shutdown of the engine side: stop admitting, wait for
+    /// in-flight searches, flush dirty cache shards, report.
+    Drain,
 }
 
 impl Op {
@@ -147,8 +166,9 @@ impl Op {
             "explain" => Ok(Op::Explain),
             "cache-stats" => Ok(Op::CacheStats),
             "metrics" => Ok(Op::Metrics),
+            "drain" => Ok(Op::Drain),
             other => Err(format!(
-                "unknown op {other:?} (tune|simulate|analyze|explain|cache-stats|metrics)"
+                "unknown op {other:?} (tune|simulate|analyze|explain|cache-stats|metrics|drain)"
             )),
         }
     }
@@ -161,6 +181,37 @@ impl Op {
             Op::Explain => "explain",
             Op::CacheStats => "cache-stats",
             Op::Metrics => "metrics",
+            Op::Drain => "drain",
+        }
+    }
+}
+
+/// How urgently the caller wants an answer; the admission gate sheds
+/// `Low` first under load (a low-priority request cannot take the last
+/// reserved slots).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// Parse the request's `priority` field (absent/empty = `Normal`).
+    pub fn parse(tag: &str) -> Result<Priority, String> {
+        match tag {
+            "" | "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            "high" => Ok(Priority::High),
+            other => Err(format!("unknown priority {other:?} (low|normal|high)")),
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
         }
     }
 }
@@ -200,6 +251,9 @@ pub enum RequestError {
     Overloaded(String),
     /// The request itself failed (bad params, infeasible transform, …).
     Failed(String),
+    /// The request's `deadline_ms` budget expired before a result was
+    /// ready; whatever partial work existed was discarded.
+    Deadline(String),
 }
 
 /// How a `tune` verdict was obtained.
@@ -288,6 +342,15 @@ pub enum Payload {
         deduped: usize,
         shed: usize,
         in_flight: usize,
+    },
+    Drain {
+        /// Engine searches still running when the drain began (all
+        /// finished before this response was written).
+        in_flight_waited: usize,
+        /// Dirty cache shards flushed to disk.
+        shards_flushed: usize,
+        /// Always `false` afterwards: the gate admits nothing new.
+        accepting: bool,
     },
     Metrics {
         /// Whether a telemetry recorder is attached to the server.
@@ -399,11 +462,20 @@ impl Response {
                     s.push_str(&format!(", \"phase_{name}_ms\": {mean_ms}"));
                 }
             }
+            Ok(Payload::Drain { in_flight_waited, shards_flushed, accepting }) => {
+                s.push_str(&format!(
+                    "\"status\": \"ok\", \"in_flight_waited\": {in_flight_waited}, \
+                     \"shards_flushed\": {shards_flushed}, \"accepting\": {accepting}"
+                ));
+            }
             Err(RequestError::Overloaded(msg)) => {
                 s.push_str(&format!("\"status\": \"overloaded\", \"error\": {msg:?}"));
             }
             Err(RequestError::Failed(msg)) => {
                 s.push_str(&format!("\"status\": \"error\", \"error\": {msg:?}"));
+            }
+            Err(RequestError::Deadline(msg)) => {
+                s.push_str(&format!("\"status\": \"deadline\", \"error\": {msg:?}"));
             }
         }
         s.push_str(&format!(", \"latency_ms\": {}}}", self.latency_ms));
@@ -582,5 +654,42 @@ mod tests {
             result: Err(RequestError::Failed("bad workload".into())),
         };
         assert!(failed.to_json().contains("\"status\": \"error\""));
+    }
+
+    #[test]
+    fn deadline_priority_and_drain_render_and_parse() {
+        let expired = Response {
+            id: "dl".into(),
+            latency_ms: 0.1,
+            result: Err(RequestError::Deadline("deadline of 5ms expired".into())),
+        };
+        let line = expired.to_json();
+        assert!(line.contains("\"status\": \"deadline\""), "{line}");
+        assert!(parse_flat_object(&line).is_ok(), "{line}");
+
+        let drained = Response {
+            id: "dr".into(),
+            latency_ms: 2.0,
+            result: Ok(Payload::Drain {
+                in_flight_waited: 3,
+                shards_flushed: 2,
+                accepting: false,
+            }),
+        };
+        let line = drained.to_json();
+        for needle in
+            ["\"status\": \"ok\"", "\"in_flight_waited\": 3", "\"accepting\": false"]
+        {
+            assert!(line.contains(needle), "{line}");
+        }
+        assert!(parse_flat_object(&line).is_ok(), "{line}");
+        assert_eq!(Op::parse("drain").unwrap(), Op::Drain);
+        assert_eq!(Op::Drain.tag(), "drain");
+
+        assert_eq!(Priority::parse("").unwrap(), Priority::Normal);
+        assert_eq!(Priority::parse("low").unwrap(), Priority::Low);
+        assert_eq!(Priority::parse("high").unwrap(), Priority::High);
+        assert!(Priority::parse("urgent").is_err());
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
     }
 }

@@ -55,7 +55,7 @@ use crate::tune::{pipeline_tune_key, tune_pipeline, CacheEntry, Tuner, TuningCac
 
 use super::admission::Admission;
 use super::batch::{self, coalesce, SimJob};
-use super::protocol::{CacheOutcome, Op, Payload, Request, RequestError, Response};
+use super::protocol::{CacheOutcome, Op, Payload, Priority, Request, RequestError, Response};
 use super::shard::{lock_recover, CacheTotals, ShardedCache};
 
 /// Daemon-level settings, read once at startup.
@@ -67,6 +67,10 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Max concurrent engine searches; everything past it is shed.
     pub max_in_flight: usize,
+    /// Of those, slots reserved for normal/high priority requests:
+    /// low-priority searches shed once `max_in_flight − reserve` are
+    /// running, so saturation drops low traffic first.
+    pub reserve: usize,
     /// Server-wide ceiling on per-request search budgets (`None` =
     /// unlimited).  Requests can only tighten it.
     pub budget: Option<usize>,
@@ -85,6 +89,7 @@ impl ServeConfig {
         ServeConfig {
             workers: cfg.get_or("workers", 4usize).max(1),
             max_in_flight: cfg.get_or("max_in_flight", 64usize),
+            reserve: cfg.get_or("reserve", 0usize),
             budget: if budget > 0 { Some(budget) } else { None },
             cache_dir: if cache.is_empty() { None } else { Some(PathBuf::from(cache)) },
             slots: cfg.get_or("slots", 8usize).max(1),
@@ -108,6 +113,9 @@ pub struct ServeStats {
     pub batches: AtomicUsize,
     /// Simulation cells across those grids.
     pub batch_cells: AtomicUsize,
+    /// Socket connections that disconnected mid-line, leaving a
+    /// half-written request behind (logged and dropped, never parsed).
+    pub malformed: AtomicUsize,
 }
 
 /// What dedupers receive from their leader.
@@ -268,10 +276,46 @@ fn request_defaults() -> Config {
     c
 }
 
+/// A request's `deadline_ms` budget, anchored when dispatch starts.
+///
+/// The budget is checked *between* phases — at the cache peek, before
+/// joining or leading a search, and at admission — never mid-engine, so
+/// an expired request costs zero engine runs past the check that caught
+/// it.  `deadline_ms: 0` expires immediately and deterministically,
+/// which is how clients (and the tests) observe the `deadline` status
+/// without a timing race.  Negative or absent budgets mean "no
+/// deadline".
+#[derive(Debug, Clone, Copy)]
+struct Deadline {
+    t0: Instant,
+    budget: Option<Duration>,
+}
+
+impl Deadline {
+    fn from_params(params: &Config) -> Deadline {
+        let ms = params.get_or("deadline_ms", -1.0f64);
+        let budget = (ms >= 0.0 && ms.is_finite()).then(|| Duration::from_secs_f64(ms / 1e3));
+        Deadline { t0: Instant::now(), budget }
+    }
+
+    /// `Err(RequestError::Deadline)` once the budget is spent; `site`
+    /// names the phase boundary that caught it.
+    fn check(&self, site: &str) -> Result<(), RequestError> {
+        match self.budget {
+            Some(b) if self.t0.elapsed() >= b => Err(RequestError::Deadline(format!(
+                "deadline of {:.1} ms expired {site} (elapsed {:.1} ms)",
+                b.as_secs_f64() * 1e3,
+                self.t0.elapsed().as_secs_f64() * 1e3,
+            ))),
+            _ => Ok(()),
+        }
+    }
+}
+
 impl Server {
     pub fn new(cfg: ServeConfig) -> Server {
         let cache = ShardedCache::new(cfg.cache_dir.clone(), cfg.slots);
-        let admission = Admission::new(cfg.max_in_flight);
+        let admission = Admission::with_reserve(cfg.max_in_flight, cfg.reserve);
         Server {
             cfg,
             cache,
@@ -373,14 +417,53 @@ impl Server {
     }
 
     fn dispatch(&self, req: &Request, phases: &mut PhaseTrace) -> Result<Payload, RequestError> {
+        let deadline = Deadline::from_params(&req.params);
         match req.op {
-            Op::Tune => self.handle_tune(req, phases),
-            Op::Simulate => self.handle_simulate(req),
-            Op::Analyze => self.handle_analyze(req),
-            Op::Explain => self.handle_explain(req),
+            Op::Tune => self.handle_tune(req, &deadline, phases),
+            Op::Simulate => {
+                deadline.check("before the simulation")?;
+                self.handle_simulate(req)
+            }
+            Op::Analyze => {
+                deadline.check("before the analysis")?;
+                self.handle_analyze(req)
+            }
+            Op::Explain => {
+                deadline.check("before the explanation")?;
+                self.handle_explain(req)
+            }
             Op::CacheStats => Ok(self.cache_stats_payload()),
             Op::Metrics => Ok(self.metrics_payload()),
+            Op::Drain => self.handle_drain(),
         }
+    }
+
+    /// The `drain` op: close the admission gate (new searches shed from
+    /// here on — cache hits, stats and metrics still answer), wait for
+    /// in-flight searches to release their permits, flush every cache
+    /// shard, and report.  The gate stays closed for the server's
+    /// lifetime.
+    fn handle_drain(&self) -> Result<Payload, RequestError> {
+        self.admission.close();
+        let in_flight_waited = self.admission.in_flight();
+        let t0 = Instant::now();
+        while self.admission.in_flight() > 0 && t0.elapsed() < Duration::from_secs(60) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        if self.admission.in_flight() > 0 {
+            return Err(RequestError::Failed(format!(
+                "drain timed out with {} searches still in flight",
+                self.admission.in_flight()
+            )));
+        }
+        self.cache
+            .flush()
+            .map_err(|e| RequestError::Failed(format!("drain flush failed: {e}")))?;
+        Ok(Payload::Drain {
+            in_flight_waited,
+            shards_flushed: self.cache.totals().shards,
+            accepting: self.admission.is_open(),
+        })
     }
 
     /// The `metrics` op: aggregates from the attached recorder, or a
@@ -436,16 +519,22 @@ impl Server {
         }
     }
 
-    fn handle_tune(&self, req: &Request, phases: &mut PhaseTrace) -> Result<Payload, RequestError> {
+    fn handle_tune(
+        &self,
+        req: &Request,
+        deadline: &Deadline,
+        phases: &mut PhaseTrace,
+    ) -> Result<Payload, RequestError> {
         struct Visit<'a> {
             server: &'a Server,
             params: &'a Config,
+            deadline: &'a Deadline,
             phases: &'a mut PhaseTrace,
         }
         impl WorkloadVisitor for Visit<'_> {
             type Out = Result<Payload, RequestError>;
             fn visit<W: Workload + Clone>(&mut self, w: W) -> Self::Out {
-                self.server.tune_workload(w, self.params, self.phases)
+                self.server.tune_workload(w, self.params, self.deadline, self.phases)
             }
         }
         let params = self.merged(&req.params);
@@ -453,7 +542,7 @@ impl Server {
         dispatch_workload(
             &workload,
             &params,
-            &mut Visit { server: self, params: &params, phases },
+            &mut Visit { server: self, params: &params, deadline, phases },
         )
         .map_err(RequestError::Failed)?
     }
@@ -462,8 +551,10 @@ impl Server {
         &self,
         w: W,
         params: &Config,
+        deadline: &Deadline,
         phases: &mut PhaseTrace,
     ) -> Result<Payload, RequestError> {
+        deadline.check("before the cache peek")?;
         let machine = machine_from(params).map_err(RequestError::Failed)?;
         let network = NetworkKind::parse(&params.get_or("network", "alphabeta".to_string()))
             .map_err(RequestError::Failed)?;
@@ -488,6 +579,10 @@ impl Server {
             }
         }
         phases.mark("cache");
+
+        // An expired request never joins (or leads) a search; checked
+        // after the peek so a warm answer still beats a tight deadline.
+        deadline.check("before joining the search")?;
 
         // 2. Dedupe: join an identical in-flight search, or lead one.
         let (flight, leader) = {
@@ -529,7 +624,7 @@ impl Server {
                     cache_hit: true,
                 })
             }
-            None => self.lead_search(&base, &key, params, budget, phases),
+            None => self.lead_search(&base, &key, params, budget, deadline, phases),
         };
         flight.publish(result.clone());
         lock_recover(&self.inflight).remove(&key);
@@ -545,22 +640,34 @@ impl Server {
 
     /// 3 + 4: admission, then the search itself on a fresh same-backing
     /// cache, then the merge back into the slot.
+    ///
+    /// Leader-side shedding — overload *and* an expired deadline at the
+    /// admission boundary — publishes to the flight, so dedupers
+    /// waiting on this key inherit the verdict instead of hanging.
     fn lead_search<W: Workload + Clone>(
         &self,
         base: &Pipeline<W>,
         key: &str,
         params: &Config,
         budget: Option<SearchBudget>,
+        deadline: &Deadline,
         phases: &mut PhaseTrace,
     ) -> Result<TuneSummary, RequestError> {
-        let permit = match self.admission.try_admit() {
+        if let Err(e) = deadline.check("at search admission") {
+            phases.mark("admission");
+            return Err(e);
+        }
+        let priority = Priority::parse(&params.get_or("priority", String::new()))
+            .map_err(RequestError::Failed)?;
+        let permit = match self.admission.try_admit_priority(priority) {
             Some(permit) => permit,
             None => {
                 phases.mark("admission");
                 return Err(RequestError::Overloaded(format!(
-                    "{} searches in flight (limit {})",
+                    "{} searches in flight (limit {}, {} priority)",
                     self.admission.in_flight(),
-                    self.admission.limit()
+                    self.admission.limit(),
+                    priority.tag()
                 )));
             }
         };
@@ -809,6 +916,16 @@ impl Server {
 
         let mut jobs = Vec::new();
         for (i, req) in &sims {
+            // Batched simulations bypass dispatch(), so their deadline
+            // gate lives here: expired before lowering ⇒ no engine run.
+            if let Err(e) = Deadline::from_params(&req.params).check("before the simulation") {
+                responses[*i] = Some(Response {
+                    id: req.id.clone(),
+                    latency_ms: ms(t0),
+                    result: Err(e),
+                });
+                continue;
+            }
             match self.build_sim_job(*i, req) {
                 Ok(job) => jobs.push(job),
                 Err(e) => {
@@ -953,6 +1070,24 @@ impl Server {
         Ok(n)
     }
 
+    /// A client vanished (EOF or hard error) with an unterminated line
+    /// still buffered — half-written JSON that must never reach the
+    /// parser.  Count it (`serve.malformed`), log it, and move on; the
+    /// accept loop keeps serving every other connection.
+    fn note_disconnect(&self, buf: &[u8]) {
+        if buf.iter().all(|b| b.is_ascii_whitespace()) {
+            return;
+        }
+        self.stats.malformed.fetch_add(1, Ordering::Relaxed);
+        if let Some(rec) = self.rec() {
+            rec.counter("serve.malformed").add(1);
+        }
+        eprintln!(
+            "serve: client disconnected mid-line; dropped {} unterminated byte(s)",
+            buf.len()
+        );
+    }
+
     /// One connection: each line is its own wave, answered immediately.
     /// The stream should have a short read timeout so `stop` is polled.
     fn serve_connection<S: Read + Write>(&self, stream: &mut S, stop: &AtomicBool) {
@@ -963,7 +1098,10 @@ impl Server {
                 return;
             }
             match stream.read(&mut chunk) {
-                Ok(0) => return,
+                Ok(0) => {
+                    self.note_disconnect(&buf);
+                    return;
+                }
                 Ok(n) => {
                     buf.extend_from_slice(&chunk[..n]);
                     while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
@@ -987,7 +1125,10 @@ impl Server {
                 {
                     continue
                 }
-                Err(_) => return,
+                Err(_) => {
+                    self.note_disconnect(&buf);
+                    return;
+                }
             }
         }
     }
@@ -1195,6 +1336,9 @@ pub fn run_smoke(cfg: &Config, stop: &AtomicBool) -> Result<SmokeOutcome, String
                 Err(RequestError::Failed(msg)) => {
                     return Err(format!("smoke request {:?} failed: {msg}", r.id))
                 }
+                Err(RequestError::Deadline(msg)) => {
+                    return Err(format!("smoke request {:?} hit a deadline: {msg}", r.id))
+                }
             }
         }
         let engine_runs = server.stats().engine_runs.load(Ordering::Relaxed) - runs_before;
@@ -1329,6 +1473,7 @@ mod tests {
         Server::new(ServeConfig {
             workers,
             max_in_flight: 64,
+            reserve: 0,
             budget: None,
             cache_dir: None,
             slots: 4,
@@ -1596,6 +1741,149 @@ mod tests {
         let n = server.serve_reader(input.as_bytes(), &mut out, &stop).unwrap();
         assert_eq!(n, 0);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn expired_deadlines_answer_deadline_with_zero_engine_runs() {
+        let server = memory_server(1);
+        // deadline_ms = 0 expires deterministically before any phase.
+        let tune = r#"{"id": "t", "op": "tune", "workload": "heat1d", "n": 64, "m": 8, "p": 2, "threads": 4, "alpha": 50.0, "beta": 1.0, "gamma": 1.0, "deadline_ms": 0}"#;
+        let r = server.handle(&req(tune));
+        assert!(matches!(r, Err(RequestError::Deadline(_))), "{r:?}");
+        let analyze = r#"{"id": "a", "op": "analyze", "workload": "heat1d", "n": 64, "m": 8, "p": 2, "threads": 4, "alpha": 50.0, "beta": 1.0, "gamma": 1.0, "deadline_ms": 0}"#;
+        assert!(matches!(server.handle(&req(analyze)), Err(RequestError::Deadline(_))));
+        // Batched simulations bypass dispatch; run_wave gates them too.
+        let sim = r#"{"id": "s", "op": "simulate", "workload": "heat1d", "n": 64, "m": 8, "strategy": "naive", "p": 2, "threads": 2, "alpha": 50.0, "beta": 1.0, "gamma": 1.0, "deadline_ms": 0}"#;
+        let responses = server.run_wave(vec![Request::parse(sim)]);
+        assert!(
+            matches!(&responses[0].result, Err(RequestError::Deadline(_))),
+            "{:?}",
+            responses[0]
+        );
+        assert!(responses[0].to_json().contains("\"status\": \"deadline\""));
+        // Nothing ran, nothing was cached, nothing was shed.
+        assert_eq!(server.stats().engine_runs.load(Ordering::Relaxed), 0);
+        assert_eq!(server.stats().searches.load(Ordering::Relaxed), 0);
+        assert_eq!(server.stats().batches.load(Ordering::Relaxed), 0);
+        assert_eq!(server.admission().shed(), 0);
+        assert_eq!(server.cache_totals().entries, 0);
+        // A generous budget behaves like no deadline at all.
+        let roomy = tune.replace("\"deadline_ms\": 0", "\"deadline_ms\": 600000");
+        match server.handle(&req(&roomy)).expect("a roomy deadline tunes") {
+            Payload::Tune { cache, .. } => assert_eq!(cache, CacheOutcome::Miss),
+            other => panic!("unexpected payload {other:?}"),
+        }
+        // And the now-warm key answers even an expired request's peek?
+        // No: the entry gate runs before the peek, deliberately — an
+        // expired request does no work at all, warm or not.
+        assert!(matches!(
+            server.handle(&req(&roomy.replace("600000", "0"))),
+            Err(RequestError::Deadline(_))
+        ));
+    }
+
+    #[test]
+    fn low_priority_is_shed_at_the_reserve_boundary() {
+        let mut cfg = memory_server(1).cfg.clone();
+        cfg.max_in_flight = 1;
+        cfg.reserve = 1; // low priority sees an effective limit of 0
+        let server = Server::new(cfg);
+        let line = |id: &str, prio: &str| {
+            format!(
+                "{{\"id\": \"{id}\", \"op\": \"tune\", \"workload\": \"heat1d\", \"n\": 64, \
+                 \"m\": 8, \"p\": 2, \"threads\": 4, \"alpha\": 50.0, \"beta\": 1.0, \
+                 \"gamma\": 1.0, \"priority\": \"{prio}\"}}"
+            )
+        };
+        let r = server.handle(&req(&line("lo", "low")));
+        assert!(matches!(r, Err(RequestError::Overloaded(_))), "{r:?}");
+        assert_eq!(server.admission().shed(), 1);
+        // The identical search at normal priority lands — and then the
+        // low-priority retry is a cache hit, which needs no permit.
+        assert!(server.handle(&req(&line("n", "normal"))).is_ok());
+        match server.handle(&req(&line("lo2", "low"))).expect("warm hits need no permit") {
+            Payload::Tune { cache, .. } => assert_eq!(cache, CacheOutcome::Hit),
+            other => panic!("unexpected payload {other:?}"),
+        }
+        // An unknown priority is a request error, not a panic.
+        let r = server.handle(&req(&line("x", "urgent")));
+        assert!(matches!(r, Err(RequestError::Failed(_))), "{r:?}");
+    }
+
+    #[test]
+    fn drain_closes_admission_but_keeps_answering_hits_and_stats() {
+        let server = memory_server(1);
+        let line = r#"{"id": "t", "op": "tune", "workload": "heat1d", "n": 64, "m": 8, "p": 2, "threads": 4, "alpha": 50.0, "beta": 1.0, "gamma": 1.0}"#;
+        server.handle(&req(line)).expect("search lands before the drain");
+        match server.handle(&req(r#"{"id": "d", "op": "drain"}"#)).expect("drain") {
+            Payload::Drain { in_flight_waited, accepting, .. } => {
+                assert_eq!(in_flight_waited, 0, "nothing was running");
+                assert!(!accepting, "the gate must be closed");
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+        assert!(!server.admission().is_open());
+        // A fresh key needs a search → shed by the closed gate.
+        let fresh = line.replace("50.0", "77.0");
+        let r = server.handle(&req(&fresh));
+        assert!(matches!(r, Err(RequestError::Overloaded(_))), "{r:?}");
+        // Warm hits, stats and metrics still answer: none is admitted.
+        match server.handle(&req(line)).expect("warm hit after drain") {
+            Payload::Tune { cache, engine_runs, .. } => {
+                assert_eq!(cache, CacheOutcome::Hit);
+                assert_eq!(engine_runs, 0);
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+        assert!(server.handle(&req(r#"{"id": "s", "op": "cache-stats"}"#)).is_ok());
+        // Draining an already-drained server is idempotent.
+        assert!(matches!(
+            server.handle(&req(r#"{"id": "d2", "op": "drain"}"#)),
+            Ok(Payload::Drain { accepting: false, .. })
+        ));
+    }
+
+    /// A socket client that writes some bytes and hangs up — possibly
+    /// mid-line.  Reads drain the scripted input, then report EOF.
+    struct HalfStream {
+        input: std::io::Cursor<Vec<u8>>,
+        out: Vec<u8>,
+    }
+
+    impl Read for HalfStream {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.input.read(buf)
+        }
+    }
+
+    impl Write for HalfStream {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.out.write(buf)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn mid_line_disconnect_is_counted_and_not_fatal() {
+        let server = memory_server(1);
+        let stop = AtomicBool::new(false);
+        // A complete request, then half-written JSON cut off by EOF.
+        let bytes = b"{\"id\": \"a\", \"op\": \"cache-stats\"}\n{\"id\": \"b\", \"op\": \"tu".to_vec();
+        let mut stream = HalfStream { input: std::io::Cursor::new(bytes), out: Vec::new() };
+        server.serve_connection(&mut stream, &stop);
+        let text = String::from_utf8(stream.out).unwrap();
+        assert!(text.contains("\"id\": \"a\""), "{text}");
+        assert_eq!(text.lines().count(), 1, "the torn line must never be answered");
+        assert_eq!(server.stats().malformed.load(Ordering::Relaxed), 1);
+        // A clean disconnect (newline, then EOF) counts nothing; the
+        // same server keeps serving — the daemon survived the tear.
+        let bytes = b"{\"id\": \"c\", \"op\": \"cache-stats\"}\n".to_vec();
+        let mut stream = HalfStream { input: std::io::Cursor::new(bytes), out: Vec::new() };
+        server.serve_connection(&mut stream, &stop);
+        assert!(String::from_utf8(stream.out).unwrap().contains("\"id\": \"c\""));
+        assert_eq!(server.stats().malformed.load(Ordering::Relaxed), 1);
     }
 }
 

@@ -15,6 +15,7 @@ use super::engine::TaskCostModel;
 use super::machine::Machine;
 use super::network::NetworkKind;
 use super::plan::ExecPlan;
+use crate::chaos::{FaultConfig, JitterWire};
 use crate::graph::TaskGraph;
 use crate::partition::Partitioning;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -45,6 +46,13 @@ pub struct SweepInput {
     /// inputs); a Hierarchical wire maps procs onto nodes grid-aware
     /// ([`NetworkKind::build_for`]).
     pub layout: Option<Partitioning>,
+    /// Fault scenario this input was prepared under (`None` = clean).
+    /// The compute half is already baked into `compiled` via
+    /// [`crate::chaos::PerturbedCost`]; the wire half makes every cell
+    /// wrap its network in a [`JitterWire`] so perturbed runs stay
+    /// seed-deterministic per cell.  Set by
+    /// [`crate::chaos::perturb_input`], never by [`SweepInput::new`].
+    pub fault: Option<FaultConfig>,
 }
 
 impl SweepInput {
@@ -70,6 +78,7 @@ impl SweepInput {
             cost,
             words_per_value,
             layout,
+            fault: None,
         }
     }
 }
@@ -132,6 +141,12 @@ fn eval_cell(
         grid.gamma,
     );
     let mut net = kind.build_for(&mach, input.layout.as_ref());
+    if let Some(fault) = &input.fault {
+        // Wire faults ride as a decorator per cell: the wrap keeps the
+        // draw counters private to this cell, so parallel workers and
+        // repeated evaluations see identical jitter streams.
+        net = JitterWire::wrap(net, fault);
+    }
     let t0 = std::time::Instant::now();
     let r = simulate_compiled(&input.compiled, &mach, net.as_mut(), scratch, false).map_err(
         |e| {

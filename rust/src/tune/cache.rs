@@ -205,14 +205,49 @@ fn lock_path(store: &Path) -> PathBuf {
     PathBuf::from(format!("{}.lock", store.display()))
 }
 
-/// Spin until the lock file can be created exclusively.  On timeout the
-/// holder is presumed dead: steal the stale lock once, then give up and
-/// return `None` (callers proceed unlocked — the shard write itself is
-/// atomic either way, locking only serialises *who searches*).
+/// Transient IO-error kinds worth retrying on the lock path: the OS (or
+/// a shared filesystem) said "not right now", not "never".  Anything
+/// else — permissions, read-only mounts — fails fast.
+fn transient_io(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::NotFound // parent raced away; create_dir_all re-runs
+    )
+}
+
+/// Backoff before retry `attempt` (0-based): exponential from 1 ms,
+/// capped at 32 ms, plus a deterministic per-(path, pid, attempt) jitter
+/// so contending writers — which all run this identical loop — don't
+/// re-collide in lockstep.  No RNG state: the jitter is a pure hash,
+/// same as every other draw in this crate ([`crate::chaos::mix64`]).
+fn backoff_delay(path: &Path, attempt: u32) -> Duration {
+    let base_ms = 1u64 << attempt.min(5);
+    let h = crate::chaos::mix64(
+        tag_hash(&path.display().to_string())
+            ^ ((std::process::id() as u64) << 32)
+            ^ attempt as u64,
+    );
+    // Jitter in [0, base_ms): full-jitter style, still bounded.
+    let jitter_us = (h % 1000) * base_ms;
+    Duration::from_micros(base_ms * 1000 + jitter_us)
+}
+
+/// Spin until the lock file can be created exclusively, backing off
+/// exponentially with deterministic jitter between attempts.  Transient
+/// IO errors (EINTR, EAGAIN, a parent directory racing away) are retried
+/// a bounded number of times instead of failing the claim.  On timeout
+/// the holder is presumed dead: steal the stale lock once, then give up
+/// and return `None` (callers proceed unlocked — the shard write itself
+/// is atomic either way, locking only serialises *who searches*).
 fn acquire_lock(path: PathBuf, timeout: Duration) -> Option<ShardLock> {
     use std::io::Write;
     let deadline = std::time::Instant::now() + timeout;
     let mut steals = 0;
+    let mut attempt: u32 = 0;
+    let mut transient_left: u32 = 8;
     loop {
         match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
             Ok(mut f) => {
@@ -228,7 +263,19 @@ fn acquire_lock(path: PathBuf, timeout: Duration) -> Option<ShardLock> {
                     let _ = std::fs::remove_file(&path);
                     continue;
                 }
-                std::thread::sleep(Duration::from_millis(2));
+                std::thread::sleep(backoff_delay(&path, attempt));
+                attempt = attempt.saturating_add(1);
+            }
+            Err(e) if transient_io(e.kind()) && transient_left > 0 => {
+                transient_left -= 1;
+                crate::telemetry::with(|r| r.counter("tune.lock_transient_retries").add(1));
+                if e.kind() == std::io::ErrorKind::NotFound {
+                    if let Some(parent) = path.parent() {
+                        let _ = std::fs::create_dir_all(parent);
+                    }
+                }
+                std::thread::sleep(backoff_delay(&path, attempt));
+                attempt = attempt.saturating_add(1);
             }
             Err(_) => return None,
         }
@@ -363,16 +410,37 @@ impl TuningCache {
     /// wins on conflicts — it may hold fresher unsaved results).  Called
     /// under [`TuningCache::lock_shard`] before deciding to search, so a
     /// concurrent writer's freshly-published verdict becomes a hit.
+    ///
+    /// A shard that *exists* but fails to parse is re-read a few times
+    /// with backoff before giving up: publication is tmp+rename-atomic,
+    /// but a copied/backed-up store (or a non-atomic network filesystem)
+    /// can expose a torn read, and one retry beat is cheaper than a
+    /// redundant search.  A genuinely missing file stays a plain miss —
+    /// no retries, nothing to wait for.
     pub fn reload(&mut self, key: &str) {
-        let loaded = match &self.backing {
+        let path = match &self.backing {
             Backing::Memory => return,
-            Backing::File(path) => {
-                std::fs::read_to_string(path).ok().and_then(|t| parse_document(&t))
-            }
-            Backing::Dir(dir) => std::fs::read_to_string(shard_path(dir, signature_of(key)))
-                .ok()
-                .and_then(|t| parse_document(&t)),
+            Backing::File(path) => path.clone(),
+            Backing::Dir(dir) => shard_path(dir, signature_of(key)),
         };
+        let mut loaded = None;
+        for attempt in 0..3u32 {
+            match std::fs::read_to_string(&path) {
+                Err(_) => break, // missing shard: a miss, not a torn read
+                Ok(text) => match parse_document(&text) {
+                    Some(doc) => {
+                        loaded = Some(doc);
+                        break;
+                    }
+                    None => {
+                        crate::telemetry::with(|r| {
+                            r.counter("tune.shard_torn_reads").add(1);
+                        });
+                        std::thread::sleep(backoff_delay(&path, attempt));
+                    }
+                },
+            }
+        }
         if let Some(disk) = loaded {
             for (k, e) in disk {
                 self.entries.entry(k).or_insert(e);
@@ -865,6 +933,93 @@ mod tests {
         assert!(c.lock_shard(&k).is_some());
         // Memory backing has nothing to lock.
         assert!(TuningCache::new().lock_shard(&k).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn contended_lock_is_acquired_with_backoff_not_stolen() {
+        let dir = temp_shard_dir("contend");
+        let c = TuningCache::sharded_unloaded(&dir);
+        let k = key_for("heat1d:sig");
+        let lock = c.lock_shard(&k).expect("uncontended lock");
+        let path = lock.path().to_path_buf();
+        // Fault injection: a second thread holds the lock for a while,
+        // then releases it gracefully (no crash, no stale file).
+        let holder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            drop(lock);
+        });
+        let t0 = std::time::Instant::now();
+        let ours = acquire_lock(path.clone(), Duration::from_secs(5))
+            .expect("waiter must acquire once the holder releases");
+        let waited = t0.elapsed();
+        holder.join().unwrap();
+        // Handed over, not stolen: acquisition only after the holder
+        // released (≥ its hold time minus scheduling slop), well inside
+        // the steal deadline, and our claim survives the holder's drop.
+        assert!(waited >= Duration::from_millis(20), "acquired while held: {waited:?}");
+        assert!(waited < Duration::from_secs(5), "{waited:?}");
+        assert!(path.exists(), "the waiter's own claim must be live");
+        drop(ours);
+        assert!(!path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_jittered() {
+        let p = Path::new("/tmp/imp-latency-test.lock");
+        for attempt in 0..12u32 {
+            let d = backoff_delay(p, attempt);
+            assert_eq!(d, backoff_delay(p, attempt), "backoff must be a pure function");
+            let base = 1u64 << attempt.min(5);
+            assert!(d >= Duration::from_millis(base), "attempt {attempt}: {d:?}");
+            assert!(d < Duration::from_millis(2 * base), "attempt {attempt}: {d:?}");
+        }
+        // Different paths de-correlate contending writers' schedules.
+        let (pa, pb) = (Path::new("/tmp/a.lock"), Path::new("/tmp/b.lock"));
+        assert!(
+            (0..8u32).any(|a| backoff_delay(pa, a) != backoff_delay(pb, a)),
+            "two contenders drew identical backoff schedules"
+        );
+    }
+
+    #[test]
+    fn reload_retries_torn_shards_and_misses_missing_ones_fast() {
+        let dir = temp_shard_dir("torn");
+        let sig = "heat1d:sig";
+        let k = key_for(sig);
+        {
+            let mut w = TuningCache::sharded_unloaded(&dir);
+            w.insert(k.clone(), entry(8));
+            w.save().unwrap();
+        }
+        let victim = shard_path(&dir, sig);
+        let text = std::fs::read_to_string(&victim).unwrap();
+        // Fault injection: expose a torn read (half a document), with a
+        // concurrent "writer" completing the publication moments later —
+        // the retry should pick the repaired document up.
+        std::fs::write(&victim, &text[..text.len() / 2]).unwrap();
+        let repair = {
+            let victim = victim.clone();
+            let text = text.clone();
+            std::thread::spawn(move || std::fs::write(&victim, &text).unwrap())
+        };
+        let mut slot = TuningCache::sharded_unloaded(&dir);
+        slot.reload(&k);
+        repair.join().unwrap();
+        // Almost always the retry catches the repair; if this machine
+        // lost the whole retry window the slot degrades to a clean miss.
+        // Hanging, panicking, or a half-parsed document never happen.
+        if let Some(e) = slot.peek(&k) {
+            assert_eq!(e.block, 8);
+        }
+        // A genuinely missing shard is a plain miss: no retry sleeps.
+        std::fs::remove_file(&victim).unwrap();
+        let mut empty = TuningCache::sharded_unloaded(&dir);
+        let t0 = std::time::Instant::now();
+        empty.reload(&k);
+        assert!(empty.peek(&k).is_none());
+        assert!(t0.elapsed() < Duration::from_millis(50), "missing shard must not retry");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -253,6 +253,12 @@ pub fn pipeline_tune_key<W: Workload + Clone>(
     if let Some(space) = space {
         key = format!("{key}|space={}", space.fingerprint());
     }
+    // A fault scenario reshapes every candidate's score (and which
+    // candidate wins): a verdict tuned under chaos must never be served
+    // to a clean tuner, nor across scenarios or seeds.
+    if let Some(fault) = base.chaos_config() {
+        key = format!("{key}|chaos={}", fault.key());
+    }
     // The *resolved* layout always joins the key: it shapes both the
     // graph and — via the grid-aware hierarchical wire — the scores, and
     // two layouts can tie on the signature's size counts.
@@ -875,5 +881,30 @@ mod tests {
         let again = tune_pipeline(&base(64, 4, mach).costs(slow()), &mut tuner).unwrap();
         assert!(again.report.cache_hit);
         assert_eq!(again.chosen, costly.chosen);
+    }
+
+    #[test]
+    fn chaos_scenario_is_part_of_the_cache_key() {
+        let mach = Machine::high_latency(2, 4);
+        let fault = crate::chaos::FaultConfig {
+            seed: 3,
+            straggler_rate: 0.3,
+            straggler_factor: 4.0,
+            ..crate::chaos::FaultConfig::default()
+        };
+        let mut tuner = Tuner::exhaustive();
+        let clean = tune_pipeline(&base(64, 4, mach), &mut tuner).unwrap();
+        let chaotic = tune_pipeline(&base(64, 4, mach).chaos(fault.clone()), &mut tuner).unwrap();
+        assert!(!chaotic.report.cache_hit, "a chaos verdict must not reuse the clean one");
+        assert_ne!(clean.report.key, chaotic.report.key);
+        assert!(chaotic.report.key.contains("|chaos=s3;"), "{}", chaotic.report.key);
+        // Stragglers only slow down, so the tuned makespan can't improve.
+        assert!(chaotic.report.makespan >= clean.report.makespan);
+        // Same scenario + seed hits its own entry; a new seed misses.
+        let again = tune_pipeline(&base(64, 4, mach).chaos(fault.clone()), &mut tuner).unwrap();
+        assert!(again.report.cache_hit);
+        let reseeded =
+            tune_pipeline(&base(64, 4, mach).chaos(fault.with_seed(4)), &mut tuner).unwrap();
+        assert!(!reseeded.report.cache_hit, "ensemble members must not share verdicts");
     }
 }

@@ -1,0 +1,232 @@
+//! Seed-determinism matrix for the chaos layer: fault injection is a
+//! *reproducible* experiment, not noise.  For every workload × strategy
+//! × wire-model cell, an everything-on fault scenario must
+//!
+//! - replay bit-identically on the compiled engine (fresh wire, fresh
+//!   scratch — same makespan, message count, and word count),
+//! - agree bit-for-bit with the interpreting engine under the same
+//!   seed (the perturbed costs are baked into the compiled plan by
+//!   [`perturb_input`]; the interpreter re-draws them per task — both
+//!   must see the identical numbers),
+//! - leave the traffic untouched (faults perturb *time*; the message
+//!   and word counts of the clean run are invariant), and
+//! - draw *different* delays under different seeds (otherwise the
+//!   ensemble percentiles in `chaos` would be N copies of one run).
+//!
+//! The matrix spans all five workloads (heat1d, heat2d, moore2d, spmv,
+//! cg), the full strategy family of [`strategy_sweep_inputs`] (naive,
+//! overlap, ca(b=2)), and all four wire models.
+
+use std::sync::Arc;
+
+use imp_latency::chaos::{perturb_input, FaultConfig, JitterWire, WireFault};
+use imp_latency::pipeline::{
+    strategy_sweep_inputs, ConjugateGradient, Heat1d, Heat2d, Moore2d, Pipeline, Spmv, Workload,
+};
+use imp_latency::sim::sweep::SweepInput;
+use imp_latency::sim::{simulate_compiled, try_simulate, EngineScratch, Machine, NetworkKind};
+use imp_latency::stencil::CsrMatrix;
+
+const PROCS: u32 = 4;
+
+/// The four wire models at their default sweep-axis parameters.
+fn wires() -> [NetworkKind; 4] {
+    [
+        NetworkKind::AlphaBeta,
+        NetworkKind::LogGp { overhead: 1.0, gap: 2.0 },
+        NetworkKind::Hierarchical { node_size: 2, intra_factor: 0.1 },
+        NetworkKind::Contended,
+    ]
+}
+
+/// An everything-on scenario: static heterogeneity, per-task jitter,
+/// heavy stragglers, and a fat-tailed wire — every draw stream active.
+fn fault(seed: u64) -> FaultConfig {
+    FaultConfig {
+        seed,
+        hetero: 0.15,
+        jitter: 0.1,
+        straggler_rate: 0.2,
+        straggler_factor: 4.0,
+        wire: WireFault::Pareto { scale: 1.0, shape: 1.5 },
+    }
+}
+
+/// The machine a sweep cell would build for `input` (β scaled by the
+/// input's words-per-value) — identical construction on every run is
+/// part of what makes the bits reproducible.
+fn machine_for(input: &SweepInput) -> Machine {
+    Machine::new(PROCS, 2, 8.0, 0.1 * input.words_per_value as f64, 1.0)
+}
+
+/// Simulate a perturbed input once on the compiled engine with a fresh
+/// jittered wire and fresh scratch.
+fn compiled_run(
+    input: &SweepInput,
+    kind: NetworkKind,
+    mach: &Machine,
+    ctx: &str,
+) -> (f64, usize, usize) {
+    let fc = input.fault.clone().unwrap_or_default();
+    let mut scratch = EngineScratch::new();
+    let mut net = JitterWire::wrap(kind.build_for(mach, input.layout.as_ref()), &fc);
+    let r = simulate_compiled(&input.compiled, mach, net.as_mut(), &mut scratch, false)
+        .unwrap_or_else(|e| panic!("{ctx}: compiled run failed: {e}"));
+    (r.total_time, r.messages, r.words)
+}
+
+/// Run one perturbed cell three ways — compiled, compiled replay, and
+/// interpreted — and assert all three are bit-identical.  Returns the
+/// agreed (makespan, messages, words).
+fn run_all_engines(
+    input: &SweepInput,
+    kind: NetworkKind,
+    mach: &Machine,
+    ctx: &str,
+) -> (f64, usize, usize) {
+    let (mk1, msgs1, words1) = compiled_run(input, kind, mach, ctx);
+    let (mk2, msgs2, words2) = compiled_run(input, kind, mach, ctx);
+    assert_eq!(
+        mk1.to_bits(),
+        mk2.to_bits(),
+        "{ctx}: compiled replay diverged: {mk1} vs {mk2}"
+    );
+    assert_eq!((msgs1, words1), (msgs2, words2), "{ctx}: compiled replay traffic diverged");
+
+    let fc = input.fault.clone().unwrap_or_default();
+    let mut net = JitterWire::wrap(kind.build_for(mach, input.layout.as_ref()), &fc);
+    let i = try_simulate(&input.graph, &input.plan, mach, net.as_mut(), input.cost.as_ref(), false)
+        .unwrap_or_else(|e| panic!("{ctx}: interpreted run failed: {e}"));
+    assert_eq!(
+        mk1.to_bits(),
+        i.total_time.to_bits(),
+        "{ctx}: engines disagree under the same seed: compiled {mk1} vs interpreted {}",
+        i.total_time
+    );
+    assert_eq!(
+        (msgs1, words1),
+        (i.messages, i.words),
+        "{ctx}: engines disagree on traffic under the same seed"
+    );
+    (mk1, msgs1, words1)
+}
+
+/// Drive one workload through the strategy family × all four wires.
+fn exercise<W: Workload + Clone>(workload: W) {
+    let name = workload.name();
+    let base = Pipeline::new(workload).procs(PROCS);
+    let inputs = strategy_sweep_inputs(&base, &[2]).unwrap_or_else(|e| panic!("{name}: {e}"));
+    assert_eq!(inputs.len(), 3, "{name}: expected naive, overlap, ca(b=2)");
+
+    for input in &inputs {
+        let mach = machine_for(input);
+        let perturbed = perturb_input(input, &fault(42));
+        for kind in wires() {
+            let ctx = format!("{}/{}/{}", input.workload, input.strategy, kind.label());
+
+            // Clean reference: same plan, unperturbed costs, bare wire.
+            let mut scratch = EngineScratch::new();
+            let mut net = kind.build_for(&mach, input.layout.as_ref());
+            let clean = simulate_compiled(&input.compiled, &mach, net.as_mut(), &mut scratch, false)
+                .unwrap_or_else(|e| panic!("{ctx}: clean run failed: {e}"));
+
+            let (mk, msgs, words) = run_all_engines(&perturbed, kind, &mach, &ctx);
+            assert!(mk.is_finite() && mk > 0.0, "{ctx}: degenerate perturbed makespan {mk}");
+            assert_eq!(
+                (msgs, words),
+                (clean.messages, clean.words),
+                "{ctx}: faults must perturb time, not traffic"
+            );
+            // Every perturbation is slowdown-only and the program order
+            // is fixed, so on the uncontended wire the perturbed run
+            // can never beat the clean one.  (Contended serializes
+            // sends by arrival, where delaying one message can reorder
+            // the NIC queue — monotonicity is only claimed here for
+            // the plain α-β wire.)
+            if matches!(kind, NetworkKind::AlphaBeta) {
+                assert!(
+                    mk >= clean.total_time - 1e-9,
+                    "{ctx}: slowdown-only faults sped the run up: {mk} < {}",
+                    clean.total_time
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn heat1d_chaos_matrix() {
+    exercise(Heat1d::new(64, 4));
+}
+
+#[test]
+fn heat2d_chaos_matrix() {
+    exercise(Heat2d { h: 8, w: 8, steps: 3 });
+}
+
+#[test]
+fn moore2d_chaos_matrix() {
+    exercise(Moore2d { h: 8, w: 8, steps: 3 });
+}
+
+#[test]
+fn spmv_chaos_matrix() {
+    exercise(Spmv { matrix: CsrMatrix::laplace2d(6, 6), steps: 3 });
+}
+
+#[test]
+fn cg_chaos_matrix() {
+    exercise(ConjugateGradient { unknowns: 24, iters: 2 });
+}
+
+/// Different root seeds must draw different perturbations — across
+/// three seeds the perturbed makespans cannot all collapse to one
+/// value, and the compute factors separate per proc and per task.
+#[test]
+fn different_seeds_draw_distinct_perturbations() {
+    let base = Pipeline::new(Heat1d::new(64, 4)).procs(PROCS);
+    let inputs = strategy_sweep_inputs(&base, &[2]).expect("heat1d family");
+    let overlap = &inputs[1];
+    let mach = machine_for(overlap);
+
+    let mut seen = std::collections::BTreeSet::new();
+    for seed in [1u64, 2, 3] {
+        let perturbed = perturb_input(overlap, &fault(seed));
+        let ctx = format!("heat1d/overlap/alphabeta seed={seed}");
+        let (mk, _, _) = run_all_engines(&perturbed, NetworkKind::AlphaBeta, &mach, &ctx);
+        seen.insert(mk.to_bits());
+    }
+    assert!(seen.len() >= 2, "three seeds produced one makespan: {seen:?}");
+
+    // The draw streams separate entities: distinct procs and distinct
+    // tasks get distinct factors, and every factor only ever slows.
+    let fc = fault(7);
+    let (a, b, c) = (fc.compute_factor(0, 0), fc.compute_factor(1, 0), fc.compute_factor(0, 1));
+    for (label, f) in [("p0/t0", a), ("p1/t0", b), ("p0/t1", c)] {
+        assert!(f >= 1.0, "{label}: compute factor {f} < 1 would mean speed-up");
+    }
+    assert!(a != b, "distinct procs drew the same heterogeneity factor {a}");
+    assert!(a != c, "distinct tasks drew the same jitter factor {a}");
+}
+
+/// The perturbed input shares graph and plan with its clean template —
+/// [`perturb_input`] recompiles costs, it does not rebuild structure.
+#[test]
+fn perturb_input_shares_structure_and_tags_the_fault() {
+    let base = Pipeline::new(Heat1d::new(64, 4)).procs(PROCS);
+    let inputs = strategy_sweep_inputs(&base, &[2]).expect("heat1d family");
+    let clean = &inputs[0];
+    let perturbed = perturb_input(clean, &fault(9));
+    assert!(Arc::ptr_eq(&clean.graph, &perturbed.graph), "graph must be shared, not rebuilt");
+    assert!(Arc::ptr_eq(&clean.plan, &perturbed.plan), "plan must be shared, not rebuilt");
+    assert!(clean.fault.is_none(), "templates stay clean");
+    assert_eq!(
+        perturbed.fault.as_ref().map(|f| f.seed),
+        Some(9),
+        "the fault scenario must ride on the input"
+    );
+    assert!(
+        !Arc::ptr_eq(&clean.compiled, &perturbed.compiled),
+        "perturbed costs must be recompiled, not aliased"
+    );
+}

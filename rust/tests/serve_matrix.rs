@@ -30,6 +30,7 @@ fn server_with(cache_dir: Option<PathBuf>, workers: usize, max_in_flight: usize)
     Server::new(ServeConfig {
         workers,
         max_in_flight,
+        reserve: 0,
         budget: None,
         cache_dir,
         slots: 4,

@@ -27,6 +27,7 @@ fn memory_server(workers: usize) -> Server {
     Server::new(ServeConfig {
         workers,
         max_in_flight: 16,
+        reserve: 0,
         budget: None,
         cache_dir: None,
         slots: 4,
